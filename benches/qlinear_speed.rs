@@ -1,0 +1,19 @@
+//! `cargo bench` target reproducing paper Table 10: FP-baseline vs packed
+//! INT2/3/4 matvec at the exact Llama-2 layer shapes (custom harness -
+//! criterion is unavailable offline; see rust/src/bench/mod.rs).
+
+fn main() {
+    efficientqat::util::logging::init();
+    let fast = std::env::var("EQAT_BENCH_FAST").is_ok();
+    match efficientqat::bench::qlinear_speed_table(fast) {
+        Ok(md) => {
+            println!("{md}");
+            let _ = std::fs::create_dir_all("runs");
+            let _ = std::fs::write("runs/t10-qlinear.md", md);
+        }
+        Err(e) => {
+            eprintln!("qlinear bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

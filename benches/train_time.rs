@@ -1,0 +1,23 @@
+//! `cargo bench` target for paper Tables 8/9: EfficientQAT phase wall-times
+//! and memory vs the naive-QAT comparator. Requires artifacts; skips
+//! gracefully (exit 0 with a notice) when they are missing so `cargo bench`
+//! stays runnable on a fresh checkout.
+
+use efficientqat::exp::{tables, ExpCtx};
+
+fn main() {
+    efficientqat::util::logging::init();
+    let ctx = match ExpCtx::new("artifacts", "runs") {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("train_time bench skipped (no artifacts): {e}");
+            return;
+        }
+    };
+    for id in ["t8", "t9"] {
+        if let Err(e) = tables::run(&ctx, id, "tiny") {
+            eprintln!("{id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer on the largest preset -
+//!   pretrain a ~6M-param transformer for several hundred steps (loss curve
+//!   logged), run the full EfficientQAT pipeline at w2/w4, evaluate
+//!   zero-shot + perplexity vs FP16/RTN, verify the packed model round-trips
+//!   and that the pure-Rust engine agrees with the XLA forward, and report
+//!   wall-times.
+//!
+//!     cargo run --release --example full_pipeline [preset] [steps]
+
+use anyhow::Result;
+use efficientqat::config::{QuantScheme, TrainHp};
+use efficientqat::coordinator::block_ap::rtn_quantize_model;
+use efficientqat::coordinator::pipeline::{efficient_qat, PhaseToggle};
+use efficientqat::coordinator::pretrain::{pretrain, PretrainOpts};
+use efficientqat::data::corpus::{domain_redpajama, World};
+use efficientqat::data::loader::LmLoader;
+use efficientqat::eval::fwd::ModelRef;
+use efficientqat::eval::zeroshot::eval_zeroshot;
+use efficientqat::eval::ppl::perplexity;
+use efficientqat::infer::engine::Engine;
+use efficientqat::model::quantized::QuantizedModel;
+use efficientqat::runtime::Runtime;
+
+fn main() -> Result<()> {
+    efficientqat::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("small");
+    let steps: usize =
+        args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let rt = Runtime::new("artifacts")?;
+    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let fpl = rt.manifest.layout(preset, "fp")?;
+    let world = World::new(cfg.vocab, 7);
+    let dom = domain_redpajama();
+    println!("== end-to-end driver: preset {preset} ({:.1}M params), \
+              {steps} pretrain steps ==",
+             fpl.size as f64 / 1e6);
+
+    // Phase 0: pretrain with logged loss curve
+    let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
+                                   cfg.e2e_ctx);
+    let opts = PretrainOpts { steps, lr: 3e-3, seed: 5, log_every: 25 };
+    let t0 = std::time::Instant::now();
+    let (params, rep) = pretrain(&rt, preset, &mut loader, &opts)?;
+    println!("[pretrain] {:.3} -> {:.3} in {:.1}s ({:.1} tok/s)",
+             rep.losses[0], rep.losses.last().unwrap(), rep.seconds,
+             (steps * cfg.e2e_batch * cfg.e2e_ctx) as f64 / rep.seconds);
+    std::fs::create_dir_all("runs")?;
+    std::fs::write(
+        format!("runs/full-pipeline-{preset}-loss.csv"),
+        rep.losses.iter().map(|l| format!("{l:.4}"))
+            .collect::<Vec<_>>().join("\n"),
+    )?;
+
+    // Phase 1+2: EfficientQAT at w4 and w2
+    let mut summary = Vec::new();
+    let fp_ref = ModelRef::Fp { preset, params: &params };
+    let (fp_suites, fp_acc) = eval_zeroshot(&rt, &fp_ref, &world, 60, 1234)?;
+    let fp_ppl = perplexity(&rt, &fp_ref, &world, &dom, 4, 99)?;
+    summary.push(format!(
+        "FP16: acc {:.1}% ppl {fp_ppl:.2}", 100.0 * fp_acc));
+    for (s, a) in &fp_suites {
+        println!("  fp16 {s}: {:.1}%", 100.0 * a);
+    }
+
+    for bits in [4u32, 2] {
+        let sch = QuantScheme::new(bits, cfg.default_group);
+        let hp = TrainHp::default();
+        let (mut qm, prep) = efficient_qat(&rt, preset, &params, sch, &hp,
+                                           &world, &dom,
+                                           PhaseToggle::default())?;
+        qm.round_scales_f16();
+        let rtn = rtn_quantize_model(&rt, preset, &params, sch)?;
+        let (_, acc_rtn) =
+            eval_zeroshot(&rt, &ModelRef::Quant(&rtn), &world, 60, 1234)?;
+        let (_, acc_eq) =
+            eval_zeroshot(&rt, &ModelRef::Quant(&qm), &world, 60, 1234)?;
+        let ppl_rtn = perplexity(&rt, &ModelRef::Quant(&rtn), &world, &dom,
+                                 4, 99)?;
+        let ppl_eq = perplexity(&rt, &ModelRef::Quant(&qm), &world, &dom,
+                                4, 99)?;
+        summary.push(format!(
+            "{}: RTN acc {:.1}% ppl {ppl_rtn:.2} | EfficientQAT acc \
+             {:.1}% ppl {ppl_eq:.2} ({:.1}s pipeline)",
+            sch.tag(), 100.0 * acc_rtn, 100.0 * acc_eq, prep.total_seconds
+        ));
+
+        // round-trip + engine parity check at w2
+        if bits == 2 {
+            let path = format!("runs/full-pipeline-{preset}-{}.eqt",
+                               sch.tag());
+            qm.save(&path)?;
+            let back = QuantizedModel::load(&path)?;
+            assert_eq!(back.wq, qm.wq, "packed roundtrip mismatch");
+            let info = rt.manifest.preset(preset)?;
+            let mut eng = Engine::new(&back, info, cfg.eval_ctx)?;
+            let mut l = LmLoader::new(&world, &dom, 3, cfg.eval_batch,
+                                      cfg.eval_ctx);
+            let b = l.next_batch();
+            let xla = ModelRef::Quant(&back).logits(&rt, &b.x)?;
+            let mut max_err = 0f32;
+            for (t, &tok) in b.x[..cfg.eval_ctx].iter().enumerate() {
+                let lg = eng.step(tok)?;
+                for (a, c) in
+                    lg.iter().zip(&xla[t * cfg.vocab..(t + 1) * cfg.vocab])
+                {
+                    max_err = max_err.max((a - c).abs());
+                }
+            }
+            println!("[deploy] engine-vs-XLA max logit err: {max_err:.2e}");
+            assert!(max_err < 5e-3);
+        }
+    }
+
+    println!("\n== SUMMARY (total {:.1}s) ==", t0.elapsed().as_secs_f64());
+    for s in &summary {
+        println!("  {s}");
+    }
+    std::fs::write(format!("runs/full-pipeline-{preset}-summary.txt"),
+                   summary.join("\n"))?;
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Instruction-tuning scenario (paper §4.2): take a pretrained model,
+//! quantize, then adapt to the instruction-following format by training
+//! only the step sizes (E2E-QP) on an Alpaca-like synthetic set; compare
+//! against PEQA and QLoRA on the MMLU-like few-shot exam.
+//!
+//!     cargo run --release --example instruction_tuning
+
+use anyhow::Result;
+use efficientqat::baselines::qlora::{run_peqa, run_qlora};
+use efficientqat::config::{QuantScheme, TrainHp};
+use efficientqat::coordinator::block_ap::rtn_quantize_model;
+use efficientqat::coordinator::e2e_qp::{instr_batches, run_e2e_qp};
+use efficientqat::coordinator::pipeline::{efficient_qat, PhaseToggle};
+use efficientqat::coordinator::pretrain::{pretrain, PretrainOpts};
+use efficientqat::data::corpus::{domain_redpajama, World};
+use efficientqat::data::loader::{InstrLoader, LmLoader};
+use efficientqat::eval::fwd::ModelRef;
+use efficientqat::eval::zeroshot::eval_mmlu;
+use efficientqat::runtime::Runtime;
+
+fn main() -> Result<()> {
+    efficientqat::util::logging::init();
+    let rt = Runtime::new("artifacts")?;
+    let preset = "tiny";
+    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let world = World::new(cfg.vocab, 7);
+    let dom = domain_redpajama();
+
+    let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
+                                   cfg.e2e_ctx);
+    let opts = PretrainOpts { steps: 250, lr: 3e-3, seed: 5, log_every: 50 };
+    let (params, _) = pretrain(&rt, preset, &mut loader, &opts)?;
+
+    let sch = QuantScheme::new(2, cfg.default_group);
+    let hp = TrainHp::default();
+    let mk_batches = || {
+        let mut il = InstrLoader::new(&world, 91, 256, cfg.e2e_batch,
+                                      cfg.e2e_ctx);
+        instr_batches(&mut il, 48)
+    };
+
+    let base_acc = eval_mmlu(
+        &rt, &ModelRef::Fp { preset, params: &params }, &world, 555)?;
+    println!("base fp16 (no tuning): MMLU-like {:.1}%", 100.0 * base_acc);
+
+    // PEQA: RTN + step-size tuning
+    let (peqa, _) = run_peqa(&rt, preset, &params, sch, &mk_batches(), &hp)?;
+    println!(
+        "PEQA {}: {:.1}%",
+        sch.tag(),
+        100.0 * eval_mmlu(&rt, &ModelRef::Quant(&peqa), &world, 555)?
+    );
+
+    // QLoRA at 4-bit base (its standard regime)
+    let qbase = rtn_quantize_model(&rt, preset, &params,
+                                   QuantScheme::new(4, cfg.default_group))?;
+    let (lora, _) = run_qlora(&rt, &qbase, &mk_batches(), 1, 2e-3, 33)?;
+    println!(
+        "QLoRA w4+16: {:.1}%",
+        100.0 * eval_mmlu(&rt, &ModelRef::Lora { qm: &qbase, lora: &lora },
+                          &world, 555)?
+    );
+
+    // EfficientQAT: Block-AP init then instruction E2E-QP
+    let (mut eq, _) = efficient_qat(&rt, preset, &params, sch, &hp, &world,
+                                    &dom,
+                                    PhaseToggle { block_ap: true,
+                                                  e2e_qp: false })?;
+    let before = eval_mmlu(&rt, &ModelRef::Quant(&eq), &world, 555)?;
+    run_e2e_qp(&rt, &mut eq, &mk_batches(), &hp)?;
+    let after = eval_mmlu(&rt, &ModelRef::Quant(&eq), &world, 555)?;
+    println!(
+        "EfficientQAT {}: {:.1}% -> {:.1}% after instruction E2E-QP",
+        sch.tag(), 100.0 * before, 100.0 * after
+    );
+    Ok(())
+}

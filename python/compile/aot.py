@@ -1,0 +1,136 @@
+"""AOT lowering: JAX graphs -> HLO TEXT artifacts + manifest.json.
+
+HLO *text* (not `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax>=0.5 protos (64-bit instruction ids); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--presets tiny,small]
+The Makefile invokes this once; artifacts are never rebuilt on the request
+path. Rust consumes manifest.json (rust/src/io/manifest.rs).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train
+from .configs import PRESETS
+
+
+def to_hlo_text(fn, args) -> str:
+    """Lower a jitted fn to HLO text via stablehlo -> XlaComputation.
+
+    print_large_constants=True is CRITICAL: the default printer elides any
+    array constant as `{...}`, which HloModuleProto::from_text_file silently
+    parses as ZEROS - e.g. the RoPE frequency table became all-zero
+    exponents (freq 1.0) and every position-dependent computation was wrong
+    while position 0 stayed exact. Found via the engine-vs-XLA parity test.
+    """
+    lowered = jax.jit(fn).lower(*[a for (_, a) in args])
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "constant({...})" in text:
+        raise RuntimeError("elided constant survived in HLO text")
+    return text
+
+
+def arg_desc(args):
+    out = []
+    for name, sds in args:
+        out.append({
+            "name": name,
+            "shape": list(sds.shape),
+            "dtype": {"int32": "s32", "float32": "f32"}[str(sds.dtype)],
+        })
+    return out
+
+
+def lower_preset(p, out_dir, manifest, only=None):
+    pdir = os.path.join(out_dir, p.name)
+    os.makedirs(pdir, exist_ok=True)
+
+    jobs = []
+    for entry, builder in train.BASE_ENTRIES.items():
+        jobs.append((entry, builder(p), None))
+    for g in p.group_sizes:
+        for entry, builder in train.GROUP_ENTRIES.items():
+            if entry in train.DEFAULT_GROUP_ONLY and g != p.default_group:
+                continue
+            jobs.append((f"{entry}_g{g}", builder(p, g), g))
+
+    for name, (fn, args, outs), group in jobs:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        text = to_hlo_text(fn, args)
+        rel = f"{p.name}/{name}.hlo.txt"
+        path = os.path.join(out_dir, rel)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "preset": p.name,
+            "entry": name,
+            "group": group,
+            "file": rel,
+            "args": arg_desc(args),
+            "outputs": outs,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  [{p.name}] {name}: {len(text)/1e6:.2f} MB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+
+
+def layouts_json(p):
+    out = {
+        "fp": M.fp_layout(p).to_json(),
+        "block": M.block_layout(p).to_json(),
+        "wq_block": M.wq_block_layout(p).to_json(),
+        "wq": M.wq_layout(p).to_json(),
+        "fpr": M.fpr_layout(p).to_json(),
+        "lora": M.lora_layout(p).to_json(),
+    }
+    for g in p.group_sizes:
+        out[f"qp_g{g}"] = M.qp_layout(p, g).to_json()
+        out[f"qp_block_g{g}"] = M.qp_block_layout(p, g).to_json()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,base")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry names to (re)lower")
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest = {"version": 1, "presets": {}, "artifacts": []}
+    only = set(ns.only.split(",")) if ns.only else None
+
+    t0 = time.time()
+    for pname in ns.presets.split(","):
+        p = PRESETS[pname]
+        manifest["presets"][pname] = {
+            "config": p.to_json_dict(),
+            "layouts": layouts_json(p),
+        }
+        print(f"lowering preset {pname} ...", flush=True)
+        lower_preset(p, ns.out_dir, manifest, only=only)
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest written; total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""Model / training presets shared by model.py, train.py, aot.py.
+
+The same presets are mirrored on the Rust side (rust/src/config/presets.rs);
+`aot.py` embeds each preset into artifacts/manifest.json so the Rust
+coordinator never hardcodes shapes.
+
+Design constraints:
+  * `dim` and `inter` must be divisible by every group size we lower for the
+    preset (Table 12 group-size sweep runs on `small`).
+  * Heads divide dim; head_dim even (RoPE pairs).
+  * Sizes are deliberately laptop-scale: the paper's quantization dynamics
+    (group-wise ranges, the 2-bit cliff, Block-AP recovery) are architecture
+    phenomena, not scale phenomena. See DESIGN.md §4.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import List
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    inter: int
+    vocab: int
+    # static batch geometry for the lowered artifacts
+    block_batch: int      # Block-AP reconstruction batch
+    block_ctx: int        # Block-AP context length
+    e2e_batch: int        # E2E-QP / pretrain batch
+    e2e_ctx: int          # E2E-QP / pretrain context length
+    eval_batch: int       # evaluation forward batch
+    eval_ctx: int         # evaluation context length
+    default_group: int    # default quantization group size
+    group_sizes: List[int] = field(default_factory=list)  # lowered variants
+    lora_rank: int = 8
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    def to_json_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+# NOTE: keep in sync with rust/src/config/presets.rs
+PRESETS = {
+    # Fast preset for unit/ablation experiments (T5, T6, T7, T13, fig3, fig4).
+    "tiny": Preset(
+        name="tiny", dim=128, n_layers=4, n_heads=4, inter=256, vocab=512,
+        block_batch=8, block_ctx=64, e2e_batch=8, e2e_ctx=64,
+        eval_batch=8, eval_ctx=64,
+        default_group=32, group_sizes=[32, 64, 128],
+    ),
+    # Group-size sweep preset (T12) - dims divisible by 256.
+    "small": Preset(
+        name="small", dim=256, n_layers=6, n_heads=4, inter=768, vocab=2048,
+        block_batch=8, block_ctx=64, e2e_batch=8, e2e_ctx=128,
+        eval_batch=8, eval_ctx=128,
+        default_group=64, group_sizes=[32, 64, 128, 256],
+    ),
+    # Headline preset for the end-to-end driver (~18.5M params).
+    "base": Preset(
+        name="base", dim=384, n_layers=8, n_heads=6, inter=1152, vocab=4096,
+        block_batch=4, block_ctx=128, e2e_batch=4, e2e_ctx=256,
+        eval_batch=4, eval_ctx=256,
+        default_group=64, group_sizes=[64, 128],
+    ),
+}
+
+# Linear layers inside one transformer block, in flat-layout order.
+# (name, out_expr, in_expr) with d=dim, i=inter.
+BLOCK_LINEARS = [
+    ("attn.q", "d", "d"),
+    ("attn.k", "d", "d"),
+    ("attn.v", "d", "d"),
+    ("attn.o", "d", "d"),
+    ("mlp.gate", "i", "d"),
+    ("mlp.up", "i", "d"),
+    ("mlp.down", "d", "i"),
+]
+
+
+def linear_shapes(p: Preset):
+    """[(name, (out, in))] for the 7 quantized linears of one block."""
+    dims = {"d": p.dim, "i": p.inter}
+    return [(n, (dims[o], dims[i])) for (n, o, i) in BLOCK_LINEARS]

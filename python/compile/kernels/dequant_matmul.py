@@ -1,0 +1,91 @@
+"""Pallas dequantize-then-matmul kernel (L1): y = x @ dequant(W_int,s,z)^T.
+
+This is the E2E-QP / evaluation hot path: integer weights stay frozen, only
+dequantization happens in the forward pass (paper §3.3), and the custom VJP
+provides the analytic gradients for the quantization parameters
+(d w_hat / d s = w_q - z).
+
+TPU mapping (DESIGN.md §3): the GPU/BitBLAS version unpacks INT2 in registers
+feeding tensor cores; here BlockSpec streams (TILE_N, K) weight tiles
+HBM->VMEM, the VPU dequantizes, and the MXU consumes x @ W_tile^T. The x
+operand is resident across grid steps (index_map pins it to block 0) so each
+weight byte is touched exactly once - the schedule that makes low-bit
+inference memory-bandwidth-, not compute-, bound.
+
+Lowered with interpret=True on this CPU testbed; the packed-integer speedup
+claim (paper Table 10) is reproduced natively in Rust (infer/qlinear.rs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _col_tile(n: int, max_grid: int = 8) -> int:
+    target = -(-n // max_grid)
+    for t in range(target, n + 1):
+        if n % t == 0:
+            return t
+    return n
+
+
+def _dqmm_kernel(x_ref, w_ref, s_ref, z_ref, o_ref):
+    x = x_ref[...]                        # (M, K) resident
+    w = w_ref[...]                        # (TN, K) streamed tile
+    s = s_ref[...]                        # (TN, G)
+    z = z_ref[...]                        # (TN, G)
+    tn, k = w.shape
+    G = s.shape[1]
+    g = k // G
+    wg = (w.reshape(tn, G, g) - z[:, :, None]) * s[:, :, None]
+    w_hat = wg.reshape(tn, k)
+    o_ref[...] = jnp.dot(x, w_hat.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp)
+def dequant_matmul(x, w_int, s, z):
+    """x: (M, K) f32; w_int: (N, K) f32 integer values; s, z: (N, G).
+
+    Returns (M, N). Differentiable in x, s, z; w_int is treated as frozen
+    (its cotangent is zero), matching E2E-QP.
+    """
+    return _dqmm_impl(x, w_int, s, z)
+
+
+def _dqmm_impl(x, w_int, s, z):
+    m, k = x.shape
+    n = w_int.shape[0]
+    G = s.shape[1]
+    tn = _col_tile(n)
+    return pl.pallas_call(
+        _dqmm_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),     # x resident
+            pl.BlockSpec((tn, k), lambda i: (i, 0)),    # W tile streamed
+            pl.BlockSpec((tn, G), lambda i: (i, 0)),
+            pl.BlockSpec((tn, G), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w_int, s, z)
+
+
+def _dqmm_vjp_fwd(x, w_int, s, z):
+    return _dqmm_impl(x, w_int, s, z), (x, w_int, s, z)
+
+
+def _dqmm_vjp_bwd(res, gout):
+    x, w_int, s, z = res
+    gx, gs, gz = ref.dequant_matmul_grads_ref(x, w_int, s, z, gout)
+    return gx, jnp.zeros_like(w_int), gs, gz
+
+
+dequant_matmul.defvjp(_dqmm_vjp_fwd, _dqmm_vjp_bwd)

@@ -1,0 +1,149 @@
+"""Pallas fake-quantization kernel (L1) with a fused STE backward kernel.
+
+Forward : W_hat = (clamp(round(W/s) + z, 0, qmax) - z) * s, group-wise.
+Backward: paper Eqs. 3-5 (see ref.py docstring for the z-gradient fix),
+          fused into ONE kernel emitting (gW, gs, gz) per row tile, with the
+          group reduction done inside the tile.
+
+TPU mapping (DESIGN.md §3): this is a pure VPU kernel. BlockSpec tiles rows
+into (TILE_R, in) VMEM blocks; the per-row group params (TILE_R, G) ride in
+the same grid step, so one HBM->VMEM stream per operand, no revisits.
+On this testbed we lower with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the grid becomes a small HLO while-loop.
+
+`qmax` is a runtime (1,1) f32 operand so a single compiled artifact serves
+2/3/4-bit quantization (DESIGN.md §2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls cannot run; see DESIGN.md
+
+
+def _row_tile(out_dim: int, max_grid: int = 8) -> int:
+    """Smallest row-tile that divides out_dim with a grid of <= max_grid.
+
+    Keeps the interpret-mode while-loop short on CPU while still exercising
+    a real multi-step grid; on TPU the same tile bounds VMEM residency.
+    """
+    target = -(-out_dim // max_grid)  # ceil
+    for t in range(target, out_dim + 1):
+        if out_dim % t == 0:
+            return t
+    return out_dim
+
+
+def _fq_fwd_kernel(w_ref, s_ref, z_ref, qmax_ref, o_ref):
+    w = w_ref[...]                       # (TR, IN)
+    s = s_ref[...]                       # (TR, G)
+    z = z_ref[...]                       # (TR, G)
+    qmax = qmax_ref[0, 0]
+    tr, in_dim = w.shape
+    G = s.shape[1]
+    g = in_dim // G
+    wg = w.reshape(tr, G, g)
+    se = s[:, :, None]
+    ze = z[:, :, None]
+    q = jnp.clip(jnp.round(wg / se) + ze, 0.0, qmax)
+    o_ref[...] = ((q - ze) * se).reshape(tr, in_dim)
+
+
+def _fq_bwd_kernel(w_ref, s_ref, z_ref, qmax_ref, g_ref,
+                   gw_ref, gs_ref, gz_ref):
+    w = w_ref[...]
+    s = s_ref[...]
+    z = z_ref[...]
+    qmax = qmax_ref[0, 0]
+    gout = g_ref[...]
+    tr, in_dim = w.shape
+    G = s.shape[1]
+    g = in_dim // G
+    wg = w.reshape(tr, G, g)
+    gg = gout.reshape(tr, G, g)
+    se = s[:, :, None]
+    ze = z[:, :, None]
+    t = jnp.round(wg / se)
+    qu = t + ze
+    below = qu < 0.0
+    above = qu > qmax
+    in_range = jnp.logical_not(jnp.logical_or(below, above))
+
+    gw = jnp.where(in_range, gg, 0.0)
+    ds = jnp.where(in_range, t - wg / se, jnp.where(below, -ze, qmax - ze))
+    gz_el = jnp.where(in_range, 0.0, -se) * gg
+
+    gw_ref[...] = gw.reshape(tr, in_dim)
+    gs_ref[...] = (gg * ds).sum(axis=2)
+    gz_ref[...] = gz_el.sum(axis=2)
+
+
+def _specs(out_dim, in_dim, G, tile_r):
+    row_block = lambda i: (i, 0)
+    return dict(
+        w=pl.BlockSpec((tile_r, in_dim), row_block),
+        q=pl.BlockSpec((tile_r, G), row_block),
+        scalar=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(w, s, z, qmax):
+    """Group-wise fake quantization via the Pallas kernel.
+
+    w: (out, in) f32; s, z: (out, G) f32; qmax: (1,1) f32.
+    Differentiable in (w, s, z) with STE semantics.
+    """
+    return _fake_quant_fwd_impl(w, s, z, qmax)
+
+
+def _fake_quant_fwd_impl(w, s, z, qmax):
+    out_dim, in_dim = w.shape
+    G = s.shape[1]
+    tile_r = _row_tile(out_dim)
+    sp = _specs(out_dim, in_dim, G, tile_r)
+    return pl.pallas_call(
+        _fq_fwd_kernel,
+        grid=(out_dim // tile_r,),
+        in_specs=[sp["w"], sp["q"], sp["q"], sp["scalar"]],
+        out_specs=sp["w"],
+        out_shape=jax.ShapeDtypeStruct((out_dim, in_dim), w.dtype),
+        interpret=INTERPRET,
+    )(w, s, z, qmax)
+
+
+def _fake_quant_vjp_fwd(w, s, z, qmax):
+    return _fake_quant_fwd_impl(w, s, z, qmax), (w, s, z, qmax)
+
+
+def _fake_quant_vjp_bwd(res, gout):
+    w, s, z, qmax = res
+    out_dim, in_dim = w.shape
+    G = s.shape[1]
+    tile_r = _row_tile(out_dim)
+    sp = _specs(out_dim, in_dim, G, tile_r)
+    gw, gs, gz = pl.pallas_call(
+        _fq_bwd_kernel,
+        grid=(out_dim // tile_r,),
+        in_specs=[sp["w"], sp["q"], sp["q"], sp["scalar"], sp["w"]],
+        out_specs=[sp["w"], sp["q"], sp["q"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_dim, in_dim), w.dtype),
+            jax.ShapeDtypeStruct((out_dim, G), s.dtype),
+            jax.ShapeDtypeStruct((out_dim, G), z.dtype),
+        ],
+        interpret=INTERPRET,
+    )(w, s, z, qmax, gout)
+    return gw, gs, gz, jnp.zeros_like(res[3])
+
+
+fake_quant.defvjp(_fake_quant_vjp_fwd, _fake_quant_vjp_bwd)
+
+
+def quantize(w, s, z, qmax):
+    """Eq. (1) as a (non-differentiable) kernel-free op for graph tails."""
+    from . import ref
+    return ref.quantize_ref(w, s, z, qmax)

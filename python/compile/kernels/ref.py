@@ -1,0 +1,152 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Everything here is the *specification*: the Pallas kernels in fake_quant.py /
+dequant_matmul.py must match these functions bit-for-bit (f32, CPU) and their
+custom VJPs must match `jax.grad` of the STE formulation below (paper
+Eqs. 3-5, corrected: d(w_hat)/dz = -s outside the clamp range, because
+w_hat = (clamp(round(w/s)+z) - z) * s; the paper's Eq. 4 writes -1, folding
+the s factor into its parameterization).
+
+Group convention: weights are (out, in); quantization groups tile the `in`
+axis; s, z have shape (out, in // g).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_groups(p, out_dim, in_dim):
+    """(out, G) group params -> (out, in) elementwise broadcast."""
+    g = in_dim // p.shape[1]
+    return jnp.repeat(p, g, axis=1)
+
+
+def quantize_ref(w, s, z, qmax):
+    """Eq. (1): W_int = clamp(round(W/s) + z, 0, qmax). Returns f32 ints."""
+    out_dim, in_dim = w.shape
+    se = expand_groups(s, out_dim, in_dim)
+    ze = expand_groups(z, out_dim, in_dim)
+    return jnp.clip(jnp.round(w / se) + ze, 0.0, qmax)
+
+
+def dequantize_ref(w_int, s, z):
+    """Eq. (2): W_hat = (W_int - z) * s."""
+    out_dim, in_dim = w_int.shape
+    se = expand_groups(s, out_dim, in_dim)
+    ze = expand_groups(z, out_dim, in_dim)
+    return (w_int - ze) * se
+
+
+def fake_quant_ref(w, s, z, qmax):
+    """Quant->dequant with straight-through rounding (differentiable spec).
+
+    The STE treats round() as identity for gradient purposes; clamping
+    saturation IS differentiated (this yields exactly paper Eqs. 3-5).
+    """
+    out_dim, in_dim = w.shape
+    se = expand_groups(s, out_dim, in_dim)
+    ze = expand_groups(z, out_dim, in_dim)
+    t = w / se
+    r = t + jax.lax.stop_gradient(jnp.round(t) - t)  # STE round
+    # Saturation masks on the *integer* pre-clamp value, with strict
+    # inequalities: boundary hits (q == 0 or q == qmax) count as in-range.
+    # This pins the clamp's tie-breaking so autodiff of this spec equals the
+    # analytic Eqs. 3-5 exactly (jnp.clip's min/max tie convention differs).
+    qu = jax.lax.stop_gradient(jnp.round(t) + ze)
+    below = qu < 0.0
+    above = qu > qmax
+    q = jnp.where(below, 0.0, jnp.where(above, qmax, r + ze))
+    return (q - ze) * se
+
+
+def fake_quant_grads_ref(w, s, z, qmax, gout):
+    """Analytic STE gradients (paper Eqs. 3-5, with correct -s factor on z).
+
+    Returns (gw, gs, gz) with gs, gz reduced to (out, G).
+    """
+    out_dim, in_dim = w.shape
+    G = s.shape[1]
+    g = in_dim // G
+    se = expand_groups(s, out_dim, in_dim)
+    ze = expand_groups(z, out_dim, in_dim)
+    t = jnp.round(w / se)
+    q_unclamped = t + ze
+    below = q_unclamped < 0.0
+    above = q_unclamped > qmax
+    in_range = jnp.logical_not(jnp.logical_or(below, above))
+
+    gw = jnp.where(in_range, gout, 0.0)
+    # d w_hat / d s (per element, before group reduction):
+    ds = jnp.where(in_range, t - w / se, jnp.where(below, -ze, qmax - ze))
+    gs_el = gout * ds
+    # d w_hat / d z: 0 in range, -s when clamped (either side)
+    gz_el = jnp.where(in_range, 0.0, -se) * gout
+
+    gs = gs_el.reshape(out_dim, G, g).sum(axis=2)
+    gz = gz_el.reshape(out_dim, G, g).sum(axis=2)
+    return gw, gs, gz
+
+
+def dequant_matmul_ref(x, w_int, s, z):
+    """y = x @ dequantize(w_int, s, z)^T ; x: (M, K), w_int: (N, K)."""
+    return x @ dequantize_ref(w_int, s, z).T
+
+
+def dequant_matmul_grads_ref(x, w_int, s, z, gout):
+    """Analytic grads of dequant_matmul wrt (x, s, z). w_int is frozen.
+
+    gx  = gout @ W_hat            (M,N)@(N,K)
+    gs[n,g] = sum_m gout[m,n] * sum_{k in g} x[m,k] * (w_int[n,k]-z[n,g])
+    gz[n,g] = -s[n,g] * sum_m gout[m,n] * sum_{k in g} x[m,k]
+    """
+    N, K = w_int.shape
+    G = s.shape[1]
+    g = K // G
+    w_hat = dequantize_ref(w_int, s, z)
+    gx = gout @ w_hat
+
+    # u[m,n,g] = sum_{k in group} x[m,k] * (w_int[n,k] - z[n,g])
+    ze = expand_groups(z, N, K)
+    wz = (w_int - ze).reshape(N, G, g)               # (N,G,g)
+    xg = x.reshape(x.shape[0], G, g)                  # (M,G,g)
+    u = jnp.einsum("mgk,ngk->mng", xg, wz)            # (M,N,G)
+    gs = jnp.einsum("mn,mng->ng", gout, u)
+    xsum = xg.sum(axis=2)                             # (M,G)
+    gz = -s * jnp.einsum("mn,mg->ng", gout, xsum)
+    return gx, gs, gz
+
+
+def minmax_init_ref(w, group, qmax):
+    """RTN min/max initialization of (s, z) for group size `group`.
+
+    s = (max - min) / qmax ; z = clamp(round(-min/s), 0, qmax)
+    min is clamped <= 0 and max >= 0 so that zero is representable.
+    Degenerate all-constant groups get s clamped to a small epsilon.
+    """
+    out_dim, in_dim = w.shape
+    G = in_dim // group
+    wg = w.reshape(out_dim, G, group)
+    wmax = jnp.maximum(wg.max(axis=2), 0.0)
+    wmin = jnp.minimum(wg.min(axis=2), 0.0)
+    s = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    z = jnp.clip(jnp.round(-wmin / s), 0.0, qmax)
+    return s, z
+
+
+def dynamic_fake_quant_ref(w, group, qmax):
+    """Min/max fake quant with scales recomputed from w each call (the naive
+    QAT baseline, LLM-QAT style): scales follow w but gradients flow through
+    the STE rounding path only (scales are stop-gradiented, as in LLM-QAT).
+    """
+    out_dim, in_dim = w.shape
+    G = in_dim // group
+    wg = w.reshape(out_dim, G, group)
+    wmax = jnp.maximum(wg.max(axis=2, keepdims=True), 0.0)
+    wmin = jnp.minimum(wg.min(axis=2, keepdims=True), 0.0)
+    s = jnp.maximum((wmax - wmin) / qmax, 1e-8)
+    s = jax.lax.stop_gradient(s)
+    z = jax.lax.stop_gradient(jnp.clip(jnp.round(-wmin / s), 0.0, qmax))
+    t = wg / s
+    r = t + jax.lax.stop_gradient(jnp.round(t) - t)
+    q = jnp.clip(r + z, 0.0, qmax)
+    return ((q - z) * s).reshape(out_dim, in_dim)

@@ -1,0 +1,419 @@
+"""L2: Llama-style decoder-only transformer in JAX, calling the L1 kernels.
+
+Everything operates on FLAT f32 parameter vectors (one buffer per logical
+parameter group) so the Rust coordinator moves a handful of buffers per step
+instead of dozens of tensors; layouts are static and exported in
+artifacts/manifest.json (DESIGN.md §2).
+
+Forward modes (all share `block_core`, differing only in the linear
+application function):
+  * fp        : y = x @ W^T                      (pretraining / teacher)
+  * fake-quant: y = x @ fake_quant(W, s, z)^T    (Block-AP training)
+  * dequant   : y = dequant_matmul(x, W_int,s,z) (E2E-QP / evaluation)
+  * dynamic   : y = x @ dyn_fq(W)^T              (naive-QAT baseline)
+  * lora      : dequant + x @ A^T @ B^T          (QLoRA baseline)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Preset, linear_shapes
+from .kernels.fake_quant import fake_quant
+from .kernels.dequant_matmul import dequant_matmul
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Flat-buffer layouts
+# ---------------------------------------------------------------------------
+
+
+class Layout:
+    """Ordered (name -> offset, shape) map over one flat f32 vector."""
+
+    def __init__(self, entries):
+        self.entries = []  # (name, offset, shape)
+        off = 0
+        for name, shape in entries:
+            n = 1
+            for d in shape:
+                n *= d
+            self.entries.append((name, off, tuple(shape)))
+            off += n
+        self.size = off
+        self.by_name = {n: (o, s) for (n, o, s) in self.entries}
+
+    def slice(self, flat, name):
+        off, shape = self.by_name[name]
+        n = 1
+        for d in shape:
+            n *= d
+        return flat[off:off + n].reshape(shape)
+
+    def unflatten(self, flat):
+        return {n: self.slice(flat, n) for (n, _, _) in self.entries}
+
+    def to_json(self):
+        return [
+            {"name": n, "offset": o, "shape": list(s)}
+            for (n, o, s) in self.entries
+        ]
+
+
+def block_param_entries(p: Preset):
+    """One transformer block's fp parameters, in flat order."""
+    ents = [("attn_norm", (p.dim,))]
+    lins = dict(linear_shapes(p))
+    for name in ("attn.q", "attn.k", "attn.v", "attn.o"):
+        ents.append((name, lins[name]))
+    ents.append(("mlp_norm", (p.dim,)))
+    for name in ("mlp.gate", "mlp.up", "mlp.down"):
+        ents.append((name, lins[name]))
+    return ents
+
+
+LINEAR_NAMES = ["attn.q", "attn.k", "attn.v", "attn.o",
+                "mlp.gate", "mlp.up", "mlp.down"]
+
+
+def fp_layout(p: Preset) -> Layout:
+    ents = [("embed", (p.vocab, p.dim))]
+    for b in range(p.n_layers):
+        for name, shape in block_param_entries(p):
+            ents.append((f"blocks.{b}.{name}", shape))
+    ents.append(("final_norm", (p.dim,)))
+    ents.append(("head", (p.vocab, p.dim)))
+    return Layout(ents)
+
+
+def block_layout(p: Preset) -> Layout:
+    return Layout(block_param_entries(p))
+
+
+def wq_block_layout(p: Preset) -> Layout:
+    """Integer weights of ONE block's 7 linears (values stored as f32)."""
+    return Layout([(n, s) for n, s in linear_shapes(p)])
+
+
+def wq_layout(p: Preset) -> Layout:
+    ents = []
+    for b in range(p.n_layers):
+        for n, s in linear_shapes(p):
+            ents.append((f"blocks.{b}.{n}", s))
+    return Layout(ents)
+
+
+def _qp_entries(p: Preset, group: int, prefix: str, blocks):
+    ents = []
+    for which in ("s", "z"):
+        for b in blocks:
+            for n, (out_d, in_d) in linear_shapes(p):
+                nm = f"{which}.{prefix}{b}{'.' if prefix else ''}{n}" if prefix \
+                    else f"{which}.{n}"
+                ents.append((nm, (out_d, in_d // group)))
+    return ents
+
+
+def qp_block_layout(p: Preset, group: int) -> Layout:
+    """[s_all || z_all] for one block (enables scalar-masked updates)."""
+    ents = []
+    for which in ("s", "z"):
+        for n, (out_d, in_d) in linear_shapes(p):
+            ents.append((f"{which}.{n}", (out_d, in_d // group)))
+    return Layout(ents)
+
+
+def qp_layout(p: Preset, group: int) -> Layout:
+    """[s_all || z_all] over the whole model."""
+    ents = []
+    for which in ("s", "z"):
+        for b in range(p.n_layers):
+            for n, (out_d, in_d) in linear_shapes(p):
+                ents.append((f"{which}.blocks.{b}.{n}", (out_d, in_d // group)))
+    return Layout(ents)
+
+
+def fpr_layout(p: Preset) -> Layout:
+    """Parameters that stay fp in the quantized model."""
+    ents = [("embed", (p.vocab, p.dim))]
+    for b in range(p.n_layers):
+        ents.append((f"blocks.{b}.attn_norm", (p.dim,)))
+        ents.append((f"blocks.{b}.mlp_norm", (p.dim,)))
+    ents.append(("final_norm", (p.dim,)))
+    ents.append(("head", (p.vocab, p.dim)))
+    return Layout(ents)
+
+
+def lora_layout(p: Preset) -> Layout:
+    r = p.lora_rank
+    ents = []
+    for b in range(p.n_layers):
+        for n, (out_d, in_d) in linear_shapes(p):
+            ents.append((f"blocks.{b}.{n}.A", (r, in_d)))
+            ents.append((f"blocks.{b}.{n}.B", (out_d, r)))
+    return Layout(ents)
+
+
+# ---------------------------------------------------------------------------
+# Core forward
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(p: Preset, t: int):
+    hd = p.head_dim
+    inv = 1.0 / (p.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    pos = jnp.arange(t, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]          # (T, hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(q, cos, sin):
+    """q: (B, H, T, hd); split-half convention (mirrored in rust infer)."""
+    hd = q.shape[-1]
+    q1, q2 = q[..., : hd // 2], q[..., hd // 2:]
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([q1 * c - q2 * s, q2 * c + q1 * s], axis=-1)
+
+
+def block_core(x, norms, lin, p: Preset, capture=False):
+    """One transformer block. `lin(name, x3d) -> y3d` applies a linear.
+
+    Returns h_out, or (h_out, captures) with the four intra-block linear
+    inputs when capture=True (GPTQ/AWQ calibration, DESIGN.md §2).
+    """
+    bsz, t, d = x.shape
+    h = rms_norm(x, norms["attn_norm"], p.norm_eps)
+    q = lin("attn.q", h)
+    k = lin("attn.k", h)
+    v = lin("attn.v", h)
+    hd, nh = p.head_dim, p.n_heads
+    q = q.reshape(bsz, t, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(bsz, t, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, t, nh, hd).transpose(0, 2, 1, 3)
+    cos, sin = rope_tables(p, t)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    attn_out = lin("attn.o", ctx)
+    x = x + attn_out
+
+    h2 = rms_norm(x, norms["mlp_norm"], p.norm_eps)
+    gate = lin("mlp.gate", h2)
+    up = lin("mlp.up", h2)
+    mid = jax.nn.silu(gate) * up
+    down = lin("mlp.down", mid)
+    out = x + down
+    if capture:
+        return out, {"x_attn": h, "attn_ctx": ctx, "x_mlp": h2, "mlp_mid": mid}
+    return out
+
+
+def make_lin_fp(weights):
+    """weights: dict name -> (out, in) array."""
+    def lin(name, x):
+        w = weights[name]
+        shp = x.shape[:-1] + (w.shape[0],)
+        return (x.reshape(-1, w.shape[1]) @ w.T).reshape(shp)
+    return lin
+
+
+def make_lin_fake_quant(weights, s, z, qmax):
+    """fake_quant Pallas kernel on the weight, then matmul (Block-AP)."""
+    def lin(name, x):
+        w = fake_quant(weights[name], s[name], z[name], qmax)
+        shp = x.shape[:-1] + (w.shape[0],)
+        return (x.reshape(-1, w.shape[1]) @ w.T).reshape(shp)
+    return lin
+
+
+def make_lin_dequant(w_int, s, z):
+    """dequant_matmul Pallas kernel (E2E-QP / eval)."""
+    def lin(name, x):
+        wi = w_int[name]
+        shp = x.shape[:-1] + (wi.shape[0],)
+        y = dequant_matmul(x.reshape(-1, wi.shape[1]), wi, s[name], z[name])
+        return y.reshape(shp)
+    return lin
+
+
+def make_lin_dynamic(weights, group, qmax):
+    """Min/max-recomputed fake quant (naive QAT baseline, LLM-QAT style)."""
+    def lin(name, x):
+        w = ref.dynamic_fake_quant_ref(weights[name], group, qmax)
+        shp = x.shape[:-1] + (w.shape[0],)
+        return (x.reshape(-1, w.shape[1]) @ w.T).reshape(shp)
+    return lin
+
+
+def make_lin_lora(w_int, s, z, lora, scale):
+    """Frozen dequant path + trainable low-rank update (QLoRA baseline)."""
+    base = make_lin_dequant(w_int, s, z)
+
+    def lin(name, x):
+        y = base(name, x)
+        a = lora[name + ".A"]
+        b = lora[name + ".B"]
+        x2 = x.reshape(-1, a.shape[1])
+        delta = (x2 @ a.T) @ b.T * scale
+        return y + delta.reshape(y.shape)
+    return lin
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forwards over flat buffers
+# ---------------------------------------------------------------------------
+
+
+def _block_weight_dicts(params, b):
+    names = LINEAR_NAMES
+    w = {n: params[f"blocks.{b}.{n}"] for n in names}
+    norms = {
+        "attn_norm": params[f"blocks.{b}.attn_norm"],
+        "mlp_norm": params[f"blocks.{b}.mlp_norm"],
+    }
+    return w, norms
+
+
+def model_fwd_fp(flat, x_ids, p: Preset, layout: Layout):
+    params = layout.unflatten(flat)
+    h = params["embed"][x_ids]
+    for b in range(p.n_layers):
+        w, norms = _block_weight_dicts(params, b)
+        h = block_core(h, norms, make_lin_fp(w), p)
+    h = rms_norm(h, params["final_norm"], p.norm_eps)
+    return h @ params["head"].T
+
+
+def model_fwd_quant(wq_flat, qp_flat, fpr_flat, x_ids, p: Preset,
+                    wql: Layout, qpl: Layout, fprl: Layout):
+    """Dequant-only forward over a quantized model (eval / E2E-QP)."""
+    wq = wql.unflatten(wq_flat)
+    qp = qpl.unflatten(qp_flat)
+    fpr = fprl.unflatten(fpr_flat)
+    h = fpr["embed"][x_ids]
+    for b in range(p.n_layers):
+        w_int = {n: wq[f"blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        s = {n: qp[f"s.blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        z = {n: qp[f"z.blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        norms = {
+            "attn_norm": fpr[f"blocks.{b}.attn_norm"],
+            "mlp_norm": fpr[f"blocks.{b}.mlp_norm"],
+        }
+        h = block_core(h, norms, make_lin_dequant(w_int, s, z), p)
+    h = rms_norm(h, fpr["final_norm"], p.norm_eps)
+    return h @ fpr["head"].T
+
+
+def model_fwd_dynamic(flat, x_ids, p: Preset, layout: Layout, group, qmax):
+    """Naive-QAT forward: every linear weight dynamically fake-quantized."""
+    params = layout.unflatten(flat)
+    h = params["embed"][x_ids]
+    for b in range(p.n_layers):
+        w, norms = _block_weight_dicts(params, b)
+        h = block_core(h, norms, make_lin_dynamic(w, group, qmax), p)
+    h = rms_norm(h, params["final_norm"], p.norm_eps)
+    return h @ params["head"].T
+
+
+def model_fwd_lora(wq_flat, qp_flat, fpr_flat, lora_flat, x_ids, p: Preset,
+                   wql, qpl, fprl, loral, scale=1.0):
+    wq = wql.unflatten(wq_flat)
+    qp = qpl.unflatten(qp_flat)
+    fpr = fprl.unflatten(fpr_flat)
+    lora = loral.unflatten(lora_flat)
+    h = fpr["embed"][x_ids]
+    for b in range(p.n_layers):
+        w_int = {n: wq[f"blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        s = {n: qp[f"s.blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        z = {n: qp[f"z.blocks.{b}.{n}"] for n in LINEAR_NAMES}
+        lora_b = {}
+        for n in LINEAR_NAMES:
+            lora_b[n + ".A"] = lora[f"blocks.{b}.{n}.A"]
+            lora_b[n + ".B"] = lora[f"blocks.{b}.{n}.B"]
+        norms = {
+            "attn_norm": fpr[f"blocks.{b}.attn_norm"],
+            "mlp_norm": fpr[f"blocks.{b}.mlp_norm"],
+        }
+        h = block_core(h, norms, make_lin_lora(w_int, s, z, lora_b, scale), p)
+    h = rms_norm(h, fpr["final_norm"], p.norm_eps)
+    return h @ fpr["head"].T
+
+
+# ---------------------------------------------------------------------------
+# Single-block forwards over flat buffers
+# ---------------------------------------------------------------------------
+
+
+def _split_block(bl: Layout, flat):
+    params = bl.unflatten(flat)
+    w = {n: params[n] for n in LINEAR_NAMES}
+    norms = {"attn_norm": params["attn_norm"], "mlp_norm": params["mlp_norm"]}
+    return w, norms
+
+
+def block_fwd_fp(bp_flat, h, p: Preset, bl: Layout, capture=False):
+    w, norms = _split_block(bl, bp_flat)
+    return block_core(h, norms, make_lin_fp(w), p, capture=capture)
+
+
+def block_fwd_fake_quant(bp_flat, qp_flat, h, qmax, p: Preset,
+                         bl: Layout, qbl: Layout):
+    w, norms = _split_block(bl, bp_flat)
+    qp = qbl.unflatten(qp_flat)
+    s = {n: qp[f"s.{n}"] for n in LINEAR_NAMES}
+    z = {n: qp[f"z.{n}"] for n in LINEAR_NAMES}
+    return block_core(h, norms, make_lin_fake_quant(w, s, z, qmax), p)
+
+
+def block_fwd_dequant(wq_flat, qp_flat, norms_flat, h, p: Preset,
+                      wqbl: Layout, qbl: Layout):
+    """Quantized-block forward (propagation through finished blocks)."""
+    wq = wqbl.unflatten(wq_flat)
+    qp = qbl.unflatten(qp_flat)
+    s = {n: qp[f"s.{n}"] for n in LINEAR_NAMES}
+    z = {n: qp[f"z.{n}"] for n in LINEAR_NAMES}
+    norms = {"attn_norm": norms_flat[:p.dim], "mlp_norm": norms_flat[p.dim:]}
+    return block_core(h, norms, make_lin_dequant(wq, s, z), p)
+
+
+# ---------------------------------------------------------------------------
+# Losses / optimizer
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, y_ids):
+    """Mean token cross-entropy; logits (B,T,V), y (B,T) int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y_ids[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def masked_cross_entropy(logits, y_ids, mask):
+    """CE over positions where mask == 1 (instruction tuning targets)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y_ids[..., None], axis=-1)[..., 0]
+    per = (logz - gold) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def adam_update(param, grad, m, v, step, lr,
+                b1=0.9, b2=0.999, eps=1e-8):
+    """Adam on flat vectors; `step` is a 1-based f32 scalar.
+
+    Mirrored bit-for-bit by rust tests (coordinator/opt.rs golden test).
+    """
+    m = b1 * m + (1.0 - b1) * grad
+    v = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m / (1.0 - b1 ** step)
+    vhat = v / (1.0 - b2 ** step)
+    return param - lr * mhat / (jnp.sqrt(vhat) + eps), m, v

@@ -1,0 +1,352 @@
+"""L2 training-step graph builders: one fused HLO per phase.
+
+Each builder returns (fn, ordered example args) for aot.py to lower. All
+hyper-knobs that do not change tensor shapes are RUNTIME SCALARS so a single
+compiled artifact serves every bit-width (qmax) and every Table-6/7 ablation
+(gradient masks m_w/m_s/m_z + rounding-projection flag) - DESIGN.md §2.
+
+Scalar convention: scalars are f32[] positional args appearing AFTER the
+array args; (1,1)-shaped qmax feeds the Pallas kernels directly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import Preset
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _qp_halves_mask(qpl_size, mask_s, mask_z):
+    half = qpl_size // 2
+    return jnp.concatenate([
+        jnp.full((half,), 1.0) * mask_s,
+        jnp.full((qpl_size - half,), 1.0) * mask_z,
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Full-precision pretraining (substrate: creates the model we quantize)
+# ---------------------------------------------------------------------------
+
+
+def build_pretrain_step(p: Preset):
+    fl = M.fp_layout(p)
+    bsz, t = p.e2e_batch, p.e2e_ctx
+
+    def step_fn(params, m, v, x, y, step, lr):
+        def loss_fn(f):
+            return M.cross_entropy(M.model_fwd_fp(f, x, p, fl), y)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, m, v = M.adam_update(params, g, m, v, step, lr)
+        return params, m, v, loss
+
+    args = [
+        ("params", _sds((fl.size,))), ("m", _sds((fl.size,))),
+        ("v", _sds((fl.size,))),
+        ("x", _sds((bsz, t), jnp.int32)), ("y", _sds((bsz, t), jnp.int32)),
+        ("step", _sds(())), ("lr", _sds(())),
+    ]
+    outs = ["params", "m", "v", "loss"]
+    return step_fn, args, outs
+
+
+def build_model_fwd_fp(p: Preset):
+    fl = M.fp_layout(p)
+    bsz, t = p.eval_batch, p.eval_ctx
+
+    def fn(params, x):
+        return (M.model_fwd_fp(params, x, p, fl),)
+
+    args = [("params", _sds((fl.size,))), ("x", _sds((bsz, t), jnp.int32))]
+    return fn, args, ["logits"]
+
+
+def build_embed_fwd(p: Preset):
+    fl = M.fp_layout(p)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def fn(params, x):
+        emb = fl.slice(params, "embed")
+        return (emb[x],)
+
+    args = [("params", _sds((fl.size,))), ("x", _sds((bsz, t), jnp.int32))]
+    return fn, args, ["h0"]
+
+
+# ---------------------------------------------------------------------------
+# Block-level forwards (teacher capture / propagation)
+# ---------------------------------------------------------------------------
+
+
+def build_block_fwd_fp(p: Preset):
+    bl = M.block_layout(p)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def fn(bp, h):
+        return (M.block_fwd_fp(bp, h, p, bl),)
+
+    args = [("bp", _sds((bl.size,))), ("h", _sds((bsz, t, p.dim)))]
+    return fn, args, ["h_out"]
+
+
+def build_block_capture_fp(p: Preset):
+    bl = M.block_layout(p)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def fn(bp, h):
+        out, cap = M.block_fwd_fp(bp, h, p, bl, capture=True)
+        return (out, cap["x_attn"], cap["attn_ctx"], cap["x_mlp"],
+                cap["mlp_mid"])
+
+    args = [("bp", _sds((bl.size,))), ("h", _sds((bsz, t, p.dim)))]
+    return fn, args, ["h_out", "x_attn", "attn_ctx", "x_mlp", "mlp_mid"]
+
+
+def build_block_fwd_q(p: Preset, group: int):
+    wqbl = M.wq_block_layout(p)
+    qbl = M.qp_block_layout(p, group)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def fn(wq, qp, norms, h):
+        return (M.block_fwd_dequant(wq, qp, norms, h, p, wqbl, qbl),)
+
+    args = [
+        ("wq", _sds((wqbl.size,))), ("qp", _sds((qbl.size,))),
+        ("norms", _sds((2 * p.dim,))), ("h", _sds((bsz, t, p.dim))),
+    ]
+    return fn, args, ["h_out"]
+
+
+# ---------------------------------------------------------------------------
+# Block-AP: the paper's phase-1 train step
+# ---------------------------------------------------------------------------
+
+
+def build_block_ap_step(p: Preset, group: int):
+    """Masked, projected Block-AP step (paper §3.2 + Table 6 ablations).
+
+    Trainables: the whole block fp vector `bp` (7 linears + 2 norms, Adam
+    with lr_w, gated by m_w) and qp = [s||z] (Adam with lr_q, gated by
+    m_s/m_z). `proj` = 1 clips updated weights to [w_lo, w_hi] - the
+    AutoRound-style (-0.5, +0.5)*s rounding-window regularizer, computed
+    host-side by the Rust coordinator.
+    """
+    bl = M.block_layout(p)
+    qbl = M.qp_block_layout(p, group)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def step_fn(bp, qp, m_w, v_w, m_q, v_q, w_lo, w_hi, h, target,
+                qmax, step, lr_w, lr_q, m_wf, m_sf, m_zf, proj):
+        def loss_fn(bp_, qp_):
+            out = M.block_fwd_fake_quant(bp_, qp_, h, qmax, p, bl, qbl)
+            d = out - target
+            return jnp.mean(d * d)
+
+        loss, (g_w, g_q) = jax.value_and_grad(loss_fn, argnums=(0, 1))(bp, qp)
+        g_w = g_w * m_wf
+        g_q = g_q * _qp_halves_mask(qbl.size, m_sf, m_zf)
+        bp2, m_w, v_w = M.adam_update(bp, g_w, m_w, v_w, step, lr_w)
+        qp2, m_q, v_q = M.adam_update(qp, g_q, m_q, v_q, step, lr_q)
+        bp2 = proj * jnp.clip(bp2, w_lo, w_hi) + (1.0 - proj) * bp2
+        # keep zero points on the integer grid drift-free? No: z trains
+        # continuously during Block-AP (rounded once at final quantization).
+        return bp2, qp2, m_w, v_w, m_q, v_q, loss
+
+    n, q = bl.size, qbl.size
+    args = [
+        ("bp", _sds((n,))), ("qp", _sds((q,))),
+        ("m_w", _sds((n,))), ("v_w", _sds((n,))),
+        ("m_q", _sds((q,))), ("v_q", _sds((q,))),
+        ("w_lo", _sds((n,))), ("w_hi", _sds((n,))),
+        ("h", _sds((bsz, t, p.dim))), ("target", _sds((bsz, t, p.dim))),
+        ("qmax", _sds((1, 1))),
+        ("step", _sds(())), ("lr_w", _sds(())), ("lr_q", _sds(())),
+        ("m_wf", _sds(())), ("m_sf", _sds(())), ("m_zf", _sds(())),
+        ("proj", _sds(())),
+    ]
+    outs = ["bp", "qp", "m_w", "v_w", "m_q", "v_q", "loss"]
+    return step_fn, args, outs
+
+
+def build_block_loss(p: Preset, group: int):
+    """Reconstruction loss only (validation batches, fig3 overfitting gap)."""
+    bl = M.block_layout(p)
+    qbl = M.qp_block_layout(p, group)
+    bsz, t = p.block_batch, p.block_ctx
+
+    def fn(bp, qp, h, target, qmax):
+        out = M.block_fwd_fake_quant(bp, qp, h, qmax, p, bl, qbl)
+        d = out - target
+        return (jnp.mean(d * d),)
+
+    args = [
+        ("bp", _sds((bl.size,))), ("qp", _sds((qbl.size,))),
+        ("h", _sds((bsz, t, p.dim))), ("target", _sds((bsz, t, p.dim))),
+        ("qmax", _sds((1, 1))),
+    ]
+    return fn, args, ["loss"]
+
+
+# ---------------------------------------------------------------------------
+# E2E-QP: the paper's phase-2 train step
+# ---------------------------------------------------------------------------
+
+
+def build_e2e_qp_step(p: Preset, group: int):
+    """Frozen W_int; trains qp = [s||z] with masks (Table 7).
+
+    `loss_mask` (f32 B,T) selects supervised positions: all-ones for
+    continual pretraining, response-span-only for instruction tuning -
+    one artifact serves both (paper §3.3 'simply changing datasets').
+    """
+    wql = M.wq_layout(p)
+    qpl = M.qp_layout(p, group)
+    fprl = M.fpr_layout(p)
+    bsz, t = p.e2e_batch, p.e2e_ctx
+
+    def step_fn(wq, qp, fpr, m_q, v_q, x, y, loss_mask, step, lr,
+                m_sf, m_zf):
+        def loss_fn(qp_):
+            logits = M.model_fwd_quant(wq, qp_, fpr, x, p, wql, qpl, fprl)
+            return M.masked_cross_entropy(logits, y, loss_mask)
+
+        loss, g = jax.value_and_grad(loss_fn)(qp)
+        g = g * _qp_halves_mask(qpl.size, m_sf, m_zf)
+        qp2, m_q, v_q = M.adam_update(qp, g, m_q, v_q, step, lr)
+        return qp2, m_q, v_q, loss
+
+    args = [
+        ("wq", _sds((wql.size,))), ("qp", _sds((qpl.size,))),
+        ("fpr", _sds((fprl.size,))),
+        ("m_q", _sds((qpl.size,))), ("v_q", _sds((qpl.size,))),
+        ("x", _sds((bsz, t), jnp.int32)), ("y", _sds((bsz, t), jnp.int32)),
+        ("loss_mask", _sds((bsz, t))),
+        ("step", _sds(())), ("lr", _sds(())),
+        ("m_sf", _sds(())), ("m_zf", _sds(())),
+    ]
+    outs = ["qp", "m_q", "v_q", "loss"]
+    return step_fn, args, outs
+
+
+def build_model_fwd_q(p: Preset, group: int):
+    wql = M.wq_layout(p)
+    qpl = M.qp_layout(p, group)
+    fprl = M.fpr_layout(p)
+    bsz, t = p.eval_batch, p.eval_ctx
+
+    def fn(wq, qp, fpr, x):
+        return (M.model_fwd_quant(wq, qp, fpr, x, p, wql, qpl, fprl),)
+
+    args = [
+        ("wq", _sds((wql.size,))), ("qp", _sds((qpl.size,))),
+        ("fpr", _sds((fprl.size,))), ("x", _sds((bsz, t), jnp.int32)),
+    ]
+    return fn, args, ["logits"]
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+def build_e2e_full_step(p: Preset, group: int):
+    """Naive end-to-end QAT (LLM-QAT style): every weight trainable, scales
+    recomputed from min/max each step. The Table 2/9 comparator."""
+    fl = M.fp_layout(p)
+    bsz, t = p.e2e_batch, p.e2e_ctx
+
+    def step_fn(params, m, v, x, y, step, lr, qmax):
+        def loss_fn(f):
+            logits = M.model_fwd_dynamic(f, x, p, fl, group, qmax)
+            return M.cross_entropy(logits, y)
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, m, v = M.adam_update(params, g, m, v, step, lr)
+        return params, m, v, loss
+
+    args = [
+        ("params", _sds((fl.size,))), ("m", _sds((fl.size,))),
+        ("v", _sds((fl.size,))),
+        ("x", _sds((bsz, t), jnp.int32)), ("y", _sds((bsz, t), jnp.int32)),
+        ("step", _sds(())), ("lr", _sds(())), ("qmax", _sds(())),
+    ]
+    return step_fn, args, ["params", "m", "v", "loss"]
+
+
+def build_e2e_lora_step(p: Preset, group: int):
+    """QLoRA-style baseline: frozen quantized base, trainable LoRA."""
+    wql = M.wq_layout(p)
+    qpl = M.qp_layout(p, group)
+    fprl = M.fpr_layout(p)
+    ll = M.lora_layout(p)
+    bsz, t = p.e2e_batch, p.e2e_ctx
+
+    def step_fn(wq, qp, fpr, lora, m, v, x, y, loss_mask, step, lr):
+        def loss_fn(lo):
+            logits = M.model_fwd_lora(wq, qp, fpr, lo, x, p,
+                                      wql, qpl, fprl, ll)
+            return M.masked_cross_entropy(logits, y, loss_mask)
+        loss, g = jax.value_and_grad(loss_fn)(lora)
+        lora2, m, v = M.adam_update(lora, g, m, v, step, lr)
+        return lora2, m, v, loss
+
+    args = [
+        ("wq", _sds((wql.size,))), ("qp", _sds((qpl.size,))),
+        ("fpr", _sds((fprl.size,))), ("lora", _sds((ll.size,))),
+        ("m", _sds((ll.size,))), ("v", _sds((ll.size,))),
+        ("x", _sds((bsz, t), jnp.int32)), ("y", _sds((bsz, t), jnp.int32)),
+        ("loss_mask", _sds((bsz, t))),
+        ("step", _sds(())), ("lr", _sds(())),
+    ]
+    return step_fn, args, ["lora", "m", "v", "loss"]
+
+
+def build_model_fwd_lora(p: Preset, group: int):
+    wql = M.wq_layout(p)
+    qpl = M.qp_layout(p, group)
+    fprl = M.fpr_layout(p)
+    ll = M.lora_layout(p)
+    bsz, t = p.eval_batch, p.eval_ctx
+
+    def fn(wq, qp, fpr, lora, x):
+        return (M.model_fwd_lora(wq, qp, fpr, lora, x, p,
+                                 wql, qpl, fprl, ll),)
+
+    args = [
+        ("wq", _sds((wql.size,))), ("qp", _sds((qpl.size,))),
+        ("fpr", _sds((fprl.size,))), ("lora", _sds((ll.size,))),
+        ("x", _sds((bsz, t), jnp.int32)),
+    ]
+    return fn, args, ["logits"]
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py
+# ---------------------------------------------------------------------------
+
+# entries lowered once per preset (group-independent)
+BASE_ENTRIES = {
+    "pretrain_step": build_pretrain_step,
+    "model_fwd_fp": build_model_fwd_fp,
+    "embed_fwd": build_embed_fwd,
+    "block_fwd_fp": build_block_fwd_fp,
+    "block_capture_fp": build_block_capture_fp,
+}
+
+# entries lowered per (preset, group size)
+GROUP_ENTRIES = {
+    "block_ap_step": build_block_ap_step,
+    "block_loss": build_block_loss,
+    "block_fwd_q": build_block_fwd_q,
+    "e2e_qp_step": build_e2e_qp_step,
+    "model_fwd_q": build_model_fwd_q,
+    "e2e_full_step": build_e2e_full_step,
+    "e2e_lora_step": build_e2e_lora_step,
+    "model_fwd_lora": build_model_fwd_lora,
+}
+
+# heavier baselines: only lowered at the DEFAULT group size of each preset
+DEFAULT_GROUP_ONLY = {"e2e_full_step", "e2e_lora_step", "model_fwd_lora"}

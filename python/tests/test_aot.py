@@ -1,0 +1,107 @@
+"""AOT pipeline invariants: manifest consistency with the live layouts, and
+the large-constant regression (elided `{...}` constants parse as ZEROS in
+xla_extension 0.5.1 - the RoPE table bug; see aot.to_hlo_text)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M, train
+from compile.configs import PRESETS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_never_elides_constants():
+    def f(x):
+        c = jnp.asarray(np.arange(64, dtype=np.float32))
+        return (x * c + jnp.cos(c),)
+
+    text = aot.to_hlo_text(
+        f, [("x", jax.ShapeDtypeStruct((64,), jnp.float32))])
+    assert "constant({...})" not in text
+    # the arange constant must appear with real digits
+    assert any("constant({0, 1, 2" in l for l in text.splitlines())
+
+
+def test_rope_tables_survive_lowering():
+    """The exact regression: lowered rope must contain a non-trivial
+    exponent constant (the arange(0,hd,2)/hd table)."""
+    p = PRESETS["tiny"]
+
+    def f(q):
+        cos, sin = M.rope_tables(p, 8)
+        return (M.apply_rope(q, cos, sin),)
+
+    text = aot.to_hlo_text(
+        f, [("q", jax.ShapeDtypeStruct((1, p.n_heads, 8, p.head_dim),
+                                       jnp.float32))])
+    assert "constant({...})" not in text
+    assert "0.0625" in text  # 2/32: second entry of the exponent table
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_matches_live_layouts():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for pname, pinfo in man["presets"].items():
+        p = PRESETS[pname]
+        live = {
+            "fp": M.fp_layout(p),
+            "block": M.block_layout(p),
+            "wq": M.wq_layout(p),
+            "fpr": M.fpr_layout(p),
+            "lora": M.lora_layout(p),
+        }
+        for g in p.group_sizes:
+            live[f"qp_g{g}"] = M.qp_layout(p, g)
+            live[f"qp_block_g{g}"] = M.qp_block_layout(p, g)
+        for lname, lay in live.items():
+            ents = pinfo["layouts"][lname]
+            assert len(ents) == len(lay.entries), f"{pname}/{lname}"
+            for e, (name, off, shape) in zip(ents, lay.entries):
+                assert e["name"] == name
+                assert e["offset"] == off
+                assert tuple(e["shape"]) == shape
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_artifact_args_match_builders():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    by_key = {(a["preset"], a["entry"]): a for a in man["artifacts"]}
+    p = PRESETS["tiny"]
+    for entry, builder in train.BASE_ENTRIES.items():
+        _, args, outs = builder(p)
+        spec = by_key[("tiny", entry)]
+        assert [a["name"] for a in spec["args"]] == [n for n, _ in args]
+        assert spec["outputs"] == outs
+    g = p.default_group
+    for entry, builder in train.GROUP_ENTRIES.items():
+        _, args, outs = builder(p, g)
+        spec = by_key[("tiny", f"{entry}_g{g}")]
+        assert [a["name"] for a in spec["args"]] == [n for n, _ in args]
+        for a, (_, sds) in zip(spec["args"], args):
+            assert tuple(a["shape"]) == tuple(sds.shape)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_artifact_files_exist_and_have_no_elisions():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    checked = 0
+    for a in man["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        if a["preset"] == "tiny":
+            with open(path) as fh:
+                assert "constant({...})" not in fh.read(), a["file"]
+            checked += 1
+    assert checked > 10

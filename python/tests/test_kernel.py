@@ -1,0 +1,185 @@
+"""Kernel vs ref-oracle correctness - the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes / bits / group sizes; asserts the Pallas kernels
+(interpret mode) match the pure-jnp oracle, and that the fused STE backward
+kernel matches BOTH the analytic gradients (paper Eqs. 3-5) and jax.grad of
+the oracle's differentiable formulation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.dequant_matmul import dequant_matmul
+
+jax.config.update("jax_enable_x64", False)
+
+
+@st.composite
+def qshapes(draw):
+    """(out, in, group) with group | in."""
+    g = draw(st.sampled_from([8, 16, 32, 64]))
+    n_groups = draw(st.integers(1, 4))
+    in_dim = g * n_groups
+    out_dim = draw(st.sampled_from([1, 3, 8, 24, 64]))
+    return out_dim, in_dim, g
+
+
+def make_wsz(seed, out_dim, in_dim, g, bits):
+    rng = np.random.default_rng(seed)
+    qmax = float(2 ** bits - 1)
+    w = rng.normal(0, 1.0, (out_dim, in_dim)).astype(np.float32)
+    s, z = ref.minmax_init_ref(jnp.asarray(w), g, qmax)
+    # perturb s, z away from the exact minmax init so clamping branches fire
+    s = s * (1.0 + 0.3 * rng.normal(0, 1, s.shape).astype(np.float32) ** 2)
+    z = jnp.clip(jnp.round(z + rng.integers(-1, 2, z.shape)), 0, qmax)
+    return jnp.asarray(w), s.astype(jnp.float32), z.astype(jnp.float32), qmax
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 3, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_fake_quant_fwd_matches_ref(shape, bits, seed):
+    out_dim, in_dim, g = shape
+    w, s, z, qmax = make_wsz(seed, out_dim, in_dim, g, bits)
+    qm = jnp.full((1, 1), qmax, jnp.float32)
+    got = fake_quant(w, s, z, qm)
+    want = ref.fake_quant_ref(w, s, z, qmax)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 3, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_fake_quant_bwd_matches_analytic(shape, bits, seed):
+    out_dim, in_dim, g = shape
+    w, s, z, qmax = make_wsz(seed, out_dim, in_dim, g, bits)
+    qm = jnp.full((1, 1), qmax, jnp.float32)
+    rng = np.random.default_rng(seed + 1)
+    gout = jnp.asarray(rng.normal(0, 1, (out_dim, in_dim)).astype(np.float32))
+
+    def loss(w_, s_, z_):
+        return jnp.vdot(fake_quant(w_, s_, z_, qm), gout)
+
+    gw, gs, gz = jax.grad(loss, argnums=(0, 1, 2))(w, s, z)
+    egw, egs, egz = ref.fake_quant_grads_ref(w, s, z, qmax, gout)
+    np.testing.assert_allclose(gw, egw, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gs, egs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gz, egz, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_fake_quant_bwd_matches_jax_grad_of_ref(shape, bits, seed):
+    """The kernel VJP == autodiff of the STE spec (independent derivation)."""
+    out_dim, in_dim, g = shape
+    w, s, z, qmax = make_wsz(seed, out_dim, in_dim, g, bits)
+    qm = jnp.full((1, 1), qmax, jnp.float32)
+    rng = np.random.default_rng(seed + 2)
+    gout = jnp.asarray(rng.normal(0, 1, (out_dim, in_dim)).astype(np.float32))
+
+    def loss_kernel(w_, s_, z_):
+        return jnp.vdot(fake_quant(w_, s_, z_, qm), gout)
+
+    def loss_ref(w_, s_, z_):
+        return jnp.vdot(ref.fake_quant_ref(w_, s_, z_, qmax), gout)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(w, s, z)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(w, s, z)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 3, 4]),
+       m=st.sampled_from([1, 2, 7, 16]), seed=st.integers(0, 2 ** 16))
+def test_dequant_matmul_fwd_matches_ref(shape, bits, m, seed):
+    n, k, g = shape
+    w, s, z, qmax = make_wsz(seed, n, k, g, bits)
+    w_int = ref.quantize_ref(w, s, z, qmax)
+    rng = np.random.default_rng(seed + 3)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    got = dequant_matmul(x, w_int, s, z)
+    want = ref.dequant_matmul_ref(x, w_int, s, z)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 4]),
+       m=st.sampled_from([1, 5, 8]), seed=st.integers(0, 2 ** 16))
+def test_dequant_matmul_bwd_matches_analytic(shape, bits, m, seed):
+    n, k, g = shape
+    w, s, z, qmax = make_wsz(seed, n, k, g, bits)
+    w_int = ref.quantize_ref(w, s, z, qmax)
+    rng = np.random.default_rng(seed + 4)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)).astype(np.float32))
+    gout = jnp.asarray(rng.normal(0, 1, (m, n)).astype(np.float32))
+
+    def loss(x_, s_, z_):
+        return jnp.vdot(dequant_matmul(x_, w_int, s_, z_), gout)
+
+    gx, gs, gz = jax.grad(loss, argnums=(0, 1, 2))(x, s, z)
+    egx, egs, egz = ref.dequant_matmul_grads_ref(x, w_int, s, z, gout)
+    np.testing.assert_allclose(gx, egx, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(gs, egs, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(gz, egz, rtol=1e-4, atol=1e-3)
+
+
+def test_dequant_matmul_grad_s_is_wq_minus_z_times_x():
+    """Paper §3.3: with a single output row and unit upstream gradient,
+    d y / d s reduces to sum_k x_k (w_q - z) - spot-check the formula."""
+    w_int = jnp.asarray([[0., 1., 2., 3., 1., 1., 2., 2.]])
+    s = jnp.asarray([[0.5, 0.25]])
+    z = jnp.asarray([[1.0, 2.0]])
+    x = jnp.asarray([[1., 2., 3., 4., 5., 6., 7., 8.]])
+
+    def y(s_):
+        return dequant_matmul(x, w_int, s_, z)[0, 0]
+
+    gs = jax.grad(y)(s)
+    want0 = ((w_int[0, :4] - 1.0) * x[0, :4]).sum()
+    want1 = ((w_int[0, 4:] - 2.0) * x[0, 4:]).sum()
+    np.testing.assert_allclose(gs, jnp.asarray([[want0, want1]]), rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=qshapes(), bits=st.sampled_from([2, 3, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_rtn_error_bound(shape, bits, seed):
+    """RTN dequant error <= s/2 + eps elementwise at min/max init."""
+    out_dim, in_dim, g = shape
+    qmax = float(2 ** bits - 1)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, (out_dim, in_dim)).astype(np.float32))
+    s, z = ref.minmax_init_ref(w, g, qmax)
+    w_hat = ref.fake_quant_ref(w, s, z, qmax)
+    se = ref.expand_groups(s, out_dim, in_dim)
+    err = jnp.abs(w_hat - w)
+    assert bool(jnp.all(err <= se * 0.5 + 1e-5))
+
+
+def test_quantize_values_are_integers_in_range():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 1, (16, 64)).astype(np.float32))
+    for bits in (2, 3, 4):
+        qmax = float(2 ** bits - 1)
+        s, z = ref.minmax_init_ref(w, 16, qmax)
+        wi = ref.quantize_ref(w, s, z, qmax)
+        assert bool(jnp.all(wi == jnp.round(wi)))
+        assert bool(jnp.all((wi >= 0) & (wi <= qmax)))
+
+
+def test_dynamic_fake_quant_matches_static_at_minmax_init():
+    """Naive-QAT dynamic quant == fake_quant with freshly-computed s,z."""
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(0, 1, (8, 32)).astype(np.float32))
+    g, bits = 8, 3
+    qmax = float(2 ** bits - 1)
+    s, z = ref.minmax_init_ref(w, g, qmax)
+    a = ref.dynamic_fake_quant_ref(w, g, qmax)
+    b = ref.fake_quant_ref(w, s, z, qmax)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

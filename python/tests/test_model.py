@@ -1,0 +1,176 @@
+"""L2 model/layout semantics: shapes, causality, layout partition,
+fake-quant <-> dequant consistency (the invariant linking Block-AP output to
+the E2E-QP input), and Adam golden vectors (mirrored in rust)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.configs import PRESETS, Preset
+from compile.kernels import ref
+
+P = PRESETS["tiny"]
+
+
+def rand_flat(layout, seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, (layout.size,)).astype(np.float32))
+
+
+def init_fp_params(p: Preset, seed=0):
+    """Sane init: norms at 1.0, weights small."""
+    fl = M.fp_layout(p)
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(fl.size, np.float32)
+    for name, off, shape in fl.entries:
+        n = int(np.prod(shape))
+        if name.endswith("norm"):
+            flat[off:off + n] = 1.0
+        else:
+            std = 0.02 if "embed" in name or "head" in name else \
+                (2.0 / (shape[0] + shape[1])) ** 0.5
+            flat[off:off + n] = rng.normal(0, std, n)
+    return jnp.asarray(flat), fl
+
+
+def test_layout_partitions_exactly():
+    for mk in (M.fp_layout, M.block_layout, M.wq_layout, M.fpr_layout,
+               M.lora_layout):
+        lay = mk(P)
+        covered = 0
+        prev_end = 0
+        for name, off, shape in lay.entries:
+            assert off == prev_end, f"gap before {name}"
+            n = int(np.prod(shape))
+            covered += n
+            prev_end = off + n
+        assert covered == lay.size
+
+
+def test_qp_layout_s_z_halves():
+    for g in P.group_sizes:
+        lay = M.qp_layout(P, g)
+        half = lay.size // 2
+        # all s entries fit exactly in the first half, z in the second
+        for name, off, shape in lay.entries:
+            n = int(np.prod(shape))
+            if name.startswith("s."):
+                assert off + n <= half
+            else:
+                assert off >= half
+        assert lay.size == 2 * half
+
+
+def test_model_fwd_shapes_and_causality():
+    params, fl = init_fp_params(P)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, P.vocab, (2, 16)).astype(np.int32))
+    logits = M.model_fwd_fp(params, x, P, fl)
+    assert logits.shape == (2, 16, P.vocab)
+    # causality: perturbing token t must not change logits at positions < t
+    x2 = x.at[:, 10].set((x[:, 10] + 1) % P.vocab)
+    logits2 = M.model_fwd_fp(params, x2, P, fl)
+    np.testing.assert_allclose(logits[:, :10], logits2[:, :10],
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(logits[:, 10:], logits2[:, 10:])
+
+
+def test_block_fake_quant_equals_dequant_after_quantize():
+    """block_fwd_fake_quant(W,s,z) == block_fwd_dequant(quantize(W,s,z),s,z):
+    the handoff invariant between Block-AP and E2E-QP."""
+    bl = M.block_layout(P)
+    g = 32
+    qbl = M.qp_block_layout(P, g)
+    wqbl = M.wq_block_layout(P)
+    rng = np.random.default_rng(3)
+
+    bp = np.zeros(bl.size, np.float32)
+    for name, off, shape in bl.entries:
+        n = int(np.prod(shape))
+        if name.endswith("norm"):
+            bp[off:off + n] = 1.0
+        else:
+            bp[off:off + n] = rng.normal(0, 0.1, n)
+    bp = jnp.asarray(bp)
+
+    qmax = 3.0  # 2-bit
+    # minmax init of qp from the weights
+    qp = np.zeros(qbl.size, np.float32)
+    for name, off, shape in qbl.entries:
+        which, lin = name.split(".", 1)
+        w = bl.slice(bp, lin)
+        s, z = ref.minmax_init_ref(w, g, qmax)
+        n = int(np.prod(shape))
+        qp[off:off + n] = np.asarray(s if which == "s" else z).ravel()
+    qp = jnp.asarray(qp)
+
+    h = jnp.asarray(rng.normal(0, 1, (2, 8, P.dim)).astype(np.float32))
+    qm = jnp.full((1, 1), qmax, jnp.float32)
+    out_fq = M.block_fwd_fake_quant(bp, qp, h, qm, P, bl, qbl)
+
+    # quantize weights -> wq flat
+    wq = np.zeros(wqbl.size, np.float32)
+    for name, off, shape in wqbl.entries:
+        w = bl.slice(bp, name)
+        s = qbl.slice(qp, f"s.{name}")
+        z = qbl.slice(qp, f"z.{name}")
+        wi = ref.quantize_ref(w, s, z, qmax)
+        n = int(np.prod(shape))
+        wq[off:off + n] = np.asarray(wi).ravel()
+    wq = jnp.asarray(wq)
+    norms = jnp.concatenate([bl.slice(bp, "attn_norm"),
+                             bl.slice(bp, "mlp_norm")])
+    out_dq = M.block_fwd_dequant(wq, qp, norms, h, P, wqbl, qbl)
+    np.testing.assert_allclose(out_fq, out_dq, rtol=2e-4, atol=2e-4)
+
+
+def test_adam_golden_vector():
+    """Golden values mirrored by rust/src/coordinator/opt.rs tests."""
+    p = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+    g = jnp.asarray([0.1, -0.2, 0.3], jnp.float32)
+    m = jnp.asarray([0.01, 0.0, -0.05], jnp.float32)
+    v = jnp.asarray([0.001, 0.0002, 0.0], jnp.float32)
+    p2, m2, v2 = M.adam_update(p, g, m, v, jnp.float32(3.0), jnp.float32(0.01))
+    # reference computed independently (numpy, float64 then cast)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m_ref = b1 * np.array([0.01, 0.0, -0.05]) + 0.1 * np.array([0.1, -0.2, 0.3])
+    v_ref = b2 * np.array([0.001, 0.0002, 0.0]) + 0.001 * np.array([0.1, -0.2, 0.3]) ** 2
+    mhat = m_ref / (1 - b1 ** 3)
+    vhat = v_ref / (1 - b2 ** 3)
+    p_ref = np.array([1.0, -2.0, 0.5]) - 0.01 * mhat / (np.sqrt(vhat) + eps)
+    np.testing.assert_allclose(p2, p_ref.astype(np.float32), rtol=1e-5)
+    np.testing.assert_allclose(m2, m_ref.astype(np.float32), rtol=1e-6)
+    np.testing.assert_allclose(v2, v_ref.astype(np.float32), rtol=1e-6)
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((2, 4, P.vocab))
+    y = jnp.zeros((2, 4), jnp.int32)
+    ce = M.cross_entropy(logits, y)
+    np.testing.assert_allclose(ce, np.log(P.vocab), rtol=1e-5)
+
+
+def test_masked_cross_entropy_ignores_masked_positions():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(0, 1, (1, 4, P.vocab)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, P.vocab, (1, 4)).astype(np.int32))
+    mask = jnp.asarray([[0.0, 1.0, 1.0, 0.0]])
+    full = M.masked_cross_entropy(logits, y, mask)
+    # manually over the two unmasked positions
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    per = logz - gold
+    np.testing.assert_allclose(full, (per[0, 1] + per[0, 2]) / 2, rtol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    cos, sin = M.rope_tables(P, 8)
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 8, P.head_dim)).astype(np.float32))
+    qr = M.apply_rope(q, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(qr, axis=-1), jnp.linalg.norm(q, axis=-1),
+        rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(qr[:, :, 0], q[:, :, 0], rtol=1e-6)

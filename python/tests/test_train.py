@@ -1,0 +1,242 @@
+"""Train-step graph semantics: losses decrease, masks freeze what they
+should, projections clamp, frozen buffers stay frozen. These run the SAME
+functions that aot.py lowers, so green here == green artifacts (modulo the
+HLO text round-trip, covered by rust integration tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile import train
+from compile.configs import PRESETS
+from compile.kernels import ref
+from tests.test_model import init_fp_params
+
+P = PRESETS["tiny"]
+G = 32
+QMAX2 = 3.0
+
+
+def _toy_batch(seed, bsz, t):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, P.vocab, (bsz, t)).astype(np.int32)
+    # learnable structure: y is a cyclic shift of x's token ids
+    y = (x + 1) % P.vocab
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _block_setup(seed=0):
+    bl = M.block_layout(P)
+    qbl = M.qp_block_layout(P, G)
+    rng = np.random.default_rng(seed)
+    bp = np.zeros(bl.size, np.float32)
+    for name, off, shape in bl.entries:
+        n = int(np.prod(shape))
+        bp[off:off + n] = 1.0 if name.endswith("norm") else \
+            rng.normal(0, 0.1, n)
+    bp = jnp.asarray(bp)
+    qp = np.zeros(qbl.size, np.float32)
+    for name, off, shape in qbl.entries:
+        which, lin = name.split(".", 1)
+        s, z = ref.minmax_init_ref(bl.slice(bp, lin), G, QMAX2)
+        n = int(np.prod(shape))
+        qp[off:off + n] = np.asarray(s if which == "s" else z).ravel()
+    return bp, jnp.asarray(qp), bl, qbl
+
+
+def test_pretrain_step_decreases_loss():
+    fn, args, outs = train.build_pretrain_step(P)
+    params, fl = init_fp_params(P)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    x, y = _toy_batch(0, P.e2e_batch, P.e2e_ctx)
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(8):
+        params, m, v, loss = jfn(params, m, v, x, y,
+                                 jnp.float32(i + 1), jnp.float32(1e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_block_ap_step_decreases_reconstruction_loss():
+    bp, qp, bl, qbl = _block_setup()
+    fn, args, outs = train.build_block_ap_step(P, G)
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(0, 1, (P.block_batch, P.block_ctx, P.dim))
+                    .astype(np.float32))
+    target = M.block_fwd_fp(bp, h, P, bl)  # fp teacher output
+    mw = jnp.zeros_like(bp)
+    vw = jnp.zeros_like(bp)
+    mq = jnp.zeros_like(qp)
+    vq = jnp.zeros_like(qp)
+    lo = jnp.full_like(bp, -1e30)
+    hi = jnp.full_like(bp, 1e30)
+    qm = jnp.full((1, 1), QMAX2, jnp.float32)
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(10):
+        bp, qp, mw, vw, mq, vq, loss = jfn(
+            bp, qp, mw, vw, mq, vq, lo, hi, h, target, qm,
+            jnp.float32(i + 1), jnp.float32(1e-3), jnp.float32(1e-3),
+            jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1.0),
+            jnp.float32(0.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_block_ap_masks_freeze_param_groups():
+    bp0, qp0, bl, qbl = _block_setup()
+    fn, *_ = train.build_block_ap_step(P, G)
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(0, 1, (P.block_batch, P.block_ctx, P.dim))
+                    .astype(np.float32))
+    target = M.block_fwd_fp(bp0, h, P, bl) + 0.1
+    z0 = jnp.zeros_like
+    qm = jnp.full((1, 1), QMAX2, jnp.float32)
+    half = qp0.shape[0] // 2
+
+    # m_w = 0: weights frozen, qp moves
+    bp, qp, *_ = jax.jit(fn)(
+        bp0, qp0, z0(bp0), z0(bp0), z0(qp0), z0(qp0),
+        jnp.full_like(bp0, -1e30), jnp.full_like(bp0, 1e30), h, target, qm,
+        jnp.float32(1), jnp.float32(1e-3), jnp.float32(1e-3),
+        jnp.float32(0.0), jnp.float32(1.0), jnp.float32(1.0), jnp.float32(0.0))
+    assert np.allclose(bp, bp0)
+    assert not np.allclose(qp, qp0)
+
+    # m_s = 0, m_z = 1: s half frozen, z half moves.
+    # At exact minmax init no element saturates, so the z-gradient (paper
+    # Eq. 4) is identically zero - shrink s by 2x to activate clamping.
+    qp0 = qp0.at[:half].multiply(0.5)
+    bp, qp, *_ = jax.jit(fn)(
+        bp0, qp0, z0(bp0), z0(bp0), z0(qp0), z0(qp0),
+        jnp.full_like(bp0, -1e30), jnp.full_like(bp0, 1e30), h, target, qm,
+        jnp.float32(1), jnp.float32(1e-3), jnp.float32(1e-3),
+        jnp.float32(1.0), jnp.float32(0.0), jnp.float32(1.0), jnp.float32(0.0))
+    assert np.allclose(qp[:half], qp0[:half])
+    assert not np.allclose(qp[half:], qp0[half:])
+
+
+def test_block_ap_round_projection_clamps_weights():
+    bp0, qp0, bl, qbl = _block_setup()
+    fn, *_ = train.build_block_ap_step(P, G)
+    rng = np.random.default_rng(4)
+    h = jnp.asarray(rng.normal(0, 1, (P.block_batch, P.block_ctx, P.dim))
+                    .astype(np.float32))
+    target = M.block_fwd_fp(bp0, h, P, bl) + 0.5
+    z0 = jnp.zeros_like
+    qm = jnp.full((1, 1), QMAX2, jnp.float32)
+    eps = 1e-6
+    lo = bp0 - eps
+    hi = bp0 + eps
+    bp, *_ = jax.jit(fn)(
+        bp0, qp0, z0(bp0), z0(bp0), z0(qp0), z0(qp0), lo, hi, h, target, qm,
+        jnp.float32(1), jnp.float32(1e-2), jnp.float32(0.0),
+        jnp.float32(1.0), jnp.float32(0.0), jnp.float32(0.0), jnp.float32(1.0))
+    assert np.all(np.asarray(bp) <= np.asarray(hi) + 1e-7)
+    assert np.all(np.asarray(bp) >= np.asarray(lo) - 1e-7)
+
+
+def _quantized_model_setup(seed=0):
+    params, fl = init_fp_params(P, seed)
+    wql = M.wq_layout(P)
+    qpl = M.qp_layout(P, G)
+    fprl = M.fpr_layout(P)
+    wq = np.zeros(wql.size, np.float32)
+    qp = np.zeros(qpl.size, np.float32)
+    fpr = np.zeros(fprl.size, np.float32)
+    for name, off, shape in fprl.entries:
+        src = fl.slice(params, name)
+        n = int(np.prod(shape))
+        fpr[off:off + n] = np.asarray(src).ravel()
+    for name, off, shape in wql.entries:
+        w = fl.slice(params, name)
+        s, z = ref.minmax_init_ref(w, G, QMAX2)
+        wi = ref.quantize_ref(w, s, z, QMAX2)
+        n = int(np.prod(shape))
+        wq[off:off + n] = np.asarray(wi).ravel()
+        so, ss = qpl.by_name[f"s.{name}"]
+        zo, zs = qpl.by_name[f"z.{name}"]
+        qp[so:so + s.size] = np.asarray(s).ravel()
+        qp[zo:zo + z.size] = np.asarray(z).ravel()
+    return (jnp.asarray(wq), jnp.asarray(qp), jnp.asarray(fpr),
+            wql, qpl, fprl)
+
+
+def test_e2e_qp_step_trains_only_qp_and_decreases_loss():
+    wq, qp, fpr, *_ = _quantized_model_setup()
+    fn, *_ = train.build_e2e_qp_step(P, G)
+    x, y = _toy_batch(1, P.e2e_batch, P.e2e_ctx)
+    mask = jnp.ones(x.shape, jnp.float32)
+    mq = jnp.zeros_like(qp)
+    vq = jnp.zeros_like(qp)
+    jfn = jax.jit(fn)
+    losses = []
+    qp0 = qp
+    for i in range(8):
+        qp, mq, vq, loss = jfn(wq, qp, fpr, mq, vq, x, y, mask,
+                               jnp.float32(i + 1), jnp.float32(5e-3),
+                               jnp.float32(1.0), jnp.float32(0.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    half = qp.shape[0] // 2
+    # z half stayed frozen (m_zf = 0)
+    assert np.allclose(qp[half:], qp0[half:])
+    assert not np.allclose(qp[:half], qp0[:half])
+
+
+def test_e2e_full_step_runs_and_decreases_loss():
+    params, fl = init_fp_params(P)
+    fn, *_ = train.build_e2e_full_step(P, G)
+    x, y = _toy_batch(2, P.e2e_batch, P.e2e_ctx)
+    m = jnp.zeros_like(params)
+    v = jnp.zeros_like(params)
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(6):
+        params, m, v, loss = jfn(params, m, v, x, y,
+                                 jnp.float32(i + 1), jnp.float32(1e-3),
+                                 jnp.float32(QMAX2))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_e2e_lora_step_trains_lora_only():
+    wq, qp, fpr, *_ = _quantized_model_setup()
+    ll = M.lora_layout(P)
+    rng = np.random.default_rng(9)
+    # A ~ N(0, 0.02), B = 0 (standard LoRA init: delta starts at zero)
+    lora = np.zeros(ll.size, np.float32)
+    for name, off, shape in ll.entries:
+        if name.endswith(".A"):
+            n = int(np.prod(shape))
+            lora[off:off + n] = rng.normal(0, 0.02, n)
+    lora = jnp.asarray(lora)
+    fn, *_ = train.build_e2e_lora_step(P, G)
+    x, y = _toy_batch(3, P.e2e_batch, P.e2e_ctx)
+    mask = jnp.ones(x.shape, jnp.float32)
+    m = jnp.zeros_like(lora)
+    v = jnp.zeros_like(lora)
+    jfn = jax.jit(fn)
+    losses = []
+    for i in range(6):
+        lora, m, v, loss = jfn(wq, qp, fpr, lora, m, v, x, y, mask,
+                               jnp.float32(i + 1), jnp.float32(5e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_model_fwd_q_matches_fwd_lora_with_zero_lora():
+    wq, qp, fpr, *_ = _quantized_model_setup()
+    ll = M.lora_layout(P)
+    lora = jnp.zeros((ll.size,), jnp.float32)
+    fnq, *_ = train.build_model_fwd_q(P, G)
+    fnl, *_ = train.build_model_fwd_lora(P, G)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.integers(0, P.vocab, (P.eval_batch, P.eval_ctx))
+                    .astype(np.int32))
+    (lq,) = jax.jit(fnq)(wq, qp, fpr, x)
+    (ll_,) = jax.jit(fnl)(wq, qp, fpr, lora, x)
+    np.testing.assert_allclose(lq, ll_, rtol=1e-5, atol=1e-5)

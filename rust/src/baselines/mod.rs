@@ -1,0 +1,5 @@
+//! Comparison methods reimplemented from scratch: PTQ (GPTQ/AWQ), naive
+//! end-to-end QAT, and the Q-PEFT family (PEQA, QLoRA).
+pub mod naive_qat;
+pub mod ptq;
+pub mod qlora;

@@ -1,0 +1,71 @@
+//! Naive end-to-end QAT baseline (LLM-QAT style, Table 2/9 comparator):
+//! trains ALL parameters with dynamically re-quantized weights, end to end.
+//! Memory = full params + full Adam state; time per step >> Block-AP.
+
+use anyhow::Result;
+
+use crate::config::QuantScheme;
+use crate::coordinator::block_ap::rtn_quantize_model;
+use crate::coordinator::opt::{AdamState, LrSchedule};
+use crate::data::loader::LmBatch;
+use crate::model::quantized::QuantizedModel;
+use crate::runtime::{Arg, Runtime};
+
+pub struct NaiveQatReport {
+    pub losses: Vec<f32>,
+    pub seconds: f64,
+    /// full params + 2x Adam moments (the memory cost Block-AP avoids)
+    pub mem_bytes: usize,
+}
+
+/// Train from the pretrained fp params; returns the final RTN-quantized
+/// model (dynamic scales frozen into the standard format at the end).
+pub fn run_naive_qat(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    pool: &[LmBatch],
+    epochs: usize,
+    lr: f64,
+) -> Result<(QuantizedModel, NaiveQatReport)> {
+    let t0 = std::time::Instant::now();
+    let exec = rt.exec_g(preset, "e2e_full_step", sch.group)?;
+    let mut p = params.to_vec();
+    let mut adam = AdamState::new(p.len());
+    let total = pool.len() * epochs;
+    let sched = LrSchedule::cosine(lr, total / 20 + 1, total);
+    let mut losses = Vec::with_capacity(total);
+    let mut it = 0usize;
+    for _ in 0..epochs {
+        for b in pool {
+            let step = adam.next_step();
+            let outs = exec.run(&[
+                Arg::F32(&p),
+                Arg::F32(&adam.m),
+                Arg::F32(&adam.v),
+                Arg::I32(&b.x),
+                Arg::I32(&b.y),
+                Arg::Scalar(step),
+                Arg::Scalar(sched.at(it)),
+                Arg::Scalar(sch.qmax()),
+            ])?;
+            let mut o = outs.into_iter();
+            p = o.next().unwrap().data;
+            adam.m = o.next().unwrap().data;
+            adam.v = o.next().unwrap().data;
+            losses.push(o.next().unwrap().data[0]);
+            it += 1;
+        }
+    }
+    let mem = p.len() * 4 * 3;
+    let qm = rtn_quantize_model(rt, preset, &p, sch)?;
+    Ok((
+        qm,
+        NaiveQatReport {
+            losses,
+            seconds: t0.elapsed().as_secs_f64(),
+            mem_bytes: mem,
+        },
+    ))
+}

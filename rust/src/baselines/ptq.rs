@@ -1,0 +1,184 @@
+//! Model-level PTQ baselines: GPTQ and AWQ applied block-by-block with
+//! calibration activations captured by the `block_capture_fp` executable.
+//!
+//! Convention (matches the reference GPTQ pipeline): block inputs come from
+//! the quantized-propagated stream; intra-block activations are computed
+//! with the block's original weights; after quantization the stream is
+//! propagated through the quantized block.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::QuantScheme;
+use crate::coordinator::block_ap::extract_block;
+use crate::data::loader::LmBatch;
+use crate::model::quantized::QuantizedModel;
+use crate::quant::awq::{awq_quantize, x2_mean};
+use crate::quant::gptq::gptq_quantize;
+use crate::quant::rtn::GroupParams;
+use crate::runtime::{Arg, Runtime};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PtqMethod {
+    Gptq,
+    Awq,
+}
+
+/// Which capture output feeds each linear.
+/// capture outputs: [h_out, x_attn, attn_ctx, x_mlp, mlp_mid]
+const LIN_SRC: [(&str, usize); 7] = [
+    ("attn.q", 1),
+    ("attn.k", 1),
+    ("attn.v", 1),
+    ("attn.o", 2),
+    ("mlp.gate", 3),
+    ("mlp.up", 3),
+    ("mlp.down", 4),
+];
+
+/// Quantize a pretrained fp model with GPTQ or AWQ.
+pub fn ptq_quantize_model(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    pool: &[LmBatch],
+    method: PtqMethod,
+    max_rows: usize,
+) -> Result<QuantizedModel> {
+    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let g = sch.group;
+    let fpl = rt.manifest.layout(preset, "fp")?.clone();
+    let bl = rt.manifest.layout(preset, "block")?.clone();
+    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest.layout(preset, "wq")?.clone();
+    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+
+    let embed = rt.exec(preset, "embed_fwd")?;
+    let capture = rt.exec(preset, "block_capture_fp")?;
+    let block_q = rt.exec_g(preset, "block_fwd_q", g)?;
+
+    let mut h: Vec<Vec<f32>> = Vec::with_capacity(pool.len());
+    for b in pool {
+        h.push(embed.run1(&[Arg::F32(params), Arg::I32(&b.x)])?);
+    }
+
+    let mut wq_full = vec![0f32; wql.size];
+    let mut qp_full = vec![0f32; qpl.size];
+    let mut fpr = vec![0f32; fprl.size];
+    let tokens_per_batch = cfg.block_batch * cfg.block_ctx;
+
+    for b in 0..cfg.n_layers {
+        let bp = extract_block(params, &fpl, &bl, b)?;
+        // capture intra-block activations over the pool
+        // acts[src] has rows of width depending on src (d or inter)
+        let mut acts: Vec<Vec<f32>> = vec![Vec::new(); 5];
+        for hb in &h {
+            let outs = capture.run(&[Arg::F32(&bp), Arg::F32(hb)])?;
+            for (si, o) in outs.iter().enumerate() {
+                if si == 0 {
+                    continue; // h_out not needed here
+                }
+                acts[si].extend_from_slice(&o.data);
+            }
+        }
+        // subsample rows deterministically (stride) to bound Hessian cost
+        let total_rows = pool.len() * tokens_per_batch;
+        let stride = (total_rows + max_rows - 1) / max_rows.max(1);
+        let sub = |src: usize, width: usize| -> Vec<f32> {
+            let a = &acts[src];
+            let mut out = Vec::new();
+            let mut r = 0;
+            while r < total_rows {
+                out.extend_from_slice(&a[r * width..(r + 1) * width]);
+                r += stride.max(1);
+            }
+            out
+        };
+
+        // quantize each linear
+        let mut qp_b = vec![0f32; qbl.size];
+        let mut wq_b: Vec<(String, Vec<f32>)> = Vec::new();
+        for (lin, src) in LIN_SRC {
+            let we = bl.entry(lin)?;
+            let (out_d, in_d) = (we.shape[0], we.shape[1]);
+            let w = bl.slice(&bp, lin)?;
+            let x = sub(src, in_d);
+            let (w_int, gp): (Vec<f32>, GroupParams) = match method {
+                PtqMethod::Gptq => {
+                    let r = gptq_quantize(w, out_d, in_d, &x, sch)?;
+                    (r.w_int, r.gp)
+                }
+                PtqMethod::Awq => {
+                    let m = x2_mean(&x, in_d);
+                    let r = awq_quantize(w, out_d, in_d, &m, sch);
+                    (r.w_int, r.gp)
+                }
+            };
+            let se = qbl.entry(&format!("s.{lin}"))?;
+            let ze = qbl.entry(&format!("z.{lin}"))?;
+            qp_b[se.offset..se.offset + se.numel()].copy_from_slice(&gp.s);
+            qp_b[ze.offset..ze.offset + ze.numel()].copy_from_slice(&gp.z);
+            wq_b.push((lin.to_string(), w_int));
+        }
+
+        // assemble into full buffers
+        let mut wq_block_flat =
+            vec![
+                0f32;
+                bl.entries
+                    .iter()
+                    .filter(|e| !e.name.ends_with("norm"))
+                    .map(|e| e.numel())
+                    .sum()
+            ];
+        let mut woff = 0usize;
+        for e in bl.entries.iter().filter(|e| !e.name.ends_with("norm")) {
+            let w_int = &wq_b
+                .iter()
+                .find(|(n, _)| n == &e.name)
+                .ok_or_else(|| anyhow!("missing {}", e.name))?
+                .1;
+            wql.slice_mut(&mut wq_full, &format!("blocks.{b}.{}", e.name))?
+                .copy_from_slice(w_int);
+            wq_block_flat[woff..woff + e.numel()].copy_from_slice(w_int);
+            woff += e.numel();
+        }
+        for e in &qbl.entries {
+            let (which, lin) = e.name.split_once('.').unwrap();
+            qpl.slice_mut(&mut qp_full,
+                          &format!("{which}.blocks.{b}.{lin}"))?
+                .copy_from_slice(&qp_b[e.offset..e.offset + e.numel()]);
+        }
+        let mut norms = vec![0f32; 2 * cfg.dim];
+        norms[..cfg.dim].copy_from_slice(bl.slice(&bp, "attn_norm")?);
+        norms[cfg.dim..].copy_from_slice(bl.slice(&bp, "mlp_norm")?);
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.attn_norm"))?
+            .copy_from_slice(&norms[..cfg.dim]);
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.mlp_norm"))?
+            .copy_from_slice(&norms[cfg.dim..]);
+
+        // propagate through the quantized block
+        for hb in h.iter_mut() {
+            *hb = block_q.run1(&[
+                Arg::F32(&wq_block_flat),
+                Arg::F32(&qp_b),
+                Arg::F32(&norms),
+                Arg::F32(hb),
+            ])?;
+        }
+        crate::info!("ptq[{method:?} {preset} {}] block {b} done",
+                     sch.tag());
+    }
+    for name in ["embed", "final_norm", "head"] {
+        fprl.slice_mut(&mut fpr, name)?
+            .copy_from_slice(fpl.slice(params, name)?);
+    }
+    Ok(QuantizedModel {
+        preset: preset.to_string(),
+        scheme: sch,
+        wq: wq_full,
+        qp: qp_full,
+        fpr,
+    })
+}

@@ -1,0 +1,145 @@
+//! Q-PEFT baselines (Table 4):
+//!  * PEQA  = RTN init + E2E-QP on step sizes only (the paper notes PEQA is
+//!    the closest prior method; it differs from EfficientQAT exactly by the
+//!    missing Block-AP phase).
+//!  * QLoRA = frozen quantized base + trainable LoRA (bits "4+16"); the
+//!    "QLoRA w/ GPTQ" row merges LoRA into fp weights and re-quantizes.
+
+use anyhow::Result;
+
+use crate::config::{QuantScheme, TrainHp};
+use crate::coordinator::block_ap::rtn_quantize_model;
+use crate::coordinator::e2e_qp::{run_e2e_qp, E2eBatch, E2eReport};
+use crate::coordinator::opt::{AdamState, LrSchedule};
+use crate::model::quantized::QuantizedModel;
+use crate::runtime::{Arg, Runtime};
+use crate::util::rng::Rng;
+
+/// PEQA: RTN quantization + s-only end-to-end tuning.
+pub fn run_peqa(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    batches: &[E2eBatch],
+    hp: &TrainHp,
+) -> Result<(QuantizedModel, E2eReport)> {
+    let mut qm = rtn_quantize_model(rt, preset, params, sch)?;
+    let mut hp = hp.clone();
+    hp.train_z_e2e = false;
+    let report = run_e2e_qp(rt, &mut qm, batches, &hp)?;
+    Ok((qm, report))
+}
+
+pub struct QloraReport {
+    pub losses: Vec<f32>,
+    pub seconds: f64,
+}
+
+/// LoRA init matching the convention: A ~ N(0, 0.02), B = 0.
+pub fn init_lora(rt: &Runtime, preset: &str, seed: u64) -> Result<Vec<f32>> {
+    let ll = rt.manifest.layout(preset, "lora")?;
+    let mut lora = vec![0f32; ll.size];
+    let mut rng = Rng::new(seed).fork("lora");
+    for e in &ll.entries {
+        if e.name.ends_with(".A") {
+            rng.fill_normal(&mut lora[e.offset..e.offset + e.numel()],
+                            0.0, 0.02);
+        }
+    }
+    Ok(lora)
+}
+
+/// QLoRA: train LoRA over a frozen quantized base.
+pub fn run_qlora(
+    rt: &Runtime,
+    qm: &QuantizedModel,
+    batches: &[E2eBatch],
+    epochs: usize,
+    lr: f64,
+    seed: u64,
+) -> Result<(Vec<f32>, QloraReport)> {
+    let t0 = std::time::Instant::now();
+    let preset = qm.preset.clone();
+    let exec = rt.exec_g(&preset, "e2e_lora_step", qm.scheme.group)?;
+    let mut lora = init_lora(rt, &preset, seed)?;
+    let mut adam = AdamState::new(lora.len());
+    let total = batches.len() * epochs;
+    let sched = LrSchedule::cosine(lr, total / 20 + 1, total);
+    let mut losses = Vec::with_capacity(total);
+    let mut it = 0usize;
+    for _ in 0..epochs {
+        for b in batches {
+            let step = adam.next_step();
+            let outs = exec.run(&[
+                Arg::F32(&qm.wq),
+                Arg::F32(&qm.qp),
+                Arg::F32(&qm.fpr),
+                Arg::F32(&lora),
+                Arg::F32(&adam.m),
+                Arg::F32(&adam.v),
+                Arg::I32(&b.x),
+                Arg::I32(&b.y),
+                Arg::F32(&b.mask),
+                Arg::Scalar(step),
+                Arg::Scalar(sched.at(it)),
+            ])?;
+            let mut o = outs.into_iter();
+            lora = o.next().unwrap().data;
+            adam.m = o.next().unwrap().data;
+            adam.v = o.next().unwrap().data;
+            losses.push(o.next().unwrap().data[0]);
+            it += 1;
+        }
+    }
+    Ok((
+        lora,
+        QloraReport { losses, seconds: t0.elapsed().as_secs_f64() },
+    ))
+}
+
+/// Merge LoRA into the dequantized base -> full-precision flat params
+/// (the step that reverts QLoRA models to FP16, paper §2).
+pub fn merge_lora(
+    rt: &Runtime,
+    qm: &QuantizedModel,
+    lora: &[f32],
+) -> Result<Vec<f32>> {
+    let preset = &qm.preset;
+    let g = qm.scheme.group;
+    let fpl = rt.manifest.layout(preset, "fp")?;
+    let wql = rt.manifest.layout(preset, "wq")?;
+    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?;
+    let fprl = rt.manifest.layout(preset, "fpr")?;
+    let ll = rt.manifest.layout(preset, "lora")?;
+
+    let mut fp = vec![0f32; fpl.size];
+    // fp remainder
+    for e in fprl.entries.iter() {
+        fpl.slice_mut(&mut fp, &e.name)?
+            .copy_from_slice(fprl.slice(&qm.fpr, &e.name)?);
+    }
+    // linears: dequant + B @ A
+    for e in wql.entries.iter() {
+        let (out_d, in_d) = (e.shape[0], e.shape[1]);
+        let gpr = in_d / g;
+        let w_int = wql.slice(&qm.wq, &e.name)?;
+        let s = qpl.slice(&qm.qp, &format!("s.{}", e.name))?;
+        let z = qpl.slice(&qm.qp, &format!("z.{}", e.name))?;
+        let a = ll.slice(lora, &format!("{}.A", e.name))?;
+        let b = ll.slice(lora, &format!("{}.B", e.name))?;
+        let r = ll.entry(&format!("{}.A", e.name))?.shape[0];
+        let dst = fpl.slice_mut(&mut fp, &e.name)?;
+        for o in 0..out_d {
+            for k in 0..in_d {
+                let gi = o * gpr + k / g;
+                let mut v = (w_int[o * in_d + k] - z[gi]) * s[gi];
+                for rr in 0..r {
+                    v += b[o * r + rr] * a[rr * in_d + k];
+                }
+                dst[o * in_d + k] = v;
+            }
+        }
+    }
+    Ok(fp)
+}

@@ -1,0 +1,136 @@
+//! Hand-rolled CLI (clap is unavailable offline): subcommands + --key value
+//! flags. `eqat help` prints usage.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug)]
+pub struct Cli {
+    pub cmd: String,
+    pub pos: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const USAGE: &str = "\
+eqat - EfficientQAT reproduction (Rust + JAX/Pallas AOT via PJRT)
+
+USAGE: eqat <command> [args] [--flag value]...
+
+COMMANDS
+  pretrain              train the fp model  [--preset P --steps N --lr X
+                        --out runs/P-fp.eqt]
+  quantize              EfficientQAT pipeline -> packed model
+                        [--preset P --bits N --group G --out FILE
+                         --no-block-ap --no-e2e --trainable SET]
+  eval                  evaluate a model [--model FILE | --preset P (fp)]
+                        (ppl wiki/c4 + 5 zero-shot suites)
+  generate              pure-Rust generation from a packed model
+                        [--model FILE --tokens N --temp T]
+  size                  Table-11 size arithmetic [--model llama2-7b ...]
+  exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
+                        fig1, fig3, fig4  [--preset P]
+  bench <which>         qlinear (Table 10) | train-time (Tables 8/9)
+                        [--fast]
+  help                  this text
+
+FLAG DEFAULTS: --preset tiny --bits 2 --group <preset default>
+  --artifacts artifacts --runs runs
+";
+
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!("no command; try `eqat help`");
+    }
+    let cmd = args[0].clone();
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // boolean flags have no value or next token is another flag
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    Ok(Cli { cmd, pos, flags })
+}
+
+impl Cli {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} wants an integer, got {v}")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} wants a number, got {v}")),
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_positional_and_flags() {
+        let c = parse(&s(&["exp", "t5", "--preset", "tiny", "--fast"]))
+            .unwrap();
+        assert_eq!(c.cmd, "exp");
+        assert_eq!(c.pos, vec!["t5"]);
+        assert_eq!(c.flag("preset"), Some("tiny"));
+        assert!(c.flag_bool("fast"));
+        assert!(!c.flag_bool("slow"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let c = parse(&s(&["pretrain", "--steps", "100", "--lr", "3e-3"]))
+            .unwrap();
+        assert_eq!(c.flag_usize("steps", 1).unwrap(), 100);
+        assert_eq!(c.flag_f64("lr", 0.0).unwrap(), 3e-3);
+        assert_eq!(c.flag_usize("missing", 7).unwrap(), 7);
+        assert!(parse(&s(&["x", "--steps", "abc"]))
+            .unwrap()
+            .flag_usize("steps", 1)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse(&[]).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Configuration: run-time knobs for the coordinator plus exact shape
+//! definitions of the real Llama-2/3 models (used by the Table 10 qlinear
+//! speed bench and the Table 11 size calculator - arithmetic only, no
+//! weights are needed for those reproductions).
+
+use anyhow::{bail, Result};
+
+/// Which parameters Block-AP trains (paper Table 6 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainableSet {
+    /// step sizes only (~ OmniQuant's learned clipping)
+    Clipping,
+    /// step sizes + zero points
+    SZ,
+    /// weights restricted to the +-s/2 rounding window (~ AutoRound/BRECQ)
+    Round,
+    /// s, z, and rounding-window-restricted weights (~ CBQ-like)
+    SZRound,
+    /// full Block-AP: s, z, W unrestricted (the paper's contribution)
+    SZW,
+}
+
+impl TrainableSet {
+    /// (m_w, m_s, m_z, proj) scalar mask values fed to block_ap_step.
+    pub fn masks(self) -> (f32, f32, f32, f32) {
+        match self {
+            TrainableSet::Clipping => (0.0, 1.0, 0.0, 0.0),
+            TrainableSet::SZ => (0.0, 1.0, 1.0, 0.0),
+            TrainableSet::Round => (1.0, 0.0, 0.0, 1.0),
+            TrainableSet::SZRound => (1.0, 1.0, 1.0, 1.0),
+            TrainableSet::SZW => (1.0, 1.0, 1.0, 0.0),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TrainableSet::Clipping => "clipping",
+            TrainableSet::SZ => "s,z",
+            TrainableSet::Round => "round",
+            TrainableSet::SZRound => "s,z,round",
+            TrainableSet::SZW => "s,z,W",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "clipping" => TrainableSet::Clipping,
+            "sz" | "s,z" => TrainableSet::SZ,
+            "round" => TrainableSet::Round,
+            "szround" | "s,z,round" => TrainableSet::SZRound,
+            "szw" | "s,z,W" | "s,z,w" => TrainableSet::SZW,
+            _ => bail!("unknown trainable set '{s}'"),
+        })
+    }
+}
+
+/// Quantization scheme: bit-width + group size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantScheme {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl QuantScheme {
+    pub fn new(bits: u32, group: usize) -> QuantScheme {
+        QuantScheme { bits, group }
+    }
+
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Average bits/param including group metadata: N + (N+16)/g
+    /// (paper Appendix E; f16 scale + N-bit zero point per group).
+    pub fn avg_bits(&self) -> f64 {
+        self.bits as f64 + (self.bits as f64 + 16.0) / self.group as f64
+    }
+
+    pub fn tag(&self) -> String {
+        format!("w{}g{}", self.bits, self.group)
+    }
+}
+
+/// How finished blocks feed inputs to the next block during Block-AP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Propagation {
+    /// through the quantized block (default, matches OmniQuant/EfficientQAT)
+    Quant,
+    /// through the original fp block (BRECQ-style ablation)
+    Fp,
+}
+
+/// Hyper-parameters of the two training phases (paper §4.1 defaults,
+/// re-scaled for the synthetic testbed).
+#[derive(Clone, Debug)]
+pub struct TrainHp {
+    pub block_samples: usize,
+    pub block_epochs: usize,
+    pub block_lr_w: f64,
+    pub block_lr_q: f64,
+    pub e2e_samples: usize,
+    pub e2e_epochs: usize,
+    pub e2e_lr: f64,
+    pub seed: u64,
+    pub propagation: Propagation,
+    pub trainable: TrainableSet,
+    pub train_s_e2e: bool,
+    pub train_z_e2e: bool,
+}
+
+impl Default for TrainHp {
+    fn default() -> Self {
+        TrainHp {
+            block_samples: 128,
+            block_epochs: 2,
+            // paper: lr 1e-4 (qp) / 2e-5 (w) at 2-bit; our models are tiny
+            // and synthetic, trained for few steps -> proportionally larger
+            block_lr_w: 1e-3,
+            block_lr_q: 1e-3,
+            e2e_samples: 128,
+            e2e_epochs: 1,
+            e2e_lr: 1e-3,
+            seed: 0xEFC1,
+            propagation: Propagation::Quant,
+            trainable: TrainableSet::SZW,
+            train_s_e2e: true,
+            train_z_e2e: false,
+        }
+    }
+}
+
+/// Exact shape definition of a real Llama-family model (GQA-aware).
+#[derive(Clone, Debug)]
+pub struct LlamaShape {
+    pub name: &'static str,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub inter: usize,
+    pub vocab: usize,
+    /// k/v projection output dim (= dim unless grouped-query attention)
+    pub kv_dim: usize,
+}
+
+impl LlamaShape {
+    /// The quantized linears of one block: (name, out, in).
+    pub fn linears(&self) -> Vec<(&'static str, usize, usize)> {
+        vec![
+            ("attn.q", self.dim, self.dim),
+            ("attn.k", self.kv_dim, self.dim),
+            ("attn.v", self.kv_dim, self.dim),
+            ("attn.o", self.dim, self.dim),
+            ("mlp.gate", self.inter, self.dim),
+            ("mlp.up", self.inter, self.dim),
+            ("mlp.down", self.dim, self.inter),
+        ]
+    }
+
+    /// Parameters in quantized (linear) layers.
+    pub fn linear_params(&self) -> u64 {
+        let per_block: u64 = self
+            .linears()
+            .iter()
+            .map(|&(_, o, i)| (o * i) as u64)
+            .sum();
+        per_block * self.n_layers as u64
+    }
+
+    /// Parameters kept in fp16: embeddings, head, norms.
+    pub fn fp_params(&self) -> u64 {
+        let embed = (self.vocab * self.dim) as u64 * 2; // embed + untied head
+        let norms = (self.n_layers * 2 * self.dim + self.dim) as u64;
+        embed + norms
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.linear_params() + self.fp_params()
+    }
+}
+
+pub fn llama2_7b() -> LlamaShape {
+    LlamaShape { name: "LLaMA-2-7B", dim: 4096, n_layers: 32, inter: 11008,
+                 vocab: 32000, kv_dim: 4096 }
+}
+
+pub fn llama2_13b() -> LlamaShape {
+    LlamaShape { name: "LLaMA-2-13B", dim: 5120, n_layers: 40, inter: 13824,
+                 vocab: 32000, kv_dim: 5120 }
+}
+
+pub fn llama2_70b() -> LlamaShape {
+    LlamaShape { name: "LLaMA-2-70B", dim: 8192, n_layers: 80, inter: 28672,
+                 vocab: 32000, kv_dim: 1024 } // GQA: 8 kv heads x 128
+}
+
+pub fn llama3_8b() -> LlamaShape {
+    LlamaShape { name: "LLaMA-3-8B", dim: 4096, n_layers: 32, inter: 14336,
+                 vocab: 128256, kv_dim: 1024 }
+}
+
+pub fn llama3_70b() -> LlamaShape {
+    LlamaShape { name: "LLaMA-3-70B", dim: 8192, n_layers: 80, inter: 28672,
+                 vocab: 128256, kv_dim: 1024 }
+}
+
+pub fn llama_by_name(name: &str) -> Result<LlamaShape> {
+    Ok(match name {
+        "llama2-7b" | "2-7" => llama2_7b(),
+        "llama2-13b" | "2-13" => llama2_13b(),
+        "llama2-70b" | "2-70" => llama2_70b(),
+        "llama3-8b" | "3-8" => llama3_8b(),
+        "llama3-70b" | "3-70" => llama3_70b(),
+        _ => bail!("unknown llama shape '{name}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_param_counts_match_published() {
+        // Known totals (within 1%): 6.74B, 13.0B, 69.0B, 8.0B, 70.6B
+        let checks = [
+            (llama2_7b(), 6.74e9),
+            (llama2_13b(), 13.0e9),
+            (llama2_70b(), 69.0e9),
+            (llama3_8b(), 8.03e9),
+            (llama3_70b(), 70.6e9),
+        ];
+        for (shape, want) in checks {
+            let got = shape.total_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.01, "{}: got {got:.3e} want {want:.3e}",
+                    shape.name);
+        }
+    }
+
+    #[test]
+    fn block_param_count_matches_paper_table6() {
+        // Table 6: trainable "# Param." for one Llama-2-7B block = 202.4M
+        let s = llama2_7b();
+        let per_block = s.linear_params() / s.n_layers as u64;
+        assert!((per_block as f64 - 202.4e6).abs() / 202.4e6 < 0.01,
+                "per_block={per_block}");
+    }
+
+    #[test]
+    fn avg_bits_formula() {
+        // paper Appendix E: N + (N+16)/g
+        assert!((QuantScheme::new(2, 64).avg_bits() - 2.28).abs() < 0.005);
+        assert!((QuantScheme::new(2, 128).avg_bits() - 2.14).abs() < 0.005);
+        assert!((QuantScheme::new(4, 32).avg_bits() - 4.63).abs() < 0.005);
+        assert!((QuantScheme::new(3, 64).avg_bits() - 3.30).abs() < 0.005);
+    }
+
+    #[test]
+    fn qmax_by_bits() {
+        assert_eq!(QuantScheme::new(2, 64).qmax(), 3.0);
+        assert_eq!(QuantScheme::new(3, 64).qmax(), 7.0);
+        assert_eq!(QuantScheme::new(4, 64).qmax(), 15.0);
+    }
+
+    #[test]
+    fn trainable_set_masks() {
+        assert_eq!(TrainableSet::SZW.masks(), (1.0, 1.0, 1.0, 0.0));
+        assert_eq!(TrainableSet::Clipping.masks(), (0.0, 1.0, 0.0, 0.0));
+        assert_eq!(TrainableSet::Round.masks(), (1.0, 0.0, 0.0, 1.0));
+        assert_eq!(TrainableSet::parse("s,z,W").unwrap(), TrainableSet::SZW);
+        assert!(TrainableSet::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,488 @@
+//! Block-AP scheduler - the paper's phase 1 (§3.2) and the heart of the L3
+//! coordinator.
+//!
+//! Memory-efficiency mechanism (why a 70B fits on one GPU): only ONE
+//! transformer block's weights + optimizer state is live at a time; the
+//! rest of the model exists as cached activations. The coordinator:
+//!
+//!   1. runs `embed_fwd` once over the calibration pool -> activation cache
+//!      (two copies: fp-propagated teacher inputs, quantized-propagated
+//!      student inputs - `Propagation::Quant`, OmniQuant convention);
+//!   2. per block: captures teacher targets with the ORIGINAL block weights,
+//!      initializes (s, z) by min/max RTN, then trains (W, s, z) with the
+//!      masked `block_ap_step` executable (Table 6 ablations = masks, the
+//!      AutoRound-style rounding window = host-computed [w_lo, w_hi]);
+//!   3. quantizes the trained block onto the integer grid (z rounded to
+//!      N-bit storage) and propagates both caches through it;
+//!   4. assembles the full quantized model (wq, qp, fpr flat buffers).
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{Propagation, QuantScheme, TrainHp};
+use crate::data::loader::LmBatch;
+use crate::io::manifest::Layout;
+use crate::model::quantized::QuantizedModel;
+use crate::quant::rtn;
+use crate::runtime::{Arg, Runtime};
+use crate::util::rng::Rng;
+
+pub struct BlockApReport {
+    /// per block: training loss at each step
+    pub loss_curves: Vec<Vec<f32>>,
+    /// per block: mean validation reconstruction loss after training
+    pub val_losses: Vec<f32>,
+    /// per block: mean train reconstruction loss after training
+    pub train_losses: Vec<f32>,
+    pub seconds: f64,
+    /// analytic training-memory estimate in bytes (Table 6/8)
+    pub mem_bytes: usize,
+}
+
+pub struct BlockApOutput {
+    pub model: QuantizedModel,
+    pub report: BlockApReport,
+}
+
+/// Extract block `b`'s params from the full fp flat vector into
+/// block-layout order.
+pub fn extract_block(
+    fp: &[f32],
+    fpl: &Layout,
+    bl: &Layout,
+    b: usize,
+) -> Result<Vec<f32>> {
+    let mut bp = vec![0f32; bl.size];
+    for e in &bl.entries {
+        let src = fpl.slice(fp, &format!("blocks.{b}.{}", e.name))?;
+        bp[e.offset..e.offset + e.numel()].copy_from_slice(src);
+    }
+    Ok(bp)
+}
+
+/// Min/max-initialize the block's qp = [s||z] vector from its weights.
+pub fn init_block_qp(
+    bp: &[f32],
+    bl: &Layout,
+    qbl: &Layout,
+    sch: QuantScheme,
+) -> Result<Vec<f32>> {
+    let mut qp = vec![0f32; qbl.size];
+    for e in &qbl.entries {
+        let (which, lin) = e
+            .name
+            .split_once('.')
+            .ok_or_else(|| anyhow!("bad qp entry {}", e.name))?;
+        if which == "z" {
+            continue; // handled together with s below
+        }
+        let we = bl.entry(lin)?;
+        let (rows, cols) = (we.shape[0], we.shape[1]);
+        let w = bl.slice(bp, lin)?;
+        let gp = rtn::minmax_init(w, rows, cols, sch);
+        qp[e.offset..e.offset + e.numel()].copy_from_slice(&gp.s);
+        let ze = qbl.entry(&format!("z.{lin}"))?;
+        qp[ze.offset..ze.offset + ze.numel()].copy_from_slice(&gp.z);
+    }
+    Ok(qp)
+}
+
+/// AutoRound-style rounding window [w - s/2, w + s/2] per linear weight;
+/// norms unconstrained.
+fn rounding_window(
+    bp: &[f32],
+    qp: &[f32],
+    bl: &Layout,
+    qbl: &Layout,
+    sch: QuantScheme,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut lo = vec![-1e30f32; bl.size];
+    let mut hi = vec![1e30f32; bl.size];
+    for e in &bl.entries {
+        if e.name.ends_with("norm") {
+            continue;
+        }
+        let (rows, cols) = (e.shape[0], e.shape[1]);
+        let g = sch.group;
+        let s = qbl.slice(qp, &format!("s.{}", e.name))?;
+        for r in 0..rows {
+            for c in 0..cols {
+                let idx = e.offset + r * cols + c;
+                let step = s[r * (cols / g) + c / g];
+                lo[idx] = bp[idx] - 0.5 * step;
+                hi[idx] = bp[idx] + 0.5 * step;
+            }
+        }
+    }
+    Ok((lo, hi))
+}
+
+/// Quantize a trained block onto the integer grid: rounds z to storage
+/// precision, emits (wq_block, qp_block) in block layouts.
+pub fn quantize_block(
+    bp: &[f32],
+    qp: &[f32],
+    bl: &Layout,
+    qbl: &Layout,
+    sch: QuantScheme,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let wq_size: usize = bl
+        .entries
+        .iter()
+        .filter(|e| !e.name.ends_with("norm"))
+        .map(|e| e.numel())
+        .sum();
+    let mut wq = vec![0f32; wq_size];
+    let mut qp_out = qp.to_vec();
+    let mut woff = 0usize;
+    for e in &bl.entries {
+        if e.name.ends_with("norm") {
+            continue;
+        }
+        let (rows, cols) = (e.shape[0], e.shape[1]);
+        let se = qbl.entry(&format!("s.{}", e.name))?;
+        let ze = qbl.entry(&format!("z.{}", e.name))?;
+        let mut gp = rtn::GroupParams {
+            s: qp[se.offset..se.offset + se.numel()].to_vec(),
+            z: qp[ze.offset..ze.offset + ze.numel()].to_vec(),
+            rows,
+            groups_per_row: cols / sch.group,
+        };
+        rtn::round_zeros(&mut gp, sch);
+        // guard against non-positive trained step sizes
+        for s in gp.s.iter_mut() {
+            if !s.is_finite() || s.abs() < 1e-8 {
+                *s = 1e-8;
+            }
+        }
+        let w = bl.slice(bp, &e.name)?;
+        let ints = rtn::quantize(w, &gp, sch);
+        wq[woff..woff + e.numel()].copy_from_slice(&ints);
+        woff += e.numel();
+        qp_out[se.offset..se.offset + se.numel()].copy_from_slice(&gp.s);
+        qp_out[ze.offset..ze.offset + ze.numel()].copy_from_slice(&gp.z);
+    }
+    Ok((wq, qp_out))
+}
+
+/// Analytic training-memory estimate for one block (bytes): parameters,
+/// qp, Adam moments, rounding window, plus one batch of activations x4
+/// (input, target, output, grad).
+pub fn block_train_mem_bytes(
+    bl: &Layout,
+    qbl: &Layout,
+    batch: usize,
+    ctx: usize,
+    dim: usize,
+) -> usize {
+    let params = bl.size * 4 * 3; // bp + m + v
+    let window = bl.size * 4 * 2; // lo + hi
+    let qp = qbl.size * 4 * 3;
+    let acts = batch * ctx * dim * 4 * 4;
+    params + window + qp + acts
+}
+
+/// Run Block-AP over a calibration pool. `params` is the pretrained fp
+/// model (teacher); returns the quantized model + stats.
+pub fn run_block_ap(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    hp: &TrainHp,
+    pool: &[LmBatch],
+    val_pool: &[LmBatch],
+) -> Result<BlockApOutput> {
+    let t0 = std::time::Instant::now();
+    let info = rt.manifest.preset(preset)?;
+    let cfg = info.config.clone();
+    let g = sch.group;
+    let fpl = rt.manifest.layout(preset, "fp")?.clone();
+    let bl = rt.manifest.layout(preset, "block")?.clone();
+    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest.layout(preset, "wq")?.clone();
+    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+
+    let embed = rt.exec(preset, "embed_fwd")?;
+    let block_fp = rt.exec(preset, "block_fwd_fp")?;
+    let block_q = rt.exec_g(preset, "block_fwd_q", g)?;
+    let step_exec = rt.exec_g(preset, "block_ap_step", g)?;
+    let loss_exec = rt.exec_g(preset, "block_loss", g)?;
+
+    // 1. activation caches
+    let mut h_fp: Vec<Vec<f32>> = Vec::with_capacity(pool.len());
+    for b in pool {
+        h_fp.push(embed.run1(&[Arg::F32(params), Arg::I32(&b.x)])?);
+    }
+    let mut h_q = h_fp.clone();
+    let mut hv_fp: Vec<Vec<f32>> = Vec::with_capacity(val_pool.len());
+    for b in val_pool {
+        hv_fp.push(embed.run1(&[Arg::F32(params), Arg::I32(&b.x)])?);
+    }
+    let mut hv_q = hv_fp.clone();
+
+    // output buffers
+    let mut wq_full = vec![0f32; wql.size];
+    let mut qp_full = vec![0f32; qpl.size];
+    let mut fpr = vec![0f32; fprl.size];
+
+    let (m_wf, m_sf, m_zf, proj) = hp.trainable.masks();
+    let qmax = sch.qmax();
+    let mut rng = Rng::new(hp.seed).fork("block_ap");
+
+    let mut loss_curves = Vec::new();
+    let mut val_losses = Vec::new();
+    let mut train_losses = Vec::new();
+
+    for b in 0..cfg.n_layers {
+        let bp0 = extract_block(params, &fpl, &bl, b)?;
+        let mut bp = bp0.clone();
+        let mut qp = init_block_qp(&bp0, &bl, &qbl, sch)?;
+        let (lo, hi) = if proj > 0.0 {
+            rounding_window(&bp0, &qp, &bl, &qbl, sch)?
+        } else {
+            (vec![-1e30; bl.size], vec![1e30; bl.size])
+        };
+
+        // teacher targets from the ORIGINAL block on fp-propagated inputs
+        let mut targets = Vec::with_capacity(pool.len());
+        for h in &h_fp {
+            targets.push(block_fp.run1(&[Arg::F32(&bp0), Arg::F32(h)])?);
+        }
+
+        let mut m_w = vec![0f32; bl.size];
+        let mut v_w = vec![0f32; bl.size];
+        let mut m_q = vec![0f32; qbl.size];
+        let mut v_q = vec![0f32; qbl.size];
+        let mut step = 0f32;
+        let mut curve = Vec::new();
+
+        for _epoch in 0..hp.block_epochs {
+            let mut order: Vec<usize> = (0..pool.len()).collect();
+            rng.shuffle(&mut order);
+            for &i in &order {
+                let h_in = match hp.propagation {
+                    Propagation::Quant => &h_q[i],
+                    Propagation::Fp => &h_fp[i],
+                };
+                step += 1.0;
+                let outs = step_exec.run(&[
+                    Arg::F32(&bp),
+                    Arg::F32(&qp),
+                    Arg::F32(&m_w),
+                    Arg::F32(&v_w),
+                    Arg::F32(&m_q),
+                    Arg::F32(&v_q),
+                    Arg::F32(&lo),
+                    Arg::F32(&hi),
+                    Arg::F32(h_in),
+                    Arg::F32(&targets[i]),
+                    Arg::F32(&[qmax]),
+                    Arg::Scalar(step),
+                    Arg::Scalar(hp.block_lr_w as f32),
+                    Arg::Scalar(hp.block_lr_q as f32),
+                    Arg::Scalar(m_wf),
+                    Arg::Scalar(m_sf),
+                    Arg::Scalar(m_zf),
+                    Arg::Scalar(proj),
+                ])?;
+                let mut it = outs.into_iter();
+                bp = it.next().unwrap().data;
+                qp = it.next().unwrap().data;
+                m_w = it.next().unwrap().data;
+                v_w = it.next().unwrap().data;
+                m_q = it.next().unwrap().data;
+                v_q = it.next().unwrap().data;
+                curve.push(it.next().unwrap().data[0]);
+            }
+        }
+
+        // post-training reconstruction losses (fig3 overfitting gap)
+        let mut tloss = 0f64;
+        for (i, h) in h_q.iter().enumerate() {
+            let h_in = match hp.propagation {
+                Propagation::Quant => h,
+                Propagation::Fp => &h_fp[i],
+            };
+            let l = loss_exec.run1(&[
+                Arg::F32(&bp),
+                Arg::F32(&qp),
+                Arg::F32(h_in),
+                Arg::F32(&targets[i]),
+                Arg::F32(&[qmax]),
+            ])?;
+            tloss += l[0] as f64;
+        }
+        train_losses.push((tloss / pool.len().max(1) as f64) as f32);
+
+        let mut vloss = 0f64;
+        for (i, hv) in hv_q.iter().enumerate() {
+            let vt = block_fp.run1(&[Arg::F32(&bp0), Arg::F32(&hv_fp[i])])?;
+            let h_in = match hp.propagation {
+                Propagation::Quant => hv,
+                Propagation::Fp => &hv_fp[i],
+            };
+            let l = loss_exec.run1(&[
+                Arg::F32(&bp),
+                Arg::F32(&qp),
+                Arg::F32(h_in),
+                Arg::F32(&vt),
+                Arg::F32(&[qmax]),
+            ])?;
+            vloss += l[0] as f64;
+        }
+        val_losses.push((vloss / val_pool.len().max(1) as f64) as f32);
+
+        // 3. quantize + assemble + propagate
+        let (wq_b, qp_b) = quantize_block(&bp, &qp, &bl, &qbl, sch)?;
+        let mut norms = vec![0f32; 2 * cfg.dim];
+        norms[..cfg.dim].copy_from_slice(bl.slice(&bp, "attn_norm")?);
+        norms[cfg.dim..].copy_from_slice(bl.slice(&bp, "mlp_norm")?);
+
+        // write into the full-model buffers
+        let mut woff = 0usize;
+        for e in bl.entries.iter().filter(|e| !e.name.ends_with("norm")) {
+            let dst = wql.slice_mut(
+                &mut wq_full,
+                &format!("blocks.{b}.{}", e.name),
+            )?;
+            dst.copy_from_slice(&wq_b[woff..woff + e.numel()]);
+            woff += e.numel();
+        }
+        for e in &qbl.entries {
+            let (which, lin) = e.name.split_once('.').unwrap();
+            let dst = qpl.slice_mut(
+                &mut qp_full,
+                &format!("{which}.blocks.{b}.{lin}"),
+            )?;
+            dst.copy_from_slice(&qp_b[e.offset..e.offset + e.numel()]);
+        }
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.attn_norm"))?
+            .copy_from_slice(&norms[..cfg.dim]);
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.mlp_norm"))?
+            .copy_from_slice(&norms[cfg.dim..]);
+
+        // propagate caches through the finished block
+        for h in h_fp.iter_mut() {
+            *h = block_fp.run1(&[Arg::F32(&bp0), Arg::F32(h)])?;
+        }
+        for h in hv_fp.iter_mut() {
+            *h = block_fp.run1(&[Arg::F32(&bp0), Arg::F32(h)])?;
+        }
+        match hp.propagation {
+            Propagation::Quant => {
+                for h in h_q.iter_mut() {
+                    *h = block_q.run1(&[
+                        Arg::F32(&wq_b),
+                        Arg::F32(&qp_b),
+                        Arg::F32(&norms),
+                        Arg::F32(h),
+                    ])?;
+                }
+                for h in hv_q.iter_mut() {
+                    *h = block_q.run1(&[
+                        Arg::F32(&wq_b),
+                        Arg::F32(&qp_b),
+                        Arg::F32(&norms),
+                        Arg::F32(h),
+                    ])?;
+                }
+            }
+            Propagation::Fp => {
+                h_q.clone_from(&h_fp);
+                hv_q.clone_from(&hv_fp);
+            }
+        }
+
+        loss_curves.push(curve);
+        crate::info!(
+            "block_ap[{preset} {}] block {b}/{} train {:.5} val {:.5}",
+            sch.tag(),
+            cfg.n_layers,
+            train_losses[b],
+            val_losses[b]
+        );
+    }
+
+    // 4. fp remainder from the original model
+    for name in ["embed", "final_norm", "head"] {
+        fprl.slice_mut(&mut fpr, name)?
+            .copy_from_slice(fpl.slice(params, name)?);
+    }
+
+    let mem = block_train_mem_bytes(
+        &bl, &qbl, cfg.block_batch, cfg.block_ctx, cfg.dim,
+    );
+    Ok(BlockApOutput {
+        model: QuantizedModel {
+            preset: preset.to_string(),
+            scheme: sch,
+            wq: wq_full,
+            qp: qp_full,
+            fpr,
+        },
+        report: BlockApReport {
+            loss_curves,
+            val_losses,
+            train_losses,
+            seconds: t0.elapsed().as_secs_f64(),
+            mem_bytes: mem,
+        },
+    })
+}
+
+/// RTN-only quantization of a full fp model (the no-Block-AP baseline and
+/// the QLoRA/PEQA starting point) - same assembly path, no training.
+pub fn rtn_quantize_model(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+) -> Result<QuantizedModel> {
+    let info = rt.manifest.preset(preset)?;
+    let cfg = info.config.clone();
+    let g = sch.group;
+    let fpl = rt.manifest.layout(preset, "fp")?.clone();
+    let bl = rt.manifest.layout(preset, "block")?.clone();
+    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest.layout(preset, "wq")?.clone();
+    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+
+    let mut wq_full = vec![0f32; wql.size];
+    let mut qp_full = vec![0f32; qpl.size];
+    let mut fpr = vec![0f32; fprl.size];
+
+    for b in 0..cfg.n_layers {
+        let bp = extract_block(params, &fpl, &bl, b)?;
+        let qp = init_block_qp(&bp, &bl, &qbl, sch)?;
+        let (wq_b, qp_b) = quantize_block(&bp, &qp, &bl, &qbl, sch)?;
+        let mut woff = 0usize;
+        for e in bl.entries.iter().filter(|e| !e.name.ends_with("norm")) {
+            wql.slice_mut(&mut wq_full, &format!("blocks.{b}.{}", e.name))?
+                .copy_from_slice(&wq_b[woff..woff + e.numel()]);
+            woff += e.numel();
+        }
+        for e in &qbl.entries {
+            let (which, lin) = e.name.split_once('.').unwrap();
+            qpl.slice_mut(&mut qp_full,
+                          &format!("{which}.blocks.{b}.{lin}"))?
+                .copy_from_slice(&qp_b[e.offset..e.offset + e.numel()]);
+        }
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.attn_norm"))?
+            .copy_from_slice(bl.slice(&bp, "attn_norm")?);
+        fprl.slice_mut(&mut fpr, &format!("blocks.{b}.mlp_norm"))?
+            .copy_from_slice(bl.slice(&bp, "mlp_norm")?);
+    }
+    for name in ["embed", "final_norm", "head"] {
+        fprl.slice_mut(&mut fpr, name)?
+            .copy_from_slice(fpl.slice(params, name)?);
+    }
+    Ok(QuantizedModel {
+        preset: preset.to_string(),
+        scheme: sch,
+        wq: wq_full,
+        qp: qp_full,
+        fpr,
+    })
+}

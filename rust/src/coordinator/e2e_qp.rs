@@ -1,0 +1,113 @@
+//! E2E-QP trainer - the paper's phase 2 (§3.3).
+//!
+//! Integer weights stay frozen (no quantization op exists in the graph at
+//! all - only dequantization); the coordinator trains qp = [s||z] end-to-end
+//! with Adam, a loss mask selecting supervised positions (all-ones for
+//! continual pretraining, response spans for instruction tuning), and the
+//! Table-7 s/z trainability masks.
+
+use anyhow::Result;
+
+use crate::config::TrainHp;
+use crate::coordinator::opt::{AdamState, LrSchedule};
+use crate::model::quantized::QuantizedModel;
+use crate::runtime::{Arg, Runtime};
+
+/// One supervised batch: x, y (B*T each) and a loss mask over y positions.
+pub struct E2eBatch {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+pub struct E2eReport {
+    pub losses: Vec<f32>,
+    pub seconds: f64,
+    /// analytic training-memory estimate (Table 8): model + qp train state
+    pub mem_bytes: usize,
+}
+
+/// Train the quantized model's step sizes (and optionally zero points)
+/// end-to-end over the given batches. Mutates `qm.qp` in place.
+pub fn run_e2e_qp(
+    rt: &Runtime,
+    qm: &mut QuantizedModel,
+    batches: &[E2eBatch],
+    hp: &TrainHp,
+) -> Result<E2eReport> {
+    let t0 = std::time::Instant::now();
+    let preset = qm.preset.clone();
+    let exec = rt.exec_g(&preset, "e2e_qp_step", qm.scheme.group)?;
+    let mut adam = AdamState::new(qm.qp.len());
+    let total = batches.len() * hp.e2e_epochs;
+    let sched = LrSchedule::cosine(hp.e2e_lr, total / 20 + 1, total);
+    let m_sf = if hp.train_s_e2e { 1.0 } else { 0.0 };
+    let m_zf = if hp.train_z_e2e { 1.0 } else { 0.0 };
+
+    let mut losses = Vec::with_capacity(total);
+    let mut it = 0usize;
+    for _epoch in 0..hp.e2e_epochs {
+        for b in batches {
+            let step = adam.next_step();
+            let outs = exec.run(&[
+                Arg::F32(&qm.wq),
+                Arg::F32(&qm.qp),
+                Arg::F32(&qm.fpr),
+                Arg::F32(&adam.m),
+                Arg::F32(&adam.v),
+                Arg::I32(&b.x),
+                Arg::I32(&b.y),
+                Arg::F32(&b.mask),
+                Arg::Scalar(step),
+                Arg::Scalar(sched.at(it)),
+                Arg::Scalar(m_sf), // paper default: s trainable, z frozen
+                Arg::Scalar(m_zf),
+            ])?;
+            let mut o = outs.into_iter();
+            qm.qp = o.next().unwrap().data;
+            adam.m = o.next().unwrap().data;
+            adam.v = o.next().unwrap().data;
+            losses.push(o.next().unwrap().data[0]);
+            it += 1;
+        }
+        crate::info!(
+            "e2e_qp[{preset} {}] epoch done, loss {:.4}",
+            qm.scheme.tag(),
+            losses.last().copied().unwrap_or(f32::NAN)
+        );
+    }
+
+    // Memory estimate: frozen model buffers + 3x qp (params, m, v).
+    let mem = (qm.wq.len() + qm.fpr.len()) * 4
+        + qm.qp.len() * 4 * 3
+        + batches.first().map(|b| b.x.len() * 8).unwrap_or(0);
+    Ok(E2eReport {
+        losses,
+        seconds: t0.elapsed().as_secs_f64(),
+        mem_bytes: mem,
+    })
+}
+
+/// Adapt LM batches (continual pretraining: mask = all ones).
+pub fn lm_batches(pool: &[crate::data::loader::LmBatch]) -> Vec<E2eBatch> {
+    pool.iter()
+        .map(|b| E2eBatch {
+            x: b.x.clone(),
+            y: b.y.clone(),
+            mask: vec![1.0; b.y.len()],
+        })
+        .collect()
+}
+
+/// Adapt instruction batches (Alpaca-style: response-span masks).
+pub fn instr_batches(
+    loader: &mut crate::data::loader::InstrLoader,
+    n: usize,
+) -> Vec<E2eBatch> {
+    (0..n)
+        .map(|_| {
+            let b = loader.next_batch();
+            E2eBatch { x: b.x, y: b.y, mask: b.mask }
+        })
+        .collect()
+}

@@ -1,0 +1,8 @@
+//! The L3 coordination contribution: pretraining substrate, the Block-AP
+//! scheduler (activation caching + block-by-block masked training), the
+//! E2E-QP trainer, and the two-phase pipeline.
+pub mod block_ap;
+pub mod e2e_qp;
+pub mod opt;
+pub mod pipeline;
+pub mod pretrain;

@@ -1,0 +1,139 @@
+//! Host-side optimizer state & schedules. The Adam *math* runs inside the
+//! lowered train-step graphs (python/compile/model.py::adam_update); the
+//! coordinator owns the buffers and the learning-rate schedule, and this
+//! module keeps a bit-parity reference implementation used in golden tests
+//! against the python/artifact side.
+
+/// Adam moment buffers for one flat parameter group.
+#[derive(Clone)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: usize,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> AdamState {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    /// 1-based step count fed to the graph as f32 (bias correction).
+    pub fn next_step(&mut self) -> f32 {
+        self.step += 1;
+        self.step as f32
+    }
+}
+
+/// Reference Adam matching model.py::adam_update exactly (b1=0.9, b2=0.999,
+/// eps=1e-8) - used by tests to validate artifact numerics.
+pub fn adam_ref(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: f32,
+    lr: f32,
+) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(step);
+    let bc2 = 1.0 - B2.powf(step);
+    for i in 0..p.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+/// Cosine decay with linear warmup (the schedule used by both phases).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub warmup: usize,
+    pub total: usize,
+    pub min_frac: f64,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f64) -> LrSchedule {
+        LrSchedule { base, warmup: 0, total: 0, min_frac: 1.0 }
+    }
+
+    pub fn cosine(base: f64, warmup: usize, total: usize) -> LrSchedule {
+        LrSchedule { base, warmup, total, min_frac: 0.1 }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        if self.total == 0 {
+            return self.base as f32;
+        }
+        if step < self.warmup {
+            return (self.base * (step + 1) as f64 / self.warmup.max(1) as f64)
+                as f32;
+        }
+        let t = (step - self.warmup) as f64
+            / (self.total.saturating_sub(self.warmup)).max(1) as f64;
+        let t = t.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        (self.base * (self.min_frac + (1.0 - self.min_frac) * cos)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_golden_vector_matches_python() {
+        // Same golden vector as python/tests/test_model.py::
+        // test_adam_golden_vector (independent implementations agree).
+        let mut p = vec![1.0f32, -2.0, 0.5];
+        let g = vec![0.1f32, -0.2, 0.3];
+        let mut m = vec![0.01f32, 0.0, -0.05];
+        let mut v = vec![0.001f32, 0.0002, 0.0];
+        adam_ref(&mut p, &g, &mut m, &mut v, 3.0, 0.01);
+        let want_m = [0.019, -0.02, -0.015];
+        let want_v = [
+            0.001 * 0.999 + 0.001 * 0.01,
+            0.0002 * 0.999 + 0.001 * 0.04,
+            0.001 * 0.09,
+        ];
+        for i in 0..3 {
+            assert!((m[i] - want_m[i]).abs() < 1e-6, "m[{i}]={}", m[i]);
+            assert!((v[i] - want_v[i]).abs() < 1e-7, "v[{i}]={}", v[i]);
+        }
+        // p moves opposite to the sign of the updated momentum
+        // (m = [0.019, -0.02, -0.015])
+        assert!(p[0] < 1.0 && p[1] > -2.0 && p[2] > 0.5);
+    }
+
+    #[test]
+    fn schedule_constant() {
+        let s = LrSchedule::constant(1e-3);
+        assert_eq!(s.at(0), 1e-3);
+        assert_eq!(s.at(1000), 1e-3);
+    }
+
+    #[test]
+    fn schedule_warmup_and_decay() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!(s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(50) < 1.0);
+        assert!(s.at(99) > s.at(99) * 0.09); // floors at min_frac
+        assert!((s.at(200) - 0.1).abs() < 1e-5);
+        // monotone decreasing after warmup
+        assert!(s.at(20) > s.at(60));
+    }
+
+    #[test]
+    fn adam_state_steps() {
+        let mut st = AdamState::new(4);
+        assert_eq!(st.next_step(), 1.0);
+        assert_eq!(st.next_step(), 2.0);
+        assert_eq!(st.m.len(), 4);
+    }
+}

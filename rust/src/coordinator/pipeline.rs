@@ -1,0 +1,89 @@
+//! The EfficientQAT pipeline: Block-AP then E2E-QP (paper Fig. 2), plus the
+//! ablation switches that turn either phase off (Table 5).
+
+use anyhow::Result;
+
+use crate::config::{QuantScheme, TrainHp};
+use crate::coordinator::block_ap::{run_block_ap, rtn_quantize_model,
+                                   BlockApReport};
+use crate::coordinator::e2e_qp::{lm_batches, run_e2e_qp, E2eReport};
+use crate::data::corpus::{Domain, World};
+use crate::data::loader::LmLoader;
+use crate::model::quantized::QuantizedModel;
+use crate::runtime::Runtime;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhaseToggle {
+    pub block_ap: bool,
+    pub e2e_qp: bool,
+}
+
+impl Default for PhaseToggle {
+    fn default() -> Self {
+        PhaseToggle { block_ap: true, e2e_qp: true }
+    }
+}
+
+pub struct PipelineReport {
+    pub block_ap: Option<BlockApReport>,
+    pub e2e: Option<E2eReport>,
+    pub total_seconds: f64,
+}
+
+/// Full EfficientQAT: pretrained fp params -> quantized model.
+///
+/// Calibration (Block-AP) and training (E2E-QP) pools are drawn from
+/// `domain` with disjoint seeds; validation uses a third seed (fig3).
+pub fn efficient_qat(
+    rt: &Runtime,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    hp: &TrainHp,
+    world: &World,
+    domain: &Domain,
+    phases: PhaseToggle,
+) -> Result<(QuantizedModel, PipelineReport)> {
+    let t0 = std::time::Instant::now();
+    let cfg = rt.manifest.preset(preset)?.config.clone();
+
+    // Block-AP calibration pool ("4096 samples from RedPajama" analog)
+    let n_cal = (hp.block_samples + cfg.block_batch - 1) / cfg.block_batch;
+    let mut cal_loader = LmLoader::new(
+        world, domain, hp.seed ^ 0xB10C, cfg.block_batch, cfg.block_ctx,
+    );
+    let cal_pool = cal_loader.sample_pool(n_cal);
+    let mut val_loader = LmLoader::new(
+        world, domain, hp.seed ^ 0x7A11, cfg.block_batch, cfg.block_ctx,
+    );
+    let val_pool = val_loader.sample_pool(8.min(n_cal.max(1)));
+
+    let (mut qm, block_report) = if phases.block_ap {
+        let out = run_block_ap(rt, preset, params, sch, hp, &cal_pool,
+                               &val_pool)?;
+        (out.model, Some(out.report))
+    } else {
+        (rtn_quantize_model(rt, preset, params, sch)?, None)
+    };
+
+    let e2e_report = if phases.e2e_qp {
+        let n_e2e = (hp.e2e_samples + cfg.e2e_batch - 1) / cfg.e2e_batch;
+        let mut e2e_loader = LmLoader::new(
+            world, domain, hp.seed ^ 0xE2E0, cfg.e2e_batch, cfg.e2e_ctx,
+        );
+        let pool = e2e_loader.sample_pool(n_e2e);
+        let batches = lm_batches(&pool);
+        Some(run_e2e_qp(rt, &mut qm, &batches, hp)?)
+    } else {
+        None
+    };
+
+    Ok((
+        qm,
+        PipelineReport {
+            block_ap: block_report,
+            e2e: e2e_report,
+            total_seconds: t0.elapsed().as_secs_f64(),
+        },
+    ))
+}

@@ -1,0 +1,89 @@
+//! Full-precision pretraining loop (substrate): creates the model that the
+//! EfficientQAT pipeline quantizes. One fused PJRT executable per step; the
+//! coordinator owns parameters, Adam buffers, the data pipeline and the lr
+//! schedule.
+
+use anyhow::Result;
+
+use crate::coordinator::opt::{AdamState, LrSchedule};
+use crate::data::loader::LmLoader;
+use crate::model::init::init_fp_params;
+use crate::runtime::{Arg, Runtime};
+
+pub struct PretrainReport {
+    pub losses: Vec<f32>,
+    pub seconds: f64,
+}
+
+pub struct PretrainOpts {
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainOpts {
+    fn default() -> Self {
+        PretrainOpts { steps: 300, lr: 3e-3, seed: 1, log_every: 20 }
+    }
+}
+
+/// Train from scratch; returns (flat params, report).
+pub fn pretrain(
+    rt: &Runtime,
+    preset: &str,
+    loader: &mut LmLoader,
+    opts: &PretrainOpts,
+) -> Result<(Vec<f32>, PretrainReport)> {
+    let fpl = rt.manifest.layout(preset, "fp")?;
+    let params = init_fp_params(fpl, opts.seed);
+    pretrain_from(rt, preset, params, loader, opts)
+}
+
+/// Continue training from existing params (used by naive-QAT comparisons).
+pub fn pretrain_from(
+    rt: &Runtime,
+    preset: &str,
+    mut params: Vec<f32>,
+    loader: &mut LmLoader,
+    opts: &PretrainOpts,
+) -> Result<(Vec<f32>, PretrainReport)> {
+    let t0 = std::time::Instant::now();
+    let exec = rt.exec(preset, "pretrain_step")?;
+    let mut adam = AdamState::new(params.len());
+    let sched = LrSchedule::cosine(opts.lr, opts.steps / 20 + 1, opts.steps);
+    let mut losses = Vec::with_capacity(opts.steps);
+
+    for it in 0..opts.steps {
+        let batch = loader.next_batch();
+        let step = adam.next_step();
+        let lr = sched.at(it);
+        let outs = exec.run(&[
+            Arg::F32(&params),
+            Arg::F32(&adam.m),
+            Arg::F32(&adam.v),
+            Arg::I32(&batch.x),
+            Arg::I32(&batch.y),
+            Arg::Scalar(step),
+            Arg::Scalar(lr),
+        ])?;
+        let mut outs = outs.into_iter();
+        params = outs.next().unwrap().data;
+        adam.m = outs.next().unwrap().data;
+        adam.v = outs.next().unwrap().data;
+        let loss = outs.next().unwrap().data[0];
+        losses.push(loss);
+        if opts.log_every > 0 && (it % opts.log_every == 0
+            || it + 1 == opts.steps)
+        {
+            crate::info!(
+                "pretrain[{preset}] step {it:4}/{} loss {loss:.4} lr {lr:.2e}",
+                opts.steps
+            );
+        }
+    }
+    Ok((
+        params,
+        PretrainReport { losses, seconds: t0.elapsed().as_secs_f64() },
+    ))
+}

@@ -1,0 +1,4 @@
+//! Synthetic data substrates: corpora, evaluation suites, batchers.
+pub mod corpus;
+pub mod loader;
+pub mod tasks;

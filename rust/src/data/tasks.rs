@@ -1,0 +1,325 @@
+//! Synthetic evaluation suites (replace lm-eval zero-shot tasks, MMLU, and
+//! Alpaca - DESIGN.md §4).
+//!
+//! Five zero-shot multiple-choice suites mirror the paper's WinoGrande /
+//! PIQA / HellaSwag / ARC-e / ARC-c set mechanically: each item is a context
+//! plus K options; the model scores each option by total log-likelihood and
+//! must rank the gold option first. Each suite probes one structure the
+//! pretraining corpus actually contains (corpus.rs).
+//!
+//! The MMLU analog groups fact families into "subjects" and is evaluated
+//! few-shot; the Alpaca analog is an instruction-format dataset whose loss
+//! is masked to the response span.
+
+use crate::data::corpus::{World, TOK_ANS, TOK_EOS, TOK_INS, TOK_Q, TOK_SEP};
+use crate::util::rng::Rng;
+
+/// One multiple-choice item.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub ctx: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+pub const ZEROSHOT_SUITES: [&str; 5] =
+    ["fact_recall", "copy", "successor", "induction", "topic"];
+
+/// Generate `n` items of the given suite.
+pub fn gen_suite(world: &World, suite: &str, n: usize, seed: u64)
+                 -> Vec<McItem> {
+    let mut rng = Rng::new(seed).fork(suite);
+    (0..n)
+        .map(|_| match suite {
+            "fact_recall" => fact_recall(world, &mut rng),
+            "copy" => copy_task(world, &mut rng),
+            "successor" => successor(world, &mut rng),
+            "induction" => induction(world, &mut rng),
+            "topic" => topic_task(world, &mut rng),
+            _ => panic!("unknown suite {suite}"),
+        })
+        .collect()
+}
+
+fn distractors(world: &World, rng: &mut Rng, gold: i32, k: usize)
+               -> Vec<i32> {
+    let mut out = Vec::with_capacity(k);
+    while out.len() < k {
+        let t = world.random_token(rng);
+        if t != gold && !out.contains(&t) {
+            out.push(t);
+        }
+    }
+    out
+}
+
+fn mc_single_token(world: &World, rng: &mut Rng, ctx: Vec<i32>, gold: i32)
+                   -> McItem {
+    let mut options: Vec<Vec<i32>> =
+        distractors(world, rng, gold, 3).into_iter().map(|t| vec![t])
+            .collect();
+    let correct = rng.below(4);
+    options.insert(correct, vec![gold]);
+    McItem { ctx, options, correct }
+}
+
+/// ARC-style knowledge probe: context primes topic then ends with a fact
+/// head; gold continuation is the fact tail.
+fn fact_recall(world: &World, rng: &mut Rng) -> McItem {
+    let (a, b) = world.facts[rng.below(world.facts.len())];
+    let topic = world.topic_of(a).unwrap_or(0);
+    let pool = world.topic_tokens(topic);
+    let mut ctx = vec![TOK_SEP];
+    for _ in 0..6 {
+        ctx.push(pool[rng.below(pool.len())]);
+    }
+    ctx.push(a);
+    mc_single_token(world, rng, ctx, b)
+}
+
+/// HellaSwag-style surface continuation: the context repeats a window with
+/// lag L; gold option continues the copy.
+fn copy_task(world: &World, rng: &mut Rng) -> McItem {
+    let lag = 5usize;
+    let pool = world.topic_tokens(rng.below(world.n_topics));
+    let seq: Vec<i32> =
+        (0..lag).map(|_| pool[rng.below(pool.len())]).collect();
+    let mut ctx = vec![TOK_SEP];
+    ctx.extend_from_slice(&seq);
+    ctx.extend_from_slice(&seq[..lag - 1]); // replay all but last
+    mc_single_token(world, rng, ctx, seq[lag - 1])
+}
+
+/// PIQA-style pattern completion: an ascending run in the hidden topic
+/// order; gold option is the next element.
+fn successor(world: &World, rng: &mut Rng) -> McItem {
+    let t = rng.below(world.n_topics);
+    let pool = world.topic_tokens(t);
+    let i0 = rng.below(pool.len() - 4);
+    let ctx = vec![
+        TOK_SEP, pool[i0], pool[i0 + 1], pool[i0 + 2],
+    ];
+    mc_single_token(world, rng, ctx, pool[i0 + 3])
+}
+
+/// WinoGrande-style binding: [x y ... x ?] -> y (classic induction).
+fn induction(world: &World, rng: &mut Rng) -> McItem {
+    let pool = world.topic_tokens(rng.below(world.n_topics));
+    let x = pool[rng.below(pool.len())];
+    let mut y = pool[rng.below(pool.len())];
+    while y == x {
+        y = pool[rng.below(pool.len())];
+    }
+    let mut ctx = vec![TOK_SEP, x, y];
+    for _ in 0..4 {
+        ctx.push(pool[rng.below(pool.len())]);
+    }
+    ctx.push(x);
+    mc_single_token(world, rng, ctx, y)
+}
+
+/// Topic-coherence probe: context from one topic; gold option is another
+/// token of the same topic vs tokens of foreign topics.
+fn topic_task(world: &World, rng: &mut Rng) -> McItem {
+    let t = rng.below(world.n_topics);
+    let pool = world.topic_tokens(t);
+    let mut ctx = vec![TOK_SEP];
+    for _ in 0..8 {
+        ctx.push(pool[rng.below(pool.len())]);
+    }
+    let gold = pool[rng.below(pool.len())];
+    let mut options = Vec::new();
+    while options.len() < 3 {
+        let ft = rng.below(world.n_topics);
+        if ft == t {
+            continue;
+        }
+        let fp = world.topic_tokens(ft);
+        options.push(vec![fp[rng.below(fp.len())]]);
+    }
+    let correct = rng.below(4);
+    options.insert(correct, vec![gold]);
+    McItem { ctx, options, correct }
+}
+
+// ---------------------------------------------------------------------------
+// MMLU analog (few-shot, subject-grouped fact QA)
+// ---------------------------------------------------------------------------
+
+/// Few-shot MC exam: subjects partition the fact list; each question shows
+/// `shots` solved (Q a ANS b EOS) examples then asks a new head.
+pub fn gen_mmlu(world: &World, n_subjects: usize, per_subject: usize,
+                shots: usize, seed: u64) -> Vec<McItem> {
+    let mut rng = Rng::new(seed).fork("mmlu");
+    let nf = world.facts.len();
+    let per = (nf / n_subjects).max(2);
+    let mut items = Vec::new();
+    for s in 0..n_subjects {
+        let subject = &world.facts[s * per..((s + 1) * per).min(nf)];
+        if subject.len() < shots + 1 {
+            continue;
+        }
+        for _ in 0..per_subject {
+            let qi = rng.below(subject.len());
+            let mut ctx = vec![TOK_SEP];
+            let mut used = vec![qi];
+            for _ in 0..shots {
+                let mut ei = rng.below(subject.len());
+                while used.contains(&ei) {
+                    ei = rng.below(subject.len());
+                }
+                used.push(ei);
+                let (a, b) = subject[ei];
+                ctx.extend_from_slice(&[TOK_Q, a, TOK_ANS, b, TOK_EOS]);
+            }
+            let (a, b) = subject[qi];
+            ctx.extend_from_slice(&[TOK_Q, a, TOK_ANS]);
+            items.push(mc_single_token(world, &mut rng, ctx, b));
+        }
+    }
+    items
+}
+
+// ---------------------------------------------------------------------------
+// Alpaca analog (instruction corpus with response loss mask)
+// ---------------------------------------------------------------------------
+
+/// One instruction example rendered into a fixed-length window.
+#[derive(Clone, Debug)]
+pub struct InstrExample {
+    pub tokens: Vec<i32>,
+    /// 1.0 where loss applies (the response span), else 0.0
+    pub mask: Vec<f32>,
+}
+
+/// Instruction item: [INS a_topic_ctx a ANS] b [EOS]; response = b EOS.
+/// Teaching the INS/ANS format transfers fact knowledge into the QA format
+/// used by the MMLU analog - same mechanism as Alpaca -> MMLU in the paper.
+pub fn gen_instruction(world: &World, len: usize, seed: u64)
+                       -> impl Iterator<Item = InstrExample> + '_ {
+    let mut rng = Rng::new(seed).fork("alpaca");
+    std::iter::from_fn(move || {
+        let mut toks = Vec::with_capacity(len);
+        let mut mask = Vec::with_capacity(len);
+        while toks.len() < len {
+            let (a, b) = world.facts[rng.below(world.facts.len())];
+            let topic = world.topic_of(a).unwrap_or(0);
+            let pool = world.topic_tokens(topic);
+            let push = |t: i32, m: f32, toks: &mut Vec<i32>,
+                            mask: &mut Vec<f32>| {
+                if toks.len() < len {
+                    toks.push(t);
+                    mask.push(m);
+                }
+            };
+            push(TOK_INS, 0.0, &mut toks, &mut mask);
+            for _ in 0..3 {
+                push(pool[rng.below(pool.len())], 0.0, &mut toks, &mut mask);
+            }
+            push(a, 0.0, &mut toks, &mut mask);
+            push(TOK_ANS, 0.0, &mut toks, &mut mask);
+            push(b, 1.0, &mut toks, &mut mask);
+            push(TOK_EOS, 1.0, &mut toks, &mut mask);
+        }
+        Some(InstrExample { tokens: toks, mask })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn world() -> World {
+        World::new(512, 7)
+    }
+
+    #[test]
+    fn suites_generate_valid_items() {
+        let w = world();
+        for suite in ZEROSHOT_SUITES {
+            let items = gen_suite(&w, suite, 50, 3);
+            assert_eq!(items.len(), 50);
+            for it in &items {
+                assert_eq!(it.options.len(), 4);
+                assert!(it.correct < 4);
+                assert!(!it.ctx.is_empty());
+                // gold option differs from every distractor
+                let gold = &it.options[it.correct];
+                for (i, o) in it.options.iter().enumerate() {
+                    if i != it.correct {
+                        assert_ne!(o, gold);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn suites_are_deterministic() {
+        let w = world();
+        let a = gen_suite(&w, "fact_recall", 10, 5);
+        let b = gen_suite(&w, "fact_recall", 10, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.ctx, y.ctx);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn fact_recall_gold_is_fact_tail() {
+        let w = world();
+        for it in gen_suite(&w, "fact_recall", 30, 1) {
+            let head = *it.ctx.last().unwrap();
+            assert_eq!(w.fact_tail(head), Some(it.options[it.correct][0]));
+        }
+    }
+
+    #[test]
+    fn topic_distractors_are_foreign() {
+        let w = world();
+        for it in gen_suite(&w, "topic", 30, 2) {
+            let ctx_topic = w.topic_of(it.ctx[1]).unwrap();
+            for (i, o) in it.options.iter().enumerate() {
+                let ot = w.topic_of(o[0]).unwrap();
+                if i == it.correct {
+                    assert_eq!(ot, ctx_topic);
+                } else {
+                    assert_ne!(ot, ctx_topic);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mmlu_items_have_shot_structure() {
+        let w = world();
+        let items = gen_mmlu(&w, 4, 5, 2, 9);
+        assert!(!items.is_empty());
+        for it in &items {
+            let qs = it.ctx.iter().filter(|&&t| t == TOK_Q).count();
+            assert_eq!(qs, 3); // 2 shots + 1 question
+            assert_eq!(*it.ctx.last().unwrap(), TOK_ANS);
+        }
+    }
+
+    #[test]
+    fn instruction_masks_cover_responses_only() {
+        let w = world();
+        let ex = gen_instruction(&w, 64, 4).next().unwrap();
+        assert_eq!(ex.tokens.len(), 64);
+        assert_eq!(ex.mask.len(), 64);
+        let masked: f32 = ex.mask.iter().sum();
+        assert!(masked > 0.0 && masked < 64.0);
+        // every masked position is a fact tail or EOS
+        for (i, &m) in ex.mask.iter().enumerate() {
+            if m == 1.0 {
+                let t = ex.tokens[i];
+                assert!(
+                    t == TOK_EOS
+                        || w.facts.iter().any(|&(_, b)| b == t),
+                    "masked token {t} at {i} is not a response token"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Uniform forward interface over the three evaluated model kinds:
+//! full-precision, quantized (dequant path), and quantized+LoRA.
+//! All run the `eval_batch x eval_ctx` logits executables.
+
+use anyhow::Result;
+
+use crate::model::quantized::QuantizedModel;
+use crate::runtime::{Arg, Runtime};
+
+pub enum ModelRef<'a> {
+    Fp { preset: &'a str, params: &'a [f32] },
+    Quant(&'a QuantizedModel),
+    Lora { qm: &'a QuantizedModel, lora: &'a [f32] },
+}
+
+impl<'a> ModelRef<'a> {
+    pub fn preset(&self) -> &str {
+        match self {
+            ModelRef::Fp { preset, .. } => preset,
+            ModelRef::Quant(qm) => &qm.preset,
+            ModelRef::Lora { qm, .. } => &qm.preset,
+        }
+    }
+
+    /// Logits for one eval-geometry batch; x is (eval_batch * eval_ctx)
+    /// i32, returns (eval_batch * eval_ctx * vocab) f32.
+    pub fn logits(&self, rt: &Runtime, x: &[i32]) -> Result<Vec<f32>> {
+        match self {
+            ModelRef::Fp { preset, params } => {
+                let exec = rt.exec(preset, "model_fwd_fp")?;
+                exec.run1(&[Arg::F32(params), Arg::I32(x)])
+            }
+            ModelRef::Quant(qm) => {
+                let exec =
+                    rt.exec_g(&qm.preset, "model_fwd_q", qm.scheme.group)?;
+                exec.run1(&[
+                    Arg::F32(&qm.wq),
+                    Arg::F32(&qm.qp),
+                    Arg::F32(&qm.fpr),
+                    Arg::I32(x),
+                ])
+            }
+            ModelRef::Lora { qm, lora } => {
+                let exec = rt.exec_g(&qm.preset, "model_fwd_lora",
+                                     qm.scheme.group)?;
+                exec.run1(&[
+                    Arg::F32(&qm.wq),
+                    Arg::F32(&qm.qp),
+                    Arg::F32(&qm.fpr),
+                    Arg::F32(lora),
+                    Arg::I32(x),
+                ])
+            }
+        }
+    }
+}

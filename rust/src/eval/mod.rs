@@ -1,0 +1,5 @@
+//! Evaluation harnesses: perplexity (Table 3) and multiple-choice scoring
+//! (Tables 1/4 via the synthetic suites).
+pub mod fwd;
+pub mod ppl;
+pub mod zeroshot;

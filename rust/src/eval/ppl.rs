@@ -1,0 +1,53 @@
+//! Perplexity evaluation (paper Table 3): mean token cross-entropy over
+//! held-out windows of a domain corpus, exp'd.
+
+use anyhow::Result;
+
+use crate::data::corpus::{Domain, World};
+use crate::data::loader::LmLoader;
+use crate::eval::fwd::ModelRef;
+use crate::runtime::Runtime;
+use crate::util::stats::logsumexp;
+
+/// Perplexity over `n_batches` eval-geometry batches from `domain`
+/// (seeded disjoint from all training pools).
+pub fn perplexity(
+    rt: &Runtime,
+    model: &ModelRef,
+    world: &World,
+    domain: &Domain,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = rt.manifest.preset(model.preset())?.config.clone();
+    let mut loader =
+        LmLoader::new(world, domain, seed, cfg.eval_batch, cfg.eval_ctx);
+    let mut total_nll = 0f64;
+    let mut total_tok = 0usize;
+    for _ in 0..n_batches {
+        let b = loader.next_batch();
+        let logits = model.logits(rt, &b.x)?;
+        let v = cfg.vocab;
+        for (i, &y) in b.y.iter().enumerate() {
+            let row = &logits[i * v..(i + 1) * v];
+            let nll = logsumexp(row) - row[y as usize] as f64;
+            total_nll += nll;
+            total_tok += 1;
+        }
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::stats::logsumexp;
+
+    #[test]
+    fn uniform_logits_give_vocab_ppl() {
+        // nll of uniform over V = ln V -> ppl = V (sanity of the formula)
+        let v = 512;
+        let row = vec![0f32; v];
+        let nll = logsumexp(&row) - row[3] as f64;
+        assert!(((nll.exp()) - v as f64).abs() < 1e-6);
+    }
+}

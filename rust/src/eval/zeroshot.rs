@@ -1,0 +1,116 @@
+//! Multiple-choice scoring harness (lm-eval mechanics): each option is
+//! scored by the total log-likelihood of its tokens given the context; the
+//! model is correct when the gold option ranks first. Drives both the five
+//! zero-shot suites (Table 1) and the MMLU analog (Table 4).
+
+use anyhow::{bail, Result};
+
+use crate::data::corpus::World;
+use crate::data::tasks::{gen_mmlu, gen_suite, McItem, ZEROSHOT_SUITES};
+use crate::eval::fwd::ModelRef;
+use crate::runtime::Runtime;
+use crate::util::stats::logsumexp;
+
+/// A sequence to score: ctx followed by option tokens.
+struct Scored {
+    tokens: Vec<i32>,
+    /// score positions: predict tokens[p+1] at p for p in score_from..end-1
+    score_from: usize,
+}
+
+/// Batched option log-likelihood scoring.
+///
+/// Packs one sequence per batch row (padded with 0), runs the eval-geometry
+/// forward, and sums log p(option tokens). Returns per-item accuracy.
+pub fn eval_items(
+    rt: &Runtime,
+    model: &ModelRef,
+    items: &[McItem],
+) -> Result<f64> {
+    let cfg = rt.manifest.preset(model.preset())?.config.clone();
+    let (bsz, ctx, v) = (cfg.eval_batch, cfg.eval_ctx, cfg.vocab);
+
+    // flatten items into scoring jobs
+    let mut jobs: Vec<Scored> = Vec::new();
+    for it in items {
+        for opt in &it.options {
+            let mut tokens = it.ctx.clone();
+            let score_from = tokens.len() - 1;
+            tokens.extend_from_slice(opt);
+            if tokens.len() > ctx {
+                bail!("item length {} exceeds eval ctx {ctx}", tokens.len());
+            }
+            jobs.push(Scored { tokens, score_from });
+        }
+    }
+
+    let mut scores = vec![0f64; jobs.len()];
+    for (chunk_i, chunk) in jobs.chunks(bsz).enumerate() {
+        let mut x = vec![0i32; bsz * ctx];
+        for (row, job) in chunk.iter().enumerate() {
+            x[row * ctx..row * ctx + job.tokens.len()]
+                .copy_from_slice(&job.tokens);
+        }
+        let logits = model.logits(rt, &x)?;
+        for (row, job) in chunk.iter().enumerate() {
+            let mut ll = 0f64;
+            for p in job.score_from..job.tokens.len() - 1 {
+                let rowbase = (row * ctx + p) * v;
+                let lrow = &logits[rowbase..rowbase + v];
+                let y = job.tokens[p + 1] as usize;
+                ll += lrow[y] as f64 - logsumexp(lrow);
+            }
+            scores[chunk_i * bsz + row] = ll;
+        }
+    }
+
+    // rank options per item
+    let mut correct = 0usize;
+    let mut cursor = 0usize;
+    for it in items {
+        let k = it.options.len();
+        let s = &scores[cursor..cursor + k];
+        cursor += k;
+        let mut best = 0usize;
+        for (i, &x) in s.iter().enumerate() {
+            if x > s[best] {
+                best = i;
+            }
+        }
+        if best == it.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+/// Accuracy per zero-shot suite + the average (paper Table 1 columns).
+pub fn eval_zeroshot(
+    rt: &Runtime,
+    model: &ModelRef,
+    world: &World,
+    per_suite: usize,
+    seed: u64,
+) -> Result<(Vec<(String, f64)>, f64)> {
+    let mut rows = Vec::new();
+    let mut total = 0f64;
+    for suite in ZEROSHOT_SUITES {
+        let items = gen_suite(world, suite, per_suite, seed);
+        let acc = eval_items(rt, model, &items)?;
+        total += acc;
+        rows.push((suite.to_string(), acc));
+    }
+    let avg = total / ZEROSHOT_SUITES.len() as f64;
+    Ok((rows, avg))
+}
+
+/// MMLU-analog accuracy (few-shot).
+pub fn eval_mmlu(
+    rt: &Runtime,
+    model: &ModelRef,
+    world: &World,
+    seed: u64,
+) -> Result<f64> {
+    let items = gen_mmlu(world, 4, 24, 2, seed);
+    eval_items(rt, model, &items)
+}

@@ -1,0 +1,119 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §6 index).
+//! Shared plumbing: a context that caches the pretrained fp model and sweep
+//! results under runs/, plus a markdown table printer.
+
+pub mod sweeps;
+pub mod tables;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::pretrain::{pretrain, PretrainOpts};
+use crate::data::corpus::{domain_redpajama, World};
+use crate::data::loader::LmLoader;
+use crate::model::checkpoint::FpCheckpoint;
+use crate::runtime::Runtime;
+
+/// Shared experiment context: runtime + world + on-disk caches.
+pub struct ExpCtx {
+    pub rt: Runtime,
+    pub world: World,
+    pub runs_dir: PathBuf,
+    /// pretraining steps per preset (tiny models learn fast)
+    pub pretrain_steps: usize,
+}
+
+impl ExpCtx {
+    pub fn new(artifacts_dir: &str, runs_dir: &str) -> Result<ExpCtx> {
+        let rt = Runtime::new(artifacts_dir)?;
+        std::fs::create_dir_all(runs_dir)?;
+        Ok(ExpCtx {
+            rt,
+            world: World::new(512, 7),
+            runs_dir: runs_dir.into(),
+            pretrain_steps: 300,
+        })
+    }
+
+    /// World sized for a given preset's vocab.
+    pub fn world_for(&self, preset: &str) -> Result<World> {
+        let v = self.rt.manifest.preset(preset)?.config.vocab;
+        Ok(World::new(v, 7))
+    }
+
+    /// Pretrained fp params, cached at runs/{preset}-fp.eqt.
+    pub fn pretrained(&self, preset: &str) -> Result<Vec<f32>> {
+        let path = self.runs_dir.join(format!("{preset}-fp.eqt"));
+        if path.exists() {
+            let ck = FpCheckpoint::load(&path)?;
+            if ck.preset == preset {
+                return Ok(ck.params);
+            }
+        }
+        let cfg = self.rt.manifest.preset(preset)?.config.clone();
+        let world = self.world_for(preset)?;
+        let mut loader = LmLoader::new(&world, &domain_redpajama(), 11,
+                                       cfg.e2e_batch, cfg.e2e_ctx);
+        let opts = PretrainOpts {
+            steps: self.pretrain_steps,
+            lr: 3e-3,
+            seed: 5,
+            log_every: 50,
+        };
+        let (params, report) = pretrain(&self.rt, preset, &mut loader,
+                                        &opts)?;
+        crate::info!(
+            "pretrained {preset}: loss {:.3} -> {:.3} in {:.1}s",
+            report.losses[0],
+            report.losses.last().unwrap(),
+            report.seconds
+        );
+        FpCheckpoint { preset: preset.into(), params: params.clone(),
+                       step: opts.steps }
+            .save(&path)?;
+        // persist the loss curve for the end-to-end driver's record
+        let curve: Vec<String> =
+            report.losses.iter().map(|l| format!("{l:.4}")).collect();
+        std::fs::write(
+            self.runs_dir.join(format!("{preset}-pretrain-loss.csv")),
+            curve.join("\n"),
+        )?;
+        Ok(params)
+    }
+}
+
+/// Render a markdown table.
+pub fn md_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str("| ");
+    out.push_str(&headers.join(" | "));
+    out.push_str(" |\n|");
+    for _ in headers {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for r in rows {
+        out.push_str("| ");
+        out.push_str(&r.join(" | "));
+        out.push_str(" |\n");
+    }
+    out
+}
+
+pub fn fmt(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn md_table_renders() {
+        let t = md_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert!(t.lines().count() == 3);
+    }
+}

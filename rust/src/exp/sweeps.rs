@@ -1,0 +1,223 @@
+//! The shared method x scheme sweep behind Tables 1, 2, 3 and Fig 1a:
+//! quantize one pretrained model with every method, evaluate zero-shot
+//! accuracy (5 suites) and wiki/c4 perplexity. Results are cached as JSON
+//! under runs/ so t1/t2/t3/fig1 render from one run.
+
+use anyhow::Result;
+
+use crate::baselines::naive_qat::run_naive_qat;
+use crate::baselines::ptq::{ptq_quantize_model, PtqMethod};
+use crate::config::{QuantScheme, TrainHp, TrainableSet};
+use crate::coordinator::pipeline::{efficient_qat, PhaseToggle};
+use crate::data::corpus::{domain_c4, domain_redpajama, domain_wiki};
+use crate::data::loader::LmLoader;
+use crate::eval::fwd::ModelRef;
+use crate::eval::ppl::perplexity;
+use crate::eval::zeroshot::eval_zeroshot;
+use crate::exp::ExpCtx;
+use crate::util::json::Json;
+
+pub const EVAL_ITEMS_PER_SUITE: usize = 40;
+pub const EVAL_PPL_BATCHES: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub bits: u32,
+    pub group: usize,
+    pub accs: Vec<(String, f64)>,
+    pub acc_avg: f64,
+    pub ppl_wiki: f64,
+    pub ppl_c4: f64,
+    pub seconds: f64,
+}
+
+impl MethodResult {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("bits", Json::num(self.bits as f64)),
+            ("group", Json::num(self.group as f64)),
+            (
+                "accs",
+                Json::arr(
+                    self.accs
+                        .iter()
+                        .map(|(n, a)| {
+                            Json::arr(vec![Json::str(n.clone()),
+                                           Json::num(*a)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("acc_avg", Json::num(self.acc_avg)),
+            ("ppl_wiki", Json::num(self.ppl_wiki)),
+            ("ppl_c4", Json::num(self.ppl_c4)),
+            ("seconds", Json::num(self.seconds)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<MethodResult> {
+        let mut accs = Vec::new();
+        for a in j.get("accs")?.as_arr()? {
+            let pair = a.as_arr()?;
+            accs.push((pair[0].as_str()?.to_string(), pair[1].as_f64()?));
+        }
+        Ok(MethodResult {
+            method: j.get("method")?.as_str()?.to_string(),
+            bits: j.get("bits")?.as_usize()? as u32,
+            group: j.get("group")?.as_usize()?,
+            accs,
+            acc_avg: j.get("acc_avg")?.as_f64()?,
+            ppl_wiki: j.get("ppl_wiki")?.as_f64()?,
+            ppl_c4: j.get("ppl_c4")?.as_f64()?,
+            seconds: j.get("seconds")?.as_f64()?,
+        })
+    }
+}
+
+/// Evaluate one model: (per-suite accs, avg, ppl wiki, ppl c4).
+pub fn eval_model(
+    ctx: &ExpCtx,
+    model: &ModelRef,
+) -> Result<(Vec<(String, f64)>, f64, f64, f64)> {
+    let world = ctx.world_for(model.preset())?;
+    let (accs, avg) =
+        eval_zeroshot(&ctx.rt, model, &world, EVAL_ITEMS_PER_SUITE, 1234)?;
+    let ppl_w = perplexity(&ctx.rt, model, &world, &domain_wiki(),
+                           EVAL_PPL_BATCHES, 777)?;
+    let ppl_c = perplexity(&ctx.rt, model, &world, &domain_c4(),
+                           EVAL_PPL_BATCHES, 778)?;
+    Ok((accs, avg, ppl_w, ppl_c))
+}
+
+pub const SWEEP_METHODS: [&str; 7] = [
+    "RTN", "GPTQ", "AWQ", "OmniQ-like", "AutoRound-like", "NaiveQAT",
+    "EfficientQAT",
+];
+
+/// Quantize with one named method.
+pub fn quantize_with(
+    ctx: &ExpCtx,
+    preset: &str,
+    params: &[f32],
+    sch: QuantScheme,
+    method: &str,
+) -> Result<crate::model::quantized::QuantizedModel> {
+    let world = ctx.world_for(preset)?;
+    let dom = domain_redpajama();
+    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let hp = TrainHp::default();
+    let cal_pool = || {
+        let n = (hp.block_samples + cfg.block_batch - 1) / cfg.block_batch;
+        LmLoader::new(&world, &dom, hp.seed ^ 0xB10C, cfg.block_batch,
+                      cfg.block_ctx)
+            .sample_pool(n)
+    };
+    Ok(match method {
+        "RTN" => crate::coordinator::block_ap::rtn_quantize_model(
+            &ctx.rt, preset, params, sch)?,
+        "GPTQ" => ptq_quantize_model(&ctx.rt, preset, params, sch,
+                                     &cal_pool(), PtqMethod::Gptq, 512)?,
+        "AWQ" => ptq_quantize_model(&ctx.rt, preset, params, sch,
+                                    &cal_pool(), PtqMethod::Awq, 512)?,
+        "OmniQ-like" => {
+            // block-wise training of (s, z) only, no E2E phase
+            let mut h = hp.clone();
+            h.trainable = TrainableSet::SZ;
+            efficient_qat(&ctx.rt, preset, params, sch, &h, &world, &dom,
+                          PhaseToggle { block_ap: true, e2e_qp: false })?
+                .0
+        }
+        "AutoRound-like" => {
+            let mut h = hp.clone();
+            h.trainable = TrainableSet::Round;
+            efficient_qat(&ctx.rt, preset, params, sch, &h, &world, &dom,
+                          PhaseToggle { block_ap: true, e2e_qp: false })?
+                .0
+        }
+        "NaiveQAT" => {
+            let n = (hp.e2e_samples + cfg.e2e_batch - 1) / cfg.e2e_batch;
+            let pool = LmLoader::new(&world, &dom, hp.seed ^ 0xAA7,
+                                     cfg.e2e_batch, cfg.e2e_ctx)
+                .sample_pool(n);
+            run_naive_qat(&ctx.rt, preset, params, sch, &pool, 1,
+                          hp.e2e_lr)?
+                .0
+        }
+        "EfficientQAT" => {
+            efficient_qat(&ctx.rt, preset, params, sch, &hp, &world, &dom,
+                          PhaseToggle::default())?
+                .0
+        }
+        _ => anyhow::bail!("unknown method {method}"),
+    })
+}
+
+/// Full sweep with JSON caching. Schemes: the presets' main grid.
+pub fn method_sweep(ctx: &ExpCtx, preset: &str)
+                    -> Result<Vec<MethodResult>> {
+    let cache = ctx.runs_dir.join(format!("sweep-{preset}.json"));
+    if cache.exists() {
+        let j = Json::parse(&std::fs::read_to_string(&cache)?)?;
+        return j.as_arr()?.iter().map(MethodResult::from_json).collect();
+    }
+
+    let params = ctx.pretrained(preset)?;
+    let mut results = Vec::new();
+
+    // FP16 reference
+    let t0 = std::time::Instant::now();
+    let fp = ModelRef::Fp { preset, params: &params };
+    let (accs, avg, pw, pc) = eval_model(ctx, &fp)?;
+    results.push(MethodResult {
+        method: "FP16".into(), bits: 16, group: 0,
+        accs, acc_avg: avg, ppl_wiki: pw, ppl_c4: pc,
+        seconds: t0.elapsed().as_secs_f64(),
+    });
+
+    let g = ctx.rt.manifest.preset(preset)?.config.default_group;
+    let mut schemes =
+        vec![QuantScheme::new(4, g), QuantScheme::new(3, g),
+             QuantScheme::new(2, g)];
+    // the paper's extra 2-bit finer-group row
+    let groups = &ctx.rt.manifest.preset(preset)?.config.group_sizes;
+    if let Some(&g2) = groups.iter().find(|&&x| x > g) {
+        schemes.push(QuantScheme::new(2, g2));
+    }
+
+    for sch in schemes {
+        for method in SWEEP_METHODS {
+            // NaiveQAT only at 2-bit (the paper's Table 2 regime) and only
+            // at the default group: its artifact (e2e_full_step) is lowered
+            // once per preset (train.DEFAULT_GROUP_ONLY)
+            if method == "NaiveQAT" && (sch.bits != 2 || sch.group != g) {
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            let qm = quantize_with(ctx, preset, &params, sch, method)?;
+            let (accs, avg, pw, pc) =
+                eval_model(ctx, &ModelRef::Quant(&qm))?;
+            crate::info!(
+                "sweep[{preset}] {method} {}: acc {avg:.3} pplw {pw:.2} \
+                 ({:.1}s)",
+                sch.tag(),
+                t0.elapsed().as_secs_f64()
+            );
+            results.push(MethodResult {
+                method: method.into(),
+                bits: sch.bits,
+                group: sch.group,
+                accs,
+                acc_avg: avg,
+                ppl_wiki: pw,
+                ppl_c4: pc,
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    let j = Json::arr(results.iter().map(|r| r.to_json()).collect());
+    std::fs::write(&cache, j.dump())?;
+    Ok(results)
+}

@@ -1,0 +1,5 @@
+//! Pure-Rust deployment path: packed low-bit linears (Table 10), the
+//! KV-cached engine, and the generation loop.
+pub mod engine;
+pub mod generate;
+pub mod qlinear;

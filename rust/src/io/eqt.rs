@@ -1,0 +1,310 @@
+//! `.eqt` checkpoint container (safetensors-style): JSON header + raw bytes.
+//!
+//! Layout on disk:
+//!   [0..8)   magic  b"EQAT\x00\x01\x00\x00"  (version 1)
+//!   [8..16)  u64 LE header length H
+//!   [16..16+H)  JSON: {"tensors": {name: {dtype, shape, offset, nbytes}},
+//!                      "meta": {string: string}}
+//!   [16+H..) raw little-endian data, offsets relative to data start
+//!
+//! Stores fp checkpoints (f32), packed quantized models (u32 bitstreams,
+//! f16-as-u16 scales) and optimizer state. Round-trips bit-exactly (tested).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: [u8; 8] = *b"EQAT\x00\x01\x00\x00";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EqtDtype {
+    F32,
+    I32,
+    U32,
+    U16,
+}
+
+impl EqtDtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            EqtDtype::F32 => "f32",
+            EqtDtype::I32 => "i32",
+            EqtDtype::U32 => "u32",
+            EqtDtype::U16 => "u16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => EqtDtype::F32,
+            "i32" => EqtDtype::I32,
+            "u32" => EqtDtype::U32,
+            "u16" => EqtDtype::U16,
+            _ => bail!("unknown eqt dtype {s}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            EqtDtype::U16 => 2,
+            _ => 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EqtTensor {
+    pub dtype: EqtDtype,
+    pub shape: Vec<usize>,
+    pub bytes: Vec<u8>,
+}
+
+impl EqtTensor {
+    pub fn f32(shape: &[usize], data: &[f32]) -> EqtTensor {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        EqtTensor { dtype: EqtDtype::F32, shape: shape.to_vec(), bytes }
+    }
+
+    pub fn u32(shape: &[usize], data: &[u32]) -> EqtTensor {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        EqtTensor { dtype: EqtDtype::U32, shape: shape.to_vec(), bytes }
+    }
+
+    pub fn u16(shape: &[usize], data: &[u16]) -> EqtTensor {
+        let mut bytes = Vec::with_capacity(data.len() * 2);
+        for x in data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        EqtTensor { dtype: EqtDtype::U16, shape: shape.to_vec(), bytes }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != EqtDtype::F32 {
+            bail!("tensor is {}, wanted f32", self.dtype.name());
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_u32(&self) -> Result<Vec<u32>> {
+        if self.dtype != EqtDtype::U32 {
+            bail!("tensor is {}, wanted u32", self.dtype.name());
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_u16(&self) -> Result<Vec<u16>> {
+        if self.dtype != EqtDtype::U16 {
+            bail!("tensor is {}, wanted u16", self.dtype.name());
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes([c[0], c[1]]))
+            .collect())
+    }
+}
+
+/// In-memory checkpoint: ordered tensors + string metadata.
+#[derive(Debug, Default)]
+pub struct Eqt {
+    pub tensors: BTreeMap<String, EqtTensor>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Eqt {
+    pub fn new() -> Eqt {
+        Eqt::default()
+    }
+
+    pub fn insert_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        self.tensors.insert(name.into(), EqtTensor::f32(shape, data));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&EqtTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("checkpoint has no tensor '{name}'"))
+    }
+
+    pub fn f32_vec(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.to_f32()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut header = BTreeMap::new();
+        let mut offset = 0usize;
+        for (name, t) in &self.tensors {
+            header.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("dtype", Json::str(t.dtype.name())),
+                    (
+                        "shape",
+                        Json::arr(
+                            t.shape.iter().map(|&d| Json::num(d as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("offset", Json::num(offset as f64)),
+                    ("nbytes", Json::num(t.bytes.len() as f64)),
+                ]),
+            );
+            offset += t.bytes.len();
+        }
+        let meta = Json::Obj(
+            self.meta
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                .collect(),
+        );
+        let head = Json::obj(vec![
+            ("tensors", Json::Obj(header)),
+            ("meta", meta),
+        ])
+        .dump();
+
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path.as_ref()).with_context(|| {
+                format!("create {}", path.as_ref().display())
+            })?,
+        );
+        f.write_all(&MAGIC)?;
+        f.write_all(&(head.len() as u64).to_le_bytes())?;
+        f.write_all(head.as_bytes())?;
+        for t in self.tensors.values() {
+            f.write_all(&t.bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Eqt> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref()).with_context(|| {
+                format!("open {}", path.as_ref().display())
+            })?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            bail!("{} is not an .eqt file", path.as_ref().display());
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut head = vec![0u8; hlen];
+        f.read_exact(&mut head)?;
+        let j = Json::parse(std::str::from_utf8(&head)?)?;
+
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+
+        let mut out = Eqt::new();
+        for (name, tj) in j.get("tensors")?.as_obj()? {
+            let off = tj.get("offset")?.as_usize()?;
+            let nbytes = tj.get("nbytes")?.as_usize()?;
+            if off + nbytes > data.len() {
+                bail!("tensor '{name}' out of bounds");
+            }
+            out.tensors.insert(
+                name.clone(),
+                EqtTensor {
+                    dtype: EqtDtype::parse(tj.get("dtype")?.as_str()?)?,
+                    shape: tj.get("shape")?.usize_list()?,
+                    bytes: data[off..off + nbytes].to_vec(),
+                },
+            );
+        }
+        for (k, v) in j.get("meta")?.as_obj()? {
+            out.meta.insert(k.clone(), v.as_str()?.to_string());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("eqt_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let mut r = Rng::new(1);
+        let mut ck = Eqt::new();
+        let mut data = vec![0.0f32; 1000];
+        r.fill_normal(&mut data, 0.0, 1.0);
+        ck.insert_f32("params", &[10, 100], &data);
+        ck.tensors.insert(
+            "packed".into(),
+            EqtTensor::u32(&[3], &[0xdeadbeef, 0, u32::MAX]),
+        );
+        ck.tensors.insert(
+            "scales".into(),
+            EqtTensor::u16(&[2, 2], &[1, 2, 3, 0xffff]),
+        );
+        ck.meta.insert("preset".into(), "tiny".into());
+        ck.meta.insert("bits".into(), "2".into());
+
+        let p = tmp("roundtrip");
+        ck.save(&p).unwrap();
+        let back = Eqt::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+
+        assert_eq!(back.f32_vec("params").unwrap(), data);
+        assert_eq!(
+            back.get("packed").unwrap().to_u32().unwrap(),
+            vec![0xdeadbeef, 0, u32::MAX]
+        );
+        assert_eq!(
+            back.get("scales").unwrap().to_u16().unwrap(),
+            vec![1, 2, 3, 0xffff]
+        );
+        assert_eq!(back.get("params").unwrap().shape, vec![10, 100]);
+        assert_eq!(back.meta["preset"], "tiny");
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let p = tmp("badmagic");
+        std::fs::write(&p, b"NOTEQAT!plusmore").unwrap();
+        assert!(Eqt::load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ck = Eqt::new();
+        assert!(ck.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = EqtTensor::u32(&[1], &[5]);
+        assert!(t.to_f32().is_err());
+        assert!(t.to_u16().is_err());
+        assert!(t.to_u32().is_ok());
+    }
+}

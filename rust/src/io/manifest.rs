@@ -1,0 +1,352 @@
+//! artifacts/manifest.json model: presets, flat-buffer layouts, artifact
+//! argument specs. This file is the single source of truth for all shapes -
+//! produced by python/compile/aot.py, consumed everywhere in the coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor inside a flat f32 buffer.
+#[derive(Clone, Debug)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LayoutEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered (name -> offset/shape) map over one flat f32 vector. Mirrors
+/// python/compile/model.py::Layout.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub entries: Vec<LayoutEntry>,
+    pub size: usize,
+    index: BTreeMap<String, usize>,
+}
+
+impl Layout {
+    pub fn new(entries: Vec<LayoutEntry>) -> Layout {
+        let size = entries
+            .last()
+            .map(|e| e.offset + e.numel())
+            .unwrap_or(0);
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Layout { entries, size, index }
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&LayoutEntry> {
+        self.index
+            .get(name)
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| anyhow!("layout has no entry '{name}'"))
+    }
+
+    pub fn slice<'a>(&self, flat: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let e = self.entry(name)?;
+        Ok(&flat[e.offset..e.offset + e.numel()])
+    }
+
+    pub fn slice_mut<'a>(
+        &self,
+        flat: &'a mut [f32],
+        name: &str,
+    ) -> Result<&'a mut [f32]> {
+        let e = self.entry(name)?;
+        Ok(&mut flat[e.offset..e.offset + e.numel()])
+    }
+
+    /// Verify entries partition [0, size) exactly (tested invariant).
+    pub fn validate(&self) -> Result<()> {
+        let mut pos = 0usize;
+        for e in &self.entries {
+            if e.offset != pos {
+                bail!("layout gap/overlap before '{}'", e.name);
+            }
+            pos += e.numel();
+        }
+        if pos != self.size {
+            bail!("layout size {} != covered {}", self.size, pos);
+        }
+        Ok(())
+    }
+
+    fn from_json(j: &Json) -> Result<Layout> {
+        let mut entries = Vec::new();
+        for e in j.as_arr()? {
+            entries.push(LayoutEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                offset: e.get("offset")?.as_usize()?,
+                shape: e.get("shape")?.usize_list()?,
+            });
+        }
+        Ok(Layout::new(entries))
+    }
+}
+
+/// Model/batch geometry of one preset (mirrors python configs.Preset).
+#[derive(Clone, Debug)]
+pub struct PresetCfg {
+    pub name: String,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub inter: usize,
+    pub vocab: usize,
+    pub block_batch: usize,
+    pub block_ctx: usize,
+    pub e2e_batch: usize,
+    pub e2e_ctx: usize,
+    pub eval_batch: usize,
+    pub eval_ctx: usize,
+    pub default_group: usize,
+    pub group_sizes: Vec<usize>,
+    pub lora_rank: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+}
+
+impl PresetCfg {
+    fn from_json(j: &Json) -> Result<PresetCfg> {
+        Ok(PresetCfg {
+            name: j.get("name")?.as_str()?.to_string(),
+            dim: j.get("dim")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            head_dim: j.get("head_dim")?.as_usize()?,
+            inter: j.get("inter")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            block_batch: j.get("block_batch")?.as_usize()?,
+            block_ctx: j.get("block_ctx")?.as_usize()?,
+            e2e_batch: j.get("e2e_batch")?.as_usize()?,
+            e2e_ctx: j.get("e2e_ctx")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            eval_ctx: j.get("eval_ctx")?.as_usize()?,
+            default_group: j.get("default_group")?.as_usize()?,
+            group_sizes: j.get("group_sizes")?.usize_list()?,
+            lora_rank: j.get("lora_rank")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+        })
+    }
+
+    /// The 7 quantized linears of one block: (name, out, in).
+    pub fn linears(&self) -> Vec<(&'static str, usize, usize)> {
+        vec![
+            ("attn.q", self.dim, self.dim),
+            ("attn.k", self.dim, self.dim),
+            ("attn.v", self.dim, self.dim),
+            ("attn.o", self.dim, self.dim),
+            ("mlp.gate", self.inter, self.dim),
+            ("mlp.up", self.inter, self.dim),
+            ("mlp.down", self.dim, self.inter),
+        ]
+    }
+}
+
+/// One lowered artifact (HLO text file + typed arg spec).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub preset: String,
+    pub entry: String,
+    pub group: Option<usize>,
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// Parsed manifest: presets (config + layouts) and artifact registry.
+#[derive(Debug)]
+pub struct Manifest {
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub root: std::path::PathBuf,
+}
+
+#[derive(Debug)]
+pub struct PresetInfo {
+    pub config: PresetCfg,
+    pub layouts: BTreeMap<String, Layout>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} - run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, root)
+    }
+
+    pub fn parse(text: &str, root: std::path::PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.get("presets")?.as_obj()? {
+            let config = PresetCfg::from_json(pj.get("config")?)?;
+            let mut layouts = BTreeMap::new();
+            for (lname, lj) in pj.get("layouts")?.as_obj()? {
+                let lay = Layout::from_json(lj)?;
+                lay.validate()
+                    .with_context(|| format!("layout {name}/{lname}"))?;
+                layouts.insert(lname.clone(), lay);
+            }
+            presets.insert(name.clone(), PresetInfo { config, layouts });
+        }
+        let mut artifacts = Vec::new();
+        for aj in j.get("artifacts")?.as_arr()? {
+            let mut args = Vec::new();
+            for arg in aj.get("args")?.as_arr()? {
+                let dt = match arg.get("dtype")?.as_str()? {
+                    "f32" => Dtype::F32,
+                    "s32" => Dtype::I32,
+                    other => bail!("unknown dtype {other}"),
+                };
+                args.push(ArgSpec {
+                    name: arg.get("name")?.as_str()?.to_string(),
+                    shape: arg.get("shape")?.usize_list()?,
+                    dtype: dt,
+                });
+            }
+            let outputs = aj
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| o.as_str().map(String::from))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                preset: aj.get("preset")?.as_str()?.to_string(),
+                entry: aj.get("entry")?.as_str()?.to_string(),
+                group: aj
+                    .opt("group")
+                    .map(|g| g.as_usize())
+                    .transpose()?,
+                file: aj.get("file")?.as_str()?.to_string(),
+                args,
+                outputs,
+            });
+        }
+        Ok(Manifest { presets, artifacts, root })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no preset '{name}'"))
+    }
+
+    pub fn layout(&self, preset: &str, layout: &str) -> Result<&Layout> {
+        self.preset(preset)?
+            .layouts
+            .get(layout)
+            .ok_or_else(|| anyhow!("preset {preset} has no layout '{layout}'"))
+    }
+
+    pub fn artifact(&self, preset: &str, entry: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.preset == preset && a.entry == entry)
+            .ok_or_else(|| {
+                anyhow!("no artifact '{entry}' for preset '{preset}'")
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "presets": {
+        "t": {
+          "config": {"name":"t","dim":8,"n_layers":1,"n_heads":2,
+            "head_dim":4,"inter":16,"vocab":32,"block_batch":1,"block_ctx":4,
+            "e2e_batch":1,"e2e_ctx":4,"eval_batch":1,"eval_ctx":4,
+            "default_group":4,"group_sizes":[4],"lora_rank":2,
+            "rope_theta":10000.0,"norm_eps":1e-5},
+          "layouts": {
+            "fp": [
+              {"name":"a","offset":0,"shape":[2,3]},
+              {"name":"b","offset":6,"shape":[4]}
+            ]
+          }
+        }
+      },
+      "artifacts": [
+        {"preset":"t","entry":"fwd","group":4,"file":"t/fwd.hlo.txt",
+         "args":[{"name":"x","shape":[1,4],"dtype":"s32"}],
+         "outputs":["logits"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, "/tmp".into()).unwrap();
+        let p = m.preset("t").unwrap();
+        assert_eq!(p.config.dim, 8);
+        assert_eq!(p.config.linears().len(), 7);
+        let lay = m.layout("t", "fp").unwrap();
+        assert_eq!(lay.size, 10);
+        let a = m.artifact("t", "fwd").unwrap();
+        assert_eq!(a.args[0].dtype, Dtype::I32);
+        assert_eq!(a.group, Some(4));
+    }
+
+    #[test]
+    fn layout_slice_and_validate() {
+        let lay = Layout::new(vec![
+            LayoutEntry { name: "a".into(), offset: 0, shape: vec![2, 2] },
+            LayoutEntry { name: "b".into(), offset: 4, shape: vec![3] },
+        ]);
+        lay.validate().unwrap();
+        let flat: Vec<f32> = (0..7).map(|x| x as f32).collect();
+        assert_eq!(lay.slice(&flat, "b").unwrap(), &[4.0, 5.0, 6.0]);
+        assert!(lay.slice(&flat, "nope").is_err());
+    }
+
+    #[test]
+    fn layout_gap_detected() {
+        let lay = Layout::new(vec![
+            LayoutEntry { name: "a".into(), offset: 0, shape: vec![2] },
+            LayoutEntry { name: "b".into(), offset: 3, shape: vec![1] },
+        ]);
+        assert!(lay.validate().is_err());
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let m = Manifest::parse(SAMPLE, "/tmp".into()).unwrap();
+        assert!(m.preset("x").is_err());
+        assert!(m.artifact("t", "nope").is_err());
+        assert!(m.layout("t", "nope").is_err());
+    }
+}

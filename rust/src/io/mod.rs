@@ -1,0 +1,3 @@
+//! On-disk formats: .eqt checkpoint container and the artifact manifest.
+pub mod eqt;
+pub mod manifest;

@@ -1,0 +1,17 @@
+//! EfficientQAT reproduction: Rust coordinator over AOT-compiled JAX/Pallas
+//! artifacts (see DESIGN.md for the three-layer architecture).
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod infer;
+pub mod io;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

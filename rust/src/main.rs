@@ -1,0 +1,187 @@
+//! `eqat` - the EfficientQAT coordinator CLI (leader entrypoint).
+//! See `eqat help` / rust/src/cli.rs for the command surface.
+
+use anyhow::{bail, Result};
+
+use efficientqat::cli::{parse, Cli, USAGE};
+use efficientqat::config::{QuantScheme, TrainHp, TrainableSet};
+use efficientqat::coordinator::pipeline::{efficient_qat, PhaseToggle};
+use efficientqat::coordinator::pretrain::{pretrain, PretrainOpts};
+use efficientqat::data::corpus::domain_redpajama;
+use efficientqat::data::loader::LmLoader;
+use efficientqat::eval::fwd::ModelRef;
+use efficientqat::exp::{tables, ExpCtx};
+use efficientqat::infer::engine::Engine;
+use efficientqat::infer::generate::{generate, Sampler};
+use efficientqat::model::checkpoint::FpCheckpoint;
+use efficientqat::model::quantized::QuantizedModel;
+use efficientqat::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx(cli: &Cli) -> Result<ExpCtx> {
+    ExpCtx::new(&cli.flag_or("artifacts", "artifacts"),
+                &cli.flag_or("runs", "runs"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    if args.is_empty() || args[0] == "help" || args[0] == "--help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cli = parse(args)?;
+    let preset = cli.flag_or("preset", "tiny");
+
+    match cli.cmd.as_str() {
+        "pretrain" => {
+            let c = ctx(&cli)?;
+            let cfg = c.rt.manifest.preset(&preset)?.config.clone();
+            let world = c.world_for(&preset)?;
+            let mut loader = LmLoader::new(&world, &domain_redpajama(), 11,
+                                           cfg.e2e_batch, cfg.e2e_ctx);
+            let opts = PretrainOpts {
+                steps: cli.flag_usize("steps", 300)?,
+                lr: cli.flag_f64("lr", 3e-3)?,
+                seed: cli.flag_usize("seed", 5)? as u64,
+                log_every: 20,
+            };
+            let (params, report) = pretrain(&c.rt, &preset, &mut loader,
+                                            &opts)?;
+            let out = cli.flag_or("out", &format!("runs/{preset}-fp.eqt"));
+            FpCheckpoint { preset: preset.clone(), params,
+                           step: opts.steps }
+                .save(&out)?;
+            println!("saved {out}; final loss {:.4} ({:.1}s)",
+                     report.losses.last().unwrap(), report.seconds);
+        }
+        "quantize" => {
+            let c = ctx(&cli)?;
+            let params = c.pretrained(&preset)?;
+            let cfg = c.rt.manifest.preset(&preset)?.config.clone();
+            let bits = cli.flag_usize("bits", 2)? as u32;
+            let group = cli.flag_usize("group", cfg.default_group)?;
+            let sch = QuantScheme::new(bits, group);
+            let mut hp = TrainHp::default();
+            if let Some(t) = cli.flag("trainable") {
+                hp.trainable = TrainableSet::parse(t)?;
+            }
+            let world = c.world_for(&preset)?;
+            let phases = PhaseToggle {
+                block_ap: !cli.flag_bool("no-block-ap"),
+                e2e_qp: !cli.flag_bool("no-e2e"),
+            };
+            let (mut qm, report) = efficient_qat(
+                &c.rt, &preset, &params, sch, &hp, &world,
+                &domain_redpajama(), phases)?;
+            qm.round_scales_f16();
+            let out = cli.flag_or(
+                "out", &format!("runs/{preset}-{}.eqt", sch.tag()));
+            qm.save(&out)?;
+            println!(
+                "saved {out} ({:.2} MB packed) in {:.1}s",
+                qm.packed_bytes() as f64 / 1e6,
+                report.total_seconds
+            );
+        }
+        "eval" => {
+            let c = ctx(&cli)?;
+            let (accs, avg, pw, pc) = match cli.flag("model") {
+                Some(path) => {
+                    let qm = QuantizedModel::load(path)?;
+                    efficientqat::exp::sweeps::eval_model(
+                        &c, &ModelRef::Quant(&qm))?
+                }
+                None => {
+                    let params = c.pretrained(&preset)?;
+                    efficientqat::exp::sweeps::eval_model(
+                        &c, &ModelRef::Fp { preset: &preset,
+                                            params: &params })?
+                }
+            };
+            for (n, a) in &accs {
+                println!("{n:>12}: {:.1}%", 100.0 * a);
+            }
+            println!("{:>12}: {:.1}%", "average", 100.0 * avg);
+            println!("{:>12}: {pw:.2}", "wiki ppl");
+            println!("{:>12}: {pc:.2}", "c4 ppl");
+        }
+        "generate" => {
+            let c = ctx(&cli)?;
+            let path = cli
+                .flag("model")
+                .ok_or_else(|| anyhow::anyhow!("--model FILE required"))?;
+            let qm = QuantizedModel::load(path)?;
+            let info = c.rt.manifest.preset(&qm.preset)?;
+            let cfg = &info.config;
+            let mut eng = Engine::new(&qm, info, cfg.eval_ctx)?;
+            let world = c.world_for(&qm.preset)?;
+            let prompt: Vec<i32> =
+                vec![0, world.topic_tokens(0)[0], world.topic_tokens(0)[1]];
+            let n = cli.flag_usize("tokens", 48)?;
+            let temp = cli.flag_f64("temp", 0.8)? as f32;
+            let rep = generate(&mut eng, &prompt, n,
+                               Sampler::Temperature(temp), 7)?;
+            println!("prompt {prompt:?} -> {:?}", rep.tokens);
+            println!(
+                "prefill {:.1}ms, decode {:.1} tok/s",
+                rep.prefill_secs * 1e3,
+                rep.decode_tok_per_sec
+            );
+        }
+        "size" => {
+            let name = cli.flag_or("model", "llama2-7b");
+            let shape = efficientqat::config::llama_by_name(&name)?;
+            println!(
+                "{} fp16: {:.2} GiB",
+                shape.name,
+                efficientqat::quant::size::fp16_size_gib(&shape)
+            );
+            for bits in [4u32, 3, 2] {
+                for group in [32usize, 64, 128] {
+                    let r = efficientqat::quant::size::report(
+                        &shape, QuantScheme::new(bits, group));
+                    println!(
+                        "  w{bits}g{group}: {:.2} bits/param, {:.2} GiB, \
+                         {:.2}% compression",
+                        r.bits_per_param, r.size_gib, r.compression_pct
+                    );
+                }
+            }
+        }
+        "exp" => {
+            let id = cli
+                .pos
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("exp wants an id (t1...)"))?;
+            let c = ctx(&cli)?;
+            tables::run(&c, id, &preset)?;
+        }
+        "bench" => {
+            let which = cli.pos.first().map(String::as_str).unwrap_or("");
+            match which {
+                "qlinear" => {
+                    let md = efficientqat::bench::qlinear_speed_table(
+                        cli.flag_bool("fast"))?;
+                    println!("{md}");
+                    std::fs::create_dir_all("runs")?;
+                    std::fs::write("runs/t10-qlinear.md", md)?;
+                }
+                "train-time" => {
+                    let c = ctx(&cli)?;
+                    tables::run(&c, "t8", &preset)?;
+                    tables::run(&c, "t9", &preset)?;
+                }
+                _ => bail!("bench wants: qlinear | train-time"),
+            }
+        }
+        other => bail!("unknown command '{other}'; try `eqat help`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Full-precision checkpoints: flat params (+ optional Adam state) in .eqt.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::io::eqt::Eqt;
+
+pub struct FpCheckpoint {
+    pub preset: String,
+    pub params: Vec<f32>,
+    pub step: usize,
+}
+
+impl FpCheckpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut ck = Eqt::new();
+        ck.insert_f32("params", &[self.params.len()], &self.params);
+        ck.meta.insert("kind".into(), "fp".into());
+        ck.meta.insert("preset".into(), self.preset.clone());
+        ck.meta.insert("step".into(), self.step.to_string());
+        ck.save(path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<FpCheckpoint> {
+        let ck = Eqt::load(path)?;
+        if ck.meta.get("kind").map(String::as_str) != Some("fp") {
+            bail!("not an fp checkpoint");
+        }
+        Ok(FpCheckpoint {
+            preset: ck.meta.get("preset").cloned().unwrap_or_default(),
+            params: ck.f32_vec("params")?,
+            step: ck
+                .meta
+                .get("step")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = FpCheckpoint {
+            preset: "tiny".into(),
+            params: vec![1.0, -2.5, 3.25],
+            step: 500,
+        };
+        let mut p = std::env::temp_dir();
+        p.push(format!("fp_ck_{}.eqt", std::process::id()));
+        ck.save(&p).unwrap();
+        let back = FpCheckpoint::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.preset, "tiny");
+        assert_eq!(back.step, 500);
+    }
+}

@@ -1,0 +1,63 @@
+//! Parameter initialization for the full-precision model (the substrate we
+//! pretrain before quantizing). Norm weights start at 1.0; linear weights
+//! use Xavier-normal; embeddings/head use std 0.02 (GPT convention).
+
+use crate::io::manifest::Layout;
+use crate::util::rng::Rng;
+
+pub fn init_fp_params(layout: &Layout, seed: u64) -> Vec<f32> {
+    let mut flat = vec![0f32; layout.size];
+    let mut rng = Rng::new(seed).fork("init");
+    for e in &layout.entries {
+        let buf = &mut flat[e.offset..e.offset + e.numel()];
+        if e.name.ends_with("norm") {
+            buf.fill(1.0);
+        } else if e.name == "embed" || e.name == "head" {
+            rng.fill_normal(buf, 0.0, 0.02);
+        } else {
+            // linear (out, in): Xavier normal
+            let (o, i) = (e.shape[0], e.shape[1]);
+            let std = (2.0 / (o + i) as f32).sqrt();
+            rng.fill_normal(buf, 0.0, std);
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::manifest::{Layout, LayoutEntry};
+
+    fn layout() -> Layout {
+        Layout::new(vec![
+            LayoutEntry { name: "embed".into(), offset: 0,
+                          shape: vec![32, 8] },
+            LayoutEntry { name: "blocks.0.attn_norm".into(), offset: 256,
+                          shape: vec![8] },
+            LayoutEntry { name: "blocks.0.attn.q".into(), offset: 264,
+                          shape: vec![8, 8] },
+        ])
+    }
+
+    #[test]
+    fn norms_are_one_weights_random() {
+        let l = layout();
+        let p = init_fp_params(&l, 3);
+        let norm = l.slice(&p, "blocks.0.attn_norm").unwrap();
+        assert!(norm.iter().all(|&x| x == 1.0));
+        let q = l.slice(&p, "blocks.0.attn.q").unwrap();
+        assert!(q.iter().any(|&x| x != 0.0));
+        // Xavier scale sanity
+        let var: f32 =
+            q.iter().map(|x| x * x).sum::<f32>() / q.len() as f32;
+        assert!(var < 0.5, "var={var}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let l = layout();
+        assert_eq!(init_fp_params(&l, 3), init_fp_params(&l, 3));
+        assert_ne!(init_fp_params(&l, 3), init_fp_params(&l, 4));
+    }
+}

@@ -1,0 +1,4 @@
+//! Model-side host logic: init, checkpoints, the quantized representation.
+pub mod checkpoint;
+pub mod init;
+pub mod quantized;

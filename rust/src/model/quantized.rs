@@ -1,0 +1,194 @@
+//! Quantized model representation + packed on-disk format.
+//!
+//! In memory the model keeps the runtime-friendly flat f32 buffers (integer
+//! weights as f32 values, qp = [s||z], fp rest) that feed model_fwd_q /
+//! e2e_qp_step directly. On disk it packs to the paper's storage scheme:
+//! N-bit weight ints (bitstream), FP16 step sizes, N-bit zero points -
+//! so file size matches the Table 11 arithmetic, and f16 rounding of s is
+//! applied exactly once (load == what deployment would see).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::config::QuantScheme;
+use crate::io::eqt::{Eqt, EqtTensor};
+use crate::quant::pack::{pack_bits, packed_len, unpack_bits_f32};
+use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+
+#[derive(Clone)]
+pub struct QuantizedModel {
+    pub preset: String,
+    pub scheme: QuantScheme,
+    /// integer weights, values in [0, qmax], wq layout order
+    pub wq: Vec<f32>,
+    /// [s_all || z_all], qp_g{group} layout order
+    pub qp: Vec<f32>,
+    /// fp remainder (embed, norms, head), fpr layout order
+    pub fpr: Vec<f32>,
+}
+
+impl QuantizedModel {
+    /// z half of qp (second half by construction).
+    pub fn z_slice(&self) -> &[f32] {
+        &self.qp[self.qp.len() / 2..]
+    }
+
+    pub fn s_slice(&self) -> &[f32] {
+        &self.qp[..self.qp.len() / 2]
+    }
+
+    /// Logical packed size in bytes (weights + s (f16) + z (N-bit) + fp32
+    /// remainder as fp16): mirrors quant::size accounting for our presets.
+    pub fn packed_bytes(&self) -> usize {
+        let n = self.wq.len();
+        let half = self.qp.len() / 2;
+        let wq_bytes = packed_len(n, self.scheme.bits) * 4;
+        let s_bytes = half * 2;
+        let z_bytes = packed_len(half, self.scheme.bits) * 4;
+        let fpr_bytes = self.fpr.len() * 2;
+        wq_bytes + s_bytes + z_bytes + fpr_bytes
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let half = self.qp.len() / 2;
+        let bits = self.scheme.bits;
+        let to_u8 = |v: &[f32]| -> Result<Vec<u8>> {
+            v.iter()
+                .map(|&x| {
+                    if x < 0.0 || x > self.scheme.qmax() || x.fract() != 0.0 {
+                        bail!("non-integer quantized value {x}");
+                    }
+                    Ok(x as u8)
+                })
+                .collect()
+        };
+        let wq_packed = pack_bits(&to_u8(&self.wq)?, bits)?;
+        let z_packed = pack_bits(&to_u8(&self.qp[half..])?, bits)?;
+        let s_f16: Vec<u16> =
+            self.qp[..half].iter().map(|&s| f32_to_f16_bits(s)).collect();
+
+        let mut ck = Eqt::new();
+        ck.tensors.insert(
+            "wq_packed".into(),
+            EqtTensor::u32(&[wq_packed.len()], &wq_packed),
+        );
+        ck.tensors
+            .insert("s_f16".into(), EqtTensor::u16(&[half], &s_f16));
+        ck.tensors.insert(
+            "z_packed".into(),
+            EqtTensor::u32(&[z_packed.len()], &z_packed),
+        );
+        ck.insert_f32("fpr", &[self.fpr.len()], &self.fpr);
+        ck.meta.insert("kind".into(), "quantized".into());
+        ck.meta.insert("preset".into(), self.preset.clone());
+        ck.meta.insert("bits".into(), bits.to_string());
+        ck.meta.insert("group".into(), self.scheme.group.to_string());
+        ck.meta.insert("n_weights".into(), self.wq.len().to_string());
+        ck.save(path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<QuantizedModel> {
+        let ck = Eqt::load(path)?;
+        if ck.meta.get("kind").map(String::as_str) != Some("quantized") {
+            bail!("not a quantized-model checkpoint");
+        }
+        let bits: u32 = ck.meta["bits"].parse()?;
+        let group: usize = ck.meta["group"].parse()?;
+        let n: usize = ck.meta["n_weights"].parse()?;
+        let scheme = QuantScheme::new(bits, group);
+
+        let wq_packed = ck.get("wq_packed")?.to_u32()?;
+        let mut wq = vec![0f32; n];
+        unpack_bits_f32(&wq_packed, bits, &mut wq);
+
+        let s_f16 = ck.get("s_f16")?.to_u16()?;
+        let half = s_f16.len();
+        let z_packed = ck.get("z_packed")?.to_u32()?;
+        let mut qp = vec![0f32; half * 2];
+        for (i, &h) in s_f16.iter().enumerate() {
+            qp[i] = f16_bits_to_f32(h);
+        }
+        unpack_bits_f32(&z_packed, bits, &mut qp[half..]);
+
+        Ok(QuantizedModel {
+            preset: ck.meta["preset"].clone(),
+            scheme,
+            wq,
+            qp,
+            fpr: ck.f32_vec("fpr")?,
+        })
+    }
+
+    /// Round step sizes through f16 in place (storage precision), so
+    /// in-memory eval matches a save/load cycle.
+    pub fn round_scales_f16(&mut self) {
+        let half = self.qp.len() / 2;
+        for s in self.qp[..half].iter_mut() {
+            *s = crate::util::f16::round_f16(*s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_model() -> QuantizedModel {
+        let mut r = Rng::new(41);
+        let sch = QuantScheme::new(2, 8);
+        let n = 1024;
+        let half = n / 8;
+        let wq: Vec<f32> = (0..n).map(|_| r.below(4) as f32).collect();
+        let mut qp = vec![0f32; half * 2];
+        for i in 0..half {
+            qp[i] = crate::util::f16::round_f16(r.normal_f32(0.05, 0.01).abs());
+            qp[half + i] = r.below(4) as f32;
+        }
+        let mut fpr = vec![0f32; 300];
+        r.fill_normal(&mut fpr, 0.0, 0.5);
+        QuantizedModel { preset: "tiny".into(), scheme: sch, wq, qp, fpr }
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact() {
+        let m = sample_model();
+        let mut p = std::env::temp_dir();
+        p.push(format!("qm_{}.eqt", std::process::id()));
+        m.save(&p).unwrap();
+        let back = QuantizedModel::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back.wq, m.wq);
+        assert_eq!(back.qp, m.qp); // s pre-rounded to f16 -> exact
+        assert_eq!(back.fpr, m.fpr);
+        assert_eq!(back.scheme, m.scheme);
+    }
+
+    #[test]
+    fn packed_bytes_close_to_avg_bits_formula() {
+        let m = sample_model();
+        // weights dominate: n * avg_bits / 8 plus fp16 remainder
+        let want = m.wq.len() as f64 * m.scheme.avg_bits() / 8.0
+            + m.fpr.len() as f64 * 2.0;
+        let got = m.packed_bytes() as f64;
+        assert!((got - want).abs() / want < 0.05, "got {got} want {want}");
+    }
+
+    #[test]
+    fn save_rejects_non_integer_weights() {
+        let mut m = sample_model();
+        m.wq[0] = 1.5;
+        let mut p = std::env::temp_dir();
+        p.push(format!("qm_bad_{}.eqt", std::process::id()));
+        assert!(m.save(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn halves_accessors() {
+        let m = sample_model();
+        assert_eq!(m.s_slice().len(), m.z_slice().len());
+        assert!(m.z_slice().iter().all(|&z| z.fract() == 0.0));
+    }
+}

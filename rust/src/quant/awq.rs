@@ -1,0 +1,188 @@
+//! AWQ-style activation-aware quantization (Lin et al. 2023), adapted.
+//!
+//! Real AWQ folds per-channel weight scales into the preceding elementwise
+//! op; our fixed quantized-model format has no such folding slot for every
+//! linear, so we implement the *activation-aware clip search* component:
+//! per group, search a clip ratio r in {1.0, 0.95, .., 0.5} shrinking the
+//! quantization range, and keep the r minimizing the activation-weighted
+//! weight reconstruction error  sum_k E[x_k^2] (w_k - w_hat_k)^2.
+//! This preserves AWQ's key insight - salient weight channels (large |x|)
+//! deserve finer resolution - within the standard uniform format.
+
+use crate::config::QuantScheme;
+use crate::quant::rtn::GroupParams;
+
+/// Result: quantized ints + clip-searched group params.
+pub struct AwqResult {
+    pub w_int: Vec<f32>,
+    pub gp: GroupParams,
+}
+
+/// `x2_mean[k]` = mean of x_k^2 over calibration tokens (length = in_dim).
+pub fn awq_quantize(
+    w: &[f32],
+    out_dim: usize,
+    in_dim: usize,
+    x2_mean: &[f32],
+    sch: QuantScheme,
+) -> AwqResult {
+    assert_eq!(w.len(), out_dim * in_dim);
+    assert_eq!(x2_mean.len(), in_dim);
+    let g = sch.group;
+    let gpr = in_dim / g;
+    let qmax = sch.qmax();
+    let ratios = [1.0f32, 0.95, 0.9, 0.85, 0.8, 0.7, 0.6, 0.5];
+
+    let mut s_out = vec![0f32; out_dim * gpr];
+    let mut z_out = vec![0f32; out_dim * gpr];
+    let mut w_int = vec![0f32; w.len()];
+
+    for r in 0..out_dim {
+        for gi in 0..gpr {
+            let base = r * in_dim + gi * g;
+            let chunk = &w[base..base + g];
+            let xw = &x2_mean[gi * g..(gi + 1) * g];
+            let mut mn = 0f32;
+            let mut mx = 0f32;
+            for &v in chunk {
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let mut best = (f64::INFINITY, 1e-8f32, 0f32);
+            for &ratio in &ratios {
+                let cmn = mn * ratio;
+                let cmx = mx * ratio;
+                let s = ((cmx - cmn) / qmax).max(1e-8);
+                let z = (-cmn / s).round_ties_even().clamp(0.0, qmax);
+                let mut err = 0f64;
+                for k in 0..g {
+                    let q = (chunk[k] / s).round_ties_even() + z;
+                    let q = q.clamp(0.0, qmax);
+                    let wh = (q - z) * s;
+                    let d = (wh - chunk[k]) as f64;
+                    err += xw[k] as f64 * d * d;
+                }
+                if err < best.0 {
+                    best = (err, s, z);
+                }
+            }
+            let (_, s, z) = best;
+            s_out[r * gpr + gi] = s;
+            z_out[r * gpr + gi] = z;
+            for k in 0..g {
+                let q = (chunk[k] / s).round_ties_even() + z;
+                w_int[base + k] = q.clamp(0.0, qmax);
+            }
+        }
+    }
+    AwqResult {
+        w_int,
+        gp: GroupParams { s: s_out, z: z_out, rows: out_dim,
+                          groups_per_row: gpr },
+    }
+}
+
+/// Column-wise mean of squares of activations X (n, in).
+pub fn x2_mean(x: &[f32], in_dim: usize) -> Vec<f32> {
+    let n = x.len() / in_dim;
+    let mut out = vec![0f32; in_dim];
+    for s in 0..n {
+        for k in 0..in_dim {
+            let v = x[s * in_dim + k];
+            out[k] += v * v;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= n.max(1) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gptq::recon_error;
+    use crate::quant::rtn::{dequantize, fake_quant, minmax_init};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn awq_not_worse_than_rtn_weighted_error() {
+        let (out_d, in_d) = (8, 32);
+        let sch = QuantScheme::new(2, 8);
+        let mut r = Rng::new(21);
+        let mut w = vec![0f32; out_d * in_d];
+        r.fill_normal(&mut w, 0.0, 1.0);
+        // a couple of outlier weights that plain minmax wastes range on
+        for i in 0..out_d {
+            w[i * in_d + 3] *= 6.0;
+        }
+        // salient channels: first half has much larger activations
+        let mut x2 = vec![0.05f32; in_d];
+        for k in 0..in_d / 2 {
+            x2[k] = 4.0;
+        }
+        let res = awq_quantize(&w, out_d, in_d, &x2, sch);
+        let w_awq = dequantize(&res.w_int, &res.gp, sch);
+        let gp = minmax_init(&w, out_d, in_d, sch);
+        let w_rtn = fake_quant(&w, &gp, sch);
+        let werr = |wh: &[f32]| {
+            let mut e = 0f64;
+            for o in 0..out_d {
+                for k in 0..in_d {
+                    let d = (wh[o * in_d + k] - w[o * in_d + k]) as f64;
+                    e += x2[k] as f64 * d * d;
+                }
+            }
+            e
+        };
+        assert!(werr(&w_awq) <= werr(&w_rtn) + 1e-9,
+                "awq {} rtn {}", werr(&w_awq), werr(&w_rtn));
+        assert!(werr(&w_awq) < werr(&w_rtn) * 0.98, "clip search inert");
+    }
+
+    #[test]
+    fn awq_improves_layer_output_error_with_outliers() {
+        let (out_d, in_d, n) = (8, 32, 64);
+        let sch = QuantScheme::new(2, 16);
+        let mut r = Rng::new(22);
+        let mut w = vec![0f32; out_d * in_d];
+        let mut x = vec![0f32; n * in_d];
+        r.fill_normal(&mut w, 0.0, 1.0);
+        r.fill_normal(&mut x, 0.0, 1.0);
+        for i in 0..out_d {
+            w[i * in_d + 7] *= 8.0; // range-wasting outlier per row
+        }
+        let x2 = x2_mean(&x, in_d);
+        let res = awq_quantize(&w, out_d, in_d, &x2, sch);
+        let w_awq = dequantize(&res.w_int, &res.gp, sch);
+        let gp = minmax_init(&w, out_d, in_d, sch);
+        let w_rtn = fake_quant(&w, &gp, sch);
+        let e_awq = recon_error(&w_awq, &w, out_d, in_d, &x);
+        let e_rtn = recon_error(&w_rtn, &w, out_d, in_d, &x);
+        assert!(e_awq < e_rtn, "awq {e_awq} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn ratio_one_reduces_to_rtn() {
+        // with uniform activation weights and no outliers, clip 1.0 often
+        // wins; check ints stay valid either way
+        let (out_d, in_d) = (4, 16);
+        let sch = QuantScheme::new(4, 8);
+        let mut r = Rng::new(23);
+        let mut w = vec![0f32; out_d * in_d];
+        r.fill_normal(&mut w, 0.0, 1.0);
+        let x2 = vec![1.0f32; in_d];
+        let res = awq_quantize(&w, out_d, in_d, &x2, sch);
+        for &q in &res.w_int {
+            assert!((0.0..=sch.qmax()).contains(&q));
+            assert_eq!(q, q.round_ties_even());
+        }
+    }
+
+    #[test]
+    fn x2_mean_computes_columnwise() {
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2 samples x 2 channels
+        let m = x2_mean(&x, 2);
+        assert_eq!(m, vec![5.0, 10.0]);
+    }
+}

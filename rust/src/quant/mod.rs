@@ -1,0 +1,6 @@
+//! Quantization: packing, RTN (paper Eqs. 1-2), PTQ baselines, size math.
+pub mod awq;
+pub mod gptq;
+pub mod pack;
+pub mod rtn;
+pub mod size;

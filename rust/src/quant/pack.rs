@@ -1,0 +1,144 @@
+//! N-bit bitstream packing: quantized integer weights -> dense u32 words.
+//!
+//! Contiguous little-endian bitstream (value i occupies bits
+//! [i*N, (i+1)*N) of the stream; bit j of the stream is bit j%32 of word
+//! j/32). Works for any N in 1..=8 - covers the paper's 2/3/4-bit models,
+//! including the awkward 3-bit case without padding waste.
+
+use anyhow::{bail, Result};
+
+/// Words needed for `n` values at `bits` each.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize + 31) / 32
+}
+
+/// Pack integer values (each < 2^bits) into a bitstream.
+pub fn pack_bits(values: &[u8], bits: u32) -> Result<Vec<u32>> {
+    if bits == 0 || bits > 8 {
+        bail!("bits must be in 1..=8, got {bits}");
+    }
+    let limit = 1u16 << bits;
+    let mut out = vec![0u32; packed_len(values.len(), bits)];
+    let mut bitpos = 0usize;
+    for &v in values {
+        if (v as u16) >= limit {
+            bail!("value {v} out of range for {bits} bits");
+        }
+        let word = bitpos >> 5;
+        let off = bitpos & 31;
+        out[word] |= (v as u32) << off;
+        let spill = off + bits as usize;
+        if spill > 32 {
+            out[word + 1] |= (v as u32) >> (32 - off);
+        }
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Unpack `n` values of `bits` each from a bitstream.
+pub fn unpack_bits(words: &[u32], bits: u32, n: usize) -> Result<Vec<u8>> {
+    if bits == 0 || bits > 8 {
+        bail!("bits must be in 1..=8, got {bits}");
+    }
+    if words.len() < packed_len(n, bits) {
+        bail!("bitstream too short: {} words for {} values", words.len(), n);
+    }
+    let mask = (1u32 << bits) - 1;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let word = bitpos >> 5;
+        let off = bitpos & 31;
+        let mut v = words[word] >> off;
+        let spill = off + bits as usize;
+        if spill > 32 {
+            v |= words[word + 1] << (32 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Unpack directly into an f32 slice (hot path for dequantization).
+#[inline]
+pub fn unpack_bits_f32(words: &[u32], bits: u32, out: &mut [f32]) {
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let word = bitpos >> 5;
+        let off = bitpos & 31;
+        let mut v = words[word] >> off;
+        if off + bits as usize > 32 {
+            v |= words[word + 1] << (32 - off);
+        }
+        *o = (v & mask) as f32;
+        bitpos += bits as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_bit_widths_property() {
+        let mut r = Rng::new(31);
+        for _case in 0..200 {
+            let bits = 1 + r.below(8) as u32;
+            let n = r.range(1, 300);
+            let vals: Vec<u8> =
+                (0..n).map(|_| r.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&vals, bits).unwrap();
+            assert_eq!(packed.len(), packed_len(n, bits));
+            let back = unpack_bits(&packed, bits, n).unwrap();
+            assert_eq!(back, vals, "bits={bits} n={n}");
+        }
+    }
+
+    #[test]
+    fn three_bit_crosses_word_boundaries() {
+        // 3 bits * 11 values = 33 bits -> value 10 straddles words 0/1
+        let vals: Vec<u8> = (0..11).map(|i| (i % 8) as u8).collect();
+        let packed = pack_bits(&vals, 3).unwrap();
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_bits(&packed, 3, 11).unwrap(), vals);
+    }
+
+    #[test]
+    fn density_is_exact() {
+        // 2-bit: 16 values/word; 4-bit: 8/word
+        assert_eq!(packed_len(16, 2), 1);
+        assert_eq!(packed_len(17, 2), 2);
+        assert_eq!(packed_len(8, 4), 1);
+        assert_eq!(packed_len(32, 3), 3); // 96 bits exactly
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(pack_bits(&[4], 2).is_err());
+        assert!(pack_bits(&[8], 3).is_err());
+        assert!(pack_bits(&[1], 0).is_err());
+        assert!(pack_bits(&[1], 9).is_err());
+    }
+
+    #[test]
+    fn unpack_f32_matches_u8() {
+        let mut r = Rng::new(32);
+        let vals: Vec<u8> = (0..100).map(|_| r.below(8) as u8).collect();
+        let packed = pack_bits(&vals, 3).unwrap();
+        let mut f = vec![0f32; 100];
+        unpack_bits_f32(&packed, 3, &mut f);
+        for (a, b) in f.iter().zip(&vals) {
+            assert_eq!(*a, *b as f32);
+        }
+    }
+
+    #[test]
+    fn short_stream_rejected() {
+        let packed = pack_bits(&[1, 2, 3], 4).unwrap();
+        assert!(unpack_bits(&packed, 4, 9).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Round-to-nearest quantization (paper Eqs. 1-2) on host tensors.
+//!
+//! Bit-parity with the python oracle (kernels/ref.py) is REQUIRED: the
+//! Block-AP -> E2E-QP handoff quantizes trained weights here in Rust, and
+//! the resulting integers must match what the fake-quant training graph saw.
+//! jnp.round rounds half-to-even, so we use f32::round_ties_even.
+
+use crate::config::QuantScheme;
+
+/// Group-wise quantization parameters of one (out x in) weight matrix.
+#[derive(Clone, Debug)]
+pub struct GroupParams {
+    /// step sizes, (out * in/g) row-major
+    pub s: Vec<f32>,
+    /// zero points (integer-valued f32), same shape
+    pub z: Vec<f32>,
+    pub rows: usize,
+    pub groups_per_row: usize,
+}
+
+/// Min/max init of (s, z): s = (max-min)/qmax, z = clamp(round(-min/s)).
+/// min clamped <= 0 and max >= 0 so zero stays representable
+/// (matches ref.minmax_init_ref).
+pub fn minmax_init(w: &[f32], rows: usize, cols: usize, sch: QuantScheme)
+                   -> GroupParams {
+    let g = sch.group;
+    assert_eq!(cols % g, 0, "group {g} must divide cols {cols}");
+    let gpr = cols / g;
+    let qmax = sch.qmax();
+    let mut s = Vec::with_capacity(rows * gpr);
+    let mut z = Vec::with_capacity(rows * gpr);
+    for r in 0..rows {
+        for gi in 0..gpr {
+            let chunk = &w[r * cols + gi * g..r * cols + (gi + 1) * g];
+            let mut mn = 0f32;
+            let mut mx = 0f32;
+            for &x in chunk {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            let step = ((mx - mn) / qmax).max(1e-8);
+            s.push(step);
+            z.push((-mn / step).round_ties_even().clamp(0.0, qmax));
+        }
+    }
+    GroupParams { s, z, rows, groups_per_row: gpr }
+}
+
+/// Eq. (1): W_int = clamp(round(W/s) + z, 0, qmax), integer-valued f32.
+pub fn quantize(w: &[f32], gp: &GroupParams, sch: QuantScheme) -> Vec<f32> {
+    let qmax = sch.qmax();
+    let g = sch.group;
+    let cols = gp.groups_per_row * g;
+    let mut out = vec![0f32; w.len()];
+    for r in 0..gp.rows {
+        for gi in 0..gp.groups_per_row {
+            let s = gp.s[r * gp.groups_per_row + gi];
+            let z = gp.z[r * gp.groups_per_row + gi];
+            let base = r * cols + gi * g;
+            for k in 0..g {
+                let q = (w[base + k] / s).round_ties_even() + z;
+                out[base + k] = q.clamp(0.0, qmax);
+            }
+        }
+    }
+    out
+}
+
+/// Eq. (2): W_hat = (W_int - z) * s.
+pub fn dequantize(w_int: &[f32], gp: &GroupParams, sch: QuantScheme)
+                  -> Vec<f32> {
+    let g = sch.group;
+    let cols = gp.groups_per_row * g;
+    let mut out = vec![0f32; w_int.len()];
+    for r in 0..gp.rows {
+        for gi in 0..gp.groups_per_row {
+            let s = gp.s[r * gp.groups_per_row + gi];
+            let z = gp.z[r * gp.groups_per_row + gi];
+            let base = r * cols + gi * g;
+            for k in 0..g {
+                out[base + k] = (w_int[base + k] - z) * s;
+            }
+        }
+    }
+    out
+}
+
+/// quantize + dequantize in one pass (RTN baseline reconstruction).
+pub fn fake_quant(w: &[f32], gp: &GroupParams, sch: QuantScheme) -> Vec<f32> {
+    dequantize(&quantize(w, gp, sch), gp, sch)
+}
+
+/// Round a trained (continuous) zero-point vector onto the integer grid -
+/// the storage step after Block-AP (z is stored low-bit, paper §3.2).
+pub fn round_zeros(gp: &mut GroupParams, sch: QuantScheme) {
+    let qmax = sch.qmax();
+    for z in gp.z.iter_mut() {
+        *z = z.round_ties_even().clamp(0.0, qmax);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sch2() -> QuantScheme {
+        QuantScheme::new(2, 8)
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut r = Rng::new(2);
+        for bits in [2u32, 3, 4] {
+            let sch = QuantScheme::new(bits, 16);
+            let (rows, cols) = (8, 64);
+            let mut w = vec![0f32; rows * cols];
+            r.fill_normal(&mut w, 0.0, 1.0);
+            let gp = minmax_init(&w, rows, cols, sch);
+            let wh = fake_quant(&w, &gp, sch);
+            for row in 0..rows {
+                for c in 0..cols {
+                    let s = gp.s[row * gp.groups_per_row + c / 16];
+                    let err = (wh[row * cols + c] - w[row * cols + c]).abs();
+                    assert!(err <= 0.5 * s + 1e-5, "err={err} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_values_integer_in_range() {
+        let mut r = Rng::new(3);
+        let sch = QuantScheme::new(3, 8);
+        let mut w = vec![0f32; 4 * 32];
+        r.fill_normal(&mut w, 0.5, 2.0);
+        let gp = minmax_init(&w, 4, 32, sch);
+        for q in quantize(&w, &gp, sch) {
+            assert_eq!(q, q.round_ties_even());
+            assert!(q >= 0.0 && q <= sch.qmax());
+        }
+    }
+
+    #[test]
+    fn zero_is_representable() {
+        // all-positive group: min clamps to 0 so w=0 -> exactly 0
+        let w = vec![1.0f32, 2.0, 3.0, 0.0, 5.0, 6.0, 7.0, 8.0];
+        let gp = minmax_init(&w, 1, 8, sch2());
+        let wh = fake_quant(&w, &gp, sch2());
+        assert_eq!(wh[3], 0.0);
+    }
+
+    #[test]
+    fn constant_group_degenerates_gracefully() {
+        let w = vec![0.0f32; 8];
+        let gp = minmax_init(&w, 1, 8, sch2());
+        assert!(gp.s[0] > 0.0);
+        let wh = fake_quant(&w, &gp, sch2());
+        assert!(wh.iter().all(|&x| x.abs() < 1e-6));
+    }
+
+    #[test]
+    fn ties_round_to_even_like_jnp() {
+        // w/s = 0.5 and 1.5 with s=1, z=0: jnp.round gives 0 and 2
+        let gp = GroupParams {
+            s: vec![1.0],
+            z: vec![0.0],
+            rows: 1,
+            groups_per_row: 1,
+        };
+        let q = quantize(&[0.5, 1.5, 2.5, 3.5], &gp, QuantScheme::new(4, 4));
+        assert_eq!(q, vec![0.0, 2.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn round_zeros_lands_on_grid() {
+        let mut gp = GroupParams {
+            s: vec![1.0, 1.0],
+            z: vec![1.4, 3.9],
+            rows: 1,
+            groups_per_row: 2,
+        };
+        round_zeros(&mut gp, sch2());
+        assert_eq!(gp.z, vec![1.0, 3.0]); // 3.9 -> 4 -> clamped qmax=3
+    }
+}

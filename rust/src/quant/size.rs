@@ -1,0 +1,110 @@
+//! Quantized-model size calculator - exact reproduction of paper Table 11
+//! (Appendix E): avg bits/param = N + (N+16)/g over linear layers; norms,
+//! embeddings and the head stay FP16.
+
+use crate::config::{LlamaShape, QuantScheme};
+
+#[derive(Clone, Debug)]
+pub struct SizeReport {
+    pub model: String,
+    pub bits: u32,
+    pub group: usize,
+    pub bits_per_param: f64,
+    pub size_gib: f64,
+    pub compression_pct: f64,
+    pub fp16_gib: f64,
+}
+
+/// FP16 model size in GiB.
+pub fn fp16_size_gib(shape: &LlamaShape) -> f64 {
+    shape.total_params() as f64 * 2.0 / (1u64 << 30) as f64
+}
+
+/// Effective storage bits per value when packing into u32 words the way
+/// deployment kernels do: floor(32/N) values per word. 2- and 4-bit divide
+/// 32 evenly; 3-bit stores 10 values/word = 3.2 effective bits. The paper's
+/// Table 11 *size* column uses this practical packing while its bits/param
+/// column uses the ideal N + (N+16)/g - we reproduce both conventions.
+/// (Our own .eqt container uses a dense bitstream - quant/pack.rs - which
+/// is strictly smaller for 3-bit.)
+pub fn storage_bits(bits: u32) -> f64 {
+    32.0 / (32 / bits) as f64
+}
+
+/// Size of the quantized model (paper's scheme: per group one FP16 scale +
+/// one N-bit zero point, u32-padded packing).
+pub fn quantized_size_gib(shape: &LlamaShape, sch: QuantScheme) -> f64 {
+    let lp = shape.linear_params() as f64;
+    let sb = storage_bits(sch.bits);
+    let avg_storage = sb + (sb + 16.0) / sch.group as f64;
+    let quant_bits = lp * avg_storage;
+    let fp_bits = shape.fp_params() as f64 * 16.0;
+    (quant_bits + fp_bits) / 8.0 / (1u64 << 30) as f64
+}
+
+pub fn report(shape: &LlamaShape, sch: QuantScheme) -> SizeReport {
+    let fp16 = fp16_size_gib(shape);
+    let q = quantized_size_gib(shape, sch);
+    SizeReport {
+        model: shape.name.to_string(),
+        bits: sch.bits,
+        group: sch.group,
+        bits_per_param: sch.avg_bits(),
+        size_gib: q,
+        compression_pct: (1.0 - q / fp16) * 100.0,
+        fp16_gib: fp16,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{llama2_13b, llama2_70b, llama2_7b};
+
+    /// Paper Table 11 rows, (model, bits, group, size GiB, compression %).
+    /// Tolerances: 1.5% on size (paper rounds; head-tying conventions vary).
+    #[test]
+    fn matches_paper_table11() {
+        let rows: Vec<(LlamaShape, u32, usize, f64, f64)> = vec![
+            (llama2_7b(), 4, 128, 3.62, 71.14),
+            (llama2_7b(), 3, 128, 3.01, 75.98),
+            (llama2_7b(), 2, 64, 2.21, 82.40),
+            (llama2_7b(), 2, 128, 2.10, 83.25),
+            (llama2_13b(), 4, 128, 6.75, 72.16),
+            (llama2_13b(), 2, 64, 3.98, 83.58),
+            (llama2_70b(), 4, 128, 34.10, 73.46),
+            (llama2_70b(), 2, 64, 19.16, 85.09),
+            (llama2_70b(), 2, 128, 18.04, 85.96),
+        ];
+        for (shape, bits, group, want_gib, want_pct) in rows {
+            let r = report(&shape, QuantScheme::new(bits, group));
+            let rel = (r.size_gib - want_gib).abs() / want_gib;
+            assert!(
+                rel < 0.015,
+                "{} w{}g{}: got {:.2} GiB want {want_gib}",
+                shape.name, bits, group, r.size_gib
+            );
+            assert!(
+                (r.compression_pct - want_pct).abs() < 1.0,
+                "{} w{}g{}: got {:.2}% want {want_pct}%",
+                shape.name, bits, group, r.compression_pct
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_sizes_match_paper() {
+        assert!((fp16_size_gib(&llama2_7b()) - 12.55).abs() < 0.1);
+        assert!((fp16_size_gib(&llama2_13b()) - 24.24).abs() < 0.2);
+        assert!((fp16_size_gib(&llama2_70b()) - 128.48).abs() < 0.7);
+    }
+
+    #[test]
+    fn smaller_groups_cost_more_bits() {
+        let s = llama2_7b();
+        let g32 = quantized_size_gib(&s, QuantScheme::new(2, 32));
+        let g64 = quantized_size_gib(&s, QuantScheme::new(2, 64));
+        let g128 = quantized_size_gib(&s, QuantScheme::new(2, 128));
+        assert!(g32 > g64 && g64 > g128);
+    }
+}

@@ -1,0 +1,208 @@
+//! PJRT runtime (L3 <-> L2 bridge): loads AOT HLO-text artifacts produced by
+//! python/compile/aot.py, compiles them once on the PJRT CPU client, and
+//! executes them with typed, spec-checked host buffers.
+//!
+//! Python never runs here - the HLO text files are the entire interface.
+//! Pattern adapted from /opt/xla-example/load_hlo/.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::io::manifest::{ArtifactSpec, Dtype, Manifest};
+
+/// A host-side argument for an executable.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn check(&self, spec: &crate::io::manifest::ArgSpec) -> Result<()> {
+        let want: usize = spec.shape.iter().product();
+        match self {
+            Arg::F32(v) => {
+                if spec.dtype != Dtype::F32 {
+                    bail!("arg '{}': dtype mismatch (want f32)", spec.name);
+                }
+                if v.len() != want {
+                    bail!(
+                        "arg '{}': {} elems, spec {:?} wants {}",
+                        spec.name, v.len(), spec.shape, want
+                    );
+                }
+            }
+            Arg::I32(v) => {
+                if spec.dtype != Dtype::I32 {
+                    bail!("arg '{}': dtype mismatch (want i32)", spec.name);
+                }
+                if v.len() != want {
+                    bail!(
+                        "arg '{}': {} elems, spec {:?} wants {}",
+                        spec.name, v.len(), spec.shape, want
+                    );
+                }
+            }
+            Arg::Scalar(_) => {
+                if want != 1 {
+                    bail!("arg '{}': scalar passed, spec {:?}", spec.name,
+                          spec.shape);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Host -> device transfer as an OWNED PjRtBuffer.
+    ///
+    /// We deliberately avoid `PjRtLoadedExecutable::execute(&[Literal])`:
+    /// its C shim (`xla_rs.cc::execute`) `release()`s every input device
+    /// buffer without ever deleting it - ~100 MB leaked per train step on
+    /// the `small` preset (found via OOM at 36 GB RSS; see EXPERIMENTS.md
+    /// §Perf). `execute_b` borrows caller-owned buffers instead, and Rust
+    /// frees them on Drop.
+    fn to_buffer(&self, client: &xla::PjRtClient, shape: &[usize])
+                 -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            Arg::F32(v) => {
+                client.buffer_from_host_buffer::<f32>(v, shape, None)?
+            }
+            Arg::I32(v) => {
+                client.buffer_from_host_buffer::<i32>(v, shape, None)?
+            }
+            Arg::Scalar(x) => client
+                .buffer_from_host_buffer::<f32>(&[*x], shape, None)?,
+        };
+        Ok(buf)
+    }
+}
+
+/// One output buffer copied back to the host.
+#[derive(Debug, Clone)]
+pub struct OutBuf {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+/// A compiled artifact with its argument spec.
+pub struct Exec {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Exec {
+    /// Execute with spec-checked args; returns outputs in manifest order.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        if args.len() != self.spec.args.len() {
+            bail!(
+                "{}: got {} args, spec wants {} ({:?})",
+                self.spec.entry,
+                args.len(),
+                self.spec.args.len(),
+                self.spec.args.iter().map(|a| &a.name).collect::<Vec<_>>()
+            );
+        }
+        let mut bufs = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.spec.args) {
+            arg.check(spec)
+                .with_context(|| format!("entry {}", self.spec.entry))?;
+            bufs.push(arg.to_buffer(&self.client, &spec.shape)?);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, spec wants {}",
+                self.spec.entry,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, name) in parts.into_iter().zip(&self.spec.outputs) {
+            let n = lit.element_count();
+            let mut data = vec![0f32; n];
+            lit.copy_raw_to(&mut data)?;
+            out.push(OutBuf { name: name.clone(), data });
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run and return the single output.
+    pub fn run1(&self, args: &[Arg]) -> Result<Vec<f32>> {
+        let mut outs = self.run(args)?;
+        if outs.len() != 1 {
+            bail!("{}: expected 1 output, got {}", self.spec.entry,
+                  outs.len());
+        }
+        Ok(outs.pop().unwrap().data)
+    }
+}
+
+/// Manifest-driven executable registry. Compiles lazily and caches.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Exec>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Load + compile (or fetch from cache) an artifact.
+    pub fn exec(&self, preset: &str, entry: &str) -> Result<std::rc::Rc<Exec>> {
+        let key = format!("{preset}/{entry}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(preset, entry)?.clone();
+        let path = self.manifest.root.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e}"))?;
+        crate::debug!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exec = std::rc::Rc::new(Exec {
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Entry name with group suffix, e.g. ("block_ap_step", 64) ->
+    /// "block_ap_step_g64".
+    pub fn exec_g(
+        &self,
+        preset: &str,
+        entry: &str,
+        group: usize,
+    ) -> Result<std::rc::Rc<Exec>> {
+        self.exec(preset, &format!("{entry}_g{group}"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,212 @@
+//! Host-side tensor substrate: dense f32 (and i32) arrays with shapes.
+//!
+//! This is deliberately small - heavy math runs inside XLA executables; the
+//! host needs tensors only for data preparation, quantization surgery
+//! (RTN/GPTQ/AWQ), the pure-Rust inference engine, and tests.
+//! Row-major layout throughout (matches both XLA default and the flat
+//! parameter layouts in artifacts/manifest.json).
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("expected 2-D, got {:?}", self.shape);
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[self.rank() - 1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[self.rank() - 1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// self (m,k) @ other (k,n) -> (m,n); cache-blocked i-k-j loop.
+    pub fn matmul(&self, other: &Tensor) -> Result<Tensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = other.dims2()?;
+        if k != k2 {
+            bail!("matmul inner dims {k} vs {k2}");
+        }
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let arow = &self.data[i * k..(i + 1) * k];
+            for kk in 0..k {
+                let a = arow[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Result<Tensor> {
+        let (m, n) = self.dims2()?;
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<TensorI32> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elems, got {}", shape, n, data.len());
+        }
+        Ok(TensorI32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> TensorI32 {
+        let n = shape.iter().product();
+        TensorI32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        let mut eye = Tensor::zeros(&[3, 3]);
+        for i in 0..3 {
+            eye.set2(i, i, 1.0);
+        }
+        let b = a.matmul(&eye).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut r = Rng::new(4);
+        let (m, k, n) = (7, 13, 5);
+        let mut a = Tensor::zeros(&[m, k]);
+        let mut b = Tensor::zeros(&[k, n]);
+        r.fill_normal(&mut a.data, 0.0, 1.0);
+        r.fill_normal(&mut b.data, 0.0, 1.0);
+        let c = a.matmul(&b).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += (a.at2(i, kk) as f64) * (b.at2(kk, j) as f64);
+                }
+                assert!((c.at2(i, j) as f64 - acc).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(5);
+        let mut a = Tensor::zeros(&[4, 9]);
+        r.fill_normal(&mut a.data, 0.0, 1.0);
+        assert_eq!(a.t().unwrap().t().unwrap(), a);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        assert!(a.matmul(&b).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! IEEE 754 binary16 <-> binary32 conversion (scalar, branch-light).
+//!
+//! The packed model container stores step sizes as f16 (paper §3.2: "step
+//! sizes s are stored in FP16"); the image's rustc has no native f16, so we
+//! implement the conversions. Round-to-nearest-even on encode.
+
+/// f32 -> f16 bits, round-to-nearest-even, IEEE semantics incl. subnormals.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let mut man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let nan = if man != 0 { 0x200 } else { 0 };
+        return sign | 0x7c00 | nan as u16 | ((man >> 13) & 0x3ff) as u16;
+    }
+    exp -= 127 - 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp <= 0 {
+        // subnormal or zero
+        if exp < -10 {
+            return sign; // underflow to zero
+        }
+        man |= 0x80_0000; // implicit leading 1
+        let shift = (14 - exp) as u32;
+        let half = 1u32 << (shift - 1);
+        let rounded = (man + half - 1 + ((man >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // normal: round mantissa from 23 to 10 bits, nearest-even
+    let half = 0x1000u32; // 1 << 12
+    let rounded = man + half - 1 + ((man >> 13) & 1);
+    let mut out = ((exp as u32) << 10) + (rounded >> 13);
+    if rounded & 0x80_0000 != 0 {
+        // mantissa overflowed into the exponent: exp+1, mantissa 0
+        out = ((exp as u32 + 1) << 10) | 0;
+        if exp + 1 >= 0x1f {
+            return sign | 0x7c00;
+        }
+    }
+    sign | out as u16
+}
+
+/// f16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: value = man * 2^-24; normalize the mantissa
+            let mut e: i32 = 127 - 14; // f32 exponent field for 1.x * 2^-14
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | ((e as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through f16 precision (storage simulation).
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(round_f16(x), x, "i={i}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00); // -> inf
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = f16_bits_to_f32(0x0001); // smallest positive subnormal
+        assert!(tiny > 0.0);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+        let sub = f16_bits_to_f32(0x03ff); // largest subnormal
+        assert_eq!(f32_to_f16_bits(sub), 0x03ff);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let mut r = Rng::new(77);
+        for _ in 0..10000 {
+            let x = (r.f64() as f32 - 0.5) * 100.0;
+            if x.abs() < 6.2e-5 {
+                continue; // below f16 normal range
+            }
+            let y = round_f16(x);
+            let rel = ((y - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0 + 1e-7, "x={x} y={y} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        let mut r = Rng::new(78);
+        for _ in 0..5000 {
+            let x = r.normal_f32(0.0, 10.0);
+            let y = round_f16(x);
+            assert_eq!(round_f16(y), y);
+        }
+    }
+
+    #[test]
+    fn all_f16_bit_patterns_roundtrip_through_f32() {
+        for h in 0..=0xffffu16 {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(x), h, "bits={h:#06x} x={x}");
+        }
+    }
+}

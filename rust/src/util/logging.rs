@@ -1,0 +1,72 @@
+//! Tiny leveled logger with wall-clock timestamps relative to process start.
+//!
+//! `EQAT_LOG=debug|info|warn|quiet` controls verbosity (default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // 0 quiet, 1 warn, 2 info, 3 debug
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init() {
+    START.get_or_init(Instant::now);
+    if let Ok(v) = std::env::var("EQAT_LOG") {
+        let lvl = match v.as_str() {
+            "quiet" => 0,
+            "warn" => 1,
+            "info" => 2,
+            "debug" => 3,
+            _ => 2,
+        };
+        LEVEL.store(lvl, Ordering::Relaxed);
+    }
+}
+
+pub fn elapsed() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn enabled(level: u8) -> bool {
+    LEVEL.load(Ordering::Relaxed) >= level
+}
+
+pub fn log(level: u8, tag: &str, msg: std::fmt::Arguments) {
+    if enabled(level) {
+        eprintln!("[{:9.3}s {}] {}", elapsed(), tag, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(2, "info", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(1, "warn", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(3, "debug", format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotone() {
+        init();
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+}

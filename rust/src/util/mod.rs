@@ -1,0 +1,6 @@
+//! Zero-dependency substrates: RNG, f16, JSON, stats, logging.
+pub mod f16;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

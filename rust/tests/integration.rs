@@ -1,0 +1,181 @@
+//! Integration tests over the real artifacts (run `make artifacts` first).
+//! These exercise the full L3->L2->L1 stack: HLO-text load, PJRT compile,
+//! spec-checked execution, the Block-AP/E2E-QP coordinators, and the
+//! pure-Rust engine's numerical parity with the XLA forward.
+
+use efficientqat::config::{QuantScheme, TrainHp};
+use efficientqat::coordinator::block_ap::{rtn_quantize_model, run_block_ap};
+use efficientqat::coordinator::e2e_qp::{lm_batches, run_e2e_qp};
+use efficientqat::coordinator::pretrain::{pretrain, PretrainOpts};
+use efficientqat::data::corpus::{domain_redpajama, World};
+use efficientqat::data::loader::LmLoader;
+use efficientqat::eval::fwd::ModelRef;
+use efficientqat::eval::ppl::perplexity;
+use efficientqat::infer::engine::Engine;
+use efficientqat::model::init::init_fp_params;
+use efficientqat::runtime::{Arg, Runtime};
+
+const PRESET: &str = "tiny";
+
+fn runtime() -> Runtime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts");
+    Runtime::new(&dir).expect(
+        "artifacts missing or stale - run `make artifacts` before cargo test",
+    )
+}
+
+fn world() -> World {
+    World::new(512, 7)
+}
+
+#[test]
+fn artifact_specs_resolve_and_compile() {
+    let rt = runtime();
+    for entry in ["pretrain_step", "model_fwd_fp", "embed_fwd",
+                  "block_fwd_fp", "block_capture_fp"] {
+        rt.exec(PRESET, entry).unwrap();
+    }
+    rt.exec_g(PRESET, "block_ap_step", 32).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn arg_validation_rejects_bad_shapes() {
+    let rt = runtime();
+    let exec = rt.exec(PRESET, "embed_fwd").unwrap();
+    // wrong arg count
+    assert!(exec.run(&[Arg::Scalar(1.0)]).is_err());
+    // wrong length
+    let fpl = rt.manifest.layout(PRESET, "fp").unwrap();
+    let params = vec![0f32; fpl.size];
+    let bad_x = vec![0i32; 3];
+    assert!(exec.run(&[Arg::F32(&params), Arg::I32(&bad_x)]).is_err());
+}
+
+#[test]
+fn pretrain_learns_on_synthetic_corpus() {
+    let rt = runtime();
+    let w = world();
+    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
+    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
+                                   cfg.e2e_batch, cfg.e2e_ctx);
+    let opts = PretrainOpts { steps: 60, lr: 3e-3, seed: 5, log_every: 0 };
+    let (_params, report) = pretrain(&rt, PRESET, &mut loader, &opts)
+        .unwrap();
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    // vocab 512 -> random init ~ ln(512) = 6.24; the synthetic corpus has
+    // high intrinsic entropy, so expect a solid (not huge) drop in 60 steps
+    assert!(first > 5.5, "first loss {first}");
+    assert!(last < first - 0.7, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn rtn_model_forward_matches_rust_engine() {
+    let rt = runtime();
+    let fpl = rt.manifest.layout(PRESET, "fp").unwrap();
+    let params = init_fp_params(fpl, 42);
+    let sch = QuantScheme::new(4, 32);
+    let qm = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
+
+    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
+    // PJRT logits over one eval batch
+    let w = world();
+    let mut loader = LmLoader::new(&w, &domain_redpajama(), 3,
+                                   cfg.eval_batch, cfg.eval_ctx);
+    let b = loader.next_batch();
+    let logits = ModelRef::Quant(&qm).logits(&rt, &b.x).unwrap();
+
+    // rust engine over row 0 of the batch
+    let info = rt.manifest.preset(PRESET).unwrap();
+    let mut eng = Engine::new(&qm, info, cfg.eval_ctx).unwrap();
+    let row0 = &b.x[..cfg.eval_ctx];
+    let mut max_err = 0f32;
+    for (t, &tok) in row0.iter().enumerate() {
+        let lg = eng.step(tok).unwrap();
+        let xla_row = &logits[t * cfg.vocab..(t + 1) * cfg.vocab];
+        for (a, c) in lg.iter().zip(xla_row) {
+            max_err = max_err.max((a - c).abs());
+        }
+    }
+    assert!(max_err < 2e-3, "engine vs XLA logits diverge: {max_err}");
+}
+
+#[test]
+fn block_ap_reduces_reconstruction_loss_and_beats_rtn_ppl() {
+    let rt = runtime();
+    let w = world();
+    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
+    // quick pretrain so quantization error is meaningful
+    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
+                                   cfg.e2e_batch, cfg.e2e_ctx);
+    let opts = PretrainOpts { steps: 60, lr: 3e-3, seed: 5, log_every: 0 };
+    let (params, _) = pretrain(&rt, PRESET, &mut loader, &opts).unwrap();
+
+    let sch = QuantScheme::new(2, 32);
+    let hp = TrainHp {
+        block_samples: 64,
+        block_epochs: 2,
+        block_lr_w: 1e-3,
+        block_lr_q: 1e-3,
+        ..Default::default()
+    };
+    let mut cal = LmLoader::new(&w, &domain_redpajama(), 21,
+                                cfg.block_batch, cfg.block_ctx);
+    let pool = cal.sample_pool(8);
+    let mut val = LmLoader::new(&w, &domain_redpajama(), 22,
+                                cfg.block_batch, cfg.block_ctx);
+    let val_pool = val.sample_pool(2);
+
+    let out = run_block_ap(&rt, PRESET, &params, sch, &hp, &pool, &val_pool)
+        .unwrap();
+    // training reduced each block's reconstruction loss
+    for (b, curve) in out.report.loss_curves.iter().enumerate() {
+        let first = curve[0];
+        let last = *curve.last().unwrap();
+        assert!(last < first, "block {b}: {first} -> {last}");
+    }
+
+    // and the resulting 2-bit model beats plain RTN on perplexity
+    let rtn = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
+    let dom = domain_redpajama();
+    let ppl_rtn = perplexity(&rt, &ModelRef::Quant(&rtn), &w, &dom, 2, 99)
+        .unwrap();
+    let ppl_bap = perplexity(&rt, &ModelRef::Quant(&out.model), &w, &dom,
+                             2, 99).unwrap();
+    assert!(
+        ppl_bap < ppl_rtn,
+        "block-AP ppl {ppl_bap:.2} not better than RTN {ppl_rtn:.2}"
+    );
+}
+
+#[test]
+fn e2e_qp_trains_scales_only_and_improves_loss() {
+    let rt = runtime();
+    let w = world();
+    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
+    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
+                                   cfg.e2e_batch, cfg.e2e_ctx);
+    let opts = PretrainOpts { steps: 40, lr: 3e-3, seed: 5, log_every: 0 };
+    let (params, _) = pretrain(&rt, PRESET, &mut loader, &opts).unwrap();
+
+    let sch = QuantScheme::new(2, 32);
+    let mut qm = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
+    let wq_before = qm.wq.clone();
+    let z_before = qm.z_slice().to_vec();
+
+    let mut e2e_loader = LmLoader::new(&w, &domain_redpajama(), 31,
+                                       cfg.e2e_batch, cfg.e2e_ctx);
+    let pool = e2e_loader.sample_pool(8);
+    let batches = lm_batches(&pool);
+    let hp = TrainHp { e2e_epochs: 2, e2e_lr: 2e-3, ..Default::default() };
+    let report = run_e2e_qp(&rt, &mut qm, &batches, &hp).unwrap();
+
+    // weights and zero points frozen; scales moved; loss improved
+    assert_eq!(qm.wq, wq_before);
+    assert_eq!(qm.z_slice(), &z_before[..]);
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    assert!(last < first, "e2e-qp loss {first} -> {last}");
+}
