@@ -1,0 +1,32 @@
+//! `cargo bench` target for the parallel inference hot path: threaded
+//! packed matvec scaling, batched-vs-sequential prefill, and decode
+//! tokens/sec on a Llama-2-7B-shaped block (custom harness - criterion is
+//! unavailable offline; see rust/src/bench/mod.rs).
+//!
+//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 1)
+//! so the throughput trajectory is tracked across PRs. `EQAT_BENCH_FAST=1`
+//! shrinks shapes/iterations for CI smoke runs; `EQAT_THREADS=N` caps the
+//! worker count.
+
+fn main() {
+    efficientqat::util::logging::init();
+    let fast = std::env::var("EQAT_BENCH_FAST").is_ok();
+    match efficientqat::bench::inference_throughput(fast) {
+        Ok((md, payload)) => {
+            println!("{md}");
+            let _ = std::fs::create_dir_all("runs");
+            let _ = std::fs::write("runs/inference.md", &md);
+            if let Err(e) = efficientqat::bench::write_bench_json(
+                "runs/bench.json", &payload)
+            {
+                eprintln!("writing runs/bench.json failed: {e:#}");
+                std::process::exit(1);
+            }
+            println!("wrote runs/bench.json");
+        }
+        Err(e) => {
+            eprintln!("inference bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

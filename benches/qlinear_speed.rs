@@ -1,15 +1,25 @@
 //! `cargo bench` target reproducing paper Table 10: FP-baseline vs packed
 //! INT2/3/4 matvec at the exact Llama-2 layer shapes (custom harness -
 //! criterion is unavailable offline; see rust/src/bench/mod.rs).
+//!
+//! Alongside the markdown table it drops machine-readable rows at
+//! runs/t10-qlinear.json (the cross-PR throughput snapshot lives in
+//! runs/bench.json, written by the `inference` bench).
 
 fn main() {
     efficientqat::util::logging::init();
     let fast = std::env::var("EQAT_BENCH_FAST").is_ok();
     match efficientqat::bench::qlinear_speed_table(fast) {
-        Ok(md) => {
+        Ok((md, rows)) => {
             println!("{md}");
             let _ = std::fs::create_dir_all("runs");
-            let _ = std::fs::write("runs/t10-qlinear.md", md);
+            let _ = std::fs::write("runs/t10-qlinear.md", &md);
+            if let Err(e) = efficientqat::bench::write_bench_json(
+                "runs/t10-qlinear.json", &rows)
+            {
+                eprintln!("writing runs/t10-qlinear.json failed: {e:#}");
+                std::process::exit(1);
+            }
         }
         Err(e) => {
             eprintln!("qlinear bench failed: {e:#}");

@@ -2,6 +2,9 @@
 //! and memory vs the naive-QAT comparator. Requires artifacts; skips
 //! gracefully (exit 0 with a notice) when they are missing so `cargo bench`
 //! stays runnable on a fresh checkout.
+//!
+//! (Inference-side throughput lives in the `inference` bench, which also
+//! maintains the cross-PR perf snapshot runs/bench.json.)
 
 use efficientqat::exp::{tables, ExpCtx};
 

@@ -1,14 +1,25 @@
 //! Micro-benchmark harness (criterion is unavailable offline): warmup +
 //! timed iterations with mean/p50/p95, markdown output. Used by the Table
-//! 10 qlinear bench and the runtime-overhead bench.
+//! 10 qlinear bench, the runtime-overhead bench, and the inference
+//! throughput bench behind `runs/bench.json`.
+//!
+//! `runs/bench.json` convention: every run of `eqat bench inference` (or
+//! the `inference` bench binary) rewrites this machine-readable snapshot
+//! (schema 1) so the perf trajectory is trackable across PRs;
+//! [`check_bench_json`] validates it (used by scripts/tier1.sh).
 
 use std::time::Instant;
 
+use anyhow::{bail, Context, Result};
+
 use crate::config::{llama_by_name, QuantScheme};
+use crate::infer::engine::Engine;
 use crate::infer::qlinear::{dense_matvec, PackedLinear};
 use crate::quant::rtn::{minmax_init, quantize};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{mean, percentile};
+use crate::util::threads::{self, with_threads};
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -41,8 +52,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
 }
 
 /// Table 10 analog: f32 vs packed INT{2,3,4} matvec at the exact Llama-2
-/// layer shapes the paper benches. Returns markdown.
-pub fn qlinear_speed_table(fast: bool) -> anyhow::Result<String> {
+/// layer shapes the paper benches. Returns (markdown, json rows).
+pub fn qlinear_speed_table(fast: bool) -> Result<(String, Json)> {
     // the paper's six (out x in) shapes
     let shapes: Vec<(&str, usize, usize)> = vec![
         ("2-7B attn", 4096, 4096),
@@ -54,6 +65,7 @@ pub fn qlinear_speed_table(fast: bool) -> anyhow::Result<String> {
     ];
     let shapes = if fast { shapes[..2].to_vec() } else { shapes };
     let mut rows = Vec::new();
+    let mut jrows = Vec::new();
     let mut rng = Rng::new(101);
     for (name, out_d, in_d) in shapes {
         let mut w = vec![0f32; out_d * in_d];
@@ -73,6 +85,11 @@ pub fn qlinear_speed_table(fast: bool) -> anyhow::Result<String> {
             format!("{out_d}x{in_d}"),
             format!("{:.0}", dense.mean_us),
         ];
+        let mut jrow = vec![
+            ("layer", Json::str(name)),
+            ("shape", Json::str(format!("{out_d}x{in_d}"))),
+            ("f32_us", Json::num(dense.mean_us)),
+        ];
         for bits in [2u32, 3, 4] {
             let sch = QuantScheme::new(bits, 128);
             let gp = minmax_init(&w, out_d, in_d, sch);
@@ -85,17 +102,342 @@ pub fn qlinear_speed_table(fast: bool) -> anyhow::Result<String> {
             });
             row.push(format!("{:.0} ({:.1}x)", r.mean_us,
                              dense.mean_us / r.mean_us));
+            jrow.push((
+                match bits {
+                    2 => "int2_us",
+                    3 => "int3_us",
+                    _ => "int4_us",
+                },
+                Json::num(r.mean_us),
+            ));
         }
         crate::info!("qlinear bench {name} done");
         rows.push(row);
+        jrows.push(Json::obj(jrow));
     }
-    Ok(format!(
+    let md = format!(
         "## Table 10 analog - matvec latency us (CPU; f32 baseline vs \
          packed, speedup in parens; paper: INT2 2.9-4.4x vs fp16 on \
          A100)\n\n{}",
         crate::exp::md_table(
             &["Layer", "Shape", "f32 us", "INT2", "INT3", "INT4"], &rows)
-    ))
+    );
+    Ok((md, Json::arr(jrows)))
+}
+
+/// Thread counts reported in the throughput tables (per the perf issue:
+/// single-thread, typical-laptop, typical-server).
+const THREAD_COUNTS: [usize; 3] = [1, 4, 16];
+
+/// End-to-end inference throughput: threaded matvec scaling (packed vs
+/// dense) plus engine decode tokens/sec and batched-vs-sequential prefill
+/// on a Llama-2-7B-shaped block. Returns (markdown, bench.json payload).
+///
+/// Fast mode shrinks shapes/iterations for CI smoke runs
+/// (`EQAT_BENCH_FAST=1`); the acceptance numbers come from the full run.
+pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
+    let mut md = String::new();
+    let (mv_md, mv_json) = matvec_thread_table(fast)?;
+    md.push_str(&mv_md);
+    md.push('\n');
+    let (eng_md, eng_json) = engine_throughput_table(fast)?;
+    md.push_str(&eng_md);
+
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let payload = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("kind", Json::str("inference_throughput")),
+        ("fast", Json::Bool(fast)),
+        ("generated_unix", Json::num(now)),
+        ("threads_available", Json::num(threads::num_threads() as f64)),
+        ("matvec", mv_json),
+        ("engine", eng_json),
+    ]);
+    Ok((md, payload))
+}
+
+fn matvec_thread_table(fast: bool) -> Result<(String, Json)> {
+    let shapes: Vec<(&str, usize, usize)> = if fast {
+        vec![("2-7B attn", 4096, 4096)]
+    } else {
+        vec![("2-7B attn", 4096, 4096), ("2-7B mlp", 11008, 4096)]
+    };
+    let iters = if fast { 5 } else { 10 };
+    let mut rng = Rng::new(202);
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for (name, out_d, in_d) in shapes {
+        let mut w = vec![0f32; out_d * in_d];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let mut x = vec![0f32; in_d];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut y = vec![0f32; out_d];
+        let sch = QuantScheme::new(2, 128);
+        let gp = minmax_init(&w, out_d, in_d, sch);
+        let wi = quantize(&w, &gp, sch);
+        let pl = PackedLinear::pack(&wi, out_d, in_d, &gp.s, &gp.z, sch)?;
+
+        for kind in ["f32", "int2"] {
+            let mut per_t = Vec::new();
+            for &t in &THREAD_COUNTS {
+                let r = with_threads(t, || {
+                    bench(kind, 2, iters, || {
+                        if kind == "f32" {
+                            dense_matvec(&w, out_d, in_d, &x, &mut y);
+                        } else {
+                            pl.matvec(&x, &mut y);
+                        }
+                        std::hint::black_box(&y);
+                    })
+                });
+                jrows.push(Json::obj(vec![
+                    ("shape", Json::str(format!("{out_d}x{in_d}"))),
+                    ("kind", Json::str(kind)),
+                    ("threads", Json::num(t as f64)),
+                    ("mean_us", Json::num(r.mean_us)),
+                    ("p50_us", Json::num(r.p50_us)),
+                    ("p95_us", Json::num(r.p95_us)),
+                ]));
+                per_t.push(r.mean_us);
+            }
+            rows.push(vec![
+                name.to_string(),
+                format!("{out_d}x{in_d}"),
+                kind.to_string(),
+                format!("{:.0}", per_t[0]),
+                format!("{:.0}", per_t[1]),
+                format!("{:.0}", per_t[2]),
+                format!("{:.2}x", per_t[0] / per_t[1]),
+            ]);
+            crate::info!("matvec thread bench {name} {kind} done");
+        }
+    }
+    let md = format!(
+        "## Threaded matvec - latency us by worker count (row-chunked; \
+         EQAT_THREADS override)\n\n{}",
+        crate::exp::md_table(
+            &["Layer", "Shape", "Kind", "1T us", "4T us", "16T us",
+              "4T speedup"],
+            &rows)
+    );
+    Ok((md, Json::arr(jrows)))
+}
+
+fn engine_throughput_table(fast: bool) -> Result<(String, Json)> {
+    // Llama-2-7B-shaped single block (full) / scaled-down twin (fast)
+    let (dim, nh, hd, inter, vocab) = if fast {
+        (512usize, 8usize, 64usize, 1408usize, 2048usize)
+    } else {
+        (4096, 32, 128, 11008, 8192)
+    };
+    let n_layers = 1;
+    let n_prefill = if fast { 16 } else { 64 };
+    let decode_iters = if fast { 6 } else { 12 };
+    let max_ctx = n_prefill + decode_iters + 20;
+    let sch = QuantScheme::new(2, 128);
+
+    crate::info!("building synthetic engine dim={dim} inter={inter} \
+                  vocab={vocab}");
+    let mut eng = Engine::synthetic(dim, nh, hd, inter, vocab, n_layers,
+                                    sch, max_ctx, 42)?;
+    let toks: Vec<i32> =
+        (0..n_prefill).map(|i| ((i * 37 + 11) % vocab) as i32).collect();
+
+    // prefill: batched vs the old sequential step loop, single-threaded
+    // (isolates the batching win); plus batched at 4T for the table
+    let seq_iters = 2;
+    let batched_1t = with_threads(1, || {
+        bench("prefill-batched", 1, seq_iters + 1, || {
+            eng.reset();
+            eng.prefill(&toks).unwrap();
+            std::hint::black_box(eng.pos);
+        })
+    });
+    let sequential_1t = with_threads(1, || {
+        bench("prefill-sequential", 0, seq_iters, || {
+            eng.reset();
+            for &t in &toks {
+                eng.step_ref(t).unwrap();
+            }
+            std::hint::black_box(eng.pos);
+        })
+    });
+    let batched_4t = with_threads(4, || {
+        bench("prefill-batched-4t", 1, seq_iters + 1, || {
+            eng.reset();
+            eng.prefill(&toks).unwrap();
+            std::hint::black_box(eng.pos);
+        })
+    });
+    let prefill_speedup = sequential_1t.mean_us / batched_1t.mean_us;
+    crate::info!("prefill {n_prefill} tok: batched {:.1}ms vs sequential \
+                  {:.1}ms ({prefill_speedup:.1}x)",
+                 batched_1t.mean_us / 1e3, sequential_1t.mean_us / 1e3);
+
+    // decode tokens/sec by thread count; pos is pinned back to the prompt
+    // end so the KV window stays bounded while benching
+    let mut decode_rows = Vec::new();
+    let mut step_1t_us = 0f64;
+    for &t in &THREAD_COUNTS {
+        let r = with_threads(t, || {
+            eng.reset();
+            eng.prefill(&toks).unwrap();
+            bench("decode", 2, decode_iters, || {
+                if eng.pos >= max_ctx {
+                    eng.pos = n_prefill;
+                }
+                eng.step_ref(1).unwrap();
+            })
+        });
+        if t == 1 {
+            step_1t_us = r.mean_us;
+        }
+        decode_rows.push((t, 1e6 / r.mean_us, r.mean_us));
+        crate::info!("decode @{t}T: {:.1} tok/s", 1e6 / r.mean_us);
+    }
+
+    // dense decode estimate: swap measured packed linear latencies for
+    // dense ones at the same shapes (attention/head/norm cost unchanged)
+    let lin_shapes =
+        [(dim, dim, 4usize), (inter, dim, 2usize), (dim, inter, 1usize)];
+    let mut packed_lin_us = 0f64;
+    let mut dense_lin_us = 0f64;
+    let mut rng = Rng::new(77);
+    for &(o, i, count) in &lin_shapes {
+        let mut w = vec![0f32; o * i];
+        rng.fill_normal(&mut w, 0.0, 0.05);
+        let mut x = vec![0f32; i];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let mut y = vec![0f32; o];
+        let gp = minmax_init(&w, o, i, sch);
+        let wi = quantize(&w, &gp, sch);
+        let pl = PackedLinear::pack(&wi, o, i, &gp.s, &gp.z, sch)?;
+        let (rp, rd) = with_threads(1, || {
+            let rp = bench("lin-packed", 1, 5, || {
+                pl.matvec(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            let rd = bench("lin-dense", 1, 5, || {
+                dense_matvec(&w, o, i, &x, &mut y);
+                std::hint::black_box(&y);
+            });
+            (rp, rd)
+        });
+        packed_lin_us += rp.mean_us * count as f64 * n_layers as f64;
+        dense_lin_us += rd.mean_us * count as f64 * n_layers as f64;
+    }
+    let dense_step_est_us =
+        (step_1t_us - packed_lin_us + dense_lin_us).max(1e-3);
+    let dense_est_tps = 1e6 / dense_step_est_us;
+
+    let rows = vec![
+        vec!["config".into(),
+             format!("dim {dim}, inter {inter}, vocab {vocab}, \
+                      {n_layers} block(s), w2g128")],
+        vec![format!("prefill batched ({n_prefill} tok, 1T)"),
+             format!("{:.1} ms", batched_1t.mean_us / 1e3)],
+        vec![format!("prefill batched ({n_prefill} tok, 4T)"),
+             format!("{:.1} ms", batched_4t.mean_us / 1e3)],
+        vec![format!("prefill sequential step loop ({n_prefill} tok, 1T)"),
+             format!("{:.1} ms", sequential_1t.mean_us / 1e3)],
+        vec!["prefill speedup (batched vs sequential, 1T)".into(),
+             format!("{prefill_speedup:.1}x")],
+        vec!["decode tok/s @1T".into(),
+             format!("{:.1}", decode_rows[0].1)],
+        vec!["decode tok/s @4T".into(),
+             format!("{:.1}", decode_rows[1].1)],
+        vec!["decode tok/s @16T".into(),
+             format!("{:.1}", decode_rows[2].1)],
+        vec!["decode tok/s dense f32 (estimated, 1T)".into(),
+             format!("{dense_est_tps:.1}")],
+    ];
+    let md = format!(
+        "## Engine throughput - batched prefill + threaded decode \
+         (packed w2g128; dense row estimated by swapping measured linear \
+         latencies)\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+
+    let j = Json::obj(vec![
+        ("dim", Json::num(dim as f64)),
+        ("inter", Json::num(inter as f64)),
+        ("vocab", Json::num(vocab as f64)),
+        ("n_layers", Json::num(n_layers as f64)),
+        ("bits", Json::num(2.0)),
+        ("group", Json::num(128.0)),
+        ("prefill_tokens", Json::num(n_prefill as f64)),
+        ("prefill_batched_ms", Json::num(batched_1t.mean_us / 1e3)),
+        ("prefill_batched_4t_ms", Json::num(batched_4t.mean_us / 1e3)),
+        ("prefill_sequential_ms", Json::num(sequential_1t.mean_us / 1e3)),
+        ("prefill_speedup", Json::num(prefill_speedup)),
+        (
+            "decode",
+            Json::arr(
+                decode_rows
+                    .iter()
+                    .map(|&(t, tps, us)| {
+                        Json::obj(vec![
+                            ("threads", Json::num(t as f64)),
+                            ("tok_per_sec", Json::num(tps)),
+                            ("step_us", Json::num(us)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("decode_dense_est_tok_per_sec", Json::num(dense_est_tps)),
+    ]);
+    Ok((md, j))
+}
+
+/// Write a bench payload to `path` (creating parent dirs).
+pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, payload.dump())
+        .with_context(|| format!("writing {path}"))?;
+    Ok(())
+}
+
+/// Validate a `runs/bench.json` produced by [`inference_throughput`]:
+/// parses, checks schema 1, and requires non-empty matvec/decode sections
+/// with numeric fields. scripts/tier1.sh fails the build on error.
+pub fn check_bench_json(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("missing bench output {path}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    if j.get("schema")?.as_usize()? != 1 {
+        bail!("{path}: unsupported schema");
+    }
+    let mv = j.get("matvec")?.as_arr()?;
+    if mv.is_empty() {
+        bail!("{path}: empty matvec section");
+    }
+    for e in mv {
+        e.get("mean_us")?.as_f64()?;
+        e.get("threads")?.as_usize()?;
+        e.get("kind")?.as_str()?;
+    }
+    let eng = j.get("engine")?;
+    let speedup = eng.get("prefill_speedup")?.as_f64()?;
+    if !speedup.is_finite() || speedup <= 0.0 {
+        bail!("{path}: bad prefill_speedup {speedup}");
+    }
+    let dec = eng.get("decode")?.as_arr()?;
+    if dec.is_empty() {
+        bail!("{path}: empty decode section");
+    }
+    for d in dec {
+        d.get("tok_per_sec")?.as_f64()?;
+        d.get("threads")?.as_usize()?;
+    }
+    Ok(())
 }
 
 /// Sanity check used by the size table: llama shapes resolve.
@@ -150,5 +492,65 @@ mod tests {
             packed.mean_us,
             dense.mean_us
         );
+    }
+
+    #[test]
+    fn bench_json_roundtrip_and_validation() {
+        let good = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("kind", Json::str("inference_throughput")),
+            (
+                "matvec",
+                Json::arr(vec![Json::obj(vec![
+                    ("shape", Json::str("8x8")),
+                    ("kind", Json::str("int2")),
+                    ("threads", Json::num(1.0)),
+                    ("mean_us", Json::num(3.5)),
+                ])]),
+            ),
+            (
+                "engine",
+                Json::obj(vec![
+                    ("prefill_speedup", Json::num(4.2)),
+                    (
+                        "decode",
+                        Json::arr(vec![Json::obj(vec![
+                            ("threads", Json::num(1.0)),
+                            ("tok_per_sec", Json::num(10.0)),
+                        ])]),
+                    ),
+                ]),
+            ),
+        ]);
+        let dir = std::env::temp_dir().join("eqat-bench-test");
+        let path = dir.join("bench.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, &good).unwrap();
+        check_bench_json(&path).unwrap();
+
+        // malformed: missing decode section
+        let bad = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("matvec", Json::arr(vec![])),
+            ("engine", Json::obj(vec![])),
+        ]);
+        write_bench_json(&path, &bad).unwrap();
+        assert!(check_bench_json(&path).is_err());
+        assert!(check_bench_json("/nonexistent/bench.json").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fast_engine_throughput_smoke_shapes() {
+        // tiny engine exercising the same code path the bench drives;
+        // keeps the bench harness itself under test without the cost
+        let mut eng = Engine::synthetic(64, 4, 16, 128, 256, 1,
+                                        QuantScheme::new(2, 32), 12, 9)
+            .unwrap();
+        let toks: Vec<i32> = (0..6).map(|i| (i * 5 % 256) as i32).collect();
+        let lg = eng.prefill(&toks).unwrap();
+        assert_eq!(lg.len(), 256);
+        let lg2 = eng.step_ref(3).unwrap();
+        assert_eq!(lg2.len(), 256);
     }
 }

@@ -30,8 +30,10 @@ COMMANDS
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
-  bench <which>         qlinear (Table 10) | train-time (Tables 8/9)
-                        [--fast]
+  bench <which>         qlinear (Table 10) | inference (threaded decode +
+                        batched prefill -> runs/bench.json) | check
+                        (validate runs/bench.json) | train-time (Tables
+                        8/9)  [--fast]
   help                  this text
 
 FLAG DEFAULTS: --preset tiny --bits 2 --group <preset default>

@@ -1,9 +1,16 @@
 //! Uniform forward interface over the three evaluated model kinds:
 //! full-precision, quantized (dequant path), and quantized+LoRA.
 //! All run the `eval_batch x eval_ctx` logits executables.
+//!
+//! [`engine_logits`] is the pure-Rust sibling: the same
+//! `(batch*ctx) -> (batch*ctx*vocab)` contract evaluated on the packed
+//! inference engine's batched forward, with no PJRT runtime or artifacts
+//! required. This is what makes CPU-only eval (and `eval::ppl::
+//! perplexity_engine`) possible on a deployment box.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::infer::engine::Engine;
 use crate::model::quantized::QuantizedModel;
 use crate::runtime::{Arg, Runtime};
 
@@ -52,5 +59,75 @@ impl<'a> ModelRef<'a> {
                 ])
             }
         }
+    }
+}
+
+/// Batched eval forward on the pure-Rust engine: logits for every position
+/// of every row. `x` is (batch * ctx) i32, the result is
+/// (batch * ctx * vocab) f32 - the same contract as [`ModelRef::logits`],
+/// but no PJRT runtime needed. Each row runs through the engine's batched
+/// prefill (`Engine::forward_logits`); the KV cache is reset per row.
+pub fn engine_logits(eng: &mut Engine, x: &[i32], batch: usize, ctx: usize)
+                     -> Result<Vec<f32>> {
+    if x.len() != batch * ctx {
+        bail!("engine_logits: x has {} tokens, want {batch}x{ctx}",
+              x.len());
+    }
+    if ctx > eng.max_ctx {
+        bail!("engine_logits: ctx {ctx} exceeds engine max_ctx {}",
+              eng.max_ctx);
+    }
+    let v = eng.vocab;
+    let mut out = vec![0f32; batch * ctx * v];
+    for b in 0..batch {
+        eng.reset();
+        let row = &x[b * ctx..(b + 1) * ctx];
+        let lg = eng.forward_logits(row)?;
+        out[b * ctx * v..(b + 1) * ctx * v].copy_from_slice(&lg);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantScheme;
+
+    #[test]
+    fn engine_logits_matches_per_step_rows() {
+        let (vocab, ctx, batch) = (96usize, 6usize, 2usize);
+        let mut eng = Engine::synthetic(32, 4, 8, 64, vocab, 2,
+                                        QuantScheme::new(2, 32), ctx, 21)
+            .unwrap();
+        let x: Vec<i32> =
+            (0..batch * ctx).map(|i| ((i * 11 + 3) % vocab) as i32).collect();
+        let all = engine_logits(&mut eng, &x, batch, ctx).unwrap();
+        assert_eq!(all.len(), batch * ctx * vocab);
+
+        let mut step_eng = Engine::synthetic(32, 4, 8, 64, vocab, 2,
+                                             QuantScheme::new(2, 32), ctx,
+                                             21)
+            .unwrap();
+        for b in 0..batch {
+            step_eng.reset();
+            for (t, &tk) in x[b * ctx..(b + 1) * ctx].iter().enumerate() {
+                let lg = step_eng.step(tk).unwrap();
+                let row = &all[(b * ctx + t) * vocab
+                    ..(b * ctx + t + 1) * vocab];
+                for (i, (p, s)) in row.iter().zip(&lg).enumerate() {
+                    assert!((p - s).abs() <= 1e-4,
+                            "b={b} t={t} i={i}: {p} vs {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_logits_validates_shapes() {
+        let mut eng = Engine::synthetic(32, 4, 8, 64, 96, 1,
+                                        QuantScheme::new(2, 32), 4, 22)
+            .unwrap();
+        assert!(engine_logits(&mut eng, &[0, 1, 2], 2, 2).is_err());
+        assert!(engine_logits(&mut eng, &[0; 10], 2, 5).is_err());
     }
 }

@@ -1,13 +1,44 @@
 //! Perplexity evaluation (paper Table 3): mean token cross-entropy over
 //! held-out windows of a domain corpus, exp'd.
+//!
+//! Two backends share the NLL accounting: [`perplexity`] runs the PJRT
+//! eval executables, [`perplexity_engine`] runs the pure-Rust packed
+//! engine's batched forward (no artifacts needed) - useful for validating
+//! a deployed .eqt model on the serving box itself.
 
 use anyhow::Result;
 
 use crate::data::corpus::{Domain, World};
 use crate::data::loader::LmLoader;
-use crate::eval::fwd::ModelRef;
+use crate::eval::fwd::{engine_logits, ModelRef};
+use crate::infer::engine::Engine;
 use crate::runtime::Runtime;
 use crate::util::stats::logsumexp;
+
+/// Accumulate mean NLL over (x, y) batches given a logits provider.
+fn ppl_over_batches<F>(
+    loader: &mut LmLoader,
+    vocab: usize,
+    n_batches: usize,
+    mut logits_of: F,
+) -> Result<f64>
+where
+    F: FnMut(&[i32]) -> Result<Vec<f32>>,
+{
+    let mut total_nll = 0f64;
+    let mut total_tok = 0usize;
+    for _ in 0..n_batches {
+        let b = loader.next_batch();
+        let logits = logits_of(&b.x)?;
+        for (i, &y) in b.y.iter().enumerate() {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let nll = logsumexp(row) - row[y as usize] as f64;
+            total_nll += nll;
+            total_tok += 1;
+        }
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
 
 /// Perplexity over `n_batches` eval-geometry batches from `domain`
 /// (seeded disjoint from all training pools).
@@ -22,25 +53,52 @@ pub fn perplexity(
     let cfg = rt.manifest.preset(model.preset())?.config.clone();
     let mut loader =
         LmLoader::new(world, domain, seed, cfg.eval_batch, cfg.eval_ctx);
-    let mut total_nll = 0f64;
-    let mut total_tok = 0usize;
-    for _ in 0..n_batches {
-        let b = loader.next_batch();
-        let logits = model.logits(rt, &b.x)?;
-        let v = cfg.vocab;
-        for (i, &y) in b.y.iter().enumerate() {
-            let row = &logits[i * v..(i + 1) * v];
-            let nll = logsumexp(row) - row[y as usize] as f64;
-            total_nll += nll;
-            total_tok += 1;
-        }
-    }
-    Ok((total_nll / total_tok as f64).exp())
+    ppl_over_batches(&mut loader, cfg.vocab, n_batches, |x| {
+        model.logits(rt, x)
+    })
+}
+
+/// Perplexity of a packed model on the pure-Rust engine (batched eval
+/// forward, `eval::fwd::engine_logits`): same accounting as
+/// [`perplexity`], no PJRT runtime or artifacts required.
+#[allow(clippy::too_many_arguments)]
+pub fn perplexity_engine(
+    eng: &mut Engine,
+    world: &World,
+    domain: &Domain,
+    batch: usize,
+    ctx: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let vocab = eng.vocab;
+    let mut loader = LmLoader::new(world, domain, seed, batch, ctx);
+    ppl_over_batches(&mut loader, vocab, n_batches, |x| {
+        engine_logits(eng, x, batch, ctx)
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use crate::util::stats::logsumexp;
+
+    #[test]
+    fn engine_perplexity_is_finite_and_near_uniform_for_random_model() {
+        use crate::config::QuantScheme;
+        use crate::data::corpus::{domain_wiki, World};
+        use crate::infer::engine::Engine;
+        let vocab = 96usize;
+        let mut eng = Engine::synthetic(32, 4, 8, 64, vocab, 1,
+                                        QuantScheme::new(2, 32), 8, 31)
+            .unwrap();
+        let world = World::new(vocab, 5);
+        let ppl = super::perplexity_engine(&mut eng, &world, &domain_wiki(),
+                                           2, 8, 2, 77)
+            .unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "ppl={ppl}");
+        // an untrained model is near-uniform over the vocab
+        assert!(ppl < vocab as f64 * 4.0, "ppl={ppl}");
+    }
 
     #[test]
     fn uniform_logits_give_vocab_ppl() {

@@ -1,5 +1,9 @@
 //! Token generation loop over the pure-Rust engine: greedy or temperature
 //! sampling, with tokens/sec accounting for the serving example.
+//!
+//! The decode loop samples from `Engine::step_ref`'s borrowed logits view,
+//! so steady-state generation performs zero heap allocation per token
+//! (prefill is batched inside `Engine::prefill`).
 
 use anyhow::Result;
 
@@ -31,18 +35,20 @@ pub fn generate(
     engine.reset();
 
     let t0 = std::time::Instant::now();
-    let mut logits = engine.prefill(prompt)?;
+    let logits = engine.prefill(prompt)?;
     let prefill_secs = t0.elapsed().as_secs_f64();
 
     let t1 = std::time::Instant::now();
     let mut out = Vec::with_capacity(max_new);
+    let mut next = sample(&logits, sampler, &mut rng);
     for _ in 0..max_new {
         if engine.pos >= engine.max_ctx {
             break;
         }
-        let next = sample(&logits, sampler, &mut rng);
         out.push(next);
-        logits = engine.step(next)?;
+        // borrowed logits view: no per-token allocation
+        let lg = engine.step_ref(next)?;
+        next = sample(lg, sampler, &mut rng);
     }
     let decode_secs = t1.elapsed().as_secs_f64();
     let tps = out.len() as f64 / decode_secs.max(1e-9);
@@ -77,6 +83,20 @@ pub fn sample(logits: &[f32], sampler: Sampler, rng: &mut Rng) -> i32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn generates_with_synthetic_engine() {
+        use crate::config::QuantScheme;
+        let mut e = Engine::synthetic(32, 4, 8, 64, 96, 1,
+                                      QuantScheme::new(2, 32), 16, 3)
+            .unwrap();
+        let rep = generate(&mut e, &[1, 2, 3], 8, Sampler::Greedy, 9)
+            .unwrap();
+        assert_eq!(rep.tokens.len(), 8);
+        assert!(rep.decode_tok_per_sec > 0.0);
+        assert!(rep.prefill_secs >= 0.0);
+        assert_eq!(e.pos, 11); // 3 prompt + 8 generated
+    }
 
     #[test]
     fn greedy_picks_argmax() {

@@ -11,10 +11,45 @@
 //! occupy exactly g*bits/32 u32 words (all supported schemes have
 //! 32 | g*bits, so groups are word-aligned). Per group: one f32 scale, one
 //! f32 zero point (dequantized from the f16/N-bit stored forms at load).
+//!
+//! # Batching and threading (the serving hot path)
+//!
+//! Two levers turn the bandwidth win into wall-clock throughput:
+//!
+//! - [`PackedLinear::matmul`] applies one weight matrix to a whole batch of
+//!   token activations. Each weight group is unpacked (shift+mask) once per
+//!   thread and the dequantized values are re-used across every token in
+//!   the batch, so the unpack cost - which `matvec` pays on every call -
+//!   amortizes to ~1/n_tokens. This is what makes batched prefill >>
+//!   sequential `step()` loops (see `bench::inference_throughput`).
+//! - All of `matvec` / `matmul` / `dense_matvec` / `dense_matmul`
+//!   parallelize across output-row (resp. token) chunks on the scoped
+//!   thread helpers in `util::threads` (`EQAT_THREADS` to override the
+//!   worker count). The lm-head matvec over `vocab` rows is the single
+//!   largest serial loop in decode; row-chunking it is most of the
+//!   multi-thread decode speedup.
+//!
+//! Determinism: each output element is produced by exactly one worker with
+//! a fixed instruction order, so results are bit-identical across thread
+//! counts; `matmul` replicates `matvec`'s per-group accumulation order
+//! exactly (same FMA lanes), so batched and per-token paths are bit-exact
+//! too. Both properties are locked in by tests below.
+//!
+//! §Perf: 2-bit matvec beats f32 dense single-threaded because it is
+//! memory-bound and moves 16x fewer weight bytes (Table 10's mechanism);
+//! threading adds row-chunk scaling until the per-call spawn cost (~tens
+//! of us per scoped spawn) dominates, which is why small layers
+//! (`out*in < PAR_MIN_WORK`) stay serial. Current numbers: run
+//! `eqat bench inference` and read the table / `runs/bench.json`.
 
 use anyhow::{bail, Result};
 
 use crate::config::QuantScheme;
+use crate::util::threads;
+
+/// Below this many multiply-accumulates per call, a kernel stays serial:
+/// scoped-thread spawn overhead would exceed the work.
+const PAR_MIN_WORK: usize = 1 << 18;
 
 #[derive(Clone)]
 pub struct PackedLinear {
@@ -108,29 +143,94 @@ impl PackedLinear {
     ///
     /// Per group: y_r += s * (sum_k q_k x_k - z * sum_k x_k); the group
     /// sums of x are precomputed once per call and shared across rows.
+    /// Output rows are chunked across threads for large layers.
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        let mut sx = Vec::new();
+        self.matvec_in(x, y, &mut sx);
+    }
+
+    /// `matvec` with a caller-provided group-sum scratch buffer, so
+    /// steady-state decode does zero heap allocation (the buffer is
+    /// resized once and re-used across calls/layers).
+    pub fn matvec_in(&self, x: &[f32], y: &mut [f32], sx: &mut Vec<f32>) {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(y.len(), self.out_dim);
         let g = self.scheme.group;
         let gpr = self.groups_per_row();
         // group sums of x (shared across all rows)
-        let mut sx = vec![0f32; gpr];
+        sx.resize(gpr, 0.0);
         for (gi, s) in sx.iter_mut().enumerate() {
             *s = x[gi * g..(gi + 1) * g].iter().sum();
         }
-        match self.scheme.bits {
-            2 => self.matvec_b2(x, y, &sx),
-            4 => self.matvec_b4(x, y, &sx),
-            _ => self.matvec_generic(x, y, &sx),
-        }
+        let rows = if self.out_dim * self.in_dim < PAR_MIN_WORK {
+            self.out_dim
+        } else {
+            threads::chunk_len(self.out_dim)
+        };
+        let sxr: &[f32] = &sx[..];
+        threads::par_chunks_mut(y, rows, |ci, yc| {
+            let r0 = ci * rows;
+            match self.scheme.bits {
+                2 => self.matvec_rows_b2(x, sxr, r0, yc),
+                4 => self.matvec_rows_b4(x, sxr, r0, yc),
+                _ => self.matvec_rows_generic(x, sxr, r0, yc),
+            }
+        });
     }
 
-    fn matvec_b2(&self, x: &[f32], y: &mut [f32], sx: &[f32]) {
+    /// ys = xs @ W_hat^T for a whole token batch (the prefill/eval path).
+    ///
+    /// Layouts are token-major: `xs[t*in_dim + k]`, `ys[t*out_dim + r]`.
+    /// Each weight group is unpacked once and applied to every token,
+    /// amortizing the shift/mask work `matvec` pays per call; tokens are
+    /// chunked across threads. Accumulation order per (token, row) matches
+    /// `matvec` exactly, so results are bit-identical to per-token matvec
+    /// calls (tested).
+    pub fn matmul(&self, xs: &[f32], n_tokens: usize, ys: &mut [f32]) {
+        debug_assert_eq!(xs.len(), n_tokens * self.in_dim);
+        debug_assert_eq!(ys.len(), n_tokens * self.out_dim);
+        if n_tokens == 0 {
+            return;
+        }
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let d = self.in_dim;
+        // per-token group sums, same accumulation order as matvec's
+        let mut sxs = vec![0f32; n_tokens * gpr];
+        for t in 0..n_tokens {
+            let x = &xs[t * d..(t + 1) * d];
+            let st = &mut sxs[t * gpr..(t + 1) * gpr];
+            for (gi, s) in st.iter_mut().enumerate() {
+                *s = x[gi * g..(gi + 1) * g].iter().sum();
+            }
+        }
+        let tpc = if n_tokens * self.out_dim * d < PAR_MIN_WORK {
+            n_tokens
+        } else {
+            threads::chunk_len(n_tokens)
+        };
+        let sxr: &[f32] = &sxs;
+        threads::par_chunks_mut(ys, tpc * self.out_dim, |ci, yc| {
+            let t0 = ci * tpc;
+            let nt = yc.len() / self.out_dim;
+            let xc = &xs[t0 * d..(t0 + nt) * d];
+            let sc = &sxr[t0 * gpr..(t0 + nt) * gpr];
+            match self.scheme.bits {
+                2 => self.matmul_tokens_b2(xc, nt, sc, yc),
+                4 => self.matmul_tokens_b4(xc, nt, sc, yc),
+                _ => self.matmul_tokens_generic(xc, nt, sc, yc),
+            }
+        });
+    }
+
+    fn matvec_rows_b2(&self, x: &[f32], sx: &[f32], r0: usize,
+                      y: &mut [f32]) {
         let g = self.scheme.group;
         let gpr = self.groups_per_row();
         let wpg = g * 2 / 32; // words per group
         let wpr = self.words_per_row();
-        for r in 0..self.out_dim {
+        for (j, yr) in y.iter_mut().enumerate() {
+            let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
@@ -166,16 +266,18 @@ impl PackedLinear {
                 let z = self.zeros[r * gpr + gi];
                 acc += s * (dot - z * sx[gi]);
             }
-            y[r] = acc;
+            *yr = acc;
         }
     }
 
-    fn matvec_b4(&self, x: &[f32], y: &mut [f32], sx: &[f32]) {
+    fn matvec_rows_b4(&self, x: &[f32], sx: &[f32], r0: usize,
+                      y: &mut [f32]) {
         let g = self.scheme.group;
         let gpr = self.groups_per_row();
         let wpg = g * 4 / 32;
         let wpr = self.words_per_row();
-        for r in 0..self.out_dim {
+        for (j, yr) in y.iter_mut().enumerate() {
+            let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
@@ -201,19 +303,21 @@ impl PackedLinear {
                 let z = self.zeros[r * gpr + gi];
                 acc += s * (dot - z * sx[gi]);
             }
-            y[r] = acc;
+            *yr = acc;
         }
     }
 
     /// Any bit width (3-bit path): u64 sliding window over the bitstream.
-    fn matvec_generic(&self, x: &[f32], y: &mut [f32], sx: &[f32]) {
+    fn matvec_rows_generic(&self, x: &[f32], sx: &[f32], r0: usize,
+                           y: &mut [f32]) {
         let bits = self.scheme.bits as usize;
         let mask = (1u64 << bits) - 1;
         let g = self.scheme.group;
         let gpr = self.groups_per_row();
         let wpg = g * bits / 32;
         let wpr = self.words_per_row();
-        for r in 0..self.out_dim {
+        for (j, yr) in y.iter_mut().enumerate() {
+            let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
@@ -237,24 +341,221 @@ impl PackedLinear {
                 let z = self.zeros[r * gpr + gi];
                 acc += s * (dot - z * sx[gi]);
             }
-            y[r] = acc;
+            *yr = acc;
+        }
+    }
+
+    /// Batched 2-bit kernel: unpack each group once into `qbuf`, then run
+    /// the exact same 4-lane accumulation as `matvec_rows_b2` per token
+    /// (same FP order -> bit-exact with the matvec path).
+    fn matmul_tokens_b2(&self, xs: &[f32], n_tokens: usize, sxs: &[f32],
+                        ys: &mut [f32]) {
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * 2 / 32;
+        let wpr = self.words_per_row();
+        let (d, od) = (self.in_dim, self.out_dim);
+        let mut qbuf = vec![0f32; g];
+        for v in ys.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..od {
+            let row = &self.words[r * wpr..(r + 1) * wpr];
+            for gi in 0..gpr {
+                for (wi, &w) in
+                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
+                {
+                    let qb = &mut qbuf[wi * 16..(wi + 1) * 16];
+                    for (j, qv) in qb.iter_mut().enumerate() {
+                        *qv = ((w >> (2 * j)) & 3) as f32;
+                    }
+                }
+                let s = self.scales[r * gpr + gi];
+                let z = self.zeros[r * gpr + gi];
+                for t in 0..n_tokens {
+                    let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
+                    let (mut d0, mut d1, mut d2, mut d3) =
+                        (0f32, 0f32, 0f32, 0f32);
+                    for wi in 0..wpg {
+                        let qb = &qbuf[wi * 16..(wi + 1) * 16];
+                        let xb = &xg[wi * 16..(wi + 1) * 16];
+                        d0 += qb[0] * xb[0]
+                            + qb[4] * xb[4]
+                            + qb[8] * xb[8]
+                            + qb[12] * xb[12];
+                        d1 += qb[1] * xb[1]
+                            + qb[5] * xb[5]
+                            + qb[9] * xb[9]
+                            + qb[13] * xb[13];
+                        d2 += qb[2] * xb[2]
+                            + qb[6] * xb[6]
+                            + qb[10] * xb[10]
+                            + qb[14] * xb[14];
+                        d3 += qb[3] * xb[3]
+                            + qb[7] * xb[7]
+                            + qb[11] * xb[11]
+                            + qb[15] * xb[15];
+                    }
+                    let dot = (d0 + d1) + (d2 + d3);
+                    ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
+                }
+            }
+        }
+    }
+
+    /// Batched 4-bit kernel; see `matmul_tokens_b2` for the scheme.
+    fn matmul_tokens_b4(&self, xs: &[f32], n_tokens: usize, sxs: &[f32],
+                        ys: &mut [f32]) {
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * 4 / 32;
+        let wpr = self.words_per_row();
+        let (d, od) = (self.in_dim, self.out_dim);
+        let mut qbuf = vec![0f32; g];
+        for v in ys.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..od {
+            let row = &self.words[r * wpr..(r + 1) * wpr];
+            for gi in 0..gpr {
+                for (wi, &w) in
+                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
+                {
+                    let qb = &mut qbuf[wi * 8..(wi + 1) * 8];
+                    for (j, qv) in qb.iter_mut().enumerate() {
+                        *qv = ((w >> (4 * j)) & 15) as f32;
+                    }
+                }
+                let s = self.scales[r * gpr + gi];
+                let z = self.zeros[r * gpr + gi];
+                for t in 0..n_tokens {
+                    let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
+                    let mut dot = 0f32;
+                    let mut dot2 = 0f32;
+                    for wi in 0..wpg {
+                        let qb = &qbuf[wi * 8..(wi + 1) * 8];
+                        let xb = &xg[wi * 8..(wi + 1) * 8];
+                        dot += qb[0] * xb[0]
+                            + qb[2] * xb[2]
+                            + qb[4] * xb[4]
+                            + qb[6] * xb[6];
+                        dot2 += qb[1] * xb[1]
+                            + qb[3] * xb[3]
+                            + qb[5] * xb[5]
+                            + qb[7] * xb[7];
+                    }
+                    dot += dot2;
+                    ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
+                }
+            }
+        }
+    }
+
+    /// Batched any-bit kernel (3-bit path): sliding-window unpack once per
+    /// group, sequential dot per token (matches `matvec_rows_generic`).
+    fn matmul_tokens_generic(&self, xs: &[f32], n_tokens: usize,
+                             sxs: &[f32], ys: &mut [f32]) {
+        let bits = self.scheme.bits as usize;
+        let mask = (1u64 << bits) - 1;
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * bits / 32;
+        let wpr = self.words_per_row();
+        let (d, od) = (self.in_dim, self.out_dim);
+        let mut qbuf = vec![0f32; g];
+        for v in ys.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..od {
+            let row = &self.words[r * wpr..(r + 1) * wpr];
+            for gi in 0..gpr {
+                let gw = &row[gi * wpg..(gi + 1) * wpg];
+                let mut buf: u64 = 0;
+                let mut nbits = 0usize;
+                let mut wi = 0usize;
+                for qv in qbuf.iter_mut() {
+                    if nbits < bits {
+                        buf |= (gw[wi] as u64) << nbits;
+                        nbits += 32;
+                        wi += 1;
+                    }
+                    *qv = (buf & mask) as f32;
+                    buf >>= bits;
+                    nbits -= bits;
+                }
+                let s = self.scales[r * gpr + gi];
+                let z = self.zeros[r * gpr + gi];
+                for t in 0..n_tokens {
+                    let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
+                    let mut dot = 0f32;
+                    for (qv, xv) in qbuf.iter().zip(xg) {
+                        dot += qv * xv;
+                    }
+                    ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
+                }
+            }
         }
     }
 }
 
 /// Dense f32 matvec baseline (the "FP16" comparator of Table 10; CPU has no
 /// native f16 math - f32 moves 2x the bytes of f16, so reported speedups
-/// are conservative vs the paper's).
+/// are conservative vs the paper's). Row-chunked across threads for large
+/// layers, like the packed kernels.
 pub fn dense_matvec(w: &[f32], out_dim: usize, in_dim: usize, x: &[f32],
                     y: &mut [f32]) {
-    for r in 0..out_dim {
-        let row = &w[r * in_dim..(r + 1) * in_dim];
-        let mut acc = 0f32;
-        for k in 0..in_dim {
-            acc += row[k] * x[k];
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(y.len(), out_dim);
+    let rows = if out_dim * in_dim < PAR_MIN_WORK {
+        out_dim
+    } else {
+        threads::chunk_len(out_dim)
+    };
+    threads::par_chunks_mut(y, rows, |ci, yc| {
+        let r0 = ci * rows;
+        for (j, yr) in yc.iter_mut().enumerate() {
+            let row = &w[(r0 + j) * in_dim..(r0 + j + 1) * in_dim];
+            let mut acc = 0f32;
+            for k in 0..in_dim {
+                acc += row[k] * x[k];
+            }
+            *yr = acc;
         }
-        y[r] = acc;
+    });
+}
+
+/// Dense f32 batched matmul (token-major, like `PackedLinear::matmul`):
+/// `ys[t*out_dim + r] = W[r] . xs[t]`. Token-chunked across threads; per
+/// token the accumulation order matches `dense_matvec` (bit-exact).
+pub fn dense_matmul(w: &[f32], out_dim: usize, in_dim: usize, xs: &[f32],
+                    n_tokens: usize, ys: &mut [f32]) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(xs.len(), n_tokens * in_dim);
+    debug_assert_eq!(ys.len(), n_tokens * out_dim);
+    if n_tokens == 0 {
+        return;
     }
+    let tpc = if n_tokens * out_dim * in_dim < PAR_MIN_WORK {
+        n_tokens
+    } else {
+        threads::chunk_len(n_tokens)
+    };
+    threads::par_chunks_mut(ys, tpc * out_dim, |ci, yc| {
+        let t0 = ci * tpc;
+        let nt = yc.len() / out_dim;
+        for tl in 0..nt {
+            let x = &xs[(t0 + tl) * in_dim..(t0 + tl + 1) * in_dim];
+            let yt = &mut yc[tl * out_dim..(tl + 1) * out_dim];
+            for (r, yr) in yt.iter_mut().enumerate() {
+                let row = &w[r * in_dim..(r + 1) * in_dim];
+                let mut acc = 0f32;
+                for k in 0..in_dim {
+                    acc += row[k] * x[k];
+                }
+                *yr = acc;
+            }
+        }
+    });
 }
 
 #[cfg(test)]
@@ -262,6 +563,7 @@ mod tests {
     use super::*;
     use crate::quant::rtn::{dequantize, minmax_init, quantize};
     use crate::util::rng::Rng;
+    use crate::util::threads::with_threads;
 
     fn setup(bits: u32, group: usize, out_d: usize, in_d: usize, seed: u64)
              -> (PackedLinear, Vec<f32>) {
@@ -299,6 +601,87 @@ mod tests {
     }
 
     #[test]
+    fn matmul_is_bitexact_with_matvec_all_bits() {
+        for bits in [2u32, 3, 4] {
+            let (out_d, in_d, g) = (24, 128, 32);
+            let (pl, _) = setup(bits, g, out_d, in_d, 90 + bits as u64);
+            let n_tok = 5;
+            let mut r = Rng::new(91);
+            let mut xs = vec![0f32; n_tok * in_d];
+            r.fill_normal(&mut xs, 0.0, 1.0);
+            let mut ys = vec![0f32; n_tok * out_d];
+            pl.matmul(&xs, n_tok, &mut ys);
+            let mut y = vec![0f32; out_d];
+            for t in 0..n_tok {
+                pl.matvec(&xs[t * in_d..(t + 1) * in_d], &mut y);
+                for rr in 0..out_d {
+                    assert_eq!(
+                        ys[t * out_d + rr].to_bits(),
+                        y[rr].to_bits(),
+                        "bits={bits} t={t} r={rr}: {} vs {}",
+                        ys[t * out_d + rr],
+                        y[rr]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_kernels_are_deterministic() {
+        // large enough to clear PAR_MIN_WORK so row/token chunking kicks in
+        let (out_d, in_d) = (512, 1024);
+        let (pl, w_hat) = setup(2, 128, out_d, in_d, 95);
+        let n_tok = 3;
+        let mut r = Rng::new(96);
+        let mut xs = vec![0f32; n_tok * in_d];
+        r.fill_normal(&mut xs, 0.0, 1.0);
+
+        let run = || {
+            let mut y = vec![0f32; out_d];
+            pl.matvec(&xs[..in_d], &mut y);
+            let mut ys = vec![0f32; n_tok * out_d];
+            pl.matmul(&xs, n_tok, &mut ys);
+            let mut yd = vec![0f32; out_d];
+            dense_matvec(&w_hat, out_d, in_d, &xs[..in_d], &mut yd);
+            let mut ysd = vec![0f32; n_tok * out_d];
+            dense_matmul(&w_hat, out_d, in_d, &xs, n_tok, &mut ysd);
+            (y, ys, yd, ysd)
+        };
+        let single = with_threads(1, run);
+        for nt in [2usize, 4, 7] {
+            let multi = with_threads(nt, run);
+            assert!(
+                single.0 == multi.0
+                    && single.1 == multi.1
+                    && single.2 == multi.2
+                    && single.3 == multi.3,
+                "thread count {nt} changed results"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_matmul_is_bitexact_with_dense_matvec() {
+        let (out_d, in_d, n_tok) = (16, 48, 4);
+        let mut r = Rng::new(97);
+        let mut w = vec![0f32; out_d * in_d];
+        r.fill_normal(&mut w, 0.0, 0.5);
+        let mut xs = vec![0f32; n_tok * in_d];
+        r.fill_normal(&mut xs, 0.0, 1.0);
+        let mut ys = vec![0f32; n_tok * out_d];
+        dense_matmul(&w, out_d, in_d, &xs, n_tok, &mut ys);
+        let mut y = vec![0f32; out_d];
+        for t in 0..n_tok {
+            dense_matvec(&w, out_d, in_d, &xs[t * in_d..(t + 1) * in_d],
+                         &mut y);
+            for rr in 0..out_d {
+                assert_eq!(ys[t * out_d + rr].to_bits(), y[rr].to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn dequant_row_roundtrip() {
         for bits in [2u32, 3, 4] {
             let (out_d, in_d, g) = (8, 64, 32);
@@ -317,11 +700,15 @@ mod tests {
     }
 
     #[test]
-    fn packed_is_8x_smaller_at_2bit() {
+    fn packed_size_ratios_at_2bit() {
+        // f32 weights are 16x the packed 2-bit bytes; the fp16 deployment
+        // comparator (2 bytes/weight) is 8x.
         let (pl, _) = setup(2, 32, 16, 128, 80);
         let packed_bytes = pl.words.len() * 4;
-        let dense_bytes = 16 * 128 * 4;
-        assert_eq!(dense_bytes / packed_bytes, 16); // f32 vs 2-bit
+        let dense_f32_bytes = 16 * 128 * 4;
+        let dense_f16_bytes = 16 * 128 * 2;
+        assert_eq!(dense_f32_bytes / packed_bytes, 16);
+        assert_eq!(dense_f16_bytes / packed_bytes, 8);
     }
 
     #[test]

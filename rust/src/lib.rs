@@ -15,3 +15,4 @@ pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+pub mod xla_stub;

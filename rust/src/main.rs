@@ -167,18 +167,37 @@ fn run(args: &[String]) -> Result<()> {
             let which = cli.pos.first().map(String::as_str).unwrap_or("");
             match which {
                 "qlinear" => {
-                    let md = efficientqat::bench::qlinear_speed_table(
+                    let (md, rows) = efficientqat::bench::qlinear_speed_table(
                         cli.flag_bool("fast"))?;
                     println!("{md}");
                     std::fs::create_dir_all("runs")?;
-                    std::fs::write("runs/t10-qlinear.md", md)?;
+                    std::fs::write("runs/t10-qlinear.md", &md)?;
+                    efficientqat::bench::write_bench_json(
+                        "runs/t10-qlinear.json", &rows)?;
+                }
+                "inference" => {
+                    let (md, payload) =
+                        efficientqat::bench::inference_throughput(
+                            cli.flag_bool("fast"))?;
+                    println!("{md}");
+                    std::fs::create_dir_all("runs")?;
+                    std::fs::write("runs/inference.md", &md)?;
+                    efficientqat::bench::write_bench_json(
+                        "runs/bench.json", &payload)?;
+                    println!("wrote runs/bench.json");
+                }
+                "check" => {
+                    let path = cli.flag_or("path", "runs/bench.json");
+                    efficientqat::bench::check_bench_json(&path)?;
+                    println!("{path} OK");
                 }
                 "train-time" => {
                     let c = ctx(&cli)?;
                     tables::run(&c, "t8", &preset)?;
                     tables::run(&c, "t9", &preset)?;
                 }
-                _ => bail!("bench wants: qlinear | train-time"),
+                _ => bail!(
+                    "bench wants: qlinear | inference | check | train-time"),
             }
         }
         other => bail!("unknown command '{other}'; try `eqat help`"),

@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::io::manifest::{ArtifactSpec, Dtype, Manifest};
+use crate::xla_stub as xla;
 
 /// A host-side argument for an executable.
 pub enum Arg<'a> {

@@ -1,6 +1,7 @@
-//! Zero-dependency substrates: RNG, f16, JSON, stats, logging.
+//! Zero-dependency substrates: RNG, f16, JSON, stats, logging, threads.
 pub mod f16;
 pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+pub mod threads;

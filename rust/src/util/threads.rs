@@ -1,0 +1,259 @@
+//! Hand-rolled data-parallel helpers over `std::thread::scope` (rayon is
+//! unavailable offline).
+//!
+//! The inference hot path parallelizes over *disjoint output chunks*: a
+//! matvec splits its output rows, a batched matmul splits its tokens, and
+//! attention splits its heads. All of these reduce to "hand each worker a
+//! set of non-overlapping `&mut` chunks of one (or two, zipped) output
+//! buffers", which is expressible safely with scoped threads and
+//! `chunks_mut` - no unsafe, no allocator-backed task queue.
+//!
+//! Determinism guarantee: the helpers only *partition* work; each output
+//! element is computed by exactly one worker with the same per-element
+//! instruction sequence regardless of the thread count, so results are
+//! bit-identical for `EQAT_THREADS=1` and `EQAT_THREADS=N` (tested in
+//! `infer::qlinear` and `infer::engine`).
+//!
+//! Thread count: `EQAT_THREADS` env override, else
+//! `std::thread::available_parallelism()`. Benches and tests can override
+//! in-process with [`with_threads`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// `usize::MAX` means "no override": fall back to env/auto detection.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+fn detected_threads() -> usize {
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::env::var("EQAT_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Worker count used by the par_* helpers.
+pub fn num_threads() -> usize {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        usize::MAX => detected_threads(),
+        n => n.max(1),
+    }
+}
+
+/// Set (`Some(n)`) or clear (`None`) an in-process thread-count override.
+/// Prefer [`with_threads`], which restores the previous value.
+pub fn set_threads(n: Option<usize>) {
+    OVERRIDE.store(n.unwrap_or(usize::MAX), Ordering::Relaxed);
+}
+
+/// Run `f` with the thread count pinned to `n`, restoring afterwards.
+/// Serialized by a global lock so concurrent callers (e.g. parallel test
+/// threads) don't clobber each other's override.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    // drop guard so a panic inside `f` cannot leak the override into the
+    // rest of the process (declared after _g: restores before unlocking)
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(OVERRIDE.load(Ordering::Relaxed));
+    OVERRIDE.store(n.max(1), Ordering::Relaxed);
+    f()
+}
+
+/// Balanced chunk length: covers `n_items` in at most `num_threads()`
+/// chunks. Returns at least 1.
+pub fn chunk_len(n_items: usize) -> usize {
+    let nt = num_threads();
+    if n_items == 0 || nt <= 1 {
+        return n_items.max(1);
+    }
+    (n_items + nt - 1) / nt
+}
+
+/// Apply `f(chunk_index, chunk)` over contiguous `chunk`-sized pieces of
+/// `data`, distributing chunks across `num_threads()` scoped workers.
+/// `chunk_index * chunk` is the element offset of the chunk, exactly as
+/// with `slice::chunks_mut`. Runs inline when a single worker suffices.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk = chunk.max(1);
+    let n_chunks = (data.len() + chunk - 1) / chunk;
+    let nt = num_threads().min(n_chunks.max(1));
+    if nt <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut buckets: Vec<Vec<(usize, &mut [T])>> =
+            (0..nt).map(|_| Vec::new()).collect();
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            buckets[i % nt].push((i, c));
+        }
+        let fr = &f;
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, c) in bucket {
+                    fr(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_chunks_mut`] but over two buffers chunked in lockstep:
+/// `f(chunk_index, a_chunk, b_chunk)`. Both slices must split into the
+/// same number of chunks (asserted) - used e.g. for per-head attention
+/// where chunk i covers heads of both the context output and the score
+/// scratch.
+pub fn par_chunks2_mut<T, U, F>(
+    a: &mut [T],
+    chunk_a: usize,
+    b: &mut [U],
+    chunk_b: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    let (ca, cb) = (chunk_a.max(1), chunk_b.max(1));
+    let n_a = (a.len() + ca - 1) / ca;
+    let n_b = (b.len() + cb - 1) / cb;
+    assert_eq!(
+        n_a, n_b,
+        "par_chunks2_mut: chunk counts diverge ({n_a} vs {n_b})"
+    );
+    let nt = num_threads().min(n_a.max(1));
+    if nt <= 1 {
+        for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate()
+        {
+            f(i, x, y);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut buckets: Vec<Vec<(usize, &mut [T], &mut [U])>> =
+            (0..nt).map(|_| Vec::new()).collect();
+        for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate()
+        {
+            buckets[i % nt].push((i, x, y));
+        }
+        let fr = &f;
+        for bucket in buckets {
+            s.spawn(move || {
+                for (i, x, y) in bucket {
+                    fr(i, x, y);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let before = num_threads();
+        let inside = with_threads(3, num_threads);
+        assert_eq!(inside, 3);
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn par_chunks_covers_every_element_once() {
+        for nt in [1usize, 2, 5] {
+            with_threads(nt, || {
+                let mut data = vec![0u32; 103];
+                par_chunks_mut(&mut data, 10, |ci, c| {
+                    for (j, v) in c.iter_mut().enumerate() {
+                        *v += (ci * 10 + j) as u32 + 1;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as u32 + 1, "nt={nt} i={i}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn par_chunks_runs_each_chunk_exactly_once() {
+        let calls = AtomicUsize::new(0);
+        with_threads(4, || {
+            let mut data = vec![0u8; 64];
+            par_chunks_mut(&mut data, 16, |_, _| {
+                calls.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn par_chunks2_zips_consistently() {
+        with_threads(3, || {
+            let mut a = vec![0u32; 12]; // 4 chunks of 3
+            let mut b = vec![0u32; 20]; // 4 chunks of 5
+            par_chunks2_mut(&mut a, 3, &mut b, 5, |ci, ac, bc| {
+                for v in ac.iter_mut() {
+                    *v = ci as u32;
+                }
+                for v in bc.iter_mut() {
+                    *v = ci as u32 + 100;
+                }
+            });
+            assert_eq!(a, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+            for (i, v) in b.iter().enumerate() {
+                assert_eq!(*v as usize, i / 5 + 100);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk counts diverge")]
+    fn par_chunks2_rejects_mismatched_counts() {
+        let mut a = vec![0u32; 10];
+        let mut b = vec![0u32; 10];
+        par_chunks2_mut(&mut a, 2, &mut b, 3, |_, _, _| {});
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let mut data: Vec<u32> = Vec::new();
+        par_chunks_mut(&mut data, 4, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn chunk_len_bounds() {
+        assert!(chunk_len(0) >= 1);
+        with_threads(4, || {
+            assert_eq!(chunk_len(100), 25);
+            assert_eq!(chunk_len(101), 26);
+            assert_eq!(chunk_len(3), 1);
+        });
+    }
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite + a fast-mode inference
+# bench smoke that must produce a valid machine-readable perf snapshot
+# (runs/bench.json, schema 1). Run from anywhere; operates on the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+# bench smoke: small shapes, few iterations; fails the gate if
+# runs/bench.json is missing or malformed
+EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
+cargo run --release --bin eqat -- bench check
+
+echo "tier1 OK"

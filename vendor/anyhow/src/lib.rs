@@ -1,0 +1,167 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build must work without network access, so instead of pulling the
+//! real crate from a registry we vendor the exact surface this repository
+//! uses: [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and
+//! the [`Context`] extension trait. Semantics mirror upstream anyhow for
+//! that surface: `{e}` displays the outermost message, `{e:#}` displays the
+//! full context chain ("outer: ...: root cause"), and any
+//! `std::error::Error` converts via `?`.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. `chain[0]` is the root
+/// cause; later entries are contexts added by [`Context`].
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn push_context(mut self, c: String) -> Error {
+        self.chain.push(c);
+        self
+    }
+
+    /// Outermost message (what bare `{}` shows), mirroring anyhow.
+    pub fn to_string_outer(&self) -> String {
+        self.chain.last().cloned().unwrap_or_else(|| "error".into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.chain.is_empty() {
+            return write!(f, "error");
+        }
+        if f.alternate() {
+            // {:#}: outermost first, then each underlying cause
+            for (i, c) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{c}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // unwrap()/expect() on Result<_, Error> print this: show the full
+        // chain so test failures stay diagnosable.
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy context to an error, like anyhow's `Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = io_err()
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(format!("{}", f(-1).unwrap_err()).contains("negative: -1"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("root"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root");
+    }
+}
