@@ -3,7 +3,7 @@
 //! tokens/sec on a Llama-2-7B-shaped block (custom harness - criterion is
 //! unavailable offline; see rust/src/bench/mod.rs).
 //!
-//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 1)
+//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 2)
 //! so the throughput trajectory is tracked across PRs. `EQAT_BENCH_FAST=1`
 //! shrinks shapes/iterations for CI smoke runs; `EQAT_THREADS=N` caps the
 //! worker count.

@@ -10,10 +10,10 @@ use efficientqat::exp::{tables, ExpCtx};
 
 fn main() {
     efficientqat::util::logging::init();
-    let ctx = match ExpCtx::new("artifacts", "runs") {
+    let ctx = match ExpCtx::new("artifacts", "runs", "auto") {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("train_time bench skipped (no artifacts): {e}");
+            eprintln!("train_time bench skipped (no backend): {e}");
             return;
         }
     };

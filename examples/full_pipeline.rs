@@ -20,7 +20,7 @@ use efficientqat::eval::zeroshot::eval_zeroshot;
 use efficientqat::eval::ppl::perplexity;
 use efficientqat::infer::engine::Engine;
 use efficientqat::model::quantized::QuantizedModel;
-use efficientqat::runtime::Runtime;
+use efficientqat::runtime::make_backend;
 
 fn main() -> Result<()> {
     efficientqat::util::logging::init();
@@ -29,9 +29,9 @@ fn main() -> Result<()> {
     let steps: usize =
         args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
 
-    let rt = Runtime::new("artifacts")?;
-    let cfg = rt.manifest.preset(preset)?.config.clone();
-    let fpl = rt.manifest.layout(preset, "fp")?;
+    let rt = make_backend("auto", "artifacts")?;
+    let cfg = rt.manifest().preset(preset)?.config.clone();
+    let fpl = rt.manifest().layout(preset, "fp")?;
     let world = World::new(cfg.vocab, 7);
     let dom = domain_redpajama();
     println!("== end-to-end driver: preset {preset} ({:.1}M params), \
@@ -43,7 +43,7 @@ fn main() -> Result<()> {
                                    cfg.e2e_ctx);
     let opts = PretrainOpts { steps, lr: 3e-3, seed: 5, log_every: 25 };
     let t0 = std::time::Instant::now();
-    let (params, rep) = pretrain(&rt, preset, &mut loader, &opts)?;
+    let (params, rep) = pretrain(rt.as_ref(), preset, &mut loader, &opts)?;
     println!("[pretrain] {:.3} -> {:.3} in {:.1}s ({:.1} tok/s)",
              rep.losses[0], rep.losses.last().unwrap(), rep.seconds,
              (steps * cfg.e2e_batch * cfg.e2e_ctx) as f64 / rep.seconds);
@@ -57,8 +57,8 @@ fn main() -> Result<()> {
     // Phase 1+2: EfficientQAT at w4 and w2
     let mut summary = Vec::new();
     let fp_ref = ModelRef::Fp { preset, params: &params };
-    let (fp_suites, fp_acc) = eval_zeroshot(&rt, &fp_ref, &world, 60, 1234)?;
-    let fp_ppl = perplexity(&rt, &fp_ref, &world, &dom, 4, 99)?;
+    let (fp_suites, fp_acc) = eval_zeroshot(rt.as_ref(), &fp_ref, &world, 60, 1234)?;
+    let fp_ppl = perplexity(rt.as_ref(), &fp_ref, &world, &dom, 4, 99)?;
     summary.push(format!(
         "FP16: acc {:.1}% ppl {fp_ppl:.2}", 100.0 * fp_acc));
     for (s, a) in &fp_suites {
@@ -68,18 +68,18 @@ fn main() -> Result<()> {
     for bits in [4u32, 2] {
         let sch = QuantScheme::new(bits, cfg.default_group);
         let hp = TrainHp::default();
-        let (mut qm, prep) = efficient_qat(&rt, preset, &params, sch, &hp,
+        let (mut qm, prep) = efficient_qat(rt.as_ref(), preset, &params, sch, &hp,
                                            &world, &dom,
                                            PhaseToggle::default())?;
         qm.round_scales_f16();
-        let rtn = rtn_quantize_model(&rt, preset, &params, sch)?;
+        let rtn = rtn_quantize_model(rt.as_ref(), preset, &params, sch)?;
         let (_, acc_rtn) =
-            eval_zeroshot(&rt, &ModelRef::Quant(&rtn), &world, 60, 1234)?;
+            eval_zeroshot(rt.as_ref(), &ModelRef::Quant(&rtn), &world, 60, 1234)?;
         let (_, acc_eq) =
-            eval_zeroshot(&rt, &ModelRef::Quant(&qm), &world, 60, 1234)?;
-        let ppl_rtn = perplexity(&rt, &ModelRef::Quant(&rtn), &world, &dom,
+            eval_zeroshot(rt.as_ref(), &ModelRef::Quant(&qm), &world, 60, 1234)?;
+        let ppl_rtn = perplexity(rt.as_ref(), &ModelRef::Quant(&rtn), &world, &dom,
                                  4, 99)?;
-        let ppl_eq = perplexity(&rt, &ModelRef::Quant(&qm), &world, &dom,
+        let ppl_eq = perplexity(rt.as_ref(), &ModelRef::Quant(&qm), &world, &dom,
                                 4, 99)?;
         summary.push(format!(
             "{}: RTN acc {:.1}% ppl {ppl_rtn:.2} | EfficientQAT acc \
@@ -94,12 +94,12 @@ fn main() -> Result<()> {
             qm.save(&path)?;
             let back = QuantizedModel::load(&path)?;
             assert_eq!(back.wq, qm.wq, "packed roundtrip mismatch");
-            let info = rt.manifest.preset(preset)?;
+            let info = rt.manifest().preset(preset)?;
             let mut eng = Engine::new(&back, info, cfg.eval_ctx)?;
             let mut l = LmLoader::new(&world, &dom, 3, cfg.eval_batch,
                                       cfg.eval_ctx);
             let b = l.next_batch();
-            let xla = ModelRef::Quant(&back).logits(&rt, &b.x)?;
+            let xla = ModelRef::Quant(&back).logits(rt.as_ref(), &b.x)?;
             let mut max_err = 0f32;
             for (t, &tok) in b.x[..cfg.eval_ctx].iter().enumerate() {
                 let lg = eng.step(tok)?;

@@ -16,20 +16,20 @@ use efficientqat::data::corpus::{domain_redpajama, World};
 use efficientqat::data::loader::{InstrLoader, LmLoader};
 use efficientqat::eval::fwd::ModelRef;
 use efficientqat::eval::zeroshot::eval_mmlu;
-use efficientqat::runtime::Runtime;
+use efficientqat::runtime::make_backend;
 
 fn main() -> Result<()> {
     efficientqat::util::logging::init();
-    let rt = Runtime::new("artifacts")?;
+    let rt = make_backend("auto", "artifacts")?;
     let preset = "tiny";
-    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let cfg = rt.manifest().preset(preset)?.config.clone();
     let world = World::new(cfg.vocab, 7);
     let dom = domain_redpajama();
 
     let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
                                    cfg.e2e_ctx);
     let opts = PretrainOpts { steps: 250, lr: 3e-3, seed: 5, log_every: 50 };
-    let (params, _) = pretrain(&rt, preset, &mut loader, &opts)?;
+    let (params, _) = pretrain(rt.as_ref(), preset, &mut loader, &opts)?;
 
     let sch = QuantScheme::new(2, cfg.default_group);
     let hp = TrainHp::default();
@@ -40,35 +40,35 @@ fn main() -> Result<()> {
     };
 
     let base_acc = eval_mmlu(
-        &rt, &ModelRef::Fp { preset, params: &params }, &world, 555)?;
+        rt.as_ref(), &ModelRef::Fp { preset, params: &params }, &world, 555)?;
     println!("base fp16 (no tuning): MMLU-like {:.1}%", 100.0 * base_acc);
 
     // PEQA: RTN + step-size tuning
-    let (peqa, _) = run_peqa(&rt, preset, &params, sch, &mk_batches(), &hp)?;
+    let (peqa, _) = run_peqa(rt.as_ref(), preset, &params, sch, &mk_batches(), &hp)?;
     println!(
         "PEQA {}: {:.1}%",
         sch.tag(),
-        100.0 * eval_mmlu(&rt, &ModelRef::Quant(&peqa), &world, 555)?
+        100.0 * eval_mmlu(rt.as_ref(), &ModelRef::Quant(&peqa), &world, 555)?
     );
 
     // QLoRA at 4-bit base (its standard regime)
-    let qbase = rtn_quantize_model(&rt, preset, &params,
+    let qbase = rtn_quantize_model(rt.as_ref(), preset, &params,
                                    QuantScheme::new(4, cfg.default_group))?;
-    let (lora, _) = run_qlora(&rt, &qbase, &mk_batches(), 1, 2e-3, 33)?;
+    let (lora, _) = run_qlora(rt.as_ref(), &qbase, &mk_batches(), 1, 2e-3, 33)?;
     println!(
         "QLoRA w4+16: {:.1}%",
-        100.0 * eval_mmlu(&rt, &ModelRef::Lora { qm: &qbase, lora: &lora },
+        100.0 * eval_mmlu(rt.as_ref(), &ModelRef::Lora { qm: &qbase, lora: &lora },
                           &world, 555)?
     );
 
     // EfficientQAT: Block-AP init then instruction E2E-QP
-    let (mut eq, _) = efficient_qat(&rt, preset, &params, sch, &hp, &world,
+    let (mut eq, _) = efficient_qat(rt.as_ref(), preset, &params, sch, &hp, &world,
                                     &dom,
                                     PhaseToggle { block_ap: true,
                                                   e2e_qp: false })?;
-    let before = eval_mmlu(&rt, &ModelRef::Quant(&eq), &world, 555)?;
-    run_e2e_qp(&rt, &mut eq, &mk_batches(), &hp)?;
-    let after = eval_mmlu(&rt, &ModelRef::Quant(&eq), &world, 555)?;
+    let before = eval_mmlu(rt.as_ref(), &ModelRef::Quant(&eq), &world, 555)?;
+    run_e2e_qp(rt.as_ref(), &mut eq, &mk_batches(), &hp)?;
+    let after = eval_mmlu(rt.as_ref(), &ModelRef::Quant(&eq), &world, 555)?;
     println!(
         "EfficientQAT {}: {:.1}% -> {:.1}% after instruction E2E-QP",
         sch.tag(), 100.0 * before, 100.0 * after

@@ -2,7 +2,10 @@
 //! 2-bit with EfficientQAT (Block-AP + E2E-QP), compare against RTN, save
 //! the packed model, and generate text with the pure-Rust engine.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! Runs on the native pure-Rust backend out of the box; `make artifacts`
+//! switches it to the PJRT AOT path automatically (backend "auto").
 
 use anyhow::Result;
 use efficientqat::config::{QuantScheme, TrainHp};
@@ -16,13 +19,13 @@ use efficientqat::eval::ppl::perplexity;
 use efficientqat::infer::engine::Engine;
 use efficientqat::infer::generate::{generate, Sampler};
 use efficientqat::model::quantized::QuantizedModel;
-use efficientqat::runtime::Runtime;
+use efficientqat::runtime::make_backend;
 
 fn main() -> Result<()> {
     efficientqat::util::logging::init();
-    let rt = Runtime::new("artifacts")?;
+    let rt = make_backend("auto", "artifacts")?;
     let preset = "tiny";
-    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let cfg = rt.manifest().preset(preset)?.config.clone();
     let world = World::new(cfg.vocab, 7);
     let dom = domain_redpajama();
 
@@ -31,7 +34,7 @@ fn main() -> Result<()> {
     let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
                                    cfg.e2e_ctx);
     let opts = PretrainOpts { steps: 200, lr: 3e-3, seed: 5, log_every: 40 };
-    let (params, rep) = pretrain(&rt, preset, &mut loader, &opts)?;
+    let (params, rep) = pretrain(rt.as_ref(), preset, &mut loader, &opts)?;
     println!("loss {:.3} -> {:.3} in {:.1}s",
              rep.losses[0], rep.losses.last().unwrap(), rep.seconds);
 
@@ -39,20 +42,20 @@ fn main() -> Result<()> {
     let sch = QuantScheme::new(2, cfg.default_group);
     println!("== EfficientQAT {} ==", sch.tag());
     let hp = TrainHp::default();
-    let (mut qm, prep) = efficient_qat(&rt, preset, &params, sch, &hp,
+    let (mut qm, prep) = efficient_qat(rt.as_ref(), preset, &params, sch, &hp,
                                        &world, &dom,
                                        PhaseToggle::default())?;
     qm.round_scales_f16();
     println!("pipeline done in {:.1}s", prep.total_seconds);
 
     // 3. compare: FP16, RTN, EfficientQAT perplexity
-    let rtn = rtn_quantize_model(&rt, preset, &params, sch)?;
+    let rtn = rtn_quantize_model(rt.as_ref(), preset, &params, sch)?;
     for (name, m) in [
         ("FP16", ModelRef::Fp { preset, params: &params }),
         ("RTN w2", ModelRef::Quant(&rtn)),
         ("EfficientQAT w2", ModelRef::Quant(&qm)),
     ] {
-        let ppl = perplexity(&rt, &m, &world, &dom, 4, 99)?;
+        let ppl = perplexity(rt.as_ref(), &m, &world, &dom, 4, 99)?;
         println!("{name:>16}: ppl {ppl:.2}");
     }
 
@@ -63,7 +66,7 @@ fn main() -> Result<()> {
     println!("packed model: {path} ({:.2} MB)",
              qm.packed_bytes() as f64 / 1e6);
     let qm2 = QuantizedModel::load(&path)?;
-    let info = rt.manifest.preset(preset)?;
+    let info = rt.manifest().preset(preset)?;
     let mut eng = Engine::new(&qm2, info, cfg.eval_ctx)?;
     let prompt = vec![0, world.topic_tokens(3)[0], world.topic_tokens(3)[1]];
     let g = generate(&mut eng, &prompt, 32, Sampler::Temperature(0.8), 7)?;

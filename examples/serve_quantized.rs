@@ -19,35 +19,35 @@ use efficientqat::data::loader::LmLoader;
 use efficientqat::infer::engine::Engine;
 use efficientqat::infer::generate::{generate, Sampler};
 use efficientqat::model::quantized::QuantizedModel;
-use efficientqat::runtime::Runtime;
+use efficientqat::runtime::make_backend;
 
 fn main() -> Result<()> {
     efficientqat::util::logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let rt = Runtime::new("artifacts")?;
+    let rt = make_backend("auto", "artifacts")?;
 
     // load packed model, or build one on the spot
     let qm = match args.first() {
         Some(p) => QuantizedModel::load(p)?,
         None => {
             let preset = "tiny";
-            let cfg = rt.manifest.preset(preset)?.config.clone();
+            let cfg = rt.manifest().preset(preset)?.config.clone();
             let world = World::new(cfg.vocab, 7);
             let dom = domain_redpajama();
             let mut loader = LmLoader::new(&world, &dom, 11, cfg.e2e_batch,
                                            cfg.e2e_ctx);
             let opts = PretrainOpts { steps: 150, lr: 3e-3, seed: 5,
                                       log_every: 0 };
-            let (params, _) = pretrain(&rt, preset, &mut loader, &opts)?;
+            let (params, _) = pretrain(rt.as_ref(), preset, &mut loader, &opts)?;
             let sch = QuantScheme::new(2, cfg.default_group);
             let (mut qm, _) = efficient_qat(
-                &rt, preset, &params, sch, &TrainHp::default(), &world,
+                rt.as_ref(), preset, &params, sch, &TrainHp::default(), &world,
                 &dom, PhaseToggle::default())?;
             qm.round_scales_f16();
             qm
         }
     };
-    let info = rt.manifest.preset(&qm.preset)?;
+    let info = rt.manifest().preset(&qm.preset)?;
     let cfg = info.config.clone();
     let world = World::new(cfg.vocab, 7);
     println!(

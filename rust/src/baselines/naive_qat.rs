@@ -9,7 +9,7 @@ use crate::coordinator::block_ap::rtn_quantize_model;
 use crate::coordinator::opt::{AdamState, LrSchedule};
 use crate::data::loader::LmBatch;
 use crate::model::quantized::QuantizedModel;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 
 pub struct NaiveQatReport {
     pub losses: Vec<f32>,
@@ -21,7 +21,7 @@ pub struct NaiveQatReport {
 /// Train from the pretrained fp params; returns the final RTN-quantized
 /// model (dynamic scales frozen into the standard format at the end).
 pub fn run_naive_qat(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,

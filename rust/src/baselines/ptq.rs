@@ -15,7 +15,7 @@ use crate::model::quantized::QuantizedModel;
 use crate::quant::awq::{awq_quantize, x2_mean};
 use crate::quant::gptq::gptq_quantize;
 use crate::quant::rtn::GroupParams;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PtqMethod {
@@ -37,7 +37,7 @@ const LIN_SRC: [(&str, usize); 7] = [
 
 /// Quantize a pretrained fp model with GPTQ or AWQ.
 pub fn ptq_quantize_model(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,
@@ -45,14 +45,14 @@ pub fn ptq_quantize_model(
     method: PtqMethod,
     max_rows: usize,
 ) -> Result<QuantizedModel> {
-    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let cfg = rt.manifest().preset(preset)?.config.clone();
     let g = sch.group;
-    let fpl = rt.manifest.layout(preset, "fp")?.clone();
-    let bl = rt.manifest.layout(preset, "block")?.clone();
-    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
-    let wql = rt.manifest.layout(preset, "wq")?.clone();
-    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
-    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+    let fpl = rt.manifest().layout(preset, "fp")?.clone();
+    let bl = rt.manifest().layout(preset, "block")?.clone();
+    let qbl = rt.manifest().layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest().layout(preset, "wq")?.clone();
+    let qpl = rt.manifest().layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest().layout(preset, "fpr")?.clone();
 
     let embed = rt.exec(preset, "embed_fwd")?;
     let capture = rt.exec(preset, "block_capture_fp")?;

@@ -12,12 +12,12 @@ use crate::coordinator::block_ap::rtn_quantize_model;
 use crate::coordinator::e2e_qp::{run_e2e_qp, E2eBatch, E2eReport};
 use crate::coordinator::opt::{AdamState, LrSchedule};
 use crate::model::quantized::QuantizedModel;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 use crate::util::rng::Rng;
 
 /// PEQA: RTN quantization + s-only end-to-end tuning.
 pub fn run_peqa(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,
@@ -37,8 +37,8 @@ pub struct QloraReport {
 }
 
 /// LoRA init matching the convention: A ~ N(0, 0.02), B = 0.
-pub fn init_lora(rt: &Runtime, preset: &str, seed: u64) -> Result<Vec<f32>> {
-    let ll = rt.manifest.layout(preset, "lora")?;
+pub fn init_lora(rt: &dyn Backend, preset: &str, seed: u64) -> Result<Vec<f32>> {
+    let ll = rt.manifest().layout(preset, "lora")?;
     let mut lora = vec![0f32; ll.size];
     let mut rng = Rng::new(seed).fork("lora");
     for e in &ll.entries {
@@ -52,7 +52,7 @@ pub fn init_lora(rt: &Runtime, preset: &str, seed: u64) -> Result<Vec<f32>> {
 
 /// QLoRA: train LoRA over a frozen quantized base.
 pub fn run_qlora(
-    rt: &Runtime,
+    rt: &dyn Backend,
     qm: &QuantizedModel,
     batches: &[E2eBatch],
     epochs: usize,
@@ -101,17 +101,17 @@ pub fn run_qlora(
 /// Merge LoRA into the dequantized base -> full-precision flat params
 /// (the step that reverts QLoRA models to FP16, paper §2).
 pub fn merge_lora(
-    rt: &Runtime,
+    rt: &dyn Backend,
     qm: &QuantizedModel,
     lora: &[f32],
 ) -> Result<Vec<f32>> {
     let preset = &qm.preset;
     let g = qm.scheme.group;
-    let fpl = rt.manifest.layout(preset, "fp")?;
-    let wql = rt.manifest.layout(preset, "wq")?;
-    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?;
-    let fprl = rt.manifest.layout(preset, "fpr")?;
-    let ll = rt.manifest.layout(preset, "lora")?;
+    let fpl = rt.manifest().layout(preset, "fp")?;
+    let wql = rt.manifest().layout(preset, "wq")?;
+    let qpl = rt.manifest().layout(preset, &format!("qp_g{g}"))?;
+    let fprl = rt.manifest().layout(preset, "fpr")?;
+    let ll = rt.manifest().layout(preset, "lora")?;
 
     let mut fp = vec![0f32; fpl.size];
     // fp remainder

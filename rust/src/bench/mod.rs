@@ -5,7 +5,8 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 1) so the perf trajectory is trackable across PRs;
+//! (schema 2 = inference sections + native train_step) so the perf
+//! trajectory is trackable across PRs;
 //! [`check_bench_json`] validates it (used by scripts/tier1.sh).
 
 use std::time::Instant;
@@ -142,21 +143,130 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (eng_md, eng_json) = engine_throughput_table(fast)?;
     md.push_str(&eng_md);
+    md.push('\n');
+    let (ts_md, ts_json) = train_step_throughput(fast)?;
+    md.push_str(&ts_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        // schema 2 = schema 1 + the train_step section
+        ("schema", Json::num(2.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
         ("threads_available", Json::num(threads::num_threads() as f64)),
         ("matvec", mv_json),
         ("engine", eng_json),
+        ("train_step", ts_json),
     ]);
     Ok((md, payload))
+}
+
+/// Native-backend training-step throughput on the `synthetic` preset:
+/// one Block-AP step (block fwd+bwd with STE fake-quant + Adam) and one
+/// E2E-QP step (full-model dequant fwd+bwd over the step sizes). Tracked
+/// in runs/bench.json so train-path perf regressions show up across PRs
+/// alongside the inference numbers.
+pub fn train_step_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::coordinator::block_ap::{extract_block, init_block_qp,
+                                       rtn_quantize_model};
+    use crate::model::init::init_fp_params;
+    use crate::runtime::{native::NativeBackend, Arg, Backend};
+
+    let be = NativeBackend::new();
+    let preset = "synthetic";
+    let cfg = be.manifest().preset(preset)?.config.clone();
+    let g = cfg.default_group;
+    let sch = QuantScheme::new(2, g);
+    let fpl = be.manifest().layout(preset, "fp")?.clone();
+    let bl = be.manifest().layout(preset, "block")?.clone();
+    let qbl = be.manifest()
+        .layout(preset, &format!("qp_block_g{g}"))?
+        .clone();
+    let qpl = be.manifest().layout(preset, &format!("qp_g{g}"))?.clone();
+
+    let params = init_fp_params(&fpl, 7);
+    let bp = extract_block(&params, &fpl, &bl, 0)?;
+    let qp = init_block_qp(&bp, &bl, &qbl, sch)?;
+    let m_w = vec![0f32; bl.size];
+    let v_w = vec![0f32; bl.size];
+    let m_q = vec![0f32; qbl.size];
+    let v_q = vec![0f32; qbl.size];
+    let lo = vec![-1e30f32; bl.size];
+    let hi = vec![1e30f32; bl.size];
+    let mrows = cfg.block_batch * cfg.block_ctx;
+    let mut rng = Rng::new(55);
+    let mut h = vec![0f32; mrows * cfg.dim];
+    rng.fill_normal(&mut h, 0.0, 1.0);
+    let mut target = vec![0f32; mrows * cfg.dim];
+    rng.fill_normal(&mut target, 0.0, 1.0);
+    let qmax = [sch.qmax()];
+
+    let iters = if fast { 3 } else { 10 };
+    let step_exec = be.exec_g(preset, "block_ap_step", g)?;
+    let r_block = bench("block_ap_step", 1, iters, || {
+        let outs = step_exec
+            .run(&[
+                Arg::F32(&bp), Arg::F32(&qp), Arg::F32(&m_w),
+                Arg::F32(&v_w), Arg::F32(&m_q), Arg::F32(&v_q),
+                Arg::F32(&lo), Arg::F32(&hi), Arg::F32(&h),
+                Arg::F32(&target), Arg::F32(&qmax), Arg::Scalar(1.0),
+                Arg::Scalar(1e-3), Arg::Scalar(1e-3), Arg::Scalar(1.0),
+                Arg::Scalar(1.0), Arg::Scalar(1.0), Arg::Scalar(0.0),
+            ])
+            .unwrap();
+        std::hint::black_box(outs.len());
+    });
+
+    let qm = rtn_quantize_model(&be, preset, &params, sch)?;
+    let e2e_exec = be.exec_g(preset, "e2e_qp_step", g)?;
+    let n = cfg.e2e_batch * cfg.e2e_ctx;
+    let x: Vec<i32> =
+        (0..n).map(|i| ((i * 13 + 2) % cfg.vocab) as i32).collect();
+    let y: Vec<i32> =
+        (0..n).map(|i| ((i * 13 + 3) % cfg.vocab) as i32).collect();
+    let mask = vec![1.0f32; n];
+    let m_e = vec![0f32; qpl.size];
+    let v_e = vec![0f32; qpl.size];
+    let r_e2e = bench("e2e_qp_step", 1, iters, || {
+        let outs = e2e_exec
+            .run(&[
+                Arg::F32(&qm.wq), Arg::F32(&qm.qp), Arg::F32(&qm.fpr),
+                Arg::F32(&m_e), Arg::F32(&v_e), Arg::I32(&x),
+                Arg::I32(&y), Arg::F32(&mask), Arg::Scalar(1.0),
+                Arg::Scalar(1e-3), Arg::Scalar(1.0), Arg::Scalar(0.0),
+            ])
+            .unwrap();
+        std::hint::black_box(outs.len());
+    });
+
+    let rows = vec![
+        vec!["preset".into(), preset.to_string()],
+        vec!["block_ap_step".into(),
+             format!("{:.0} us ({:.1}/s)", r_block.mean_us,
+                     1e6 / r_block.mean_us)],
+        vec!["e2e_qp_step".into(),
+             format!("{:.0} us ({:.1}/s)", r_e2e.mean_us,
+                     1e6 / r_e2e.mean_us)],
+    ];
+    let md = format!(
+        "## Native train-step throughput ({} w2g{g})\n\n{}",
+        preset,
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("preset", Json::str(preset)),
+        ("bits", Json::num(2.0)),
+        ("group", Json::num(g as f64)),
+        ("block_ap_step_us", Json::num(r_block.mean_us)),
+        ("block_ap_steps_per_sec", Json::num(1e6 / r_block.mean_us)),
+        ("e2e_qp_step_us", Json::num(r_e2e.mean_us)),
+        ("e2e_qp_steps_per_sec", Json::num(1e6 / r_e2e.mean_us)),
+    ]);
+    Ok((md, j))
 }
 
 fn matvec_thread_table(fast: bool) -> Result<(String, Json)> {
@@ -406,14 +516,16 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 }
 
 /// Validate a `runs/bench.json` produced by [`inference_throughput`]:
-/// parses, checks schema 1, and requires non-empty matvec/decode sections
+/// parses, checks the schema (1 legacy, 2 adds train_step), and
+/// requires non-empty matvec/decode sections
 /// with numeric fields. scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
-    if j.get("schema")?.as_usize()? != 1 {
-        bail!("{path}: unsupported schema");
+    let schema = j.get("schema")?.as_usize()?;
+    if schema != 1 && schema != 2 {
+        bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
     if mv.is_empty() {
@@ -436,6 +548,17 @@ pub fn check_bench_json(path: &str) -> Result<()> {
     for d in dec {
         d.get("tok_per_sec")?.as_f64()?;
         d.get("threads")?.as_usize()?;
+    }
+    // schema 2 adds the native train-step section; schema-1 snapshots
+    // from older PRs stay valid
+    if schema >= 2 {
+        let ts = j.get("train_step")?;
+        for key in ["block_ap_step_us", "e2e_qp_step_us"] {
+            let v = ts.get(key)?.as_f64()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: bad train_step.{key} {v}");
+            }
+        }
     }
     Ok(())
 }
@@ -497,7 +620,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(1.0)),
+            ("schema", Json::num(2.0)),
             ("kind", Json::str("inference_throughput")),
             (
                 "matvec",
@@ -521,11 +644,39 @@ mod tests {
                     ),
                 ]),
             ),
+            (
+                "train_step",
+                Json::obj(vec![
+                    ("block_ap_step_us", Json::num(1500.0)),
+                    ("e2e_qp_step_us", Json::num(4000.0)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
         let path = path.to_str().unwrap().to_string();
         write_bench_json(&path, &good).unwrap();
+        check_bench_json(&path).unwrap();
+
+        // schema-2 file without train_step is rejected...
+        let mut no_ts = Vec::new();
+        if let Json::Obj(fields) = &good {
+            for (k, v) in fields {
+                if k != "train_step" {
+                    no_ts.push((k.as_str(), v.clone()));
+                }
+            }
+        }
+        write_bench_json(&path, &Json::obj(no_ts.clone())).unwrap();
+        assert!(check_bench_json(&path).is_err());
+        // ...but the same sections under legacy schema 1 stay valid
+        let legacy: Vec<(&str, Json)> = no_ts
+            .into_iter()
+            .map(|(k, v)| {
+                if k == "schema" { (k, Json::num(1.0)) } else { (k, v) }
+            })
+            .collect();
+        write_bench_json(&path, &Json::obj(legacy)).unwrap();
         check_bench_json(&path).unwrap();
 
         // malformed: missing decode section

@@ -13,11 +13,20 @@ pub struct Cli {
 }
 
 pub const USAGE: &str = "\
-eqat - EfficientQAT reproduction (Rust + JAX/Pallas AOT via PJRT)
+eqat - EfficientQAT reproduction (pure-Rust native backend + optional
+       JAX/Pallas AOT artifacts via PJRT)
 
 USAGE: eqat <command> [args] [--flag value]...
 
 COMMANDS
+  train                 full pipeline: pretrain (cached) -> Block-AP ->
+                        E2E-QP -> ppl vs RTN baseline. Runs offline on the
+                        native backend with no artifacts.
+                        [--preset P --bits N --group G --backend B
+                         --pretrain-steps N --block-samples N
+                         --block-epochs N --e2e-samples N
+                         --ppl-batches N --trainable SET --out FILE
+                         --require-beat-rtn]
   pretrain              train the fp model  [--preset P --steps N --lr X
                         --out runs/P-fp.eqt]
   quantize              EfficientQAT pipeline -> packed model
@@ -31,13 +40,22 @@ COMMANDS
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
-                        batched prefill -> runs/bench.json) | check
-                        (validate runs/bench.json) | train-time (Tables
-                        8/9)  [--fast]
+                        batched prefill + native train_step ->
+                        runs/bench.json) | check (validate
+                        runs/bench.json) | train-time (Tables 8/9)
+                        [--fast]
   help                  this text
 
+BACKENDS (--backend, default auto)
+  native    pure-Rust CPU implementation of every train/eval executable;
+            built-in presets (synthetic, tiny, small, base), no artifacts
+  pjrt      AOT HLO artifacts via the PJRT CPU client (`make artifacts`
+            first; needs real xla-rs bindings)
+  auto      pjrt when artifacts/manifest.json exists and loads, else
+            native
+
 FLAG DEFAULTS: --preset tiny --bits 2 --group <preset default>
-  --artifacts artifacts --runs runs
+  --artifacts artifacts --runs runs --backend auto
 ";
 
 pub fn parse(args: &[String]) -> Result<Cli> {

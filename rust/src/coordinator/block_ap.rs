@@ -23,7 +23,7 @@ use crate::data::loader::LmBatch;
 use crate::io::manifest::Layout;
 use crate::model::quantized::QuantizedModel;
 use crate::quant::rtn;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 use crate::util::rng::Rng;
 
 pub struct BlockApReport {
@@ -184,7 +184,7 @@ pub fn block_train_mem_bytes(
 /// Run Block-AP over a calibration pool. `params` is the pretrained fp
 /// model (teacher); returns the quantized model + stats.
 pub fn run_block_ap(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,
@@ -193,15 +193,15 @@ pub fn run_block_ap(
     val_pool: &[LmBatch],
 ) -> Result<BlockApOutput> {
     let t0 = std::time::Instant::now();
-    let info = rt.manifest.preset(preset)?;
+    let info = rt.manifest().preset(preset)?;
     let cfg = info.config.clone();
     let g = sch.group;
-    let fpl = rt.manifest.layout(preset, "fp")?.clone();
-    let bl = rt.manifest.layout(preset, "block")?.clone();
-    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
-    let wql = rt.manifest.layout(preset, "wq")?.clone();
-    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
-    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+    let fpl = rt.manifest().layout(preset, "fp")?.clone();
+    let bl = rt.manifest().layout(preset, "block")?.clone();
+    let qbl = rt.manifest().layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest().layout(preset, "wq")?.clone();
+    let qpl = rt.manifest().layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest().layout(preset, "fpr")?.clone();
 
     let embed = rt.exec(preset, "embed_fwd")?;
     let block_fp = rt.exec(preset, "block_fwd_fp")?;
@@ -434,20 +434,20 @@ pub fn run_block_ap(
 /// RTN-only quantization of a full fp model (the no-Block-AP baseline and
 /// the QLoRA/PEQA starting point) - same assembly path, no training.
 pub fn rtn_quantize_model(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,
 ) -> Result<QuantizedModel> {
-    let info = rt.manifest.preset(preset)?;
+    let info = rt.manifest().preset(preset)?;
     let cfg = info.config.clone();
     let g = sch.group;
-    let fpl = rt.manifest.layout(preset, "fp")?.clone();
-    let bl = rt.manifest.layout(preset, "block")?.clone();
-    let qbl = rt.manifest.layout(preset, &format!("qp_block_g{g}"))?.clone();
-    let wql = rt.manifest.layout(preset, "wq")?.clone();
-    let qpl = rt.manifest.layout(preset, &format!("qp_g{g}"))?.clone();
-    let fprl = rt.manifest.layout(preset, "fpr")?.clone();
+    let fpl = rt.manifest().layout(preset, "fp")?.clone();
+    let bl = rt.manifest().layout(preset, "block")?.clone();
+    let qbl = rt.manifest().layout(preset, &format!("qp_block_g{g}"))?.clone();
+    let wql = rt.manifest().layout(preset, "wq")?.clone();
+    let qpl = rt.manifest().layout(preset, &format!("qp_g{g}"))?.clone();
+    let fprl = rt.manifest().layout(preset, "fpr")?.clone();
 
     let mut wq_full = vec![0f32; wql.size];
     let mut qp_full = vec![0f32; qpl.size];

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::config::TrainHp;
 use crate::coordinator::opt::{AdamState, LrSchedule};
 use crate::model::quantized::QuantizedModel;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 
 /// One supervised batch: x, y (B*T each) and a loss mask over y positions.
 pub struct E2eBatch {
@@ -30,7 +30,7 @@ pub struct E2eReport {
 /// Train the quantized model's step sizes (and optionally zero points)
 /// end-to-end over the given batches. Mutates `qm.qp` in place.
 pub fn run_e2e_qp(
-    rt: &Runtime,
+    rt: &dyn Backend,
     qm: &mut QuantizedModel,
     batches: &[E2eBatch],
     hp: &TrainHp,

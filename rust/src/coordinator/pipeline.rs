@@ -10,7 +10,7 @@ use crate::coordinator::e2e_qp::{lm_batches, run_e2e_qp, E2eReport};
 use crate::data::corpus::{Domain, World};
 use crate::data::loader::LmLoader;
 use crate::model::quantized::QuantizedModel;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PhaseToggle {
@@ -35,7 +35,7 @@ pub struct PipelineReport {
 /// Calibration (Block-AP) and training (E2E-QP) pools are drawn from
 /// `domain` with disjoint seeds; validation uses a third seed (fig3).
 pub fn efficient_qat(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     params: &[f32],
     sch: QuantScheme,
@@ -45,7 +45,7 @@ pub fn efficient_qat(
     phases: PhaseToggle,
 ) -> Result<(QuantizedModel, PipelineReport)> {
     let t0 = std::time::Instant::now();
-    let cfg = rt.manifest.preset(preset)?.config.clone();
+    let cfg = rt.manifest().preset(preset)?.config.clone();
 
     // Block-AP calibration pool ("4096 samples from RedPajama" analog)
     let n_cal = (hp.block_samples + cfg.block_batch - 1) / cfg.block_batch;

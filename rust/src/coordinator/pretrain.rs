@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::coordinator::opt::{AdamState, LrSchedule};
 use crate::data::loader::LmLoader;
 use crate::model::init::init_fp_params;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 
 pub struct PretrainReport {
     pub losses: Vec<f32>,
@@ -30,19 +30,19 @@ impl Default for PretrainOpts {
 
 /// Train from scratch; returns (flat params, report).
 pub fn pretrain(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     loader: &mut LmLoader,
     opts: &PretrainOpts,
 ) -> Result<(Vec<f32>, PretrainReport)> {
-    let fpl = rt.manifest.layout(preset, "fp")?;
+    let fpl = rt.manifest().layout(preset, "fp")?;
     let params = init_fp_params(fpl, opts.seed);
     pretrain_from(rt, preset, params, loader, opts)
 }
 
 /// Continue training from existing params (used by naive-QAT comparisons).
 pub fn pretrain_from(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset: &str,
     mut params: Vec<f32>,
     loader: &mut LmLoader,

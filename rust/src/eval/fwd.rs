@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 
 use crate::infer::engine::Engine;
 use crate::model::quantized::QuantizedModel;
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Backend};
 
 pub enum ModelRef<'a> {
     Fp { preset: &'a str, params: &'a [f32] },
@@ -31,7 +31,7 @@ impl<'a> ModelRef<'a> {
 
     /// Logits for one eval-geometry batch; x is (eval_batch * eval_ctx)
     /// i32, returns (eval_batch * eval_ctx * vocab) f32.
-    pub fn logits(&self, rt: &Runtime, x: &[i32]) -> Result<Vec<f32>> {
+    pub fn logits(&self, rt: &dyn Backend, x: &[i32]) -> Result<Vec<f32>> {
         match self {
             ModelRef::Fp { preset, params } => {
                 let exec = rt.exec(preset, "model_fwd_fp")?;

@@ -12,7 +12,7 @@ use crate::data::corpus::{Domain, World};
 use crate::data::loader::LmLoader;
 use crate::eval::fwd::{engine_logits, ModelRef};
 use crate::infer::engine::Engine;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::util::stats::logsumexp;
 
 /// Accumulate mean NLL over (x, y) batches given a logits provider.
@@ -43,14 +43,14 @@ where
 /// Perplexity over `n_batches` eval-geometry batches from `domain`
 /// (seeded disjoint from all training pools).
 pub fn perplexity(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelRef,
     world: &World,
     domain: &Domain,
     n_batches: usize,
     seed: u64,
 ) -> Result<f64> {
-    let cfg = rt.manifest.preset(model.preset())?.config.clone();
+    let cfg = rt.manifest().preset(model.preset())?.config.clone();
     let mut loader =
         LmLoader::new(world, domain, seed, cfg.eval_batch, cfg.eval_ctx);
     ppl_over_batches(&mut loader, cfg.vocab, n_batches, |x| {

@@ -8,7 +8,7 @@ use anyhow::{bail, Result};
 use crate::data::corpus::World;
 use crate::data::tasks::{gen_mmlu, gen_suite, McItem, ZEROSHOT_SUITES};
 use crate::eval::fwd::ModelRef;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::util::stats::logsumexp;
 
 /// A sequence to score: ctx followed by option tokens.
@@ -23,11 +23,11 @@ struct Scored {
 /// Packs one sequence per batch row (padded with 0), runs the eval-geometry
 /// forward, and sums log p(option tokens). Returns per-item accuracy.
 pub fn eval_items(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelRef,
     items: &[McItem],
 ) -> Result<f64> {
-    let cfg = rt.manifest.preset(model.preset())?.config.clone();
+    let cfg = rt.manifest().preset(model.preset())?.config.clone();
     let (bsz, ctx, v) = (cfg.eval_batch, cfg.eval_ctx, cfg.vocab);
 
     // flatten items into scoring jobs
@@ -86,7 +86,7 @@ pub fn eval_items(
 
 /// Accuracy per zero-shot suite + the average (paper Table 1 columns).
 pub fn eval_zeroshot(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelRef,
     world: &World,
     per_suite: usize,
@@ -106,7 +106,7 @@ pub fn eval_zeroshot(
 
 /// MMLU-analog accuracy (few-shot).
 pub fn eval_mmlu(
-    rt: &Runtime,
+    rt: &dyn Backend,
     model: &ModelRef,
     world: &World,
     seed: u64,

@@ -13,11 +13,11 @@ use crate::coordinator::pretrain::{pretrain, PretrainOpts};
 use crate::data::corpus::{domain_redpajama, World};
 use crate::data::loader::LmLoader;
 use crate::model::checkpoint::FpCheckpoint;
-use crate::runtime::Runtime;
+use crate::runtime::{make_backend, Backend};
 
-/// Shared experiment context: runtime + world + on-disk caches.
+/// Shared experiment context: execution backend + world + on-disk caches.
 pub struct ExpCtx {
-    pub rt: Runtime,
+    pub rt: Box<dyn Backend>,
     pub world: World,
     pub runs_dir: PathBuf,
     /// pretraining steps per preset (tiny models learn fast)
@@ -25,8 +25,10 @@ pub struct ExpCtx {
 }
 
 impl ExpCtx {
-    pub fn new(artifacts_dir: &str, runs_dir: &str) -> Result<ExpCtx> {
-        let rt = Runtime::new(artifacts_dir)?;
+    /// `backend`: "native" | "pjrt" | "auto" (see `runtime::make_backend`).
+    pub fn new(artifacts_dir: &str, runs_dir: &str, backend: &str)
+               -> Result<ExpCtx> {
+        let rt = make_backend(backend, artifacts_dir)?;
         std::fs::create_dir_all(runs_dir)?;
         Ok(ExpCtx {
             rt,
@@ -38,7 +40,7 @@ impl ExpCtx {
 
     /// World sized for a given preset's vocab.
     pub fn world_for(&self, preset: &str) -> Result<World> {
-        let v = self.rt.manifest.preset(preset)?.config.vocab;
+        let v = self.rt.manifest().preset(preset)?.config.vocab;
         Ok(World::new(v, 7))
     }
 
@@ -51,7 +53,7 @@ impl ExpCtx {
                 return Ok(ck.params);
             }
         }
-        let cfg = self.rt.manifest.preset(preset)?.config.clone();
+        let cfg = self.rt.manifest().preset(preset)?.config.clone();
         let world = self.world_for(preset)?;
         let mut loader = LmLoader::new(&world, &domain_redpajama(), 11,
                                        cfg.e2e_batch, cfg.e2e_ctx);
@@ -61,7 +63,7 @@ impl ExpCtx {
             seed: 5,
             log_every: 50,
         };
-        let (params, report) = pretrain(&self.rt, preset, &mut loader,
+        let (params, report) = pretrain(self.rt.as_ref(), preset, &mut loader,
                                         &opts)?;
         crate::info!(
             "pretrained {preset}: loss {:.3} -> {:.3} in {:.1}s",

@@ -83,10 +83,10 @@ pub fn eval_model(
 ) -> Result<(Vec<(String, f64)>, f64, f64, f64)> {
     let world = ctx.world_for(model.preset())?;
     let (accs, avg) =
-        eval_zeroshot(&ctx.rt, model, &world, EVAL_ITEMS_PER_SUITE, 1234)?;
-    let ppl_w = perplexity(&ctx.rt, model, &world, &domain_wiki(),
+        eval_zeroshot(ctx.rt.as_ref(), model, &world, EVAL_ITEMS_PER_SUITE, 1234)?;
+    let ppl_w = perplexity(ctx.rt.as_ref(), model, &world, &domain_wiki(),
                            EVAL_PPL_BATCHES, 777)?;
-    let ppl_c = perplexity(&ctx.rt, model, &world, &domain_c4(),
+    let ppl_c = perplexity(ctx.rt.as_ref(), model, &world, &domain_c4(),
                            EVAL_PPL_BATCHES, 778)?;
     Ok((accs, avg, ppl_w, ppl_c))
 }
@@ -106,7 +106,7 @@ pub fn quantize_with(
 ) -> Result<crate::model::quantized::QuantizedModel> {
     let world = ctx.world_for(preset)?;
     let dom = domain_redpajama();
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let hp = TrainHp::default();
     let cal_pool = || {
         let n = (hp.block_samples + cfg.block_batch - 1) / cfg.block_batch;
@@ -116,23 +116,23 @@ pub fn quantize_with(
     };
     Ok(match method {
         "RTN" => crate::coordinator::block_ap::rtn_quantize_model(
-            &ctx.rt, preset, params, sch)?,
-        "GPTQ" => ptq_quantize_model(&ctx.rt, preset, params, sch,
+            ctx.rt.as_ref(), preset, params, sch)?,
+        "GPTQ" => ptq_quantize_model(ctx.rt.as_ref(), preset, params, sch,
                                      &cal_pool(), PtqMethod::Gptq, 512)?,
-        "AWQ" => ptq_quantize_model(&ctx.rt, preset, params, sch,
+        "AWQ" => ptq_quantize_model(ctx.rt.as_ref(), preset, params, sch,
                                     &cal_pool(), PtqMethod::Awq, 512)?,
         "OmniQ-like" => {
             // block-wise training of (s, z) only, no E2E phase
             let mut h = hp.clone();
             h.trainable = TrainableSet::SZ;
-            efficient_qat(&ctx.rt, preset, params, sch, &h, &world, &dom,
+            efficient_qat(ctx.rt.as_ref(), preset, params, sch, &h, &world, &dom,
                           PhaseToggle { block_ap: true, e2e_qp: false })?
                 .0
         }
         "AutoRound-like" => {
             let mut h = hp.clone();
             h.trainable = TrainableSet::Round;
-            efficient_qat(&ctx.rt, preset, params, sch, &h, &world, &dom,
+            efficient_qat(ctx.rt.as_ref(), preset, params, sch, &h, &world, &dom,
                           PhaseToggle { block_ap: true, e2e_qp: false })?
                 .0
         }
@@ -141,12 +141,12 @@ pub fn quantize_with(
             let pool = LmLoader::new(&world, &dom, hp.seed ^ 0xAA7,
                                      cfg.e2e_batch, cfg.e2e_ctx)
                 .sample_pool(n);
-            run_naive_qat(&ctx.rt, preset, params, sch, &pool, 1,
+            run_naive_qat(ctx.rt.as_ref(), preset, params, sch, &pool, 1,
                           hp.e2e_lr)?
                 .0
         }
         "EfficientQAT" => {
-            efficient_qat(&ctx.rt, preset, params, sch, &hp, &world, &dom,
+            efficient_qat(ctx.rt.as_ref(), preset, params, sch, &hp, &world, &dom,
                           PhaseToggle::default())?
                 .0
         }
@@ -176,12 +176,13 @@ pub fn method_sweep(ctx: &ExpCtx, preset: &str)
         seconds: t0.elapsed().as_secs_f64(),
     });
 
-    let g = ctx.rt.manifest.preset(preset)?.config.default_group;
+    let g = ctx.rt.manifest().preset(preset)?.config.default_group;
     let mut schemes =
         vec![QuantScheme::new(4, g), QuantScheme::new(3, g),
              QuantScheme::new(2, g)];
     // the paper's extra 2-bit finer-group row
-    let groups = &ctx.rt.manifest.preset(preset)?.config.group_sizes;
+    let groups =
+        &ctx.rt.manifest().preset(preset)?.config.group_sizes;
     if let Some(&g2) = groups.iter().find(|&&x| x > g) {
         schemes.push(QuantScheme::new(2, g2));
     }

@@ -130,7 +130,7 @@ fn t3(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t4(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let hp = TrainHp::default();
 
@@ -145,56 +145,56 @@ fn t4(ctx: &ExpCtx, preset: &str) -> Result<String> {
     // base model, no tuning
     let base = ModelRef::Fp { preset, params: &params };
     rows.push(vec!["base (no tune)".into(), "16".into(), "-".into(),
-                   fmt(100.0 * eval_mmlu(&ctx.rt, &base, &world, 555)?, 1)]);
+                   fmt(100.0 * eval_mmlu(ctx.rt.as_ref(), &base, &world, 555)?, 1)]);
 
     for bits in [4u32, 2] {
         let sch = QuantScheme::new(bits, g);
         let batches = mk_batches(n_batches);
 
         // PEQA: RTN + s-only e2e on instructions
-        let (peqa_m, _) = run_peqa(&ctx.rt, preset, &params, sch, &batches,
+        let (peqa_m, _) = run_peqa(ctx.rt.as_ref(), preset, &params, sch, &batches,
                                    &hp)?;
         rows.push(vec![
             "PEQA".into(), bits.to_string(), g.to_string(),
-            fmt(100.0 * eval_mmlu(&ctx.rt, &ModelRef::Quant(&peqa_m),
+            fmt(100.0 * eval_mmlu(ctx.rt.as_ref(), &ModelRef::Quant(&peqa_m),
                                   &world, 555)?, 1),
         ]);
 
         // QLoRA (bits + fp16 LoRA) - only the 4-bit row, as in the paper
         if bits == 4 {
-            let qbase = rtn_quantize_model(&ctx.rt, preset, &params, sch)?;
-            let (lora, _) = run_qlora(&ctx.rt, &qbase, &batches, 1,
+            let qbase = rtn_quantize_model(ctx.rt.as_ref(), preset, &params, sch)?;
+            let (lora, _) = run_qlora(ctx.rt.as_ref(), &qbase, &batches, 1,
                                       2e-3, 33)?;
             rows.push(vec![
                 "QLoRA".into(), format!("{bits}+16"), "-".into(),
                 fmt(100.0 * eval_mmlu(
-                    &ctx.rt,
+                    ctx.rt.as_ref(),
                     &ModelRef::Lora { qm: &qbase, lora: &lora },
                     &world, 555)?, 1),
             ]);
             // QLoRA w/ GPTQ: merge LoRA -> fp, re-quantize with GPTQ
-            let merged = merge_lora(&ctx.rt, &qbase, &lora)?;
+            let merged = merge_lora(ctx.rt.as_ref(), &qbase, &lora)?;
             let cal = LmLoader::new(&world, &domain_redpajama(), 0xCA1,
                                     cfg.block_batch, cfg.block_ctx)
                 .sample_pool(8);
-            let requant = ptq_quantize_model(&ctx.rt, preset, &merged, sch,
+            let requant = ptq_quantize_model(ctx.rt.as_ref(), preset, &merged, sch,
                                              &cal, PtqMethod::Gptq, 512)?;
             rows.push(vec![
                 "QLoRA w/ GPTQ".into(), bits.to_string(), g.to_string(),
-                fmt(100.0 * eval_mmlu(&ctx.rt, &ModelRef::Quant(&requant),
+                fmt(100.0 * eval_mmlu(ctx.rt.as_ref(), &ModelRef::Quant(&requant),
                                       &world, 555)?, 1),
             ]);
         }
 
         // EfficientQAT: Block-AP on LM data, then E2E-QP on instructions
         let (mut eq, _) = efficient_qat(
-            &ctx.rt, preset, &params, sch, &hp, &world,
+            ctx.rt.as_ref(), preset, &params, sch, &hp, &world,
             &domain_redpajama(),
             PhaseToggle { block_ap: true, e2e_qp: false })?;
-        run_e2e_qp(&ctx.rt, &mut eq, &batches, &hp)?;
+        run_e2e_qp(ctx.rt.as_ref(), &mut eq, &batches, &hp)?;
         rows.push(vec![
             "EfficientQAT".into(), bits.to_string(), g.to_string(),
-            fmt(100.0 * eval_mmlu(&ctx.rt, &ModelRef::Quant(&eq), &world,
+            fmt(100.0 * eval_mmlu(ctx.rt.as_ref(), &ModelRef::Quant(&eq), &world,
                                   555)?, 1),
         ]);
     }
@@ -209,7 +209,7 @@ fn t4(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t5(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let g = ctx.rt.manifest.preset(preset)?.config.default_group;
+    let g = ctx.rt.manifest().preset(preset)?.config.default_group;
     let sch = QuantScheme::new(2, g);
     let hp = TrainHp::default();
     let dom = domain_redpajama();
@@ -217,7 +217,7 @@ fn t5(ctx: &ExpCtx, preset: &str) -> Result<String> {
                   (true, true)];
     let mut rows = Vec::new();
     for (bap, e2e) in combos {
-        let (qm, _) = efficient_qat(&ctx.rt, preset, &params, sch, &hp,
+        let (qm, _) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp,
                                     &world, &dom,
                                     PhaseToggle { block_ap: bap,
                                                   e2e_qp: e2e })?;
@@ -240,12 +240,12 @@ fn t5(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t6(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let sch = QuantScheme::new(2, g);
     let dom = domain_redpajama();
-    let bl = ctx.rt.manifest.layout(preset, "block")?.clone();
-    let qbl = ctx.rt.manifest.layout(preset,
+    let bl = ctx.rt.manifest().layout(preset, "block")?.clone();
+    let qbl = ctx.rt.manifest().layout(preset,
                                      &format!("qp_block_g{g}"))?.clone();
     let sets = [TrainableSet::Clipping, TrainableSet::SZ,
                 TrainableSet::Round, TrainableSet::SZRound,
@@ -255,7 +255,7 @@ fn t6(ctx: &ExpCtx, preset: &str) -> Result<String> {
         let mut hp = TrainHp::default();
         hp.trainable = set;
         let (qm, _) = efficient_qat(
-            &ctx.rt, preset, &params, sch, &hp, &world, &dom,
+            ctx.rt.as_ref(), preset, &params, sch, &hp, &world, &dom,
             PhaseToggle { block_ap: true, e2e_qp: false })?;
         let (_, avg, pw, pc) = eval_model(ctx, &ModelRef::Quant(&qm))?;
         let (mw, ms, mz, _) = set.masks();
@@ -286,13 +286,13 @@ fn t6(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t7(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let sch = QuantScheme::new(2, g);
     let dom = domain_redpajama();
     // one Block-AP, three E2E variants from the same init
     let hp0 = TrainHp::default();
-    let (base, _) = efficient_qat(&ctx.rt, preset, &params, sch, &hp0,
+    let (base, _) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp0,
                                   &world, &dom,
                                   PhaseToggle { block_ap: true,
                                                 e2e_qp: false })?;
@@ -309,7 +309,7 @@ fn t7(ctx: &ExpCtx, preset: &str) -> Result<String> {
         let mut hp = hp0.clone();
         hp.train_s_e2e = ts;
         hp.train_z_e2e = tz;
-        run_e2e_qp(&ctx.rt, &mut qm, &batches, &hp)?;
+        run_e2e_qp(ctx.rt.as_ref(), &mut qm, &batches, &hp)?;
         let (_, avg, pw, pc) = eval_model(ctx, &ModelRef::Quant(&qm))?;
         // avg bits: training z promotes it from N-bit storage to FP16
         let extra = if tz { (16.0 - sch.bits as f64) / g as f64 } else { 0.0 };
@@ -334,16 +334,16 @@ fn t8(ctx: &ExpCtx) -> Result<String> {
     for preset in ["tiny", "small"] {
         let params = ctx.pretrained(preset)?;
         let world = ctx.world_for(preset)?;
-        let g = ctx.rt.manifest.preset(preset)?.config.default_group;
+        let g = ctx.rt.manifest().preset(preset)?.config.default_group;
         let sch = QuantScheme::new(2, g);
         let hp = TrainHp::default();
         let dom = domain_redpajama();
-        let (_, report) = efficient_qat(&ctx.rt, preset, &params, sch, &hp,
+        let (_, report) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp,
                                         &world, &dom,
                                         PhaseToggle::default())?;
         let bap = report.block_ap.as_ref().unwrap();
         let e2e = report.e2e.as_ref().unwrap();
-        let fpl = ctx.rt.manifest.layout(preset, "fp")?;
+        let fpl = ctx.rt.manifest().layout(preset, "fp")?;
         rows.push(vec![
             preset.into(),
             format!("{:.1}M", fpl.size as f64 / 1e6),
@@ -367,13 +367,13 @@ fn t8(ctx: &ExpCtx) -> Result<String> {
 fn t9(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let sch = QuantScheme::new(2, g);
     let hp = TrainHp::default();
     let dom = domain_redpajama();
 
-    let (_, report) = efficient_qat(&ctx.rt, preset, &params, sch, &hp,
+    let (_, report) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp,
                                     &world, &dom, PhaseToggle::default())?;
     let eq_secs = report.total_seconds;
     let eq_mem = report.block_ap.as_ref().unwrap().mem_bytes
@@ -385,7 +385,7 @@ fn t9(ctx: &ExpCtx, preset: &str) -> Result<String> {
         .sample_pool(n);
     // match total optimization steps: block epochs add up
     let epochs = 1 + hp.block_epochs;
-    let (_, nq) = run_naive_qat(&ctx.rt, preset, &params, sch, &pool,
+    let (_, nq) = run_naive_qat(ctx.rt.as_ref(), preset, &params, sch, &pool,
                                 epochs, hp.e2e_lr)?;
     let rows = vec![
         vec!["EfficientQAT".into(), fmt(eq_secs, 1),
@@ -437,13 +437,13 @@ fn t11() -> Result<String> {
 fn t12(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let groups = ctx.rt.manifest.preset(preset)?.config.group_sizes.clone();
+    let groups = ctx.rt.manifest().preset(preset)?.config.group_sizes.clone();
     let hp = TrainHp::default();
     let dom = domain_redpajama();
     let mut rows = Vec::new();
     for g in groups {
         let sch = QuantScheme::new(2, g);
-        let (qm, _) = efficient_qat(&ctx.rt, preset, &params, sch, &hp,
+        let (qm, _) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp,
                                     &world, &dom, PhaseToggle::default())?;
         let (_, avg, pw, pc) = eval_model(ctx, &ModelRef::Quant(&qm))?;
         rows.push(vec![
@@ -463,7 +463,7 @@ fn t12(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t13(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let g = ctx.rt.manifest.preset(preset)?.config.default_group;
+    let g = ctx.rt.manifest().preset(preset)?.config.default_group;
     let mut rows = Vec::new();
     for bits in [3u32, 2] {
         let sch = QuantScheme::new(bits, g);
@@ -471,7 +471,7 @@ fn t13(ctx: &ExpCtx, preset: &str) -> Result<String> {
             let dom = domain_by_name(dom_name)?;
             let hp = TrainHp::default();
             let (qm, _) = efficient_qat(
-                &ctx.rt, preset, &params, sch, &hp, &world, &dom,
+                ctx.rt.as_ref(), preset, &params, sch, &hp, &world, &dom,
                 PhaseToggle { block_ap: true, e2e_qp: false })?;
             let (_, avg, pw, pc) = eval_model(ctx, &ModelRef::Quant(&qm))?;
             rows.push(vec![
@@ -498,7 +498,7 @@ fn t13(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn t14(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let hp = TrainHp::default();
     let mk_batches = |n: usize| {
@@ -508,20 +508,20 @@ fn t14(ctx: &ExpCtx, preset: &str) -> Result<String> {
     };
     let eval_vqa = |m: &ModelRef| -> Result<f64> {
         let items = crate::data::tasks::gen_mmlu(&world, 4, 24, 1, 777);
-        eval_items(&ctx.rt, m, &items)
+        eval_items(ctx.rt.as_ref(), m, &items)
     };
     let mut rows = Vec::new();
     for bits in [4u32, 2] {
         let sch = QuantScheme::new(bits, g);
         let batches = mk_batches(32);
         // QLoRA then Block-AP requantization (paper's "QLoRA + Block-AP")
-        let qbase = rtn_quantize_model(&ctx.rt, preset, &params,
+        let qbase = rtn_quantize_model(ctx.rt.as_ref(), preset, &params,
                                        QuantScheme::new(4, g))?;
-        let (lora, _) = run_qlora(&ctx.rt, &qbase, &batches, 1, 2e-3, 34)?;
-        let merged = merge_lora(&ctx.rt, &qbase, &lora)?;
+        let (lora, _) = run_qlora(ctx.rt.as_ref(), &qbase, &batches, 1, 2e-3, 34)?;
+        let merged = merge_lora(ctx.rt.as_ref(), &qbase, &lora)?;
         let dom = domain_redpajama();
         let (ql_bap, _) = efficient_qat(
-            &ctx.rt, preset, &merged, sch, &hp, &world, &dom,
+            ctx.rt.as_ref(), preset, &merged, sch, &hp, &world, &dom,
             PhaseToggle { block_ap: true, e2e_qp: false })?;
         rows.push(vec![
             "QLoRA + Block-AP".into(), format!("4+16 -> {bits}"),
@@ -529,9 +529,9 @@ fn t14(ctx: &ExpCtx, preset: &str) -> Result<String> {
         ]);
         // EfficientQAT end-to-end at the target bits
         let (mut eq, _) = efficient_qat(
-            &ctx.rt, preset, &params, sch, &hp, &world, &dom,
+            ctx.rt.as_ref(), preset, &params, sch, &hp, &world, &dom,
             PhaseToggle { block_ap: true, e2e_qp: false })?;
-        run_e2e_qp(&ctx.rt, &mut eq, &batches, &hp)?;
+        run_e2e_qp(ctx.rt.as_ref(), &mut eq, &batches, &hp)?;
         rows.push(vec![
             "EfficientQAT".into(), format!("{bits}"),
             fmt(100.0 * eval_vqa(&ModelRef::Quant(&eq))?, 1),
@@ -569,7 +569,7 @@ fn fig1(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn fig3(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let sch = QuantScheme::new(2, g);
     let dom = domain_redpajama();
@@ -587,7 +587,7 @@ fn fig3(ctx: &ExpCtx, preset: &str) -> Result<String> {
         let val = LmLoader::new(&world, &dom, hp.seed ^ 0x7A11,
                                 cfg.block_batch, cfg.block_ctx)
             .sample_pool(4);
-        let out = run_block_ap(&ctx.rt, preset, &params, sch, &hp, &pool,
+        let out = run_block_ap(ctx.rt.as_ref(), preset, &params, sch, &hp, &pool,
                                &val)?;
         let train: f64 = out.report.train_losses.iter()
             .map(|&x| x as f64).sum::<f64>()
@@ -618,12 +618,12 @@ fn fig3(ctx: &ExpCtx, preset: &str) -> Result<String> {
 fn fig4(ctx: &ExpCtx, preset: &str) -> Result<String> {
     let params = ctx.pretrained(preset)?;
     let world = ctx.world_for(preset)?;
-    let cfg = ctx.rt.manifest.preset(preset)?.config.clone();
+    let cfg = ctx.rt.manifest().preset(preset)?.config.clone();
     let g = cfg.default_group;
     let sch = QuantScheme::new(2, g);
     let dom = domain_redpajama();
     let hp0 = TrainHp::default();
-    let (base, _) = efficient_qat(&ctx.rt, preset, &params, sch, &hp0,
+    let (base, _) = efficient_qat(ctx.rt.as_ref(), preset, &params, sch, &hp0,
                                   &world, &dom,
                                   PhaseToggle { block_ap: true,
                                                 e2e_qp: false })?;
@@ -635,7 +635,7 @@ fn fig4(ctx: &ExpCtx, preset: &str) -> Result<String> {
                                  cfg.e2e_batch, cfg.e2e_ctx)
             .sample_pool(n);
         let batches = lm_batches(&pool);
-        run_e2e_qp(&ctx.rt, &mut qm, &batches, &hp0)?;
+        run_e2e_qp(ctx.rt.as_ref(), &mut qm, &batches, &hp0)?;
         let (_, avg, pw, pc) = eval_model(ctx, &ModelRef::Quant(&qm))?;
         rows.push(vec![
             samples.to_string(),

@@ -1,16 +1,42 @@
-//! PJRT runtime (L3 <-> L2 bridge): loads AOT HLO-text artifacts produced by
-//! python/compile/aot.py, compiles them once on the PJRT CPU client, and
-//! executes them with typed, spec-checked host buffers.
+//! Execution-backend layer (L3 <-> L2 bridge): the trait surface the
+//! coordinator, eval, and experiment layers program against, plus the two
+//! interchangeable implementations:
 //!
-//! Python never runs here - the HLO text files are the entire interface.
-//! Pattern adapted from /opt/xla-example/load_hlo/.
+//!   * [`native`] - a pure-Rust CPU implementation of every lowered
+//!     executable (block/model forwards, the Block-AP fake-quant train step
+//!     with STE gradients, the E2E-QP step-size train step, pretraining,
+//!     and the baseline steps). Always available; no artifacts needed.
+//!   * [`pjrt`] - the original AOT-artifact path: loads HLO-text files
+//!     produced by python/compile/aot.py, compiles them once on the PJRT
+//!     CPU client, and executes them with typed host buffers. Requires
+//!     `make artifacts` plus real xla-rs bindings (the in-tree
+//!     `rust/src/xla_stub.rs` stub makes it fail cleanly at runtime when
+//!     they are absent).
+//!
+//! The contract is manifest-driven: a [`Backend`] exposes a
+//! [`Manifest`](crate::io::manifest::Manifest) (presets, flat-buffer
+//! layouts, artifact arg specs) and resolves `(preset, entry)` names to
+//! [`Executor`]s whose [`Executor::run`] is spec-checked against the
+//! declared argument shapes/dtypes. Callers never know which backend they
+//! are on - `run_block_ap`, `run_e2e_qp`, `perplexity`, the sweep drivers
+//! and the CLI all take `&dyn Backend`.
+//!
+//! Re-pointing at real xla-rs later: swap the `use crate::xla_stub as xla;`
+//! import in [`pjrt`] for the real bindings; no caller changes. Backend
+//! selection is wired through the CLI (`--backend native|pjrt|auto`, see
+//! [`make_backend`]); `auto` prefers PJRT when artifacts exist and falls
+//! back to the native backend otherwise.
 
-use std::collections::BTreeMap;
+pub mod native;
+pub mod pjrt;
 
-use anyhow::{anyhow, bail, Context, Result};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
 
 use crate::io::manifest::{ArtifactSpec, Dtype, Manifest};
-use crate::xla_stub as xla;
+
+pub use pjrt::PjrtRuntime;
 
 /// A host-side argument for an executable.
 pub enum Arg<'a> {
@@ -20,7 +46,10 @@ pub enum Arg<'a> {
 }
 
 impl<'a> Arg<'a> {
-    fn check(&self, spec: &crate::io::manifest::ArgSpec) -> Result<()> {
+    pub(crate) fn check(
+        &self,
+        spec: &crate::io::manifest::ArgSpec,
+    ) -> Result<()> {
         let want: usize = spec.shape.iter().product();
         match self {
             Arg::F32(v) => {
@@ -54,29 +83,6 @@ impl<'a> Arg<'a> {
         }
         Ok(())
     }
-
-    /// Host -> device transfer as an OWNED PjRtBuffer.
-    ///
-    /// We deliberately avoid `PjRtLoadedExecutable::execute(&[Literal])`:
-    /// its C shim (`xla_rs.cc::execute`) `release()`s every input device
-    /// buffer without ever deleting it - ~100 MB leaked per train step on
-    /// the `small` preset (found via OOM at 36 GB RSS; see EXPERIMENTS.md
-    /// §Perf). `execute_b` borrows caller-owned buffers instead, and Rust
-    /// frees them on Drop.
-    fn to_buffer(&self, client: &xla::PjRtClient, shape: &[usize])
-                 -> Result<xla::PjRtBuffer> {
-        let buf = match self {
-            Arg::F32(v) => {
-                client.buffer_from_host_buffer::<f32>(v, shape, None)?
-            }
-            Arg::I32(v) => {
-                client.buffer_from_host_buffer::<i32>(v, shape, None)?
-            }
-            Arg::Scalar(x) => client
-                .buffer_from_host_buffer::<f32>(&[*x], shape, None)?,
-        };
-        Ok(buf)
-    }
 }
 
 /// One output buffer copied back to the host.
@@ -86,124 +92,98 @@ pub struct OutBuf {
     pub data: Vec<f32>,
 }
 
-/// A compiled artifact with its argument spec.
-pub struct Exec {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    client: xla::PjRtClient,
+/// Check arg count and each arg against an artifact spec (shared by all
+/// backends so the call surface rejects the same mistakes everywhere).
+pub fn check_args(spec: &ArtifactSpec, args: &[Arg]) -> Result<()> {
+    if args.len() != spec.args.len() {
+        bail!(
+            "{}: got {} args, spec wants {} ({:?})",
+            spec.entry,
+            args.len(),
+            spec.args.len(),
+            spec.args.iter().map(|a| &a.name).collect::<Vec<_>>()
+        );
+    }
+    for (arg, aspec) in args.iter().zip(&spec.args) {
+        arg.check(aspec)
+            .with_context(|| format!("entry {}", spec.entry))?;
+    }
+    Ok(())
 }
 
-impl Exec {
+/// One compiled/lowered executable: the `Runtime::run`-style spec-checked
+/// call surface every training and eval loop drives.
+pub trait Executor {
+    /// The artifact spec this executable was resolved from.
+    fn spec(&self) -> &ArtifactSpec;
+
     /// Execute with spec-checked args; returns outputs in manifest order.
-    pub fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
-        if args.len() != self.spec.args.len() {
-            bail!(
-                "{}: got {} args, spec wants {} ({:?})",
-                self.spec.entry,
-                args.len(),
-                self.spec.args.len(),
-                self.spec.args.iter().map(|a| &a.name).collect::<Vec<_>>()
-            );
-        }
-        let mut bufs = Vec::with_capacity(args.len());
-        for (arg, spec) in args.iter().zip(&self.spec.args) {
-            arg.check(spec)
-                .with_context(|| format!("entry {}", self.spec.entry))?;
-            bufs.push(arg.to_buffer(&self.client, &spec.shape)?);
-        }
-        let result = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != self.spec.outputs.len() {
-            bail!(
-                "{}: got {} outputs, spec wants {}",
-                self.spec.entry,
-                parts.len(),
-                self.spec.outputs.len()
-            );
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, name) in parts.into_iter().zip(&self.spec.outputs) {
-            let n = lit.element_count();
-            let mut data = vec![0f32; n];
-            lit.copy_raw_to(&mut data)?;
-            out.push(OutBuf { name: name.clone(), data });
-        }
-        Ok(out)
-    }
+    fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>>;
 
     /// Convenience: run and return the single output.
-    pub fn run1(&self, args: &[Arg]) -> Result<Vec<f32>> {
+    fn run1(&self, args: &[Arg]) -> Result<Vec<f32>> {
         let mut outs = self.run(args)?;
         if outs.len() != 1 {
-            bail!("{}: expected 1 output, got {}", self.spec.entry,
+            bail!("{}: expected 1 output, got {}", self.spec().entry,
                   outs.len());
         }
         Ok(outs.pop().unwrap().data)
     }
 }
 
-/// Manifest-driven executable registry. Compiles lazily and caches.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: std::cell::RefCell<BTreeMap<String, std::rc::Rc<Exec>>>,
-}
+/// An execution backend: a manifest (presets, layouts, specs) plus a
+/// resolver from `(preset, entry)` names to executables.
+pub trait Backend {
+    /// Shape/layout source of truth for everything this backend runs.
+    fn manifest(&self) -> &Manifest;
 
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: std::cell::RefCell::new(BTreeMap::new()),
-        })
-    }
-
-    /// Load + compile (or fetch from cache) an artifact.
-    pub fn exec(&self, preset: &str, entry: &str) -> Result<std::rc::Rc<Exec>> {
-        let key = format!("{preset}/{entry}");
-        if let Some(e) = self.cache.borrow().get(&key) {
-            return Ok(e.clone());
-        }
-        let spec = self.manifest.artifact(preset, entry)?.clone();
-        let path = self.manifest.root.join(&spec.file);
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {key}: {e}"))?;
-        crate::debug!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
-        let exec = std::rc::Rc::new(Exec {
-            spec,
-            exe,
-            client: self.client.clone(),
-        });
-        self.cache.borrow_mut().insert(key, exec.clone());
-        Ok(exec)
-    }
+    /// Resolve (and lazily compile/cache) an executable.
+    fn exec(&self, preset: &str, entry: &str) -> Result<Rc<dyn Executor>>;
 
     /// Entry name with group suffix, e.g. ("block_ap_step", 64) ->
     /// "block_ap_step_g64".
-    pub fn exec_g(
+    fn exec_g(
         &self,
         preset: &str,
         entry: &str,
         group: usize,
-    ) -> Result<std::rc::Rc<Exec>> {
+    ) -> Result<Rc<dyn Executor>> {
         self.exec(preset, &format!("{entry}_g{group}"))
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Human-readable platform tag ("cpu" for PJRT-CPU, "native-cpu").
+    fn platform(&self) -> String;
+}
+
+/// Build a backend from a CLI-style choice string:
+///   * `"native"` - the pure-Rust backend (built-in presets, no artifacts)
+///   * `"pjrt"`   - the AOT-artifact PJRT runtime (errors without
+///     artifacts/real xla bindings)
+///   * `"auto"`   - PJRT when `artifacts_dir/manifest.json` exists and the
+///     client comes up, native otherwise (the default)
+pub fn make_backend(choice: &str, artifacts_dir: &str)
+                    -> Result<Box<dyn Backend>> {
+    match choice {
+        "native" => Ok(Box::new(native::NativeBackend::new())),
+        "pjrt" => Ok(Box::new(PjrtRuntime::new(artifacts_dir)?)),
+        "auto" | "" => {
+            let has_manifest = std::path::Path::new(artifacts_dir)
+                .join("manifest.json")
+                .exists();
+            if has_manifest {
+                match PjrtRuntime::new(artifacts_dir) {
+                    Ok(rt) => return Ok(Box::new(rt)),
+                    Err(e) => {
+                        crate::info!(
+                            "pjrt backend unavailable ({e:#}); \
+                             falling back to native"
+                        );
+                    }
+                }
+            }
+            Ok(Box::new(native::NativeBackend::new()))
+        }
+        other => bail!(
+            "unknown backend '{other}' (native | pjrt | auto)"),
     }
 }

@@ -1,0 +1,539 @@
+//! Native transformer forward/backward over flat buffers - the reverse-mode
+//! core behind every train-step entry of the native backend.
+//!
+//! Mirrors python/compile/model.py::block_core exactly (RMSNorm, split-half
+//! RoPE, causal softmax attention, SwiGLU, residuals) in training geometry
+//! (B sequences of fixed length T, no KV cache). The five linear
+//! application modes of model.py map onto [`LinKind`]:
+//!
+//!   * `Fp`        - y = x @ W^T                        (pretraining)
+//!   * `FakeQuant` - y = x @ fake_quant(W, s, z)^T      (Block-AP, STE)
+//!   * `Dequant`   - y = x @ dequant(W_int, s, z)^T     (E2E-QP / eval)
+//!   * `Dynamic`   - y = x @ dyn_fq(W)^T                (naive-QAT)
+//!   * `Lora`      - dequant + x @ A^T @ B^T            (QLoRA)
+//!
+//! Forward passes record a tape (normalizer inverses, attention
+//! probabilities, pre-activation values, effective weights); the backward
+//! routes output gradients to whichever parameters each mode trains
+//! ([`LinGrad`]), using the STE / dequant gradient kernels in [`ops`].
+
+use crate::runtime::native::ops;
+
+/// One linear's weights + how gradients route through it.
+pub enum LinKind<'a> {
+    Fp { w: &'a [f32] },
+    FakeQuant { w: &'a [f32], s: &'a [f32], z: &'a [f32], qmax: f32 },
+    Dequant { wi: &'a [f32], s: &'a [f32], z: &'a [f32] },
+    Dynamic { w: &'a [f32], qmax: f32 },
+    Lora {
+        wi: &'a [f32],
+        s: &'a [f32],
+        z: &'a [f32],
+        a: &'a [f32],
+        b: &'a [f32],
+        rank: usize,
+        scale: f32,
+    },
+}
+
+pub struct LinRef<'a> {
+    pub kind: LinKind<'a>,
+    pub out_d: usize,
+    pub in_d: usize,
+    /// quantization group (ignored by Fp)
+    pub group: usize,
+}
+
+/// Parameter gradients of one linear, matching its [`LinKind`].
+pub enum LinGrad {
+    /// Fp / Dynamic: d(W)
+    W(Vec<f32>),
+    /// FakeQuant: (dW, ds, dz) with STE routing
+    Wsz { gw: Vec<f32>, gs: Vec<f32>, gz: Vec<f32> },
+    /// Dequant: (ds, dz); W_int frozen
+    Sz { gs: Vec<f32>, gz: Vec<f32> },
+    /// Lora: (dA, dB); base frozen
+    Ab { ga: Vec<f32>, gb: Vec<f32> },
+}
+
+struct LinTape {
+    /// effective (out, in) weights the forward multiplied by
+    weff: Vec<f32>,
+    /// Dynamic only: STE in-range mask
+    mask: Vec<f32>,
+    /// Lora only: u = x @ A^T, (m, rank)
+    u: Vec<f32>,
+}
+
+fn lin_fwd(lin: &LinRef, x: &[f32], m: usize) -> (Vec<f32>, LinTape) {
+    let (n, k, g) = (lin.out_d, lin.in_d, lin.group);
+    let mut weff = vec![0f32; n * k];
+    let mut tape = LinTape { weff: Vec::new(), mask: Vec::new(),
+                             u: Vec::new() };
+    match &lin.kind {
+        LinKind::Fp { w } => weff.copy_from_slice(w),
+        LinKind::FakeQuant { w, s, z, qmax } => {
+            ops::fake_quant(w, n, k, s, z, g, *qmax, &mut weff);
+        }
+        LinKind::Dequant { wi, s, z } => {
+            ops::dequantize(wi, n, k, s, z, g, &mut weff);
+        }
+        LinKind::Dynamic { w, qmax } => {
+            let mut mask = vec![0f32; n * k];
+            ops::dynamic_fake_quant(w, n, k, g, *qmax, &mut weff,
+                                    &mut mask);
+            tape.mask = mask;
+        }
+        LinKind::Lora { wi, s, z, a, rank, .. } => {
+            ops::dequantize(wi, n, k, s, z, g, &mut weff);
+            let mut u = vec![0f32; m * rank];
+            ops::matmul_nt(x, m, k, a, *rank, &mut u);
+            tape.u = u;
+        }
+    }
+    let mut y = vec![0f32; m * n];
+    ops::matmul_nt(x, m, k, &weff, n, &mut y);
+    if let LinKind::Lora { b, rank, scale, .. } = &lin.kind {
+        // y += (u @ B^T) * scale
+        let mut delta = vec![0f32; m * n];
+        ops::matmul_nt(&tape.u, m, *rank, b, n, &mut delta);
+        for i in 0..m * n {
+            y[i] += delta[i] * scale;
+        }
+    }
+    tape.weff = weff;
+    (y, tape)
+}
+
+/// Input gradient + parameter gradients of one linear.
+fn lin_bwd(lin: &LinRef, tape: &LinTape, x: &[f32], gout: &[f32],
+           m: usize) -> (Vec<f32>, LinGrad) {
+    let (n, k, g) = (lin.out_d, lin.in_d, lin.group);
+    let mut dx = vec![0f32; m * k];
+    ops::matmul_nn(gout, m, n, &tape.weff, k, &mut dx);
+    let grad = match &lin.kind {
+        LinKind::Fp { .. } => {
+            let mut gw = vec![0f32; n * k];
+            ops::matmul_tn(gout, m, n, x, k, &mut gw);
+            LinGrad::W(gw)
+        }
+        LinKind::FakeQuant { w, s, z, qmax } => {
+            let mut gweff = vec![0f32; n * k];
+            ops::matmul_tn(gout, m, n, x, k, &mut gweff);
+            let gpr = k / g;
+            let mut gw = vec![0f32; n * k];
+            let mut gs = vec![0f32; n * gpr];
+            let mut gz = vec![0f32; n * gpr];
+            ops::fake_quant_grads(w, n, k, s, z, g, *qmax, &gweff,
+                                  &mut gw, &mut gs, &mut gz);
+            LinGrad::Wsz { gw, gs, gz }
+        }
+        LinKind::Dequant { wi, s, z } => {
+            let mut a = vec![0f32; n * k];
+            ops::matmul_tn(gout, m, n, x, k, &mut a);
+            let gpr = k / g;
+            let mut gs = vec![0f32; n * gpr];
+            let mut gz = vec![0f32; n * gpr];
+            ops::dequant_sz_grads(&a, wi, n, k, s, z, g, &mut gs, &mut gz);
+            LinGrad::Sz { gs, gz }
+        }
+        LinKind::Dynamic { .. } => {
+            let mut gw = vec![0f32; n * k];
+            ops::matmul_tn(gout, m, n, x, k, &mut gw);
+            for (gv, &mk) in gw.iter_mut().zip(&tape.mask) {
+                *gv *= mk;
+            }
+            LinGrad::W(gw)
+        }
+        LinKind::Lora { a, b, rank, scale, .. } => {
+            let r = *rank;
+            // dx += (gout @ B) @ A * scale
+            let mut gu = vec![0f32; m * r];
+            ops::matmul_nn(gout, m, n, b, r, &mut gu);
+            let mut dxl = vec![0f32; m * k];
+            ops::matmul_nn(&gu, m, r, a, k, &mut dxl);
+            for i in 0..m * k {
+                dx[i] += dxl[i] * scale;
+            }
+            // gB = gout^T @ u * scale ; gA = (gout @ B)^T @ x * scale
+            let mut gb = vec![0f32; n * r];
+            ops::matmul_tn(gout, m, n, &tape.u, r, &mut gb);
+            let mut ga = vec![0f32; r * k];
+            ops::matmul_tn(&gu, m, r, x, k, &mut ga);
+            for v in gb.iter_mut() {
+                *v *= scale;
+            }
+            for v in ga.iter_mut() {
+                *v *= scale;
+            }
+            LinGrad::Ab { ga, gb }
+        }
+    };
+    (dx, grad)
+}
+
+/// Geometry of one lowered entry (batch, context, model dims, RoPE tables).
+pub struct Geom {
+    pub b: usize,
+    pub t: usize,
+    pub dim: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub inter: usize,
+    pub eps: f32,
+    pub rope_cos: Vec<f32>,
+    pub rope_sin: Vec<f32>,
+}
+
+impl Geom {
+    pub fn new(b: usize, t: usize, dim: usize, n_heads: usize,
+               head_dim: usize, inter: usize, eps: f32, theta: f64)
+               -> Geom {
+        let (rope_cos, rope_sin) = ops::rope_tables(t, head_dim, theta);
+        Geom { b, t, dim, n_heads, head_dim, inter, eps, rope_cos,
+               rope_sin }
+    }
+
+    pub fn m(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// One block's resolved weights.
+pub struct BlockRefs<'a> {
+    pub lins: Vec<LinRef<'a>>, // q, k, v, o, gate, up, down
+    pub attn_norm: &'a [f32],
+    pub mlp_norm: &'a [f32],
+}
+
+/// Forward tape of one block (everything the backward needs besides the
+/// block input, which the caller keeps).
+pub struct BlockTape {
+    h1: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// (b, heads, t, t) attention probabilities, causal rows
+    probs: Vec<f32>,
+    ctx: Vec<f32>,
+    x2: Vec<f32>,
+    h2: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    mid: Vec<f32>,
+    inv1: Vec<f32>,
+    inv2: Vec<f32>,
+    lins: Vec<LinTape>,
+}
+
+/// Intra-block activations captured for GPTQ/AWQ calibration
+/// (block_capture_fp outputs, in manifest order after h_out).
+pub struct Capture {
+    pub x_attn: Vec<f32>,
+    pub attn_ctx: Vec<f32>,
+    pub x_mlp: Vec<f32>,
+    pub mlp_mid: Vec<f32>,
+}
+
+impl BlockTape {
+    pub fn capture(&self) -> Capture {
+        Capture {
+            x_attn: self.h1.clone(),
+            attn_ctx: self.ctx.clone(),
+            x_mlp: self.h2.clone(),
+            mlp_mid: self.mid.clone(),
+        }
+    }
+}
+
+/// Gather one head's rows into a contiguous (t, hd) buffer.
+fn gather_head(src: &[f32], rows: std::ops::Range<usize>, d: usize,
+               h: usize, hd: usize, out: &mut [f32]) {
+    for (i, r) in rows.enumerate() {
+        out[i * hd..(i + 1) * hd]
+            .copy_from_slice(&src[r * d + h * hd..r * d + (h + 1) * hd]);
+    }
+}
+
+/// Scatter-add a contiguous (t, hd) buffer back into head columns.
+fn scatter_head_add(dst: &mut [f32], rows: std::ops::Range<usize>,
+                    d: usize, h: usize, hd: usize, src: &[f32]) {
+    for (i, r) in rows.enumerate() {
+        let dr = &mut dst[r * d + h * hd..r * d + (h + 1) * hd];
+        for j in 0..hd {
+            dr[j] += src[i * hd + j];
+        }
+    }
+}
+
+/// One transformer block forward. Returns (h_out, tape).
+pub fn block_fwd(g: &Geom, blk: &BlockRefs, x: &[f32])
+                 -> (Vec<f32>, BlockTape) {
+    let (m, d, nh, hd, it) = (g.m(), g.dim, g.n_heads, g.head_dim,
+                              g.inter);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut h1 = vec![0f32; m * d];
+    let mut inv1 = vec![0f32; m];
+    ops::rms_norm_fwd(x, m, d, blk.attn_norm, g.eps, &mut h1, &mut inv1);
+
+    let (mut q, tq) = lin_fwd(&blk.lins[0], &h1, m);
+    let (mut k, tk) = lin_fwd(&blk.lins[1], &h1, m);
+    let (v, tv) = lin_fwd(&blk.lins[2], &h1, m);
+    for r in 0..m {
+        let pos = r % g.t;
+        ops::rope_apply(&mut q[r * d..(r + 1) * d], pos, nh, hd,
+                        &g.rope_cos, &g.rope_sin);
+        ops::rope_apply(&mut k[r * d..(r + 1) * d], pos, nh, hd,
+                        &g.rope_cos, &g.rope_sin);
+    }
+
+    let t = g.t;
+    let mut probs = vec![0f32; g.b * nh * t * t];
+    let mut ctx = vec![0f32; m * d];
+    let mut qh = vec![0f32; t * hd];
+    let mut kh = vec![0f32; t * hd];
+    let mut vh = vec![0f32; t * hd];
+    let mut ch = vec![0f32; t * hd];
+    for bi in 0..g.b {
+        let rows = bi * t..(bi + 1) * t;
+        for h in 0..nh {
+            gather_head(&q, rows.clone(), d, h, hd, &mut qh);
+            gather_head(&k, rows.clone(), d, h, hd, &mut kh);
+            gather_head(&v, rows.clone(), d, h, hd, &mut vh);
+            let pr = &mut probs[(bi * nh + h) * t * t
+                ..(bi * nh + h + 1) * t * t];
+            ops::attention_head_fwd(&qh, &kh, &vh, t, hd, scale, pr,
+                                    &mut ch);
+            for (i, r) in rows.clone().enumerate() {
+                ctx[r * d + h * hd..r * d + (h + 1) * hd]
+                    .copy_from_slice(&ch[i * hd..(i + 1) * hd]);
+            }
+        }
+    }
+
+    let (attn_out, to) = lin_fwd(&blk.lins[3], &ctx, m);
+    let mut x2 = vec![0f32; m * d];
+    for i in 0..m * d {
+        x2[i] = x[i] + attn_out[i];
+    }
+
+    let mut h2 = vec![0f32; m * d];
+    let mut inv2 = vec![0f32; m];
+    ops::rms_norm_fwd(&x2, m, d, blk.mlp_norm, g.eps, &mut h2, &mut inv2);
+    let (gate, tg) = lin_fwd(&blk.lins[4], &h2, m);
+    let (up, tu) = lin_fwd(&blk.lins[5], &h2, m);
+    let mut mid = vec![0f32; m * it];
+    for i in 0..m * it {
+        mid[i] = ops::silu(gate[i]) * up[i];
+    }
+    let (down, td) = lin_fwd(&blk.lins[6], &mid, m);
+    let mut out = vec![0f32; m * d];
+    for i in 0..m * d {
+        out[i] = x2[i] + down[i];
+    }
+
+    let tape = BlockTape {
+        h1, q, k, v, probs, ctx, x2, h2, gate, up, mid, inv1, inv2,
+        lins: vec![tq, tk, tv, to, tg, tu, td],
+    };
+    (out, tape)
+}
+
+/// Block backward: given d(h_out), returns (d(x), 7 LinGrads,
+/// g_attn_norm, g_mlp_norm).
+pub fn block_bwd(g: &Geom, blk: &BlockRefs, x: &[f32], tape: &BlockTape,
+                 d_out: &[f32])
+                 -> (Vec<f32>, Vec<LinGrad>, Vec<f32>, Vec<f32>) {
+    let (m, d, nh, hd, it, t) = (g.m(), g.dim, g.n_heads, g.head_dim,
+                                 g.inter, g.t);
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    // mlp branch
+    let (d_mid, g_down) = lin_bwd(&blk.lins[6], &tape.lins[6], &tape.mid,
+                                  d_out, m);
+    let mut d_gate = vec![0f32; m * it];
+    let mut d_up = vec![0f32; m * it];
+    for i in 0..m * it {
+        d_gate[i] = d_mid[i] * tape.up[i] * ops::silu_grad(tape.gate[i]);
+        d_up[i] = d_mid[i] * ops::silu(tape.gate[i]);
+    }
+    let (mut d_h2, g_gate) = lin_bwd(&blk.lins[4], &tape.lins[4],
+                                     &tape.h2, &d_gate, m);
+    let (d_h2b, g_up) = lin_bwd(&blk.lins[5], &tape.lins[5], &tape.h2,
+                                &d_up, m);
+    for i in 0..m * d {
+        d_h2[i] += d_h2b[i];
+    }
+    let mut d_x2 = d_out.to_vec();
+    let mut g_mlp_norm = vec![0f32; d];
+    ops::rms_norm_bwd(&d_h2, &tape.x2, m, d, blk.mlp_norm, &tape.inv2,
+                      &mut d_x2, &mut g_mlp_norm);
+
+    // attention branch
+    let (d_ctx, g_o) = lin_bwd(&blk.lins[3], &tape.lins[3], &tape.ctx,
+                               &d_x2, m);
+    let mut d_q = vec![0f32; m * d];
+    let mut d_k = vec![0f32; m * d];
+    let mut d_v = vec![0f32; m * d];
+    let mut qh = vec![0f32; t * hd];
+    let mut kh = vec![0f32; t * hd];
+    let mut vh = vec![0f32; t * hd];
+    let mut dch = vec![0f32; t * hd];
+    let mut dqh = vec![0f32; t * hd];
+    let mut dkh = vec![0f32; t * hd];
+    let mut dvh = vec![0f32; t * hd];
+    for bi in 0..g.b {
+        let rows = bi * t..(bi + 1) * t;
+        for h in 0..nh {
+            gather_head(&tape.q, rows.clone(), d, h, hd, &mut qh);
+            gather_head(&tape.k, rows.clone(), d, h, hd, &mut kh);
+            gather_head(&tape.v, rows.clone(), d, h, hd, &mut vh);
+            gather_head(&d_ctx, rows.clone(), d, h, hd, &mut dch);
+            dqh.fill(0.0);
+            dkh.fill(0.0);
+            dvh.fill(0.0);
+            let pr = &tape.probs[(bi * nh + h) * t * t
+                ..(bi * nh + h + 1) * t * t];
+            ops::attention_head_bwd(&qh, &kh, &vh, pr, &dch, t, hd, scale,
+                                    &mut dqh, &mut dkh, &mut dvh);
+            scatter_head_add(&mut d_q, rows.clone(), d, h, hd, &dqh);
+            scatter_head_add(&mut d_k, rows.clone(), d, h, hd, &dkh);
+            scatter_head_add(&mut d_v, rows.clone(), d, h, hd, &dvh);
+        }
+    }
+    for r in 0..m {
+        let pos = r % t;
+        ops::rope_apply_bwd(&mut d_q[r * d..(r + 1) * d], pos, nh, hd,
+                            &g.rope_cos, &g.rope_sin);
+        ops::rope_apply_bwd(&mut d_k[r * d..(r + 1) * d], pos, nh, hd,
+                            &g.rope_cos, &g.rope_sin);
+    }
+    let (mut d_h1, g_q) = lin_bwd(&blk.lins[0], &tape.lins[0], &tape.h1,
+                                  &d_q, m);
+    let (d_h1b, g_k) = lin_bwd(&blk.lins[1], &tape.lins[1], &tape.h1,
+                               &d_k, m);
+    let (d_h1c, g_v) = lin_bwd(&blk.lins[2], &tape.lins[2], &tape.h1,
+                               &d_v, m);
+    for i in 0..m * d {
+        d_h1[i] += d_h1b[i] + d_h1c[i];
+    }
+    let mut d_x = d_x2.clone();
+    let mut g_attn_norm = vec![0f32; d];
+    ops::rms_norm_bwd(&d_h1, x, m, d, blk.attn_norm, &tape.inv1,
+                      &mut d_x, &mut g_attn_norm);
+
+    (
+        d_x,
+        vec![g_q, g_k, g_v, g_o, g_gate, g_up, g_down],
+        g_attn_norm,
+        g_mlp_norm,
+    )
+}
+
+/// Whole-model parameters (resolved slices).
+pub struct ModelRefs<'a> {
+    pub blocks: Vec<BlockRefs<'a>>,
+    pub embed: &'a [f32],
+    pub final_norm: &'a [f32],
+    pub head: &'a [f32],
+}
+
+pub struct ModelTape {
+    /// per-block inputs: xs[0] = embedded h0, xs[i] = block i-1 output
+    pub xs: Vec<Vec<f32>>,
+    pub tapes: Vec<BlockTape>,
+    /// final block output (pre final-norm)
+    pub h_last: Vec<f32>,
+    pub inv_f: Vec<f32>,
+    pub h_normed: Vec<f32>,
+}
+
+/// Full model forward: token ids -> logits (m * vocab), with tape.
+pub fn model_fwd(g: &Geom, mp: &ModelRefs, x_ids: &[i32], vocab: usize)
+                 -> (Vec<f32>, ModelTape) {
+    let (m, d) = (g.m(), g.dim);
+    let mut h = vec![0f32; m * d];
+    for (r, &tok) in x_ids.iter().enumerate() {
+        let ti = tok as usize;
+        h[r * d..(r + 1) * d].copy_from_slice(&mp.embed[ti * d..(ti + 1) * d]);
+    }
+    let mut xs = Vec::with_capacity(mp.blocks.len());
+    let mut tapes = Vec::with_capacity(mp.blocks.len());
+    for blk in &mp.blocks {
+        let (out, tape) = block_fwd(g, blk, &h);
+        xs.push(std::mem::replace(&mut h, out));
+        tapes.push(tape);
+    }
+    let h_last = h;
+    let mut h_normed = vec![0f32; m * d];
+    let mut inv_f = vec![0f32; m];
+    ops::rms_norm_fwd(&h_last, m, d, mp.final_norm, g.eps, &mut h_normed,
+                      &mut inv_f);
+    let mut logits = vec![0f32; m * vocab];
+    ops::matmul_nt(&h_normed, m, d, mp.head, vocab, &mut logits);
+    (logits, ModelTape { xs, tapes, h_last, inv_f, h_normed })
+}
+
+/// Which parameter gradients the model backward materializes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum GradMode {
+    /// everything: per-linear grads + norms + embed + head (pretraining)
+    All,
+    /// per-linear grads only (E2E-QP / LoRA: embed/norms/head frozen)
+    LinsOnly,
+}
+
+/// Full-model gradients.
+pub struct ModelGrads {
+    /// per block: (7 LinGrads, g_attn_norm, g_mlp_norm)
+    pub blocks: Vec<(Vec<LinGrad>, Vec<f32>, Vec<f32>)>,
+    pub g_embed: Vec<f32>,
+    pub g_final_norm: Vec<f32>,
+    pub g_head: Vec<f32>,
+}
+
+/// Full model backward from d(logits).
+pub fn model_bwd(g: &Geom, mp: &ModelRefs, tape: &ModelTape,
+                 x_ids: &[i32], vocab: usize, dlogits: &[f32],
+                 mode: GradMode) -> ModelGrads {
+    let (m, d) = (g.m(), g.dim);
+    let mut g_head = Vec::new();
+    let mut g_final_norm = vec![0f32; d];
+    let mut d_h = vec![0f32; m * d];
+    ops::matmul_nn(dlogits, m, vocab, mp.head, d, &mut d_h);
+    if mode == GradMode::All {
+        let mut gh = vec![0f32; vocab * d];
+        ops::matmul_tn(dlogits, m, vocab, &tape.h_normed, d, &mut gh);
+        g_head = gh;
+    }
+    let mut d_hl = vec![0f32; m * d];
+    ops::rms_norm_bwd(&d_h, &tape.h_last, m, d, mp.final_norm,
+                      &tape.inv_f, &mut d_hl, &mut g_final_norm);
+
+    let mut blocks_rev = Vec::with_capacity(mp.blocks.len());
+    let mut d_cur = d_hl;
+    for bi in (0..mp.blocks.len()).rev() {
+        let (d_in, lg, gan, gmn) = block_bwd(g, &mp.blocks[bi],
+                                             &tape.xs[bi],
+                                             &tape.tapes[bi], &d_cur);
+        blocks_rev.push((lg, gan, gmn));
+        d_cur = d_in;
+    }
+    blocks_rev.reverse();
+
+    let mut g_embed = Vec::new();
+    if mode == GradMode::All {
+        let mut ge = vec![0f32; mp.embed.len()];
+        for (r, &tok) in x_ids.iter().enumerate() {
+            let ti = tok as usize;
+            let dst = &mut ge[ti * d..(ti + 1) * d];
+            let src = &d_cur[r * d..(r + 1) * d];
+            for i in 0..d {
+                dst[i] += src[i];
+            }
+        }
+        g_embed = ge;
+    }
+
+    ModelGrads { blocks: blocks_rev, g_embed, g_final_norm, g_head }
+}

@@ -1,0 +1,827 @@
+//! Native CPU kernels for the pure-Rust backend: threaded matmuls,
+//! RMSNorm / RoPE / causal attention / SwiGLU forward+backward, masked
+//! cross-entropy, and the quantization-aware gradient kernels.
+//!
+//! Numerics are the specification from python/compile/kernels/ref.py:
+//! fake-quant uses straight-through rounding with *differentiated clamp
+//! saturation* (paper Eqs. 3-5, with the corrected `-s` factor on the
+//! z-gradient) and half-to-even rounding (`round_ties_even`, matching
+//! jnp.round); dequant-matmul gradients follow `dequant_matmul_grads_ref`.
+//! Everything is f32 like the lowered XLA graphs.
+//!
+//! Threading: the three matmul shapes parallelize over disjoint output-row
+//! chunks via `util::threads` (same determinism guarantee as the inference
+//! kernels - each output element is produced by exactly one worker in a
+//! fixed order, so results are bit-identical across thread counts).
+
+use crate::util::threads;
+
+/// Below this many multiply-accumulates per call, kernels stay serial:
+/// scoped-thread spawn overhead would exceed the work.
+const PAR_MIN_WORK: usize = 1 << 18;
+
+// ---------------------------------------------------------------------------
+// Matmuls
+// ---------------------------------------------------------------------------
+
+/// y (m,n) = x (m,k) @ w (n,k)^T  - the forward linear.
+pub fn matmul_nt(x: &[f32], m: usize, k: usize, w: &[f32], n: usize,
+                 y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(y.len(), m * n);
+    let chunk = if m * n * k < PAR_MIN_WORK { m.max(1) }
+                else { threads::chunk_len(m) };
+    threads::par_chunks_mut(y, chunk * n, |ci, yc| {
+        let r0 = ci * chunk;
+        for (rl, yr) in yc.chunks_mut(n).enumerate() {
+            let xr = &x[(r0 + rl) * k..(r0 + rl + 1) * k];
+            for (j, yv) in yr.iter_mut().enumerate() {
+                let wr = &w[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                for i in 0..k {
+                    acc += xr[i] * wr[i];
+                }
+                *yv = acc;
+            }
+        }
+    });
+}
+
+/// y (m,k) = g (m,n) @ w (n,k)  - the input-gradient matmul.
+pub fn matmul_nn(g: &[f32], m: usize, n: usize, w: &[f32], k: usize,
+                 y: &mut [f32]) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(y.len(), m * k);
+    let chunk = if m * n * k < PAR_MIN_WORK { m.max(1) }
+                else { threads::chunk_len(m) };
+    threads::par_chunks_mut(y, chunk * k, |ci, yc| {
+        let r0 = ci * chunk;
+        for (rl, yr) in yc.chunks_mut(k).enumerate() {
+            let gr = &g[(r0 + rl) * n..(r0 + rl + 1) * n];
+            yr.fill(0.0);
+            for (j, &gv) in gr.iter().enumerate() {
+                if gv == 0.0 {
+                    continue;
+                }
+                let wr = &w[j * k..(j + 1) * k];
+                for i in 0..k {
+                    yr[i] += gv * wr[i];
+                }
+            }
+        }
+    });
+}
+
+/// gw (n,k) = g (m,n)^T @ x (m,k)  - the weight-gradient matmul.
+pub fn matmul_tn(g: &[f32], m: usize, n: usize, x: &[f32], k: usize,
+                 gw: &mut [f32]) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(gw.len(), n * k);
+    let chunk = if m * n * k < PAR_MIN_WORK { n.max(1) }
+                else { threads::chunk_len(n) };
+    threads::par_chunks_mut(gw, chunk * k, |ci, gc| {
+        let j0 = ci * chunk;
+        for (jl, gr) in gc.chunks_mut(k).enumerate() {
+            let j = j0 + jl;
+            gr.fill(0.0);
+            for r in 0..m {
+                let gv = g[r * n + j];
+                if gv == 0.0 {
+                    continue;
+                }
+                let xr = &x[r * k..(r + 1) * k];
+                for i in 0..k {
+                    gr[i] += gv * xr[i];
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RMSNorm
+// ---------------------------------------------------------------------------
+
+/// Per-row RMSNorm: y = x * inv * w with inv = 1/sqrt(mean(x^2) + eps).
+/// Writes the per-row `inv` values for the backward pass.
+pub fn rms_norm_fwd(x: &[f32], m: usize, d: usize, w: &[f32], eps: f32,
+                    y: &mut [f32], inv: &mut [f32]) {
+    for r in 0..m {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut ss = 0f32;
+        for &v in xr {
+            ss += v * v;
+        }
+        let iv = 1.0 / (ss / d as f32 + eps).sqrt();
+        inv[r] = iv;
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * iv * w[i];
+        }
+    }
+}
+
+/// RMSNorm backward: accumulates `dx += d(x)` and `gw += d(w)`.
+pub fn rms_norm_bwd(g: &[f32], x: &[f32], m: usize, d: usize, w: &[f32],
+                    inv: &[f32], dx: &mut [f32], gw: &mut [f32]) {
+    for r in 0..m {
+        let xr = &x[r * d..(r + 1) * d];
+        let gr = &g[r * d..(r + 1) * d];
+        let iv = inv[r];
+        let mut dot = 0f32; // sum_j g_j * w_j * x_j
+        for i in 0..d {
+            dot += gr[i] * w[i] * xr[i];
+        }
+        let c = iv * iv * iv * dot / d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for i in 0..d {
+            dxr[i] += gr[i] * w[i] * iv - xr[i] * c;
+            gw[i] += gr[i] * xr[i] * iv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoPE
+// ---------------------------------------------------------------------------
+
+/// Precompute split-half RoPE sin/cos (same f64 math as the engine and
+/// model.py, cast once).
+pub fn rope_tables(max_ctx: usize, head_dim: usize, theta: f64)
+                   -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0f32; max_ctx * half];
+    let mut sin = vec![0f32; max_ctx * half];
+    for pos in 0..max_ctx {
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
+            let ang = pos as f64 * freq;
+            sin[pos * half + i] = ang.sin() as f32;
+            cos[pos * half + i] = ang.cos() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply split-half RoPE in place to one row (all heads) at `pos`.
+pub fn rope_apply(v: &mut [f32], pos: usize, n_heads: usize,
+                  head_dim: usize, cos: &[f32], sin: &[f32]) {
+    let half = head_dim / 2;
+    let c = &cos[pos * half..(pos + 1) * half];
+    let s = &sin[pos * half..(pos + 1) * half];
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let a = v[base + i];
+            let b = v[base + half + i];
+            v[base + i] = a * c[i] - b * s[i];
+            v[base + half + i] = b * c[i] + a * s[i];
+        }
+    }
+}
+
+/// Backward of [`rope_apply`] (the inverse rotation / transpose).
+pub fn rope_apply_bwd(v: &mut [f32], pos: usize, n_heads: usize,
+                      head_dim: usize, cos: &[f32], sin: &[f32]) {
+    let half = head_dim / 2;
+    let c = &cos[pos * half..(pos + 1) * half];
+    let s = &sin[pos * half..(pos + 1) * half];
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let a = v[base + i];
+            let b = v[base + half + i];
+            v[base + i] = a * c[i] + b * s[i];
+            v[base + half + i] = b * c[i] - a * s[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Causal attention (training geometry: B sequences of T, no KV cache)
+// ---------------------------------------------------------------------------
+
+/// Causal softmax attention forward for one (batch, head): q, k, v are the
+/// (T, hd) head slices; writes ctx (T, hd) and the full probability rows
+/// probs (T, T) (upper triangle stays zero) for the backward pass.
+pub fn attention_head_fwd(q: &[f32], k: &[f32], v: &[f32], t: usize,
+                          hd: usize, scale: f32, probs: &mut [f32],
+                          ctx: &mut [f32]) {
+    for ti in 0..t {
+        let qr = &q[ti * hd..(ti + 1) * hd];
+        let pr = &mut probs[ti * t..(ti + 1) * t];
+        let mut mx = f32::NEG_INFINITY;
+        for u in 0..=ti {
+            let kr = &k[u * hd..(u + 1) * hd];
+            let mut sc = 0f32;
+            for i in 0..hd {
+                sc += qr[i] * kr[i];
+            }
+            let sc = sc * scale;
+            pr[u] = sc;
+            mx = mx.max(sc);
+        }
+        let mut z = 0f32;
+        for u in 0..=ti {
+            pr[u] = (pr[u] - mx).exp();
+            z += pr[u];
+        }
+        let cr = &mut ctx[ti * hd..(ti + 1) * hd];
+        cr.fill(0.0);
+        for u in 0..=ti {
+            pr[u] /= z;
+            let vr = &v[u * hd..(u + 1) * hd];
+            for i in 0..hd {
+                cr[i] += pr[u] * vr[i];
+            }
+        }
+    }
+}
+
+/// Backward for one (batch, head): given d(ctx), accumulates dq, dk, dv.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_head_bwd(q: &[f32], k: &[f32], v: &[f32], probs: &[f32],
+                          dctx: &[f32], t: usize, hd: usize, scale: f32,
+                          dq: &mut [f32], dk: &mut [f32], dv: &mut [f32]) {
+    let mut dp = vec![0f32; t];
+    for ti in 0..t {
+        let pr = &probs[ti * t..(ti + 1) * t];
+        let dcr = &dctx[ti * hd..(ti + 1) * hd];
+        // dv[u] += p[ti,u] * dctx[ti]; dp[u] = dctx[ti] . v[u]
+        let mut pdp = 0f32; // sum_u dp[u] * p[u]
+        for u in 0..=ti {
+            let vr = &v[u * hd..(u + 1) * hd];
+            let dvr = &mut dv[u * hd..(u + 1) * hd];
+            let mut d = 0f32;
+            for i in 0..hd {
+                d += dcr[i] * vr[i];
+                dvr[i] += pr[u] * dcr[i];
+            }
+            dp[u] = d;
+            pdp += d * pr[u];
+        }
+        // softmax bwd -> dscores; then dq/dk
+        let dqr = &mut dq[ti * hd..(ti + 1) * hd];
+        for u in 0..=ti {
+            let ds = pr[u] * (dp[u] - pdp) * scale;
+            if ds == 0.0 {
+                continue;
+            }
+            let kr = &k[u * hd..(u + 1) * hd];
+            let qr = &q[ti * hd..(ti + 1) * hd];
+            let dkr = &mut dk[u * hd..(u + 1) * hd];
+            for i in 0..hd {
+                dqr[i] += ds * kr[i];
+                dkr[i] += ds * qr[i];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SwiGLU
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// d silu(x) / dx = sigmoid(x) * (1 + x * (1 - sigmoid(x)))
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let sg = 1.0 / (1.0 + (-x).exp());
+    sg * (1.0 + x * (1.0 - sg))
+}
+
+// ---------------------------------------------------------------------------
+// Cross entropy
+// ---------------------------------------------------------------------------
+
+/// Masked mean token cross-entropy + its logit gradient.
+///
+/// logits (m, v); y (m) i32; mask (m) f32 (pass all-ones + msum = m for the
+/// unmasked mean). Returns loss; writes dlogits = (softmax - onehot) *
+/// mask / max(sum(mask), 1).
+pub fn masked_cross_entropy(logits: &[f32], m: usize, v: usize, y: &[i32],
+                            mask: &[f32], dlogits: &mut [f32]) -> f32 {
+    let msum = mask.iter().sum::<f32>().max(1.0);
+    let mut loss = 0f64;
+    for r in 0..m {
+        let lr = &logits[r * v..(r + 1) * v];
+        let mut mx = f32::NEG_INFINITY;
+        for &x in lr {
+            mx = mx.max(x);
+        }
+        let mut z = 0f32;
+        for &x in lr {
+            z += (x - mx).exp();
+        }
+        let lse = mx + z.ln();
+        let yi = y[r] as usize;
+        loss += ((lse - lr[yi]) * mask[r]) as f64;
+        let dr = &mut dlogits[r * v..(r + 1) * v];
+        let c = mask[r] / msum;
+        for i in 0..v {
+            dr[i] = (lr[i] - mx).exp() / z * c;
+        }
+        dr[yi] -= c;
+    }
+    (loss / msum as f64) as f32
+}
+
+// ---------------------------------------------------------------------------
+// Quantization kernels (spec: kernels/ref.py)
+// ---------------------------------------------------------------------------
+
+/// Fake-quant forward, mirroring `ref.fake_quant_ref`:
+/// W_hat = (clamp(round(W/s) + z, 0, qmax) - z) * s, group-wise over the
+/// `in` axis. Boundary hits (q == 0 or q == qmax) count as in-range.
+pub fn fake_quant(w: &[f32], n: usize, k: usize, s: &[f32], z: &[f32],
+                  group: usize, qmax: f32, out: &mut [f32]) {
+    let gpr = k / group;
+    for r in 0..n {
+        for gi in 0..gpr {
+            let sv = s[r * gpr + gi];
+            let zv = z[r * gpr + gi];
+            let base = r * k + gi * group;
+            for i in 0..group {
+                let t = (w[base + i] / sv).round_ties_even();
+                let qu = t + zv;
+                out[base + i] = if qu < 0.0 {
+                    -zv * sv
+                } else if qu > qmax {
+                    (qmax - zv) * sv
+                } else {
+                    t * sv
+                };
+            }
+        }
+    }
+}
+
+/// Analytic STE gradients of [`fake_quant`] (paper Eqs. 3-5 with the
+/// corrected `-s` z-gradient factor; spec: `ref.fake_quant_grads_ref`).
+/// Accumulates into gw (n,k) and the group-reduced gs, gz (n, k/group).
+#[allow(clippy::too_many_arguments)]
+pub fn fake_quant_grads(w: &[f32], n: usize, k: usize, s: &[f32],
+                        z: &[f32], group: usize, qmax: f32, gout: &[f32],
+                        gw: &mut [f32], gs: &mut [f32], gz: &mut [f32]) {
+    let gpr = k / group;
+    for r in 0..n {
+        for gi in 0..gpr {
+            let sv = s[r * gpr + gi];
+            let zv = z[r * gpr + gi];
+            let base = r * k + gi * group;
+            let mut gs_acc = 0f32;
+            let mut gz_acc = 0f32;
+            for i in 0..group {
+                let g = gout[base + i];
+                let t = (w[base + i] / sv).round_ties_even();
+                let qu = t + zv;
+                if qu < 0.0 {
+                    gs_acc += g * (-zv);
+                    gz_acc += g * (-sv);
+                } else if qu > qmax {
+                    gs_acc += g * (qmax - zv);
+                    gz_acc += g * (-sv);
+                } else {
+                    gw[base + i] += g;
+                    gs_acc += g * (t - w[base + i] / sv);
+                }
+            }
+            gs[r * gpr + gi] += gs_acc;
+            gz[r * gpr + gi] += gz_acc;
+        }
+    }
+}
+
+/// Dequantize integer weights: W_hat = (W_int - z) * s (Eq. 2).
+pub fn dequantize(wi: &[f32], n: usize, k: usize, s: &[f32], z: &[f32],
+                  group: usize, out: &mut [f32]) {
+    let gpr = k / group;
+    for r in 0..n {
+        for gi in 0..gpr {
+            let sv = s[r * gpr + gi];
+            let zv = z[r * gpr + gi];
+            let base = r * k + gi * group;
+            for i in 0..group {
+                out[base + i] = (wi[base + i] - zv) * sv;
+            }
+        }
+    }
+}
+
+/// Gradients of y = x @ dequant(wi, s, z)^T w.r.t. (s, z), given
+/// A = gout^T @ x (n, k) (spec: `ref.dequant_matmul_grads_ref`):
+///   gs[n,g] = sum_{k in g} A[n,k] * (wi[n,k] - z[n,g])
+///   gz[n,g] = -s[n,g] * sum_{k in g} A[n,k]
+pub fn dequant_sz_grads(a: &[f32], wi: &[f32], n: usize, k: usize,
+                        s: &[f32], z: &[f32], group: usize,
+                        gs: &mut [f32], gz: &mut [f32]) {
+    let gpr = k / group;
+    for r in 0..n {
+        for gi in 0..gpr {
+            let sv = s[r * gpr + gi];
+            let zv = z[r * gpr + gi];
+            let base = r * k + gi * group;
+            let mut acc_s = 0f32;
+            let mut acc_a = 0f32;
+            for i in 0..group {
+                acc_s += a[base + i] * (wi[base + i] - zv);
+                acc_a += a[base + i];
+            }
+            gs[r * gpr + gi] += acc_s;
+            gz[r * gpr + gi] += -sv * acc_a;
+        }
+    }
+}
+
+/// Dynamic min/max fake quant (naive-QAT baseline, LLM-QAT style; spec:
+/// `ref.dynamic_fake_quant_ref`): scales recomputed from w each call and
+/// stop-gradiented. Writes W_hat and the STE in-range mask (1.0/0.0) used
+/// by the backward.
+#[allow(clippy::too_many_arguments)]
+pub fn dynamic_fake_quant(w: &[f32], n: usize, k: usize, group: usize,
+                          qmax: f32, out: &mut [f32], mask: &mut [f32]) {
+    let gpr = k / group;
+    for r in 0..n {
+        for gi in 0..gpr {
+            let base = r * k + gi * group;
+            let mut mn = 0f32;
+            let mut mx = 0f32;
+            for i in 0..group {
+                mn = mn.min(w[base + i]);
+                mx = mx.max(w[base + i]);
+            }
+            let s = ((mx - mn) / qmax).max(1e-8);
+            let z = (-mn / s).round_ties_even().clamp(0.0, qmax);
+            for i in 0..group {
+                let t = w[base + i] / s;
+                let r_ste = t.round_ties_even();
+                let qu = r_ste + z;
+                let q = qu.clamp(0.0, qmax);
+                out[base + i] = (q - z) * s;
+                mask[base + i] =
+                    if (0.0..=qmax).contains(&qu) { 1.0 } else { 0.0 };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threads::with_threads;
+
+    #[test]
+    fn matmuls_agree_with_naive() {
+        let (m, n, k) = (5, 7, 11);
+        let mut rng = Rng::new(3);
+        let mut x = vec![0f32; m * k];
+        let mut w = vec![0f32; n * k];
+        let mut g = vec![0f32; m * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        rng.fill_normal(&mut g, 0.0, 1.0);
+
+        let mut y = vec![0f32; m * n];
+        matmul_nt(&x, m, k, &w, n, &mut y);
+        for r in 0..m {
+            for j in 0..n {
+                let want: f32 =
+                    (0..k).map(|i| x[r * k + i] * w[j * k + i]).sum();
+                assert!((y[r * n + j] - want).abs() < 1e-4);
+            }
+        }
+
+        let mut dx = vec![0f32; m * k];
+        matmul_nn(&g, m, n, &w, k, &mut dx);
+        for r in 0..m {
+            for i in 0..k {
+                let want: f32 =
+                    (0..n).map(|j| g[r * n + j] * w[j * k + i]).sum();
+                assert!((dx[r * k + i] - want).abs() < 1e-4);
+            }
+        }
+
+        let mut gw = vec![0f32; n * k];
+        matmul_tn(&g, m, n, &x, k, &mut gw);
+        for j in 0..n {
+            for i in 0..k {
+                let want: f32 =
+                    (0..m).map(|r| g[r * n + j] * x[r * k + i]).sum();
+                assert!((gw[j * k + i] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_deterministic_across_threads() {
+        let (m, n, k) = (64, 96, 128); // above PAR_MIN_WORK
+        let mut rng = Rng::new(5);
+        let mut x = vec![0f32; m * k];
+        let mut w = vec![0f32; n * k];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut w, 0.0, 1.0);
+        let run = |nt: usize| {
+            with_threads(nt, || {
+                let mut y = vec![0f32; m * n];
+                matmul_nt(&x, m, k, &w, n, &mut y);
+                y
+            })
+        };
+        assert_eq!(run(1), run(4));
+    }
+
+    #[test]
+    fn fake_quant_matches_rtn_reference() {
+        // forward must agree with quant::rtn's quantize->dequantize
+        use crate::config::QuantScheme;
+        use crate::quant::rtn;
+        let sch = QuantScheme::new(2, 8);
+        let (n, k) = (4, 32);
+        let mut rng = Rng::new(9);
+        let mut w = vec![0f32; n * k];
+        rng.fill_normal(&mut w, 0.0, 0.5);
+        let gp = rtn::minmax_init(&w, n, k, sch);
+        let want = rtn::fake_quant(&w, &gp, sch);
+        let mut got = vec![0f32; n * k];
+        fake_quant(&w, n, k, &gp.s, &gp.z, 8, sch.qmax(), &mut got);
+        for i in 0..n * k {
+            assert!((got[i] - want[i]).abs() < 1e-6,
+                    "i={i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    /// Finite-difference check of the STE gradients. The STE treats
+    /// round() as identity, so we compare against FD of the *STE
+    /// surrogate* f(w,s,z) = sum(gout * fq_ste(w,s,z)) where rounding is
+    /// held fixed at its forward value (the exact convention of
+    /// ref.fake_quant_ref / jax.grad).
+    #[test]
+    fn fake_quant_grads_match_ste_surrogate_fd() {
+        let (n, k, group) = (2usize, 8usize, 4usize);
+        let qmax = 3.0f32;
+        let mut rng = Rng::new(11);
+        let mut w = vec![0f32; n * k];
+        rng.fill_normal(&mut w, 0.0, 0.6);
+        let gpr = k / group;
+        let mut s = vec![0f32; n * gpr];
+        let mut z = vec![0f32; n * gpr];
+        for i in 0..n * gpr {
+            s[i] = 0.3 + 0.1 * rng.f32();
+            z[i] = (rng.below(4)) as f32;
+        }
+        let mut gout = vec![0f32; n * k];
+        rng.fill_normal(&mut gout, 0.0, 1.0);
+
+        let mut gw = vec![0f32; n * k];
+        let mut gs = vec![0f32; n * gpr];
+        let mut gz = vec![0f32; n * gpr];
+        fake_quant_grads(&w, n, k, &s, &z, group, qmax, &gout,
+                         &mut gw, &mut gs, &mut gz);
+
+        // STE surrogate in f64: rounding fixed at the unperturbed value,
+        // saturation branch fixed at the unperturbed side.
+        let f = |wv: &[f32], sv: &[f32], zv: &[f32]| -> f64 {
+            let mut acc = 0f64;
+            for r in 0..n {
+                for gi in 0..gpr {
+                    let s0 = s[r * gpr + gi] as f64;
+                    let sp = sv[r * gpr + gi] as f64;
+                    let zp = zv[r * gpr + gi] as f64;
+                    let base = r * k + gi * group;
+                    for i in 0..group {
+                        let w0 = w[base + i] as f64;
+                        let t0 = (w0 / s0).round_ties_even();
+                        let qu0 = t0 + z[r * gpr + gi] as f64;
+                        let wp = wv[base + i] as f64;
+                        // STE: round(x) ~ x + const, const = t0 - w0/s0
+                        let r_ste = wp / sp + (t0 - w0 / s0);
+                        let wh = if qu0 < 0.0 {
+                            -zp * sp
+                        } else if qu0 > qmax as f64 {
+                            (qmax as f64 - zp) * sp
+                        } else {
+                            r_ste * sp
+                        };
+                        acc += gout[base + i] as f64 * wh;
+                    }
+                }
+            }
+            acc
+        };
+
+        let eps = 1e-3f32;
+        for i in 0..n * k {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[i] += eps;
+            wm[i] -= eps;
+            let fd = (f(&wp, &s, &z) - f(&wm, &s, &z)) / (2.0 * eps as f64);
+            assert!((gw[i] as f64 - fd).abs() < 1e-2,
+                    "gw[{i}]={} fd={fd}", gw[i]);
+        }
+        for i in 0..n * gpr {
+            let mut sp = s.clone();
+            let mut sm = s.clone();
+            sp[i] += eps;
+            sm[i] -= eps;
+            let fd = (f(&w, &sp, &z) - f(&w, &sm, &z)) / (2.0 * eps as f64);
+            assert!((gs[i] as f64 - fd).abs() < 1e-2,
+                    "gs[{i}]={} fd={fd}", gs[i]);
+            let mut zp = z.clone();
+            let mut zm = z.clone();
+            zp[i] += eps;
+            zm[i] -= eps;
+            let fd = (f(&w, &s, &zp) - f(&w, &s, &zm)) / (2.0 * eps as f64);
+            assert!((gz[i] as f64 - fd).abs() < 1e-2,
+                    "gz[{i}]={} fd={fd}", gz[i]);
+        }
+    }
+
+    #[test]
+    fn dequant_sz_grads_match_fd() {
+        // y = x @ dequant(wi,s,z)^T, loss = sum(gout * y)
+        let (m, n, k, group) = (3usize, 2usize, 8usize, 4usize);
+        let gpr = k / group;
+        let mut rng = Rng::new(13);
+        let mut x = vec![0f32; m * k];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let wi: Vec<f32> = (0..n * k).map(|_| rng.below(4) as f32).collect();
+        let mut s = vec![0f32; n * gpr];
+        let mut z = vec![0f32; n * gpr];
+        for i in 0..n * gpr {
+            s[i] = 0.2 + 0.1 * rng.f32();
+            z[i] = rng.below(4) as f32;
+        }
+        let mut gout = vec![0f32; m * n];
+        rng.fill_normal(&mut gout, 0.0, 1.0);
+
+        let f = |sv: &[f32], zv: &[f32]| -> f64 {
+            let mut wh = vec![0f32; n * k];
+            dequantize(&wi, n, k, sv, zv, group, &mut wh);
+            let mut y = vec![0f32; m * n];
+            matmul_nt(&x, m, k, &wh, n, &mut y);
+            y.iter().zip(&gout).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+
+        let mut a = vec![0f32; n * k];
+        matmul_tn(&gout, m, n, &x, k, &mut a);
+        let mut gs = vec![0f32; n * gpr];
+        let mut gz = vec![0f32; n * gpr];
+        dequant_sz_grads(&a, &wi, n, k, &s, &z, group, &mut gs, &mut gz);
+
+        let eps = 1e-3f32;
+        for i in 0..n * gpr {
+            let mut sp = s.clone();
+            let mut sm = s.clone();
+            sp[i] += eps;
+            sm[i] -= eps;
+            let fd = (f(&sp, &z) - f(&sm, &z)) / (2.0 * eps as f64);
+            assert!((gs[i] as f64 - fd).abs() < 2e-2,
+                    "gs[{i}]={} fd={fd}", gs[i]);
+            let mut zp = z.clone();
+            let mut zm = z.clone();
+            zp[i] += eps;
+            zm[i] -= eps;
+            let fd = (f(&s, &zp) - f(&s, &zm)) / (2.0 * eps as f64);
+            assert!((gz[i] as f64 - fd).abs() < 2e-2,
+                    "gz[{i}]={} fd={fd}", gz[i]);
+        }
+    }
+
+    #[test]
+    fn rms_norm_bwd_matches_fd() {
+        let (m, d) = (2usize, 6usize);
+        let eps = 1e-5f32;
+        let mut rng = Rng::new(17);
+        let mut x = vec![0f32; m * d];
+        let mut w = vec![0f32; d];
+        let mut g = vec![0f32; m * d];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut w, 1.0, 0.2);
+        rng.fill_normal(&mut g, 0.0, 1.0);
+
+        let f = |xv: &[f32], wv: &[f32]| -> f64 {
+            let mut y = vec![0f32; m * d];
+            let mut inv = vec![0f32; m];
+            rms_norm_fwd(xv, m, d, wv, eps, &mut y, &mut inv);
+            y.iter().zip(&g).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+
+        let mut y = vec![0f32; m * d];
+        let mut inv = vec![0f32; m];
+        rms_norm_fwd(&x, m, d, &w, eps, &mut y, &mut inv);
+        let mut dx = vec![0f32; m * d];
+        let mut gw = vec![0f32; d];
+        rms_norm_bwd(&g, &x, m, d, &w, &inv, &mut dx, &mut gw);
+
+        let h = 1e-3f32;
+        for i in 0..m * d {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += h;
+            xm[i] -= h;
+            let fd = (f(&xp, &w) - f(&xm, &w)) / (2.0 * h as f64);
+            assert!((dx[i] as f64 - fd).abs() < 1e-2,
+                    "dx[{i}]={} fd={fd}", dx[i]);
+        }
+        for i in 0..d {
+            let mut wp = w.clone();
+            let mut wm = w.clone();
+            wp[i] += h;
+            wm[i] -= h;
+            let fd = (f(&x, &wp) - f(&x, &wm)) / (2.0 * h as f64);
+            assert!((gw[i] as f64 - fd).abs() < 1e-2,
+                    "gw[{i}]={} fd={fd}", gw[i]);
+        }
+    }
+
+    #[test]
+    fn attention_bwd_matches_fd() {
+        let (t, hd) = (5usize, 4usize);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut rng = Rng::new(19);
+        let mut q = vec![0f32; t * hd];
+        let mut k = vec![0f32; t * hd];
+        let mut v = vec![0f32; t * hd];
+        let mut g = vec![0f32; t * hd];
+        rng.fill_normal(&mut q, 0.0, 1.0);
+        rng.fill_normal(&mut k, 0.0, 1.0);
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        rng.fill_normal(&mut g, 0.0, 1.0);
+
+        let f = |qv: &[f32], kv: &[f32], vv: &[f32]| -> f64 {
+            let mut probs = vec![0f32; t * t];
+            let mut ctx = vec![0f32; t * hd];
+            attention_head_fwd(qv, kv, vv, t, hd, scale, &mut probs,
+                               &mut ctx);
+            ctx.iter().zip(&g).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+
+        let mut probs = vec![0f32; t * t];
+        let mut ctx = vec![0f32; t * hd];
+        attention_head_fwd(&q, &k, &v, t, hd, scale, &mut probs, &mut ctx);
+        let mut dq = vec![0f32; t * hd];
+        let mut dk = vec![0f32; t * hd];
+        let mut dv = vec![0f32; t * hd];
+        attention_head_bwd(&q, &k, &v, &probs, &g, t, hd, scale,
+                           &mut dq, &mut dk, &mut dv);
+
+        let h = 1e-3f32;
+        for (buf, grad, name) in [(&q, &dq, "q"), (&k, &dk, "k"),
+                                  (&v, &dv, "v")] {
+            for i in 0..t * hd {
+                let mut bp = buf.to_vec();
+                let mut bm = buf.to_vec();
+                bp[i] += h;
+                bm[i] -= h;
+                let (fp, fm) = match name {
+                    "q" => (f(&bp, &k, &v), f(&bm, &k, &v)),
+                    "k" => (f(&q, &bp, &v), f(&q, &bm, &v)),
+                    _ => (f(&q, &k, &bp), f(&q, &k, &bm)),
+                };
+                let fd = (fp - fm) / (2.0 * h as f64);
+                assert!((grad[i] as f64 - fd).abs() < 2e-2,
+                        "d{name}[{i}]={} fd={fd}", grad[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_entropy_grad_matches_fd() {
+        let (m, v) = (3usize, 7usize);
+        let mut rng = Rng::new(23);
+        let mut logits = vec![0f32; m * v];
+        rng.fill_normal(&mut logits, 0.0, 1.5);
+        let y: Vec<i32> = (0..m).map(|i| (i % v) as i32).collect();
+        let mask = vec![1.0f32, 0.0, 1.0];
+
+        let mut d = vec![0f32; m * v];
+        let loss = masked_cross_entropy(&logits, m, v, &y, &mask, &mut d);
+        assert!(loss.is_finite() && loss > 0.0);
+
+        let f = |l: &[f32]| -> f64 {
+            let mut scratch = vec![0f32; m * v];
+            masked_cross_entropy(l, m, v, &y, &mask, &mut scratch) as f64
+        };
+        let h = 1e-3f32;
+        for i in 0..m * v {
+            let mut lp = logits.clone();
+            let mut lm = logits.clone();
+            lp[i] += h;
+            lm[i] -= h;
+            let fd = (f(&lp) - f(&lm)) / (2.0 * h as f64);
+            assert!((d[i] as f64 - fd).abs() < 1e-3,
+                    "d[{i}]={} fd={fd}", d[i]);
+        }
+        // masked-out row gets zero gradient
+        assert!(d[v..2 * v].iter().all(|&x| x == 0.0));
+    }
+}

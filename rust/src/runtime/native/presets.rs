@@ -1,0 +1,407 @@
+//! Built-in presets + manifest synthesis for the native backend.
+//!
+//! The PJRT path reads presets, flat-buffer layouts, and artifact arg
+//! specs from artifacts/manifest.json (written by python/compile/aot.py).
+//! The native backend needs the same shape metadata but no HLO files, so
+//! this module reconstructs it in Rust: the preset table mirrors
+//! python/compile/configs.py::PRESETS (keep in sync), the layout builders
+//! mirror python/compile/model.py (`fp_layout`, `block_layout`, ...), and
+//! the arg specs mirror python/compile/train.py's builder signatures so
+//! [`crate::runtime::check_args`] rejects exactly the same mistakes on
+//! both backends.
+//!
+//! One extra preset exists only here: `synthetic`, a deliberately tiny
+//! model (32-dim, 2 blocks, 96-token vocab) for CI smoke runs of the full
+//! Block-AP -> E2E-QP pipeline in seconds.
+
+use std::collections::BTreeMap;
+
+use crate::io::manifest::{ArgSpec, ArtifactSpec, Dtype, Layout,
+                          LayoutEntry, Manifest, PresetCfg, PresetInfo};
+
+/// The 7 quantized linears of one block: (name, out, in).
+fn linears(p: &PresetCfg) -> Vec<(&'static str, usize, usize)> {
+    p.linears()
+}
+
+/// Built-in preset table. tiny/small/base mirror configs.py; `synthetic`
+/// is native-only (CI smoke scale).
+pub fn builtin_presets() -> Vec<PresetCfg> {
+    let mk = |name: &str, dim, n_layers, n_heads, inter, vocab,
+              block_batch, block_ctx, e2e_batch, e2e_ctx,
+              eval_batch, eval_ctx, default_group,
+              group_sizes: Vec<usize>, lora_rank| PresetCfg {
+        name: name.to_string(),
+        dim,
+        n_layers,
+        n_heads,
+        head_dim: dim / n_heads,
+        inter,
+        vocab,
+        block_batch,
+        block_ctx,
+        e2e_batch,
+        e2e_ctx,
+        eval_batch,
+        eval_ctx,
+        default_group,
+        group_sizes,
+        lora_rank,
+        rope_theta: 10000.0,
+        norm_eps: 1e-5,
+    };
+    vec![
+        mk("synthetic", 32, 2, 4, 64, 96, 2, 32, 4, 32, 2, 32, 16,
+           vec![16, 32], 4),
+        mk("tiny", 128, 4, 4, 256, 512, 8, 64, 8, 64, 8, 64, 32,
+           vec![32, 64, 128], 8),
+        mk("small", 256, 6, 4, 768, 2048, 8, 64, 8, 128, 8, 128, 64,
+           vec![32, 64, 128, 256], 8),
+        mk("base", 384, 8, 6, 1152, 4096, 4, 128, 4, 256, 4, 256, 64,
+           vec![64, 128], 8),
+    ]
+}
+
+fn layout(entries: Vec<(String, Vec<usize>)>) -> Layout {
+    let mut out = Vec::with_capacity(entries.len());
+    let mut off = 0usize;
+    for (name, shape) in entries {
+        let n: usize = shape.iter().product();
+        out.push(LayoutEntry { name, offset: off, shape });
+        off += n;
+    }
+    Layout::new(out)
+}
+
+/// One block's fp parameters, in flat order (model.py block_param_entries).
+fn block_entries(p: &PresetCfg) -> Vec<(String, Vec<usize>)> {
+    let lins: BTreeMap<&str, (usize, usize)> =
+        linears(p).into_iter().map(|(n, o, i)| (n, (o, i))).collect();
+    let mut ents = vec![("attn_norm".to_string(), vec![p.dim])];
+    for n in ["attn.q", "attn.k", "attn.v", "attn.o"] {
+        let (o, i) = lins[n];
+        ents.push((n.to_string(), vec![o, i]));
+    }
+    ents.push(("mlp_norm".to_string(), vec![p.dim]));
+    for n in ["mlp.gate", "mlp.up", "mlp.down"] {
+        let (o, i) = lins[n];
+        ents.push((n.to_string(), vec![o, i]));
+    }
+    ents
+}
+
+pub fn fp_layout(p: &PresetCfg) -> Layout {
+    let mut ents = vec![("embed".to_string(), vec![p.vocab, p.dim])];
+    for b in 0..p.n_layers {
+        for (n, s) in block_entries(p) {
+            ents.push((format!("blocks.{b}.{n}"), s));
+        }
+    }
+    ents.push(("final_norm".to_string(), vec![p.dim]));
+    ents.push(("head".to_string(), vec![p.vocab, p.dim]));
+    layout(ents)
+}
+
+pub fn block_layout(p: &PresetCfg) -> Layout {
+    layout(block_entries(p))
+}
+
+pub fn wq_block_layout(p: &PresetCfg) -> Layout {
+    layout(linears(p)
+        .into_iter()
+        .map(|(n, o, i)| (n.to_string(), vec![o, i]))
+        .collect())
+}
+
+pub fn wq_layout(p: &PresetCfg) -> Layout {
+    let mut ents = Vec::new();
+    for b in 0..p.n_layers {
+        for (n, o, i) in linears(p) {
+            ents.push((format!("blocks.{b}.{n}"), vec![o, i]));
+        }
+    }
+    layout(ents)
+}
+
+pub fn qp_block_layout(p: &PresetCfg, group: usize) -> Layout {
+    let mut ents = Vec::new();
+    for which in ["s", "z"] {
+        for (n, o, i) in linears(p) {
+            ents.push((format!("{which}.{n}"), vec![o, i / group]));
+        }
+    }
+    layout(ents)
+}
+
+pub fn qp_layout(p: &PresetCfg, group: usize) -> Layout {
+    let mut ents = Vec::new();
+    for which in ["s", "z"] {
+        for b in 0..p.n_layers {
+            for (n, o, i) in linears(p) {
+                ents.push((format!("{which}.blocks.{b}.{n}"),
+                           vec![o, i / group]));
+            }
+        }
+    }
+    layout(ents)
+}
+
+pub fn fpr_layout(p: &PresetCfg) -> Layout {
+    let mut ents = vec![("embed".to_string(), vec![p.vocab, p.dim])];
+    for b in 0..p.n_layers {
+        ents.push((format!("blocks.{b}.attn_norm"), vec![p.dim]));
+        ents.push((format!("blocks.{b}.mlp_norm"), vec![p.dim]));
+    }
+    ents.push(("final_norm".to_string(), vec![p.dim]));
+    ents.push(("head".to_string(), vec![p.vocab, p.dim]));
+    layout(ents)
+}
+
+pub fn lora_layout(p: &PresetCfg) -> Layout {
+    let r = p.lora_rank;
+    let mut ents = Vec::new();
+    for b in 0..p.n_layers {
+        for (n, o, i) in linears(p) {
+            ents.push((format!("blocks.{b}.{n}.A"), vec![r, i]));
+            ents.push((format!("blocks.{b}.{n}.B"), vec![o, r]));
+        }
+    }
+    layout(ents)
+}
+
+pub fn layouts_for(p: &PresetCfg) -> BTreeMap<String, Layout> {
+    let mut out = BTreeMap::new();
+    out.insert("fp".into(), fp_layout(p));
+    out.insert("block".into(), block_layout(p));
+    out.insert("wq_block".into(), wq_block_layout(p));
+    out.insert("wq".into(), wq_layout(p));
+    out.insert("fpr".into(), fpr_layout(p));
+    out.insert("lora".into(), lora_layout(p));
+    for &g in &p.group_sizes {
+        out.insert(format!("qp_g{g}"), qp_layout(p, g));
+        out.insert(format!("qp_block_g{g}"), qp_block_layout(p, g));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Artifact arg specs (mirror train.py builder signatures)
+// ---------------------------------------------------------------------------
+
+fn f32a(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec { name: name.to_string(), shape, dtype: Dtype::F32 }
+}
+
+fn i32a(name: &str, shape: Vec<usize>) -> ArgSpec {
+    ArgSpec { name: name.to_string(), shape, dtype: Dtype::I32 }
+}
+
+fn scalar(name: &str) -> ArgSpec {
+    f32a(name, vec![])
+}
+
+fn spec(preset: &str, entry: String, group: Option<usize>,
+        args: Vec<ArgSpec>, outputs: &[&str]) -> ArtifactSpec {
+    ArtifactSpec {
+        preset: preset.to_string(),
+        entry,
+        group,
+        file: String::new(), // native: no HLO file backs this entry
+        args,
+        outputs: outputs.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// All artifact specs for one preset: the same registry aot.py lowers
+/// (base entries + per-group entries, heavier baselines at the default
+/// group only).
+pub fn artifact_specs(p: &PresetCfg) -> Vec<ArtifactSpec> {
+    let lay = layouts_for(p);
+    let fl = lay["fp"].size;
+    let bl = lay["block"].size;
+    let wqbl = lay["wq_block"].size;
+    let wql = lay["wq"].size;
+    let fprl = lay["fpr"].size;
+    let ll = lay["lora"].size;
+    let (bb, bt) = (p.block_batch, p.block_ctx);
+    let (eb, et) = (p.e2e_batch, p.e2e_ctx);
+    let (vb, vt) = (p.eval_batch, p.eval_ctx);
+    let name = p.name.as_str();
+
+    let mut specs = vec![
+        spec(name, "pretrain_step".into(), None,
+             vec![f32a("params", vec![fl]), f32a("m", vec![fl]),
+                  f32a("v", vec![fl]), i32a("x", vec![eb, et]),
+                  i32a("y", vec![eb, et]), scalar("step"), scalar("lr")],
+             &["params", "m", "v", "loss"]),
+        spec(name, "model_fwd_fp".into(), None,
+             vec![f32a("params", vec![fl]), i32a("x", vec![vb, vt])],
+             &["logits"]),
+        spec(name, "embed_fwd".into(), None,
+             vec![f32a("params", vec![fl]), i32a("x", vec![bb, bt])],
+             &["h0"]),
+        spec(name, "block_fwd_fp".into(), None,
+             vec![f32a("bp", vec![bl]), f32a("h", vec![bb, bt, p.dim])],
+             &["h_out"]),
+        spec(name, "block_capture_fp".into(), None,
+             vec![f32a("bp", vec![bl]), f32a("h", vec![bb, bt, p.dim])],
+             &["h_out", "x_attn", "attn_ctx", "x_mlp", "mlp_mid"]),
+    ];
+
+    for &g in &p.group_sizes {
+        let qbl = lay[&format!("qp_block_g{g}")].size;
+        let qpl = lay[&format!("qp_g{g}")].size;
+        specs.push(spec(
+            name, format!("block_ap_step_g{g}"), Some(g),
+            vec![
+                f32a("bp", vec![bl]), f32a("qp", vec![qbl]),
+                f32a("m_w", vec![bl]), f32a("v_w", vec![bl]),
+                f32a("m_q", vec![qbl]), f32a("v_q", vec![qbl]),
+                f32a("w_lo", vec![bl]), f32a("w_hi", vec![bl]),
+                f32a("h", vec![bb, bt, p.dim]),
+                f32a("target", vec![bb, bt, p.dim]),
+                f32a("qmax", vec![1, 1]),
+                scalar("step"), scalar("lr_w"), scalar("lr_q"),
+                scalar("m_wf"), scalar("m_sf"), scalar("m_zf"),
+                scalar("proj"),
+            ],
+            &["bp", "qp", "m_w", "v_w", "m_q", "v_q", "loss"]));
+        specs.push(spec(
+            name, format!("block_loss_g{g}"), Some(g),
+            vec![
+                f32a("bp", vec![bl]), f32a("qp", vec![qbl]),
+                f32a("h", vec![bb, bt, p.dim]),
+                f32a("target", vec![bb, bt, p.dim]),
+                f32a("qmax", vec![1, 1]),
+            ],
+            &["loss"]));
+        specs.push(spec(
+            name, format!("block_fwd_q_g{g}"), Some(g),
+            vec![
+                f32a("wq", vec![wqbl]), f32a("qp", vec![qbl]),
+                f32a("norms", vec![2 * p.dim]),
+                f32a("h", vec![bb, bt, p.dim]),
+            ],
+            &["h_out"]));
+        specs.push(spec(
+            name, format!("e2e_qp_step_g{g}"), Some(g),
+            vec![
+                f32a("wq", vec![wql]), f32a("qp", vec![qpl]),
+                f32a("fpr", vec![fprl]),
+                f32a("m_q", vec![qpl]), f32a("v_q", vec![qpl]),
+                i32a("x", vec![eb, et]), i32a("y", vec![eb, et]),
+                f32a("loss_mask", vec![eb, et]),
+                scalar("step"), scalar("lr"),
+                scalar("m_sf"), scalar("m_zf"),
+            ],
+            &["qp", "m_q", "v_q", "loss"]));
+        specs.push(spec(
+            name, format!("model_fwd_q_g{g}"), Some(g),
+            vec![
+                f32a("wq", vec![wql]), f32a("qp", vec![qpl]),
+                f32a("fpr", vec![fprl]), i32a("x", vec![vb, vt]),
+            ],
+            &["logits"]));
+        if g == p.default_group {
+            specs.push(spec(
+                name, format!("e2e_full_step_g{g}"), Some(g),
+                vec![
+                    f32a("params", vec![fl]), f32a("m", vec![fl]),
+                    f32a("v", vec![fl]),
+                    i32a("x", vec![eb, et]), i32a("y", vec![eb, et]),
+                    scalar("step"), scalar("lr"), scalar("qmax"),
+                ],
+                &["params", "m", "v", "loss"]));
+            specs.push(spec(
+                name, format!("e2e_lora_step_g{g}"), Some(g),
+                vec![
+                    f32a("wq", vec![wql]), f32a("qp", vec![qpl]),
+                    f32a("fpr", vec![fprl]), f32a("lora", vec![ll]),
+                    f32a("m", vec![ll]), f32a("v", vec![ll]),
+                    i32a("x", vec![eb, et]), i32a("y", vec![eb, et]),
+                    f32a("loss_mask", vec![eb, et]),
+                    scalar("step"), scalar("lr"),
+                ],
+                &["lora", "m", "v", "loss"]));
+            specs.push(spec(
+                name, format!("model_fwd_lora_g{g}"), Some(g),
+                vec![
+                    f32a("wq", vec![wql]), f32a("qp", vec![qpl]),
+                    f32a("fpr", vec![fprl]), f32a("lora", vec![ll]),
+                    i32a("x", vec![vb, vt]),
+                ],
+                &["logits"]));
+        }
+    }
+    specs
+}
+
+/// Build the full in-memory manifest for the native backend.
+pub fn build_manifest() -> Manifest {
+    let mut presets = BTreeMap::new();
+    let mut artifacts = Vec::new();
+    for p in builtin_presets() {
+        artifacts.extend(artifact_specs(&p));
+        let layouts = layouts_for(&p);
+        presets.insert(p.name.clone(), PresetInfo { config: p, layouts });
+    }
+    Manifest { presets, artifacts, root: std::path::PathBuf::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_validate_and_partition() {
+        for p in builtin_presets() {
+            for (name, lay) in layouts_for(&p) {
+                lay.validate()
+                    .unwrap_or_else(|e| panic!("{}/{name}: {e}", p.name));
+            }
+        }
+    }
+
+    #[test]
+    fn qp_layout_halves_are_s_then_z() {
+        let ps = builtin_presets();
+        let p = &ps[0];
+        let lay = qp_layout(p, p.default_group);
+        let half = lay.size / 2;
+        // first entry of the z half starts exactly at the midpoint
+        let z0 = lay.entry("z.blocks.0.attn.q").unwrap();
+        assert_eq!(z0.offset, half);
+        assert!(lay.entry("s.blocks.0.attn.q").unwrap().offset < half);
+    }
+
+    #[test]
+    fn specs_cover_the_aot_registry() {
+        let p = builtin_presets().into_iter().find(|p| p.name == "tiny")
+            .unwrap();
+        let specs = artifact_specs(&p);
+        let names: Vec<&str> =
+            specs.iter().map(|s| s.entry.as_str()).collect();
+        for want in ["pretrain_step", "embed_fwd", "block_fwd_fp",
+                     "block_capture_fp", "model_fwd_fp",
+                     "block_ap_step_g32", "block_loss_g64",
+                     "block_fwd_q_g128", "e2e_qp_step_g32",
+                     "model_fwd_q_g64", "e2e_full_step_g32",
+                     "e2e_lora_step_g32", "model_fwd_lora_g32"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        // heavier baselines only at the default group
+        assert!(!names.contains(&"e2e_full_step_g64"));
+    }
+
+    #[test]
+    fn block_layout_matches_fp_block_slices() {
+        let p = builtin_presets().into_iter().find(|p| p.name == "synthetic")
+            .unwrap();
+        let fpl = fp_layout(&p);
+        let bl = block_layout(&p);
+        // per-block size in fp == block layout size
+        let b0 = fpl.entry("blocks.0.attn_norm").unwrap().offset;
+        let b1 = fpl.entry("blocks.1.attn_norm").unwrap().offset;
+        assert_eq!(b1 - b0, bl.size);
+    }
+}

@@ -1,0 +1,148 @@
+//! PJRT backend: loads AOT HLO-text artifacts produced by
+//! python/compile/aot.py, compiles them once on the PJRT CPU client, and
+//! executes them with typed, spec-checked host buffers.
+//!
+//! Python never runs here - the HLO text files are the entire interface.
+//! Pattern adapted from /opt/xla-example/load_hlo/. When the real xla-rs
+//! bindings are unavailable (the in-tree `crate::xla_stub` build),
+//! [`PjrtRuntime::new`] fails at runtime with a clear error and callers
+//! fall back to the [`crate::runtime::native`] backend.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::io::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::{check_args, Arg, Backend, Executor, OutBuf};
+use crate::xla_stub as xla;
+
+impl<'a> Arg<'a> {
+    /// Host -> device transfer as an OWNED PjRtBuffer.
+    ///
+    /// We deliberately avoid `PjRtLoadedExecutable::execute(&[Literal])`:
+    /// its C shim (`xla_rs.cc::execute`) `release()`s every input device
+    /// buffer without ever deleting it - ~100 MB leaked per train step on
+    /// the `small` preset (found via OOM at 36 GB RSS; see EXPERIMENTS.md
+    /// §Perf). `execute_b` borrows caller-owned buffers instead, and Rust
+    /// frees them on Drop.
+    fn to_buffer(&self, client: &xla::PjRtClient, shape: &[usize])
+                 -> Result<xla::PjRtBuffer> {
+        let buf = match self {
+            Arg::F32(v) => {
+                client.buffer_from_host_buffer::<f32>(v, shape, None)?
+            }
+            Arg::I32(v) => {
+                client.buffer_from_host_buffer::<i32>(v, shape, None)?
+            }
+            Arg::Scalar(x) => client
+                .buffer_from_host_buffer::<f32>(&[*x], shape, None)?,
+        };
+        Ok(buf)
+    }
+}
+
+/// A compiled artifact with its argument spec.
+pub struct Exec {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Executor for Exec {
+    fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        check_args(&self.spec, args)?;
+        let mut bufs = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.spec.args) {
+            bufs.push(arg.to_buffer(&self.client, &spec.shape)?);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&bufs)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, spec wants {}",
+                self.spec.entry,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, name) in parts.into_iter().zip(&self.spec.outputs) {
+            let n = lit.element_count();
+            let mut data = vec![0f32; n];
+            lit.copy_raw_to(&mut data)?;
+            out.push(OutBuf { name: name.clone(), data });
+        }
+        Ok(out)
+    }
+}
+
+/// Manifest-driven executable registry. Compiles lazily and caches.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<BTreeMap<String, Rc<Exec>>>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>)
+               -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: std::cell::RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Load + compile (or fetch from cache) an artifact.
+    fn exec_impl(&self, preset: &str, entry: &str) -> Result<Rc<Exec>> {
+        let key = format!("{preset}/{entry}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(preset, entry)?.clone();
+        let path = self.manifest.root.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {key}: {e}"))?;
+        crate::debug!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exec = Rc::new(Exec {
+            spec,
+            exe,
+            client: self.client.clone(),
+        });
+        self.cache.borrow_mut().insert(key, exec.clone());
+        Ok(exec)
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn exec(&self, preset: &str, entry: &str) -> Result<Rc<dyn Executor>> {
+        Ok(self.exec_impl(preset, entry)?)
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

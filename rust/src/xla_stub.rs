@@ -1,15 +1,15 @@
-//! Compile-time stub for the `xla` PJRT bindings used by `runtime/`.
+//! Compile-time stub for the `xla` PJRT bindings used by `runtime::pjrt`.
 //!
 //! The real xla-rs bindings (PJRT CPU client + HLO-proto loader) are not
 //! vendored in this tree and cannot be fetched offline, so every entry
 //! point here compiles fine and fails at *runtime* with a clear error.
-//! `Runtime::new` therefore returns Err on construction, and everything
-//! downstream of it (PJRT train/eval paths, integration tests) skips
-//! gracefully. The pure-Rust request path - `infer::engine`,
-//! `infer::qlinear`, `bench` - never touches this module and is fully
-//! functional.
+//! `PjrtRuntime::new` therefore returns Err on construction, and
+//! `runtime::make_backend("auto", ...)` falls back to the pure-Rust
+//! `runtime::native` backend, which implements every lowered executable
+//! on the CPU - so training, evaluation, and the request path all stay
+//! fully functional without these bindings.
 //!
-//! If the real bindings become available, point `runtime/mod.rs` back at
+//! If the real bindings become available, point `runtime/pjrt.rs` back at
 //! them by swapping its `use crate::xla_stub as xla;` import.
 
 use std::fmt;

@@ -1,7 +1,12 @@
-//! Integration tests over the real artifacts (run `make artifacts` first).
-//! These exercise the full L3->L2->L1 stack: HLO-text load, PJRT compile,
-//! spec-checked execution, the Block-AP/E2E-QP coordinators, and the
-//! pure-Rust engine's numerical parity with the XLA forward.
+//! Integration tests over the execution-backend layer.
+//!
+//! These exercise the full stack - backend resolution, spec-checked
+//! execution, the Block-AP/E2E-QP coordinators, perplexity eval, and the
+//! pure-Rust engine's numerical parity with the backend forward - on the
+//! **native** backend, which is always available (no artifacts, no PJRT).
+//! When AOT artifacts + real xla bindings exist, `backend()` picks the
+//! PJRT runtime instead, so the same tests double as artifact-parity
+//! checks; nothing skips either way.
 
 use efficientqat::config::{QuantScheme, TrainHp};
 use efficientqat::coordinator::block_ap::{rtn_quantize_model, run_block_ap};
@@ -13,49 +18,60 @@ use efficientqat::eval::fwd::ModelRef;
 use efficientqat::eval::ppl::perplexity;
 use efficientqat::infer::engine::Engine;
 use efficientqat::model::init::init_fp_params;
-use efficientqat::runtime::{Arg, Runtime};
+use efficientqat::runtime::{make_backend, Arg, Backend};
 
-const PRESET: &str = "tiny";
+/// The CI preset: small enough that a full Block-AP -> E2E-QP pipeline
+/// runs in seconds on the native backend.
+const PRESET: &str = "synthetic";
 
-/// PJRT tests skip gracefully when the artifacts (or the real xla
-/// bindings - see rust/src/xla_stub.rs) are unavailable, so `cargo test`
-/// stays green on a fresh checkout; the pure-Rust engine tests below and
-/// in the unit suites still run.
-fn runtime() -> Option<Runtime> {
+/// PJRT when artifacts + bindings exist, native otherwise - never absent.
+/// Falls back to native when the PJRT manifest lacks the CI preset.
+fn backend() -> Box<dyn Backend> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("artifacts");
-    match Runtime::new(&dir) {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("skipping PJRT integration test: {e:#}");
-            None
-        }
+    let be = make_backend("auto", dir.to_str().unwrap()).expect("backend");
+    if be.manifest().preset(PRESET).is_err() {
+        return Box::new(
+            efficientqat::runtime::native::NativeBackend::new());
     }
+    be
 }
 
-fn world() -> World {
-    World::new(512, 7)
+fn world(rt: &dyn Backend) -> World {
+    let vocab = rt.manifest().preset(PRESET).unwrap().config.vocab;
+    World::new(vocab, 7)
+}
+
+/// Quick pretraining so quantization error is meaningful downstream.
+fn pretrained(rt: &dyn Backend, steps: usize) -> Vec<f32> {
+    let w = world(rt);
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
+    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
+                                   cfg.e2e_batch, cfg.e2e_ctx);
+    let opts = PretrainOpts { steps, lr: 1e-2, seed: 5, log_every: 0 };
+    pretrain(rt, PRESET, &mut loader, &opts).unwrap().0
 }
 
 #[test]
-fn artifact_specs_resolve_and_compile() {
-    let Some(rt) = runtime() else { return };
+fn entries_resolve_and_specs_are_checked() {
+    let rt = backend();
     for entry in ["pretrain_step", "model_fwd_fp", "embed_fwd",
                   "block_fwd_fp", "block_capture_fp"] {
         rt.exec(PRESET, entry).unwrap();
     }
-    rt.exec_g(PRESET, "block_ap_step", 32).unwrap();
-    assert_eq!(rt.platform(), "cpu");
+    let g = rt.manifest().preset(PRESET).unwrap().config.default_group;
+    rt.exec_g(PRESET, "block_ap_step", g).unwrap();
+    assert!(rt.platform().contains("cpu"));
 }
 
 #[test]
 fn arg_validation_rejects_bad_shapes() {
-    let Some(rt) = runtime() else { return };
+    let rt = backend();
     let exec = rt.exec(PRESET, "embed_fwd").unwrap();
     // wrong arg count
     assert!(exec.run(&[Arg::Scalar(1.0)]).is_err());
     // wrong length
-    let fpl = rt.manifest.layout(PRESET, "fp").unwrap();
+    let fpl = rt.manifest().layout(PRESET, "fp").unwrap();
     let params = vec![0f32; fpl.size];
     let bad_x = vec![0i32; 3];
     assert!(exec.run(&[Arg::F32(&params), Arg::I32(&bad_x)]).is_err());
@@ -63,113 +79,140 @@ fn arg_validation_rejects_bad_shapes() {
 
 #[test]
 fn pretrain_learns_on_synthetic_corpus() {
-    let Some(rt) = runtime() else { return };
-    let w = world();
-    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
+    let rt = backend();
+    let w = world(rt.as_ref());
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
     let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
                                    cfg.e2e_batch, cfg.e2e_ctx);
-    let opts = PretrainOpts { steps: 60, lr: 3e-3, seed: 5, log_every: 0 };
-    let (_params, report) = pretrain(&rt, PRESET, &mut loader, &opts)
+    let opts = PretrainOpts { steps: 60, lr: 1e-2, seed: 5, log_every: 0 };
+    let (_params, report) = pretrain(rt.as_ref(), PRESET, &mut loader,
+                                     &opts)
         .unwrap();
     let first = report.losses[0];
     let last = *report.losses.last().unwrap();
-    // vocab 512 -> random init ~ ln(512) = 6.24; the synthetic corpus has
-    // high intrinsic entropy, so expect a solid (not huge) drop in 60 steps
-    assert!(first > 5.5, "first loss {first}");
-    assert!(last < first - 0.7, "no learning: {first} -> {last}");
+    // vocab 96 -> random init ~ ln(96) = 4.56; the synthetic corpus has
+    // high intrinsic entropy, so expect a clear (not huge) drop
+    assert!(first > 3.8, "first loss {first}");
+    assert!(last < first - 0.25, "no learning: {first} -> {last}");
 }
 
 #[test]
-fn rtn_model_forward_matches_rust_engine() {
-    let Some(rt) = runtime() else { return };
-    let fpl = rt.manifest.layout(PRESET, "fp").unwrap();
+fn backend_forward_matches_rust_engine() {
+    let rt = backend();
+    let fpl = rt.manifest().layout(PRESET, "fp").unwrap();
     let params = init_fp_params(fpl, 42);
-    let sch = QuantScheme::new(4, 32);
-    let qm = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
+    let sch = QuantScheme::new(4, cfg.default_group);
+    let qm = rtn_quantize_model(rt.as_ref(), PRESET, &params, sch)
+        .unwrap();
 
-    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
-    // PJRT logits over one eval batch
-    let w = world();
+    // backend logits over one eval batch
+    let w = world(rt.as_ref());
     let mut loader = LmLoader::new(&w, &domain_redpajama(), 3,
                                    cfg.eval_batch, cfg.eval_ctx);
     let b = loader.next_batch();
-    let logits = ModelRef::Quant(&qm).logits(&rt, &b.x).unwrap();
+    let logits = ModelRef::Quant(&qm).logits(rt.as_ref(), &b.x).unwrap();
 
     // rust engine over row 0 of the batch
-    let info = rt.manifest.preset(PRESET).unwrap();
+    let info = rt.manifest().preset(PRESET).unwrap();
     let mut eng = Engine::new(&qm, info, cfg.eval_ctx).unwrap();
     let row0 = &b.x[..cfg.eval_ctx];
     let mut max_err = 0f32;
     for (t, &tok) in row0.iter().enumerate() {
         let lg = eng.step(tok).unwrap();
-        let xla_row = &logits[t * cfg.vocab..(t + 1) * cfg.vocab];
-        for (a, c) in lg.iter().zip(xla_row) {
+        let be_row = &logits[t * cfg.vocab..(t + 1) * cfg.vocab];
+        for (a, c) in lg.iter().zip(be_row) {
             max_err = max_err.max((a - c).abs());
         }
     }
-    assert!(max_err < 2e-3, "engine vs XLA logits diverge: {max_err}");
+    assert!(max_err < 2e-3, "engine vs backend logits diverge: {max_err}");
 }
 
+/// The acceptance-criteria smoke: a real Block-AP -> E2E-QP run with no
+/// HLO artifacts present. Per-block loss curves must be finite and
+/// decreasing on average, and the resulting 2-bit model must beat the RTN
+/// baseline on perplexity over the same synthetic corpus.
 #[test]
-fn block_ap_reduces_reconstruction_loss_and_beats_rtn_ppl() {
-    let Some(rt) = runtime() else { return };
-    let w = world();
-    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
-    // quick pretrain so quantization error is meaningful
-    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
-                                   cfg.e2e_batch, cfg.e2e_ctx);
-    let opts = PretrainOpts { steps: 60, lr: 3e-3, seed: 5, log_every: 0 };
-    let (params, _) = pretrain(&rt, PRESET, &mut loader, &opts).unwrap();
+fn block_ap_then_e2e_qp_beats_rtn_ppl() {
+    let rt = backend();
+    let w = world(rt.as_ref());
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
+    let params = pretrained(rt.as_ref(), 60);
 
-    let sch = QuantScheme::new(2, 32);
+    let sch = QuantScheme::new(2, cfg.default_group);
     let hp = TrainHp {
-        block_samples: 64,
-        block_epochs: 2,
+        block_samples: 24,
+        block_epochs: 3,
         block_lr_w: 1e-3,
         block_lr_q: 1e-3,
+        e2e_epochs: 3,
+        e2e_lr: 2e-3,
         ..Default::default()
     };
-    let mut cal = LmLoader::new(&w, &domain_redpajama(), 21,
-                                cfg.block_batch, cfg.block_ctx);
-    let pool = cal.sample_pool(8);
-    let mut val = LmLoader::new(&w, &domain_redpajama(), 22,
-                                cfg.block_batch, cfg.block_ctx);
+    let dom = domain_redpajama();
+    let mut cal = LmLoader::new(&w, &dom, 21, cfg.block_batch,
+                                cfg.block_ctx);
+    let pool = cal.sample_pool(12);
+    let mut val = LmLoader::new(&w, &dom, 22, cfg.block_batch,
+                                cfg.block_ctx);
     let val_pool = val.sample_pool(2);
 
-    let out = run_block_ap(&rt, PRESET, &params, sch, &hp, &pool, &val_pool)
+    let out = run_block_ap(rt.as_ref(), PRESET, &params, sch, &hp, &pool,
+                           &val_pool)
         .unwrap();
-    // training reduced each block's reconstruction loss
+    // per-block loss curves: finite, and decreasing on average (the
+    // entries are per-batch losses, so compare half-means, not endpoints)
     for (b, curve) in out.report.loss_curves.iter().enumerate() {
-        let first = curve[0];
-        let last = *curve.last().unwrap();
-        assert!(last < first, "block {b}: {first} -> {last}");
+        assert!(curve.iter().all(|l| l.is_finite()),
+                "block {b}: non-finite losses");
+        let half = curve.len() / 2;
+        let head: f64 =
+            curve[..half].iter().map(|&x| x as f64).sum::<f64>()
+                / half as f64;
+        let tail: f64 =
+            curve[half..].iter().map(|&x| x as f64).sum::<f64>()
+                / (curve.len() - half) as f64;
+        assert!(
+            tail < head,
+            "block {b}: reconstruction loss not decreasing on average \
+             ({head:.5} -> {tail:.5})"
+        );
     }
 
-    // and the resulting 2-bit model beats plain RTN on perplexity
-    let rtn = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
-    let dom = domain_redpajama();
-    let ppl_rtn = perplexity(&rt, &ModelRef::Quant(&rtn), &w, &dom, 2, 99)
+    // phase 2 on the block-AP model
+    let mut qm = out.model;
+    let mut e2e_loader = LmLoader::new(&w, &dom, 31, cfg.e2e_batch,
+                                       cfg.e2e_ctx);
+    let e2e_pool = e2e_loader.sample_pool(8);
+    let batches = lm_batches(&e2e_pool);
+    let report = run_e2e_qp(rt.as_ref(), &mut qm, &batches, &hp).unwrap();
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+
+    // the full pipeline's 2-bit model beats plain RTN on perplexity
+    let rtn = rtn_quantize_model(rt.as_ref(), PRESET, &params, sch)
         .unwrap();
-    let ppl_bap = perplexity(&rt, &ModelRef::Quant(&out.model), &w, &dom,
-                             2, 99).unwrap();
+    let ppl_rtn = perplexity(rt.as_ref(), &ModelRef::Quant(&rtn), &w,
+                             &dom, 2, 99)
+        .unwrap();
+    let ppl_eqat = perplexity(rt.as_ref(), &ModelRef::Quant(&qm), &w,
+                              &dom, 2, 99)
+        .unwrap();
     assert!(
-        ppl_bap < ppl_rtn,
-        "block-AP ppl {ppl_bap:.2} not better than RTN {ppl_rtn:.2}"
+        ppl_eqat < ppl_rtn,
+        "EfficientQAT ppl {ppl_eqat:.2} not better than RTN {ppl_rtn:.2}"
     );
 }
 
 #[test]
 fn e2e_qp_trains_scales_only_and_improves_loss() {
-    let Some(rt) = runtime() else { return };
-    let w = world();
-    let cfg = rt.manifest.preset(PRESET).unwrap().config.clone();
-    let mut loader = LmLoader::new(&w, &domain_redpajama(), 11,
-                                   cfg.e2e_batch, cfg.e2e_ctx);
-    let opts = PretrainOpts { steps: 40, lr: 3e-3, seed: 5, log_every: 0 };
-    let (params, _) = pretrain(&rt, PRESET, &mut loader, &opts).unwrap();
+    let rt = backend();
+    let w = world(rt.as_ref());
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
+    let params = pretrained(rt.as_ref(), 40);
 
-    let sch = QuantScheme::new(2, 32);
-    let mut qm = rtn_quantize_model(&rt, PRESET, &params, sch).unwrap();
+    let sch = QuantScheme::new(2, cfg.default_group);
+    let mut qm = rtn_quantize_model(rt.as_ref(), PRESET, &params, sch)
+        .unwrap();
     let wq_before = qm.wq.clone();
     let z_before = qm.z_slice().to_vec();
 
@@ -178,21 +221,24 @@ fn e2e_qp_trains_scales_only_and_improves_loss() {
     let pool = e2e_loader.sample_pool(8);
     let batches = lm_batches(&pool);
     let hp = TrainHp { e2e_epochs: 2, e2e_lr: 2e-3, ..Default::default() };
-    let report = run_e2e_qp(&rt, &mut qm, &batches, &hp).unwrap();
+    let report = run_e2e_qp(rt.as_ref(), &mut qm, &batches, &hp).unwrap();
 
-    // weights and zero points frozen; scales moved; loss improved
+    // weights and zero points frozen; scales moved; loss improved (the
+    // entries are per-batch losses, so compare epoch means)
     assert_eq!(qm.wq, wq_before);
     assert_eq!(qm.z_slice(), &z_before[..]);
-    let first = report.losses[0];
-    let last = *report.losses.last().unwrap();
-    assert!(last < first, "e2e-qp loss {first} -> {last}");
+    let half = report.losses.len() / 2;
+    let head: f64 = report.losses[..half].iter().map(|&x| x as f64)
+        .sum::<f64>() / half as f64;
+    let tail: f64 = report.losses[half..].iter().map(|&x| x as f64)
+        .sum::<f64>() / (report.losses.len() - half) as f64;
+    assert!(tail < head, "e2e-qp loss {head:.4} -> {tail:.4}");
 }
 
 /// Pure-Rust serving path end-to-end, no artifacts required: synthetic
 /// packed engine -> batched prefill -> zero-alloc decode -> batched eval
 /// forward, checking self-consistency between the batched and sequential
-/// paths. This keeps the integration binary meaningful on checkouts where
-/// the PJRT tests above skip.
+/// paths.
 #[test]
 fn engine_serving_path_without_artifacts() {
     use efficientqat::eval::fwd::engine_logits;

@@ -1,7 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 gate: release build + full test suite + a fast-mode inference
 # bench smoke that must produce a valid machine-readable perf snapshot
-# (runs/bench.json, schema 1). Run from anywhere; operates on the repo root.
+# (runs/bench.json, schema 2, including the native train_step section) +
+# a bounded end-to-end Block-AP -> E2E-QP training smoke on the native
+# backend (no HLO artifacts required). Run from anywhere; operates on the
+# repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,5 +15,11 @@ cargo test -q
 # runs/bench.json is missing or malformed
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
+
+# native-backend train smoke: pretrain (bounded) -> Block-AP -> E2E-QP ->
+# ppl vs RTN, all pure-Rust, fails on non-finite losses
+cargo run --release --bin eqat -- train --preset synthetic \
+  --backend native --pretrain-steps 40 --block-samples 8 \
+  --e2e-samples 8 --ppl-batches 2 --out runs/tier1-synthetic-w2.eqt
 
 echo "tier1 OK"
