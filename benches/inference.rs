@@ -3,10 +3,11 @@
 //! tokens/sec on a Llama-2-7B-shaped block (custom harness - criterion is
 //! unavailable offline; see rust/src/bench/mod.rs).
 //!
-//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 2)
-//! so the throughput trajectory is tracked across PRs. `EQAT_BENCH_FAST=1`
-//! shrinks shapes/iterations for CI smoke runs; `EQAT_THREADS=N` caps the
-//! worker count.
+//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 3:
+//! inference sections + native train_step + taped-vs-forward-only
+//! eval_forward) so the throughput trajectory is tracked across PRs.
+//! `EQAT_BENCH_FAST=1` shrinks shapes/iterations for CI smoke runs;
+//! `EQAT_THREADS=N` caps the worker count.
 
 fn main() {
     efficientqat::util::logging::init();

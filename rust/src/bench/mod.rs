@@ -5,9 +5,10 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 2 = inference sections + native train_step) so the perf
-//! trajectory is trackable across PRs;
-//! [`check_bench_json`] validates it (used by scripts/tier1.sh).
+//! (schema 3 = inference sections + native train_step + the
+//! taped-vs-forward-only eval_forward section) so the perf trajectory is
+//! trackable across PRs; [`check_bench_json`] validates it (used by
+//! scripts/tier1.sh). Schemas 1-2 from older PRs stay accepted.
 
 use std::time::Instant;
 
@@ -146,14 +147,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (ts_md, ts_json) = train_step_throughput(fast)?;
     md.push_str(&ts_md);
+    md.push('\n');
+    let (ef_md, ef_json) = eval_forward_throughput(fast)?;
+    md.push_str(&ef_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 2 = schema 1 + the train_step section
-        ("schema", Json::num(2.0)),
+        // schema 3 = schema 2 + the eval_forward section
+        ("schema", Json::num(3.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -161,8 +165,82 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("matvec", mv_json),
         ("engine", eng_json),
         ("train_step", ts_json),
+        ("eval_forward", ef_json),
     ]);
     Ok((md, payload))
+}
+
+/// Eval-forward throughput on the native backend's `synthetic` preset:
+/// tokens/s through the taped training forward (what eval entries paid
+/// before the forward-only rework) vs the no-tape path they run now.
+/// Both paths produce bit-identical logits (asserted), so the delta is
+/// pure tape/allocation overhead. Schema-3 section of runs/bench.json.
+pub fn eval_forward_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::model::init::init_fp_params;
+    use crate::runtime::native::model::{self, FwdScratch, Geom};
+    use crate::runtime::native::{model_refs_fp, NativeBackend};
+    use crate::runtime::Backend;
+
+    let be = NativeBackend::new();
+    let preset = "synthetic";
+    let cfg = be.manifest().preset(preset)?.config.clone();
+    let fpl = be.manifest().layout(preset, "fp")?.clone();
+    let params = init_fp_params(&fpl, 3);
+    let geom = Geom::new(cfg.eval_batch, cfg.eval_ctx, cfg.dim,
+                         cfg.n_heads, cfg.head_dim, cfg.inter,
+                         cfg.norm_eps as f32, cfg.rope_theta);
+    let n_tok = cfg.eval_batch * cfg.eval_ctx;
+    let x: Vec<i32> =
+        (0..n_tok).map(|i| ((i * 7 + 1) % cfg.vocab) as i32).collect();
+    let mp = model_refs_fp(&cfg, &fpl, &params, None)?;
+
+    let iters = if fast { 5 } else { 30 };
+    let r_taped = bench("eval-fwd-taped", 1, iters, || {
+        let (logits, tape) = model::model_fwd(&geom, &mp, &x, cfg.vocab);
+        std::hint::black_box((logits.len(), tape.tapes.len()));
+    });
+    let mut sc = FwdScratch::new();
+    let r_notape = bench("eval-fwd-notape", 1, iters, || {
+        let logits =
+            model::model_fwd_notape(&geom, &mp, &x, cfg.vocab, &mut sc);
+        std::hint::black_box(logits.len());
+    });
+    // sanity: the two paths agree bit-for-bit (also pinned by tests)
+    let (lg_t, _) = model::model_fwd(&geom, &mp, &x, cfg.vocab);
+    let lg_n = model::model_fwd_notape(&geom, &mp, &x, cfg.vocab, &mut sc);
+    if lg_t.iter().zip(&lg_n).any(|(a, b)| a.to_bits() != b.to_bits()) {
+        bail!("eval_forward bench: taped and notape logits diverge");
+    }
+
+    let taped_tps = n_tok as f64 * 1e6 / r_taped.mean_us;
+    let notape_tps = n_tok as f64 * 1e6 / r_notape.mean_us;
+    let speedup = r_taped.mean_us / r_notape.mean_us;
+    let rows = vec![
+        vec!["preset".into(),
+             format!("{preset} ({} tok/batch)", n_tok)],
+        vec!["taped forward".into(),
+             format!("{:.0} us ({taped_tps:.0} tok/s)", r_taped.mean_us)],
+        vec!["forward-only".into(),
+             format!("{:.0} us ({notape_tps:.0} tok/s)",
+                     r_notape.mean_us)],
+        vec!["speedup (notape vs taped)".into(),
+             format!("{speedup:.2}x")],
+    ];
+    let md = format!(
+        "## Eval forward - taped vs forward-only (native backend, \
+         bit-identical logits)\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("preset", Json::str(preset)),
+        ("tokens_per_batch", Json::num(n_tok as f64)),
+        ("taped_us", Json::num(r_taped.mean_us)),
+        ("taped_tok_per_sec", Json::num(taped_tps)),
+        ("notape_us", Json::num(r_notape.mean_us)),
+        ("notape_tok_per_sec", Json::num(notape_tps)),
+        ("speedup", Json::num(speedup)),
+    ]);
+    Ok((md, j))
 }
 
 /// Native-backend training-step throughput on the `synthetic` preset:
@@ -516,15 +594,15 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 }
 
 /// Validate a `runs/bench.json` produced by [`inference_throughput`]:
-/// parses, checks the schema (1 legacy, 2 adds train_step), and
-/// requires non-empty matvec/decode sections
-/// with numeric fields. scripts/tier1.sh fails the build on error.
+/// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
+/// eval_forward), and requires non-empty matvec/decode sections with
+/// numeric fields. scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if schema != 1 && schema != 2 {
+    if !(1..=3).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -557,6 +635,17 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             let v = ts.get(key)?.as_f64()?;
             if !v.is_finite() || v <= 0.0 {
                 bail!("{path}: bad train_step.{key} {v}");
+            }
+        }
+    }
+    // schema 3 adds the taped-vs-forward-only eval_forward section
+    if schema >= 3 {
+        let ef = j.get("eval_forward")?;
+        for key in ["taped_tok_per_sec", "notape_tok_per_sec",
+                    "speedup"] {
+            let v = ef.get(key)?.as_f64()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: bad eval_forward.{key} {v}");
             }
         }
     }
@@ -620,7 +709,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(2.0)),
+            ("schema", Json::num(3.0)),
             ("kind", Json::str("inference_throughput")),
             (
                 "matvec",
@@ -651,6 +740,14 @@ mod tests {
                     ("e2e_qp_step_us", Json::num(4000.0)),
                 ]),
             ),
+            (
+                "eval_forward",
+                Json::obj(vec![
+                    ("taped_tok_per_sec", Json::num(9000.0)),
+                    ("notape_tok_per_sec", Json::num(15000.0)),
+                    ("speedup", Json::num(1.6)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -658,26 +755,35 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-2 file without train_step is rejected...
-        let mut no_ts = Vec::new();
+        // schema-3 file without its required sections is rejected...
+        for missing in ["train_step", "eval_forward"] {
+            let mut pruned = Vec::new();
+            if let Json::Obj(fields) = &good {
+                for (k, v) in fields {
+                    if k != missing {
+                        pruned.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(pruned)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "missing {missing} accepted");
+        }
+        // ...but the core sections under legacy schemas 1/2 stay valid
+        let mut core = Vec::new();
         if let Json::Obj(fields) = &good {
             for (k, v) in fields {
-                if k != "train_step" {
-                    no_ts.push((k.as_str(), v.clone()));
+                if k != "eval_forward" && k != "schema" {
+                    core.push((k.as_str(), v.clone()));
                 }
             }
         }
-        write_bench_json(&path, &Json::obj(no_ts.clone())).unwrap();
-        assert!(check_bench_json(&path).is_err());
-        // ...but the same sections under legacy schema 1 stay valid
-        let legacy: Vec<(&str, Json)> = no_ts
-            .into_iter()
-            .map(|(k, v)| {
-                if k == "schema" { (k, Json::num(1.0)) } else { (k, v) }
-            })
-            .collect();
-        write_bench_json(&path, &Json::obj(legacy)).unwrap();
-        check_bench_json(&path).unwrap();
+        for legacy_schema in [1.0f64, 2.0] {
+            let mut legacy = vec![("schema", Json::num(legacy_schema))];
+            legacy.extend(core.clone());
+            write_bench_json(&path, &Json::obj(legacy)).unwrap();
+            check_bench_json(&path).unwrap();
+        }
 
         // malformed: missing decode section
         let bad = Json::obj(vec![

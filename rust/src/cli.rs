@@ -33,17 +33,19 @@ COMMANDS
                         [--preset P --bits N --group G --out FILE
                          --no-block-ap --no-e2e --trainable SET]
   eval                  evaluate a model [--model FILE | --preset P (fp)]
-                        (ppl wiki/c4 + 5 zero-shot suites)
+                        (ppl wiki/c4 + 5 zero-shot suites); --ppl-only
+                        [--ppl-batches N] runs just wiki ppl through the
+                        forward-only eval path (the tier-1 smoke)
   generate              pure-Rust generation from a packed model
                         [--model FILE --tokens N --temp T]
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
-                        batched prefill + native train_step ->
-                        runs/bench.json) | check (validate
-                        runs/bench.json) | train-time (Tables 8/9)
-                        [--fast]
+                        batched prefill + native train_step + taped-vs-
+                        forward-only eval_forward -> runs/bench.json,
+                        schema 3) | check (validate runs/bench.json) |
+                        train-time (Tables 8/9)  [--fast]
   help                  this text
 
 BACKENDS (--backend, default auto)

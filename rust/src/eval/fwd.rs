@@ -1,6 +1,10 @@
 //! Uniform forward interface over the three evaluated model kinds:
 //! full-precision, quantized (dequant path), and quantized+LoRA.
-//! All run the `eval_batch x eval_ctx` logits executables.
+//! All run the `eval_batch x eval_ctx` logits executables. On the native
+//! backend these dispatch to the **forward-only** model core
+//! (`runtime::native::model::model_fwd_notape`): no training tape, no
+//! per-head attention-probability allocation, bit-identical logits - so
+//! every perplexity/zero-shot/MMLU pass below runs at inference cost.
 //!
 //! [`engine_logits`] is the pure-Rust sibling: the same
 //! `(batch*ctx) -> (batch*ctx*vocab)` contract evaluated on the packed

@@ -1,10 +1,13 @@
 //! Perplexity evaluation (paper Table 3): mean token cross-entropy over
 //! held-out windows of a domain corpus, exp'd.
 //!
-//! Two backends share the NLL accounting: [`perplexity`] runs the PJRT
-//! eval executables, [`perplexity_engine`] runs the pure-Rust packed
-//! engine's batched forward (no artifacts needed) - useful for validating
-//! a deployed .eqt model on the serving box itself.
+//! Two backends share the NLL accounting: [`perplexity`] runs the
+//! backend's eval executables (on the native backend that is the
+//! forward-only, tape-free model core), [`perplexity_engine`] runs the
+//! pure-Rust packed engine's batched forward (no artifacts needed) -
+//! useful for validating a deployed .eqt model on the serving box
+//! itself. Both paths are backed by the persistent worker pool, so
+//! multi-batch eval pays no per-call thread-spawn latency.
 
 use anyhow::Result;
 
@@ -81,6 +84,31 @@ pub fn perplexity_engine(
 #[cfg(test)]
 mod tests {
     use crate::util::stats::logsumexp;
+
+    /// End-to-end through the native backend's forward-only eval entry
+    /// (`model_fwd_fp` -> `model_fwd_notape`): the ppl accounting must
+    /// stay finite and near-uniform for an untrained model. This is the
+    /// same path `eqat eval --ppl-only` (tier-1 smoke) drives.
+    #[test]
+    fn native_backend_perplexity_runs_forward_only() {
+        use crate::data::corpus::{domain_wiki, World};
+        use crate::eval::fwd::ModelRef;
+        use crate::model::init::init_fp_params;
+        use crate::runtime::{native::NativeBackend, Backend};
+        let be = NativeBackend::new();
+        let cfg = be.manifest().preset("synthetic").unwrap().config
+            .clone();
+        let fpl = be.manifest().layout("synthetic", "fp").unwrap().clone();
+        let params = init_fp_params(&fpl, 19);
+        let world = World::new(cfg.vocab, 5);
+        let ppl = super::perplexity(
+            &be,
+            &ModelRef::Fp { preset: "synthetic", params: &params },
+            &world, &domain_wiki(), 2, 77)
+            .unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "ppl={ppl}");
+        assert!(ppl < cfg.vocab as f64 * 4.0, "ppl={ppl}");
+    }
 
     #[test]
     fn engine_perplexity_is_finite_and_near_uniform_for_random_model() {

@@ -2,6 +2,11 @@
 //! scored by the total log-likelihood of its tokens given the context; the
 //! model is correct when the gold option ranks first. Drives both the five
 //! zero-shot suites (Table 1) and the MMLU analog (Table 4).
+//!
+//! Cost note: a suite scores `items x options` sequences, one
+//! eval-geometry forward per batch row - on the native backend these all
+//! go through the forward-only (no-tape) model core, so zero-shot eval
+//! no longer materializes training tapes it immediately drops.
 
 use anyhow::{bail, Result};
 

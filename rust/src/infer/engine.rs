@@ -27,16 +27,20 @@
 //!   intermediate buffer (including per-head attention scores and the
 //!   matvec group-sum scratch), so steady-state `step_ref` does no heap
 //!   allocation.
-//! - **Parallel attention**: per-head score/context work is chunked across
-//!   scoped threads (`util::threads`) once the context is long enough to
-//!   pay for a spawn; prefill attention chunks across tokens.
+//! - **Parallel attention**: per-head score/context work is chunked onto
+//!   the persistent worker pool (`util::threads`) once the context is
+//!   long enough to pay for a dispatch; prefill attention chunks across
+//!   tokens.
 //!
 //! §Perf: batched prefill replaces, per prompt token, a full per-call
 //! group-unpack pass over every linear plus an lm-head matvec with an
 //! amortized share of one matmul pass - at 64 tokens on a 7B-shaped block
 //! that is a large constant-factor win (target floor: >=3x vs the old
 //! sequential step loop), and multi-threaded decode scales with the
-//! row-chunked lm-head/linear matvecs. Measure with
+//! row-chunked lm-head/linear matvecs. A decode step issues ~10 parallel
+//! sections (7 linears + lm head + attention); under the old
+//! spawn-per-call threading that was ~10 spawn/join cycles *per token*,
+//! now it is ~10 pool dispatches (~1-2us each). Measure with
 //! `eqat bench inference`; `runs/bench.json` tracks the trajectory
 //! across PRs.
 //!
@@ -59,8 +63,9 @@ const LINS: [&str; 7] = ["attn.q", "attn.k", "attn.v", "attn.o",
                          "mlp.gate", "mlp.up", "mlp.down"];
 
 /// Below this many attention MACs (heads * positions * head_dim), the
-/// per-head loop stays serial: a thread spawn would cost more.
-const ATT_PAR_MIN: usize = 1 << 16;
+/// per-head loop stays serial: even a pool dispatch (~1-2us) would cost
+/// more than the work. Far lower than the spawn-per-call era threshold.
+const ATT_PAR_MIN: usize = 1 << 13;
 
 struct BlockW {
     attn_norm: Vec<f32>,

@@ -23,11 +23,13 @@
 //!   amortizes to ~1/n_tokens. This is what makes batched prefill >>
 //!   sequential `step()` loops (see `bench::inference_throughput`).
 //! - All of `matvec` / `matmul` / `dense_matvec` / `dense_matmul`
-//!   parallelize across output-row (resp. token) chunks on the scoped
-//!   thread helpers in `util::threads` (`EQAT_THREADS` to override the
-//!   worker count). The lm-head matvec over `vocab` rows is the single
-//!   largest serial loop in decode; row-chunking it is most of the
-//!   multi-thread decode speedup.
+//!   parallelize across output-row (resp. token) chunks on the
+//!   **persistent worker pool** in `util::threads` (`EQAT_THREADS` to
+//!   override the worker count). The lm-head matvec over `vocab` rows is
+//!   the single largest serial loop in decode; row-chunking it is most of
+//!   the multi-thread decode speedup, and because the pool dispatches
+//!   without spawning threads, every decode step pays ~zero threading
+//!   latency (the old scoped-thread design spawned/joined per call).
 //!
 //! Determinism: each output element is produced by exactly one worker with
 //! a fixed instruction order, so results are bit-identical across thread
@@ -36,10 +38,14 @@
 //! too. Both properties are locked in by tests below.
 //!
 //! §Perf: 2-bit matvec beats f32 dense single-threaded because it is
-//! memory-bound and moves 16x fewer weight bytes (Table 10's mechanism);
-//! threading adds row-chunk scaling until the per-call spawn cost (~tens
-//! of us per scoped spawn) dominates, which is why small layers
-//! (`out*in < PAR_MIN_WORK`) stay serial. Current numbers: run
+//! memory-bound and moves 16x fewer weight bytes (Table 10's mechanism).
+//! The 2/4-bit kernels unpack each packed word into a fixed-width stack
+//! buffer (16 resp. 8 lanes) before the FMA pass - a constant-shape
+//! inner loop the compiler autovectorizes, bit-exact with the previous
+//! inline-shift form (same FMA lanes and order). Row-chunk scaling now
+//! extends to smaller layers than under the spawn-per-call design: pool
+//! dispatch costs ~1-2us vs ~tens of us per scoped spawn, so
+//! `PAR_MIN_WORK` dropped 8x. Current numbers: run
 //! `eqat bench inference` and read the table / `runs/bench.json`.
 
 use anyhow::{bail, Result};
@@ -47,9 +53,11 @@ use anyhow::{bail, Result};
 use crate::config::QuantScheme;
 use crate::util::threads;
 
-/// Below this many multiply-accumulates per call, a kernel stays serial:
-/// scoped-thread spawn overhead would exceed the work.
-const PAR_MIN_WORK: usize = 1 << 18;
+/// Below this many multiply-accumulates per call, a kernel stays serial.
+/// With the persistent pool a parallel section costs ~1-2us of dispatch
+/// (vs ~tens of us when every call spawned scoped threads), so the
+/// break-even sits far lower than the old `1 << 18`.
+const PAR_MIN_WORK: usize = 1 << 15;
 
 #[derive(Clone)]
 pub struct PackedLinear {
@@ -229,37 +237,45 @@ impl PackedLinear {
         let gpr = self.groups_per_row();
         let wpg = g * 2 / 32; // words per group
         let wpr = self.words_per_row();
+        // §Perf: SIMD-width-aware unpack. Each u32 word carries 16 2-bit
+        // lanes; unpacking them into a fixed [f32; 16] stack buffer with
+        // a constant-shape loop lets the compiler autovectorize both the
+        // unpack (shift/mask) and the FMA pass. The 4 independent
+        // accumulators keep the exact lane order of the previous
+        // inline-shift form (and of `matmul_tokens_b2`), so results stay
+        // bit-identical with both.
+        let mut qb = [0f32; 16];
         for (j, yr) in y.iter_mut().enumerate() {
             let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
-                // §Perf: 4 independent accumulators + direct-shift nibble
-                // extraction (no serial `v >>= 2` dependency chain) lets
-                // the CPU pipeline the FMAs; ~1.6x over the naive loop.
                 let xs = &x[gi * g..(gi + 1) * g];
                 let (mut d0, mut d1, mut d2, mut d3) =
                     (0f32, 0f32, 0f32, 0f32);
                 for (wi, &w) in
                     row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
                 {
+                    for (l, qv) in qb.iter_mut().enumerate() {
+                        *qv = ((w >> (2 * l)) & 3) as f32;
+                    }
                     let xb = &xs[wi * 16..(wi + 1) * 16];
-                    d0 += (w & 3) as f32 * xb[0]
-                        + ((w >> 8) & 3) as f32 * xb[4]
-                        + ((w >> 16) & 3) as f32 * xb[8]
-                        + ((w >> 24) & 3) as f32 * xb[12];
-                    d1 += ((w >> 2) & 3) as f32 * xb[1]
-                        + ((w >> 10) & 3) as f32 * xb[5]
-                        + ((w >> 18) & 3) as f32 * xb[9]
-                        + ((w >> 26) & 3) as f32 * xb[13];
-                    d2 += ((w >> 4) & 3) as f32 * xb[2]
-                        + ((w >> 12) & 3) as f32 * xb[6]
-                        + ((w >> 20) & 3) as f32 * xb[10]
-                        + ((w >> 28) & 3) as f32 * xb[14];
-                    d3 += ((w >> 6) & 3) as f32 * xb[3]
-                        + ((w >> 14) & 3) as f32 * xb[7]
-                        + ((w >> 22) & 3) as f32 * xb[11]
-                        + ((w >> 30) & 3) as f32 * xb[15];
+                    d0 += qb[0] * xb[0]
+                        + qb[4] * xb[4]
+                        + qb[8] * xb[8]
+                        + qb[12] * xb[12];
+                    d1 += qb[1] * xb[1]
+                        + qb[5] * xb[5]
+                        + qb[9] * xb[9]
+                        + qb[13] * xb[13];
+                    d2 += qb[2] * xb[2]
+                        + qb[6] * xb[6]
+                        + qb[10] * xb[10]
+                        + qb[14] * xb[14];
+                    d3 += qb[3] * xb[3]
+                        + qb[7] * xb[7]
+                        + qb[11] * xb[11]
+                        + qb[15] * xb[15];
                 }
                 let dot = (d0 + d1) + (d2 + d3);
                 let s = self.scales[r * gpr + gi];
@@ -276,6 +292,11 @@ impl PackedLinear {
         let gpr = self.groups_per_row();
         let wpg = g * 4 / 32;
         let wpr = self.words_per_row();
+        // §Perf: SIMD-width-aware unpack, 8 4-bit lanes per word into a
+        // fixed [f32; 8] stack buffer (see `matvec_rows_b2`); lane order
+        // matches the previous inline-shift form and
+        // `matmul_tokens_b4` - bit-identical results.
+        let mut qb = [0f32; 8];
         for (j, yr) in y.iter_mut().enumerate() {
             let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
@@ -283,20 +304,22 @@ impl PackedLinear {
             for gi in 0..gpr {
                 let mut dot = 0f32;
                 let xs = &x[gi * g..(gi + 1) * g];
-                // §Perf: direct-shift extraction, two accumulators
                 let mut dot2 = 0f32;
                 for (wi, &w) in
                     row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
                 {
+                    for (l, qv) in qb.iter_mut().enumerate() {
+                        *qv = ((w >> (4 * l)) & 15) as f32;
+                    }
                     let xb = &xs[wi * 8..(wi + 1) * 8];
-                    dot += (w & 15) as f32 * xb[0]
-                        + ((w >> 8) & 15) as f32 * xb[2]
-                        + ((w >> 16) & 15) as f32 * xb[4]
-                        + ((w >> 24) & 15) as f32 * xb[6];
-                    dot2 += ((w >> 4) & 15) as f32 * xb[1]
-                        + ((w >> 12) & 15) as f32 * xb[3]
-                        + ((w >> 20) & 15) as f32 * xb[5]
-                        + ((w >> 28) & 15) as f32 * xb[7];
+                    dot += qb[0] * xb[0]
+                        + qb[2] * xb[2]
+                        + qb[4] * xb[4]
+                        + qb[6] * xb[6];
+                    dot2 += qb[1] * xb[1]
+                        + qb[3] * xb[3]
+                        + qb[5] * xb[5]
+                        + qb[7] * xb[7];
                 }
                 dot += dot2;
                 let s = self.scales[r * gpr + gi];

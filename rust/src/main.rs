@@ -178,7 +178,41 @@ fn run(args: &[String]) -> Result<()> {
             );
         }
         "eval" => {
-            let c = ctx(&cli)?;
+            let mut c = ctx(&cli)?;
+            c.pretrain_steps =
+                cli.flag_usize("pretrain-steps", c.pretrain_steps)?;
+            if cli.flag_bool("ppl-only") {
+                // bounded forward-only smoke (tier-1): wiki perplexity
+                // through the backend's no-tape eval entries, nothing else
+                let n = cli.flag_usize("ppl-batches", 2)?;
+                let dom = efficientqat::data::corpus::domain_wiki();
+                // the world must match the evaluated model's vocab, so a
+                // loaded model sizes it from its own preset (like the
+                // full eval path), not from --preset
+                let ppl = match cli.flag("model") {
+                    Some(path) => {
+                        let qm = QuantizedModel::load(path)?;
+                        let world = c.world_for(&qm.preset)?;
+                        efficientqat::eval::ppl::perplexity(
+                            c.rt.as_ref(), &ModelRef::Quant(&qm), &world,
+                            &dom, n, 991)?
+                    }
+                    None => {
+                        let world = c.world_for(&preset)?;
+                        let params = c.pretrained(&preset)?;
+                        efficientqat::eval::ppl::perplexity(
+                            c.rt.as_ref(),
+                            &ModelRef::Fp { preset: &preset,
+                                            params: &params },
+                            &world, &dom, n, 991)?
+                    }
+                };
+                anyhow::ensure!(ppl.is_finite() && ppl > 1.0,
+                                "bad forward-only perplexity {ppl}");
+                println!("{preset} wiki ppl (forward-only, {n} \
+                          batches): {ppl:.2}");
+                return Ok(());
+            }
             let (accs, avg, pw, pc) = match cli.flag("model") {
                 Some(path) => {
                     let qm = QuantizedModel::load(path)?;

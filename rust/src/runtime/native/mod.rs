@@ -9,8 +9,14 @@
 //!   * [`ops`]     - threaded matmuls and forward/backward kernels,
 //!     including the STE fake-quant gradients (paper Eqs. 3-5) and the
 //!     dequant-matmul (s, z) gradients;
-//!   * [`model`]   - the taped transformer block/model forward+backward
-//!     generic over the five linear modes.
+//!   * [`model`]   - the transformer block/model core in two modes: the
+//!     taped forward+backward behind every train step, and the
+//!     forward-only (`*_notape`) path behind every inference/eval entry
+//!     (`model_fwd_*`, `block_fwd_*`, `block_loss`) - no training tape,
+//!     no attention-probability allocation, bit-identical logits.
+//!
+//! All matmuls dispatch onto the persistent worker pool in
+//! `util::threads`, so repeated entry calls pay no thread-spawn latency.
 //!
 //! Optimizer updates reuse `coordinator::opt::adam_ref` - the same
 //! function the golden tests pin against python's `adam_update` - so
@@ -30,8 +36,9 @@ use crate::coordinator::opt::adam_ref;
 use crate::io::manifest::{ArtifactSpec, Layout, Manifest, PresetCfg};
 use crate::runtime::{check_args, Arg, Backend, Executor, OutBuf};
 
-use model::{block_bwd, block_fwd, model_bwd, model_fwd, BlockRefs, Geom,
-            GradMode, LinGrad, LinKind, LinRef, ModelRefs};
+use model::{block_bwd, block_fwd, block_fwd_notape, model_bwd, model_fwd,
+            model_fwd_notape, BlockRefs, FwdScratch, Geom, GradMode,
+            LinGrad, LinKind, LinRef, ModelRefs};
 
 const LIN_NAMES: [&str; 7] = ["attn.q", "attn.k", "attn.v", "attn.o",
                               "mlp.gate", "mlp.up", "mlp.down"];
@@ -174,7 +181,13 @@ impl Backend for NativeBackend {
         };
         let geom = Geom::new(b, t, c.dim, c.n_heads, c.head_dim, c.inter,
                              c.norm_eps as f32, c.rope_theta);
-        let exec = Rc::new(NativeExec { spec, ps, kind, geom });
+        let exec = Rc::new(NativeExec {
+            spec,
+            ps,
+            kind,
+            geom,
+            scratch: std::cell::RefCell::new(FwdScratch::new()),
+        });
         self.cache.borrow_mut().insert(key, exec.clone());
         Ok(exec)
     }
@@ -189,6 +202,9 @@ pub struct NativeExec {
     ps: Rc<PresetShared>,
     kind: EntryKind,
     geom: Geom,
+    /// forward-only scratch (weff + streaming-attention buffers), reused
+    /// across run() calls of the inference/eval entries
+    scratch: std::cell::RefCell<FwdScratch>,
 }
 
 // ---------------------------------------------------------------------------
@@ -298,10 +314,12 @@ fn block_refs_dequant<'a>(cfg: &PresetCfg, wqbl: &Layout, qbl: &Layout,
 }
 
 /// Full-precision model refs (pretrain / model_fwd_fp); `dynamic` wraps
-/// every linear in min/max fake quant (naive-QAT baseline).
-fn model_refs_fp<'a>(cfg: &PresetCfg, fpl: &Layout, params: &'a [f32],
-                     dynamic: Option<(usize, f32)>)
-                     -> Result<ModelRefs<'a>> {
+/// every linear in min/max fake quant (naive-QAT baseline). Public so
+/// the eval-forward bench can time the taped vs forward-only model core
+/// directly.
+pub fn model_refs_fp<'a>(cfg: &PresetCfg, fpl: &Layout, params: &'a [f32],
+                         dynamic: Option<(usize, f32)>)
+                         -> Result<ModelRefs<'a>> {
     let mut blocks = Vec::with_capacity(cfg.n_layers);
     for b in 0..cfg.n_layers {
         let mut lins = Vec::with_capacity(7);
@@ -385,6 +403,17 @@ fn mse(out: &[f32], target: &[f32]) -> (f32, Vec<f32>) {
         d[i] = 2.0 * e / n as f32;
     }
     ((acc / n as f64) as f32, d)
+}
+
+/// Loss half of [`mse`] for forward-only entries (same accumulation
+/// order, so the value is bit-identical; no gradient buffer).
+fn mse_loss(out: &[f32], target: &[f32]) -> f32 {
+    let mut acc = 0f64;
+    for i in 0..out.len() {
+        let e = out[i] - target[i];
+        acc += (e * e) as f64;
+    }
+    (acc / out.len() as f64) as f32
 }
 
 /// Block-AP loss + gradients in (block, qp_block) layout order - the core
@@ -484,21 +513,28 @@ impl NativeExec {
                 }
                 Ok(outs(&self.spec, vec![h]))
             }
-            EntryKind::BlockFwdFp | EntryKind::BlockCaptureFp => {
+            EntryKind::BlockFwdFp => {
+                // forward-only: no tape, streamed attention
+                let bl = ps.layout("block")?;
+                let bp = f32_arg(args, 0);
+                let h = f32_arg(args, 1);
+                let geom = &self.geom;
+                let blk = block_refs_fp(cfg, bl, bp)?;
+                let out = block_fwd_notape(geom, &blk, h,
+                                           &mut self.scratch.borrow_mut());
+                Ok(outs(&self.spec, vec![out]))
+            }
+            EntryKind::BlockCaptureFp => {
+                // capture needs the intra-block activations -> taped
                 let bl = ps.layout("block")?;
                 let bp = f32_arg(args, 0);
                 let h = f32_arg(args, 1);
                 let geom = &self.geom;
                 let blk = block_refs_fp(cfg, bl, bp)?;
                 let (out, tape) = block_fwd(geom, &blk, h);
-                if self.kind == EntryKind::BlockFwdFp {
-                    Ok(outs(&self.spec, vec![out]))
-                } else {
-                    let cap = tape.capture();
-                    Ok(outs(&self.spec, vec![out, cap.x_attn,
-                                             cap.attn_ctx, cap.x_mlp,
-                                             cap.mlp_mid]))
-                }
+                let cap = tape.capture();
+                Ok(outs(&self.spec, vec![out, cap.x_attn, cap.attn_ctx,
+                                         cap.x_mlp, cap.mlp_mid]))
             }
             EntryKind::BlockFwdQ => {
                 let g = self.group();
@@ -511,7 +547,8 @@ impl NativeExec {
                 let geom = &self.geom;
                 let blk = block_refs_dequant(cfg, wqbl, qbl, wq, qp,
                                              norms, g)?;
-                let (out, _) = block_fwd(geom, &blk, h);
+                let out = block_fwd_notape(geom, &blk, h,
+                                           &mut self.scratch.borrow_mut());
                 Ok(outs(&self.spec, vec![out]))
             }
             EntryKind::BlockLoss => {
@@ -525,8 +562,9 @@ impl NativeExec {
                 let qmax = scalar_arg(args, 4);
                 let geom = &self.geom;
                 let blk = block_refs_fq(cfg, bl, qbl, bp, qp, g, qmax)?;
-                let (out, _) = block_fwd(geom, &blk, h);
-                let (loss, _) = mse(&out, target);
+                let out = block_fwd_notape(geom, &blk, h,
+                                           &mut self.scratch.borrow_mut());
+                let loss = mse_loss(&out, target);
                 Ok(outs(&self.spec, vec![vec![loss]]))
             }
             EntryKind::BlockApStep => {
@@ -579,7 +617,9 @@ impl NativeExec {
                 let x = i32_arg(args, 1);
                 let geom = &self.geom;
                 let mp = model_refs_fp(cfg, fpl, params, None)?;
-                let (logits, _) = model_fwd(geom, &mp, x, cfg.vocab);
+                let logits = model_fwd_notape(
+                    geom, &mp, x, cfg.vocab,
+                    &mut self.scratch.borrow_mut());
                 Ok(outs(&self.spec, vec![logits]))
             }
             EntryKind::ModelFwdQ | EntryKind::ModelFwdLora => {
@@ -600,7 +640,9 @@ impl NativeExec {
                 let geom = &self.geom;
                 let mp = model_refs_q(cfg, wql, qpl, fprl, wq, qp, fpr,
                                       g, lora_ref)?;
-                let (logits, _) = model_fwd(geom, &mp, x, cfg.vocab);
+                let logits = model_fwd_notape(
+                    geom, &mp, x, cfg.vocab,
+                    &mut self.scratch.borrow_mut());
                 Ok(outs(&self.spec, vec![logits]))
             }
             EntryKind::PretrainStep | EntryKind::E2eFullStep => {
@@ -1028,6 +1070,157 @@ mod tests {
         // z frozen by m_zf = 0: z half of qp unchanged except via s mask
         let half = qbl.size / 2;
         assert_eq!(&outs[1].data[half..], &qp[half..]);
+    }
+
+    /// Build random-but-valid (wq, qp, fpr, lora) buffers for the
+    /// synthetic preset's quantized model refs.
+    fn synthetic_q_buffers(be: &NativeBackend)
+                           -> (PresetCfg, Vec<f32>, Vec<f32>, Vec<f32>,
+                               Vec<f32>) {
+        let cfg = be.manifest().preset("synthetic").unwrap().config
+            .clone();
+        let g = cfg.default_group;
+        let wql = be.manifest().layout("synthetic", "wq").unwrap();
+        let qpl = be.manifest()
+            .layout("synthetic", &format!("qp_g{g}"))
+            .unwrap();
+        let fprl = be.manifest().layout("synthetic", "fpr").unwrap();
+        let ll = be.manifest().layout("synthetic", "lora").unwrap();
+        let mut rng = Rng::new(41);
+        let wq: Vec<f32> =
+            (0..wql.size).map(|_| rng.below(4) as f32).collect();
+        let mut qp = vec![0f32; qpl.size];
+        let half = qpl.size / 2;
+        for i in 0..half {
+            qp[i] = 0.05 + 0.01 * rng.f32();
+            qp[half + i] = rng.below(4) as f32;
+        }
+        let mut fpr = vec![0f32; fprl.size];
+        rng.fill_normal(&mut fpr, 0.0, 0.1);
+        for e in &fprl.entries {
+            if e.name.ends_with("norm") {
+                fpr[e.offset..e.offset + e.numel()].fill(1.0);
+            }
+        }
+        let mut lora = vec![0f32; ll.size];
+        rng.fill_normal(&mut lora, 0.0, 0.05);
+        (cfg, wq, qp, fpr, lora)
+    }
+
+    /// The forward-only eval entries must be *bit-identical* to the taped
+    /// model core across the fp, dequant, and LoRA linear modes, and
+    /// stay bit-identical through the worker pool at any thread count.
+    #[test]
+    fn notape_forward_matches_taped_bitwise_all_modes() {
+        use crate::model::init::init_fp_params;
+        use crate::util::threads::with_threads;
+
+        let be = NativeBackend::new();
+        let cfg = be.manifest().preset("synthetic").unwrap().config
+            .clone();
+        let g = cfg.default_group;
+        let fpl = be.manifest().layout("synthetic", "fp").unwrap().clone();
+        let params = init_fp_params(&fpl, 3);
+        let geom = Geom::new(cfg.eval_batch, cfg.eval_ctx, cfg.dim,
+                             cfg.n_heads, cfg.head_dim, cfg.inter,
+                             cfg.norm_eps as f32, cfg.rope_theta);
+        let n = cfg.eval_batch * cfg.eval_ctx;
+        let x: Vec<i32> =
+            (0..n).map(|i| ((i * 7 + 1) % cfg.vocab) as i32).collect();
+
+        // fp path (Cow-borrowed weff on the taped side)
+        let mp = model_refs_fp(&cfg, &fpl, &params, None).unwrap();
+        let (taped, _) = model_fwd(&geom, &mp, &x, cfg.vocab);
+        let mut sc = FwdScratch::new();
+        let notape = model_fwd_notape(&geom, &mp, &x, cfg.vocab, &mut sc);
+        assert_eq!(taped.len(), notape.len());
+        assert!(
+            taped.iter().zip(&notape)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "fp notape logits diverge from taped"
+        );
+
+        // dequant + lora paths, scratch reused from the fp run
+        let (cfg, wq, qp, fpr, lora) = synthetic_q_buffers(&be);
+        let wql = be.manifest().layout("synthetic", "wq").unwrap();
+        let qpl = be.manifest()
+            .layout("synthetic", &format!("qp_g{g}"))
+            .unwrap();
+        let fprl = be.manifest().layout("synthetic", "fpr").unwrap();
+        let ll = be.manifest().layout("synthetic", "lora").unwrap();
+        for with_lora in [false, true] {
+            let lref = if with_lora { Some((ll, &lora[..])) } else { None };
+            let mp = model_refs_q(&cfg, wql, qpl, fprl, &wq, &qp, &fpr,
+                                  g, lref)
+                .unwrap();
+            let (taped, _) = model_fwd(&geom, &mp, &x, cfg.vocab);
+            let notape =
+                model_fwd_notape(&geom, &mp, &x, cfg.vocab, &mut sc);
+            assert!(
+                taped.iter().zip(&notape)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "lora={with_lora}: notape logits diverge from taped"
+            );
+        }
+
+        // pool determinism: 1 worker vs N workers, bit-identical
+        let run = |nt: usize| {
+            with_threads(nt, || {
+                let mp =
+                    model_refs_fp(&cfg, &fpl, &params, None).unwrap();
+                let mut sc = FwdScratch::new();
+                model_fwd_notape(&geom, &mp, &x, cfg.vocab, &mut sc)
+            })
+        };
+        let single = run(1);
+        for nt in [2usize, 4] {
+            let multi = run(nt);
+            assert!(
+                single.iter().zip(&multi)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "thread count {nt} changed notape logits"
+            );
+        }
+    }
+
+    /// The dispatched eval entries (model_fwd_q / block_loss) must agree
+    /// with what the taped core computes for the same buffers - i.e. the
+    /// notape wiring changed the cost, not the result.
+    #[test]
+    fn eval_entries_match_taped_reference() {
+        let be = NativeBackend::new();
+        let (cfg, wq, qp, fpr, _) = synthetic_q_buffers(&be);
+        let g = cfg.default_group;
+        let wql = be.manifest().layout("synthetic", "wq").unwrap();
+        let qpl = be.manifest()
+            .layout("synthetic", &format!("qp_g{g}"))
+            .unwrap();
+        let fprl = be.manifest().layout("synthetic", "fpr").unwrap();
+        let n = cfg.eval_batch * cfg.eval_ctx;
+        let x: Vec<i32> =
+            (0..n).map(|i| ((i * 5 + 2) % cfg.vocab) as i32).collect();
+        let exec = be.exec_g("synthetic", "model_fwd_q", g).unwrap();
+        let got = exec
+            .run1(&[Arg::F32(&wq), Arg::F32(&qp), Arg::F32(&fpr),
+                    Arg::I32(&x)])
+            .unwrap();
+        let geom = Geom::new(cfg.eval_batch, cfg.eval_ctx, cfg.dim,
+                             cfg.n_heads, cfg.head_dim, cfg.inter,
+                             cfg.norm_eps as f32, cfg.rope_theta);
+        let mp = model_refs_q(&cfg, wql, qpl, fprl, &wq, &qp, &fpr, g,
+                              None)
+            .unwrap();
+        let (want, _) = model_fwd(&geom, &mp, &x, cfg.vocab);
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "model_fwd_q entry diverges from the taped reference"
+        );
+        // a second run through the cached exec (scratch reuse) is stable
+        let again = exec
+            .run1(&[Arg::F32(&wq), Arg::F32(&qp), Arg::F32(&fpr),
+                    Arg::I32(&x)])
+            .unwrap();
+        assert_eq!(got, again);
     }
 
     #[test]

@@ -12,10 +12,24 @@
 //!   * `Dynamic`   - y = x @ dyn_fq(W)^T                (naive-QAT)
 //!   * `Lora`      - dequant + x @ A^T @ B^T            (QLoRA)
 //!
-//! Forward passes record a tape (normalizer inverses, attention
-//! probabilities, pre-activation values, effective weights); the backward
-//! routes output gradients to whichever parameters each mode trains
-//! ([`LinGrad`]), using the STE / dequant gradient kernels in [`ops`].
+//! Two execution modes share the same kernels:
+//!
+//! * **Taped** ([`block_fwd`] / [`model_fwd`] + the `*_bwd` pair):
+//!   forward passes record a tape (normalizer inverses, attention
+//!   probabilities, pre-activation values, effective weights); the
+//!   backward routes output gradients to whichever parameters each mode
+//!   trains ([`LinGrad`]), using the STE / dequant gradient kernels in
+//!   [`ops`]. Fp linears *borrow* their weights into the tape
+//!   (`Cow::Borrowed`) instead of cloning the full matrix.
+//! * **Forward-only** ([`block_fwd_notape`] / [`model_fwd_notape`]):
+//!   the inference/eval mode. No tape is recorded, attention streams
+//!   row-by-row through one `T`-length score scratch (no `b*nh*T*T`
+//!   probability allocation), and non-Fp effective weights are
+//!   materialized into a single reusable [`FwdScratch`] buffer. Outputs
+//!   are bit-identical to the taped forward (same kernels, same FP
+//!   order per element; pinned by tests here and in `runtime::native`).
+
+use std::borrow::Cow;
 
 use crate::runtime::native::ops;
 
@@ -56,43 +70,53 @@ pub enum LinGrad {
     Ab { ga: Vec<f32>, gb: Vec<f32> },
 }
 
-struct LinTape {
-    /// effective (out, in) weights the forward multiplied by
-    weff: Vec<f32>,
+struct LinTape<'a> {
+    /// effective (out, in) weights the forward multiplied by; Fp borrows
+    /// the raw weights (no clone), every other mode owns the
+    /// materialized matrix
+    weff: Cow<'a, [f32]>,
     /// Dynamic only: STE in-range mask
     mask: Vec<f32>,
     /// Lora only: u = x @ A^T, (m, rank)
     u: Vec<f32>,
 }
 
-fn lin_fwd(lin: &LinRef, x: &[f32], m: usize) -> (Vec<f32>, LinTape) {
+fn lin_fwd<'a>(lin: &LinRef<'a>, x: &[f32], m: usize)
+               -> (Vec<f32>, LinTape<'a>) {
     let (n, k, g) = (lin.out_d, lin.in_d, lin.group);
-    let mut weff = vec![0f32; n * k];
-    let mut tape = LinTape { weff: Vec::new(), mask: Vec::new(),
-                             u: Vec::new() };
+    let mut tape = LinTape { weff: Cow::Borrowed(&[]),
+                             mask: Vec::new(), u: Vec::new() };
     match &lin.kind {
-        LinKind::Fp { w } => weff.copy_from_slice(w),
+        LinKind::Fp { w } => tape.weff = Cow::Borrowed(*w),
         LinKind::FakeQuant { w, s, z, qmax } => {
+            let mut weff = vec![0f32; n * k];
             ops::fake_quant(w, n, k, s, z, g, *qmax, &mut weff);
+            tape.weff = Cow::Owned(weff);
         }
         LinKind::Dequant { wi, s, z } => {
+            let mut weff = vec![0f32; n * k];
             ops::dequantize(wi, n, k, s, z, g, &mut weff);
+            tape.weff = Cow::Owned(weff);
         }
         LinKind::Dynamic { w, qmax } => {
+            let mut weff = vec![0f32; n * k];
             let mut mask = vec![0f32; n * k];
             ops::dynamic_fake_quant(w, n, k, g, *qmax, &mut weff,
                                     &mut mask);
+            tape.weff = Cow::Owned(weff);
             tape.mask = mask;
         }
         LinKind::Lora { wi, s, z, a, rank, .. } => {
+            let mut weff = vec![0f32; n * k];
             ops::dequantize(wi, n, k, s, z, g, &mut weff);
+            tape.weff = Cow::Owned(weff);
             let mut u = vec![0f32; m * rank];
             ops::matmul_nt(x, m, k, a, *rank, &mut u);
             tape.u = u;
         }
     }
     let mut y = vec![0f32; m * n];
-    ops::matmul_nt(x, m, k, &weff, n, &mut y);
+    ops::matmul_nt(x, m, k, &tape.weff, n, &mut y);
     if let LinKind::Lora { b, rank, scale, .. } = &lin.kind {
         // y += (u @ B^T) * scale
         let mut delta = vec![0f32; m * n];
@@ -101,12 +125,58 @@ fn lin_fwd(lin: &LinRef, x: &[f32], m: usize) -> (Vec<f32>, LinTape) {
             y[i] += delta[i] * scale;
         }
     }
-    tape.weff = weff;
     (y, tape)
 }
 
+/// Forward-only linear: same math and FP order as [`lin_fwd`], but
+/// non-Fp effective weights are materialized into the caller's reusable
+/// `weff` scratch (Fp multiplies the raw weights directly) and nothing
+/// is retained.
+fn lin_fwd_notape(lin: &LinRef, x: &[f32], m: usize,
+                  weff_scratch: &mut Vec<f32>) -> Vec<f32> {
+    let (n, k, g) = (lin.out_d, lin.in_d, lin.group);
+    let weff: &[f32] = match &lin.kind {
+        LinKind::Fp { w } => w,
+        LinKind::FakeQuant { w, s, z, qmax } => {
+            weff_scratch.resize(n * k, 0.0);
+            ops::fake_quant(w, n, k, s, z, g, *qmax, weff_scratch);
+            weff_scratch
+        }
+        LinKind::Dequant { wi, s, z } => {
+            weff_scratch.resize(n * k, 0.0);
+            ops::dequantize(wi, n, k, s, z, g, weff_scratch);
+            weff_scratch
+        }
+        LinKind::Dynamic { w, qmax } => {
+            weff_scratch.resize(n * k, 0.0);
+            let mut mask = vec![0f32; n * k];
+            ops::dynamic_fake_quant(w, n, k, g, *qmax, weff_scratch,
+                                    &mut mask);
+            weff_scratch
+        }
+        LinKind::Lora { wi, s, z, .. } => {
+            weff_scratch.resize(n * k, 0.0);
+            ops::dequantize(wi, n, k, s, z, g, weff_scratch);
+            weff_scratch
+        }
+    };
+    let mut y = vec![0f32; m * n];
+    ops::matmul_nt(x, m, k, weff, n, &mut y);
+    if let LinKind::Lora { a, b, rank, scale, .. } = &lin.kind {
+        // y += (x @ A^T @ B^T) * scale, same element order as lin_fwd
+        let mut u = vec![0f32; m * rank];
+        ops::matmul_nt(x, m, k, a, *rank, &mut u);
+        let mut delta = vec![0f32; m * n];
+        ops::matmul_nt(&u, m, *rank, b, n, &mut delta);
+        for i in 0..m * n {
+            y[i] += delta[i] * scale;
+        }
+    }
+    y
+}
+
 /// Input gradient + parameter gradients of one linear.
-fn lin_bwd(lin: &LinRef, tape: &LinTape, x: &[f32], gout: &[f32],
+fn lin_bwd(lin: &LinRef, tape: &LinTape<'_>, x: &[f32], gout: &[f32],
            m: usize) -> (Vec<f32>, LinGrad) {
     let (n, k, g) = (lin.out_d, lin.in_d, lin.group);
     let mut dx = vec![0f32; m * k];
@@ -207,8 +277,9 @@ pub struct BlockRefs<'a> {
 }
 
 /// Forward tape of one block (everything the backward needs besides the
-/// block input, which the caller keeps).
-pub struct BlockTape {
+/// block input, which the caller keeps). Borrows Fp weights via the
+/// per-linear tapes, hence the lifetime.
+pub struct BlockTape<'a> {
     h1: Vec<f32>,
     q: Vec<f32>,
     k: Vec<f32>,
@@ -223,7 +294,7 @@ pub struct BlockTape {
     mid: Vec<f32>,
     inv1: Vec<f32>,
     inv2: Vec<f32>,
-    lins: Vec<LinTape>,
+    lins: Vec<LinTape<'a>>,
 }
 
 /// Intra-block activations captured for GPTQ/AWQ calibration
@@ -235,7 +306,7 @@ pub struct Capture {
     pub mlp_mid: Vec<f32>,
 }
 
-impl BlockTape {
+impl BlockTape<'_> {
     pub fn capture(&self) -> Capture {
         Capture {
             x_attn: self.h1.clone(),
@@ -267,8 +338,8 @@ fn scatter_head_add(dst: &mut [f32], rows: std::ops::Range<usize>,
 }
 
 /// One transformer block forward. Returns (h_out, tape).
-pub fn block_fwd(g: &Geom, blk: &BlockRefs, x: &[f32])
-                 -> (Vec<f32>, BlockTape) {
+pub fn block_fwd<'a>(g: &Geom, blk: &BlockRefs<'a>, x: &[f32])
+                     -> (Vec<f32>, BlockTape<'a>) {
     let (m, d, nh, hd, it) = (g.m(), g.dim, g.n_heads, g.head_dim,
                               g.inter);
     let scale = 1.0 / (hd as f32).sqrt();
@@ -339,10 +410,129 @@ pub fn block_fwd(g: &Geom, blk: &BlockRefs, x: &[f32])
     (out, tape)
 }
 
+/// Reusable buffers for the forward-only path: the effective-weight
+/// scratch (grown once to the largest non-Fp linear), per-head gather
+/// buffers, the per-row RMSNorm inverse scratch, and the single
+/// streaming attention score row that replaces the (b, nh, t, t)
+/// probability tape. One instance serves any number of blocks/calls.
+#[derive(Default)]
+pub struct FwdScratch {
+    weff: Vec<f32>,
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    ch: Vec<f32>,
+    score: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+impl FwdScratch {
+    pub fn new() -> FwdScratch {
+        FwdScratch::default()
+    }
+}
+
+/// One transformer block forward **without a tape** - the eval/inference
+/// mode. Attention streams row-by-row through `sc.score` (length `t`)
+/// instead of materializing the `b*nh*t*t` probability buffer, and no
+/// effective weights or activations are retained. The output is
+/// bit-identical to [`block_fwd`]'s `h_out` (same kernels, same FP order
+/// per element; tested in `runtime::native`).
+pub fn block_fwd_notape(g: &Geom, blk: &BlockRefs, x: &[f32],
+                        sc: &mut FwdScratch) -> Vec<f32> {
+    let (m, d, nh, hd, it) = (g.m(), g.dim, g.n_heads, g.head_dim,
+                              g.inter);
+    let t = g.t;
+    let scale = 1.0 / (hd as f32).sqrt();
+    sc.inv.resize(m, 0.0);
+    let mut h1 = vec![0f32; m * d];
+    ops::rms_norm_fwd(x, m, d, blk.attn_norm, g.eps, &mut h1, &mut sc.inv);
+
+    let mut q = lin_fwd_notape(&blk.lins[0], &h1, m, &mut sc.weff);
+    let mut k = lin_fwd_notape(&blk.lins[1], &h1, m, &mut sc.weff);
+    let v = lin_fwd_notape(&blk.lins[2], &h1, m, &mut sc.weff);
+    for r in 0..m {
+        let pos = r % t;
+        ops::rope_apply(&mut q[r * d..(r + 1) * d], pos, nh, hd,
+                        &g.rope_cos, &g.rope_sin);
+        ops::rope_apply(&mut k[r * d..(r + 1) * d], pos, nh, hd,
+                        &g.rope_cos, &g.rope_sin);
+    }
+
+    let mut ctx = vec![0f32; m * d];
+    sc.qh.resize(t * hd, 0.0);
+    sc.kh.resize(t * hd, 0.0);
+    sc.vh.resize(t * hd, 0.0);
+    sc.ch.resize(t * hd, 0.0);
+    sc.score.resize(t, 0.0);
+    for bi in 0..g.b {
+        let rows = bi * t..(bi + 1) * t;
+        for h in 0..nh {
+            gather_head(&q, rows.clone(), d, h, hd, &mut sc.qh);
+            gather_head(&k, rows.clone(), d, h, hd, &mut sc.kh);
+            gather_head(&v, rows.clone(), d, h, hd, &mut sc.vh);
+            ops::attention_head_fwd_stream(&sc.qh, &sc.kh, &sc.vh, t, hd,
+                                           scale, &mut sc.score,
+                                           &mut sc.ch);
+            for (i, r) in rows.clone().enumerate() {
+                ctx[r * d + h * hd..r * d + (h + 1) * hd]
+                    .copy_from_slice(&sc.ch[i * hd..(i + 1) * hd]);
+            }
+        }
+    }
+
+    let attn_out = lin_fwd_notape(&blk.lins[3], &ctx, m, &mut sc.weff);
+    let mut x2 = vec![0f32; m * d];
+    for i in 0..m * d {
+        x2[i] = x[i] + attn_out[i];
+    }
+
+    let mut h2 = vec![0f32; m * d];
+    ops::rms_norm_fwd(&x2, m, d, blk.mlp_norm, g.eps, &mut h2,
+                      &mut sc.inv);
+    let gate = lin_fwd_notape(&blk.lins[4], &h2, m, &mut sc.weff);
+    let up = lin_fwd_notape(&blk.lins[5], &h2, m, &mut sc.weff);
+    let mut mid = vec![0f32; m * it];
+    for i in 0..m * it {
+        mid[i] = ops::silu(gate[i]) * up[i];
+    }
+    let down = lin_fwd_notape(&blk.lins[6], &mid, m, &mut sc.weff);
+    let mut out = vec![0f32; m * d];
+    for i in 0..m * d {
+        out[i] = x2[i] + down[i];
+    }
+    out
+}
+
+/// Full model forward, logits only: the forward-only sibling of
+/// [`model_fwd`]. No [`ModelTape`], no per-block input retention, no
+/// attention-probability allocation - block outputs stream through one
+/// hidden buffer. Logits are bit-identical to the taped forward.
+pub fn model_fwd_notape(g: &Geom, mp: &ModelRefs, x_ids: &[i32],
+                        vocab: usize, sc: &mut FwdScratch) -> Vec<f32> {
+    let (m, d) = (g.m(), g.dim);
+    let mut h = vec![0f32; m * d];
+    for (r, &tok) in x_ids.iter().enumerate() {
+        let ti = tok as usize;
+        h[r * d..(r + 1) * d]
+            .copy_from_slice(&mp.embed[ti * d..(ti + 1) * d]);
+    }
+    for blk in &mp.blocks {
+        h = block_fwd_notape(g, blk, &h, sc);
+    }
+    let mut h_normed = vec![0f32; m * d];
+    sc.inv.resize(m, 0.0);
+    ops::rms_norm_fwd(&h, m, d, mp.final_norm, g.eps, &mut h_normed,
+                      &mut sc.inv);
+    let mut logits = vec![0f32; m * vocab];
+    ops::matmul_nt(&h_normed, m, d, mp.head, vocab, &mut logits);
+    logits
+}
+
 /// Block backward: given d(h_out), returns (d(x), 7 LinGrads,
 /// g_attn_norm, g_mlp_norm).
-pub fn block_bwd(g: &Geom, blk: &BlockRefs, x: &[f32], tape: &BlockTape,
-                 d_out: &[f32])
+pub fn block_bwd(g: &Geom, blk: &BlockRefs, x: &[f32],
+                 tape: &BlockTape<'_>, d_out: &[f32])
                  -> (Vec<f32>, Vec<LinGrad>, Vec<f32>, Vec<f32>) {
     let (m, d, nh, hd, it, t) = (g.m(), g.dim, g.n_heads, g.head_dim,
                                  g.inter, g.t);
@@ -438,10 +628,10 @@ pub struct ModelRefs<'a> {
     pub head: &'a [f32],
 }
 
-pub struct ModelTape {
+pub struct ModelTape<'a> {
     /// per-block inputs: xs[0] = embedded h0, xs[i] = block i-1 output
     pub xs: Vec<Vec<f32>>,
-    pub tapes: Vec<BlockTape>,
+    pub tapes: Vec<BlockTape<'a>>,
     /// final block output (pre final-norm)
     pub h_last: Vec<f32>,
     pub inv_f: Vec<f32>,
@@ -449,8 +639,8 @@ pub struct ModelTape {
 }
 
 /// Full model forward: token ids -> logits (m * vocab), with tape.
-pub fn model_fwd(g: &Geom, mp: &ModelRefs, x_ids: &[i32], vocab: usize)
-                 -> (Vec<f32>, ModelTape) {
+pub fn model_fwd<'a>(g: &Geom, mp: &ModelRefs<'a>, x_ids: &[i32],
+                     vocab: usize) -> (Vec<f32>, ModelTape<'a>) {
     let (m, d) = (g.m(), g.dim);
     let mut h = vec![0f32; m * d];
     for (r, &tok) in x_ids.iter().enumerate() {
@@ -493,7 +683,7 @@ pub struct ModelGrads {
 }
 
 /// Full model backward from d(logits).
-pub fn model_bwd(g: &Geom, mp: &ModelRefs, tape: &ModelTape,
+pub fn model_bwd(g: &Geom, mp: &ModelRefs, tape: &ModelTape<'_>,
                  x_ids: &[i32], vocab: usize, dlogits: &[f32],
                  mode: GradMode) -> ModelGrads {
     let (m, d) = (g.m(), g.dim);

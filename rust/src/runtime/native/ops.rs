@@ -10,15 +10,19 @@
 //! Everything is f32 like the lowered XLA graphs.
 //!
 //! Threading: the three matmul shapes parallelize over disjoint output-row
-//! chunks via `util::threads` (same determinism guarantee as the inference
-//! kernels - each output element is produced by exactly one worker in a
-//! fixed order, so results are bit-identical across thread counts).
+//! chunks via the persistent worker pool in `util::threads` (same
+//! determinism guarantee as the inference kernels - each output element
+//! is produced by exactly one worker in a fixed order, so results are
+//! bit-identical across thread counts). A Block-AP epoch issues thousands
+//! of these matmul calls; pool dispatch costs ~1-2us each where the old
+//! scoped-thread design paid a spawn/join cycle per call.
 
 use crate::util::threads;
 
-/// Below this many multiply-accumulates per call, kernels stay serial:
-/// scoped-thread spawn overhead would exceed the work.
-const PAR_MIN_WORK: usize = 1 << 18;
+/// Below this many multiply-accumulates per call, kernels stay serial.
+/// Pool dispatch is ~1-2us (no thread spawn), so the break-even sits far
+/// lower than the spawn-per-call era's `1 << 18`.
+const PAR_MIN_WORK: usize = 1 << 15;
 
 // ---------------------------------------------------------------------------
 // Matmuls
@@ -213,6 +217,46 @@ pub fn attention_head_fwd(q: &[f32], k: &[f32], v: &[f32], t: usize,
     for ti in 0..t {
         let qr = &q[ti * hd..(ti + 1) * hd];
         let pr = &mut probs[ti * t..(ti + 1) * t];
+        let mut mx = f32::NEG_INFINITY;
+        for u in 0..=ti {
+            let kr = &k[u * hd..(u + 1) * hd];
+            let mut sc = 0f32;
+            for i in 0..hd {
+                sc += qr[i] * kr[i];
+            }
+            let sc = sc * scale;
+            pr[u] = sc;
+            mx = mx.max(sc);
+        }
+        let mut z = 0f32;
+        for u in 0..=ti {
+            pr[u] = (pr[u] - mx).exp();
+            z += pr[u];
+        }
+        let cr = &mut ctx[ti * hd..(ti + 1) * hd];
+        cr.fill(0.0);
+        for u in 0..=ti {
+            pr[u] /= z;
+            let vr = &v[u * hd..(u + 1) * hd];
+            for i in 0..hd {
+                cr[i] += pr[u] * vr[i];
+            }
+        }
+    }
+}
+
+/// Forward-only sibling of [`attention_head_fwd`]: streams the causal
+/// softmax row-by-row through a single reusable `row` scratch
+/// (len >= t) instead of materializing the (T, T) probability tape.
+/// Per-row FP operation order matches `attention_head_fwd` exactly, so
+/// the context output is bit-identical to the taped kernel (tested in
+/// `runtime::native::model`); only the backward-enabling probs are gone.
+pub fn attention_head_fwd_stream(q: &[f32], k: &[f32], v: &[f32],
+                                 t: usize, hd: usize, scale: f32,
+                                 row: &mut [f32], ctx: &mut [f32]) {
+    for ti in 0..t {
+        let qr = &q[ti * hd..(ti + 1) * hd];
+        let pr = &mut row[..t];
         let mut mx = f32::NEG_INFINITY;
         for u in 0..=ti {
             let kr = &k[u * hd..(u + 1) * hd];
@@ -791,6 +835,31 @@ mod tests {
                 assert!((grad[i] as f64 - fd).abs() < 2e-2,
                         "d{name}[{i}]={} fd={fd}", grad[i]);
             }
+        }
+    }
+
+    #[test]
+    fn streamed_attention_is_bit_identical_to_taped() {
+        let (t, hd) = (7usize, 4usize);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut rng = Rng::new(29);
+        let mut q = vec![0f32; t * hd];
+        let mut k = vec![0f32; t * hd];
+        let mut v = vec![0f32; t * hd];
+        rng.fill_normal(&mut q, 0.0, 1.0);
+        rng.fill_normal(&mut k, 0.0, 1.0);
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        let mut probs = vec![0f32; t * t];
+        let mut ctx_taped = vec![0f32; t * hd];
+        attention_head_fwd(&q, &k, &v, t, hd, scale, &mut probs,
+                           &mut ctx_taped);
+        let mut row = vec![0f32; t];
+        let mut ctx_stream = vec![1e9f32; t * hd]; // poison: must overwrite
+        attention_head_fwd_stream(&q, &k, &v, t, hd, scale, &mut row,
+                                  &mut ctx_stream);
+        for i in 0..t * hd {
+            assert_eq!(ctx_taped[i].to_bits(), ctx_stream[i].to_bits(),
+                       "ctx[{i}] diverged");
         }
     }
 

@@ -1,22 +1,48 @@
-//! Hand-rolled data-parallel helpers over `std::thread::scope` (rayon is
-//! unavailable offline).
+//! Hand-rolled data-parallel helpers over a **persistent worker pool**
+//! (rayon is unavailable offline).
 //!
-//! The inference hot path parallelizes over *disjoint output chunks*: a
-//! matvec splits its output rows, a batched matmul splits its tokens, and
-//! attention splits its heads. All of these reduce to "hand each worker a
-//! set of non-overlapping `&mut` chunks of one (or two, zipped) output
-//! buffers", which is expressible safely with scoped threads and
-//! `chunks_mut` - no unsafe, no allocator-backed task queue.
+//! The hot paths parallelize over *disjoint output chunks*: a matvec
+//! splits its output rows, a batched matmul splits its tokens, attention
+//! splits its heads, and the native backend's matmuls split their output
+//! rows. All of these reduce to "hand each worker a set of
+//! non-overlapping `&mut` chunks of one (or two, zipped) output buffers".
+//!
+//! # Pool architecture (why no `std::thread::scope`)
+//!
+//! Earlier revisions spawned fresh scoped threads on every call - fine
+//! for one big matmul, ruinous for the real workloads: a Block-AP epoch
+//! or a decoded token issues *hundreds* of small parallel sections, and a
+//! spawn/join cycle costs tens of microseconds each. The helpers now
+//! dispatch onto a lazy global pool:
+//!
+//! * workers are spawned on first use, grown on demand up to the largest
+//!   thread count requested (`EQAT_THREADS` / [`with_threads`] /
+//!   detected parallelism, capped at [`MAX_POOL_WORKERS`]), and then
+//!   parked on a condvar between calls - steady-state dispatch is one
+//!   mutex push + wakeup, no thread creation;
+//! * a parallel section publishes a lifetime-erased job batch, the
+//!   *calling thread participates* in draining it, and the call returns
+//!   only after every invocation has finished - so borrowing the
+//!   caller's stack (`&mut` output chunks) stays sound exactly as it was
+//!   with scoped threads (the completion barrier replaces the scope
+//!   join);
+//! * worker panics are caught, the batch still completes, and the first
+//!   payload is re-thrown on the calling thread;
+//! * **reentrancy**: a parallel section entered *from a pool worker*
+//!   (nested parallelism) runs inline on that worker - no deadlock, no
+//!   oversubscription, and identical results (see below).
 //!
 //! Determinism guarantee: the helpers only *partition* work; each output
-//! element is computed by exactly one worker with the same per-element
-//! instruction sequence regardless of the thread count, so results are
-//! bit-identical for `EQAT_THREADS=1` and `EQAT_THREADS=N` (tested in
-//! `infer::qlinear` and `infer::engine`).
+//! element is computed by exactly one logical chunk with the same
+//! per-element instruction sequence regardless of the worker count or
+//! which thread runs the chunk, so results are bit-identical for
+//! `EQAT_THREADS=1` and `EQAT_THREADS=N`, including nested sections
+//! (tested here and in `infer::qlinear` / `infer::engine`).
 //!
 //! Thread count: `EQAT_THREADS` env override, else
 //! `std::thread::available_parallelism()`. Benches and tests can override
-//! in-process with [`with_threads`].
+//! in-process with [`with_threads`]; the pool itself is shared and only
+//! ever grows.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -82,10 +108,228 @@ pub fn chunk_len(n_items: usize) -> usize {
     (n_items + nt - 1) / nt
 }
 
+// ---------------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------------
+
+/// Hard cap on pool workers, independent of `EQAT_THREADS` requests.
+pub const MAX_POOL_WORKERS: usize = 64;
+
+mod pool {
+    use std::cell::Cell;
+    use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+    /// One published parallel section: `n` invocations of a
+    /// lifetime-erased `f`, drained cooperatively by pool workers and the
+    /// publishing thread. The `'static` on `f` is a lie told via
+    /// `transmute` in [`run`]; it is sound because the publisher blocks
+    /// until `done == n` before returning, so every call into `f`
+    /// happens while the caller's borrow is still live (the completion
+    /// barrier replaces a scoped-thread join).
+    struct Batch {
+        f: &'static (dyn Fn(usize) + Sync),
+        n: usize,
+        next: AtomicUsize,
+        state: Mutex<BatchState>,
+        done_cv: Condvar,
+    }
+
+    struct BatchState {
+        done: usize,
+        /// first panic payload from any invocation
+        panic: Option<Box<dyn std::any::Any + Send>>,
+    }
+
+    struct Pool {
+        /// open batches; workers scan for one with unclaimed indices
+        queue: Mutex<Vec<Arc<Batch>>>,
+        work_cv: Condvar,
+        workers: AtomicUsize,
+    }
+
+    fn pool() -> &'static Pool {
+        static P: OnceLock<Pool> = OnceLock::new();
+        P.get_or_init(|| Pool {
+            queue: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            workers: AtomicUsize::new(0),
+        })
+    }
+
+    thread_local! {
+        static IN_WORKER: Cell<bool> = Cell::new(false);
+    }
+
+    /// True on pool worker threads: nested parallel sections run inline
+    /// there instead of re-entering the queue (no deadlock, same bits).
+    pub fn in_worker() -> bool {
+        IN_WORKER.with(|w| w.get())
+    }
+
+    /// Grow the pool to at least `target` workers (capped). Spawn failure
+    /// is non-fatal: the publishing thread drains whatever workers can't.
+    fn ensure_workers(target: usize) {
+        let p = pool();
+        let target = target.min(super::MAX_POOL_WORKERS);
+        loop {
+            let cur = p.workers.load(Ordering::Relaxed);
+            if cur >= target {
+                return;
+            }
+            if p.workers
+                .compare_exchange(cur, cur + 1, Ordering::Relaxed,
+                                  Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            let spawned = std::thread::Builder::new()
+                .name(format!("eqat-pool-{cur}"))
+                .spawn(worker_main);
+            if spawned.is_err() {
+                p.workers.fetch_sub(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Claim the next unrun index of `b`, if any.
+    fn claim(b: &Batch) -> Option<usize> {
+        let mut cur = b.next.load(Ordering::Relaxed);
+        loop {
+            if cur >= b.n {
+                return None;
+            }
+            match b.next.compare_exchange_weak(cur, cur + 1,
+                                               Ordering::Relaxed,
+                                               Ordering::Relaxed) {
+                Ok(_) => return Some(cur),
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    /// Run invocation `i`, trapping panics into the batch state.
+    fn run_index(b: &Batch, i: usize) {
+        // i was claimed (< n), so the publisher is still blocked in
+        // `run` and the closure behind the erased lifetime is alive
+        let result = catch_unwind(AssertUnwindSafe(|| (b.f)(i)));
+        let mut st = b.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.done += 1;
+        if let Err(payload) = result {
+            st.panic.get_or_insert(payload);
+        }
+        if st.done == b.n {
+            b.done_cv.notify_all();
+        }
+    }
+
+    fn worker_main() {
+        IN_WORKER.with(|w| w.set(true));
+        let p = pool();
+        loop {
+            let (batch, first) = {
+                let mut q = p.queue.lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                loop {
+                    let mut found = None;
+                    for b in q.iter() {
+                        if let Some(i) = claim(b) {
+                            found = Some((b.clone(), i));
+                            break;
+                        }
+                    }
+                    if let Some(j) = found {
+                        break j;
+                    }
+                    q = p.work_cv.wait(q)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+            };
+            let mut i = first;
+            loop {
+                run_index(&batch, i);
+                match claim(&batch) {
+                    Some(j) => i = j,
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Run `f(0) .. f(n-1)` across up to `workers` threads (pool workers
+    /// plus the calling thread, which always participates) and return
+    /// once every invocation has finished. Panics from any invocation are
+    /// re-thrown here after the batch completes. Runs inline when a
+    /// single worker suffices or when called from a pool worker (nested
+    /// parallelism).
+    pub fn run(n: usize, workers: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if n == 1 || workers <= 1 || in_worker() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        ensure_workers(workers - 1);
+        // Safety: lifetime erasure - soundness argument at the Batch
+        // docs (this function does not return until done == n).
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f) };
+        let batch = Arc::new(Batch {
+            f: f_static,
+            n,
+            next: AtomicUsize::new(0),
+            state: Mutex::new(BatchState { done: 0, panic: None }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let p = pool();
+            let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
+            q.push(batch.clone());
+            p.work_cv.notify_all();
+        }
+        // the caller helps drain its own batch
+        while let Some(i) = claim(&batch) {
+            run_index(&batch, i);
+        }
+        // completion barrier: no borrow escapes this function
+        let panic = {
+            let mut st = batch.state.lock()
+                .unwrap_or_else(|e| e.into_inner());
+            while st.done < n {
+                st = batch.done_cv.wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            st.panic.take()
+        };
+        {
+            let p = pool();
+            let mut q = p.queue.lock().unwrap_or_else(|e| e.into_inner());
+            q.retain(|b| !Arc::ptr_eq(b, &batch));
+        }
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Current pool size (diagnostics/tests).
+    pub fn workers_spawned() -> usize {
+        pool().workers.load(Ordering::Relaxed)
+    }
+}
+
+pub use pool::{in_worker, workers_spawned};
+
 /// Apply `f(chunk_index, chunk)` over contiguous `chunk`-sized pieces of
-/// `data`, distributing chunks across `num_threads()` scoped workers.
+/// `data`, distributing chunks across `num_threads()` pool workers.
 /// `chunk_index * chunk` is the element offset of the chunk, exactly as
-/// with `slice::chunks_mut`. Runs inline when a single worker suffices.
+/// with `slice::chunks_mut`. Runs inline when a single worker suffices or
+/// when called from inside another parallel section (reentrancy-safe).
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
 where
     T: Send,
@@ -94,25 +338,27 @@ where
     let chunk = chunk.max(1);
     let n_chunks = (data.len() + chunk - 1) / chunk;
     let nt = num_threads().min(n_chunks.max(1));
-    if nt <= 1 {
+    if nt <= 1 || pool::in_worker() {
         for (i, c) in data.chunks_mut(chunk).enumerate() {
             f(i, c);
         }
         return;
     }
-    std::thread::scope(|s| {
-        let mut buckets: Vec<Vec<(usize, &mut [T])>> =
-            (0..nt).map(|_| Vec::new()).collect();
-        for (i, c) in data.chunks_mut(chunk).enumerate() {
-            buckets[i % nt].push((i, c));
-        }
-        let fr = &f;
-        for bucket in buckets {
-            s.spawn(move || {
-                for (i, c) in bucket {
-                    fr(i, c);
-                }
-            });
+    // same bucket partition as the original scoped-thread dispatch:
+    // chunk i goes to bucket i % nt, buckets run their chunks in order
+    let mut buckets: Vec<Vec<(usize, &mut [T])>> =
+        (0..nt).map(|_| Vec::new()).collect();
+    for (i, c) in data.chunks_mut(chunk).enumerate() {
+        buckets[i % nt].push((i, c));
+    }
+    let slots: Vec<Mutex<Vec<(usize, &mut [T])>>> =
+        buckets.into_iter().map(Mutex::new).collect();
+    let fr = &f;
+    pool::run(nt, nt, &|wi| {
+        let bucket = std::mem::take(
+            &mut *slots[wi].lock().unwrap_or_else(|e| e.into_inner()));
+        for (i, c) in bucket {
+            fr(i, c);
         }
     });
 }
@@ -141,27 +387,26 @@ pub fn par_chunks2_mut<T, U, F>(
         "par_chunks2_mut: chunk counts diverge ({n_a} vs {n_b})"
     );
     let nt = num_threads().min(n_a.max(1));
-    if nt <= 1 {
+    if nt <= 1 || pool::in_worker() {
         for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate()
         {
             f(i, x, y);
         }
         return;
     }
-    std::thread::scope(|s| {
-        let mut buckets: Vec<Vec<(usize, &mut [T], &mut [U])>> =
-            (0..nt).map(|_| Vec::new()).collect();
-        for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate()
-        {
-            buckets[i % nt].push((i, x, y));
-        }
-        let fr = &f;
-        for bucket in buckets {
-            s.spawn(move || {
-                for (i, x, y) in bucket {
-                    fr(i, x, y);
-                }
-            });
+    let mut buckets: Vec<Vec<(usize, &mut [T], &mut [U])>> =
+        (0..nt).map(|_| Vec::new()).collect();
+    for (i, (x, y)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate() {
+        buckets[i % nt].push((i, x, y));
+    }
+    let slots: Vec<Mutex<Vec<(usize, &mut [T], &mut [U])>>> =
+        buckets.into_iter().map(Mutex::new).collect();
+    let fr = &f;
+    pool::run(nt, nt, &|wi| {
+        let bucket = std::mem::take(
+            &mut *slots[wi].lock().unwrap_or_else(|e| e.into_inner()));
+        for (i, x, y) in bucket {
+            fr(i, x, y);
         }
     });
 }
@@ -211,6 +456,79 @@ mod tests {
             });
         });
         assert_eq!(calls.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_calls() {
+        // thousands of tiny parallel sections: with spawn-per-call this
+        // would create ~8000 threads; the pool must stay bounded
+        with_threads(4, || {
+            let mut data = vec![0u64; 32];
+            for round in 0..2000u64 {
+                par_chunks_mut(&mut data, 8, |ci, c| {
+                    for v in c.iter_mut() {
+                        *v += ci as u64 + round;
+                    }
+                });
+            }
+            assert!(workers_spawned() <= MAX_POOL_WORKERS);
+            // every chunk saw every round exactly once
+            let want: u64 = (0..2000u64).sum();
+            assert_eq!(data[0], want); // chunk 0: +0 per round
+            assert_eq!(data[31], want + 3 * 2000); // chunk 3: +3 per round
+        });
+    }
+
+    #[test]
+    fn nested_sections_run_inline_and_stay_bit_identical() {
+        // outer par over 4 row-bands, inner par over columns of each band;
+        // nested sections must not deadlock and must produce the same
+        // bits as the fully serial run
+        let run = |nt: usize| {
+            with_threads(nt, || {
+                let mut data = vec![0f32; 16 * 16];
+                par_chunks_mut(&mut data, 4 * 16, |bi, band| {
+                    par_chunks_mut(band, 16, |ri, row| {
+                        for (j, v) in row.iter_mut().enumerate() {
+                            let r = bi * 4 + ri;
+                            *v = ((r * 16 + j) as f32).sqrt() * 0.1
+                                + (r as f32) / 3.0;
+                        }
+                    });
+                });
+                data
+            })
+        };
+        let serial = run(1);
+        for nt in [2usize, 4, 7] {
+            let par = run(nt);
+            assert!(
+                serial.iter().zip(&par)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "nt={nt} changed nested-section bits"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_panics_propagate_to_the_caller() {
+        let result = std::panic::catch_unwind(|| {
+            with_threads(4, || {
+                let mut data = vec![0u8; 64];
+                par_chunks_mut(&mut data, 8, |ci, _| {
+                    if ci == 5 {
+                        panic!("boom in chunk {ci}");
+                    }
+                });
+            })
+        });
+        assert!(result.is_err(), "worker panic was swallowed");
+        // the pool survives a panicked batch: later sections still work
+        with_threads(4, || {
+            let mut data = vec![0u8; 64];
+            par_chunks_mut(&mut data, 8, |_, c| c.fill(1));
+            assert!(data.iter().all(|&v| v == 1));
+        });
     }
 
     #[test]

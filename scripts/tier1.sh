@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 gate: release build + full test suite + a fast-mode inference
 # bench smoke that must produce a valid machine-readable perf snapshot
-# (runs/bench.json, schema 2, including the native train_step section) +
-# a bounded end-to-end Block-AP -> E2E-QP training smoke on the native
-# backend (no HLO artifacts required). Run from anywhere; operates on the
-# repo root.
+# (runs/bench.json, schema 3: inference + native train_step + the
+# taped-vs-forward-only eval_forward section) + a bounded end-to-end
+# Block-AP -> E2E-QP training smoke and a forward-only eval smoke on the
+# native backend (no HLO artifacts required). Run from anywhere; operates
+# on the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,7 +13,7 @@ cargo build --release
 cargo test -q
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or malformed
+# runs/bench.json is missing or schema-invalid (eval_forward included)
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
 
@@ -21,5 +22,11 @@ cargo run --release --bin eqat -- bench check
 cargo run --release --bin eqat -- train --preset synthetic \
   --backend native --pretrain-steps 40 --block-samples 8 \
   --e2e-samples 8 --ppl-batches 2 --out runs/tier1-synthetic-w2.eqt
+
+# native eval smoke: bounded forward-only (no-tape) perplexity on the
+# synthetic preset; reuses the pretrain checkpoint cached by the train
+# smoke above and fails on non-finite ppl
+cargo run --release --bin eqat -- eval --preset synthetic \
+  --backend native --ppl-only --ppl-batches 2 --pretrain-steps 40
 
 echo "tier1 OK"
