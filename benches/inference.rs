@@ -1,12 +1,14 @@
 //! `cargo bench` target for the parallel inference hot path: threaded
-//! packed matvec scaling, batched-vs-sequential prefill, and decode
-//! tokens/sec on a Llama-2-7B-shaped block (custom harness - criterion is
+//! packed matvec scaling, batched-vs-sequential prefill, decode
+//! tokens/sec on a Llama-2-7B-shaped block, and the continuous-batching
+//! serve section - scheduler vs sequential per-request decode at batch
+//! 1/4/8 with latency percentiles (custom harness - criterion is
 //! unavailable offline; see rust/src/bench/mod.rs).
 //!
-//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 3:
+//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 4:
 //! inference sections + native train_step + taped-vs-forward-only
-//! eval_forward) so the throughput trajectory is tracked across PRs.
-//! `EQAT_BENCH_FAST=1` shrinks shapes/iterations for CI smoke runs;
+//! eval_forward + serve) so the throughput trajectory is tracked across
+//! PRs. `EQAT_BENCH_FAST=1` shrinks shapes/iterations for CI smoke runs;
 //! `EQAT_THREADS=N` caps the worker count.
 
 fn main() {

@@ -5,18 +5,26 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 3 = inference sections + native train_step + the
-//! taped-vs-forward-only eval_forward section) so the perf trajectory is
-//! trackable across PRs; [`check_bench_json`] validates it (used by
-//! scripts/tier1.sh). Schemas 1-2 from older PRs stay accepted.
+//! (schema 4 = inference sections + native train_step + eval_forward +
+//! the continuous-batching `serve` section: batched decode tokens/s at
+//! batch 1/4/8 vs sequential per-request decode, with per-token latency
+//! percentiles and scheduler-vs-solo bit-equality asserted) so the perf
+//! trajectory is trackable across PRs; [`check_bench_json`] validates it
+//! (used by scripts/tier1.sh). Schemas 1-3 from older PRs stay accepted.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::{llama_by_name, QuantScheme};
+use crate::infer::core::ModelCore;
 use crate::infer::engine::Engine;
+use crate::infer::generate::{generate, Sampler};
+use crate::infer::kv::{KvLease, KvPool};
 use crate::infer::qlinear::{dense_matvec, PackedLinear};
+use crate::infer::sched::{SchedConfig, Scheduler};
+use crate::infer::session::Request;
 use crate::quant::rtn::{minmax_init, quantize};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -150,14 +158,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (ef_md, ef_json) = eval_forward_throughput(fast)?;
     md.push_str(&ef_md);
+    md.push('\n');
+    let (sv_md, sv_json) = serve_throughput(fast)?;
+    md.push_str(&sv_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 3 = schema 2 + the eval_forward section
-        ("schema", Json::num(3.0)),
+        // schema 4 = schema 3 + the continuous-batching serve section
+        ("schema", Json::num(4.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -166,8 +177,174 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("engine", eng_json),
         ("train_step", ts_json),
         ("eval_forward", ef_json),
+        ("serve", sv_json),
     ]);
     Ok((md, payload))
+}
+
+/// Multi-sequence serving throughput: the continuous-batching scheduler
+/// (one rows-parallel matmul per linear per tick across the batch) vs
+/// sequential per-request decode on a solo engine, at batch 1/4/8, with
+/// per-token and first-token latency percentiles. Before timing, the
+/// bench *asserts* the serving determinism contract: scheduler logits
+/// (and greedy outputs) are bit-identical to solo-engine runs of the
+/// same prompts. Schema-4 `serve` section of runs/bench.json.
+pub fn serve_throughput(fast: bool) -> Result<(String, Json)> {
+    let (dim, nh, hd, inter, vocab, n_layers) = if fast {
+        (256usize, 4usize, 64usize, 512usize, 1024usize, 1usize)
+    } else {
+        (1024, 8, 128, 2816, 4096, 1)
+    };
+    let prompt_len = if fast { 8 } else { 16 };
+    let max_new = if fast { 12 } else { 24 };
+    let max_ctx = prompt_len + max_new + 4;
+    let sch = QuantScheme::new(2, 128);
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, sch, max_ctx, 4242)?);
+    let mk_prompt = |i: usize| -> Vec<i32> {
+        (0..prompt_len)
+            .map(|t| ((t * 37 + 11 * (i + 1)) % vocab) as i32)
+            .collect()
+    };
+
+    // determinism gate 1: one batched decode step over sequences at
+    // staggered positions is bit-identical to solo engine steps
+    {
+        let mut pool = KvPool::for_core(&core, 3);
+        let mut sc = core.scratch();
+        let mut leases = Vec::new();
+        let mut poss = Vec::new();
+        for i in 0..3usize {
+            let p = mk_prompt(i);
+            let p = &p[..p.len() - i]; // staggered lengths
+            let l = pool.lease().unwrap();
+            core.prefill(pool.slot_mut(&l), 0, p, &mut sc)?;
+            leases.push(l);
+            poss.push(p.len());
+        }
+        let batch: Vec<(&KvLease, usize)> =
+            leases.iter().zip(&poss).map(|(l, &p)| (l, p)).collect();
+        core.decode_batch(&mut pool, &batch, &[5, 6, 7], &mut sc)?;
+        drop(batch);
+        for i in 0..3usize {
+            let mut solo = Engine::from_core(core.clone());
+            let p = mk_prompt(i);
+            solo.prefill(&p[..p.len() - i])?;
+            let want = solo.step(5 + i as i32)?;
+            ensure!(
+                sc.batch_logits(i)
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "serve bench: decode_batch logits diverge from solo \
+                 engine at row {i}"
+            );
+        }
+    }
+
+    let mut rows = vec![vec![
+        "config".into(),
+        format!("dim {dim}, inter {inter}, vocab {vocab}, {n_layers} \
+                 block(s), w2g128, {prompt_len}+{max_new} tok/req"),
+    ]];
+    let mut jbatches = Vec::new();
+    let mut speedup8 = 0f64;
+    for &bsz in &[1usize, 4, 8] {
+        // batched: one scheduler, bsz slots, all requests up front
+        let mut sched = Scheduler::new(core.clone(), bsz, SchedConfig {
+            max_batch: bsz,
+            prefill_chunk: prompt_len,
+        });
+        for i in 0..bsz {
+            sched.submit(Request {
+                prompt: mk_prompt(i),
+                max_new,
+                sampler: Sampler::Greedy,
+                seed: 1000 + i as u64,
+            })?;
+        }
+        let t0 = Instant::now();
+        let comps = sched.run_all()?;
+        let sched_secs = t0.elapsed().as_secs_f64();
+        let total_tokens: usize =
+            comps.iter().map(|c| c.tokens.len()).sum();
+        let gaps: Vec<f64> = comps
+            .iter()
+            .flat_map(|c| c.token_gaps.iter().map(|g| g * 1e3))
+            .collect();
+        let firsts: Vec<f64> =
+            comps.iter().map(|c| c.first_token_secs * 1e3).collect();
+
+        // sequential: the same requests one after another on one engine
+        let mut eng = Engine::from_core(core.clone());
+        let t1 = Instant::now();
+        let mut seq_tokens = 0usize;
+        let mut seq_outs = Vec::new();
+        for i in 0..bsz {
+            eng.reset();
+            let rep = generate(&mut eng, &mk_prompt(i), max_new,
+                               Sampler::Greedy, 1000 + i as u64)?;
+            seq_tokens += rep.tokens.len();
+            seq_outs.push(rep.tokens);
+        }
+        let seq_secs = t1.elapsed().as_secs_f64();
+
+        // determinism gate 2: scheduler greedy outputs == solo outputs
+        for (c, want) in comps.iter().zip(&seq_outs) {
+            ensure!(&c.tokens == want,
+                    "serve bench: scheduler output diverged from solo \
+                     generate (req {})", c.id);
+        }
+        ensure!(total_tokens == seq_tokens && total_tokens > 0,
+                "serve bench: token accounting mismatch");
+
+        let sched_tps = total_tokens as f64 / sched_secs.max(1e-9);
+        let seq_tps = seq_tokens as f64 / seq_secs.max(1e-9);
+        let speedup = sched_tps / seq_tps.max(1e-9);
+        if bsz == 8 {
+            speedup8 = speedup;
+        }
+        let p50 = percentile(&gaps, 50.0);
+        let p95 = percentile(&gaps, 95.0);
+        rows.push(vec![
+            format!("batch {bsz}"),
+            format!("batched {sched_tps:.0} tok/s vs sequential \
+                     {seq_tps:.0} tok/s ({speedup:.2}x); token lat \
+                     p50 {p50:.2}ms p95 {p95:.2}ms"),
+        ]);
+        crate::info!("serve bench batch {bsz}: {sched_tps:.0} tok/s \
+                      batched vs {seq_tps:.0} sequential \
+                      ({speedup:.2}x)");
+        jbatches.push(Json::obj(vec![
+            ("batch", Json::num(bsz as f64)),
+            ("requests", Json::num(bsz as f64)),
+            ("tokens", Json::num(total_tokens as f64)),
+            ("sched_tok_per_sec", Json::num(sched_tps)),
+            ("seq_tok_per_sec", Json::num(seq_tps)),
+            ("speedup", Json::num(speedup)),
+            ("p50_token_ms", Json::num(p50)),
+            ("p95_token_ms", Json::num(p95)),
+            ("p50_first_token_ms", Json::num(percentile(&firsts, 50.0))),
+            ("p95_first_token_ms", Json::num(percentile(&firsts, 95.0))),
+        ]));
+    }
+    rows.push(vec!["speedup @ batch 8 (target >= 3x)".into(),
+                   format!("{speedup8:.2}x")]);
+    let md = format!(
+        "## Serve - continuous batching vs sequential per-request decode \
+         (scheduler logits bit-identical to solo engine, asserted)\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("dim", Json::num(dim as f64)),
+        ("inter", Json::num(inter as f64)),
+        ("vocab", Json::num(vocab as f64)),
+        ("n_layers", Json::num(n_layers as f64)),
+        ("prompt_tokens", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("batches", Json::arr(jbatches)),
+    ]);
+    Ok((md, j))
 }
 
 /// Eval-forward throughput on the native backend's `synthetic` preset:
@@ -441,7 +618,7 @@ fn engine_throughput_table(fast: bool) -> Result<(String, Json)> {
         bench("prefill-batched", 1, seq_iters + 1, || {
             eng.reset();
             eng.prefill(&toks).unwrap();
-            std::hint::black_box(eng.pos);
+            std::hint::black_box(eng.pos());
         })
     });
     let sequential_1t = with_threads(1, || {
@@ -450,14 +627,14 @@ fn engine_throughput_table(fast: bool) -> Result<(String, Json)> {
             for &t in &toks {
                 eng.step_ref(t).unwrap();
             }
-            std::hint::black_box(eng.pos);
+            std::hint::black_box(eng.pos());
         })
     });
     let batched_4t = with_threads(4, || {
         bench("prefill-batched-4t", 1, seq_iters + 1, || {
             eng.reset();
             eng.prefill(&toks).unwrap();
-            std::hint::black_box(eng.pos);
+            std::hint::black_box(eng.pos());
         })
     });
     let prefill_speedup = sequential_1t.mean_us / batched_1t.mean_us;
@@ -474,8 +651,8 @@ fn engine_throughput_table(fast: bool) -> Result<(String, Json)> {
             eng.reset();
             eng.prefill(&toks).unwrap();
             bench("decode", 2, decode_iters, || {
-                if eng.pos >= max_ctx {
-                    eng.pos = n_prefill;
+                if eng.pos() >= max_ctx {
+                    eng.set_pos(n_prefill);
                 }
                 eng.step_ref(1).unwrap();
             })
@@ -595,14 +772,15 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 
 /// Validate a `runs/bench.json` produced by [`inference_throughput`]:
 /// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
-/// eval_forward), and requires non-empty matvec/decode sections with
-/// numeric fields. scripts/tier1.sh fails the build on error.
+/// eval_forward, 4 adds the continuous-batching serve section), and
+/// requires non-empty matvec/decode sections with numeric fields.
+/// scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=3).contains(&schema) {
+    if !(1..=4).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -646,6 +824,31 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             let v = ef.get(key)?.as_f64()?;
             if !v.is_finite() || v <= 0.0 {
                 bail!("{path}: bad eval_forward.{key} {v}");
+            }
+        }
+    }
+    // schema 4 adds the continuous-batching serve section
+    if schema >= 4 {
+        let sv = j.get("serve")?.get("batches")?.as_arr()?;
+        if sv.is_empty() {
+            bail!("{path}: empty serve.batches section");
+        }
+        for b in sv {
+            b.get("batch")?.as_usize()?;
+            for key in ["sched_tok_per_sec", "seq_tok_per_sec",
+                        "speedup"] {
+                let v = b.get(key)?.as_f64()?;
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("{path}: bad serve.{key} {v}");
+                }
+            }
+            // latency percentiles can round to ~0 on coarse timers;
+            // require presence and non-negative finite values
+            for key in ["p50_token_ms", "p95_token_ms"] {
+                let v = b.get(key)?.as_f64()?;
+                if !v.is_finite() || v < 0.0 {
+                    bail!("{path}: bad serve.{key} {v}");
+                }
             }
         }
     }
@@ -709,7 +912,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(3.0)),
+            ("schema", Json::num(4.0)),
             ("kind", Json::str("inference_throughput")),
             (
                 "matvec",
@@ -748,6 +951,20 @@ mod tests {
                     ("speedup", Json::num(1.6)),
                 ]),
             ),
+            (
+                "serve",
+                Json::obj(vec![(
+                    "batches",
+                    Json::arr(vec![Json::obj(vec![
+                        ("batch", Json::num(8.0)),
+                        ("sched_tok_per_sec", Json::num(400.0)),
+                        ("seq_tok_per_sec", Json::num(100.0)),
+                        ("speedup", Json::num(4.0)),
+                        ("p50_token_ms", Json::num(2.5)),
+                        ("p95_token_ms", Json::num(4.0)),
+                    ])]),
+                )]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -755,8 +972,8 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-3 file without its required sections is rejected...
-        for missing in ["train_step", "eval_forward"] {
+        // schema-4 file without its required sections is rejected...
+        for missing in ["train_step", "eval_forward", "serve"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -769,18 +986,21 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "missing {missing} accepted");
         }
-        // ...but the core sections under legacy schemas 1/2 stay valid
-        let mut core = Vec::new();
-        if let Json::Obj(fields) = &good {
-            for (k, v) in fields {
-                if k != "eval_forward" && k != "schema" {
-                    core.push((k.as_str(), v.clone()));
+        // ...but the core sections under legacy schemas 1/2/3 stay valid
+        // (3 keeps eval_forward, 1/2 drop it too)
+        for (legacy_schema, drop_keys) in [
+            (1.0f64, vec!["serve", "eval_forward", "schema"]),
+            (2.0, vec!["serve", "eval_forward", "schema"]),
+            (3.0, vec!["serve", "schema"]),
+        ] {
+            let mut legacy = vec![("schema", Json::num(legacy_schema))];
+            if let Json::Obj(fields) = &good {
+                for (k, v) in fields {
+                    if !drop_keys.contains(&k.as_str()) {
+                        legacy.push((k.as_str(), v.clone()));
+                    }
                 }
             }
-        }
-        for legacy_schema in [1.0f64, 2.0] {
-            let mut legacy = vec![("schema", Json::num(legacy_schema))];
-            legacy.extend(core.clone());
             write_bench_json(&path, &Json::obj(legacy)).unwrap();
             check_bench_json(&path).unwrap();
         }

@@ -38,14 +38,21 @@ COMMANDS
                         forward-only eval path (the tier-1 smoke)
   generate              pure-Rust generation from a packed model
                         [--model FILE --tokens N --temp T]
+  serve-sim             multi-request serving demo: synthetic request
+                        stream through the continuous-batching scheduler
+                        (shared ModelCore + pooled KV sessions), with
+                        aggregate tok/s and latency percentiles
+                        [--requests N --slots N --tokens N --prompt-len L
+                         --prefill-chunk N --seed S --model FILE]
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
-                        batched prefill + native train_step + taped-vs-
-                        forward-only eval_forward -> runs/bench.json,
-                        schema 3) | check (validate runs/bench.json) |
-                        train-time (Tables 8/9)  [--fast]
+                        batched prefill + native train_step + eval_forward
+                        + continuous-batching serve section ->
+                        runs/bench.json, schema 4) | check (validate
+                        runs/bench.json) | train-time (Tables 8/9)
+                        [--fast]
   help                  this text
 
 BACKENDS (--backend, default auto)

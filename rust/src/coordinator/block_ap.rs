@@ -256,6 +256,10 @@ pub fn run_block_ap(
         let mut v_q = vec![0f32; qbl.size];
         let mut step = 0f32;
         let mut curve = Vec::new();
+        // persistent output buffers (run_into): the step writes in
+        // place, then swaps with the live state - the epoch loop
+        // allocates no fresh output Vecs
+        let mut obuf: Vec<Vec<f32>> = Vec::new();
 
         for _epoch in 0..hp.block_epochs {
             let mut order: Vec<usize> = (0..pool.len()).collect();
@@ -266,7 +270,7 @@ pub fn run_block_ap(
                     Propagation::Fp => &h_fp[i],
                 };
                 step += 1.0;
-                let outs = step_exec.run(&[
+                step_exec.run_into(&[
                     Arg::F32(&bp),
                     Arg::F32(&qp),
                     Arg::F32(&m_w),
@@ -285,15 +289,14 @@ pub fn run_block_ap(
                     Arg::Scalar(m_sf),
                     Arg::Scalar(m_zf),
                     Arg::Scalar(proj),
-                ])?;
-                let mut it = outs.into_iter();
-                bp = it.next().unwrap().data;
-                qp = it.next().unwrap().data;
-                m_w = it.next().unwrap().data;
-                v_w = it.next().unwrap().data;
-                m_q = it.next().unwrap().data;
-                v_q = it.next().unwrap().data;
-                curve.push(it.next().unwrap().data[0]);
+                ], &mut obuf)?;
+                std::mem::swap(&mut bp, &mut obuf[0]);
+                std::mem::swap(&mut qp, &mut obuf[1]);
+                std::mem::swap(&mut m_w, &mut obuf[2]);
+                std::mem::swap(&mut v_w, &mut obuf[3]);
+                std::mem::swap(&mut m_q, &mut obuf[4]);
+                std::mem::swap(&mut v_q, &mut obuf[5]);
+                curve.push(obuf[6][0]);
             }
         }
 

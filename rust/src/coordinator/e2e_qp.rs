@@ -46,10 +46,13 @@ pub fn run_e2e_qp(
 
     let mut losses = Vec::with_capacity(total);
     let mut it = 0usize;
+    // persistent output buffers (run_into): swap with the live state
+    // instead of allocating fresh outputs every step
+    let mut obuf: Vec<Vec<f32>> = Vec::new();
     for _epoch in 0..hp.e2e_epochs {
         for b in batches {
             let step = adam.next_step();
-            let outs = exec.run(&[
+            exec.run_into(&[
                 Arg::F32(&qm.wq),
                 Arg::F32(&qm.qp),
                 Arg::F32(&qm.fpr),
@@ -62,12 +65,11 @@ pub fn run_e2e_qp(
                 Arg::Scalar(sched.at(it)),
                 Arg::Scalar(m_sf), // paper default: s trainable, z frozen
                 Arg::Scalar(m_zf),
-            ])?;
-            let mut o = outs.into_iter();
-            qm.qp = o.next().unwrap().data;
-            adam.m = o.next().unwrap().data;
-            adam.v = o.next().unwrap().data;
-            losses.push(o.next().unwrap().data[0]);
+            ], &mut obuf)?;
+            std::mem::swap(&mut qm.qp, &mut obuf[0]);
+            std::mem::swap(&mut adam.m, &mut obuf[1]);
+            std::mem::swap(&mut adam.v, &mut obuf[2]);
+            losses.push(obuf[3][0]);
             it += 1;
         }
         crate::info!(

@@ -54,11 +54,14 @@ pub fn pretrain_from(
     let sched = LrSchedule::cosine(opts.lr, opts.steps / 20 + 1, opts.steps);
     let mut losses = Vec::with_capacity(opts.steps);
 
+    // persistent output buffers: the step writes in place, then swaps
+    // with the live state - no per-step output allocation (run_into)
+    let mut obuf: Vec<Vec<f32>> = Vec::new();
     for it in 0..opts.steps {
         let batch = loader.next_batch();
         let step = adam.next_step();
         let lr = sched.at(it);
-        let outs = exec.run(&[
+        exec.run_into(&[
             Arg::F32(&params),
             Arg::F32(&adam.m),
             Arg::F32(&adam.v),
@@ -66,12 +69,11 @@ pub fn pretrain_from(
             Arg::I32(&batch.y),
             Arg::Scalar(step),
             Arg::Scalar(lr),
-        ])?;
-        let mut outs = outs.into_iter();
-        params = outs.next().unwrap().data;
-        adam.m = outs.next().unwrap().data;
-        adam.v = outs.next().unwrap().data;
-        let loss = outs.next().unwrap().data[0];
+        ], &mut obuf)?;
+        std::mem::swap(&mut params, &mut obuf[0]);
+        std::mem::swap(&mut adam.m, &mut obuf[1]);
+        std::mem::swap(&mut adam.v, &mut obuf[2]);
+        let loss = obuf[3][0];
         losses.push(loss);
         if opts.log_every > 0 && (it % opts.log_every == 0
             || it + 1 == opts.steps)

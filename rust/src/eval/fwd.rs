@@ -12,9 +12,11 @@
 //! required. This is what makes CPU-only eval (and `eval::ppl::
 //! perplexity_engine`) possible on a deployment box.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::infer::core::{Linear, ModelCore};
 use crate::infer::engine::Engine;
+use crate::io::manifest::PresetInfo;
 use crate::model::quantized::QuantizedModel;
 use crate::runtime::{Arg, Backend};
 
@@ -36,34 +38,160 @@ impl<'a> ModelRef<'a> {
     /// Logits for one eval-geometry batch; x is (eval_batch * eval_ctx)
     /// i32, returns (eval_batch * eval_ctx * vocab) f32.
     pub fn logits(&self, rt: &dyn Backend, x: &[i32]) -> Result<Vec<f32>> {
+        let mut outs = Vec::new();
+        self.logits_into(rt, x, &mut outs)?;
+        Ok(outs.pop().unwrap())
+    }
+
+    /// [`ModelRef::logits`] through `Executor::run_into`: `outs[0]` holds
+    /// the logits, and its allocation (like the native backend's own
+    /// output writes) is reused across calls - the eval loops' per-batch
+    /// allocation-free path.
+    pub fn logits_into(&self, rt: &dyn Backend, x: &[i32],
+                       outs: &mut Vec<Vec<f32>>) -> Result<()> {
         match self {
             ModelRef::Fp { preset, params } => {
                 let exec = rt.exec(preset, "model_fwd_fp")?;
-                exec.run1(&[Arg::F32(params), Arg::I32(x)])
+                exec.run_into(&[Arg::F32(params), Arg::I32(x)], outs)
             }
             ModelRef::Quant(qm) => {
                 let exec =
                     rt.exec_g(&qm.preset, "model_fwd_q", qm.scheme.group)?;
-                exec.run1(&[
+                exec.run_into(&[
                     Arg::F32(&qm.wq),
                     Arg::F32(&qm.qp),
                     Arg::F32(&qm.fpr),
                     Arg::I32(x),
-                ])
+                ], outs)
             }
             ModelRef::Lora { qm, lora } => {
                 let exec = rt.exec_g(&qm.preset, "model_fwd_lora",
                                      qm.scheme.group)?;
-                exec.run1(&[
+                exec.run_into(&[
                     Arg::F32(&qm.wq),
                     Arg::F32(&qm.qp),
                     Arg::F32(&qm.fpr),
                     Arg::F32(lora),
                     Arg::I32(x),
-                ])
+                ], outs)
             }
         }
     }
+}
+
+/// Build a serving-core view of any evaluated model kind, so session
+/// forking / prefix reuse (KV-cache mechanics) work for evaluation too:
+/// a `Quant` model keeps its packed low-bit linears (exactly the
+/// deployment artifact), while `Fp` and `Lora` materialize dense
+/// effective weights (for LoRA, `dequant(wq) + B@A`, matching
+/// model.py's merged forward). `max_ctx` bounds the per-session KV.
+pub fn model_core_of(info: &PresetInfo, model: &ModelRef,
+                     max_ctx: usize) -> Result<ModelCore> {
+    let cfg = &info.config;
+    if let ModelRef::Quant(qm) = model {
+        return ModelCore::from_quantized(qm, info, max_ctx);
+    }
+    let layout = |name: &str| {
+        info.layouts
+            .get(name)
+            .ok_or_else(|| anyhow!("missing {name} layout"))
+    };
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    let (embed, final_norm, head);
+    match model {
+        ModelRef::Fp { params, .. } => {
+            let fpl = layout("fp")?;
+            for b in 0..cfg.n_layers {
+                let mut lins = Vec::with_capacity(7);
+                for (name, o, i) in cfg.linears() {
+                    let w = fpl
+                        .slice(params, &format!("blocks.{b}.{name}"))?
+                        .to_vec();
+                    lins.push(Linear::Dense { w, out_dim: o, in_dim: i });
+                }
+                blocks.push(crate::infer::core::BlockW {
+                    attn_norm: fpl
+                        .slice(params, &format!("blocks.{b}.attn_norm"))?
+                        .to_vec(),
+                    mlp_norm: fpl
+                        .slice(params, &format!("blocks.{b}.mlp_norm"))?
+                        .to_vec(),
+                    lins,
+                });
+            }
+            embed = fpl.slice(params, "embed")?.to_vec();
+            final_norm = fpl.slice(params, "final_norm")?.to_vec();
+            head = fpl.slice(params, "head")?.to_vec();
+        }
+        ModelRef::Lora { qm, lora } => {
+            let g = qm.scheme.group;
+            let wql = layout("wq")?;
+            let qpl = layout(&format!("qp_g{g}"))?;
+            let fprl = layout("fpr")?;
+            let ll = layout("lora")?;
+            let rank = cfg.lora_rank;
+            for b in 0..cfg.n_layers {
+                let mut lins = Vec::with_capacity(7);
+                for (name, o, i) in cfg.linears() {
+                    let wi =
+                        wql.slice(&qm.wq, &format!("blocks.{b}.{name}"))?;
+                    let s = qpl
+                        .slice(&qm.qp, &format!("s.blocks.{b}.{name}"))?;
+                    let z = qpl
+                        .slice(&qm.qp, &format!("z.blocks.{b}.{name}"))?;
+                    let mut w = vec![0f32; o * i];
+                    crate::runtime::native::ops::dequantize(
+                        wi, o, i, s, z, g, &mut w);
+                    // + B@A at scale 1.0, matching model_refs_q's LoRA
+                    let a =
+                        ll.slice(lora, &format!("blocks.{b}.{name}.A"))?;
+                    let bm =
+                        ll.slice(lora, &format!("blocks.{b}.{name}.B"))?;
+                    for r in 0..o {
+                        for j in 0..rank {
+                            let bv = bm[r * rank + j];
+                            if bv == 0.0 {
+                                continue;
+                            }
+                            let ar = &a[j * i..(j + 1) * i];
+                            let wr = &mut w[r * i..(r + 1) * i];
+                            for c in 0..i {
+                                wr[c] += bv * ar[c];
+                            }
+                        }
+                    }
+                    lins.push(Linear::Dense { w, out_dim: o, in_dim: i });
+                }
+                blocks.push(crate::infer::core::BlockW {
+                    attn_norm: fprl
+                        .slice(&qm.fpr, &format!("blocks.{b}.attn_norm"))?
+                        .to_vec(),
+                    mlp_norm: fprl
+                        .slice(&qm.fpr, &format!("blocks.{b}.mlp_norm"))?
+                        .to_vec(),
+                    lins,
+                });
+            }
+            embed = fprl.slice(&qm.fpr, "embed")?.to_vec();
+            final_norm = fprl.slice(&qm.fpr, "final_norm")?.to_vec();
+            head = fprl.slice(&qm.fpr, "head")?.to_vec();
+        }
+        ModelRef::Quant(_) => unreachable!(),
+    }
+    Ok(ModelCore::assemble(
+        cfg.dim,
+        cfg.n_heads,
+        cfg.head_dim,
+        cfg.inter,
+        cfg.vocab,
+        max_ctx,
+        cfg.rope_theta,
+        cfg.norm_eps as f32,
+        embed,
+        final_norm,
+        head,
+        blocks,
+    ))
 }
 
 /// Batched eval forward on the pure-Rust engine: logits for every position
@@ -73,23 +201,33 @@ impl<'a> ModelRef<'a> {
 /// prefill (`Engine::forward_logits`); the KV cache is reset per row.
 pub fn engine_logits(eng: &mut Engine, x: &[i32], batch: usize, ctx: usize)
                      -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    engine_logits_into(eng, x, batch, ctx, &mut out)?;
+    Ok(out)
+}
+
+/// [`engine_logits`] into a reusable buffer - the allocation-free form
+/// `eval::ppl::perplexity_engine` loops over: each row's logits are
+/// written straight into their place in `out` (no per-row staging
+/// buffer or copy).
+pub fn engine_logits_into(eng: &mut Engine, x: &[i32], batch: usize,
+                          ctx: usize, out: &mut Vec<f32>) -> Result<()> {
     if x.len() != batch * ctx {
         bail!("engine_logits: x has {} tokens, want {batch}x{ctx}",
               x.len());
     }
-    if ctx > eng.max_ctx {
+    if ctx > eng.max_ctx() {
         bail!("engine_logits: ctx {ctx} exceeds engine max_ctx {}",
-              eng.max_ctx);
+              eng.max_ctx());
     }
-    let v = eng.vocab;
-    let mut out = vec![0f32; batch * ctx * v];
+    let v = eng.vocab();
+    out.resize(batch * ctx * v, 0.0);
     for b in 0..batch {
         eng.reset();
-        let row = &x[b * ctx..(b + 1) * ctx];
-        let lg = eng.forward_logits(row)?;
-        out[b * ctx * v..(b + 1) * ctx * v].copy_from_slice(&lg);
+        eng.forward_logits_slice(&x[b * ctx..(b + 1) * ctx],
+                                 &mut out[b * ctx * v..(b + 1) * ctx * v])?;
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

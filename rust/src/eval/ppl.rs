@@ -7,18 +7,22 @@
 //! pure-Rust packed engine's batched forward (no artifacts needed) -
 //! useful for validating a deployed .eqt model on the serving box
 //! itself. Both paths are backed by the persistent worker pool, so
-//! multi-batch eval pays no per-call thread-spawn latency.
+//! multi-batch eval pays no per-call thread-spawn latency, and both
+//! stream their logits through reusable buffers (`Executor::run_into` /
+//! `Engine::forward_logits_into`): steady-state perplexity eval
+//! allocates no fresh logits Vec per batch.
 
 use anyhow::Result;
 
 use crate::data::corpus::{Domain, World};
 use crate::data::loader::LmLoader;
-use crate::eval::fwd::{engine_logits, ModelRef};
+use crate::eval::fwd::{engine_logits_into, ModelRef};
 use crate::infer::engine::Engine;
 use crate::runtime::Backend;
 use crate::util::stats::logsumexp;
 
-/// Accumulate mean NLL over (x, y) batches given a logits provider.
+/// Accumulate mean NLL over (x, y) batches given a logits provider that
+/// writes into a reusable buffer.
 fn ppl_over_batches<F>(
     loader: &mut LmLoader,
     vocab: usize,
@@ -26,13 +30,14 @@ fn ppl_over_batches<F>(
     mut logits_of: F,
 ) -> Result<f64>
 where
-    F: FnMut(&[i32]) -> Result<Vec<f32>>,
+    F: FnMut(&[i32], &mut Vec<f32>) -> Result<()>,
 {
     let mut total_nll = 0f64;
     let mut total_tok = 0usize;
+    let mut logits = Vec::new();
     for _ in 0..n_batches {
         let b = loader.next_batch();
-        let logits = logits_of(&b.x)?;
+        logits_of(&b.x, &mut logits)?;
         for (i, &y) in b.y.iter().enumerate() {
             let row = &logits[i * vocab..(i + 1) * vocab];
             let nll = logsumexp(row) - row[y as usize] as f64;
@@ -56,8 +61,13 @@ pub fn perplexity(
     let cfg = rt.manifest().preset(model.preset())?.config.clone();
     let mut loader =
         LmLoader::new(world, domain, seed, cfg.eval_batch, cfg.eval_ctx);
-    ppl_over_batches(&mut loader, cfg.vocab, n_batches, |x| {
-        model.logits(rt, x)
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    ppl_over_batches(&mut loader, cfg.vocab, n_batches, |x, logits| {
+        model.logits_into(rt, x, &mut outs)?;
+        // hand the freshly-written buffer out, keep the old one for the
+        // backend to refill next batch - no allocation either way
+        std::mem::swap(logits, &mut outs[0]);
+        Ok(())
     })
 }
 
@@ -74,10 +84,10 @@ pub fn perplexity_engine(
     n_batches: usize,
     seed: u64,
 ) -> Result<f64> {
-    let vocab = eng.vocab;
+    let vocab = eng.vocab();
     let mut loader = LmLoader::new(world, domain, seed, batch, ctx);
-    ppl_over_batches(&mut loader, vocab, n_batches, |x| {
-        engine_logits(eng, x, batch, ctx)
+    ppl_over_batches(&mut loader, vocab, n_batches, |x, logits| {
+        engine_logits_into(eng, x, batch, ctx, logits)
     })
 }
 

@@ -3,82 +3,115 @@
 //! model is correct when the gold option ranks first. Drives both the five
 //! zero-shot suites (Table 1) and the MMLU analog (Table 4).
 //!
-//! Cost note: a suite scores `items x options` sequences, one
-//! eval-geometry forward per batch row - on the native backend these all
-//! go through the forward-only (no-tape) model core, so zero-shot eval
-//! no longer materializes training tapes it immediately drops.
+//! # Scoring path: sessions forked off one prefilled prompt state
+//!
+//! An item's options all share the same context, so scoring used to pay
+//! `options x` full forwards over `ctx + option` rows (each padded to the
+//! eval geometry) - the shared question prefix was re-prefilled for every
+//! candidate continuation. [`eval_items`] now runs on the serving core
+//! instead: the context is prefilled **once** into a KV-pool session, and
+//! each option is scored from a session *forked* off that state
+//! ([`KvPool::fork`] copies the prefix rows), forwarding only the option's
+//! own tokens. Single-token options need no forward at all - their
+//! log-likelihood is already in the context's last-position logits.
+//! Chunked continuation is bit-exact with a monolithic forward (see
+//! `infer::core`), so forking changes the cost, not the scores (tested).
+//!
+//! Model kinds map onto the core via [`fwd::model_core_of`]: packed
+//! linears for `Quant` (the deployment artifact), dense effective weights
+//! for `Fp` and `Lora`. Numerics therefore follow the packed-engine
+//! forward (backend-vs-engine parity is covered by the integration
+//! suite).
 
 use anyhow::{bail, Result};
 
 use crate::data::corpus::World;
 use crate::data::tasks::{gen_mmlu, gen_suite, McItem, ZEROSHOT_SUITES};
-use crate::eval::fwd::ModelRef;
+use crate::eval::fwd::{model_core_of, ModelRef};
+use crate::infer::core::{ModelCore, Scratch};
+use crate::infer::kv::KvPool;
 use crate::runtime::Backend;
 use crate::util::stats::logsumexp;
 
-/// A sequence to score: ctx followed by option tokens.
-struct Scored {
-    tokens: Vec<i32>,
-    /// score positions: predict tokens[p+1] at p for p in score_from..end-1
-    score_from: usize,
+/// Per-option log-likelihoods of one item, computed from sessions forked
+/// off the item's prefilled context. `opt_logits` is a reusable buffer
+/// for the option-continuation forwards.
+pub(crate) fn score_item(core: &ModelCore, pool: &mut KvPool,
+                         sc: &mut Scratch, opt_logits: &mut Vec<f32>,
+                         item: &McItem) -> Result<Vec<f64>> {
+    let v = core.vocab;
+    if item.ctx.is_empty() {
+        bail!("multiple-choice item with empty context");
+    }
+    for opt in &item.options {
+        if opt.is_empty() {
+            bail!("multiple-choice option with no tokens");
+        }
+        if item.ctx.len() + opt.len() > core.max_ctx {
+            bail!("item length {} exceeds eval ctx {}",
+                  item.ctx.len() + opt.len(), core.max_ctx);
+        }
+        for &t in opt {
+            if t < 0 || t as usize >= v {
+                bail!("option token {t} out of range (vocab {v})");
+            }
+        }
+    }
+    // prefill the shared context once; its last-position logits score
+    // every option's first token
+    let parent = pool.lease().expect("score pool sized for parent+fork");
+    let r = (|| -> Result<Vec<f64>> {
+        core.prefill(pool.slot_mut(&parent), 0, &item.ctx, sc)?;
+        let lse0 = logsumexp(sc.logits());
+        let first_lp: Vec<f64> = item
+            .options
+            .iter()
+            .map(|o| sc.logits()[o[0] as usize] as f64 - lse0)
+            .collect();
+        let mut scores = Vec::with_capacity(item.options.len());
+        for (oi, opt) in item.options.iter().enumerate() {
+            let mut ll = first_lp[oi];
+            if opt.len() > 1 {
+                let fork = pool
+                    .fork(&parent, item.ctx.len())
+                    .expect("score pool sized for parent+fork");
+                let fr = core.forward_logits(pool.slot_mut(&fork),
+                                             item.ctx.len(), opt, sc,
+                                             opt_logits);
+                pool.release(fork);
+                fr?;
+                // position p of the continuation predicts opt[p+1]
+                for p in 0..opt.len() - 1 {
+                    let row = &opt_logits[p * v..(p + 1) * v];
+                    ll += row[opt[p + 1] as usize] as f64 - logsumexp(row);
+                }
+            }
+            scores.push(ll);
+        }
+        Ok(scores)
+    })();
+    pool.release(parent);
+    r
 }
 
-/// Batched option log-likelihood scoring.
-///
-/// Packs one sequence per batch row (padded with 0), runs the eval-geometry
-/// forward, and sums log p(option tokens). Returns per-item accuracy.
-pub fn eval_items(
-    rt: &dyn Backend,
-    model: &ModelRef,
-    items: &[McItem],
-) -> Result<f64> {
-    let cfg = rt.manifest().preset(model.preset())?.config.clone();
-    let (bsz, ctx, v) = (cfg.eval_batch, cfg.eval_ctx, cfg.vocab);
+/// Option log-likelihood scoring over a prebuilt serving core; returns
+/// per-item accuracy. See the module docs for the fork-based mechanics.
+/// Callers scoring several suites against one model build the core once
+/// (see [`eval_zeroshot`]) instead of re-materializing the weights per
+/// call.
+pub fn eval_items_core(core: &ModelCore, items: &[McItem]) -> Result<f64> {
+    // two slots: the prefilled context + one fork at a time
+    let mut pool = KvPool::for_core(core, 2);
+    let mut sc = core.scratch();
+    let mut opt_logits = Vec::new();
 
-    // flatten items into scoring jobs
-    let mut jobs: Vec<Scored> = Vec::new();
-    for it in items {
-        for opt in &it.options {
-            let mut tokens = it.ctx.clone();
-            let score_from = tokens.len() - 1;
-            tokens.extend_from_slice(opt);
-            if tokens.len() > ctx {
-                bail!("item length {} exceeds eval ctx {ctx}", tokens.len());
-            }
-            jobs.push(Scored { tokens, score_from });
-        }
-    }
-
-    let mut scores = vec![0f64; jobs.len()];
-    for (chunk_i, chunk) in jobs.chunks(bsz).enumerate() {
-        let mut x = vec![0i32; bsz * ctx];
-        for (row, job) in chunk.iter().enumerate() {
-            x[row * ctx..row * ctx + job.tokens.len()]
-                .copy_from_slice(&job.tokens);
-        }
-        let logits = model.logits(rt, &x)?;
-        for (row, job) in chunk.iter().enumerate() {
-            let mut ll = 0f64;
-            for p in job.score_from..job.tokens.len() - 1 {
-                let rowbase = (row * ctx + p) * v;
-                let lrow = &logits[rowbase..rowbase + v];
-                let y = job.tokens[p + 1] as usize;
-                ll += lrow[y] as f64 - logsumexp(lrow);
-            }
-            scores[chunk_i * bsz + row] = ll;
-        }
-    }
-
-    // rank options per item
     let mut correct = 0usize;
-    let mut cursor = 0usize;
     for it in items {
-        let k = it.options.len();
-        let s = &scores[cursor..cursor + k];
-        cursor += k;
+        let scores =
+            score_item(core, &mut pool, &mut sc, &mut opt_logits, it)?;
         let mut best = 0usize;
-        for (i, &x) in s.iter().enumerate() {
-            if x > s[best] {
+        for (i, &x) in scores.iter().enumerate() {
+            if x > scores[best] {
                 best = i;
             }
         }
@@ -89,7 +122,19 @@ pub fn eval_items(
     Ok(correct as f64 / items.len().max(1) as f64)
 }
 
+/// [`eval_items_core`] over a model reference (core built per call).
+pub fn eval_items(
+    rt: &dyn Backend,
+    model: &ModelRef,
+    items: &[McItem],
+) -> Result<f64> {
+    let info = rt.manifest().preset(model.preset())?;
+    let core = model_core_of(info, model, info.config.eval_ctx)?;
+    eval_items_core(&core, items)
+}
+
 /// Accuracy per zero-shot suite + the average (paper Table 1 columns).
+/// The serving core is built once and reused across all five suites.
 pub fn eval_zeroshot(
     rt: &dyn Backend,
     model: &ModelRef,
@@ -97,11 +142,13 @@ pub fn eval_zeroshot(
     per_suite: usize,
     seed: u64,
 ) -> Result<(Vec<(String, f64)>, f64)> {
+    let info = rt.manifest().preset(model.preset())?;
+    let core = model_core_of(info, model, info.config.eval_ctx)?;
     let mut rows = Vec::new();
     let mut total = 0f64;
     for suite in ZEROSHOT_SUITES {
         let items = gen_suite(world, suite, per_suite, seed);
-        let acc = eval_items(rt, model, &items)?;
+        let acc = eval_items_core(&core, &items)?;
         total += acc;
         rows.push((suite.to_string(), acc));
     }
@@ -118,4 +165,120 @@ pub fn eval_mmlu(
 ) -> Result<f64> {
     let items = gen_mmlu(world, 4, 24, 2, seed);
     eval_items(rt, model, &items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::init_fp_params;
+    use crate::runtime::native::NativeBackend;
+
+    /// Forked-session scoring must equal the naive path that re-runs the
+    /// full `ctx + option` sequence per candidate - bit-for-bit, since
+    /// chunked continuation is exact.
+    #[test]
+    fn forked_scoring_matches_full_reprefill_bitwise() {
+        let be = NativeBackend::new();
+        let info = be.manifest().preset("synthetic").unwrap();
+        let fpl = info.layouts.get("fp").unwrap().clone();
+        let params = init_fp_params(&fpl, 5);
+        let model = ModelRef::Fp { preset: "synthetic", params: &params };
+        let core = model_core_of(info, &model, info.config.eval_ctx)
+            .unwrap();
+        let v = core.vocab;
+
+        let items = vec![
+            McItem {
+                ctx: vec![1, 5, 9, 2],
+                options: vec![vec![3], vec![4, 7], vec![8, 11, 6, 2]],
+                correct: 1,
+            },
+            McItem {
+                ctx: vec![2; 10],
+                options: vec![vec![0, 1], vec![1, 0]],
+                correct: 0,
+            },
+        ];
+        let mut pool = KvPool::for_core(&core, 2);
+        let mut sc = core.scratch();
+        let mut buf = Vec::new();
+        for it in &items {
+            let fast =
+                score_item(&core, &mut pool, &mut sc, &mut buf, it)
+                    .unwrap();
+            // naive reference: full forward per (ctx + option) sequence
+            let mut naive_pool = KvPool::for_core(&core, 1);
+            for (oi, opt) in it.options.iter().enumerate() {
+                let seq: Vec<i32> =
+                    it.ctx.iter().chain(opt).copied().collect();
+                let l = naive_pool.lease().unwrap();
+                let mut all = Vec::new();
+                core.forward_logits(naive_pool.slot_mut(&l), 0, &seq,
+                                    &mut sc, &mut all)
+                    .unwrap();
+                naive_pool.release(l);
+                let from = it.ctx.len() - 1;
+                let mut want = 0f64;
+                for p in from..seq.len() - 1 {
+                    let row = &all[p * v..(p + 1) * v];
+                    want +=
+                        row[seq[p + 1] as usize] as f64 - logsumexp(row);
+                }
+                assert_eq!(
+                    fast[oi].to_bits(),
+                    want.to_bits(),
+                    "item option {oi}: forked ll {} != naive ll {want}",
+                    fast[oi]
+                );
+            }
+        }
+        // the fork slots were all released
+        assert_eq!(pool.n_free(), 2);
+    }
+
+    /// End-to-end accuracy sanity on every model kind the harness scores.
+    #[test]
+    fn eval_items_runs_for_all_model_kinds() {
+        use crate::coordinator::block_ap::rtn_quantize_model;
+        use crate::config::QuantScheme;
+        use crate::runtime::Backend;
+
+        let be = NativeBackend::new();
+        let cfg =
+            be.manifest().preset("synthetic").unwrap().config.clone();
+        let fpl = be.manifest().layout("synthetic", "fp").unwrap().clone();
+        let ll =
+            be.manifest().layout("synthetic", "lora").unwrap().clone();
+        let params = init_fp_params(&fpl, 8);
+        let qm = rtn_quantize_model(
+            &be, "synthetic", &params,
+            QuantScheme::new(4, cfg.default_group))
+            .unwrap();
+        let lora = vec![0.01f32; ll.size];
+        let world = World::new(cfg.vocab, 7);
+        let items = gen_suite(&world, "copy", 12, 99);
+        for model in [
+            ModelRef::Fp { preset: "synthetic", params: &params },
+            ModelRef::Quant(&qm),
+            ModelRef::Lora { qm: &qm, lora: &lora },
+        ] {
+            let acc = eval_items(&be, &model, &items).unwrap();
+            assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+        }
+    }
+
+    #[test]
+    fn oversized_items_are_rejected() {
+        let be = NativeBackend::new();
+        let info = be.manifest().preset("synthetic").unwrap();
+        let fpl = info.layouts.get("fp").unwrap().clone();
+        let params = init_fp_params(&fpl, 5);
+        let model = ModelRef::Fp { preset: "synthetic", params: &params };
+        let items = vec![McItem {
+            ctx: vec![1; info.config.eval_ctx],
+            options: vec![vec![2]],
+            correct: 0,
+        }];
+        assert!(eval_items(&be, &model, &items).is_err());
+    }
 }

@@ -1,0 +1,1146 @@
+//! The immutable half of the serving stack: [`ModelCore`] owns everything
+//! a request does **not** mutate - packed (or dense) linears, norm
+//! weights, the embedding/lm-head matrices, and precomputed RoPE sin/cos
+//! tables - and exposes the three forward primitives every serving path
+//! is built from:
+//!
+//! * [`ModelCore::step`] - one token through one sequence's KV slot
+//!   (zero-alloc solo decode; the `Engine` facade's hot path);
+//! * [`ModelCore::prefill`] / [`ModelCore::forward_logits`] - a batch of
+//!   positions of **one** sequence through each linear as a single
+//!   [`PackedLinear::matmul`] (prompt ingestion and eval forwards);
+//! * [`ModelCore::decode_batch`] - the *last* token of **many** sequences
+//!   through each linear as a single [`PackedLinear::matmul_rows`], each
+//!   sequence attending against its own [`KvPool`](crate::infer::kv)
+//!   rows (the continuous-batching scheduler's tick).
+//!
+//! A `ModelCore` is shared (`Arc`) between any number of sessions,
+//! engines, schedulers, and threads; all mutable state lives in the
+//! caller's [`Scratch`], KV slots, and positions. Numerics mirror
+//! python/compile/model.py exactly (RMSNorm, split-half RoPE, causal
+//! attention, SwiGLU).
+//!
+//! # Bit-exactness contract
+//!
+//! All three primitives produce **bit-identical** logits for the same
+//! sequence at any batch size, chunking, and worker count:
+//! per-(token, row) accumulation order is fixed across
+//! `matvec`/`matmul`/`matmul_rows` (and their dense siblings), attention
+//! is the shared [`attend_head`] in every path, and the worker pool only
+//! partitions work. This is what makes continuous batching safe to ship:
+//! co-batching requests cannot change any request's output (pinned by
+//! tests here, in `infer::sched`, in `bench::serve_throughput`, and in
+//! the integration suite).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::QuantScheme;
+use crate::infer::kv::{KvLease, KvPool, KvSlot};
+use crate::infer::qlinear::{dense_matmul, dense_matmul_rows, dense_matvec,
+                            PackedLinear};
+use crate::io::manifest::PresetInfo;
+use crate::model::quantized::QuantizedModel;
+use crate::quant::rtn::{minmax_init, quantize};
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+/// Below this many attention MACs (sequences * heads * positions *
+/// head_dim), the per-head loop stays serial: even a pool dispatch
+/// (~1-2us) would cost more than the work.
+const ATT_PAR_MIN: usize = 1 << 13;
+
+/// One transformer linear: packed low-bit (the deployment artifact) or
+/// dense f32 (full-precision eval, LoRA-merged eval). Both sides share
+/// the same batched/rows-parallel call surface so every forward primitive
+/// is linear-kind agnostic.
+pub enum Linear {
+    Packed(PackedLinear),
+    Dense { w: Vec<f32>, out_dim: usize, in_dim: usize },
+}
+
+impl Linear {
+    fn matvec_in(&self, x: &[f32], y: &mut [f32], sx: &mut Vec<f32>) {
+        match self {
+            Linear::Packed(pl) => pl.matvec_in(x, y, sx),
+            Linear::Dense { w, out_dim, in_dim } => {
+                dense_matvec(w, *out_dim, *in_dim, x, y)
+            }
+        }
+    }
+
+    fn matmul(&self, xs: &[f32], n: usize, ys: &mut [f32]) {
+        match self {
+            Linear::Packed(pl) => pl.matmul(xs, n, ys),
+            Linear::Dense { w, out_dim, in_dim } => {
+                dense_matmul(w, *out_dim, *in_dim, xs, n, ys)
+            }
+        }
+    }
+
+    fn matmul_rows(&self, xs: &[f32], n: usize, ys: &mut [f32],
+                   tmp: &mut Vec<f32>, sx: &mut Vec<f32>) {
+        match self {
+            Linear::Packed(pl) => pl.matmul_rows(xs, n, ys, tmp, sx),
+            Linear::Dense { w, out_dim, in_dim } => {
+                dense_matmul_rows(w, *out_dim, *in_dim, xs, n, ys, tmp)
+            }
+        }
+    }
+}
+
+pub(crate) struct BlockW {
+    pub(crate) attn_norm: Vec<f32>,
+    pub(crate) mlp_norm: Vec<f32>,
+    /// q, k, v, o, gate, up, down
+    pub(crate) lins: Vec<Linear>,
+}
+
+/// Persistent intermediate buffers for one caller (engine, scheduler, or
+/// eval loop). Solo decode (`ModelCore::step`) touches only the
+/// fixed-size fields and allocates nothing in steady state; the `p_*`
+/// prefill buffers grow to the longest chunk seen, the `b_*` batch
+/// buffers to the largest decode batch, and both are then re-used - so a
+/// steady-state scheduler tick is allocation-free too.
+pub struct Scratch {
+    vocab: usize,
+    hn: Vec<f32>,       // dim
+    q: Vec<f32>,        // dim
+    ctx: Vec<f32>,      // dim
+    attn_out: Vec<f32>, // dim
+    gate: Vec<f32>,     // inter
+    up: Vec<f32>,       // inter
+    down: Vec<f32>,     // dim
+    h: Vec<f32>,        // dim
+    pub(crate) logits: Vec<f32>, // vocab
+    /// per-head attention scores: n_heads rows of max_ctx
+    att: Vec<f32>,
+    /// shared group-sum scratch for `PackedLinear::matvec_in`
+    sx: Vec<f32>,
+    // batched buffers, row-major (n * width): prefill tokens or decode
+    // batch rows
+    p_h: Vec<f32>,
+    p_hn: Vec<f32>,
+    p_q: Vec<f32>,
+    p_ctx: Vec<f32>,
+    p_attn: Vec<f32>,
+    p_gate: Vec<f32>,
+    p_up: Vec<f32>,
+    p_down: Vec<f32>,
+    // decode-batch staging: per-tick K/V rows before the per-slot
+    // scatter, per-(sequence, head) score rows, per-sequence logits
+    b_k: Vec<f32>,
+    b_v: Vec<f32>,
+    b_att: Vec<f32>,
+    pub(crate) b_logits: Vec<f32>,
+    // row-major scratch + per-token group sums for the *_rows kernels
+    mm_tmp: Vec<f32>,
+    mm_sx: Vec<f32>,
+}
+
+impl Scratch {
+    pub(crate) fn new(dim: usize, inter: usize, vocab: usize,
+                      n_heads: usize, max_ctx: usize) -> Scratch {
+        Scratch {
+            vocab,
+            hn: vec![0.0; dim],
+            q: vec![0.0; dim],
+            ctx: vec![0.0; dim],
+            attn_out: vec![0.0; dim],
+            gate: vec![0.0; inter],
+            up: vec![0.0; inter],
+            down: vec![0.0; dim],
+            h: vec![0.0; dim],
+            logits: vec![0.0; vocab],
+            att: vec![0.0; n_heads * max_ctx],
+            sx: Vec::new(),
+            p_h: Vec::new(),
+            p_hn: Vec::new(),
+            p_q: Vec::new(),
+            p_ctx: Vec::new(),
+            p_attn: Vec::new(),
+            p_gate: Vec::new(),
+            p_up: Vec::new(),
+            p_down: Vec::new(),
+            b_k: Vec::new(),
+            b_v: Vec::new(),
+            b_att: Vec::new(),
+            b_logits: Vec::new(),
+            mm_tmp: Vec::new(),
+            mm_sx: Vec::new(),
+        }
+    }
+
+    /// Logits of the last solo `step`/`prefill` call.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Logits row `i` of the last `decode_batch` call.
+    pub fn batch_logits(&self, i: usize) -> &[f32] {
+        &self.b_logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+}
+
+/// The immutable, shareable model: weights + geometry + RoPE tables.
+/// See the module docs for the forward primitives and the bit-exactness
+/// contract.
+pub struct ModelCore {
+    pub dim: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub inter: usize,
+    pub vocab: usize,
+    /// KV capacity per sequence (slot size in every pool built for this
+    /// core).
+    pub max_ctx: usize,
+    #[allow(dead_code)]
+    pub(crate) rope_theta: f64,
+    pub(crate) norm_eps: f32,
+    pub(crate) embed: Vec<f32>,
+    pub(crate) final_norm: Vec<f32>,
+    pub(crate) head: Vec<f32>,
+    pub(crate) blocks: Vec<BlockW>,
+    /// precomputed RoPE tables, (max_ctx * head_dim/2) each
+    pub(crate) rope_cos: Vec<f32>,
+    pub(crate) rope_sin: Vec<f32>,
+}
+
+impl ModelCore {
+    /// Build from the in-memory quantized model + manifest preset info
+    /// (the deployment path: packed low-bit linears).
+    pub fn from_quantized(qm: &QuantizedModel, info: &PresetInfo,
+                          max_ctx: usize) -> Result<ModelCore> {
+        let cfg = &info.config;
+        let g = qm.scheme.group;
+        let wql = info.layouts.get("wq")
+            .ok_or_else(|| anyhow!("missing wq layout"))?;
+        let qpl = info.layouts.get(&format!("qp_g{g}"))
+            .ok_or_else(|| anyhow!("missing qp_g{g} layout"))?;
+        let fprl = info.layouts.get("fpr")
+            .ok_or_else(|| anyhow!("missing fpr layout"))?;
+
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            let mut lins = Vec::with_capacity(7);
+            for (name, _, _) in cfg.linears() {
+                let we = wql.entry(&format!("blocks.{b}.{name}"))?;
+                let (out_d, in_d) = (we.shape[0], we.shape[1]);
+                let w_int = wql.slice(&qm.wq, &format!("blocks.{b}.{name}"))?;
+                let s = qpl.slice(&qm.qp, &format!("s.blocks.{b}.{name}"))?;
+                let z = qpl.slice(&qm.qp, &format!("z.blocks.{b}.{name}"))?;
+                lins.push(Linear::Packed(PackedLinear::pack(
+                    w_int, out_d, in_d, s, z, qm.scheme)?));
+            }
+            blocks.push(BlockW {
+                attn_norm: fprl
+                    .slice(&qm.fpr, &format!("blocks.{b}.attn_norm"))?
+                    .to_vec(),
+                mlp_norm: fprl
+                    .slice(&qm.fpr, &format!("blocks.{b}.mlp_norm"))?
+                    .to_vec(),
+                lins,
+            });
+        }
+        Ok(ModelCore::assemble(
+            cfg.dim,
+            cfg.n_heads,
+            cfg.head_dim,
+            cfg.inter,
+            cfg.vocab,
+            max_ctx,
+            cfg.rope_theta,
+            cfg.norm_eps as f32,
+            fprl.slice(&qm.fpr, "embed")?.to_vec(),
+            fprl.slice(&qm.fpr, "final_norm")?.to_vec(),
+            fprl.slice(&qm.fpr, "head")?.to_vec(),
+            blocks,
+        ))
+    }
+
+    /// Build a randomly-initialized core directly from shapes, no
+    /// manifest or artifacts needed: weights are RTN-quantized to `scheme`
+    /// and packed exactly like the artifact path. This is the harness
+    /// behind the serving benches and the batching/threading tests.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        dim: usize,
+        n_heads: usize,
+        head_dim: usize,
+        inter: usize,
+        vocab: usize,
+        n_layers: usize,
+        scheme: QuantScheme,
+        max_ctx: usize,
+        seed: u64,
+    ) -> Result<ModelCore> {
+        if n_heads * head_dim != dim {
+            bail!("n_heads {n_heads} * head_dim {head_dim} != dim {dim}");
+        }
+        if dim % scheme.group != 0 || inter % scheme.group != 0 {
+            bail!("group {} must divide dim {dim} and inter {inter}",
+                  scheme.group);
+        }
+        let mut rng = Rng::new(seed);
+        let shapes = [
+            (dim, dim),   // attn.q
+            (dim, dim),   // attn.k
+            (dim, dim),   // attn.v
+            (dim, dim),   // attn.o
+            (inter, dim), // mlp.gate
+            (inter, dim), // mlp.up
+            (dim, inter), // mlp.down
+        ];
+        let mut blocks = Vec::with_capacity(n_layers);
+        let mut wbuf: Vec<f32> = Vec::new();
+        for _ in 0..n_layers {
+            let mut lins = Vec::with_capacity(7);
+            for &(o, i) in &shapes {
+                wbuf.clear();
+                wbuf.resize(o * i, 0.0);
+                rng.fill_normal(&mut wbuf, 0.0, 0.05);
+                let gp = minmax_init(&wbuf, o, i, scheme);
+                let wi = quantize(&wbuf, &gp, scheme);
+                lins.push(Linear::Packed(PackedLinear::pack(
+                    &wi, o, i, &gp.s, &gp.z, scheme)?));
+            }
+            blocks.push(BlockW {
+                attn_norm: vec![1.0; dim],
+                mlp_norm: vec![1.0; dim],
+                lins,
+            });
+        }
+        let mut embed = vec![0f32; vocab * dim];
+        rng.fill_normal(&mut embed, 0.0, 0.02);
+        let mut head = vec![0f32; vocab * dim];
+        rng.fill_normal(&mut head, 0.0, 0.02);
+        Ok(ModelCore::assemble(dim, n_heads, head_dim, inter, vocab,
+                               max_ctx, 10000.0, 1e-5, embed,
+                               vec![1.0; dim], head, blocks))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn assemble(
+        dim: usize,
+        n_heads: usize,
+        head_dim: usize,
+        inter: usize,
+        vocab: usize,
+        max_ctx: usize,
+        rope_theta: f64,
+        norm_eps: f32,
+        embed: Vec<f32>,
+        final_norm: Vec<f32>,
+        head: Vec<f32>,
+        blocks: Vec<BlockW>,
+    ) -> ModelCore {
+        let (rope_cos, rope_sin) = rope_tables(max_ctx, head_dim,
+                                               rope_theta);
+        ModelCore {
+            dim,
+            n_heads,
+            head_dim,
+            inter,
+            vocab,
+            max_ctx,
+            rope_theta,
+            norm_eps,
+            embed,
+            final_norm,
+            head,
+            blocks,
+            rope_cos,
+            rope_sin,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// A scratch sized for this core.
+    pub fn scratch(&self) -> Scratch {
+        Scratch::new(self.dim, self.inter, self.vocab, self.n_heads,
+                     self.max_ctx)
+    }
+
+    fn check_token(&self, tok: i32) -> Result<()> {
+        if tok < 0 || tok as usize >= self.vocab {
+            bail!("token {tok} out of range (vocab {})", self.vocab);
+        }
+        Ok(())
+    }
+
+    /// One decode step of one sequence: feed `tok` at `pos` against the
+    /// slot's rows `[0, pos]`; logits land in `sc.logits`. The caller
+    /// owns and advances the position. Steady-state this allocates
+    /// nothing.
+    pub fn step(&self, slot: &mut KvSlot, pos: usize, tok: i32,
+                sc: &mut Scratch) -> Result<()> {
+        self.step_impl(slot, pos, tok, sc, None)
+    }
+
+    pub(crate) fn step_impl(&self, slot: &mut KvSlot, pos: usize,
+                            tok: i32, sc: &mut Scratch,
+                            mut trace: Option<&mut Vec<Vec<f32>>>)
+                            -> Result<()> {
+        if pos >= self.max_ctx {
+            bail!("KV cache full ({} positions)", self.max_ctx);
+        }
+        self.check_token(tok)?;
+        let d = self.dim;
+        let nh = self.n_heads;
+        let hd = self.head_dim;
+        let it = self.inter;
+        let eps = self.norm_eps;
+        let mc = self.max_ctx;
+        let p = pos;
+        let Scratch {
+            hn, q, ctx, attn_out, gate, up, down, h, logits, att, sx, ..
+        } = sc;
+
+        h.copy_from_slice(
+            &self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            rms_norm(&h[..], &blk.attn_norm, eps, &mut hn[..]);
+            {
+                let kc = &mut slot.k[bi];
+                blk.lins[0].matvec_in(&hn[..], &mut q[..], sx);
+                blk.lins[1].matvec_in(&hn[..], &mut kc[p * d..(p + 1) * d],
+                                      sx);
+                rope_apply(&mut kc[p * d..(p + 1) * d], p, nh, hd,
+                           &self.rope_cos, &self.rope_sin);
+            }
+            blk.lins[2].matvec_in(
+                &hn[..], &mut slot.v[bi][p * d..(p + 1) * d], sx);
+            rope_apply(&mut q[..], p, nh, hd, &self.rope_cos,
+                       &self.rope_sin);
+            let kcs: &[f32] = &slot.k[bi];
+            let vcs: &[f32] = &slot.v[bi];
+            let qv: &[f32] = &q[..];
+            // chunk i covers the same heads of both the context output and
+            // the per-head score scratch; serial for short contexts
+            let hpc = if nh * (p + 1) * hd < ATT_PAR_MIN {
+                nh
+            } else {
+                threads::chunk_len(nh)
+            };
+            threads::par_chunks2_mut(
+                &mut ctx[..],
+                hpc * hd,
+                &mut att[..],
+                hpc * mc,
+                |ci, cxc, atc| {
+                    for (j, (ch, ath)) in cxc
+                        .chunks_mut(hd)
+                        .zip(atc.chunks_mut(mc))
+                        .enumerate()
+                    {
+                        let hh = ci * hpc + j;
+                        attend_head(&qv[hh * hd..(hh + 1) * hd], kcs, vcs,
+                                    d, hh, hd, p, scale, ath, ch);
+                    }
+                },
+            );
+            blk.lins[3].matvec_in(&ctx[..], &mut attn_out[..], sx);
+            for i in 0..d {
+                h[i] += attn_out[i];
+            }
+            rms_norm(&h[..], &blk.mlp_norm, eps, &mut hn[..]);
+            blk.lins[4].matvec_in(&hn[..], &mut gate[..], sx);
+            blk.lins[5].matvec_in(&hn[..], &mut up[..], sx);
+            for i in 0..it {
+                let gx = gate[i];
+                let silu = gx / (1.0 + (-gx).exp());
+                gate[i] = silu * up[i];
+            }
+            blk.lins[6].matvec_in(&gate[..], &mut down[..], sx);
+            for i in 0..d {
+                h[i] += down[i];
+            }
+            if let Some(tr) = trace.as_mut() {
+                tr.push(h.to_vec());
+            }
+        }
+        rms_norm(&h[..], &self.final_norm[..], eps, &mut hn[..]);
+        dense_matvec(&self.head[..], logits.len(), d, &hn[..],
+                     &mut logits[..]);
+        Ok(())
+    }
+
+    /// Feed `tokens` at positions `[pos, pos+n)` of one sequence: all
+    /// positions run through each block's linears as one batched matmul,
+    /// the K/V matmuls write straight into the slot rows, and the final
+    /// per-token hidden states land in `sc.p_h`. Logits of the *last*
+    /// position land in `sc.logits`. Bit-exact with a sequential `step`
+    /// loop at any chunking (prefilling `[0,8)` then `[8,12)` equals
+    /// prefilling `[0,12)` equals 12 steps - tested), which is what makes
+    /// the scheduler's chunked admission and `eval_items`' prefix forks
+    /// exact.
+    pub fn prefill(&self, slot: &mut KvSlot, pos: usize, tokens: &[i32],
+                   sc: &mut Scratch) -> Result<()> {
+        self.forward_rows(slot, pos, tokens, sc)?;
+        let n = tokens.len();
+        let d = self.dim;
+        let Scratch { p_h, hn, logits, .. } = sc;
+        rms_norm(&p_h[(n - 1) * d..n * d], &self.final_norm[..],
+                 self.norm_eps, &mut hn[..]);
+        dense_matvec(&self.head[..], self.vocab, d, &hn[..],
+                     &mut logits[..]);
+        Ok(())
+    }
+
+    /// Evaluation forward: like [`ModelCore::prefill`] but writes logits
+    /// for *every* fed position (token-major, n * vocab) into `out`.
+    pub fn forward_logits(&self, slot: &mut KvSlot, pos: usize,
+                          tokens: &[i32], sc: &mut Scratch,
+                          out: &mut Vec<f32>) -> Result<()> {
+        out.resize(tokens.len() * self.vocab, 0.0);
+        self.forward_logits_slice(slot, pos, tokens, sc, &mut out[..])
+    }
+
+    /// [`ModelCore::forward_logits`] into a caller-provided slice (len
+    /// n * vocab, fully overwritten) - lets batched eval loops write each
+    /// row's logits straight into its place in a larger buffer with no
+    /// per-row allocation or copy.
+    pub fn forward_logits_slice(&self, slot: &mut KvSlot, pos: usize,
+                                tokens: &[i32], sc: &mut Scratch,
+                                out: &mut [f32]) -> Result<()> {
+        let n = tokens.len();
+        let d = self.dim;
+        let v = self.vocab;
+        if out.len() != n * v {
+            bail!("forward_logits: out has {} elems, want {n}x{v}",
+                  out.len());
+        }
+        self.forward_rows(slot, pos, tokens, sc)?;
+        let Scratch { p_h, p_hn, .. } = sc;
+        for t in 0..n {
+            rms_norm(&p_h[t * d..(t + 1) * d], &self.final_norm[..],
+                     self.norm_eps, &mut p_hn[t * d..(t + 1) * d]);
+        }
+        dense_matmul(&self.head[..], v, d, &p_hn[..n * d], n, out);
+        Ok(())
+    }
+
+    /// Batched single-sequence core behind `prefill`/`forward_logits`:
+    /// runs `n` positions through every block, filling slot rows
+    /// `[pos, pos+n)` in one pass; final per-token hidden states land in
+    /// `sc.p_h`.
+    fn forward_rows(&self, slot: &mut KvSlot, pos: usize, tokens: &[i32],
+                    sc: &mut Scratch) -> Result<()> {
+        let n = tokens.len();
+        if n == 0 {
+            bail!("empty prefill");
+        }
+        if pos + n > self.max_ctx {
+            bail!(
+                "prompt of {n} tokens overflows KV cache ({} used of {})",
+                pos, self.max_ctx
+            );
+        }
+        for &t in tokens {
+            self.check_token(t)?;
+        }
+        let d = self.dim;
+        let nh = self.n_heads;
+        let hd = self.head_dim;
+        let it = self.inter;
+        let eps = self.norm_eps;
+        let p0 = pos;
+        let Scratch {
+            p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down, ..
+        } = sc;
+        p_h.resize(n * d, 0.0);
+        p_hn.resize(n * d, 0.0);
+        p_q.resize(n * d, 0.0);
+        p_ctx.resize(n * d, 0.0);
+        p_attn.resize(n * d, 0.0);
+        p_gate.resize(n * it, 0.0);
+        p_up.resize(n * it, 0.0);
+        p_down.resize(n * d, 0.0);
+
+        for (t, &tok) in tokens.iter().enumerate() {
+            p_h[t * d..(t + 1) * d].copy_from_slice(
+                &self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for t in 0..n {
+                rms_norm(&p_h[t * d..(t + 1) * d], &blk.attn_norm, eps,
+                         &mut p_hn[t * d..(t + 1) * d]);
+            }
+            blk.lins[0].matmul(&p_hn[..n * d], n, &mut p_q[..n * d]);
+            {
+                let kc = &mut slot.k[bi];
+                blk.lins[1].matmul(&p_hn[..n * d], n,
+                                   &mut kc[p0 * d..(p0 + n) * d]);
+                for t in 0..n {
+                    rope_apply(&mut kc[(p0 + t) * d..(p0 + t + 1) * d],
+                               p0 + t, nh, hd, &self.rope_cos,
+                               &self.rope_sin);
+                }
+            }
+            blk.lins[2].matmul(&p_hn[..n * d], n,
+                               &mut slot.v[bi][p0 * d..(p0 + n) * d]);
+            for t in 0..n {
+                rope_apply(&mut p_q[t * d..(t + 1) * d], p0 + t, nh, hd,
+                           &self.rope_cos, &self.rope_sin);
+            }
+            let kcs: &[f32] = &slot.k[bi];
+            let vcs: &[f32] = &slot.v[bi];
+            let qv: &[f32] = &p_q[..];
+            // causal attention over the batch, token-chunked across
+            // threads; workers allocate their own score buffers (prefill
+            // is not the zero-alloc path)
+            let tpc = if n * nh * (p0 + n) * hd < ATT_PAR_MIN {
+                n
+            } else {
+                threads::chunk_len(n)
+            };
+            threads::par_chunks_mut(&mut p_ctx[..n * d], tpc * d,
+                                    |ci, cxc| {
+                let t0 = ci * tpc;
+                let mut scores = vec![0f32; p0 + n];
+                for (tl, ctx_t) in cxc.chunks_mut(d).enumerate() {
+                    let t = t0 + tl;
+                    let last = p0 + t; // attends to cache rows 0..=last
+                    for hh in 0..nh {
+                        attend_head(
+                            &qv[t * d + hh * hd..t * d + (hh + 1) * hd],
+                            kcs, vcs, d, hh, hd, last, scale,
+                            &mut scores,
+                            &mut ctx_t[hh * hd..(hh + 1) * hd],
+                        );
+                    }
+                }
+            });
+            blk.lins[3].matmul(&p_ctx[..n * d], n, &mut p_attn[..n * d]);
+            for i in 0..n * d {
+                p_h[i] += p_attn[i];
+            }
+            for t in 0..n {
+                rms_norm(&p_h[t * d..(t + 1) * d], &blk.mlp_norm, eps,
+                         &mut p_hn[t * d..(t + 1) * d]);
+            }
+            blk.lins[4].matmul(&p_hn[..n * d], n, &mut p_gate[..n * it]);
+            blk.lins[5].matmul(&p_hn[..n * d], n, &mut p_up[..n * it]);
+            for i in 0..n * it {
+                let gx = p_gate[i];
+                let silu = gx / (1.0 + (-gx).exp());
+                p_gate[i] = silu * p_up[i];
+            }
+            blk.lins[6].matmul(&p_gate[..n * it], n, &mut p_down[..n * d]);
+            for i in 0..n * d {
+                p_h[i] += p_down[i];
+            }
+        }
+        Ok(())
+    }
+
+    /// One continuous-batching decode tick: feed `toks[i]` at
+    /// `batch[i] = (lease, pos)` for every live sequence, running **one
+    /// rows-parallel matmul per linear across the whole batch** (the
+    /// weight unpack that solo decode pays per sequence per token
+    /// amortizes to ~1/batch) while each sequence attends against its own
+    /// slot's rows. Per-sequence logits land in `sc.b_logits`
+    /// ([`Scratch::batch_logits`]); callers advance each position.
+    ///
+    /// Bit-exactness: row i's logits are identical at every batch size -
+    /// including batch 1 - to a solo [`ModelCore::step`] of the same
+    /// sequence, at any thread count (see module docs; tested).
+    pub fn decode_batch(&self, pool: &mut KvPool,
+                        batch: &[(&KvLease, usize)], toks: &[i32],
+                        sc: &mut Scratch) -> Result<()> {
+        let nb = batch.len();
+        if nb != toks.len() {
+            bail!("decode_batch: {} leases vs {} tokens", nb, toks.len());
+        }
+        if nb == 0 {
+            return Ok(());
+        }
+        for &(_, pos) in batch {
+            if pos >= self.max_ctx {
+                bail!("KV cache full ({} positions)", self.max_ctx);
+            }
+        }
+        for &t in toks {
+            self.check_token(t)?;
+        }
+        let d = self.dim;
+        let nh = self.n_heads;
+        let hd = self.head_dim;
+        let it = self.inter;
+        let eps = self.norm_eps;
+        let mc = self.max_ctx;
+        let Scratch {
+            p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down,
+            b_k, b_v, b_att, b_logits, mm_tmp, mm_sx, ..
+        } = sc;
+        p_h.resize(nb * d, 0.0);
+        p_hn.resize(nb * d, 0.0);
+        p_q.resize(nb * d, 0.0);
+        p_ctx.resize(nb * d, 0.0);
+        p_attn.resize(nb * d, 0.0);
+        p_gate.resize(nb * it, 0.0);
+        p_up.resize(nb * it, 0.0);
+        p_down.resize(nb * d, 0.0);
+        b_k.resize(nb * d, 0.0);
+        b_v.resize(nb * d, 0.0);
+        b_att.resize(nb * nh * mc, 0.0);
+        b_logits.resize(nb * self.vocab, 0.0);
+
+        for (i, &tok) in toks.iter().enumerate() {
+            p_h[i * d..(i + 1) * d].copy_from_slice(
+                &self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            for i in 0..nb {
+                rms_norm(&p_h[i * d..(i + 1) * d], &blk.attn_norm, eps,
+                         &mut p_hn[i * d..(i + 1) * d]);
+            }
+            blk.lins[0].matmul_rows(&p_hn[..nb * d], nb, &mut p_q[..nb * d],
+                                    mm_tmp, mm_sx);
+            blk.lins[1].matmul_rows(&p_hn[..nb * d], nb, &mut b_k[..nb * d],
+                                    mm_tmp, mm_sx);
+            blk.lins[2].matmul_rows(&p_hn[..nb * d], nb, &mut b_v[..nb * d],
+                                    mm_tmp, mm_sx);
+            // scatter each sequence's K/V row into its own slot at its
+            // own position (RoPE on K and Q at that position)
+            for (i, &(lease, pos)) in batch.iter().enumerate() {
+                let slot = pool.slot_mut(lease);
+                let krow = &mut slot.k[bi][pos * d..(pos + 1) * d];
+                krow.copy_from_slice(&b_k[i * d..(i + 1) * d]);
+                rope_apply(krow, pos, nh, hd, &self.rope_cos,
+                           &self.rope_sin);
+                slot.v[bi][pos * d..(pos + 1) * d]
+                    .copy_from_slice(&b_v[i * d..(i + 1) * d]);
+                rope_apply(&mut p_q[i * d..(i + 1) * d], pos, nh, hd,
+                           &self.rope_cos, &self.rope_sin);
+            }
+            // per-(sequence, head) attention against each sequence's own
+            // rows; chunk granularity is one head, like solo decode
+            let pool_ref: &KvPool = pool;
+            let qv: &[f32] = &p_q[..];
+            let total_mac: usize =
+                batch.iter().map(|&(_, p)| nh * (p + 1) * hd).sum();
+            let attend_one = |j: usize, ch: &mut [f32], ath: &mut [f32]| {
+                let (i, hh) = (j / nh, j % nh);
+                let (lease, pos) = batch[i];
+                let slot = pool_ref.slot(lease);
+                attend_head(&qv[i * d + hh * hd..i * d + (hh + 1) * hd],
+                            &slot.k[bi], &slot.v[bi], d, hh, hd, pos,
+                            scale, ath, ch);
+            };
+            if total_mac < ATT_PAR_MIN {
+                for (j, (ch, ath)) in p_ctx[..nb * d]
+                    .chunks_mut(hd)
+                    .zip(b_att[..nb * nh * mc].chunks_mut(mc))
+                    .enumerate()
+                {
+                    attend_one(j, ch, ath);
+                }
+            } else {
+                threads::par_chunks2_mut(
+                    &mut p_ctx[..nb * d], hd,
+                    &mut b_att[..nb * nh * mc], mc,
+                    |j, ch, ath| attend_one(j, ch, ath),
+                );
+            }
+            blk.lins[3].matmul_rows(&p_ctx[..nb * d], nb,
+                                    &mut p_attn[..nb * d], mm_tmp, mm_sx);
+            for i in 0..nb * d {
+                p_h[i] += p_attn[i];
+            }
+            for i in 0..nb {
+                rms_norm(&p_h[i * d..(i + 1) * d], &blk.mlp_norm, eps,
+                         &mut p_hn[i * d..(i + 1) * d]);
+            }
+            blk.lins[4].matmul_rows(&p_hn[..nb * d], nb,
+                                    &mut p_gate[..nb * it], mm_tmp, mm_sx);
+            blk.lins[5].matmul_rows(&p_hn[..nb * d], nb,
+                                    &mut p_up[..nb * it], mm_tmp, mm_sx);
+            for i in 0..nb * it {
+                let gx = p_gate[i];
+                let silu = gx / (1.0 + (-gx).exp());
+                p_gate[i] = silu * p_up[i];
+            }
+            blk.lins[6].matmul_rows(&p_gate[..nb * it], nb,
+                                    &mut p_down[..nb * d], mm_tmp, mm_sx);
+            for i in 0..nb * d {
+                p_h[i] += p_down[i];
+            }
+        }
+        for i in 0..nb {
+            rms_norm(&p_h[i * d..(i + 1) * d], &self.final_norm[..], eps,
+                     &mut p_hn[i * d..(i + 1) * d]);
+        }
+        dense_matmul_rows(&self.head[..], self.vocab, d, &p_hn[..nb * d],
+                          nb, &mut b_logits[..nb * self.vocab], mm_tmp);
+        Ok(())
+    }
+}
+
+/// Softmax attention for one head over KV-slot rows 0..=`last`: scores
+/// go through `scores` scratch (len >= last+1), the weighted value sum
+/// lands in `ch` (len head_dim). Shared by the solo-decode, batched
+/// prefill, and batched-decode paths so their numerics can never diverge
+/// (every cross-path bit-exactness test depends on this).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_head(qh: &[f32], kcs: &[f32], vcs: &[f32], d: usize,
+                          hh: usize, hd: usize, last: usize, scale: f32,
+                          scores: &mut [f32], ch: &mut [f32]) {
+    let sc = &mut scores[..last + 1];
+    let mut mx = f32::NEG_INFINITY;
+    for (u, sv) in sc.iter_mut().enumerate() {
+        let kh = &kcs[u * d + hh * hd..u * d + (hh + 1) * hd];
+        let mut s = 0f32;
+        for i in 0..hd {
+            s += qh[i] * kh[i];
+        }
+        let s = s * scale;
+        mx = mx.max(s);
+        *sv = s;
+    }
+    let mut zsum = 0f32;
+    for s in sc.iter_mut() {
+        *s = (*s - mx).exp();
+        zsum += *s;
+    }
+    ch.fill(0.0);
+    for (u, &pr) in sc.iter().enumerate() {
+        let vh = &vcs[u * d + hh * hd..u * d + (hh + 1) * hd];
+        let w = pr / zsum;
+        for i in 0..hd {
+            ch[i] += w * vh[i];
+        }
+    }
+}
+
+/// RMSNorm matching model.py::rms_norm.
+pub(crate) fn rms_norm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let mut ss = 0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / x.len() as f32 + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// Precompute split-half RoPE sin/cos for every position, matching the
+/// per-step powf formula bit-for-bit (same f64 math, cast once).
+pub(crate) fn rope_tables(max_ctx: usize, head_dim: usize, theta: f64)
+                          -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0f32; max_ctx * half];
+    let mut sin = vec![0f32; max_ctx * half];
+    for pos in 0..max_ctx {
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
+            let ang = pos as f64 * freq;
+            sin[pos * half + i] = ang.sin() as f32;
+            cos[pos * half + i] = ang.cos() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Split-half RoPE matching model.py::apply_rope, reading the precomputed
+/// tables instead of recomputing powf per call.
+pub(crate) fn rope_apply(v: &mut [f32], pos: usize, n_heads: usize,
+                         head_dim: usize, cos: &[f32], sin: &[f32]) {
+    let half = head_dim / 2;
+    let c = &cos[pos * half..(pos + 1) * half];
+    let s = &sin[pos * half..(pos + 1) * half];
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let a = v[base + i];
+            let b = v[base + half + i];
+            v[base + i] = a * c[i] - b * s[i];
+            v[base + half + i] = b * c[i] + a * s[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::engine::Engine;
+    use crate::util::threads::with_threads;
+    use std::sync::Arc;
+
+    const DIM: usize = 32;
+    const NH: usize = 4;
+    const HD: usize = 8;
+    const INTER: usize = 64;
+    const VOCAB: usize = 96;
+    const LAYERS: usize = 2;
+    const CTX: usize = 24;
+
+    fn core(seed: u64) -> Arc<ModelCore> {
+        Arc::new(ModelCore::synthetic(DIM, NH, HD, INTER, VOCAB, LAYERS,
+                                      QuantScheme::new(2, 32), CTX, seed)
+            .unwrap())
+    }
+
+    fn toks(n: usize, stride: usize) -> Vec<i32> {
+        (0..n).map(|i| ((i * stride + 5) % VOCAB) as i32).collect()
+    }
+
+    /// The tentpole determinism guarantee: per-sequence logits from
+    /// `decode_batch` are bit-identical to a solo `Engine` run of the
+    /// same prompt, at every batch size and thread count, even with
+    /// sequences at *different* positions in the batch.
+    #[test]
+    fn decode_batch_is_bitexact_with_solo_engine() {
+        let c = core(21);
+        // five prompts of different lengths (staggered positions)
+        let prompts: Vec<Vec<i32>> =
+            (0..5).map(|i| toks(4 + 2 * i, 7 + i)).collect();
+        let feed = [3i32, 11, 29, 41];
+
+        // reference: solo engines, per-step logits after each fed token
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for p in &prompts {
+            let mut e = Engine::from_core(c.clone());
+            e.prefill(p).unwrap();
+            let mut per_step = Vec::new();
+            for &t in &feed {
+                per_step.push(e.step(t).unwrap());
+            }
+            want.push(per_step);
+        }
+
+        for &bsz in &[1usize, 2, 5] {
+            for &nt in &[1usize, 4] {
+                with_threads(nt, || {
+                    let mut pool = KvPool::for_core(&c, bsz);
+                    let mut sc = c.scratch();
+                    let mut leases = Vec::new();
+                    let mut poss = Vec::new();
+                    for p in prompts.iter().take(bsz) {
+                        let l = pool.lease().unwrap();
+                        // chunked prefill (3-token chunks) must also be
+                        // exact vs the solo engine's one-shot prefill
+                        let mut pos = 0usize;
+                        for ch in p.chunks(3) {
+                            c.prefill(pool.slot_mut(&l), pos, ch, &mut sc)
+                                .unwrap();
+                            pos += ch.len();
+                        }
+                        leases.push(l);
+                        poss.push(pos);
+                    }
+                    for (si, &t) in feed.iter().enumerate() {
+                        let batch: Vec<(&KvLease, usize)> = leases
+                            .iter()
+                            .zip(&poss)
+                            .map(|(l, &p)| (l, p))
+                            .collect();
+                        let toks: Vec<i32> = vec![t; bsz];
+                        c.decode_batch(&mut pool, &batch, &toks, &mut sc)
+                            .unwrap();
+                        drop(batch);
+                        for i in 0..bsz {
+                            poss[i] += 1;
+                            let got = sc.batch_logits(i);
+                            let exp = &want[i][si];
+                            assert!(
+                                got.iter().zip(exp).all(
+                                    |(a, b)| a.to_bits() == b.to_bits()),
+                                "batch {bsz} threads {nt} seq {i} \
+                                 step {si}: logits diverge from solo"
+                            );
+                        }
+                    }
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_one_shot() {
+        let c = core(22);
+        let prompt = toks(11, 13);
+        let mut sc = c.scratch();
+        let mut pool = KvPool::for_core(&c, 2);
+        let a = pool.lease().unwrap();
+        c.prefill(pool.slot_mut(&a), 0, &prompt, &mut sc).unwrap();
+        let one_shot = sc.logits().to_vec();
+        let b = pool.lease().unwrap();
+        let mut pos = 0usize;
+        for ch in prompt.chunks(4) {
+            c.prefill(pool.slot_mut(&b), pos, ch, &mut sc).unwrap();
+            pos += ch.len();
+        }
+        assert_eq!(one_shot, sc.logits());
+        // and the caches themselves are identical
+        for bi in 0..c.n_layers() {
+            let (sa, sb) = (pool.slot(&a), pool.slot(&b));
+            let n = prompt.len() * c.dim;
+            assert_eq!(sa.k[bi][..n], sb.k[bi][..n]);
+            assert_eq!(sa.v[bi][..n], sb.v[bi][..n]);
+        }
+    }
+
+    #[test]
+    fn forked_slot_continues_bitexactly() {
+        let c = core(23);
+        let prompt = toks(9, 11);
+        let cont = toks(5, 17);
+        let mut sc = c.scratch();
+        // reference: one slot straight through prompt + continuation
+        let mut pool = KvPool::for_core(&c, 3);
+        let l = pool.lease().unwrap();
+        c.prefill(pool.slot_mut(&l), 0, &prompt, &mut sc).unwrap();
+        let mut fork_out = Vec::new();
+        let f = pool.fork(&l, prompt.len()).unwrap();
+        c.forward_logits(pool.slot_mut(&f), prompt.len(), &cont, &mut sc,
+                         &mut fork_out)
+            .unwrap();
+        let full = pool.lease().unwrap();
+        let all: Vec<i32> =
+            prompt.iter().chain(&cont).copied().collect();
+        let mut full_out = Vec::new();
+        c.forward_logits(pool.slot_mut(&full), 0, &all, &mut sc,
+                         &mut full_out)
+            .unwrap();
+        let tail = &full_out[prompt.len() * VOCAB..];
+        assert_eq!(fork_out.len(), cont.len() * VOCAB);
+        assert!(fork_out.iter().zip(tail)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn released_slot_reuse_has_no_stale_leakage() {
+        let c = core(24);
+        let mut sc = c.scratch();
+        // cold pool reference
+        let mut cold = KvPool::for_core(&c, 1);
+        let l = cold.lease().unwrap();
+        c.prefill(cold.slot_mut(&l), 0, &toks(6, 7), &mut sc).unwrap();
+        let want = sc.logits().to_vec();
+        // warm pool: fill the only slot with a long junk prompt first,
+        // release, re-lease (same slot), score the fresh prompt
+        let mut warm = KvPool::for_core(&c, 1);
+        let j = warm.lease().unwrap();
+        let ji = j.slot_index();
+        c.prefill(warm.slot_mut(&j), 0, &toks(CTX - 1, 31), &mut sc)
+            .unwrap();
+        warm.release(j);
+        let r = warm.lease().unwrap();
+        assert_eq!(r.slot_index(), ji, "slot not reused");
+        c.prefill(warm.slot_mut(&r), 0, &toks(6, 7), &mut sc).unwrap();
+        assert_eq!(want, sc.logits(), "stale KV leaked into reused slot");
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none_and_release_restores() {
+        let c = core(25);
+        let mut pool = KvPool::for_core(&c, 2);
+        assert_eq!(pool.capacity(), 2);
+        let a = pool.lease().unwrap();
+        let b = pool.lease().unwrap();
+        assert_ne!(a.slot_index(), b.slot_index());
+        assert!(pool.lease().is_none(), "exhausted pool must not lease");
+        assert_eq!(pool.n_free(), 0);
+        pool.release(a);
+        assert_eq!(pool.n_free(), 1);
+        let c2 = pool.lease().unwrap();
+        assert!(pool.lease().is_none());
+        pool.release(b);
+        pool.release(c2);
+        assert_eq!(pool.n_free(), 2);
+    }
+
+    #[test]
+    fn fork_on_exhausted_pool_returns_none() {
+        let c = core(26);
+        let mut pool = KvPool::for_core(&c, 1);
+        let mut sc = c.scratch();
+        let l = pool.lease().unwrap();
+        c.prefill(pool.slot_mut(&l), 0, &toks(4, 3), &mut sc).unwrap();
+        assert!(pool.fork(&l, 4).is_none());
+    }
+
+    #[test]
+    fn decode_batch_guards_bad_input() {
+        let c = core(27);
+        let mut pool = KvPool::for_core(&c, 1);
+        let mut sc = c.scratch();
+        let l = pool.lease().unwrap();
+        // lease/token count mismatch
+        assert!(c
+            .decode_batch(&mut pool, &[(&l, 0)], &[1, 2], &mut sc)
+            .is_err());
+        // out-of-range token
+        assert!(c
+            .decode_batch(&mut pool, &[(&l, 0)], &[VOCAB as i32], &mut sc)
+            .is_err());
+        // full cache
+        assert!(c
+            .decode_batch(&mut pool, &[(&l, CTX)], &[1], &mut sc)
+            .is_err());
+        // empty batch is a no-op
+        assert!(c.decode_batch(&mut pool, &[], &[], &mut sc).is_ok());
+    }
+
+    #[test]
+    fn dense_core_matches_itself_across_paths() {
+        // a dense-linear core (the eval path for fp/LoRA-merged models)
+        // must satisfy the same solo-vs-batched bit-exactness contract
+        let p = core(28);
+        // materialize the packed core into a dense one
+        let mut blocks = Vec::new();
+        for blk in &p.blocks {
+            let mut lins = Vec::new();
+            for lin in &blk.lins {
+                let pl = match lin {
+                    Linear::Packed(pl) => pl,
+                    _ => unreachable!(),
+                };
+                let (o, i) = (pl.out_dim, pl.in_dim);
+                let mut w = vec![0f32; o * i];
+                let mut row = vec![0f32; i];
+                for r in 0..o {
+                    pl.dequant_row(r, &mut row);
+                    w[r * i..(r + 1) * i].copy_from_slice(&row);
+                }
+                lins.push(Linear::Dense { w, out_dim: o, in_dim: i });
+            }
+            blocks.push(BlockW {
+                attn_norm: blk.attn_norm.clone(),
+                mlp_norm: blk.mlp_norm.clone(),
+                lins,
+            });
+        }
+        let dc = Arc::new(ModelCore::assemble(
+            DIM, NH, HD, INTER, VOCAB, CTX, 10000.0, 1e-5,
+            p.embed.clone(), p.final_norm.clone(), p.head.clone(),
+            blocks));
+        let prompt = toks(6, 9);
+        let mut pool = KvPool::for_core(&dc, 2);
+        let mut sc = dc.scratch();
+        let a = pool.lease().unwrap();
+        dc.prefill(pool.slot_mut(&a), 0, &prompt, &mut sc).unwrap();
+        let pre = sc.logits().to_vec();
+        // solo step loop on a second slot
+        let b = pool.lease().unwrap();
+        for (i, &t) in prompt.iter().enumerate() {
+            dc.step(pool.slot_mut(&b), i, t, &mut sc).unwrap();
+        }
+        assert_eq!(pre, sc.logits());
+        // batched decode vs solo step from the prefilled states
+        let batch = [(&a, prompt.len()), (&b, prompt.len())];
+        dc.decode_batch(&mut pool, &batch, &[7, 7], &mut sc).unwrap();
+        let row0 = sc.batch_logits(0).to_vec();
+        let row1 = sc.batch_logits(1).to_vec();
+        assert_eq!(row0, row1);
+        dc.step(pool.slot_mut(&a), prompt.len(), 7, &mut sc).unwrap();
+        assert_eq!(row0, sc.logits());
+    }
+}

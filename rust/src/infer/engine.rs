@@ -1,212 +1,81 @@
-//! Pure-Rust deployment engine: autoregressive transformer forward over
-//! packed low-bit weights with a KV cache. This is the "request path" a
-//! downstream user ships - no Python, no XLA, just the packed .eqt model.
+//! Single-session facade over the multi-sequence serving core.
+//!
+//! The deployment stack is split into three parts (the ModelCore /
+//! Session / Scheduler architecture):
+//!
+//! * [`ModelCore`](crate::infer::core::ModelCore) - the immutable,
+//!   `Arc`-shareable half: packed (or dense) linears, norm weights,
+//!   embedding/lm-head matrices, and precomputed RoPE tables, plus the
+//!   three forward primitives (solo `step`, batched single-sequence
+//!   `prefill`/`forward_logits`, and the multi-sequence `decode_batch`).
+//!   One core serves any number of concurrent sequences; nothing in it
+//!   mutates per request.
+//! * [`KvPool`](crate::infer::kv::KvPool) /
+//!   [`Session`](crate::infer::session::Session) - the mutable,
+//!   per-request half: a position, a sampler RNG, and a KV slot leased
+//!   from a fixed-capacity slab pool (lease -> release -> reuse, with
+//!   [`KvPool::fork`](crate::infer::kv::KvPool::fork) copying a prefix
+//!   for candidate-continuation scoring).
+//! * [`Scheduler`](crate::infer::sched::Scheduler) - continuous
+//!   batching: every tick gathers all live sessions' last tokens and runs
+//!   **one rows-parallel matmul per linear across the whole batch**
+//!   (`ModelCore::decode_batch`), admits queued prompts via chunked
+//!   prefill between ticks, and retires finished sequences without
+//!   stalling the batch.
+//!
+//! [`Engine`] is the thin single-session view kept for the CLI
+//! `generate` path, the eval forwards, and every pre-existing caller: a
+//! shared core + a one-slot pool + one position. `step`/`step_ref`/
+//! `prefill`/`forward_logits` semantics are unchanged, and - because all
+//! paths share the same kernels and attention routine - a solo `Engine`
+//! run is **bit-identical** to the same sequence decoded inside any
+//! scheduler batch at any thread count (the determinism guarantee the
+//! serving stack is tested against; see `infer::core`).
 //!
 //! Numerics mirror python/compile/model.py exactly (RMSNorm, split-half
 //! RoPE, causal attention, SwiGLU). When PJRT artifacts and real xla
 //! bindings are present, the integration test checks engine logits
-//! against the `model_fwd_q` executable to ~1e-3; in stub builds
-//! (rust/src/xla_stub.rs) that external parity check skips, and the
+//! against the `model_fwd_q` executable to ~1e-3; in stub builds the
 //! guarantees are the internal ones: kernels vs dense-dequant, batched
-//! prefill vs sequential step, and thread-count determinism (all tested).
+//! prefill vs sequential step, batched decode vs solo decode, and
+//! thread-count determinism (all tested).
 //!
-//! # Hot-path design (batching + threading)
-//!
-//! - **Batched prefill**: [`Engine::prefill`] runs all prompt positions
-//!   through each block's linears as one [`PackedLinear::matmul`] and
-//!   fills the KV cache in a single pass with causal attention over the
-//!   batch. The K/V matmuls write straight into the cache rows. Because
-//!   `matmul` replicates `matvec`'s accumulation order, batched prefill is
-//!   bit-exact with the old sequential `step()` loop - just much faster
-//!   (the per-group unpack work amortizes across tokens, and the lm head
-//!   runs once instead of once per prompt token).
-//! - **Precomputed RoPE**: sin/cos tables for all `max_ctx` positions are
-//!   built once at construction; decode no longer calls `powf` per
-//!   position per head.
-//! - **Zero-alloc decode**: a persistent [`Scratch`] holds every
-//!   intermediate buffer (including per-head attention scores and the
-//!   matvec group-sum scratch), so steady-state `step_ref` does no heap
-//!   allocation.
-//! - **Parallel attention**: per-head score/context work is chunked onto
-//!   the persistent worker pool (`util::threads`) once the context is
-//!   long enough to pay for a dispatch; prefill attention chunks across
-//!   tokens.
-//!
-//! §Perf: batched prefill replaces, per prompt token, a full per-call
-//! group-unpack pass over every linear plus an lm-head matvec with an
-//! amortized share of one matmul pass - at 64 tokens on a 7B-shaped block
-//! that is a large constant-factor win (target floor: >=3x vs the old
-//! sequential step loop), and multi-threaded decode scales with the
-//! row-chunked lm-head/linear matvecs. A decode step issues ~10 parallel
-//! sections (7 linears + lm head + attention); under the old
-//! spawn-per-call threading that was ~10 spawn/join cycles *per token*,
-//! now it is ~10 pool dispatches (~1-2us each). Measure with
-//! `eqat bench inference`; `runs/bench.json` tracks the trajectory
-//! across PRs.
-//!
-//! [`Engine::forward_logits`] exposes the same batched pass for
-//! evaluation (all-position logits), which `eval::fwd::engine_logits` and
-//! `eval::ppl::perplexity_engine` build on - CPU perplexity eval with no
-//! PJRT artifacts needed.
+//! §Perf: batched prefill amortizes each linear's group-unpack across
+//! prompt tokens (PR 1); batched decode amortizes it across *sequences*
+//! (this refactor) - with N live sessions a tick pays one rows-parallel
+//! matmul per linear instead of N full matvec passes, which is what makes
+//! `eqat bench inference`'s serve section show multi-x aggregate
+//! tokens/s over sequential per-request decode. `runs/bench.json`
+//! (schema 4) tracks the trajectory across PRs.
 
-use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+use anyhow::Result;
 
 use crate::config::QuantScheme;
-use crate::infer::qlinear::{dense_matmul, dense_matvec, PackedLinear};
+use crate::infer::core::{ModelCore, Scratch};
+use crate::infer::kv::{KvLease, KvPool};
 use crate::io::manifest::PresetInfo;
 use crate::model::quantized::QuantizedModel;
-use crate::quant::rtn::{minmax_init, quantize};
-use crate::util::rng::Rng;
-use crate::util::threads;
-
-const LINS: [&str; 7] = ["attn.q", "attn.k", "attn.v", "attn.o",
-                         "mlp.gate", "mlp.up", "mlp.down"];
-
-/// Below this many attention MACs (heads * positions * head_dim), the
-/// per-head loop stays serial: even a pool dispatch (~1-2us) would cost
-/// more than the work. Far lower than the spawn-per-call era threshold.
-const ATT_PAR_MIN: usize = 1 << 13;
-
-struct BlockW {
-    attn_norm: Vec<f32>,
-    mlp_norm: Vec<f32>,
-    /// q, k, v, o, gate, up, down
-    lins: Vec<PackedLinear>,
-}
-
-/// Persistent intermediate buffers. Decode (`step_ref`) touches only the
-/// fixed-size fields and allocates nothing in steady state; the `p_*`
-/// prefill buffers grow to the longest prompt seen and are then re-used.
-struct Scratch {
-    hn: Vec<f32>,       // dim
-    q: Vec<f32>,        // dim
-    ctx: Vec<f32>,      // dim
-    attn_out: Vec<f32>, // dim
-    gate: Vec<f32>,     // inter
-    up: Vec<f32>,       // inter
-    down: Vec<f32>,     // dim
-    h: Vec<f32>,        // dim
-    logits: Vec<f32>,   // vocab
-    /// per-head attention scores: n_heads rows of max_ctx
-    att: Vec<f32>,
-    /// shared group-sum scratch for `PackedLinear::matvec_in`
-    sx: Vec<f32>,
-    // batched-prefill buffers, token-major (n * width)
-    p_h: Vec<f32>,
-    p_hn: Vec<f32>,
-    p_q: Vec<f32>,
-    p_ctx: Vec<f32>,
-    p_attn: Vec<f32>,
-    p_gate: Vec<f32>,
-    p_up: Vec<f32>,
-    p_down: Vec<f32>,
-}
-
-impl Scratch {
-    fn new(dim: usize, inter: usize, vocab: usize, n_heads: usize,
-           max_ctx: usize) -> Scratch {
-        Scratch {
-            hn: vec![0.0; dim],
-            q: vec![0.0; dim],
-            ctx: vec![0.0; dim],
-            attn_out: vec![0.0; dim],
-            gate: vec![0.0; inter],
-            up: vec![0.0; inter],
-            down: vec![0.0; dim],
-            h: vec![0.0; dim],
-            logits: vec![0.0; vocab],
-            att: vec![0.0; n_heads * max_ctx],
-            sx: Vec::new(),
-            p_h: Vec::new(),
-            p_hn: Vec::new(),
-            p_q: Vec::new(),
-            p_ctx: Vec::new(),
-            p_attn: Vec::new(),
-            p_gate: Vec::new(),
-            p_up: Vec::new(),
-            p_down: Vec::new(),
-        }
-    }
-}
 
 pub struct Engine {
-    pub dim: usize,
-    pub n_heads: usize,
-    pub head_dim: usize,
-    pub inter: usize,
-    pub vocab: usize,
-    pub max_ctx: usize,
-    #[allow(dead_code)]
-    rope_theta: f64,
-    norm_eps: f32,
-    embed: Vec<f32>,
-    final_norm: Vec<f32>,
-    head: Vec<f32>,
-    blocks: Vec<BlockW>,
-    /// per block: (k_cache, v_cache), each (max_ctx * dim)
-    cache: Vec<(Vec<f32>, Vec<f32>)>,
-    /// precomputed RoPE tables, (max_ctx * head_dim/2) each
-    rope_cos: Vec<f32>,
-    rope_sin: Vec<f32>,
+    core: Arc<ModelCore>,
+    pool: KvPool,
+    lease: KvLease,
     scratch: Scratch,
-    pub pos: usize,
+    pos: usize,
 }
 
 impl Engine {
     /// Build from the in-memory quantized model + manifest preset info.
     pub fn new(qm: &QuantizedModel, info: &PresetInfo, max_ctx: usize)
                -> Result<Engine> {
-        let cfg = &info.config;
-        let g = qm.scheme.group;
-        let wql = info.layouts.get("wq")
-            .ok_or_else(|| anyhow!("missing wq layout"))?;
-        let qpl = info.layouts.get(&format!("qp_g{g}"))
-            .ok_or_else(|| anyhow!("missing qp_g{g} layout"))?;
-        let fprl = info.layouts.get("fpr")
-            .ok_or_else(|| anyhow!("missing fpr layout"))?;
-
-        let mut blocks = Vec::with_capacity(cfg.n_layers);
-        for b in 0..cfg.n_layers {
-            let mut lins = Vec::with_capacity(7);
-            for name in LINS {
-                let we = wql.entry(&format!("blocks.{b}.{name}"))?;
-                let (out_d, in_d) = (we.shape[0], we.shape[1]);
-                let w_int = wql.slice(&qm.wq, &format!("blocks.{b}.{name}"))?;
-                let s = qpl.slice(&qm.qp, &format!("s.blocks.{b}.{name}"))?;
-                let z = qpl.slice(&qm.qp, &format!("z.blocks.{b}.{name}"))?;
-                lins.push(PackedLinear::pack(w_int, out_d, in_d, s, z,
-                                             qm.scheme)?);
-            }
-            blocks.push(BlockW {
-                attn_norm: fprl
-                    .slice(&qm.fpr, &format!("blocks.{b}.attn_norm"))?
-                    .to_vec(),
-                mlp_norm: fprl
-                    .slice(&qm.fpr, &format!("blocks.{b}.mlp_norm"))?
-                    .to_vec(),
-                lins,
-            });
-        }
-        Ok(Engine::assemble(
-            cfg.dim,
-            cfg.n_heads,
-            cfg.head_dim,
-            cfg.inter,
-            cfg.vocab,
-            max_ctx,
-            cfg.rope_theta,
-            cfg.norm_eps as f32,
-            fprl.slice(&qm.fpr, "embed")?.to_vec(),
-            fprl.slice(&qm.fpr, "final_norm")?.to_vec(),
-            fprl.slice(&qm.fpr, "head")?.to_vec(),
-            blocks,
-        ))
+        Ok(Engine::from_core(Arc::new(
+            ModelCore::from_quantized(qm, info, max_ctx)?)))
     }
 
-    /// Build a randomly-initialized engine directly from shapes, no
-    /// manifest or artifacts needed: weights are RTN-quantized to `scheme`
-    /// and packed exactly like the artifact path. This is the harness
-    /// behind the inference benches and the batching/threading tests.
+    /// Build a randomly-initialized engine directly from shapes (see
+    /// [`ModelCore::synthetic`]).
     #[allow(clippy::too_many_arguments)]
     pub fn synthetic(
         dim: usize,
@@ -219,500 +88,144 @@ impl Engine {
         max_ctx: usize,
         seed: u64,
     ) -> Result<Engine> {
-        if n_heads * head_dim != dim {
-            bail!("n_heads {n_heads} * head_dim {head_dim} != dim {dim}");
-        }
-        if dim % scheme.group != 0 || inter % scheme.group != 0 {
-            bail!("group {} must divide dim {dim} and inter {inter}",
-                  scheme.group);
-        }
-        let mut rng = Rng::new(seed);
-        let shapes = [
-            (dim, dim),   // attn.q
-            (dim, dim),   // attn.k
-            (dim, dim),   // attn.v
-            (dim, dim),   // attn.o
-            (inter, dim), // mlp.gate
-            (inter, dim), // mlp.up
-            (dim, inter), // mlp.down
-        ];
-        let mut blocks = Vec::with_capacity(n_layers);
-        let mut wbuf: Vec<f32> = Vec::new();
-        for _ in 0..n_layers {
-            let mut lins = Vec::with_capacity(7);
-            for &(o, i) in &shapes {
-                wbuf.clear();
-                wbuf.resize(o * i, 0.0);
-                rng.fill_normal(&mut wbuf, 0.0, 0.05);
-                let gp = minmax_init(&wbuf, o, i, scheme);
-                let wi = quantize(&wbuf, &gp, scheme);
-                lins.push(PackedLinear::pack(&wi, o, i, &gp.s, &gp.z,
-                                             scheme)?);
-            }
-            blocks.push(BlockW {
-                attn_norm: vec![1.0; dim],
-                mlp_norm: vec![1.0; dim],
-                lins,
-            });
-        }
-        let mut embed = vec![0f32; vocab * dim];
-        rng.fill_normal(&mut embed, 0.0, 0.02);
-        let mut head = vec![0f32; vocab * dim];
-        rng.fill_normal(&mut head, 0.0, 0.02);
-        Ok(Engine::assemble(dim, n_heads, head_dim, inter, vocab, max_ctx,
-                            10000.0, 1e-5, embed, vec![1.0; dim], head,
-                            blocks))
+        Ok(Engine::from_core(Arc::new(ModelCore::synthetic(
+            dim, n_heads, head_dim, inter, vocab, n_layers, scheme,
+            max_ctx, seed)?)))
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn assemble(
-        dim: usize,
-        n_heads: usize,
-        head_dim: usize,
-        inter: usize,
-        vocab: usize,
-        max_ctx: usize,
-        rope_theta: f64,
-        norm_eps: f32,
-        embed: Vec<f32>,
-        final_norm: Vec<f32>,
-        head: Vec<f32>,
-        blocks: Vec<BlockW>,
-    ) -> Engine {
-        let cache = (0..blocks.len())
-            .map(|_| (vec![0f32; max_ctx * dim], vec![0f32; max_ctx * dim]))
-            .collect();
-        let (rope_cos, rope_sin) = rope_tables(max_ctx, head_dim, rope_theta);
-        let scratch = Scratch::new(dim, inter, vocab, n_heads, max_ctx);
-        Engine {
-            dim,
-            n_heads,
-            head_dim,
-            inter,
-            vocab,
-            max_ctx,
-            rope_theta,
-            norm_eps,
-            embed,
-            final_norm,
-            head,
-            blocks,
-            cache,
-            rope_cos,
-            rope_sin,
-            scratch,
-            pos: 0,
-        }
+    /// Wrap a shared core as a single-session engine: a one-slot private
+    /// pool plus a fresh position. Many engines (and schedulers) can view
+    /// the same core concurrently.
+    pub fn from_core(core: Arc<ModelCore>) -> Engine {
+        let mut pool = KvPool::for_core(&core, 1);
+        let lease = pool.lease().expect("fresh one-slot pool");
+        let scratch = core.scratch();
+        Engine { core, pool, lease, scratch, pos: 0 }
+    }
+
+    /// The shared immutable model behind this engine.
+    pub fn core(&self) -> &Arc<ModelCore> {
+        &self.core
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Pin the position (benches rewind the KV window with this).
+    pub fn set_pos(&mut self, pos: usize) {
+        self.pos = pos;
+    }
+
+    pub fn max_ctx(&self) -> usize {
+        self.core.max_ctx
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.core.vocab
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.core.n_layers()
     }
 
     pub fn reset(&mut self) {
         self.pos = 0;
     }
 
-    pub fn n_layers(&self) -> usize {
-        self.blocks.len()
-    }
-
     /// One decode step: feed `tok` at the current position, return logits.
     pub fn step(&mut self, tok: i32) -> Result<Vec<f32>> {
-        self.step_impl(tok, None)?;
-        Ok(self.scratch.logits.clone())
+        self.step_ref(tok).map(|l| l.to_vec())
     }
 
     /// Like [`Engine::step`] but returns a view into the engine's scratch
     /// instead of copying: steady-state decode through this entry point
     /// performs zero heap allocation.
     pub fn step_ref(&mut self, tok: i32) -> Result<&[f32]> {
-        self.step_impl(tok, None)?;
-        Ok(&self.scratch.logits)
+        self.core.step(self.pool.slot_mut(&self.lease), self.pos, tok,
+                       &mut self.scratch)?;
+        self.pos += 1;
+        Ok(self.scratch.logits())
     }
 
     /// Debug/testing: like `step` but also returns the hidden state after
     /// each block (used to localize divergence vs the XLA forward).
     pub fn step_traced(&mut self, tok: i32)
                        -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        let mut trace = Vec::with_capacity(self.blocks.len());
-        self.step_impl(tok, Some(&mut trace))?;
-        Ok((self.scratch.logits.clone(), trace))
-    }
-
-    fn step_impl(&mut self, tok: i32,
-                 mut trace: Option<&mut Vec<Vec<f32>>>) -> Result<()> {
-        if self.pos >= self.max_ctx {
-            bail!("KV cache full ({} positions)", self.max_ctx);
-        }
-        if tok < 0 || tok as usize >= self.vocab {
-            bail!("token {tok} out of range (vocab {})", self.vocab);
-        }
-        let Engine {
-            dim,
-            n_heads,
-            head_dim,
-            inter,
-            max_ctx,
-            norm_eps,
-            embed,
-            final_norm,
-            head,
-            blocks,
-            cache,
-            rope_cos,
-            rope_sin,
-            scratch,
-            pos,
-            ..
-        } = self;
-        let d = *dim;
-        let nh = *n_heads;
-        let hd = *head_dim;
-        let it = *inter;
-        let eps = *norm_eps;
-        let mc = *max_ctx;
-        let p = *pos;
-        let Scratch {
-            hn, q, ctx, attn_out, gate, up, down, h, logits, att, sx, ..
-        } = scratch;
-
-        h.copy_from_slice(
-            &embed[tok as usize * d..(tok as usize + 1) * d]);
-        let scale = 1.0 / (hd as f32).sqrt();
-        for (bi, blk) in blocks.iter().enumerate() {
-            rms_norm(&h[..], &blk.attn_norm, eps, &mut hn[..]);
-            {
-                let (kc, vc) = &mut cache[bi];
-                blk.lins[0].matvec_in(&hn[..], &mut q[..], sx);
-                blk.lins[1].matvec_in(&hn[..], &mut kc[p * d..(p + 1) * d],
-                                      sx);
-                blk.lins[2].matvec_in(&hn[..], &mut vc[p * d..(p + 1) * d],
-                                      sx);
-                rope_apply(&mut kc[p * d..(p + 1) * d], p, nh, hd, rope_cos,
-                           rope_sin);
-            }
-            rope_apply(&mut q[..], p, nh, hd, rope_cos, rope_sin);
-            let (kc, vc) = &cache[bi];
-            let qv: &[f32] = &q[..];
-            let kcs: &[f32] = &kc[..];
-            let vcs: &[f32] = &vc[..];
-            // chunk i covers the same heads of both the context output and
-            // the per-head score scratch; serial for short contexts
-            let hpc = if nh * (p + 1) * hd < ATT_PAR_MIN {
-                nh
-            } else {
-                threads::chunk_len(nh)
-            };
-            threads::par_chunks2_mut(
-                &mut ctx[..],
-                hpc * hd,
-                &mut att[..],
-                hpc * mc,
-                |ci, cxc, atc| {
-                    for (j, (ch, ath)) in cxc
-                        .chunks_mut(hd)
-                        .zip(atc.chunks_mut(mc))
-                        .enumerate()
-                    {
-                        let hh = ci * hpc + j;
-                        attend_head(&qv[hh * hd..(hh + 1) * hd], kcs, vcs,
-                                    d, hh, hd, p, scale, ath, ch);
-                    }
-                },
-            );
-            blk.lins[3].matvec_in(&ctx[..], &mut attn_out[..], sx);
-            for i in 0..d {
-                h[i] += attn_out[i];
-            }
-            rms_norm(&h[..], &blk.mlp_norm, eps, &mut hn[..]);
-            blk.lins[4].matvec_in(&hn[..], &mut gate[..], sx);
-            blk.lins[5].matvec_in(&hn[..], &mut up[..], sx);
-            for i in 0..it {
-                let gx = gate[i];
-                let silu = gx / (1.0 + (-gx).exp());
-                gate[i] = silu * up[i];
-            }
-            blk.lins[6].matvec_in(&gate[..], &mut down[..], sx);
-            for i in 0..d {
-                h[i] += down[i];
-            }
-            if let Some(tr) = trace.as_mut() {
-                tr.push(h.to_vec());
-            }
-        }
-        *pos += 1;
-        rms_norm(&h[..], &final_norm[..], eps, &mut hn[..]);
-        dense_matvec(&head[..], logits.len(), d, &hn[..], &mut logits[..]);
-        Ok(())
+        let mut trace = Vec::with_capacity(self.core.n_layers());
+        self.core.step_impl(self.pool.slot_mut(&self.lease), self.pos,
+                            tok, &mut self.scratch, Some(&mut trace))?;
+        self.pos += 1;
+        Ok((self.scratch.logits().to_vec(), trace))
     }
 
     /// Debug/testing: the K-cache row for (block, pos) - post-RoPE keys.
     pub fn k_row(&self, block: usize, pos: usize) -> &[f32] {
-        let d = self.dim;
-        &self.cache[block].0[pos * d..(pos + 1) * d]
+        let d = self.core.dim;
+        &self.pool.slot(&self.lease).k[block][pos * d..(pos + 1) * d]
     }
 
     /// Feed a prompt; returns logits after the last token.
     ///
     /// Batched: all positions run through each block's linears as one
-    /// packed matmul, the K/V matmuls write directly into the cache, and
-    /// the lm head runs once (on the last position) instead of once per
-    /// prompt token. Bit-exact with a sequential `step()` loop (tested),
-    /// §Perf >=3x faster at 64 tokens on 7B-shaped blocks.
+    /// packed matmul, the K/V matmuls write directly into the slot rows,
+    /// and the lm head runs once (on the last position) instead of once
+    /// per prompt token. Bit-exact with a sequential `step()` loop
+    /// (tested), §Perf >=3x faster at 64 tokens on 7B-shaped blocks.
     pub fn prefill(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
         if tokens.is_empty() {
             return Ok(Vec::new());
         }
-        self.prefill_impl(tokens)?;
-        let n = tokens.len();
-        let d = self.dim;
-        let v = self.vocab;
-        let eps = self.norm_eps;
-        let Engine { final_norm, head, scratch, .. } = self;
-        let Scratch { p_h, hn, logits, .. } = scratch;
-        rms_norm(&p_h[(n - 1) * d..n * d], &final_norm[..], eps,
-                 &mut hn[..]);
-        dense_matvec(&head[..], v, d, &hn[..], &mut logits[..]);
-        Ok(logits.clone())
+        self.core.prefill(self.pool.slot_mut(&self.lease), self.pos,
+                          tokens, &mut self.scratch)?;
+        self.pos += tokens.len();
+        Ok(self.scratch.logits().to_vec())
     }
 
     /// Evaluation forward: logits for *every* position of `tokens`
     /// (token-major, n * vocab), via the batched prefill pass plus a dense
-    /// lm-head matmul. Continues from the current `pos`; call
+    /// lm-head matmul. Continues from the current position; call
     /// [`Engine::reset`] first for a fresh sequence.
     pub fn forward_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
-        let n = tokens.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        self.prefill_impl(tokens)?;
-        let d = self.dim;
-        let v = self.vocab;
-        let eps = self.norm_eps;
-        let Engine { final_norm, head, scratch, .. } = self;
-        let Scratch { p_h, p_hn, .. } = scratch;
-        for t in 0..n {
-            rms_norm(&p_h[t * d..(t + 1) * d], &final_norm[..], eps,
-                     &mut p_hn[t * d..(t + 1) * d]);
-        }
-        let mut out = vec![0f32; n * v];
-        dense_matmul(&head[..], v, d, &p_hn[..n * d], n, &mut out);
+        let mut out = Vec::new();
+        self.forward_logits_into(tokens, &mut out)?;
         Ok(out)
     }
 
-    /// Batched core: run `n` positions through every block, filling the KV
-    /// cache rows [pos, pos+n) in one pass; final per-token hidden states
-    /// land in `scratch.p_h` and `pos` advances by n.
-    fn prefill_impl(&mut self, tokens: &[i32]) -> Result<()> {
-        let n = tokens.len();
-        if self.pos + n > self.max_ctx {
-            bail!(
-                "prompt of {n} tokens overflows KV cache ({} used of {})",
-                self.pos, self.max_ctx
-            );
-        }
-        for &t in tokens {
-            if t < 0 || t as usize >= self.vocab {
-                bail!("token {t} out of range (vocab {})", self.vocab);
-            }
-        }
-        let Engine {
-            dim,
-            n_heads,
-            head_dim,
-            inter,
-            norm_eps,
-            embed,
-            blocks,
-            cache,
-            rope_cos,
-            rope_sin,
-            scratch,
-            pos,
-            ..
-        } = self;
-        let d = *dim;
-        let nh = *n_heads;
-        let hd = *head_dim;
-        let it = *inter;
-        let eps = *norm_eps;
-        let p0 = *pos;
-        let Scratch {
-            p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down, ..
-        } = scratch;
-        p_h.resize(n * d, 0.0);
-        p_hn.resize(n * d, 0.0);
-        p_q.resize(n * d, 0.0);
-        p_ctx.resize(n * d, 0.0);
-        p_attn.resize(n * d, 0.0);
-        p_gate.resize(n * it, 0.0);
-        p_up.resize(n * it, 0.0);
-        p_down.resize(n * d, 0.0);
+    /// [`Engine::forward_logits`] into a reusable buffer (the eval loops'
+    /// allocation-free path).
+    pub fn forward_logits_into(&mut self, tokens: &[i32],
+                               out: &mut Vec<f32>) -> Result<()> {
+        out.resize(tokens.len() * self.core.vocab, 0.0);
+        self.forward_logits_slice(tokens, &mut out[..])
+    }
 
-        for (t, &tok) in tokens.iter().enumerate() {
-            p_h[t * d..(t + 1) * d].copy_from_slice(
-                &embed[tok as usize * d..(tok as usize + 1) * d]);
-        }
-        let scale = 1.0 / (hd as f32).sqrt();
-        for (bi, blk) in blocks.iter().enumerate() {
-            for t in 0..n {
-                rms_norm(&p_h[t * d..(t + 1) * d], &blk.attn_norm, eps,
-                         &mut p_hn[t * d..(t + 1) * d]);
-            }
-            blk.lins[0].matmul(&p_hn[..n * d], n, &mut p_q[..n * d]);
-            {
-                let (kc, vc) = &mut cache[bi];
-                blk.lins[1].matmul(&p_hn[..n * d], n,
-                                   &mut kc[p0 * d..(p0 + n) * d]);
-                blk.lins[2].matmul(&p_hn[..n * d], n,
-                                   &mut vc[p0 * d..(p0 + n) * d]);
-                for t in 0..n {
-                    rope_apply(&mut kc[(p0 + t) * d..(p0 + t + 1) * d],
-                               p0 + t, nh, hd, rope_cos, rope_sin);
-                }
-            }
-            for t in 0..n {
-                rope_apply(&mut p_q[t * d..(t + 1) * d], p0 + t, nh, hd,
-                           rope_cos, rope_sin);
-            }
-            let (kc, vc) = &cache[bi];
-            let qv: &[f32] = &p_q[..];
-            let kcs: &[f32] = &kc[..];
-            let vcs: &[f32] = &vc[..];
-            // causal attention over the batch, token-chunked across
-            // threads; workers allocate their own score buffers (prefill
-            // is not the zero-alloc path)
-            let tpc = if n * nh * (p0 + n) * hd < ATT_PAR_MIN {
-                n
+    /// [`Engine::forward_logits`] into a caller-provided slice (len
+    /// tokens * vocab): batched eval writes each row straight into its
+    /// place in a larger buffer, no per-row allocation or copy.
+    pub fn forward_logits_slice(&mut self, tokens: &[i32],
+                                out: &mut [f32]) -> Result<()> {
+        if tokens.is_empty() {
+            return if out.is_empty() {
+                Ok(())
             } else {
-                threads::chunk_len(n)
+                Err(anyhow::anyhow!(
+                    "forward_logits: out non-empty for empty tokens"))
             };
-            threads::par_chunks_mut(&mut p_ctx[..n * d], tpc * d,
-                                    |ci, cxc| {
-                let t0 = ci * tpc;
-                let mut scores = vec![0f32; p0 + n];
-                for (tl, ctx_t) in cxc.chunks_mut(d).enumerate() {
-                    let t = t0 + tl;
-                    let last = p0 + t; // attends to cache rows 0..=last
-                    for hh in 0..nh {
-                        attend_head(
-                            &qv[t * d + hh * hd..t * d + (hh + 1) * hd],
-                            kcs, vcs, d, hh, hd, last, scale,
-                            &mut scores,
-                            &mut ctx_t[hh * hd..(hh + 1) * hd],
-                        );
-                    }
-                }
-            });
-            blk.lins[3].matmul(&p_ctx[..n * d], n, &mut p_attn[..n * d]);
-            for i in 0..n * d {
-                p_h[i] += p_attn[i];
-            }
-            for t in 0..n {
-                rms_norm(&p_h[t * d..(t + 1) * d], &blk.mlp_norm, eps,
-                         &mut p_hn[t * d..(t + 1) * d]);
-            }
-            blk.lins[4].matmul(&p_hn[..n * d], n, &mut p_gate[..n * it]);
-            blk.lins[5].matmul(&p_hn[..n * d], n, &mut p_up[..n * it]);
-            for i in 0..n * it {
-                let gx = p_gate[i];
-                let silu = gx / (1.0 + (-gx).exp());
-                p_gate[i] = silu * p_up[i];
-            }
-            blk.lins[6].matmul(&p_gate[..n * it], n, &mut p_down[..n * d]);
-            for i in 0..n * d {
-                p_h[i] += p_down[i];
-            }
         }
-        *pos += n;
+        self.core.forward_logits_slice(self.pool.slot_mut(&self.lease),
+                                       self.pos, tokens,
+                                       &mut self.scratch, out)?;
+        self.pos += tokens.len();
         Ok(())
-    }
-}
-
-/// Softmax attention for one head over KV-cache rows 0..=`last`: scores
-/// go through `scores` scratch (len >= last+1), the weighted value sum
-/// lands in `ch` (len head_dim). Shared by the decode and batched-prefill
-/// paths so their numerics can never diverge (the prefill==step-loop
-/// bit-exactness tests depend on this).
-#[allow(clippy::too_many_arguments)]
-fn attend_head(qh: &[f32], kcs: &[f32], vcs: &[f32], d: usize, hh: usize,
-               hd: usize, last: usize, scale: f32, scores: &mut [f32],
-               ch: &mut [f32]) {
-    let sc = &mut scores[..last + 1];
-    let mut mx = f32::NEG_INFINITY;
-    for (u, sv) in sc.iter_mut().enumerate() {
-        let kh = &kcs[u * d + hh * hd..u * d + (hh + 1) * hd];
-        let mut s = 0f32;
-        for i in 0..hd {
-            s += qh[i] * kh[i];
-        }
-        let s = s * scale;
-        mx = mx.max(s);
-        *sv = s;
-    }
-    let mut zsum = 0f32;
-    for s in sc.iter_mut() {
-        *s = (*s - mx).exp();
-        zsum += *s;
-    }
-    ch.fill(0.0);
-    for (u, &pr) in sc.iter().enumerate() {
-        let vh = &vcs[u * d + hh * hd..u * d + (hh + 1) * hd];
-        let w = pr / zsum;
-        for i in 0..hd {
-            ch[i] += w * vh[i];
-        }
-    }
-}
-
-/// RMSNorm matching model.py::rms_norm.
-fn rms_norm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
-    let mut ss = 0f32;
-    for &v in x {
-        ss += v * v;
-    }
-    let inv = 1.0 / (ss / x.len() as f32 + eps).sqrt();
-    for i in 0..x.len() {
-        out[i] = x[i] * inv * w[i];
-    }
-}
-
-/// Precompute split-half RoPE sin/cos for every position, matching the
-/// per-step powf formula bit-for-bit (same f64 math, cast once).
-fn rope_tables(max_ctx: usize, head_dim: usize, theta: f64)
-               -> (Vec<f32>, Vec<f32>) {
-    let half = head_dim / 2;
-    let mut cos = vec![0f32; max_ctx * half];
-    let mut sin = vec![0f32; max_ctx * half];
-    for pos in 0..max_ctx {
-        for i in 0..half {
-            let freq = 1.0 / theta.powf(2.0 * i as f64 / head_dim as f64);
-            let ang = pos as f64 * freq;
-            sin[pos * half + i] = ang.sin() as f32;
-            cos[pos * half + i] = ang.cos() as f32;
-        }
-    }
-    (cos, sin)
-}
-
-/// Split-half RoPE matching model.py::apply_rope, reading the precomputed
-/// tables instead of recomputing powf per call.
-fn rope_apply(v: &mut [f32], pos: usize, n_heads: usize, head_dim: usize,
-              cos: &[f32], sin: &[f32]) {
-    let half = head_dim / 2;
-    let c = &cos[pos * half..(pos + 1) * half];
-    let s = &sin[pos * half..(pos + 1) * half];
-    for h in 0..n_heads {
-        let base = h * head_dim;
-        for i in 0..half {
-            let a = v[base + i];
-            let b = v[base + half + i];
-            v[base + i] = a * c[i] - b * s[i];
-            v[base + half + i] = b * c[i] + a * s[i];
-        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::infer::core::{rms_norm, rope_tables};
+    use crate::infer::qlinear::dense_matvec;
     use crate::util::threads::with_threads;
 
     const DIM: usize = 32;
@@ -743,7 +256,7 @@ mod tests {
         for &t in &prompt {
             lb = b.step(t).unwrap();
         }
-        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.pos(), b.pos());
         assert_eq!(la.len(), lb.len());
         for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
             assert!((x - y).abs() <= 1e-4,
@@ -787,10 +300,12 @@ mod tests {
         }
         // the last traced hidden is the pre-final-norm state: re-deriving
         // logits from it must reproduce the step output
+        let core = a.core();
         let mut hn = vec![0f32; DIM];
-        rms_norm(trace.last().unwrap(), &a.final_norm, a.norm_eps, &mut hn);
+        rms_norm(trace.last().unwrap(), &core.final_norm, core.norm_eps,
+                 &mut hn);
         let mut logits = vec![0f32; VOCAB];
-        dense_matvec(&a.head, VOCAB, DIM, &hn, &mut logits);
+        dense_matvec(&core.head, VOCAB, DIM, &hn, &mut logits);
         assert_eq!(logits, lg);
         // consecutive blocks actually transform the state
         assert!(trace[0] != trace[1]);
@@ -823,6 +338,22 @@ mod tests {
         e.reset();
         let b = e.prefill(&prompt).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn engines_share_one_core() {
+        let core = small(18).core().clone();
+        let mut a = Engine::from_core(core.clone());
+        let mut b = Engine::from_core(core.clone());
+        // interleaved use of two sessions over one core: each keeps its
+        // own KV slot and position, outputs match a private engine
+        let la = a.prefill(&toks(7)).unwrap();
+        let _ = b.prefill(&toks(4)).unwrap();
+        let la2 = a.step(3).unwrap();
+        let mut solo = Engine::from_core(core);
+        let ls = solo.prefill(&toks(7)).unwrap();
+        assert_eq!(la, ls);
+        assert_eq!(la2, solo.step(3).unwrap());
     }
 
     #[test]

@@ -42,7 +42,7 @@ pub fn generate(
     let mut out = Vec::with_capacity(max_new);
     let mut next = sample(&logits, sampler, &mut rng);
     for _ in 0..max_new {
-        if engine.pos >= engine.max_ctx {
+        if engine.pos() >= engine.max_ctx() {
             break;
         }
         out.push(next);
@@ -95,7 +95,7 @@ mod tests {
         assert_eq!(rep.tokens.len(), 8);
         assert!(rep.decode_tok_per_sec > 0.0);
         assert!(rep.prefill_secs >= 0.0);
-        assert_eq!(e.pos, 11); // 3 prompt + 8 generated
+        assert_eq!(e.pos(), 11); // 3 prompt + 8 generated
     }
 
     #[test]

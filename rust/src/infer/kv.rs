@@ -1,0 +1,140 @@
+//! Shared slab KV pool for multi-sequence serving.
+//!
+//! A [`KvPool`] owns a fixed number of KV *slots*; each slot holds one
+//! sequence's per-layer key/value rows up to `max_ctx` positions. Sessions
+//! lease a slot ([`KvPool::lease`]), fill rows as they prefill/decode, and
+//! hand the slot back ([`KvPool::release`]) when the sequence retires -
+//! so M concurrent sessions share a bounded `n_slots * n_layers *
+//! max_ctx * dim` allocation instead of each owning a full cache, and a
+//! retired sequence's memory is reused by the next admission with no
+//! allocation or zeroing.
+//!
+//! Reuse is safe without clearing because attention only ever reads rows
+//! `[0, pos)` of the leasing session, and a fresh session starts at
+//! `pos = 0`, overwriting rows before they are read (pinned by the
+//! lease -> release -> re-lease tests here and in `infer::sched`).
+//! Exhaustion is not an error: `lease` returns `None` and the scheduler
+//! keeps the request queued until a slot frees.
+//!
+//! [`KvPool::fork`] leases a second slot and copies the parent's first
+//! `pos` rows - the mechanism behind prefix reuse in
+//! `eval::zeroshot::eval_items` (score N candidate continuations off one
+//! prefilled prompt state instead of re-prefilling the prompt N times).
+//! True zero-copy prefix *sharing* (paged KV) is the named next step in
+//! ROADMAP.md.
+
+use crate::infer::core::ModelCore;
+
+/// One sequence's KV storage: per layer, `max_ctx * dim` keys and values.
+pub struct KvSlot {
+    /// per layer, (max_ctx * dim) post-RoPE keys
+    pub(crate) k: Vec<Vec<f32>>,
+    /// per layer, (max_ctx * dim) values
+    pub(crate) v: Vec<Vec<f32>>,
+}
+
+impl KvSlot {
+    fn new(n_layers: usize, dim: usize, max_ctx: usize) -> KvSlot {
+        KvSlot {
+            k: (0..n_layers).map(|_| vec![0f32; max_ctx * dim]).collect(),
+            v: (0..n_layers).map(|_| vec![0f32; max_ctx * dim]).collect(),
+        }
+    }
+}
+
+/// A leased slot. Not `Clone`/`Copy`: exactly one live lease per slot,
+/// returned to the pool with [`KvPool::release`].
+#[derive(Debug)]
+pub struct KvLease {
+    pub(crate) slot: usize,
+}
+
+impl KvLease {
+    /// Slot index (diagnostics / tests).
+    pub fn slot_index(&self) -> usize {
+        self.slot
+    }
+}
+
+/// Fixed-capacity slab of KV slots with lease/release reuse.
+pub struct KvPool {
+    pub(crate) dim: usize,
+    pub(crate) max_ctx: usize,
+    slots: Vec<KvSlot>,
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    pub fn new(n_layers: usize, dim: usize, max_ctx: usize,
+               n_slots: usize) -> KvPool {
+        KvPool {
+            dim,
+            max_ctx,
+            slots: (0..n_slots)
+                .map(|_| KvSlot::new(n_layers, dim, max_ctx))
+                .collect(),
+            // pop() takes from the back; reversed so slot 0 leases first
+            free: (0..n_slots).rev().collect(),
+        }
+    }
+
+    /// Pool shaped for `core` (its layer count, dim, and max_ctx).
+    pub fn for_core(core: &ModelCore, n_slots: usize) -> KvPool {
+        KvPool::new(core.n_layers(), core.dim, core.max_ctx, n_slots)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Lease a free slot; `None` when the pool is exhausted (callers
+    /// queue - nothing panics on a full pool).
+    pub fn lease(&mut self) -> Option<KvLease> {
+        self.free.pop().map(|slot| KvLease { slot })
+    }
+
+    /// Return a slot to the pool. The rows are left as-is: the next
+    /// lease overwrites from position 0 before anything reads them.
+    pub fn release(&mut self, lease: KvLease) {
+        debug_assert!(!self.free.contains(&lease.slot), "double release");
+        self.free.push(lease.slot);
+    }
+
+    /// Lease a slot and copy the parent's first `pos` rows into it, so a
+    /// new session continues from the parent's prefix without recomputing
+    /// it. `None` when the pool is exhausted.
+    pub fn fork(&mut self, parent: &KvLease, pos: usize) -> Option<KvLease> {
+        let child = self.lease()?;
+        let n = pos.min(self.max_ctx) * self.dim;
+        let (pi, ci) = (parent.slot, child.slot);
+        debug_assert_ne!(pi, ci, "fork leased the parent's slot");
+        let (src, dst): (&KvSlot, &mut KvSlot) = if pi < ci {
+            let (a, b) = self.slots.split_at_mut(ci);
+            (&a[pi], &mut b[0])
+        } else {
+            let (a, b) = self.slots.split_at_mut(pi);
+            (&b[0], &mut a[ci])
+        };
+        for (ks, kd) in src.k.iter().zip(dst.k.iter_mut()) {
+            kd[..n].copy_from_slice(&ks[..n]);
+        }
+        for (vs, vd) in src.v.iter().zip(dst.v.iter_mut()) {
+            vd[..n].copy_from_slice(&vs[..n]);
+        }
+        Some(child)
+    }
+
+    /// The leased slot's storage (opaque outside the crate; the
+    /// `ModelCore` forward primitives read/write it).
+    pub fn slot(&self, lease: &KvLease) -> &KvSlot {
+        &self.slots[lease.slot]
+    }
+
+    pub fn slot_mut(&mut self, lease: &KvLease) -> &mut KvSlot {
+        &mut self.slots[lease.slot]
+    }
+}

@@ -1,5 +1,13 @@
-//! Pure-Rust deployment path: packed low-bit linears (Table 10), the
-//! KV-cached engine, and the generation loop.
+//! Pure-Rust serving stack for packed low-bit models: immutable
+//! [`core::ModelCore`] shared across requests, per-request
+//! [`session::Session`] state over a slab [`kv::KvPool`], the
+//! continuous-batching [`sched::Scheduler`], and the single-session
+//! [`engine::Engine`] facade (see `infer::engine` docs for the
+//! architecture).
+pub mod core;
 pub mod engine;
 pub mod generate;
+pub mod kv;
 pub mod qlinear;
+pub mod sched;
+pub mod session;

@@ -231,6 +231,125 @@ impl PackedLinear {
         });
     }
 
+    /// Like [`PackedLinear::matmul`] but parallelized across **output
+    /// rows** instead of tokens - the batched-*decode* shape (a handful
+    /// of tokens, thousands of rows). Token-chunking degenerates there:
+    /// with fewer tokens than workers each chunk re-unpacks every weight
+    /// group, so the unpack amortization the batch exists for is lost.
+    /// Here each worker owns a row range, unpacks each of its groups
+    /// exactly once, and applies it to every token - total unpack work
+    /// stays one pass over the matrix regardless of the worker count.
+    ///
+    /// Accumulation per (token, row) replicates `matvec` exactly (same
+    /// group order, same FMA lanes), so results are bit-identical to
+    /// per-token `matvec` calls and to `matmul` (tested). Workers write a
+    /// row-major scratch (`tmp`, resized to out_dim * n_tokens) that is
+    /// transposed into the token-major `ys` at the end; `tmp`/`sx` are
+    /// caller-provided so steady-state batched decode allocates nothing.
+    pub fn matmul_rows(&self, xs: &[f32], n_tokens: usize, ys: &mut [f32],
+                       tmp: &mut Vec<f32>, sx: &mut Vec<f32>) {
+        debug_assert_eq!(xs.len(), n_tokens * self.in_dim);
+        debug_assert_eq!(ys.len(), n_tokens * self.out_dim);
+        if n_tokens == 0 {
+            return;
+        }
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * self.scheme.bits as usize / 32;
+        let wpr = self.words_per_row();
+        let (d, od) = (self.in_dim, self.out_dim);
+        // per-token group sums, same accumulation order as matvec's
+        sx.resize(n_tokens * gpr, 0.0);
+        for t in 0..n_tokens {
+            let x = &xs[t * d..(t + 1) * d];
+            let st = &mut sx[t * gpr..(t + 1) * gpr];
+            for (gi, s) in st.iter_mut().enumerate() {
+                *s = x[gi * g..(gi + 1) * g].iter().sum();
+            }
+        }
+        tmp.resize(od * n_tokens, 0.0);
+        let rpc = if n_tokens * od * d < PAR_MIN_WORK {
+            od
+        } else {
+            threads::chunk_len(od)
+        };
+        let sxr: &[f32] = &sx[..];
+        threads::par_chunks_mut(&mut tmp[..od * n_tokens], rpc * n_tokens,
+                                |ci, tc| {
+            let r0 = ci * rpc;
+            let mut qbuf = [0f32; MAX_STACK_GROUP];
+            let mut qheap: Vec<f32> = Vec::new();
+            let qb: &mut [f32] = if g <= MAX_STACK_GROUP {
+                &mut qbuf[..g]
+            } else {
+                qheap.resize(g, 0.0);
+                &mut qheap[..]
+            };
+            for (rl, tr) in tc.chunks_mut(n_tokens).enumerate() {
+                let r = r0 + rl;
+                let row = &self.words[r * wpr..(r + 1) * wpr];
+                tr.fill(0.0);
+                for gi in 0..gpr {
+                    self.unpack_group(&row[gi * wpg..(gi + 1) * wpg], qb);
+                    let s = self.scales[r * gpr + gi];
+                    let z = self.zeros[r * gpr + gi];
+                    for (t, acc) in tr.iter_mut().enumerate() {
+                        let xg =
+                            &xs[t * d + gi * g..t * d + (gi + 1) * g];
+                        let dot = group_dot(self.scheme.bits, qb, xg);
+                        *acc += s * (dot - z * sxr[t * gpr + gi]);
+                    }
+                }
+            }
+        });
+        for r in 0..od {
+            for t in 0..n_tokens {
+                ys[t * od + r] = tmp[r * n_tokens + t];
+            }
+        }
+    }
+
+    /// Unpack one group's packed words into `qb` (len = group), with the
+    /// same per-word lane order as every other kernel.
+    #[inline]
+    fn unpack_group(&self, gw: &[u32], qb: &mut [f32]) {
+        match self.scheme.bits {
+            2 => {
+                for (wi, &w) in gw.iter().enumerate() {
+                    let qw = &mut qb[wi * 16..(wi + 1) * 16];
+                    for (j, qv) in qw.iter_mut().enumerate() {
+                        *qv = ((w >> (2 * j)) & 3) as f32;
+                    }
+                }
+            }
+            4 => {
+                for (wi, &w) in gw.iter().enumerate() {
+                    let qw = &mut qb[wi * 8..(wi + 1) * 8];
+                    for (j, qv) in qw.iter_mut().enumerate() {
+                        *qv = ((w >> (4 * j)) & 15) as f32;
+                    }
+                }
+            }
+            _ => {
+                let bits = self.scheme.bits as usize;
+                let mask = (1u64 << bits) - 1;
+                let mut buf: u64 = 0;
+                let mut nbits = 0usize;
+                let mut wi = 0usize;
+                for qv in qb.iter_mut() {
+                    if nbits < bits {
+                        buf |= (gw[wi] as u64) << nbits;
+                        nbits += 32;
+                        wi += 1;
+                    }
+                    *qv = (buf & mask) as f32;
+                    buf >>= bits;
+                    nbits -= bits;
+                }
+            }
+        }
+    }
+
     fn matvec_rows_b2(&self, x: &[f32], sx: &[f32], r0: usize,
                       y: &mut [f32]) {
         let g = self.scheme.group;
@@ -521,6 +640,63 @@ impl PackedLinear {
     }
 }
 
+/// Largest group unpacked on the stack by `matmul_rows`; bigger groups
+/// (none of the shipped schemes) fall back to a per-worker heap buffer.
+const MAX_STACK_GROUP: usize = 256;
+
+/// One group's dot product with the exact FMA lane order of the matvec
+/// kernels: 2-bit uses 4 accumulators over 16-lane word chunks, 4-bit 2
+/// accumulators over 8-lane chunks, everything else a sequential loop -
+/// so any kernel built on it is bit-identical to `matvec`.
+#[inline]
+fn group_dot(bits: u32, qb: &[f32], xg: &[f32]) -> f32 {
+    match bits {
+        2 => {
+            let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
+            for (qw, xw) in qb.chunks_exact(16).zip(xg.chunks_exact(16)) {
+                d0 += qw[0] * xw[0]
+                    + qw[4] * xw[4]
+                    + qw[8] * xw[8]
+                    + qw[12] * xw[12];
+                d1 += qw[1] * xw[1]
+                    + qw[5] * xw[5]
+                    + qw[9] * xw[9]
+                    + qw[13] * xw[13];
+                d2 += qw[2] * xw[2]
+                    + qw[6] * xw[6]
+                    + qw[10] * xw[10]
+                    + qw[14] * xw[14];
+                d3 += qw[3] * xw[3]
+                    + qw[7] * xw[7]
+                    + qw[11] * xw[11]
+                    + qw[15] * xw[15];
+            }
+            (d0 + d1) + (d2 + d3)
+        }
+        4 => {
+            let (mut dot, mut dot2) = (0f32, 0f32);
+            for (qw, xw) in qb.chunks_exact(8).zip(xg.chunks_exact(8)) {
+                dot += qw[0] * xw[0]
+                    + qw[2] * xw[2]
+                    + qw[4] * xw[4]
+                    + qw[6] * xw[6];
+                dot2 += qw[1] * xw[1]
+                    + qw[3] * xw[3]
+                    + qw[5] * xw[5]
+                    + qw[7] * xw[7];
+            }
+            dot + dot2
+        }
+        _ => {
+            let mut dot = 0f32;
+            for (qv, xv) in qb.iter().zip(xg) {
+                dot += qv * xv;
+            }
+            dot
+        }
+    }
+}
+
 /// Dense f32 matvec baseline (the "FP16" comparator of Table 10; CPU has no
 /// native f16 math - f32 moves 2x the bytes of f16, so reported speedups
 /// are conservative vs the paper's). Row-chunked across threads for large
@@ -579,6 +755,50 @@ pub fn dense_matmul(w: &[f32], out_dim: usize, in_dim: usize, xs: &[f32],
             }
         }
     });
+}
+
+/// Row-parallel dense batched matmul, the `matmul_rows` sibling for the
+/// dense lm head in batched decode: each worker streams its row range of
+/// `w` once and applies every row to all tokens (the token-outer
+/// `dense_matmul` re-streams the whole matrix per token - ruinous for a
+/// memory-bound head at small batch). Per (token, row) the accumulation
+/// matches `dense_matvec` exactly (bit-identical, tested). `tmp` is the
+/// caller-provided row-major scratch (resized to out_dim * n_tokens).
+pub fn dense_matmul_rows(w: &[f32], out_dim: usize, in_dim: usize,
+                         xs: &[f32], n_tokens: usize, ys: &mut [f32],
+                         tmp: &mut Vec<f32>) {
+    debug_assert_eq!(w.len(), out_dim * in_dim);
+    debug_assert_eq!(xs.len(), n_tokens * in_dim);
+    debug_assert_eq!(ys.len(), n_tokens * out_dim);
+    if n_tokens == 0 {
+        return;
+    }
+    tmp.resize(out_dim * n_tokens, 0.0);
+    let rpc = if n_tokens * out_dim * in_dim < PAR_MIN_WORK {
+        out_dim
+    } else {
+        threads::chunk_len(out_dim)
+    };
+    threads::par_chunks_mut(&mut tmp[..out_dim * n_tokens],
+                            rpc * n_tokens, |ci, tc| {
+        let r0 = ci * rpc;
+        for (rl, tr) in tc.chunks_mut(n_tokens).enumerate() {
+            let row = &w[(r0 + rl) * in_dim..(r0 + rl + 1) * in_dim];
+            for (t, yv) in tr.iter_mut().enumerate() {
+                let x = &xs[t * in_dim..(t + 1) * in_dim];
+                let mut acc = 0f32;
+                for k in 0..in_dim {
+                    acc += row[k] * x[k];
+                }
+                *yv = acc;
+            }
+        }
+    });
+    for r in 0..out_dim {
+        for t in 0..n_tokens {
+            ys[t * out_dim + r] = tmp[r * n_tokens + t];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -681,6 +901,86 @@ mod tests {
                     && single.3 == multi.3,
                 "thread count {nt} changed results"
             );
+        }
+    }
+
+    #[test]
+    fn matmul_rows_is_bitexact_with_matvec_all_bits() {
+        for bits in [2u32, 3, 4] {
+            let (out_d, in_d, g) = (24, 128, 32);
+            let (pl, _) = setup(bits, g, out_d, in_d, 190 + bits as u64);
+            let mut r = Rng::new(191);
+            for n_tok in [1usize, 3, 8] {
+                let mut xs = vec![0f32; n_tok * in_d];
+                r.fill_normal(&mut xs, 0.0, 1.0);
+                let mut ys = vec![0f32; n_tok * out_d];
+                let (mut tmp, mut sx) = (Vec::new(), Vec::new());
+                pl.matmul_rows(&xs, n_tok, &mut ys, &mut tmp, &mut sx);
+                let mut y = vec![0f32; out_d];
+                for t in 0..n_tok {
+                    pl.matvec(&xs[t * in_d..(t + 1) * in_d], &mut y);
+                    for rr in 0..out_d {
+                        assert_eq!(
+                            ys[t * out_d + rr].to_bits(),
+                            y[rr].to_bits(),
+                            "bits={bits} n_tok={n_tok} t={t} r={rr}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_is_thread_deterministic() {
+        // large enough to clear PAR_MIN_WORK so row chunking kicks in
+        let (out_d, in_d) = (512, 1024);
+        let (pl, w_hat) = setup(2, 128, out_d, in_d, 195);
+        let n_tok = 5;
+        let mut r = Rng::new(196);
+        let mut xs = vec![0f32; n_tok * in_d];
+        r.fill_normal(&mut xs, 0.0, 1.0);
+        let run = || {
+            let mut ys = vec![0f32; n_tok * out_d];
+            let (mut tmp, mut sx) = (Vec::new(), Vec::new());
+            pl.matmul_rows(&xs, n_tok, &mut ys, &mut tmp, &mut sx);
+            let mut ysd = vec![0f32; n_tok * out_d];
+            dense_matmul_rows(&w_hat, out_d, in_d, &xs, n_tok, &mut ysd,
+                              &mut tmp);
+            (ys, ysd)
+        };
+        let single = with_threads(1, run);
+        for nt in [2usize, 4, 7] {
+            let multi = with_threads(nt, run);
+            assert!(single == multi,
+                    "thread count {nt} changed matmul_rows results");
+        }
+        // and the row-parallel path agrees bitwise with token-parallel
+        let (ys_rows, _) = single;
+        let mut ys_tok = vec![0f32; n_tok * out_d];
+        pl.matmul(&xs, n_tok, &mut ys_tok);
+        assert!(ys_rows.iter().zip(&ys_tok)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn dense_matmul_rows_is_bitexact_with_dense_matvec() {
+        let (out_d, in_d, n_tok) = (16, 48, 4);
+        let mut r = Rng::new(198);
+        let mut w = vec![0f32; out_d * in_d];
+        r.fill_normal(&mut w, 0.0, 0.5);
+        let mut xs = vec![0f32; n_tok * in_d];
+        r.fill_normal(&mut xs, 0.0, 1.0);
+        let mut ys = vec![0f32; n_tok * out_d];
+        let mut tmp = Vec::new();
+        dense_matmul_rows(&w, out_d, in_d, &xs, n_tok, &mut ys, &mut tmp);
+        let mut y = vec![0f32; out_d];
+        for t in 0..n_tok {
+            dense_matvec(&w, out_d, in_d, &xs[t * in_d..(t + 1) * in_d],
+                         &mut y);
+            for rr in 0..out_d {
+                assert_eq!(ys[t * out_d + rr].to_bits(), y[rr].to_bits());
+            }
         }
     }
 

@@ -1,0 +1,390 @@
+//! Continuous-batching scheduler over the shared
+//! [`ModelCore`](crate::infer::core::ModelCore) + pooled-KV
+//! [`Session`](crate::infer::session::Session)s.
+//!
+//! Each [`Scheduler::tick`]:
+//!
+//! 1. **admits** queued requests while the batch has room *and* the
+//!    [`KvPool`] has a free slot (exhaustion queues - it never panics);
+//! 2. **prefills** admitted prompts in bounded chunks
+//!    ([`SchedConfig::prefill_chunk`]) between decode steps, so a long
+//!    prompt cannot stall the live batch for more than one chunk;
+//! 3. **decodes** all prompt-complete sessions in one
+//!    [`decode_batch`](crate::infer::core::ModelCore::decode_batch) step
+//!    - one rows-parallel matmul per linear across the whole batch -
+//!    then samples each session's next token;
+//! 4. **retires** finished sequences immediately (lease back to the
+//!    pool, a [`Completion`] with latency accounting out), so a short
+//!    request never waits for a long co-batched one.
+//!
+//! Determinism: a session's logits (and therefore its sampled tokens)
+//! are bit-identical to a solo `Engine`/`generate` run of the same
+//! `(prompt, seed, sampler)` at any batch size, admission order, and
+//! thread count - co-batched requests cannot perturb each other. Pinned
+//! here, in `infer::core`, in the serve bench, and in the integration
+//! suite.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::infer::core::{ModelCore, Scratch};
+use crate::infer::kv::{KvLease, KvPool};
+use crate::infer::session::{Completion, Request, Session};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Max concurrently-live sessions (also bounds the decode batch).
+    pub max_batch: usize,
+    /// Max prompt tokens fed per session per tick during admission.
+    pub prefill_chunk: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig { max_batch: 8, prefill_chunk: 16 }
+    }
+}
+
+pub struct Scheduler {
+    core: Arc<ModelCore>,
+    pool: KvPool,
+    cfg: SchedConfig,
+    queue: VecDeque<(u64, Request, Instant)>,
+    live: Vec<Session>,
+    scratch: Scratch,
+    done: Vec<Completion>,
+    next_id: u64,
+}
+
+impl Scheduler {
+    /// A scheduler with `n_slots` pooled KV slots over a shared core
+    /// (at least one - no slots would mean no admissible request).
+    /// `cfg.max_batch` is clamped to the slot count (a session cannot be
+    /// live without a slot).
+    pub fn new(core: Arc<ModelCore>, n_slots: usize, cfg: SchedConfig)
+               -> Scheduler {
+        let n_slots = n_slots.max(1);
+        let pool = KvPool::for_core(&core, n_slots);
+        let scratch = core.scratch();
+        Scheduler {
+            core,
+            pool,
+            cfg: SchedConfig {
+                max_batch: cfg.max_batch.clamp(1, n_slots),
+                ..cfg
+            },
+            queue: VecDeque::new(),
+            live: Vec::new(),
+            scratch,
+            done: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Enqueue a request; returns its id. The request is admitted (KV
+    /// slot leased, prefill started) on a later [`Scheduler::tick`] when
+    /// capacity allows.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        if req.prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if req.prompt.len() > self.core.max_ctx {
+            bail!("prompt of {} tokens exceeds max_ctx {}",
+                  req.prompt.len(), self.core.max_ctx);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, req, Instant::now()));
+        Ok(id)
+    }
+
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn n_live(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.live.is_empty()
+    }
+
+    /// Completions collected so far (drained, ordered by request id).
+    pub fn take_completed(&mut self) -> Vec<Completion> {
+        let mut done = std::mem::take(&mut self.done);
+        done.sort_by_key(|c| c.id);
+        done
+    }
+
+    /// One scheduling round: admit + chunked prefill + one batched decode
+    /// step + retire. Returns the number of tokens emitted this tick.
+    pub fn tick(&mut self) -> Result<usize> {
+        let Scheduler { core, pool, cfg, queue, live, scratch, done, .. } =
+            self;
+
+        // 1. admission: queue -> live while a slot and batch room exist
+        while live.len() < cfg.max_batch && !queue.is_empty() {
+            match pool.lease() {
+                None => break, // exhausted: requests stay queued
+                Some(lease) => {
+                    let (id, req, submitted) = queue.pop_front().unwrap();
+                    live.push(Session::start(id, req, lease, submitted));
+                }
+            }
+        }
+
+        // 2. chunked prefill: one bounded chunk per admitted session
+        for s in live.iter_mut().filter(|s| !s.prompt_done()) {
+            let n =
+                cfg.prefill_chunk.max(1).min(s.prompt.len() - s.prefilled);
+            let chunk = &s.prompt[s.prefilled..s.prefilled + n];
+            core.prefill(pool.slot_mut(&s.lease), s.pos, chunk, scratch)?;
+            s.pos += n;
+            s.prefilled += n;
+            if s.prompt_done() {
+                // same sampling order as solo generate: first token comes
+                // from the prefill logits
+                s.next = {
+                    let logits = scratch.logits();
+                    s.sample(logits)
+                };
+            }
+        }
+
+        // 3. emission + retire-before-step: a session whose budget or
+        //    context is exhausted leaves the batch *now*, freeing its
+        //    slot for the next admission instead of stalling the batch
+        let now = Instant::now();
+        let mut emitted = 0usize;
+        let mut stepping: Vec<usize> = Vec::with_capacity(live.len());
+        let mut i = 0usize;
+        while i < live.len() {
+            let s = &mut live[i];
+            if !s.prompt_done() {
+                i += 1;
+                continue;
+            }
+            if s.pos >= core.max_ctx || s.out.len() >= s.max_new {
+                let (lease, comp) = live.remove(i).finish(now);
+                pool.release(lease);
+                done.push(comp);
+                continue;
+            }
+            let tok = s.next;
+            s.emit(tok, now);
+            emitted += 1;
+            if s.out.len() >= s.max_new {
+                let (lease, comp) = live.remove(i).finish(now);
+                pool.release(lease);
+                done.push(comp);
+                continue;
+            }
+            stepping.push(i);
+            i += 1;
+        }
+
+        // 4. one batched decode step across every still-live sequence
+        if !stepping.is_empty() {
+            let batch: Vec<(&KvLease, usize)> = stepping
+                .iter()
+                .map(|&i| (&live[i].lease, live[i].pos))
+                .collect();
+            let toks: Vec<i32> =
+                stepping.iter().map(|&i| *live[i].out.last().unwrap())
+                    .collect();
+            core.decode_batch(pool, &batch, &toks, scratch)?;
+            drop(batch);
+            for (row, &i) in stepping.iter().enumerate() {
+                let s = &mut live[i];
+                s.pos += 1;
+                s.next = {
+                    let logits = scratch.batch_logits(row);
+                    s.sample(logits)
+                };
+            }
+        }
+        Ok(emitted)
+    }
+
+    /// Tick until every submitted request has completed; returns the
+    /// completions ordered by request id.
+    pub fn run_all(&mut self) -> Result<Vec<Completion>> {
+        while !self.is_idle() {
+            self.tick()?;
+        }
+        Ok(self.take_completed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantScheme;
+    use crate::infer::engine::Engine;
+    use crate::infer::generate::{generate, Sampler};
+    use crate::util::threads::with_threads;
+
+    const VOCAB: usize = 96;
+    const CTX: usize = 48;
+
+    fn core(seed: u64) -> Arc<ModelCore> {
+        Arc::new(ModelCore::synthetic(32, 4, 8, 64, VOCAB, 2,
+                                      QuantScheme::new(2, 32), CTX, seed)
+            .unwrap())
+    }
+
+    fn prompt(len: usize, stride: usize) -> Vec<i32> {
+        (0..len).map(|i| ((i * stride + 3) % VOCAB) as i32).collect()
+    }
+
+    fn solo(core: &Arc<ModelCore>, req: &(Vec<i32>, usize, u64))
+            -> Vec<i32> {
+        let mut e = Engine::from_core(core.clone());
+        generate(&mut e, &req.0, req.1, Sampler::Temperature(0.9), req.2)
+            .unwrap()
+            .tokens
+    }
+
+    /// Scheduler outputs == solo generate outputs for every request, for
+    /// batch sizes {1, 2, 5} x thread counts {1, 4}, with different
+    /// prompt lengths, token budgets, and sampler seeds in one batch.
+    #[test]
+    fn scheduler_matches_solo_generate_across_batch_and_threads() {
+        let c = core(31);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..5)
+            .map(|i| (prompt(3 + 4 * i, 5 + i), 4 + 2 * i, 100 + i as u64))
+            .collect();
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo(&c, r)).collect();
+
+        for &bsz in &[1usize, 2, 5] {
+            for &nt in &[1usize, 4] {
+                with_threads(nt, || {
+                    let mut sched = Scheduler::new(
+                        c.clone(), bsz,
+                        SchedConfig { max_batch: bsz, prefill_chunk: 4 });
+                    for r in &reqs {
+                        sched.submit(Request {
+                            prompt: r.0.clone(),
+                            max_new: r.1,
+                            sampler: Sampler::Temperature(0.9),
+                            seed: r.2,
+                        }).unwrap();
+                    }
+                    let comps = sched.run_all().unwrap();
+                    assert_eq!(comps.len(), reqs.len());
+                    for (comp, want) in comps.iter().zip(&want) {
+                        assert_eq!(
+                            &comp.tokens, want,
+                            "batch {bsz} threads {nt} req {}: scheduler \
+                             output diverged from solo generate",
+                            comp.id
+                        );
+                    }
+                });
+            }
+        }
+    }
+
+    /// More requests than KV slots: exhaustion queues (never panics) and
+    /// every request still completes with its solo output.
+    #[test]
+    fn pool_exhaustion_queues_and_retirement_readmits() {
+        let c = core(32);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..5)
+            .map(|i| (prompt(2 + 3 * i, 7 + i), 3 + i, 900 + i as u64))
+            .collect();
+        let mut sched = Scheduler::new(c.clone(), 2, SchedConfig {
+            max_batch: 8, // clamped to the 2 slots
+            prefill_chunk: 8,
+        });
+        for r in &reqs {
+            sched.submit(Request {
+                prompt: r.0.clone(),
+                max_new: r.1,
+                sampler: Sampler::Greedy,
+                seed: r.2,
+            }).unwrap();
+        }
+        assert_eq!(sched.n_queued(), 5);
+        let mut max_live = 0usize;
+        while !sched.is_idle() {
+            sched.tick().unwrap();
+            max_live = max_live.max(sched.n_live());
+        }
+        assert!(max_live <= 2, "live {max_live} exceeded the 2 slots");
+        let comps = sched.take_completed();
+        assert_eq!(comps.len(), 5);
+        for (comp, r) in comps.iter().zip(&reqs) {
+            let mut e = Engine::from_core(c.clone());
+            let want =
+                generate(&mut e, &r.0, r.1, Sampler::Greedy, r.2)
+                    .unwrap()
+                    .tokens;
+            assert_eq!(comp.tokens, want, "req {}", comp.id);
+            assert_eq!(comp.prompt_len, r.0.len());
+            assert_eq!(comp.token_gaps.len(), comp.tokens.len());
+            assert!(comp.first_token_secs >= 0.0);
+            assert!(comp.finish_secs >= comp.first_token_secs);
+        }
+    }
+
+    /// A sequence that fills its context retires instead of erroring, and
+    /// matches generate()'s truncation behavior.
+    #[test]
+    fn context_full_retires_like_generate_truncates() {
+        let c = core(33);
+        let p = prompt(CTX - 3, 5);
+        let mut e = Engine::from_core(c.clone());
+        let want = generate(&mut e, &p, 10, Sampler::Greedy, 7)
+            .unwrap()
+            .tokens;
+        assert!(want.len() < 10, "prompt too short to hit the ctx cap");
+        let mut sched =
+            Scheduler::new(c, 1, SchedConfig::default());
+        sched.submit(Request {
+            prompt: p,
+            max_new: 10,
+            sampler: Sampler::Greedy,
+            seed: 7,
+        }).unwrap();
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps[0].tokens, want);
+    }
+
+    #[test]
+    fn submit_rejects_bad_requests() {
+        let c = core(34);
+        let mut sched = Scheduler::new(c, 1, SchedConfig::default());
+        assert!(sched.submit(Request {
+            prompt: vec![],
+            max_new: 1,
+            sampler: Sampler::Greedy,
+            seed: 1,
+        }).is_err());
+        assert!(sched.submit(Request {
+            prompt: vec![0; CTX + 1],
+            max_new: 1,
+            sampler: Sampler::Greedy,
+            seed: 1,
+        }).is_err());
+    }
+
+    #[test]
+    fn zero_budget_request_completes_empty() {
+        let c = core(35);
+        let mut sched = Scheduler::new(c, 1, SchedConfig::default());
+        sched.submit(Request {
+            prompt: prompt(4, 3),
+            max_new: 0,
+            sampler: Sampler::Greedy,
+            seed: 1,
+        }).unwrap();
+        let comps = sched.run_all().unwrap();
+        assert!(comps[0].tokens.is_empty());
+    }
+}

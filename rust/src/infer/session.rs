@@ -1,0 +1,123 @@
+//! Per-request mutable state for the serving core: a [`Session`] owns
+//! exactly what one in-flight sequence needs - its position, its sampler
+//! RNG, its KV lease from the shared [`KvPool`](crate::infer::kv::KvPool),
+//! and its generation bookkeeping (prompt progress, emitted tokens,
+//! latency timestamps). Everything immutable lives in the shared
+//! [`ModelCore`](crate::infer::core::ModelCore).
+//!
+//! The RNG is forked exactly like `infer::generate::generate` forks it
+//! (`Rng::new(seed).fork("sample")`), and tokens are sampled in the same
+//! order, so a session scheduled inside any batch emits the same token
+//! stream as a solo `generate` call with the same `(prompt, seed,
+//! sampler)` - the scheduler-vs-solo equivalence tests pin this.
+
+use std::time::Instant;
+
+use crate::infer::generate::{sample, Sampler};
+use crate::infer::kv::KvLease;
+use crate::util::rng::Rng;
+
+/// One queued or in-flight generation request.
+pub struct Request {
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub sampler: Sampler,
+    pub seed: u64,
+}
+
+/// A finished request with its output and latency accounting.
+#[derive(Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// submit -> first emitted token (includes queue wait), seconds
+    pub first_token_secs: f64,
+    /// submit -> retirement, seconds
+    pub finish_secs: f64,
+    /// per-token emission gaps (first gap measured from submission)
+    pub token_gaps: Vec<f64>,
+}
+
+/// A live sequence: mutable state only. Created by the scheduler when a
+/// request is admitted (a KV slot could be leased), destroyed into a
+/// [`Completion`] when it retires (the lease goes back to the pool).
+pub struct Session {
+    pub id: u64,
+    pub(crate) lease: KvLease,
+    /// next KV row to write == number of positions fed so far
+    pub pos: usize,
+    pub(crate) prompt: Vec<i32>,
+    /// prompt tokens fed so far (chunked prefill cursor)
+    pub(crate) prefilled: usize,
+    /// sampled-but-not-yet-emitted token (valid once the prompt is done)
+    pub(crate) next: i32,
+    pub(crate) rng: Rng,
+    pub(crate) sampler: Sampler,
+    pub(crate) max_new: usize,
+    pub out: Vec<i32>,
+    pub(crate) submitted: Instant,
+    pub(crate) first_token_secs: Option<f64>,
+    pub(crate) last_event: Instant,
+    pub(crate) token_gaps: Vec<f64>,
+}
+
+impl Session {
+    pub(crate) fn start(id: u64, req: Request, lease: KvLease,
+                        submitted: Instant) -> Session {
+        Session {
+            id,
+            lease,
+            pos: 0,
+            max_new: req.max_new,
+            out: Vec::with_capacity(req.max_new),
+            rng: Rng::new(req.seed).fork("sample"),
+            sampler: req.sampler,
+            prompt: req.prompt,
+            prefilled: 0,
+            next: 0,
+            submitted,
+            first_token_secs: None,
+            last_event: submitted,
+            token_gaps: Vec::with_capacity(req.max_new),
+        }
+    }
+
+    pub(crate) fn prompt_done(&self) -> bool {
+        self.prefilled == self.prompt.len()
+    }
+
+    /// Sample from `logits` with this session's RNG (same call order as
+    /// solo `generate`).
+    pub(crate) fn sample(&mut self, logits: &[f32]) -> i32 {
+        sample(logits, self.sampler, &mut self.rng)
+    }
+
+    /// Record one emitted token's latency.
+    pub(crate) fn emit(&mut self, tok: i32, now: Instant) {
+        let gap = now.duration_since(self.last_event).as_secs_f64();
+        self.last_event = now;
+        if self.first_token_secs.is_none() {
+            self.first_token_secs =
+                Some(now.duration_since(self.submitted).as_secs_f64());
+        }
+        self.token_gaps.push(gap);
+        self.out.push(tok);
+    }
+
+    pub(crate) fn finish(self, now: Instant) -> (KvLease, Completion) {
+        let first = self.first_token_secs.unwrap_or(0.0);
+        (
+            self.lease,
+            Completion {
+                id: self.id,
+                prompt_len: self.prompt.len(),
+                tokens: self.out,
+                first_token_secs: first,
+                finish_secs:
+                    now.duration_since(self.submitted).as_secs_f64(),
+                token_gaps: self.token_gaps,
+            },
+        )
+    }
+}

@@ -256,6 +256,103 @@ fn run(args: &[String]) -> Result<()> {
                 rep.decode_tok_per_sec
             );
         }
+        "serve-sim" => {
+            // Multi-request serving demo: a synthetic request stream
+            // through the continuous-batching scheduler (shared
+            // ModelCore, pooled KV slots, chunked prefill admission),
+            // reporting aggregate throughput + latency percentiles.
+            use efficientqat::infer::core::ModelCore;
+            use efficientqat::infer::sched::{SchedConfig, Scheduler};
+            use efficientqat::infer::session::Request;
+            use efficientqat::util::rng::Rng;
+            use efficientqat::util::stats::percentile;
+            use std::sync::Arc;
+
+            let requests = cli.flag_usize("requests", 16)?;
+            let slots = cli.flag_usize("slots", 4)?;
+            let tokens = cli.flag_usize("tokens", 16)?;
+            let plen = cli.flag_usize("prompt-len", 12)?.max(1);
+            let chunk = cli.flag_usize("prefill-chunk", 8)?.max(1);
+            let seed = cli.flag_usize("seed", 17)? as u64;
+            let max_ctx = plen + tokens + 4;
+
+            let core = match cli.flag("model") {
+                Some(path) => {
+                    let c = ctx(&cli)?;
+                    let qm = QuantizedModel::load(path)?;
+                    let info = c.rt.manifest().preset(&qm.preset)?;
+                    Arc::new(ModelCore::from_quantized(&qm, info,
+                                                       max_ctx)?)
+                }
+                None => Arc::new(ModelCore::synthetic(
+                    64, 4, 16, 128, 256, 2, QuantScheme::new(2, 32),
+                    max_ctx, seed)?),
+            };
+            let mut sched = Scheduler::new(core.clone(), slots,
+                                           SchedConfig {
+                max_batch: slots,
+                prefill_chunk: chunk,
+            });
+            // synthetic stream: varied prompt lengths/contents/budgets
+            let mut rng = Rng::new(seed).fork("serve-sim");
+            for i in 0..requests {
+                let n = 1 + rng.below(plen);
+                let prompt: Vec<i32> = (0..n)
+                    .map(|_| rng.below(core.vocab) as i32)
+                    .collect();
+                sched.submit(Request {
+                    prompt,
+                    max_new: 1 + rng.below(tokens.max(1)),
+                    sampler: Sampler::Temperature(0.8),
+                    seed: seed + 1000 + i as u64,
+                })?;
+            }
+            let t0 = std::time::Instant::now();
+            let mut ticks = 0usize;
+            let mut max_live = 0usize;
+            while !sched.is_idle() {
+                sched.tick()?;
+                ticks += 1;
+                max_live = max_live.max(sched.n_live());
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let comps = sched.take_completed();
+            let total: usize = comps.iter().map(|c| c.tokens.len()).sum();
+            let gaps: Vec<f64> = comps
+                .iter()
+                .flat_map(|c| c.token_gaps.iter().map(|g| g * 1e3))
+                .collect();
+            let firsts: Vec<f64> = comps
+                .iter()
+                .map(|c| c.first_token_secs * 1e3)
+                .collect();
+            let finishes: Vec<f64> =
+                comps.iter().map(|c| c.finish_secs * 1e3).collect();
+            anyhow::ensure!(comps.len() == requests,
+                            "serve-sim lost requests");
+            anyhow::ensure!(total > 0, "serve-sim emitted no tokens");
+            println!(
+                "serve-sim: {requests} requests over {slots} KV slot(s), \
+                 {ticks} ticks, max {max_live} live"
+            );
+            println!(
+                "  {total} tokens in {:.1}ms -> {:.0} tok/s aggregate",
+                secs * 1e3,
+                total as f64 / secs.max(1e-9)
+            );
+            println!(
+                "  token latency    p50 {:.2}ms  p95 {:.2}ms",
+                percentile(&gaps, 50.0), percentile(&gaps, 95.0)
+            );
+            println!(
+                "  first token      p50 {:.2}ms  p95 {:.2}ms",
+                percentile(&firsts, 50.0), percentile(&firsts, 95.0)
+            );
+            println!(
+                "  request finish   p50 {:.2}ms  p95 {:.2}ms",
+                percentile(&finishes, 50.0), percentile(&finishes, 95.0)
+            );
+        }
         "size" => {
             let name = cli.flag_or("model", "llama2-7b");
             let shape = efficientqat::config::llama_by_name(&name)?;

@@ -120,6 +120,20 @@ pub trait Executor {
     /// Execute with spec-checked args; returns outputs in manifest order.
     fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>>;
 
+    /// Execute with spec-checked args, writing outputs (manifest order)
+    /// into caller-held buffers whose allocations persist across calls.
+    /// The native backend overrides this to compute results **in place**
+    /// - a steady-state train/eval loop that hands the same `outs` back
+    /// every step allocates no fresh output Vec per step (ROADMAP's
+    /// "persistent output buffers" lever). Default: `run` + move.
+    fn run_into(&self, args: &[Arg], outs: &mut Vec<Vec<f32>>)
+                -> Result<()> {
+        let bufs = self.run(args)?;
+        outs.clear();
+        outs.extend(bufs.into_iter().map(|b| b.data));
+        Ok(())
+    }
+
     /// Convenience: run and return the single output.
     fn run1(&self, args: &[Arg]) -> Result<Vec<f32>> {
         let mut outs = self.run(args)?;

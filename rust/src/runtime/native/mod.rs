@@ -37,8 +37,10 @@ use crate::io::manifest::{ArtifactSpec, Layout, Manifest, PresetCfg};
 use crate::runtime::{check_args, Arg, Backend, Executor, OutBuf};
 
 use model::{block_bwd, block_fwd, block_fwd_notape, model_bwd, model_fwd,
-            model_fwd_notape, BlockRefs, FwdScratch, Geom, GradMode,
+            model_fwd_notape_into, BlockRefs, FwdScratch, Geom, GradMode,
             LinGrad, LinKind, LinRef, ModelRefs};
+#[cfg(test)]
+use model::model_fwd_notape;
 
 const LIN_NAMES: [&str; 7] = ["attn.q", "attn.k", "attn.v", "attn.o",
                               "mlp.gate", "mlp.up", "mlp.down"];
@@ -233,13 +235,26 @@ fn scalar_arg(args: &[Arg], i: usize) -> f32 {
     }
 }
 
-fn outs(spec: &ArtifactSpec, datas: Vec<Vec<f32>>) -> Vec<OutBuf> {
-    debug_assert_eq!(spec.outputs.len(), datas.len());
-    spec.outputs
-        .iter()
-        .zip(datas)
-        .map(|(name, data)| OutBuf { name: name.clone(), data })
-        .collect()
+/// Size the reusable output set: exactly `lens.len()` buffers, each
+/// resized (capacity retained across calls) to its output length.
+/// Entries overwrite every element they declare, so stale contents never
+/// leak. Slice-pattern the result (`let [p2, m2, ..] = &mut outs[..]`)
+/// for simultaneous disjoint access.
+fn prep_outs(outs: &mut Vec<Vec<f32>>, lens: &[usize]) {
+    outs.truncate(lens.len());
+    outs.resize_with(lens.len(), Vec::new);
+    for (b, &l) in outs.iter_mut().zip(lens) {
+        b.resize(l, 0.0);
+    }
+}
+
+/// Move an owned result into output slot `i` (entries whose producer
+/// already allocates - block forwards, captures - just hand it over).
+fn set_out(outs: &mut Vec<Vec<f32>>, i: usize, data: Vec<f32>) {
+    while outs.len() <= i {
+        outs.push(Vec::new());
+    }
+    outs[i] = data;
 }
 
 // ---------------------------------------------------------------------------
@@ -495,7 +510,14 @@ impl NativeExec {
         self.spec.group.unwrap_or(self.ps.cfg.default_group)
     }
 
-    fn run_impl(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+    /// Entry dispatch, writing outputs (manifest order) into the
+    /// caller's reusable buffer set: the Adam-step entries copy the
+    /// incoming state into `outs` and update in place, the eval
+    /// forwards stream logits straight into `outs[0]` - so a loop that
+    /// recycles `outs` (every coordinator does) allocates no fresh
+    /// output Vec per step.
+    fn run_impl(&self, args: &[Arg], outs: &mut Vec<Vec<f32>>)
+                -> Result<()> {
         let cfg = &self.ps.cfg;
         let ps = &self.ps;
         match self.kind {
@@ -505,13 +527,14 @@ impl NativeExec {
                 let x = i32_arg(args, 1);
                 let embed = fpl.slice(params, "embed")?;
                 let d = cfg.dim;
-                let mut h = vec![0f32; x.len() * d];
+                prep_outs(outs, &[x.len() * d]);
+                let h = &mut outs[0];
                 for (r, &tok) in x.iter().enumerate() {
                     let t = tok as usize;
                     h[r * d..(r + 1) * d]
                         .copy_from_slice(&embed[t * d..(t + 1) * d]);
                 }
-                Ok(outs(&self.spec, vec![h]))
+                Ok(())
             }
             EntryKind::BlockFwdFp => {
                 // forward-only: no tape, streamed attention
@@ -522,7 +545,9 @@ impl NativeExec {
                 let blk = block_refs_fp(cfg, bl, bp)?;
                 let out = block_fwd_notape(geom, &blk, h,
                                            &mut self.scratch.borrow_mut());
-                Ok(outs(&self.spec, vec![out]))
+                outs.truncate(1);
+                set_out(outs, 0, out);
+                Ok(())
             }
             EntryKind::BlockCaptureFp => {
                 // capture needs the intra-block activations -> taped
@@ -533,8 +558,13 @@ impl NativeExec {
                 let blk = block_refs_fp(cfg, bl, bp)?;
                 let (out, tape) = block_fwd(geom, &blk, h);
                 let cap = tape.capture();
-                Ok(outs(&self.spec, vec![out, cap.x_attn, cap.attn_ctx,
-                                         cap.x_mlp, cap.mlp_mid]))
+                outs.truncate(5);
+                set_out(outs, 0, out);
+                set_out(outs, 1, cap.x_attn);
+                set_out(outs, 2, cap.attn_ctx);
+                set_out(outs, 3, cap.x_mlp);
+                set_out(outs, 4, cap.mlp_mid);
+                Ok(())
             }
             EntryKind::BlockFwdQ => {
                 let g = self.group();
@@ -549,7 +579,9 @@ impl NativeExec {
                                              norms, g)?;
                 let out = block_fwd_notape(geom, &blk, h,
                                            &mut self.scratch.borrow_mut());
-                Ok(outs(&self.spec, vec![out]))
+                outs.truncate(1);
+                set_out(outs, 0, out);
+                Ok(())
             }
             EntryKind::BlockLoss => {
                 let g = self.group();
@@ -565,7 +597,9 @@ impl NativeExec {
                 let out = block_fwd_notape(geom, &blk, h,
                                            &mut self.scratch.borrow_mut());
                 let loss = mse_loss(&out, target);
-                Ok(outs(&self.spec, vec![vec![loss]]))
+                prep_outs(outs, &[1]);
+                outs[0][0] = loss;
+                Ok(())
             }
             EntryKind::BlockApStep => {
                 let g = self.group();
@@ -593,23 +627,27 @@ impl NativeExec {
                     *v *= m_wf;
                 }
                 mask_qp_halves(&mut g_qp, m_sf, m_zf);
-                let mut bp2 = bp.to_vec();
-                let mut m_w2 = m_w.to_vec();
-                let mut v_w2 = v_w.to_vec();
-                adam_ref(&mut bp2, &g_bp, &mut m_w2, &mut v_w2, step,
-                         lr_w);
-                let mut qp2 = qp.to_vec();
-                let mut m_q2 = m_q.to_vec();
-                let mut v_q2 = v_q.to_vec();
-                adam_ref(&mut qp2, &g_qp, &mut m_q2, &mut v_q2, step,
-                         lr_q);
+                prep_outs(outs, &[bp.len(), qp.len(), m_w.len(),
+                                  v_w.len(), m_q.len(), v_q.len(), 1]);
+                let [bp2, qp2, m_w2, v_w2, m_q2, v_q2, lbuf] =
+                    &mut outs[..]
+                else {
+                    unreachable!("prep_outs sized 7");
+                };
+                bp2.copy_from_slice(bp);
+                m_w2.copy_from_slice(m_w);
+                v_w2.copy_from_slice(v_w);
+                adam_ref(bp2, &g_bp, m_w2, v_w2, step, lr_w);
+                qp2.copy_from_slice(qp);
+                m_q2.copy_from_slice(m_q);
+                v_q2.copy_from_slice(v_q);
+                adam_ref(qp2, &g_qp, m_q2, v_q2, step, lr_q);
                 for i in 0..bp2.len() {
                     let clipped = bp2[i].clamp(lo[i], hi[i]);
                     bp2[i] = proj * clipped + (1.0 - proj) * bp2[i];
                 }
-                Ok(outs(&self.spec,
-                        vec![bp2, qp2, m_w2, v_w2, m_q2, v_q2,
-                             vec![loss]]))
+                lbuf[0] = loss;
+                Ok(())
             }
             EntryKind::ModelFwdFp => {
                 let fpl = ps.layout("fp")?;
@@ -617,10 +655,11 @@ impl NativeExec {
                 let x = i32_arg(args, 1);
                 let geom = &self.geom;
                 let mp = model_refs_fp(cfg, fpl, params, None)?;
-                let logits = model_fwd_notape(
+                prep_outs(outs, &[x.len() * cfg.vocab]);
+                model_fwd_notape_into(
                     geom, &mp, x, cfg.vocab,
-                    &mut self.scratch.borrow_mut());
-                Ok(outs(&self.spec, vec![logits]))
+                    &mut self.scratch.borrow_mut(), &mut outs[0]);
+                Ok(())
             }
             EntryKind::ModelFwdQ | EntryKind::ModelFwdLora => {
                 let g = self.group();
@@ -640,10 +679,11 @@ impl NativeExec {
                 let geom = &self.geom;
                 let mp = model_refs_q(cfg, wql, qpl, fprl, wq, qp, fpr,
                                       g, lora_ref)?;
-                let logits = model_fwd_notape(
+                prep_outs(outs, &[x.len() * cfg.vocab]);
+                model_fwd_notape_into(
                     geom, &mp, x, cfg.vocab,
-                    &mut self.scratch.borrow_mut());
-                Ok(outs(&self.spec, vec![logits]))
+                    &mut self.scratch.borrow_mut(), &mut outs[0]);
+                Ok(())
             }
             EntryKind::PretrainStep | EntryKind::E2eFullStep => {
                 let fpl = ps.layout("fp")?;
@@ -671,11 +711,16 @@ impl NativeExec {
                                    &dlogits, GradMode::All);
                 let mut g_flat = vec![0f32; fpl.size];
                 scatter_fp_grads(fpl, cfg.n_layers, &mg, &mut g_flat)?;
-                let mut p2 = params.to_vec();
-                let mut m2 = m.to_vec();
-                let mut v2 = v.to_vec();
-                adam_ref(&mut p2, &g_flat, &mut m2, &mut v2, step, lr);
-                Ok(outs(&self.spec, vec![p2, m2, v2, vec![loss]]))
+                prep_outs(outs, &[params.len(), m.len(), v.len(), 1]);
+                let [p2, m2, v2, lbuf] = &mut outs[..] else {
+                    unreachable!("prep_outs sized 4");
+                };
+                p2.copy_from_slice(params);
+                m2.copy_from_slice(m);
+                v2.copy_from_slice(v);
+                adam_ref(p2, &g_flat, m2, v2, step, lr);
+                lbuf[0] = loss;
+                Ok(())
             }
             EntryKind::E2eQpStep => {
                 let g = self.group();
@@ -724,11 +769,16 @@ impl NativeExec {
                     }
                 }
                 mask_qp_halves(&mut g_qp, m_sf, m_zf);
-                let mut qp2 = qp.to_vec();
-                let mut m2 = m_q.to_vec();
-                let mut v2 = v_q.to_vec();
-                adam_ref(&mut qp2, &g_qp, &mut m2, &mut v2, step, lr);
-                Ok(outs(&self.spec, vec![qp2, m2, v2, vec![loss]]))
+                prep_outs(outs, &[qp.len(), m_q.len(), v_q.len(), 1]);
+                let [qp2, m2, v2, lbuf] = &mut outs[..] else {
+                    unreachable!("prep_outs sized 4");
+                };
+                qp2.copy_from_slice(qp);
+                m2.copy_from_slice(m_q);
+                v2.copy_from_slice(v_q);
+                adam_ref(qp2, &g_qp, m2, v2, step, lr);
+                lbuf[0] = loss;
+                Ok(())
             }
             EntryKind::E2eLoraStep => {
                 let g = self.group();
@@ -776,11 +826,16 @@ impl NativeExec {
                         }
                     }
                 }
-                let mut l2 = lora.to_vec();
-                let mut m2 = m.to_vec();
-                let mut v2 = v.to_vec();
-                adam_ref(&mut l2, &g_lora, &mut m2, &mut v2, step, lr);
-                Ok(outs(&self.spec, vec![l2, m2, v2, vec![loss]]))
+                prep_outs(outs, &[lora.len(), m.len(), v.len(), 1]);
+                let [l2, m2, v2, lbuf] = &mut outs[..] else {
+                    unreachable!("prep_outs sized 4");
+                };
+                l2.copy_from_slice(lora);
+                m2.copy_from_slice(m);
+                v2.copy_from_slice(v);
+                adam_ref(l2, &g_lora, m2, v2, step, lr);
+                lbuf[0] = loss;
+                Ok(())
             }
         }
     }
@@ -792,8 +847,24 @@ impl Executor for NativeExec {
     }
 
     fn run(&self, args: &[Arg]) -> Result<Vec<OutBuf>> {
+        let mut datas = Vec::new();
+        self.run_into(args, &mut datas)?;
+        debug_assert_eq!(self.spec.outputs.len(), datas.len());
+        Ok(self
+            .spec
+            .outputs
+            .iter()
+            .zip(datas)
+            .map(|(name, data)| OutBuf { name: name.clone(), data })
+            .collect())
+    }
+
+    /// The in-place path: results land directly in the caller's reused
+    /// buffers (see `run_impl`); `run` is a compat wrapper over this.
+    fn run_into(&self, args: &[Arg], outs: &mut Vec<Vec<f32>>)
+                -> Result<()> {
         check_args(&self.spec, args)?;
-        self.run_impl(args)
+        self.run_impl(args, outs)
     }
 }
 
@@ -1221,6 +1292,56 @@ mod tests {
                     Arg::I32(&x)])
             .unwrap();
         assert_eq!(got, again);
+    }
+
+    /// `run_into` writes results into the caller's buffers and reuses
+    /// their allocations across calls (the persistent-output-buffer
+    /// lever), producing exactly what `run` produces.
+    #[test]
+    fn run_into_reuses_buffers_and_matches_run() {
+        use crate::model::init::init_fp_params;
+
+        let be = NativeBackend::new();
+        let cfg = be.manifest().preset("synthetic").unwrap().config
+            .clone();
+        let fpl = be.manifest().layout("synthetic", "fp").unwrap().clone();
+        let exec = be.exec("synthetic", "pretrain_step").unwrap();
+        let params = init_fp_params(&fpl, 2);
+        let m = vec![0f32; fpl.size];
+        let v = vec![0f32; fpl.size];
+        let n = cfg.e2e_batch * cfg.e2e_ctx;
+        let x: Vec<i32> =
+            (0..n).map(|i| ((i * 3 + 1) % cfg.vocab) as i32).collect();
+        let y: Vec<i32> =
+            (0..n).map(|i| ((i * 3 + 2) % cfg.vocab) as i32).collect();
+        let args = [
+            Arg::F32(&params), Arg::F32(&m), Arg::F32(&v), Arg::I32(&x),
+            Arg::I32(&y), Arg::Scalar(1.0), Arg::Scalar(1e-3),
+        ];
+        let want = exec.run(&args).unwrap();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        exec.run_into(&args, &mut outs).unwrap();
+        assert_eq!(outs.len(), want.len());
+        for (o, w) in outs.iter().zip(&want) {
+            assert_eq!(o, &w.data, "run_into diverges from run");
+        }
+        // second call reuses the same allocations (no fresh output Vecs)
+        let ptrs: Vec<*const f32> =
+            outs.iter().map(|b| b.as_ptr()).collect();
+        exec.run_into(&args, &mut outs).unwrap();
+        let ptrs2: Vec<*const f32> =
+            outs.iter().map(|b| b.as_ptr()).collect();
+        assert_eq!(ptrs, ptrs2, "output buffers were reallocated");
+        // eval forward entry through run_into (logits written in place)
+        let fexec = be.exec("synthetic", "model_fwd_fp").unwrap();
+        let ne = cfg.eval_batch * cfg.eval_ctx;
+        let xe: Vec<i32> =
+            (0..ne).map(|i| ((i * 5 + 1) % cfg.vocab) as i32).collect();
+        let fargs = [Arg::F32(&params), Arg::I32(&xe)];
+        let lw = fexec.run1(&fargs).unwrap();
+        let mut fouts: Vec<Vec<f32>> = Vec::new();
+        fexec.run_into(&fargs, &mut fouts).unwrap();
+        assert_eq!(fouts[0], lw);
     }
 
     #[test]

@@ -510,7 +510,19 @@ pub fn block_fwd_notape(g: &Geom, blk: &BlockRefs, x: &[f32],
 /// hidden buffer. Logits are bit-identical to the taped forward.
 pub fn model_fwd_notape(g: &Geom, mp: &ModelRefs, x_ids: &[i32],
                         vocab: usize, sc: &mut FwdScratch) -> Vec<f32> {
+    let mut logits = vec![0f32; g.m() * vocab];
+    model_fwd_notape_into(g, mp, x_ids, vocab, sc, &mut logits);
+    logits
+}
+
+/// [`model_fwd_notape`] writing the logits into a caller-provided buffer
+/// (len m * vocab, fully overwritten) - the allocation-free output path
+/// behind the native backend's `run_into` eval entries.
+pub fn model_fwd_notape_into(g: &Geom, mp: &ModelRefs, x_ids: &[i32],
+                             vocab: usize, sc: &mut FwdScratch,
+                             logits: &mut [f32]) {
     let (m, d) = (g.m(), g.dim);
+    debug_assert_eq!(logits.len(), m * vocab);
     let mut h = vec![0f32; m * d];
     for (r, &tok) in x_ids.iter().enumerate() {
         let ti = tok as usize;
@@ -524,9 +536,7 @@ pub fn model_fwd_notape(g: &Geom, mp: &ModelRefs, x_ids: &[i32],
     sc.inv.resize(m, 0.0);
     ops::rms_norm_fwd(&h, m, d, mp.final_norm, g.eps, &mut h_normed,
                       &mut sc.inv);
-    let mut logits = vec![0f32; m * vocab];
-    ops::matmul_nt(&h_normed, m, d, mp.head, vocab, &mut logits);
-    logits
+    ops::matmul_nt(&h_normed, m, d, mp.head, vocab, logits);
 }
 
 /// Block backward: given d(h_out), returns (d(x), 7 LinGrads,

@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 gate: release build + full test suite + a fast-mode inference
 # bench smoke that must produce a valid machine-readable perf snapshot
-# (runs/bench.json, schema 3: inference + native train_step + the
-# taped-vs-forward-only eval_forward section) + a bounded end-to-end
-# Block-AP -> E2E-QP training smoke and a forward-only eval smoke on the
-# native backend (no HLO artifacts required). Run from anywhere; operates
-# on the repo root.
+# (runs/bench.json, schema 4: inference + native train_step +
+# taped-vs-forward-only eval_forward + the continuous-batching serve
+# section) + a bounded serve-sim smoke + a bounded end-to-end Block-AP ->
+# E2E-QP training smoke and a forward-only eval smoke on the native
+# backend (no HLO artifacts required). Run from anywhere; operates on
+# the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,9 +14,17 @@ cargo build --release
 cargo test -q
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (eval_forward included)
+# runs/bench.json is missing or schema-invalid (schema 4: eval_forward +
+# the continuous-batching serve section, whose scheduler-vs-solo logit
+# bit-equality is asserted inside the bench itself)
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
+
+# serving smoke: bounded synthetic request stream through the
+# continuous-batching scheduler (shared ModelCore + pooled-KV sessions);
+# fails on lost requests or zero emitted tokens
+cargo run --release --bin eqat -- serve-sim --requests 8 --slots 3 \
+  --tokens 8 --prompt-len 10 --prefill-chunk 4
 
 # native-backend train smoke: pretrain (bounded) -> Block-AP -> E2E-QP ->
 # ppl vs RTN, all pure-Rust, fails on non-finite losses
