@@ -5,9 +5,10 @@
 //! 1/4/8 with latency percentiles (custom harness - criterion is
 //! unavailable offline; see rust/src/bench/mod.rs).
 //!
-//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 4:
+//! Writes the machine-readable perf snapshot `runs/bench.json` (schema 5:
 //! inference sections + native train_step + taped-vs-forward-only
-//! eval_forward + serve) so the throughput trajectory is tracked across
+//! eval_forward + serve + the paged-KV kv_fork section; see
+//! docs/BENCH_SCHEMA.md) so the throughput trajectory is tracked across
 //! PRs. `EQAT_BENCH_FAST=1` shrinks shapes/iterations for CI smoke runs;
 //! `EQAT_THREADS=N` caps the worker count.
 

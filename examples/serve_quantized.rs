@@ -1,7 +1,7 @@
 //! Deployment scenario: load a packed low-bit model from disk and serve
 //! a stream of concurrent requests with the pure-Rust serving core (no
 //! Python, no XLA on the request path): one shared immutable `ModelCore`,
-//! per-request sessions leasing KV slots from a slab pool, and the
+//! per-request sessions leasing page tables from the paged KV pool, and
 //! continuous-batching `Scheduler` running one rows-parallel matmul per
 //! linear per tick across all live sequences.
 //!
@@ -89,8 +89,8 @@ fn main() -> Result<()> {
     }
     let seq_secs = t0.elapsed().as_secs_f64();
 
-    // batched: all requests live at once, 4 pooled KV slots (the last
-    // two queue until a sequence retires and frees its slot)
+    // batched: all requests live at once over 4 sequences' worth of KV
+    // pages (late requests queue until pages free up as sequences retire)
     let mut sched = Scheduler::new(core, 4, SchedConfig {
         max_batch: 4,
         prefill_chunk: 8,

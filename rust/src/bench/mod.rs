@@ -5,12 +5,16 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 4 = inference sections + native train_step + eval_forward +
-//! the continuous-batching `serve` section: batched decode tokens/s at
-//! batch 1/4/8 vs sequential per-request decode, with per-token latency
-//! percentiles and scheduler-vs-solo bit-equality asserted) so the perf
-//! trajectory is trackable across PRs; [`check_bench_json`] validates it
-//! (used by scripts/tier1.sh). Schemas 1-3 from older PRs stay accepted.
+//! (schema 5 = inference sections + native train_step + eval_forward +
+//! the continuous-batching `serve` section + the paged-KV `kv_fork`
+//! section: zero-copy fork latency and bytes copied vs the deep-copy
+//! fork, and prefix-shared vs copy-fork zeroshot-style scoring
+//! throughput, with bit-equality between the two scoring paths asserted
+//! inside the bench) so the perf trajectory is trackable across PRs;
+//! [`check_bench_json`] validates it (used by scripts/tier1.sh).
+//! Schemas 1-4 from older PRs stay accepted. Every section and field is
+//! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
+//! bumping the schema.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -161,14 +165,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (sv_md, sv_json) = serve_throughput(fast)?;
     md.push_str(&sv_md);
+    md.push('\n');
+    let (kf_md, kf_json) = kv_fork_throughput(fast)?;
+    md.push_str(&kf_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 4 = schema 3 + the continuous-batching serve section
-        ("schema", Json::num(4.0)),
+        // schema 5 = schema 4 + the paged-KV kv_fork section
+        ("schema", Json::num(5.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -178,8 +185,169 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("train_step", ts_json),
         ("eval_forward", ef_json),
         ("serve", sv_json),
+        ("kv_fork", kf_json),
     ]);
     Ok((md, payload))
+}
+
+/// Paged-KV fork cost: zero-copy prefix-shared forks vs the deep-copy
+/// fork the slab pool used to do, plus zeroshot-style candidate scoring
+/// throughput over both paths (N options scored off one prefilled
+/// prefix). Before timing, the bench *asserts* the paging contracts:
+/// a plain fork copies zero bytes, continuing from it COWs at most one
+/// page, and shared-prefix scoring logits are bit-identical to
+/// copy-fork scoring. Schema-5 `kv_fork` section of runs/bench.json.
+pub fn kv_fork_throughput(fast: bool) -> Result<(String, Json)> {
+    let (dim, nh, hd, inter, vocab, n_layers) = if fast {
+        (64usize, 4usize, 16usize, 128usize, 256usize, 2usize)
+    } else {
+        (256, 4, 64, 512, 1024, 2)
+    };
+    let prefix_len = if fast { 96 } else { 192 };
+    let opt_len = 4usize;
+    let n_opts = if fast { 4 } else { 8 };
+    let scoring_reps = if fast { 3 } else { 10 };
+    let max_ctx = prefix_len + opt_len + 4;
+    let sch = QuantScheme::new(2, 32);
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, sch, max_ctx, 77)?);
+    let mut pool = KvPool::for_core(&core, 2);
+    let page_rows = pool.page_rows();
+    ensure!(prefix_len > page_rows,
+            "kv_fork bench prefix must span multiple pages");
+    let mut sc = core.scratch();
+    let prefix: Vec<i32> =
+        (0..prefix_len).map(|i| ((i * 13 + 7) % vocab) as i32).collect();
+    let parent = pool.lease().expect("2-sequence pool");
+    core.prefill(&mut pool, &parent, 0, &prefix, &mut sc)?;
+    let prefix_pages = pool.seq_pages(&parent);
+
+    // fork/release latency: zero-copy share vs deep copy of the prefix
+    let fork_iters = if fast { 200 } else { 500 };
+    let b0 = pool.bytes_copied();
+    let r_fork = bench("kv-fork", 5, fork_iters, || {
+        let f = pool.fork(&parent, prefix_len).unwrap();
+        pool.release(f);
+    });
+    ensure!(pool.bytes_copied() == b0,
+            "kv_fork bench: plain fork copied bytes");
+    let copy_iters = if fast { 50 } else { 100 };
+    let b1 = pool.bytes_copied();
+    let r_copy = bench("kv-fork-copy", 2, copy_iters, || {
+        let f = pool.fork_copy(&parent, prefix_len).unwrap();
+        pool.release(f);
+    });
+    let copy_bytes_per_fork = (pool.bytes_copied() - b1)
+        / (copy_iters + 2) as u64;
+
+    // zeroshot-style scoring: N candidate continuations off the shared
+    // prefix, prefix-shared forks vs deep-copy forks, bit-equal logits
+    let opts: Vec<Vec<i32>> = (0..n_opts)
+        .map(|o| {
+            (0..opt_len)
+                .map(|t| ((3 + o * 7 + t * 11) % vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let mut buf = Vec::new();
+    let mut shared_logits: Vec<Vec<f32>> = Vec::new();
+    let b2 = pool.bytes_copied();
+    let t0 = Instant::now();
+    for rep in 0..scoring_reps {
+        for opt in &opts {
+            let f = pool.fork(&parent, prefix_len).unwrap();
+            let r = core.forward_logits(&mut pool, &f, prefix_len, opt,
+                                        &mut sc, &mut buf);
+            pool.release(f);
+            r?;
+            if rep == 0 {
+                shared_logits.push(buf.clone());
+            }
+        }
+    }
+    let shared_secs = t0.elapsed().as_secs_f64();
+    let cow_bytes_per_fork = (pool.bytes_copied() - b2)
+        / (scoring_reps * n_opts) as u64;
+    ensure!(cow_bytes_per_fork <= pool.page_bytes(),
+            "kv_fork bench: COW copied more than one page per fork");
+
+    let mut copy_logits: Vec<Vec<f32>> = Vec::new();
+    let t1 = Instant::now();
+    for rep in 0..scoring_reps {
+        for opt in &opts {
+            let f = pool.fork_copy(&parent, prefix_len).unwrap();
+            let r = core.forward_logits(&mut pool, &f, prefix_len, opt,
+                                        &mut sc, &mut buf);
+            pool.release(f);
+            r?;
+            if rep == 0 {
+                copy_logits.push(buf.clone());
+            }
+        }
+    }
+    let copy_secs = t1.elapsed().as_secs_f64();
+    for (oi, (a, b)) in
+        shared_logits.iter().zip(&copy_logits).enumerate()
+    {
+        ensure!(
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "kv_fork bench: shared-prefix scoring logits diverge from \
+             copy-fork scoring (option {oi})"
+        );
+    }
+    pool.release(parent);
+
+    let n_tok = (scoring_reps * n_opts * opt_len) as f64;
+    let shared_tps = n_tok / shared_secs.max(1e-9);
+    let copy_tps = n_tok / copy_secs.max(1e-9);
+    let speedup = shared_tps / copy_tps.max(1e-9);
+    crate::info!("kv_fork bench: fork {:.2}us vs copy-fork {:.2}us; \
+                  scoring {shared_tps:.0} vs {copy_tps:.0} tok/s \
+                  ({speedup:.2}x)",
+                 r_fork.mean_us, r_copy.mean_us);
+
+    let rows = vec![
+        vec!["config".into(),
+             format!("dim {dim}, {n_layers} blocks, {prefix_len}-token \
+                      prefix over {prefix_pages} pages of {page_rows} \
+                      rows, {n_opts} options x {opt_len} tok")],
+        vec!["fork (zero-copy share)".into(),
+             format!("{:.2} us, 0 B copied", r_fork.mean_us)],
+        vec!["fork (deep copy)".into(),
+             format!("{:.2} us, {copy_bytes_per_fork} B copied",
+                     r_copy.mean_us)],
+        vec!["scoring, prefix-shared".into(),
+             format!("{shared_tps:.0} tok/s ({cow_bytes_per_fork} B \
+                      COW/fork)")],
+        vec!["scoring, copy-fork".into(),
+             format!("{copy_tps:.0} tok/s")],
+        vec!["scoring speedup".into(), format!("{speedup:.2}x")],
+    ];
+    let md = format!(
+        "## Paged KV - zero-copy fork vs deep copy (scoring logits \
+         bit-identical across both paths, asserted)\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("dim", Json::num(dim as f64)),
+        ("n_layers", Json::num(n_layers as f64)),
+        ("page_rows", Json::num(page_rows as f64)),
+        ("page_bytes", Json::num(pool.page_bytes() as f64)),
+        ("prefix_rows", Json::num(prefix_len as f64)),
+        ("prefix_pages", Json::num(prefix_pages as f64)),
+        ("n_options", Json::num(n_opts as f64)),
+        ("option_tokens", Json::num(opt_len as f64)),
+        ("fork_us", Json::num(r_fork.mean_us)),
+        ("fork_bytes_copied", Json::num(0.0)),
+        ("fork_copy_us", Json::num(r_copy.mean_us)),
+        ("fork_copy_bytes_copied", Json::num(copy_bytes_per_fork as f64)),
+        ("cow_bytes_per_fork", Json::num(cow_bytes_per_fork as f64)),
+        ("shared_tok_per_sec", Json::num(shared_tps)),
+        ("copy_tok_per_sec", Json::num(copy_tps)),
+        ("speedup", Json::num(speedup)),
+    ]);
+    Ok((md, j))
 }
 
 /// Multi-sequence serving throughput: the continuous-batching scheduler
@@ -188,7 +356,7 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
 /// per-token and first-token latency percentiles. Before timing, the
 /// bench *asserts* the serving determinism contract: scheduler logits
 /// (and greedy outputs) are bit-identical to solo-engine runs of the
-/// same prompts. Schema-4 `serve` section of runs/bench.json.
+/// same prompts. `serve` section of runs/bench.json (schema >= 4).
 pub fn serve_throughput(fast: bool) -> Result<(String, Json)> {
     let (dim, nh, hd, inter, vocab, n_layers) = if fast {
         (256usize, 4usize, 64usize, 512usize, 1024usize, 1usize)
@@ -218,7 +386,7 @@ pub fn serve_throughput(fast: bool) -> Result<(String, Json)> {
             let p = mk_prompt(i);
             let p = &p[..p.len() - i]; // staggered lengths
             let l = pool.lease().unwrap();
-            core.prefill(pool.slot_mut(&l), 0, p, &mut sc)?;
+            core.prefill(&mut pool, &l, 0, p, &mut sc)?;
             leases.push(l);
             poss.push(p.len());
         }
@@ -772,7 +940,8 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 
 /// Validate a `runs/bench.json` produced by [`inference_throughput`]:
 /// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
-/// eval_forward, 4 adds the continuous-batching serve section), and
+/// eval_forward, 4 adds the continuous-batching serve section, 5 adds
+/// the paged-KV kv_fork section - see docs/BENCH_SCHEMA.md), and
 /// requires non-empty matvec/decode sections with numeric fields.
 /// scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
@@ -780,7 +949,7 @@ pub fn check_bench_json(path: &str) -> Result<()> {
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=4).contains(&schema) {
+    if !(1..=5).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -852,6 +1021,36 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             }
         }
     }
+    // schema 5 adds the paged-KV kv_fork section; beyond presence, the
+    // checker re-asserts the paging contract the numbers encode: a plain
+    // fork copies nothing and COW stays within one page
+    if schema >= 5 {
+        let kf = j.get("kv_fork")?;
+        for key in ["shared_tok_per_sec", "copy_tok_per_sec", "speedup",
+                    "page_bytes"] {
+            let v = kf.get(key)?.as_f64()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: bad kv_fork.{key} {v}");
+            }
+        }
+        for key in ["fork_us", "fork_copy_us"] {
+            let v = kf.get(key)?.as_f64()?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{path}: bad kv_fork.{key} {v}");
+            }
+        }
+        let fork_bytes = kf.get("fork_bytes_copied")?.as_f64()?;
+        if fork_bytes != 0.0 {
+            bail!("{path}: kv_fork.fork_bytes_copied {fork_bytes} != 0 \
+                   (fork must be zero-copy)");
+        }
+        let cow = kf.get("cow_bytes_per_fork")?.as_f64()?;
+        let page = kf.get("page_bytes")?.as_f64()?;
+        if !cow.is_finite() || cow < 0.0 || cow > page {
+            bail!("{path}: kv_fork.cow_bytes_per_fork {cow} exceeds one \
+                   page ({page} B)");
+        }
+    }
     Ok(())
 }
 
@@ -912,7 +1111,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(4.0)),
+            ("schema", Json::num(5.0)),
             ("kind", Json::str("inference_throughput")),
             (
                 "matvec",
@@ -965,6 +1164,19 @@ mod tests {
                     ])]),
                 )]),
             ),
+            (
+                "kv_fork",
+                Json::obj(vec![
+                    ("page_bytes", Json::num(65536.0)),
+                    ("fork_us", Json::num(0.4)),
+                    ("fork_bytes_copied", Json::num(0.0)),
+                    ("fork_copy_us", Json::num(90.0)),
+                    ("cow_bytes_per_fork", Json::num(32768.0)),
+                    ("shared_tok_per_sec", Json::num(5000.0)),
+                    ("copy_tok_per_sec", Json::num(3000.0)),
+                    ("speedup", Json::num(1.67)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -972,8 +1184,8 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-4 file without its required sections is rejected...
-        for missing in ["train_step", "eval_forward", "serve"] {
+        // schema-5 file without its required sections is rejected...
+        for missing in ["train_step", "eval_forward", "serve", "kv_fork"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -986,12 +1198,44 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "missing {missing} accepted");
         }
-        // ...but the core sections under legacy schemas 1/2/3 stay valid
-        // (3 keeps eval_forward, 1/2 drop it too)
+        // ...and a kv_fork section violating the paging contract
+        // (non-zero fork copy, COW above one page) is rejected
+        for (key, val) in [("fork_bytes_copied", 8.0),
+                           ("cow_bytes_per_fork", 1e9)] {
+            let mut fields = Vec::new();
+            if let Json::Obj(outer) = &good {
+                for (k, v) in outer {
+                    if k == "kv_fork" {
+                        let mut kf = Vec::new();
+                        if let Json::Obj(inner) = v {
+                            for (ik, iv) in inner {
+                                kf.push((
+                                    ik.as_str(),
+                                    if ik == key {
+                                        Json::num(val)
+                                    } else {
+                                        iv.clone()
+                                    },
+                                ));
+                            }
+                        }
+                        fields.push((k.as_str(), Json::obj(kf)));
+                    } else {
+                        fields.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(fields)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "bad kv_fork.{key} accepted");
+        }
+        // ...but the core sections under legacy schemas 1-4 stay valid
+        // (4 keeps serve, 3 keeps eval_forward, 1/2 drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["serve", "eval_forward", "schema"]),
-            (2.0, vec!["serve", "eval_forward", "schema"]),
-            (3.0, vec!["serve", "schema"]),
+            (1.0f64, vec!["kv_fork", "serve", "eval_forward", "schema"]),
+            (2.0, vec!["kv_fork", "serve", "eval_forward", "schema"]),
+            (3.0, vec!["kv_fork", "serve", "schema"]),
+            (4.0, vec!["kv_fork", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

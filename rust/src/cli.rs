@@ -40,8 +40,9 @@ COMMANDS
                         [--model FILE --tokens N --temp T]
   serve-sim             multi-request serving demo: synthetic request
                         stream through the continuous-batching scheduler
-                        (shared ModelCore + pooled KV sessions), with
-                        aggregate tok/s and latency percentiles
+                        (shared ModelCore + paged-KV sessions), with
+                        aggregate tok/s, latency percentiles, and
+                        page-pool occupancy (peak pages, COW bytes)
                         [--requests N --slots N --tokens N --prompt-len L
                          --prefill-chunk N --seed S --model FILE]
   size                  Table-11 size arithmetic [--model llama2-7b ...]
@@ -49,8 +50,9 @@ COMMANDS
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
                         batched prefill + native train_step + eval_forward
-                        + continuous-batching serve section ->
-                        runs/bench.json, schema 4) | check (validate
+                        + serve + paged-KV kv_fork sections ->
+                        runs/bench.json, schema 5; see
+                        docs/BENCH_SCHEMA.md) | check (validate
                         runs/bench.json) | train-time (Tables 8/9)
                         [--fast]
   help                  this text

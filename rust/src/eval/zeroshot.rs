@@ -8,14 +8,17 @@
 //! An item's options all share the same context, so scoring used to pay
 //! `options x` full forwards over `ctx + option` rows (each padded to the
 //! eval geometry) - the shared question prefix was re-prefilled for every
-//! candidate continuation. [`eval_items`] now runs on the serving core
-//! instead: the context is prefilled **once** into a KV-pool session, and
-//! each option is scored from a session *forked* off that state
-//! ([`KvPool::fork`] copies the prefix rows), forwarding only the option's
-//! own tokens. Single-token options need no forward at all - their
-//! log-likelihood is already in the context's last-position logits.
-//! Chunked continuation is bit-exact with a monolithic forward (see
-//! `infer::core`), so forking changes the cost, not the scores (tested).
+//! candidate continuation. [`eval_items`] runs on the serving core
+//! instead: the context is prefilled **once** into a paged KV-pool
+//! session, and each option is scored from a session *forked* off that
+//! state with **zero KV copying** - [`KvPool::fork`] shares the prefix
+//! pages by refcount, and only the option's own rows touch fresh pages
+//! (a copy-on-write of at most one partial tail page; see `infer::kv`).
+//! Single-token options need no forward at all - their log-likelihood is
+//! already in the context's last-position logits. Chunked continuation
+//! is bit-exact with a monolithic forward (see `infer::core`), so
+//! forking changes the cost, not the scores (tested, incl. bitwise vs
+//! the naive full-re-prefill path).
 //!
 //! Model kinds map onto the core via [`fwd::model_core_of`]: packed
 //! linears for `Quant` (the deployment artifact), dense effective weights
@@ -61,7 +64,7 @@ pub(crate) fn score_item(core: &ModelCore, pool: &mut KvPool,
     // every option's first token
     let parent = pool.lease().expect("score pool sized for parent+fork");
     let r = (|| -> Result<Vec<f64>> {
-        core.prefill(pool.slot_mut(&parent), 0, &item.ctx, sc)?;
+        core.prefill(pool, &parent, 0, &item.ctx, sc)?;
         let lse0 = logsumexp(sc.logits());
         let first_lp: Vec<f64> = item
             .options
@@ -72,10 +75,12 @@ pub(crate) fn score_item(core: &ModelCore, pool: &mut KvPool,
         for (oi, opt) in item.options.iter().enumerate() {
             let mut ll = first_lp[oi];
             if opt.len() > 1 {
+                // zero-copy: the fork shares the prefilled context's
+                // pages; only the option rows COW/extend
                 let fork = pool
                     .fork(&parent, item.ctx.len())
                     .expect("score pool sized for parent+fork");
-                let fr = core.forward_logits(pool.slot_mut(&fork),
+                let fr = core.forward_logits(pool, &fork,
                                              item.ctx.len(), opt, sc,
                                              opt_logits);
                 pool.release(fork);
@@ -213,7 +218,7 @@ mod tests {
                     it.ctx.iter().chain(opt).copied().collect();
                 let l = naive_pool.lease().unwrap();
                 let mut all = Vec::new();
-                core.forward_logits(naive_pool.slot_mut(&l), 0, &seq,
+                core.forward_logits(&mut naive_pool, &l, 0, &seq,
                                     &mut sc, &mut all)
                     .unwrap();
                 naive_pool.release(l);
@@ -232,8 +237,14 @@ mod tests {
                 );
             }
         }
-        // the fork slots were all released
-        assert_eq!(pool.n_free(), 2);
+        // the fork leases were all released, no page leaked
+        assert_eq!(pool.pages_in_use(), 0);
+        assert_eq!(pool.n_free_pages(), pool.n_pages());
+        // zero-copy contract: each multi-token option's fork COW-copied
+        // at most one page (4 such forks across the two items); the
+        // forks themselves moved nothing
+        assert!(pool.bytes_copied() <= 4 * pool.page_bytes(),
+                "prefix sharing copied more than one page per fork");
     }
 
     /// End-to-end accuracy sanity on every model kind the harness scores.

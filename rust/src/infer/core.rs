@@ -4,8 +4,8 @@
 //! tables - and exposes the three forward primitives every serving path
 //! is built from:
 //!
-//! * [`ModelCore::step`] - one token through one sequence's KV slot
-//!   (zero-alloc solo decode; the `Engine` facade's hot path);
+//! * [`ModelCore::step`] - one token through one sequence's paged KV
+//!   rows (zero-alloc solo decode; the `Engine` facade's hot path);
 //! * [`ModelCore::prefill`] / [`ModelCore::forward_logits`] - a batch of
 //!   positions of **one** sequence through each linear as a single
 //!   [`PackedLinear::matmul`] (prompt ingestion and eval forwards);
@@ -16,26 +16,32 @@
 //!
 //! A `ModelCore` is shared (`Arc`) between any number of sessions,
 //! engines, schedulers, and threads; all mutable state lives in the
-//! caller's [`Scratch`], KV slots, and positions. Numerics mirror
+//! caller's [`Scratch`], [`KvPool`] page tables, and positions. Every
+//! primitive addresses KV through a leased page table (see `infer::kv`
+//! for the page / copy-on-write lifecycle): writes go through
+//! `KvPool::prepare_rows` plus per-row/scatter accessors, reads stream
+//! per-page segments in ascending row order. Numerics mirror
 //! python/compile/model.py exactly (RMSNorm, split-half RoPE, causal
 //! attention, SwiGLU).
 //!
 //! # Bit-exactness contract
 //!
 //! All three primitives produce **bit-identical** logits for the same
-//! sequence at any batch size, chunking, and worker count:
+//! sequence at any batch size, chunking, worker count, and page size:
 //! per-(token, row) accumulation order is fixed across
 //! `matvec`/`matmul`/`matmul_rows` (and their dense siblings), attention
-//! is the shared [`attend_head`] in every path, and the worker pool only
-//! partitions work. This is what makes continuous batching safe to ship:
-//! co-batching requests cannot change any request's output (pinned by
-//! tests here, in `infer::sched`, in `bench::serve_throughput`, and in
-//! the integration suite).
+//! is the shared `attend_head_paged` in every path (its segment walk
+//! visits rows in exactly the ascending order a contiguous cache would),
+//! and the worker pool only partitions work. This is what makes
+//! continuous batching and zero-copy prefix forking safe to ship:
+//! co-batching requests or sharing prefix pages cannot change any
+//! request's output (pinned by tests here, in `infer::sched`, in
+//! `bench::serve_throughput`, and in the integration suite).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::QuantScheme;
-use crate::infer::kv::{KvLease, KvPool, KvSlot};
+use crate::infer::kv::{KvLease, KvPool};
 use crate::infer::qlinear::{dense_matmul, dense_matmul_rows, dense_matvec,
                             PackedLinear};
 use crate::io::manifest::PresetInfo;
@@ -126,7 +132,11 @@ pub struct Scratch {
     p_gate: Vec<f32>,
     p_up: Vec<f32>,
     p_down: Vec<f32>,
-    // decode-batch staging: per-tick K/V rows before the per-slot
+    // prefill K/V staging before the per-page scatter (rows of one
+    // chunk may span page boundaries)
+    p_k: Vec<f32>,
+    p_v: Vec<f32>,
+    // decode-batch staging: per-tick K/V rows before the per-sequence
     // scatter, per-(sequence, head) score rows, per-sequence logits
     b_k: Vec<f32>,
     b_v: Vec<f32>,
@@ -161,6 +171,8 @@ impl Scratch {
             p_gate: Vec::new(),
             p_up: Vec::new(),
             p_down: Vec::new(),
+            p_k: Vec::new(),
+            p_v: Vec::new(),
             b_k: Vec::new(),
             b_v: Vec::new(),
             b_att: Vec::new(),
@@ -190,8 +202,8 @@ pub struct ModelCore {
     pub head_dim: usize,
     pub inter: usize,
     pub vocab: usize,
-    /// KV capacity per sequence (slot size in every pool built for this
-    /// core).
+    /// KV capacity per sequence (the row budget every pool built for
+    /// this core pages out).
     pub max_ctx: usize,
     #[allow(dead_code)]
     pub(crate) rope_theta: f64,
@@ -371,22 +383,23 @@ impl ModelCore {
     }
 
     /// One decode step of one sequence: feed `tok` at `pos` against the
-    /// slot's rows `[0, pos]`; logits land in `sc.logits`. The caller
-    /// owns and advances the position. Steady-state this allocates
-    /// nothing.
-    pub fn step(&self, slot: &mut KvSlot, pos: usize, tok: i32,
-                sc: &mut Scratch) -> Result<()> {
-        self.step_impl(slot, pos, tok, sc, None)
+    /// lease's rows `[0, pos]`; logits land in `sc.logits`. The caller
+    /// owns and advances the position. Steady-state (no page boundary
+    /// crossed, no COW fault) this allocates nothing.
+    pub fn step(&self, pool: &mut KvPool, lease: &KvLease, pos: usize,
+                tok: i32, sc: &mut Scratch) -> Result<()> {
+        self.step_impl(pool, lease, pos, tok, sc, None)
     }
 
-    pub(crate) fn step_impl(&self, slot: &mut KvSlot, pos: usize,
-                            tok: i32, sc: &mut Scratch,
+    pub(crate) fn step_impl(&self, pool: &mut KvPool, lease: &KvLease,
+                            pos: usize, tok: i32, sc: &mut Scratch,
                             mut trace: Option<&mut Vec<Vec<f32>>>)
                             -> Result<()> {
         if pos >= self.max_ctx {
             bail!("KV cache full ({} positions)", self.max_ctx);
         }
         self.check_token(tok)?;
+        pool.prepare_rows(lease, pos, 1)?;
         let d = self.dim;
         let nh = self.n_heads;
         let hd = self.head_dim;
@@ -403,20 +416,18 @@ impl ModelCore {
         let scale = 1.0 / (hd as f32).sqrt();
         for (bi, blk) in self.blocks.iter().enumerate() {
             rms_norm(&h[..], &blk.attn_norm, eps, &mut hn[..]);
+            blk.lins[0].matvec_in(&hn[..], &mut q[..], sx);
             {
-                let kc = &mut slot.k[bi];
-                blk.lins[0].matvec_in(&hn[..], &mut q[..], sx);
-                blk.lins[1].matvec_in(&hn[..], &mut kc[p * d..(p + 1) * d],
-                                      sx);
-                rope_apply(&mut kc[p * d..(p + 1) * d], p, nh, hd,
-                           &self.rope_cos, &self.rope_sin);
+                let krow = pool.k_row_mut(lease, bi, p);
+                blk.lins[1].matvec_in(&hn[..], krow, sx);
+                rope_apply(krow, p, nh, hd, &self.rope_cos,
+                           &self.rope_sin);
             }
-            blk.lins[2].matvec_in(
-                &hn[..], &mut slot.v[bi][p * d..(p + 1) * d], sx);
+            blk.lins[2].matvec_in(&hn[..], pool.v_row_mut(lease, bi, p),
+                                  sx);
             rope_apply(&mut q[..], p, nh, hd, &self.rope_cos,
                        &self.rope_sin);
-            let kcs: &[f32] = &slot.k[bi];
-            let vcs: &[f32] = &slot.v[bi];
+            let pool_ref: &KvPool = pool;
             let qv: &[f32] = &q[..];
             // chunk i covers the same heads of both the context output and
             // the per-head score scratch; serial for short contexts
@@ -437,8 +448,9 @@ impl ModelCore {
                         .enumerate()
                     {
                         let hh = ci * hpc + j;
-                        attend_head(&qv[hh * hd..(hh + 1) * hd], kcs, vcs,
-                                    d, hh, hd, p, scale, ath, ch);
+                        attend_head_paged(&qv[hh * hd..(hh + 1) * hd],
+                                          pool_ref, lease, bi, hh, hd, p,
+                                          scale, ath, ch);
                     }
                 },
             );
@@ -470,16 +482,16 @@ impl ModelCore {
 
     /// Feed `tokens` at positions `[pos, pos+n)` of one sequence: all
     /// positions run through each block's linears as one batched matmul,
-    /// the K/V matmuls write straight into the slot rows, and the final
-    /// per-token hidden states land in `sc.p_h`. Logits of the *last*
-    /// position land in `sc.logits`. Bit-exact with a sequential `step`
-    /// loop at any chunking (prefilling `[0,8)` then `[8,12)` equals
-    /// prefilling `[0,12)` equals 12 steps - tested), which is what makes
-    /// the scheduler's chunked admission and `eval_items`' prefix forks
-    /// exact.
-    pub fn prefill(&self, slot: &mut KvSlot, pos: usize, tokens: &[i32],
-                   sc: &mut Scratch) -> Result<()> {
-        self.forward_rows(slot, pos, tokens, sc)?;
+    /// the K/V rows are staged then scattered into the lease's pages,
+    /// and the final per-token hidden states land in `sc.p_h`. Logits of
+    /// the *last* position land in `sc.logits`. Bit-exact with a
+    /// sequential `step` loop at any chunking (prefilling `[0,8)` then
+    /// `[8,12)` equals prefilling `[0,12)` equals 12 steps - tested),
+    /// which is what makes the scheduler's chunked admission and
+    /// `eval_items`' prefix forks exact.
+    pub fn prefill(&self, pool: &mut KvPool, lease: &KvLease, pos: usize,
+                   tokens: &[i32], sc: &mut Scratch) -> Result<()> {
+        self.forward_rows(pool, lease, pos, tokens, sc)?;
         let n = tokens.len();
         let d = self.dim;
         let Scratch { p_h, hn, logits, .. } = sc;
@@ -492,18 +504,20 @@ impl ModelCore {
 
     /// Evaluation forward: like [`ModelCore::prefill`] but writes logits
     /// for *every* fed position (token-major, n * vocab) into `out`.
-    pub fn forward_logits(&self, slot: &mut KvSlot, pos: usize,
-                          tokens: &[i32], sc: &mut Scratch,
+    pub fn forward_logits(&self, pool: &mut KvPool, lease: &KvLease,
+                          pos: usize, tokens: &[i32], sc: &mut Scratch,
                           out: &mut Vec<f32>) -> Result<()> {
         out.resize(tokens.len() * self.vocab, 0.0);
-        self.forward_logits_slice(slot, pos, tokens, sc, &mut out[..])
+        self.forward_logits_slice(pool, lease, pos, tokens, sc,
+                                  &mut out[..])
     }
 
     /// [`ModelCore::forward_logits`] into a caller-provided slice (len
     /// n * vocab, fully overwritten) - lets batched eval loops write each
     /// row's logits straight into its place in a larger buffer with no
     /// per-row allocation or copy.
-    pub fn forward_logits_slice(&self, slot: &mut KvSlot, pos: usize,
+    pub fn forward_logits_slice(&self, pool: &mut KvPool,
+                                lease: &KvLease, pos: usize,
                                 tokens: &[i32], sc: &mut Scratch,
                                 out: &mut [f32]) -> Result<()> {
         let n = tokens.len();
@@ -513,7 +527,7 @@ impl ModelCore {
             bail!("forward_logits: out has {} elems, want {n}x{v}",
                   out.len());
         }
-        self.forward_rows(slot, pos, tokens, sc)?;
+        self.forward_rows(pool, lease, pos, tokens, sc)?;
         let Scratch { p_h, p_hn, .. } = sc;
         for t in 0..n {
             rms_norm(&p_h[t * d..(t + 1) * d], &self.final_norm[..],
@@ -524,11 +538,12 @@ impl ModelCore {
     }
 
     /// Batched single-sequence core behind `prefill`/`forward_logits`:
-    /// runs `n` positions through every block, filling slot rows
-    /// `[pos, pos+n)` in one pass; final per-token hidden states land in
-    /// `sc.p_h`.
-    fn forward_rows(&self, slot: &mut KvSlot, pos: usize, tokens: &[i32],
-                    sc: &mut Scratch) -> Result<()> {
+    /// runs `n` positions through every block, filling the lease's rows
+    /// `[pos, pos+n)` in one pass (staged K/V matmul then a per-page
+    /// scatter); final per-token hidden states land in `sc.p_h`.
+    fn forward_rows(&self, pool: &mut KvPool, lease: &KvLease,
+                    pos: usize, tokens: &[i32], sc: &mut Scratch)
+                    -> Result<()> {
         let n = tokens.len();
         if n == 0 {
             bail!("empty prefill");
@@ -542,6 +557,7 @@ impl ModelCore {
         for &t in tokens {
             self.check_token(t)?;
         }
+        pool.prepare_rows(lease, pos, n)?;
         let d = self.dim;
         let nh = self.n_heads;
         let hd = self.head_dim;
@@ -549,7 +565,8 @@ impl ModelCore {
         let eps = self.norm_eps;
         let p0 = pos;
         let Scratch {
-            p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down, ..
+            p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down, p_k,
+            p_v, ..
         } = sc;
         p_h.resize(n * d, 0.0);
         p_hn.resize(n * d, 0.0);
@@ -559,6 +576,8 @@ impl ModelCore {
         p_gate.resize(n * it, 0.0);
         p_up.resize(n * it, 0.0);
         p_down.resize(n * d, 0.0);
+        p_k.resize(n * d, 0.0);
+        p_v.resize(n * d, 0.0);
 
         for (t, &tok) in tokens.iter().enumerate() {
             p_h[t * d..(t + 1) * d].copy_from_slice(
@@ -571,24 +590,19 @@ impl ModelCore {
                          &mut p_hn[t * d..(t + 1) * d]);
             }
             blk.lins[0].matmul(&p_hn[..n * d], n, &mut p_q[..n * d]);
-            {
-                let kc = &mut slot.k[bi];
-                blk.lins[1].matmul(&p_hn[..n * d], n,
-                                   &mut kc[p0 * d..(p0 + n) * d]);
-                for t in 0..n {
-                    rope_apply(&mut kc[(p0 + t) * d..(p0 + t + 1) * d],
-                               p0 + t, nh, hd, &self.rope_cos,
-                               &self.rope_sin);
-                }
+            blk.lins[1].matmul(&p_hn[..n * d], n, &mut p_k[..n * d]);
+            for t in 0..n {
+                rope_apply(&mut p_k[t * d..(t + 1) * d], p0 + t, nh, hd,
+                           &self.rope_cos, &self.rope_sin);
             }
-            blk.lins[2].matmul(&p_hn[..n * d], n,
-                               &mut slot.v[bi][p0 * d..(p0 + n) * d]);
+            pool.scatter_k(lease, bi, p0, &p_k[..n * d]);
+            blk.lins[2].matmul(&p_hn[..n * d], n, &mut p_v[..n * d]);
+            pool.scatter_v(lease, bi, p0, &p_v[..n * d]);
             for t in 0..n {
                 rope_apply(&mut p_q[t * d..(t + 1) * d], p0 + t, nh, hd,
                            &self.rope_cos, &self.rope_sin);
             }
-            let kcs: &[f32] = &slot.k[bi];
-            let vcs: &[f32] = &slot.v[bi];
+            let pool_ref: &KvPool = pool;
             let qv: &[f32] = &p_q[..];
             // causal attention over the batch, token-chunked across
             // threads; workers allocate their own score buffers (prefill
@@ -606,9 +620,9 @@ impl ModelCore {
                     let t = t0 + tl;
                     let last = p0 + t; // attends to cache rows 0..=last
                     for hh in 0..nh {
-                        attend_head(
+                        attend_head_paged(
                             &qv[t * d + hh * hd..t * d + (hh + 1) * hd],
-                            kcs, vcs, d, hh, hd, last, scale,
+                            pool_ref, lease, bi, hh, hd, last, scale,
                             &mut scores,
                             &mut ctx_t[hh * hd..(hh + 1) * hd],
                         );
@@ -643,7 +657,7 @@ impl ModelCore {
     /// rows-parallel matmul per linear across the whole batch** (the
     /// weight unpack that solo decode pays per sequence per token
     /// amortizes to ~1/batch) while each sequence attends against its own
-    /// slot's rows. Per-sequence logits land in `sc.b_logits`
+    /// paged rows. Per-sequence logits land in `sc.b_logits`
     /// ([`Scratch::batch_logits`]); callers advance each position.
     ///
     /// Bit-exactness: row i's logits are identical at every batch size -
@@ -659,10 +673,11 @@ impl ModelCore {
         if nb == 0 {
             return Ok(());
         }
-        for &(_, pos) in batch {
+        for &(lease, pos) in batch {
             if pos >= self.max_ctx {
                 bail!("KV cache full ({} positions)", self.max_ctx);
             }
+            pool.prepare_rows(lease, pos, 1)?;
         }
         for &t in toks {
             self.check_token(t)?;
@@ -706,15 +721,14 @@ impl ModelCore {
                                     mm_tmp, mm_sx);
             blk.lins[2].matmul_rows(&p_hn[..nb * d], nb, &mut b_v[..nb * d],
                                     mm_tmp, mm_sx);
-            // scatter each sequence's K/V row into its own slot at its
+            // scatter each sequence's K/V row into its own pages at its
             // own position (RoPE on K and Q at that position)
             for (i, &(lease, pos)) in batch.iter().enumerate() {
-                let slot = pool.slot_mut(lease);
-                let krow = &mut slot.k[bi][pos * d..(pos + 1) * d];
+                let krow = pool.k_row_mut(lease, bi, pos);
                 krow.copy_from_slice(&b_k[i * d..(i + 1) * d]);
                 rope_apply(krow, pos, nh, hd, &self.rope_cos,
                            &self.rope_sin);
-                slot.v[bi][pos * d..(pos + 1) * d]
+                pool.v_row_mut(lease, bi, pos)
                     .copy_from_slice(&b_v[i * d..(i + 1) * d]);
                 rope_apply(&mut p_q[i * d..(i + 1) * d], pos, nh, hd,
                            &self.rope_cos, &self.rope_sin);
@@ -728,10 +742,9 @@ impl ModelCore {
             let attend_one = |j: usize, ch: &mut [f32], ath: &mut [f32]| {
                 let (i, hh) = (j / nh, j % nh);
                 let (lease, pos) = batch[i];
-                let slot = pool_ref.slot(lease);
-                attend_head(&qv[i * d + hh * hd..i * d + (hh + 1) * hd],
-                            &slot.k[bi], &slot.v[bi], d, hh, hd, pos,
-                            scale, ath, ch);
+                attend_head_paged(
+                    &qv[i * d + hh * hd..i * d + (hh + 1) * hd],
+                    pool_ref, lease, bi, hh, hd, pos, scale, ath, ch);
             };
             if total_mac < ATT_PAR_MIN {
                 for (j, (ch, ath)) in p_ctx[..nb * d]
@@ -782,26 +795,37 @@ impl ModelCore {
     }
 }
 
-/// Softmax attention for one head over KV-slot rows 0..=`last`: scores
-/// go through `scores` scratch (len >= last+1), the weighted value sum
-/// lands in `ch` (len head_dim). Shared by the solo-decode, batched
-/// prefill, and batched-decode paths so their numerics can never diverge
-/// (every cross-path bit-exactness test depends on this).
+/// Softmax attention for one head over a sequence's KV rows 0..=`last`,
+/// read through its page table: scores go through `scores` scratch (len
+/// >= last+1), the weighted value sum lands in `ch` (len head_dim).
+/// Shared by the solo-decode, batched prefill, and batched-decode paths
+/// so their numerics can never diverge (every cross-path bit-exactness
+/// test depends on this). The page-segment walk visits rows in ascending
+/// order, so every FMA happens in exactly the sequence a contiguous
+/// cache would produce - paging cannot perturb a single bit.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn attend_head(qh: &[f32], kcs: &[f32], vcs: &[f32], d: usize,
-                          hh: usize, hd: usize, last: usize, scale: f32,
-                          scores: &mut [f32], ch: &mut [f32]) {
-    let sc = &mut scores[..last + 1];
+pub(crate) fn attend_head_paged(qh: &[f32], pool: &KvPool,
+                                lease: &KvLease, layer: usize, hh: usize,
+                                hd: usize, last: usize, scale: f32,
+                                scores: &mut [f32], ch: &mut [f32]) {
+    let d = pool.dim;
+    let n_rows = last + 1;
+    let sc = &mut scores[..n_rows];
     let mut mx = f32::NEG_INFINITY;
-    for (u, sv) in sc.iter_mut().enumerate() {
-        let kh = &kcs[u * d + hh * hd..u * d + (hh + 1) * hd];
-        let mut s = 0f32;
-        for i in 0..hd {
-            s += qh[i] * kh[i];
+    let mut u0 = 0usize;
+    while u0 < n_rows {
+        let (kseg, rows) = pool.k_seg(lease, layer, u0, n_rows - u0);
+        for r in 0..rows {
+            let kh = &kseg[r * d + hh * hd..r * d + (hh + 1) * hd];
+            let mut s = 0f32;
+            for i in 0..hd {
+                s += qh[i] * kh[i];
+            }
+            let s = s * scale;
+            mx = mx.max(s);
+            sc[u0 + r] = s;
         }
-        let s = s * scale;
-        mx = mx.max(s);
-        *sv = s;
+        u0 += rows;
     }
     let mut zsum = 0f32;
     for s in sc.iter_mut() {
@@ -809,12 +833,17 @@ pub(crate) fn attend_head(qh: &[f32], kcs: &[f32], vcs: &[f32], d: usize,
         zsum += *s;
     }
     ch.fill(0.0);
-    for (u, &pr) in sc.iter().enumerate() {
-        let vh = &vcs[u * d + hh * hd..u * d + (hh + 1) * hd];
-        let w = pr / zsum;
-        for i in 0..hd {
-            ch[i] += w * vh[i];
+    let mut u0 = 0usize;
+    while u0 < n_rows {
+        let (vseg, rows) = pool.v_seg(lease, layer, u0, n_rows - u0);
+        for r in 0..rows {
+            let vh = &vseg[r * d + hh * hd..r * d + (hh + 1) * hd];
+            let w = sc[u0 + r] / zsum;
+            for i in 0..hd {
+                ch[i] += w * vh[i];
+            }
         }
+        u0 += rows;
     }
 }
 
@@ -894,7 +923,9 @@ mod tests {
     /// The tentpole determinism guarantee: per-sequence logits from
     /// `decode_batch` are bit-identical to a solo `Engine` run of the
     /// same prompt, at every batch size and thread count, even with
-    /// sequences at *different* positions in the batch.
+    /// sequences at *different* positions in the batch - and with the
+    /// batch's KV living in deliberately tiny (5-row) pages while the
+    /// solo engines use default paging.
     #[test]
     fn decode_batch_is_bitexact_with_solo_engine() {
         let c = core(21);
@@ -918,7 +949,9 @@ mod tests {
         for &bsz in &[1usize, 2, 5] {
             for &nt in &[1usize, 4] {
                 with_threads(nt, || {
-                    let mut pool = KvPool::for_core(&c, bsz);
+                    // 5-row pages: every sequence spans several pages
+                    let mut pool = KvPool::for_core_paged(
+                        &c, bsz * ((CTX + 4) / 5), 5);
                     let mut sc = c.scratch();
                     let mut leases = Vec::new();
                     let mut poss = Vec::new();
@@ -928,7 +961,7 @@ mod tests {
                         // exact vs the solo engine's one-shot prefill
                         let mut pos = 0usize;
                         for ch in p.chunks(3) {
-                            c.prefill(pool.slot_mut(&l), pos, ch, &mut sc)
+                            c.prefill(&mut pool, &l, pos, ch, &mut sc)
                                 .unwrap();
                             pos += ch.len();
                         }
@@ -962,51 +995,139 @@ mod tests {
         }
     }
 
+    /// Satellite sweep: sessions *forked* off one prefilled parent (zero
+    /// bytes copied at fork time) decode bit-identically to fresh
+    /// sessions re-prefilled from scratch, at batch {1, 2, 5} x threads
+    /// {1, 4}, with the prefix spanning multiple 4-row pages - and each
+    /// child's first write COWs at most one page.
+    #[test]
+    fn forked_sessions_decode_bitexact_vs_fresh_prefill() {
+        let c = core(29);
+        let prefix = toks(13, 7); // 13 rows: 3 full 4-row pages + 1
+        let n_steps = 3usize;
+        let tok_of =
+            |i: usize, s: usize| ((5 + 7 * i + 13 * s) % VOCAB) as i32;
+
+        // reference: per child, a fresh engine re-prefills the prefix
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for i in 0..5usize {
+            let mut e = Engine::from_core(c.clone());
+            e.prefill(&prefix).unwrap();
+            let mut per_step = Vec::new();
+            for s in 0..n_steps {
+                per_step.push(e.step(tok_of(i, s)).unwrap());
+            }
+            want.push(per_step);
+        }
+
+        let row_off = prefix.len() % 4; // surviving tail rows COW copies
+        let cow_per_child = 2 * (LAYERS * row_off * DIM) as u64 * 4;
+        for &bsz in &[1usize, 2, 5] {
+            for &nt in &[1usize, 4] {
+                with_threads(nt, || {
+                    // parent needs ceil(13/4) = 4 pages; each child one
+                    // fresh page (tail COW; the 3 decode rows fit in it)
+                    let mut pool = KvPool::for_core_paged(&c, 4 + bsz, 4);
+                    let mut sc = c.scratch();
+                    let parent =
+                        pool.lease_rows(prefix.len()).unwrap();
+                    c.prefill(&mut pool, &parent, 0, &prefix, &mut sc)
+                        .unwrap();
+                    let b0 = pool.bytes_copied();
+                    let children: Vec<KvLease> = (0..bsz)
+                        .map(|_| {
+                            pool.fork_rows(&parent, prefix.len(), n_steps)
+                                .unwrap()
+                        })
+                        .collect();
+                    assert_eq!(pool.bytes_copied(), b0,
+                               "fork itself must copy zero bytes");
+                    let mut poss = vec![prefix.len(); bsz];
+                    for s in 0..n_steps {
+                        let batch: Vec<(&KvLease, usize)> = children
+                            .iter()
+                            .zip(&poss)
+                            .map(|(l, &p)| (l, p))
+                            .collect();
+                        let toks: Vec<i32> =
+                            (0..bsz).map(|i| tok_of(i, s)).collect();
+                        c.decode_batch(&mut pool, &batch, &toks, &mut sc)
+                            .unwrap();
+                        drop(batch);
+                        for i in 0..bsz {
+                            poss[i] += 1;
+                            let got = sc.batch_logits(i);
+                            let exp = &want[i][s];
+                            assert!(
+                                got.iter().zip(exp).all(
+                                    |(a, b)| a.to_bits() == b.to_bits()),
+                                "batch {bsz} threads {nt} child {i} \
+                                 step {s}: forked logits diverge from \
+                                 fresh re-prefill"
+                            );
+                        }
+                    }
+                    // every child COW-copied exactly the partial tail
+                    // rows, once - bounded by a single page
+                    let copied = pool.bytes_copied() - b0;
+                    assert_eq!(copied, bsz as u64 * cow_per_child);
+                    assert!(copied <= bsz as u64 * pool.page_bytes(),
+                            "COW exceeded one page per fork");
+                    for ch in children {
+                        pool.release(ch);
+                    }
+                    pool.release(parent);
+                    assert_eq!(pool.pages_in_use(), 0);
+                });
+            }
+        }
+    }
+
     #[test]
     fn chunked_prefill_matches_one_shot() {
         let c = core(22);
         let prompt = toks(11, 13);
         let mut sc = c.scratch();
-        let mut pool = KvPool::for_core(&c, 2);
+        // 3-row pages: chunk boundaries and page boundaries interleave
+        let mut pool = KvPool::for_core_paged(&c, 2 * ((CTX + 2) / 3), 3);
         let a = pool.lease().unwrap();
-        c.prefill(pool.slot_mut(&a), 0, &prompt, &mut sc).unwrap();
+        c.prefill(&mut pool, &a, 0, &prompt, &mut sc).unwrap();
         let one_shot = sc.logits().to_vec();
         let b = pool.lease().unwrap();
         let mut pos = 0usize;
         for ch in prompt.chunks(4) {
-            c.prefill(pool.slot_mut(&b), pos, ch, &mut sc).unwrap();
+            c.prefill(&mut pool, &b, pos, ch, &mut sc).unwrap();
             pos += ch.len();
         }
         assert_eq!(one_shot, sc.logits());
-        // and the caches themselves are identical
+        // and the cached rows themselves are identical
         for bi in 0..c.n_layers() {
-            let (sa, sb) = (pool.slot(&a), pool.slot(&b));
-            let n = prompt.len() * c.dim;
-            assert_eq!(sa.k[bi][..n], sb.k[bi][..n]);
-            assert_eq!(sa.v[bi][..n], sb.v[bi][..n]);
+            for p in 0..prompt.len() {
+                assert_eq!(pool.k_row(&a, bi, p), pool.k_row(&b, bi, p));
+                assert_eq!(pool.v_row(&a, bi, p), pool.v_row(&b, bi, p));
+            }
         }
     }
 
     #[test]
-    fn forked_slot_continues_bitexactly() {
+    fn forked_session_continues_bitexactly() {
         let c = core(23);
         let prompt = toks(9, 11);
         let cont = toks(5, 17);
         let mut sc = c.scratch();
-        // reference: one slot straight through prompt + continuation
         let mut pool = KvPool::for_core(&c, 3);
         let l = pool.lease().unwrap();
-        c.prefill(pool.slot_mut(&l), 0, &prompt, &mut sc).unwrap();
+        c.prefill(&mut pool, &l, 0, &prompt, &mut sc).unwrap();
         let mut fork_out = Vec::new();
         let f = pool.fork(&l, prompt.len()).unwrap();
-        c.forward_logits(pool.slot_mut(&f), prompt.len(), &cont, &mut sc,
+        c.forward_logits(&mut pool, &f, prompt.len(), &cont, &mut sc,
                          &mut fork_out)
             .unwrap();
         let full = pool.lease().unwrap();
         let all: Vec<i32> =
             prompt.iter().chain(&cont).copied().collect();
         let mut full_out = Vec::new();
-        c.forward_logits(pool.slot_mut(&full), 0, &all, &mut sc,
+        c.forward_logits(&mut pool, &full, 0, &all, &mut sc,
                          &mut full_out)
             .unwrap();
         let tail = &full_out[prompt.len() * VOCAB..];
@@ -1016,26 +1137,25 @@ mod tests {
     }
 
     #[test]
-    fn released_slot_reuse_has_no_stale_leakage() {
+    fn released_pages_reuse_has_no_stale_leakage() {
         let c = core(24);
         let mut sc = c.scratch();
         // cold pool reference
         let mut cold = KvPool::for_core(&c, 1);
         let l = cold.lease().unwrap();
-        c.prefill(cold.slot_mut(&l), 0, &toks(6, 7), &mut sc).unwrap();
+        c.prefill(&mut cold, &l, 0, &toks(6, 7), &mut sc).unwrap();
         let want = sc.logits().to_vec();
-        // warm pool: fill the only slot with a long junk prompt first,
-        // release, re-lease (same slot), score the fresh prompt
+        // warm pool: fill the whole context with junk first, release,
+        // re-lease (same pages come back), score the fresh prompt
         let mut warm = KvPool::for_core(&c, 1);
         let j = warm.lease().unwrap();
-        let ji = j.slot_index();
-        c.prefill(warm.slot_mut(&j), 0, &toks(CTX - 1, 31), &mut sc)
+        c.prefill(&mut warm, &j, 0, &toks(CTX - 1, 31), &mut sc)
             .unwrap();
         warm.release(j);
+        assert_eq!(warm.pages_in_use(), 0);
         let r = warm.lease().unwrap();
-        assert_eq!(r.slot_index(), ji, "slot not reused");
-        c.prefill(warm.slot_mut(&r), 0, &toks(6, 7), &mut sc).unwrap();
-        assert_eq!(want, sc.logits(), "stale KV leaked into reused slot");
+        c.prefill(&mut warm, &r, 0, &toks(6, 7), &mut sc).unwrap();
+        assert_eq!(want, sc.logits(), "stale KV leaked into reused pages");
     }
 
     #[test]
@@ -1043,18 +1163,19 @@ mod tests {
         let c = core(25);
         let mut pool = KvPool::for_core(&c, 2);
         assert_eq!(pool.capacity(), 2);
+        let per_seq = pool.pages_per_seq();
         let a = pool.lease().unwrap();
         let b = pool.lease().unwrap();
-        assert_ne!(a.slot_index(), b.slot_index());
+        assert_ne!(a.id(), b.id());
         assert!(pool.lease().is_none(), "exhausted pool must not lease");
-        assert_eq!(pool.n_free(), 0);
+        assert_eq!(pool.n_free_pages(), 0);
         pool.release(a);
-        assert_eq!(pool.n_free(), 1);
+        assert_eq!(pool.n_free_pages(), per_seq);
         let c2 = pool.lease().unwrap();
         assert!(pool.lease().is_none());
         pool.release(b);
         pool.release(c2);
-        assert_eq!(pool.n_free(), 2);
+        assert_eq!(pool.n_free_pages(), 2 * per_seq);
     }
 
     #[test]
@@ -1063,7 +1184,7 @@ mod tests {
         let mut pool = KvPool::for_core(&c, 1);
         let mut sc = c.scratch();
         let l = pool.lease().unwrap();
-        c.prefill(pool.slot_mut(&l), 0, &toks(4, 3), &mut sc).unwrap();
+        c.prefill(&mut pool, &l, 0, &toks(4, 3), &mut sc).unwrap();
         assert!(pool.fork(&l, 4).is_none());
     }
 
@@ -1126,12 +1247,12 @@ mod tests {
         let mut pool = KvPool::for_core(&dc, 2);
         let mut sc = dc.scratch();
         let a = pool.lease().unwrap();
-        dc.prefill(pool.slot_mut(&a), 0, &prompt, &mut sc).unwrap();
+        dc.prefill(&mut pool, &a, 0, &prompt, &mut sc).unwrap();
         let pre = sc.logits().to_vec();
-        // solo step loop on a second slot
+        // solo step loop on a second lease
         let b = pool.lease().unwrap();
         for (i, &t) in prompt.iter().enumerate() {
-            dc.step(pool.slot_mut(&b), i, t, &mut sc).unwrap();
+            dc.step(&mut pool, &b, i, t, &mut sc).unwrap();
         }
         assert_eq!(pre, sc.logits());
         // batched decode vs solo step from the prefilled states
@@ -1140,7 +1261,7 @@ mod tests {
         let row0 = sc.batch_logits(0).to_vec();
         let row1 = sc.batch_logits(1).to_vec();
         assert_eq!(row0, row1);
-        dc.step(pool.slot_mut(&a), prompt.len(), 7, &mut sc).unwrap();
+        dc.step(&mut pool, &a, prompt.len(), 7, &mut sc).unwrap();
         assert_eq!(row0, sc.logits());
     }
 }

@@ -12,25 +12,30 @@
 //!   mutates per request.
 //! * [`KvPool`](crate::infer::kv::KvPool) /
 //!   [`Session`](crate::infer::session::Session) - the mutable,
-//!   per-request half: a position, a sampler RNG, and a KV slot leased
-//!   from a fixed-capacity slab pool (lease -> release -> reuse, with
-//!   [`KvPool::fork`](crate::infer::kv::KvPool::fork) copying a prefix
-//!   for candidate-continuation scoring).
+//!   per-request half: a position, a sampler RNG, and a *page table*
+//!   leased from the paged KV pool (fixed-size refcounted pages;
+//!   lease -> release -> reuse, with
+//!   [`KvPool::fork`](crate::infer::kv::KvPool::fork) *sharing* the
+//!   prefix pages for candidate-continuation scoring - zero bytes
+//!   copied at fork time, copy-on-write bounded to one page on the
+//!   first write past the fork point; see `infer::kv`).
 //! * [`Scheduler`](crate::infer::sched::Scheduler) - continuous
 //!   batching: every tick gathers all live sessions' last tokens and runs
 //!   **one rows-parallel matmul per linear across the whole batch**
 //!   (`ModelCore::decode_batch`), admits queued prompts via chunked
-//!   prefill between ticks, and retires finished sequences without
+//!   prefill between ticks gated on free *pages* (short requests hold
+//!   only the pages they touch), and retires finished sequences without
 //!   stalling the batch.
 //!
 //! [`Engine`] is the thin single-session view kept for the CLI
 //! `generate` path, the eval forwards, and every pre-existing caller: a
-//! shared core + a one-slot pool + one position. `step`/`step_ref`/
-//! `prefill`/`forward_logits` semantics are unchanged, and - because all
-//! paths share the same kernels and attention routine - a solo `Engine`
-//! run is **bit-identical** to the same sequence decoded inside any
-//! scheduler batch at any thread count (the determinism guarantee the
-//! serving stack is tested against; see `infer::core`).
+//! shared core + a private one-sequence page pool + one position.
+//! `step`/`step_ref`/`prefill`/`forward_logits` semantics are unchanged,
+//! and - because all paths share the same kernels and the same
+//! page-segment attention routine - a solo `Engine` run is
+//! **bit-identical** to the same sequence decoded inside any scheduler
+//! batch at any thread count and page size (the determinism guarantee
+//! the serving stack is tested against; see `infer::core`).
 //!
 //! Numerics mirror python/compile/model.py exactly (RMSNorm, split-half
 //! RoPE, causal attention, SwiGLU). When PJRT artifacts and real xla
@@ -42,11 +47,13 @@
 //!
 //! §Perf: batched prefill amortizes each linear's group-unpack across
 //! prompt tokens (PR 1); batched decode amortizes it across *sequences*
-//! (this refactor) - with N live sessions a tick pays one rows-parallel
-//! matmul per linear instead of N full matvec passes, which is what makes
+//! (PR 4) - with N live sessions a tick pays one rows-parallel matmul
+//! per linear instead of N full matvec passes, which is what makes
 //! `eqat bench inference`'s serve section show multi-x aggregate
-//! tokens/s over sequential per-request decode. `runs/bench.json`
-//! (schema 4) tracks the trajectory across PRs.
+//! tokens/s over sequential per-request decode; paged KV (this
+//! refactor) makes forking a T-token prefix O(1) instead of O(T), which
+//! the bench's `kv_fork` section tracks. `runs/bench.json` (schema 5,
+//! see docs/BENCH_SCHEMA.md) tracks the trajectory across PRs.
 
 use std::sync::Arc;
 
@@ -93,12 +100,12 @@ impl Engine {
             max_ctx, seed)?)))
     }
 
-    /// Wrap a shared core as a single-session engine: a one-slot private
-    /// pool plus a fresh position. Many engines (and schedulers) can view
-    /// the same core concurrently.
+    /// Wrap a shared core as a single-session engine: a private
+    /// one-sequence page pool plus a fresh position. Many engines (and
+    /// schedulers) can view the same core concurrently.
     pub fn from_core(core: Arc<ModelCore>) -> Engine {
         let mut pool = KvPool::for_core(&core, 1);
-        let lease = pool.lease().expect("fresh one-slot pool");
+        let lease = pool.lease().expect("fresh one-sequence pool");
         let scratch = core.scratch();
         Engine { core, pool, lease, scratch, pos: 0 }
     }
@@ -142,7 +149,7 @@ impl Engine {
     /// instead of copying: steady-state decode through this entry point
     /// performs zero heap allocation.
     pub fn step_ref(&mut self, tok: i32) -> Result<&[f32]> {
-        self.core.step(self.pool.slot_mut(&self.lease), self.pos, tok,
+        self.core.step(&mut self.pool, &self.lease, self.pos, tok,
                        &mut self.scratch)?;
         self.pos += 1;
         Ok(self.scratch.logits())
@@ -153,7 +160,7 @@ impl Engine {
     pub fn step_traced(&mut self, tok: i32)
                        -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
         let mut trace = Vec::with_capacity(self.core.n_layers());
-        self.core.step_impl(self.pool.slot_mut(&self.lease), self.pos,
+        self.core.step_impl(&mut self.pool, &self.lease, self.pos,
                             tok, &mut self.scratch, Some(&mut trace))?;
         self.pos += 1;
         Ok((self.scratch.logits().to_vec(), trace))
@@ -161,8 +168,7 @@ impl Engine {
 
     /// Debug/testing: the K-cache row for (block, pos) - post-RoPE keys.
     pub fn k_row(&self, block: usize, pos: usize) -> &[f32] {
-        let d = self.core.dim;
-        &self.pool.slot(&self.lease).k[block][pos * d..(pos + 1) * d]
+        self.pool.k_row(&self.lease, block, pos)
     }
 
     /// Feed a prompt; returns logits after the last token.
@@ -176,7 +182,7 @@ impl Engine {
         if tokens.is_empty() {
             return Ok(Vec::new());
         }
-        self.core.prefill(self.pool.slot_mut(&self.lease), self.pos,
+        self.core.prefill(&mut self.pool, &self.lease, self.pos,
                           tokens, &mut self.scratch)?;
         self.pos += tokens.len();
         Ok(self.scratch.logits().to_vec())
@@ -213,7 +219,7 @@ impl Engine {
                     "forward_logits: out non-empty for empty tokens"))
             };
         }
-        self.core.forward_logits_slice(self.pool.slot_mut(&self.lease),
+        self.core.forward_logits_slice(&mut self.pool, &self.lease,
                                        self.pos, tokens,
                                        &mut self.scratch, out)?;
         self.pos += tokens.len();

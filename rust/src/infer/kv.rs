@@ -1,140 +1,722 @@
-//! Shared slab KV pool for multi-sequence serving.
+//! Paged KV pool with refcounted pages and zero-copy prefix sharing.
 //!
-//! A [`KvPool`] owns a fixed number of KV *slots*; each slot holds one
-//! sequence's per-layer key/value rows up to `max_ctx` positions. Sessions
-//! lease a slot ([`KvPool::lease`]), fill rows as they prefill/decode, and
-//! hand the slot back ([`KvPool::release`]) when the sequence retires -
-//! so M concurrent sessions share a bounded `n_slots * n_layers *
-//! max_ctx * dim` allocation instead of each owning a full cache, and a
-//! retired sequence's memory is reused by the next admission with no
-//! allocation or zeroing.
+//! KV storage is a slab of fixed-size *pages* - [`KvPool::page_rows`]
+//! positions of every layer's key and value rows - instead of one
+//! contiguous `max_ctx` slot per sequence. Each live sequence leases a
+//! *page table* ([`KvPool::lease`] / [`KvPool::lease_rows`]): an ordered
+//! list of page ids covering its rows `[0, pos)`, grown one page at a
+//! time as prefill/decode cross page boundaries. Pages are refcounted,
+//! which buys the two properties the serving stack is built on:
 //!
-//! Reuse is safe without clearing because attention only ever reads rows
-//! `[0, pos)` of the leasing session, and a fresh session starts at
-//! `pos = 0`, overwriting rows before they are read (pinned by the
-//! lease -> release -> re-lease tests here and in `infer::sched`).
-//! Exhaustion is not an error: `lease` returns `None` and the scheduler
-//! keeps the request queued until a slot frees.
+//! * **Zero-copy fork.** [`KvPool::fork`] hands a child session the
+//!   parent's page table entries covering the forked prefix and bumps
+//!   their refcounts - no row is copied at fork time. This is how
+//!   `eval::zeroshot` scores N candidate continuations off one prefilled
+//!   prompt with no prefix duplication at all.
+//! * **Copy-on-write on the shared tail.** Only the *partial* last page
+//!   of a forked prefix can ever be written by two sequences (pages
+//!   wholly behind the fork point are never written again; pages past it
+//!   are fresh). The first write to a shared page copies just the
+//!   prefix rows that must survive (`< page_rows` rows per layer) into a
+//!   private page - so continuing from a T-token fork costs at most one
+//!   page of copying, independent of T. [`KvPool::bytes_copied`] counts
+//!   every copied byte; tests and the bench's `kv_fork` section assert
+//!   the bound.
 //!
-//! [`KvPool::fork`] leases a second slot and copies the parent's first
-//! `pos` rows - the mechanism behind prefix reuse in
-//! `eval::zeroshot::eval_items` (score N candidate continuations off one
-//! prefilled prompt state instead of re-prefilling the prompt N times).
-//! True zero-copy prefix *sharing* (paged KV) is the named next step in
-//! ROADMAP.md.
+//! Admission is **reservation-based**: a lease declares how many rows it
+//! may ever write (`lease_rows`, capped at `max_ctx`) and the pool
+//! reserves that many pages up front, so a granted lease can never fail
+//! to allocate mid-decode and the continuous-batching scheduler gates
+//! admission on [`KvPool::can_admit`] / free *pages* rather than whole
+//! slots - short requests hold only the pages they touch. Exhaustion is
+//! not an error: `lease_rows`/`fork` return `None` and callers queue.
+//!
+//! Reuse is safe without zeroing, exactly like the old slab design:
+//! attention only reads rows `[0, pos)` of the owning sequence, and every
+//! row below `pos` was either written by this sequence or shared from a
+//! parent that wrote it (pinned by the stale-leakage and COW-isolation
+//! tests here and in `infer::core`/`infer::sched`).
+//!
+//! The forward primitives in [`ModelCore`](crate::infer::core::ModelCore)
+//! read KV through per-page segments (`KvPool::k_seg`/`KvPool::v_seg`)
+//! in ascending row order, replicating the exact FMA sequence of a
+//! contiguous cache - the serving determinism contract (bit-identical
+//! logits at any batch size, chunking, thread count, and now page size)
+//! is unchanged.
+
+use anyhow::{bail, Result};
 
 use crate::infer::core::ModelCore;
 
-/// One sequence's KV storage: per layer, `max_ctx * dim` keys and values.
-pub struct KvSlot {
-    /// per layer, (max_ctx * dim) post-RoPE keys
-    pub(crate) k: Vec<Vec<f32>>,
-    /// per layer, (max_ctx * dim) values
-    pub(crate) v: Vec<Vec<f32>>,
+/// Default rows per page. Small enough that a forked tail copy is cheap,
+/// large enough that attention's per-segment loop overhead vanishes.
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// One live sequence's mutable pool state.
+struct SeqState {
+    /// page ids covering rows `[0, pages.len() * page_rows)`
+    pages: Vec<u32>,
+    /// pages this sequence may still draw (reserved at lease/fork time)
+    reserved: usize,
 }
 
-impl KvSlot {
-    fn new(n_layers: usize, dim: usize, max_ctx: usize) -> KvSlot {
-        KvSlot {
-            k: (0..n_layers).map(|_| vec![0f32; max_ctx * dim]).collect(),
-            v: (0..n_layers).map(|_| vec![0f32; max_ctx * dim]).collect(),
-        }
-    }
-}
-
-/// A leased slot. Not `Clone`/`Copy`: exactly one live lease per slot,
-/// returned to the pool with [`KvPool::release`].
+/// A leased page table. Not `Clone`/`Copy`: exactly one live lease per
+/// table, returned to the pool with [`KvPool::release`].
 #[derive(Debug)]
 pub struct KvLease {
-    pub(crate) slot: usize,
+    id: usize,
 }
 
 impl KvLease {
-    /// Slot index (diagnostics / tests).
-    pub fn slot_index(&self) -> usize {
-        self.slot
+    /// Table index (diagnostics / tests).
+    pub fn id(&self) -> usize {
+        self.id
     }
 }
 
-/// Fixed-capacity slab of KV slots with lease/release reuse.
+/// Paged, refcounted KV pool. See the module docs for the page / COW
+/// lifecycle and the reservation-based admission contract.
 pub struct KvPool {
     pub(crate) dim: usize,
     pub(crate) max_ctx: usize,
-    slots: Vec<KvSlot>,
-    free: Vec<usize>,
+    n_layers: usize,
+    page_rows: usize,
+    /// elements per page in each of `k`/`v`: n_layers * page_rows * dim
+    page_elems: usize,
+    /// post-RoPE keys, `n_pages * page_elems`
+    k: Vec<f32>,
+    /// values, `n_pages * page_elems`
+    v: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    seqs: Vec<SeqState>,
+    free_seqs: Vec<usize>,
+    /// sum of undrawn `SeqState::reserved` across live leases
+    total_reserved: usize,
+    bytes_copied: u64,
+    peak_pages: usize,
 }
 
 impl KvPool {
+    /// Pool holding `n_slots` full sequences' worth of pages (the
+    /// slab-era sizing convention: capacity for `n_slots` concurrent
+    /// `max_ctx`-row sequences, default page size).
     pub fn new(n_layers: usize, dim: usize, max_ctx: usize,
                n_slots: usize) -> KvPool {
+        let page_rows = DEFAULT_PAGE_ROWS.min(max_ctx.max(1));
+        let per_seq = pages_for(max_ctx.max(1), page_rows);
+        KvPool::with_page_rows(n_layers, dim, max_ctx, n_slots * per_seq,
+                               page_rows)
+    }
+
+    /// Pool with an explicit page geometry: `n_pages` pages of
+    /// `page_rows` rows each (tests and benches shrink `page_rows` to
+    /// exercise multi-page prefixes at tiny contexts).
+    pub fn with_page_rows(n_layers: usize, dim: usize, max_ctx: usize,
+                          n_pages: usize, page_rows: usize) -> KvPool {
+        let page_rows = page_rows.max(1);
+        let page_elems = n_layers * page_rows * dim;
         KvPool {
             dim,
             max_ctx,
-            slots: (0..n_slots)
-                .map(|_| KvSlot::new(n_layers, dim, max_ctx))
-                .collect(),
-            // pop() takes from the back; reversed so slot 0 leases first
-            free: (0..n_slots).rev().collect(),
+            n_layers,
+            page_rows,
+            page_elems,
+            k: vec![0f32; n_pages * page_elems],
+            v: vec![0f32; n_pages * page_elems],
+            refcount: vec![0; n_pages],
+            // pop() takes from the back; reversed so page 0 leases first
+            free: (0..n_pages as u32).rev().collect(),
+            seqs: Vec::new(),
+            free_seqs: Vec::new(),
+            total_reserved: 0,
+            bytes_copied: 0,
+            peak_pages: 0,
         }
     }
 
-    /// Pool shaped for `core` (its layer count, dim, and max_ctx).
+    /// Pool shaped for `core` with capacity for `n_slots` full sequences.
     pub fn for_core(core: &ModelCore, n_slots: usize) -> KvPool {
         KvPool::new(core.n_layers(), core.dim, core.max_ctx, n_slots)
     }
 
+    /// Pool shaped for `core` with an explicit page geometry.
+    pub fn for_core_paged(core: &ModelCore, n_pages: usize,
+                          page_rows: usize) -> KvPool {
+        KvPool::with_page_rows(core.n_layers(), core.dim, core.max_ctx,
+                               n_pages, page_rows)
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Total pages in the pool.
+    pub fn n_pages(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Pages a full `max_ctx`-row sequence needs.
+    pub fn pages_per_seq(&self) -> usize {
+        pages_for(self.max_ctx.max(1), self.page_rows)
+    }
+
+    /// Full-sequence capacity (slab-era convention): how many `max_ctx`
+    /// sequences fit with no sharing.
     pub fn capacity(&self) -> usize {
-        self.slots.len()
+        self.n_pages() / self.pages_per_seq()
     }
 
-    pub fn n_free(&self) -> usize {
-        self.free.len()
+    /// Pages neither allocated nor promised to a live lease - what
+    /// admission may spend.
+    pub fn n_free_pages(&self) -> usize {
+        self.free.len() - self.total_reserved
     }
 
-    /// Lease a free slot; `None` when the pool is exhausted (callers
-    /// queue - nothing panics on a full pool).
-    pub fn lease(&mut self) -> Option<KvLease> {
-        self.free.pop().map(|slot| KvLease { slot })
+    /// Pages currently backing at least one sequence.
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages() - self.free.len()
     }
 
-    /// Return a slot to the pool. The rows are left as-is: the next
-    /// lease overwrites from position 0 before anything reads them.
-    pub fn release(&mut self, lease: KvLease) {
-        debug_assert!(!self.free.contains(&lease.slot), "double release");
-        self.free.push(lease.slot);
+    /// High-water mark of [`KvPool::pages_in_use`].
+    pub fn peak_pages_in_use(&self) -> usize {
+        self.peak_pages
     }
 
-    /// Lease a slot and copy the parent's first `pos` rows into it, so a
-    /// new session continues from the parent's prefix without recomputing
-    /// it. `None` when the pool is exhausted.
-    pub fn fork(&mut self, parent: &KvLease, pos: usize) -> Option<KvLease> {
-        let child = self.lease()?;
-        let n = pos.min(self.max_ctx) * self.dim;
-        let (pi, ci) = (parent.slot, child.slot);
-        debug_assert_ne!(pi, ci, "fork leased the parent's slot");
-        let (src, dst): (&KvSlot, &mut KvSlot) = if pi < ci {
-            let (a, b) = self.slots.split_at_mut(ci);
-            (&a[pi], &mut b[0])
-        } else {
-            let (a, b) = self.slots.split_at_mut(pi);
-            (&b[0], &mut a[ci])
+    /// Total bytes ever copied by COW faults and [`KvPool::fork_copy`]
+    /// (plain [`KvPool::fork`] contributes zero).
+    pub fn bytes_copied(&self) -> u64 {
+        self.bytes_copied
+    }
+
+    /// Bytes in one page (k + v, all layers) - the COW copy upper bound.
+    pub fn page_bytes(&self) -> u64 {
+        2 * self.page_elems as u64 * 4
+    }
+
+    /// Pages a fresh `rows`-row lease must reserve.
+    fn pages_needed(&self, rows: usize) -> usize {
+        pages_for(rows.min(self.max_ctx).max(1), self.page_rows)
+    }
+
+    /// Would [`KvPool::lease_rows`]`(rows)` succeed right now?
+    pub fn can_admit(&self, rows: usize) -> bool {
+        self.pages_needed(rows) <= self.n_free_pages()
+    }
+
+    /// Lease a page table for a sequence that will write at most `rows`
+    /// rows (capped at `max_ctx`). Reserves the covering pages so later
+    /// allocation cannot fail; `None` when the pool cannot promise them
+    /// (callers queue - nothing panics on a full pool).
+    pub fn lease_rows(&mut self, rows: usize) -> Option<KvLease> {
+        let need = self.pages_needed(rows);
+        if need > self.n_free_pages() {
+            return None;
+        }
+        let id = match self.free_seqs.pop() {
+            Some(id) => id,
+            None => {
+                self.seqs.push(SeqState { pages: Vec::new(), reserved: 0 });
+                self.seqs.len() - 1
+            }
         };
-        for (ks, kd) in src.k.iter().zip(dst.k.iter_mut()) {
-            kd[..n].copy_from_slice(&ks[..n]);
+        self.seqs[id].reserved = need;
+        self.total_reserved += need;
+        Some(KvLease { id })
+    }
+
+    /// Lease with the full `max_ctx` row budget (the slab-era `lease`:
+    /// engines and anything that may decode to the context limit).
+    pub fn lease(&mut self) -> Option<KvLease> {
+        self.lease_rows(self.max_ctx)
+    }
+
+    /// Return a table to the pool: refcounts drop, pages reaching zero
+    /// go back to the free list (rows are left as-is - the next owner
+    /// overwrites from its own position 0 before anything reads them),
+    /// and the unspent reservation is cancelled.
+    pub fn release(&mut self, lease: KvLease) {
+        let pages = std::mem::take(&mut self.seqs[lease.id].pages);
+        let reserved = self.seqs[lease.id].reserved;
+        self.seqs[lease.id].reserved = 0;
+        self.total_reserved -= reserved;
+        for p in pages {
+            let r = &mut self.refcount[p as usize];
+            debug_assert!(*r > 0, "releasing an unowned page");
+            *r -= 1;
+            if *r == 0 {
+                self.free.push(p);
+            }
         }
-        for (vs, vd) in src.v.iter().zip(dst.v.iter_mut()) {
-            vd[..n].copy_from_slice(&vs[..n]);
+        self.free_seqs.push(lease.id);
+    }
+
+    /// Zero-copy fork for a child that will write at most `rows` more
+    /// rows from `pos`: the parent's pages covering `[0, pos)` are shared
+    /// by refcount (nothing is copied now; the first write to the shared
+    /// partial tail page COW-copies at most one page). `None` when the
+    /// child's page budget cannot be reserved.
+    pub fn fork_rows(&mut self, parent: &KvLease, pos: usize,
+                     rows: usize) -> Option<KvLease> {
+        let pr = self.page_rows;
+        let pos = pos.min(self.max_ctx);
+        let shared = pages_for(pos, pr);
+        if shared > self.seqs[parent.id].pages.len() {
+            // forking past the parent's filled rows is a caller bug, but
+            // fail like every other fork failure instead of panicking
+            debug_assert!(false, "fork past the parent's filled rows");
+            return None;
         }
+        let end = (pos + rows).min(self.max_ctx);
+        // fresh draws the child may need: a COW of the tail page plus
+        // every page past it, i.e. pages [pos/pr, ceil(end/pr))
+        let need = if end > pos { pages_for(end, pr) - pos / pr } else { 0 };
+        if need > self.n_free_pages() {
+            return None;
+        }
+        let id = match self.free_seqs.pop() {
+            Some(id) => id,
+            None => {
+                self.seqs.push(SeqState { pages: Vec::new(), reserved: 0 });
+                self.seqs.len() - 1
+            }
+        };
+        let table: Vec<u32> =
+            self.seqs[parent.id].pages[..shared].to_vec();
+        for &p in &table {
+            self.refcount[p as usize] += 1;
+        }
+        self.seqs[id].pages = table;
+        self.seqs[id].reserved = need;
+        self.total_reserved += need;
+        Some(KvLease { id })
+    }
+
+    /// [`KvPool::fork_rows`] with the full remaining-context budget (the
+    /// general candidate-scoring fork).
+    pub fn fork(&mut self, parent: &KvLease, pos: usize)
+                -> Option<KvLease> {
+        self.fork_rows(parent, pos, self.max_ctx - pos.min(self.max_ctx))
+    }
+
+    /// Deep-copy fork: lease a fresh full-budget table and copy the
+    /// parent's first `pos` rows into private pages. This is the slab-era
+    /// fork semantics, kept as the reference point the `kv_fork` bench
+    /// and the COW tests compare against.
+    pub fn fork_copy(&mut self, parent: &KvLease, pos: usize)
+                     -> Option<KvLease> {
+        let child = self.lease()?;
+        let pos = pos.min(self.max_ctx);
+        if pos == 0 {
+            return Some(child);
+        }
+        if self.prepare_rows(&child, 0, pos).is_err() {
+            self.release(child);
+            return None;
+        }
+        let (pr, d) = (self.page_rows, self.dim);
+        for pi in 0..pages_for(pos, pr) {
+            let rows = pr.min(pos - pi * pr);
+            let sp = self.seqs[parent.id].pages[pi] as usize;
+            let dp = self.seqs[child.id].pages[pi] as usize;
+            for l in 0..self.n_layers {
+                let so = sp * self.page_elems + l * pr * d;
+                let doff = dp * self.page_elems + l * pr * d;
+                let len = rows * d;
+                self.k.copy_within(so..so + len, doff);
+                self.v.copy_within(so..so + len, doff);
+            }
+        }
+        self.bytes_copied += 2 * (self.n_layers * pos * d) as u64 * 4;
         Some(child)
     }
 
-    /// The leased slot's storage (opaque outside the crate; the
-    /// `ModelCore` forward primitives read/write it).
-    pub fn slot(&self, lease: &KvLease) -> &KvSlot {
-        &self.slots[lease.slot]
+    /// Pages currently in `lease`'s table (diagnostics / tests).
+    pub fn seq_pages(&self, lease: &KvLease) -> usize {
+        self.seqs[lease.id].pages.len()
     }
 
-    pub fn slot_mut(&mut self, lease: &KvLease) -> &mut KvSlot {
-        &mut self.slots[lease.slot]
+    /// Draw one fresh page for `id`, preferring its reservation and
+    /// falling back to unreserved spare pages (a parent COW-ing a page it
+    /// already drew once, after forking). Errors only when the pool is
+    /// truly out of pages - impossible for writes within a lease's
+    /// declared row budget.
+    fn draw(&mut self, id: usize) -> Result<u32> {
+        if self.seqs[id].reserved > 0 {
+            self.seqs[id].reserved -= 1;
+            self.total_reserved -= 1;
+        } else if self.free.len() <= self.total_reserved {
+            bail!("KV page pool exhausted ({} pages, all reserved)",
+                  self.n_pages());
+        }
+        let p = self.free.pop().expect("free list >= reservations");
+        self.refcount[p as usize] = 1;
+        let in_use = self.n_pages() - self.free.len();
+        if in_use > self.peak_pages {
+            self.peak_pages = in_use;
+        }
+        Ok(p)
+    }
+
+    /// Make rows `[pos, pos + n)` privately writable: append fresh pages
+    /// past the table end and COW-copy the shared prefix rows of a
+    /// partial tail page. Called once per forward call before any
+    /// row write; after it, `k_row_mut`/`v_row_mut`/`scatter_*` are plain
+    /// indexing.
+    pub(crate) fn prepare_rows(&mut self, lease: &KvLease, pos: usize,
+                               n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        if pos + n > self.max_ctx {
+            bail!("KV write [{pos}, {}) overflows max_ctx {}", pos + n,
+                  self.max_ctx);
+        }
+        let pr = self.page_rows;
+        let first = pos / pr;
+        let last = (pos + n - 1) / pr;
+        if first > self.seqs[lease.id].pages.len() {
+            bail!("KV write at row {pos} leaves a page gap");
+        }
+        for pi in first..=last {
+            if pi == self.seqs[lease.id].pages.len() {
+                let p = self.draw(lease.id)?;
+                self.seqs[lease.id].pages.push(p);
+                continue;
+            }
+            let p = self.seqs[lease.id].pages[pi] as usize;
+            if self.refcount[p] == 1 {
+                continue;
+            }
+            // shared page: copy the rows below `pos` that must survive
+            // (only the first written page can have any), then go private
+            let np = self.draw(lease.id)? as usize;
+            let row_off = pos.saturating_sub(pi * pr).min(pr);
+            if row_off > 0 {
+                let d = self.dim;
+                for l in 0..self.n_layers {
+                    let so = p * self.page_elems + l * pr * d;
+                    let doff = np * self.page_elems + l * pr * d;
+                    let len = row_off * d;
+                    self.k.copy_within(so..so + len, doff);
+                    self.v.copy_within(so..so + len, doff);
+                }
+                self.bytes_copied +=
+                    2 * (self.n_layers * row_off * self.dim) as u64 * 4;
+            }
+            self.refcount[p] -= 1;
+            debug_assert!(self.refcount[p] > 0);
+            self.seqs[lease.id].pages[pi] = np as u32;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn row_base(&self, lease: &KvLease, layer: usize, pos: usize)
+                -> usize {
+        let pr = self.page_rows;
+        let page = self.seqs[lease.id].pages[pos / pr] as usize;
+        page * self.page_elems + layer * pr * self.dim
+            + (pos % pr) * self.dim
+    }
+
+    /// [`KvPool::row_base`] for a *write*: asserts the page is privately
+    /// owned (a shared-page write means a missing `prepare_rows`).
+    #[inline]
+    fn row_base_mut(&self, lease: &KvLease, layer: usize, pos: usize)
+                    -> usize {
+        debug_assert_eq!(
+            self.refcount
+                [self.seqs[lease.id].pages[pos / self.page_rows] as usize],
+            1,
+            "write to a shared page (missing prepare_rows)"
+        );
+        self.row_base(lease, layer, pos)
+    }
+
+    /// One key row, writable. Requires a prior
+    /// [`KvPool::prepare_rows`] covering `pos`.
+    #[inline]
+    pub(crate) fn k_row_mut(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize) -> &mut [f32] {
+        let b = self.row_base_mut(lease, layer, pos);
+        &mut self.k[b..b + self.dim]
+    }
+
+    /// One value row, writable (same contract as [`KvPool::k_row_mut`]).
+    #[inline]
+    pub(crate) fn v_row_mut(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize) -> &mut [f32] {
+        let b = self.row_base_mut(lease, layer, pos);
+        &mut self.v[b..b + self.dim]
+    }
+
+    /// One key row, read-only (debug/tests).
+    pub fn k_row(&self, lease: &KvLease, layer: usize, pos: usize)
+                 -> &[f32] {
+        let b = self.row_base(lease, layer, pos);
+        &self.k[b..b + self.dim]
+    }
+
+    /// One value row, read-only (debug/tests).
+    pub fn v_row(&self, lease: &KvLease, layer: usize, pos: usize)
+                 -> &[f32] {
+        let b = self.row_base(lease, layer, pos);
+        &self.v[b..b + self.dim]
+    }
+
+    /// The contiguous segment starting at `row0`: rows of the page
+    /// containing `row0`, clipped to `max_rows`. Returns (segment base,
+    /// rows); one body serves both the `k` and `v` slabs so the
+    /// page-walk arithmetic can never diverge between them.
+    #[inline]
+    fn seg(&self, lease: &KvLease, layer: usize, row0: usize,
+           max_rows: usize) -> (usize, usize) {
+        let rows = (self.page_rows - row0 % self.page_rows).min(max_rows);
+        (self.row_base(lease, layer, row0), rows)
+    }
+
+    /// The contiguous key segment starting at `row0` (rows * dim slice,
+    /// rows). Attention walks segments in ascending row order, which
+    /// replicates a contiguous cache's exact FMA sequence.
+    #[inline]
+    pub(crate) fn k_seg(&self, lease: &KvLease, layer: usize, row0: usize,
+                        max_rows: usize) -> (&[f32], usize) {
+        let (b, rows) = self.seg(lease, layer, row0, max_rows);
+        (&self.k[b..b + rows * self.dim], rows)
+    }
+
+    /// The contiguous value segment starting at `row0` (see
+    /// [`KvPool::k_seg`]).
+    #[inline]
+    pub(crate) fn v_seg(&self, lease: &KvLease, layer: usize, row0: usize,
+                        max_rows: usize) -> (&[f32], usize) {
+        let (b, rows) = self.seg(lease, layer, row0, max_rows);
+        (&self.v[b..b + rows * self.dim], rows)
+    }
+
+    /// Scatter `rows` (row-major, n * dim) into rows `[pos, pos + n)` of
+    /// one slab, page by page (shared body of `scatter_k`/`scatter_v`).
+    /// Requires a prior [`KvPool::prepare_rows`] covering the range.
+    fn scatter(&mut self, into_k: bool, lease: &KvLease, layer: usize,
+               pos: usize, rows: &[f32]) {
+        let d = self.dim;
+        let n = rows.len() / d;
+        let mut done = 0usize;
+        while done < n {
+            let (b, take) = self.seg(lease, layer, pos + done, n - done);
+            debug_assert_eq!(
+                self.refcount[self.seqs[lease.id].pages
+                    [(pos + done) / self.page_rows] as usize],
+                1,
+                "scatter into a shared page (missing prepare_rows)"
+            );
+            let dst = if into_k { &mut self.k } else { &mut self.v };
+            dst[b..b + take * d]
+                .copy_from_slice(&rows[done * d..(done + take) * d]);
+            done += take;
+        }
+    }
+
+    /// Scatter into key rows (see [`KvPool::scatter`]).
+    pub(crate) fn scatter_k(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize, rows: &[f32]) {
+        self.scatter(true, lease, layer, pos, rows);
+    }
+
+    /// Scatter into value rows (see [`KvPool::scatter`]).
+    pub(crate) fn scatter_v(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize, rows: &[f32]) {
+        self.scatter(false, lease, layer, pos, rows);
+    }
+}
+
+/// Pages covering `rows` rows (ceil division; 0 rows -> 0 pages).
+fn pages_for(rows: usize, page_rows: usize) -> usize {
+    (rows + page_rows - 1) / page_rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: usize = 4;
+    const L: usize = 2;
+
+    /// 1-layer-like tiny pool: L layers, D dim, tiny pages.
+    fn pool(n_pages: usize, page_rows: usize, max_ctx: usize) -> KvPool {
+        KvPool::with_page_rows(L, D, max_ctx, n_pages, page_rows)
+    }
+
+    fn fill_row(p: &mut KvPool, l: &KvLease, layer: usize, pos: usize,
+                tag: f32) {
+        for (i, x) in p.k_row_mut(l, layer, pos).iter_mut().enumerate() {
+            *x = tag + i as f32;
+        }
+        for (i, x) in p.v_row_mut(l, layer, pos).iter_mut().enumerate() {
+            *x = -(tag + i as f32);
+        }
+    }
+
+    fn row_tag(p: &KvPool, l: &KvLease, layer: usize, pos: usize) -> f32 {
+        p.k_row(l, layer, pos)[0]
+    }
+
+    #[test]
+    fn refcount_lifecycle_child_pages_survive_parent_release() {
+        let mut p = pool(6, 4, 16);
+        let parent = p.lease_rows(10).unwrap();
+        p.prepare_rows(&parent, 0, 10).unwrap();
+        for pos in 0..10 {
+            for layer in 0..L {
+                fill_row(&mut p, &parent, layer, pos, (pos * 100) as f32);
+            }
+        }
+        assert_eq!(p.seq_pages(&parent), 3);
+        assert_eq!(p.pages_in_use(), 3);
+
+        // fork shares all three covering pages, copies nothing
+        let b0 = p.bytes_copied();
+        let child = p.fork_rows(&parent, 10, 4).unwrap();
+        assert_eq!(p.bytes_copied(), b0, "fork must copy zero bytes");
+        assert_eq!(p.seq_pages(&child), 3);
+        assert_eq!(p.pages_in_use(), 3, "fork must not allocate pages");
+
+        // parent gone: shared pages must survive for the child
+        p.release(parent);
+        assert_eq!(p.pages_in_use(), 3);
+        for pos in 0..10 {
+            assert_eq!(row_tag(&p, &child, 0, pos), (pos * 100) as f32,
+                       "row {pos} lost after parent release");
+        }
+        p.release(child);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.n_free_pages(), 6);
+    }
+
+    #[test]
+    fn cow_isolates_child_writes_from_parent_rows() {
+        let mut p = pool(6, 4, 16);
+        let parent = p.lease_rows(16).unwrap();
+        p.prepare_rows(&parent, 0, 6).unwrap();
+        for pos in 0..6 {
+            for layer in 0..L {
+                fill_row(&mut p, &parent, layer, pos, (pos * 10) as f32);
+            }
+        }
+        // fork mid-page (6 % 4 = 2 rows into page 1)
+        let child = p.fork_rows(&parent, 6, 4).unwrap();
+        let b0 = p.bytes_copied();
+        p.prepare_rows(&child, 6, 2).unwrap();
+        // COW copied exactly the 2 surviving tail-page rows, k+v, L layers
+        let expect = 2 * (L * 2 * D) as u64 * 4;
+        assert_eq!(p.bytes_copied() - b0, expect);
+        assert!(p.bytes_copied() - b0 <= p.page_bytes(),
+                "COW exceeded one page");
+        for pos in 6..8 {
+            for layer in 0..L {
+                fill_row(&mut p, &child, layer, pos, 9000.0);
+            }
+        }
+        // child writes must not leak into the parent's page
+        let parent_next = p.prepare_rows(&parent, 6, 1);
+        parent_next.unwrap();
+        for pos in 0..6 {
+            assert_eq!(row_tag(&p, &parent, 0, pos), (pos * 10) as f32);
+            assert_eq!(row_tag(&p, &child, 0, pos), (pos * 10) as f32,
+                       "shared prefix diverged");
+        }
+        assert_eq!(row_tag(&p, &child, 0, 6), 9000.0);
+        p.release(parent);
+        p.release(child);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn reservation_gates_admission_by_pages() {
+        let mut p = pool(4, 4, 16); // 16 rows = 4 pages per full seq
+        assert_eq!(p.pages_per_seq(), 4);
+        assert_eq!(p.capacity(), 1);
+        assert!(p.can_admit(16));
+        let a = p.lease().unwrap(); // reserves all 4 pages
+        assert_eq!(p.n_free_pages(), 0);
+        assert!(!p.can_admit(1));
+        assert!(p.lease_rows(1).is_none(), "over-committed lease granted");
+        // nothing allocated yet - reservation alone gates admission
+        assert_eq!(p.pages_in_use(), 0);
+        p.release(a);
+        assert_eq!(p.n_free_pages(), 4);
+        // short leases pack: four 3-row sequences fit where one max_ctx
+        // sequence would
+        let ls: Vec<KvLease> =
+            (0..4).map(|_| p.lease_rows(3).unwrap()).collect();
+        assert!(p.lease_rows(1).is_none());
+        for l in ls {
+            p.release(l);
+        }
+        assert_eq!(p.n_free_pages(), 4);
+    }
+
+    #[test]
+    fn fork_on_exhausted_pool_returns_none() {
+        let mut p = pool(3, 4, 12);
+        let parent = p.lease().unwrap(); // reserves all 3 pages
+        p.prepare_rows(&parent, 0, 6).unwrap();
+        // a fork that could write needs a fresh page; none are spare
+        assert!(p.fork_rows(&parent, 6, 4).is_none());
+        // a read-only fork (zero new rows) needs none and succeeds
+        let ro = p.fork_rows(&parent, 6, 0).unwrap();
+        assert_eq!(p.seq_pages(&ro), 2);
+        p.release(ro);
+        p.release(parent);
+    }
+
+    #[test]
+    fn fork_copy_duplicates_rows_and_counts_bytes() {
+        let mut p = pool(8, 4, 16);
+        let parent = p.lease_rows(6).unwrap();
+        p.prepare_rows(&parent, 0, 6).unwrap();
+        for pos in 0..6 {
+            for layer in 0..L {
+                fill_row(&mut p, &parent, layer, pos, (pos * 7) as f32);
+            }
+        }
+        let b0 = p.bytes_copied();
+        let child = p.fork_copy(&parent, 6).unwrap();
+        assert_eq!(p.bytes_copied() - b0, 2 * (L * 6 * D) as u64 * 4);
+        // private pages, identical contents
+        for pos in 0..6 {
+            assert_eq!(row_tag(&p, &child, 0, pos), (pos * 7) as f32);
+        }
+        // deep copy allocates its own pages
+        assert_eq!(p.pages_in_use(), 4);
+        p.release(parent);
+        p.release(child);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn page_gap_and_overflow_are_rejected() {
+        let mut p = pool(4, 4, 16);
+        let l = p.lease().unwrap();
+        assert!(p.prepare_rows(&l, 8, 1).is_err(), "gap accepted");
+        assert!(p.prepare_rows(&l, 14, 4).is_err(), "overflow accepted");
+        assert!(p.prepare_rows(&l, 0, 0).is_ok());
+        p.release(l);
+    }
+
+    #[test]
+    fn lease_ids_recycle_without_stale_tables() {
+        let mut p = pool(4, 2, 8);
+        let a = p.lease_rows(4).unwrap();
+        p.prepare_rows(&a, 0, 4).unwrap();
+        assert_eq!(p.seq_pages(&a), 2);
+        let aid = a.id();
+        p.release(a);
+        let b = p.lease_rows(2).unwrap();
+        assert_eq!(b.id(), aid, "table id not recycled");
+        assert_eq!(p.seq_pages(&b), 0, "stale page table leaked");
+        p.release(b);
     }
 }

@@ -1,9 +1,10 @@
 //! Pure-Rust serving stack for packed low-bit models: immutable
 //! [`core::ModelCore`] shared across requests, per-request
-//! [`session::Session`] state over a slab [`kv::KvPool`], the
+//! [`session::Session`] state over the paged, refcounted [`kv::KvPool`]
+//! (zero-copy prefix sharing via [`kv::KvPool::fork`]), the
 //! continuous-batching [`sched::Scheduler`], and the single-session
 //! [`engine::Engine`] facade (see `infer::engine` docs for the
-//! architecture).
+//! architecture and docs/ARCHITECTURE.md for the full map).
 pub mod core;
 pub mod engine;
 pub mod generate;

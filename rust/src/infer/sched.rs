@@ -5,7 +5,11 @@
 //! Each [`Scheduler::tick`]:
 //!
 //! 1. **admits** queued requests while the batch has room *and* the
-//!    [`KvPool`] has a free slot (exhaustion queues - it never panics);
+//!    paged [`KvPool`] can reserve the request's KV rows
+//!    ([`KvPool::lease_rows`] with the prompt + token-budget row count,
+//!    so short requests hold only the pages they touch and page
+//!    exhaustion queues - it never panics, and an admitted request can
+//!    never fail a KV allocation mid-flight);
 //! 2. **prefills** admitted prompts in bounded chunks
 //!    ([`SchedConfig::prefill_chunk`]) between decode steps, so a long
 //!    prompt cannot stall the live batch for more than one chunk;
@@ -60,28 +64,39 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// A scheduler with `n_slots` pooled KV slots over a shared core
-    /// (at least one - no slots would mean no admissible request).
-    /// `cfg.max_batch` is clamped to the slot count (a session cannot be
-    /// live without a slot).
+    /// A scheduler with `n_slots` full sequences' worth of KV pages over
+    /// a shared core (at least one - an empty pool would mean no
+    /// admissible request). Thanks to paging, *more* than `n_slots`
+    /// short requests can be live at once: admission is gated on pages,
+    /// not whole-sequence slots.
     pub fn new(core: Arc<ModelCore>, n_slots: usize, cfg: SchedConfig)
                -> Scheduler {
-        let n_slots = n_slots.max(1);
-        let pool = KvPool::for_core(&core, n_slots);
+        let pool = KvPool::for_core(&core, n_slots.max(1));
+        Scheduler::with_pool(core, pool, cfg)
+    }
+
+    /// A scheduler over an explicitly-shaped page pool (see
+    /// [`KvPool::for_core_paged`]); tests and benches size pages
+    /// directly to exercise multi-page prefixes and page exhaustion.
+    pub fn with_pool(core: Arc<ModelCore>, pool: KvPool,
+                     cfg: SchedConfig) -> Scheduler {
         let scratch = core.scratch();
         Scheduler {
             core,
             pool,
-            cfg: SchedConfig {
-                max_batch: cfg.max_batch.clamp(1, n_slots),
-                ..cfg
-            },
+            cfg: SchedConfig { max_batch: cfg.max_batch.max(1), ..cfg },
             queue: VecDeque::new(),
             live: Vec::new(),
             scratch,
             done: Vec::new(),
             next_id: 0,
         }
+    }
+
+    /// The scheduler's page pool (occupancy reporting: `serve-sim`
+    /// prints peak pages in use and COW bytes from here).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
     }
 
     /// Enqueue a request; returns its id. The request is admitted (KV
@@ -126,10 +141,18 @@ impl Scheduler {
         let Scheduler { core, pool, cfg, queue, live, scratch, done, .. } =
             self;
 
-        // 1. admission: queue -> live while a slot and batch room exist
+        // 1. admission: queue -> live while batch room exists and the
+        //    pool can reserve the request's worst-case KV rows (prompt
+        //    plus decode feeds; the final sampled token is emitted
+        //    without being fed, hence max_new - 1)
         while live.len() < cfg.max_batch && !queue.is_empty() {
-            match pool.lease() {
-                None => break, // exhausted: requests stay queued
+            let rows = {
+                let (_, req, _) = queue.front().unwrap();
+                (req.prompt.len() + req.max_new.saturating_sub(1))
+                    .min(core.max_ctx)
+            };
+            match pool.lease_rows(rows) {
+                None => break, // page-exhausted: requests stay queued
                 Some(lease) => {
                     let (id, req, submitted) = queue.pop_front().unwrap();
                     live.push(Session::start(id, req, lease, submitted));
@@ -142,7 +165,7 @@ impl Scheduler {
             let n =
                 cfg.prefill_chunk.max(1).min(s.prompt.len() - s.prefilled);
             let chunk = &s.prompt[s.prefilled..s.prefilled + n];
-            core.prefill(pool.slot_mut(&s.lease), s.pos, chunk, scratch)?;
+            core.prefill(pool, &s.lease, s.pos, chunk, scratch)?;
             s.pos += n;
             s.prefilled += n;
             if s.prompt_done() {
@@ -331,6 +354,53 @@ mod tests {
             assert!(comp.first_token_secs >= 0.0);
             assert!(comp.finish_secs >= comp.first_token_secs);
         }
+    }
+
+    /// Page-granular exhaustion: with 6-row pages and only 4 pages, the
+    /// 2-page requests queue (at most 2 live at once), every request
+    /// still completes with its solo output, and the pool never exceeds
+    /// its page budget.
+    #[test]
+    fn page_exhaustion_queues_and_completes() {
+        let c = core(36);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..5)
+            .map(|i| (prompt(7, 5 + i), 4, 700 + i as u64))
+            .collect();
+        // rows needed per request = 7 prompt + 4 - 1 decode feeds = 10
+        // -> 2 pages of 6 rows each; 4 pages total -> <= 2 live
+        let mut sched = Scheduler::with_pool(
+            c.clone(),
+            KvPool::for_core_paged(&c, 4, 6),
+            SchedConfig { max_batch: 8, prefill_chunk: 4 });
+        for r in &reqs {
+            sched.submit(Request {
+                prompt: r.0.clone(),
+                max_new: r.1,
+                sampler: Sampler::Greedy,
+                seed: r.2,
+            }).unwrap();
+        }
+        let mut max_live = 0usize;
+        while !sched.is_idle() {
+            sched.tick().unwrap();
+            max_live = max_live.max(sched.n_live());
+        }
+        assert!(max_live <= 2, "live {max_live} exceeded the page budget");
+        assert!(sched.pool().peak_pages_in_use() <= 4);
+        assert_eq!(sched.pool().pages_in_use(), 0, "pages leaked");
+        let comps = sched.take_completed();
+        assert_eq!(comps.len(), reqs.len());
+        for (comp, r) in comps.iter().zip(&reqs) {
+            assert_eq!(comp.tokens, solo_greedy(&c, r), "req {}", comp.id);
+        }
+    }
+
+    fn solo_greedy(core: &Arc<ModelCore>, req: &(Vec<i32>, usize, u64))
+                   -> Vec<i32> {
+        let mut e = Engine::from_core(core.clone());
+        generate(&mut e, &req.0, req.1, Sampler::Greedy, req.2)
+            .unwrap()
+            .tokens
     }
 
     /// A sequence that fills its context retires instead of erroring, and

@@ -1,8 +1,10 @@
 //! Per-request mutable state for the serving core: a [`Session`] owns
 //! exactly what one in-flight sequence needs - its position, its sampler
-//! RNG, its KV lease from the shared [`KvPool`](crate::infer::kv::KvPool),
-//! and its generation bookkeeping (prompt progress, emitted tokens,
-//! latency timestamps). Everything immutable lives in the shared
+//! RNG, its page-table lease from the shared paged
+//! [`KvPool`](crate::infer::kv::KvPool) (reserved for the request's
+//! worst-case row count at admission, so decode can never fail a KV
+//! allocation), and its generation bookkeeping (prompt progress, emitted
+//! tokens, latency timestamps). Everything immutable lives in the shared
 //! [`ModelCore`](crate::infer::core::ModelCore).
 //!
 //! The RNG is forked exactly like `infer::generate::generate` forks it

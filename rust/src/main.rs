@@ -352,6 +352,17 @@ fn run(args: &[String]) -> Result<()> {
                 "  request finish   p50 {:.2}ms  p95 {:.2}ms",
                 percentile(&finishes, 50.0), percentile(&finishes, 95.0)
             );
+            let pool = sched.pool();
+            println!(
+                "  page pool        {} pages x {} rows; peak {} in use \
+                 ({:.0}%), {} B COW-copied",
+                pool.n_pages(),
+                pool.page_rows(),
+                pool.peak_pages_in_use(),
+                100.0 * pool.peak_pages_in_use() as f64
+                    / pool.n_pages().max(1) as f64,
+                pool.bytes_copied()
+            );
         }
         "size" => {
             let name = cli.flag_or("model", "llama2-7b");

@@ -1,27 +1,45 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build + full test suite + a fast-mode inference
-# bench smoke that must produce a valid machine-readable perf snapshot
-# (runs/bench.json, schema 4: inference + native train_step +
-# taped-vs-forward-only eval_forward + the continuous-batching serve
-# section) + a bounded serve-sim smoke + a bounded end-to-end Block-AP ->
-# E2E-QP training smoke and a forward-only eval smoke on the native
-# backend (no HLO artifacts required). Run from anywhere; operates on
-# the repo root.
+# Tier-1 gate: release build + full test suite + warning-free rustdoc +
+# docs link check + a fast-mode inference bench smoke that must produce
+# a valid machine-readable perf snapshot (runs/bench.json, schema 5:
+# inference + native train_step + taped-vs-forward-only eval_forward +
+# the continuous-batching serve section + the paged-KV kv_fork section,
+# whose zero-copy/COW bounds and scoring bit-equality are asserted
+# inside the bench and re-checked by `bench check`) + a bounded
+# serve-sim smoke + a bounded end-to-end Block-AP -> E2E-QP training
+# smoke and a forward-only eval smoke on the native backend (no HLO
+# artifacts required). Run from anywhere; operates on the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 cargo test -q
 
+# docs gate: rustdoc must be warning-free (broken intra-doc links fail
+# the build), and every docs/*.md file referenced from README.md must
+# exist
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
+  if [ ! -f "$f" ]; then
+    echo "tier1 FAIL: README.md links missing file: $f" >&2
+    exit 1
+  fi
+done
+
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 4: eval_forward +
-# the continuous-batching serve section, whose scheduler-vs-solo logit
-# bit-equality is asserted inside the bench itself)
+# runs/bench.json is missing or schema-invalid (schema 5; see
+# docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
+# copy bounds are asserted inside the bench itself; assert here that
+# the section actually made it into the snapshot.
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
+if ! grep -q '"kv_fork"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no kv_fork section" >&2
+  exit 1
+fi
 
 # serving smoke: bounded synthetic request stream through the
-# continuous-batching scheduler (shared ModelCore + pooled-KV sessions);
+# continuous-batching scheduler (shared ModelCore + paged-KV sessions);
 # fails on lost requests or zero emitted tokens
 cargo run --release --bin eqat -- serve-sim --requests 8 --slots 3 \
   --tokens 8 --prompt-len 10 --prefill-chunk 4
