@@ -94,14 +94,11 @@ fn main() -> Result<()> {
     let mut sched = Scheduler::new(core, 4, SchedConfig {
         max_batch: 4,
         prefill_chunk: 8,
+        ..SchedConfig::default()
     });
     for (prompt, seed) in &requests {
-        sched.submit(Request {
-            prompt: prompt.clone(),
-            max_new,
-            sampler: Sampler::Temperature(0.8),
-            seed: *seed,
-        })?;
+        sched.submit(Request::new(prompt.clone(), max_new,
+                                  Sampler::Temperature(0.8), *seed))?;
     }
     let t1 = std::time::Instant::now();
     let comps = sched.run_all()?;

@@ -5,14 +5,15 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 5 = inference sections + native train_step + eval_forward +
+//! (schema 6 = inference sections + native train_step + eval_forward +
 //! the continuous-batching `serve` section + the paged-KV `kv_fork`
-//! section: zero-copy fork latency and bytes copied vs the deep-copy
-//! fork, and prefix-shared vs copy-fork zeroshot-style scoring
-//! throughput, with bit-equality between the two scoring paths asserted
-//! inside the bench) so the perf trajectory is trackable across PRs;
+//! section + the open-loop `serve_robust` section: goodput / shed /
+//! timeout / reject counters per offered rate, with run-to-run
+//! determinism, survivor bit-equality vs solo generate, fault-run
+//! reproducibility, and zero KV-page leaks asserted inside the bench)
+//! so the perf trajectory is trackable across PRs;
 //! [`check_bench_json`] validates it (used by scripts/tier1.sh).
-//! Schemas 1-4 from older PRs stay accepted. Every section and field is
+//! Schemas 1-5 from older PRs stay accepted. Every section and field is
 //! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
 //! bumping the schema.
 
@@ -168,14 +169,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (kf_md, kf_json) = kv_fork_throughput(fast)?;
     md.push_str(&kf_md);
+    md.push('\n');
+    let (sr_md, sr_json) = serve_robust_throughput(fast)?;
+    md.push_str(&sr_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 5 = schema 4 + the paged-KV kv_fork section
-        ("schema", Json::num(5.0)),
+        // schema 6 = schema 5 + the open-loop serve_robust section
+        ("schema", Json::num(6.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -186,6 +190,7 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("eval_forward", ef_json),
         ("serve", sv_json),
         ("kv_fork", kf_json),
+        ("serve_robust", sr_json),
     ]);
     Ok((md, payload))
 }
@@ -422,14 +427,12 @@ pub fn serve_throughput(fast: bool) -> Result<(String, Json)> {
         let mut sched = Scheduler::new(core.clone(), bsz, SchedConfig {
             max_batch: bsz,
             prefill_chunk: prompt_len,
+            ..SchedConfig::default()
         });
         for i in 0..bsz {
-            sched.submit(Request {
-                prompt: mk_prompt(i),
-                max_new,
-                sampler: Sampler::Greedy,
-                seed: 1000 + i as u64,
-            })?;
+            sched.submit(Request::new(mk_prompt(i), max_new,
+                                      Sampler::Greedy,
+                                      1000 + i as u64))?;
         }
         let t0 = Instant::now();
         let comps = sched.run_all()?;
@@ -511,6 +514,155 @@ pub fn serve_throughput(fast: bool) -> Result<(String, Json)> {
         ("prompt_tokens", Json::num(prompt_len as f64)),
         ("max_new", Json::num(max_new as f64)),
         ("batches", Json::arr(jbatches)),
+    ]);
+    Ok((md, j))
+}
+
+/// Open-loop serving robustness: seeded Poisson arrivals with a deadline
+/// mix driven through the scheduler on the virtual clock at a light, a
+/// near-capacity, and an overload rate, reporting goodput / shed /
+/// timeout / reject counters per rate. Before reporting, the bench
+/// *asserts* the robustness contracts: every run is run-to-run
+/// deterministic (identical lifecycle digests), survivors of a clean
+/// run are bit-identical to solo `generate`, a seeded fault-injection
+/// run is just as deterministic, and no run leaks a single KV page.
+/// `serve_robust` section of runs/bench.json (schema >= 6).
+pub fn serve_robust_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::infer::openloop::{planned_requests, run_open_loop,
+                                 run_open_loop_with_completions,
+                                 OpenLoopCfg};
+
+    let (dim, nh, hd, inter, vocab, n_layers) = if fast {
+        (256usize, 4usize, 64usize, 512usize, 1024usize, 1usize)
+    } else {
+        (1024, 8, 128, 2816, 4096, 1)
+    };
+    let prompt_len = 8usize;
+    let max_new = if fast { 12 } else { 16 };
+    let max_ctx = prompt_len + max_new + 4;
+    let requests = if fast { 24 } else { 48 };
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, QuantScheme::new(2, 128),
+        max_ctx, 4343)?);
+    let base = OpenLoopCfg {
+        requests,
+        rate: 20.0,
+        tick_secs: 0.005,
+        prompt_len,
+        max_new,
+        deadline_secs: 0.5,
+        seed: 21,
+        slots: 4,
+        max_batch: 4,
+        prefill_chunk: prompt_len,
+        max_queue: 8,
+        fault_rate: 0.0,
+    };
+
+    // robustness gate 1: survivors of a clean, uncontended run are
+    // bit-identical to solo generate runs of the same requests
+    let gentle = OpenLoopCfg {
+        rate: 10.0,
+        deadline_secs: 0.0, // no deadlines: every arrival must finish
+        max_queue: requests.max(1),
+        ..base
+    };
+    let (grep, comps) =
+        run_open_loop_with_completions(core.clone(), &gentle)?;
+    ensure!(grep.rejected == 0 && grep.goodput == grep.arrivals,
+            "serve_robust bench: uncontended run did not finish \
+             everything: {grep:?}");
+    let reqs = planned_requests(&gentle, core.max_ctx);
+    ensure!(comps.len() == reqs.len());
+    for (c, req) in comps.iter().zip(&reqs) {
+        let mut eng = Engine::from_core(core.clone());
+        let want = generate(&mut eng, &req.prompt, req.max_new,
+                            req.sampler, req.seed)?;
+        ensure!(c.tokens == want.tokens,
+                "serve_robust bench: open-loop request {} diverged from \
+                 its solo generate run", c.id);
+    }
+
+    // robustness gate 2 + the rate sweep: every rate is run twice and
+    // must reproduce its lifecycle digest bit-for-bit
+    let mut rows = vec![vec![
+        "config".into(),
+        format!("dim {dim}, inter {inter}, vocab {vocab}, {n_layers} \
+                 block(s), w2g128; {requests} arrivals, deadline \
+                 {:.0}ms, queue cap {}", base.deadline_secs * 1e3,
+                base.max_queue),
+    ]];
+    let mut jrates = Vec::new();
+    for &rate in &[20.0f64, 60.0, 300.0] {
+        let cfg = OpenLoopCfg { rate, ..base };
+        let a = run_open_loop(core.clone(), &cfg)?;
+        let b = run_open_loop(core.clone(), &cfg)?;
+        ensure!(a == b,
+                "serve_robust bench: rate {rate} not deterministic");
+        ensure!(a.goodput > 0,
+                "serve_robust bench: zero goodput at rate {rate}");
+        ensure!(a.leaked_pages == 0);
+        let goodput_rate = a.goodput as f64 / a.arrivals.max(1) as f64;
+        let shed_rate = (a.shed_queued + a.rejected) as f64
+            / a.arrivals.max(1) as f64;
+        rows.push(vec![
+            format!("offered {rate:.0} req/s"),
+            format!("goodput {}/{} ({:.0}%), shed {}, timed out {}, \
+                     rejected {}, queue max {}",
+                    a.goodput, a.arrivals, goodput_rate * 100.0,
+                    a.shed_queued, a.timed_out_live, a.rejected,
+                    a.queue_depth_max),
+        ]);
+        crate::info!("serve_robust bench rate {rate:.0}: goodput \
+                      {}/{}, shed {}, rejected {}",
+                     a.goodput, a.arrivals, a.shed_queued, a.rejected);
+        jrates.push(Json::obj(vec![
+            ("rate", Json::num(rate)),
+            ("offered", Json::num(a.arrivals as f64)),
+            ("goodput", Json::num(a.goodput as f64)),
+            ("shed", Json::num(a.shed_queued as f64)),
+            ("timed_out", Json::num(a.timed_out_live as f64)),
+            ("failed", Json::num(a.failed as f64)),
+            ("rejected", Json::num(a.rejected as f64)),
+            ("goodput_rate", Json::num(goodput_rate)),
+            ("shed_rate", Json::num(shed_rate)),
+            ("queue_depth_max", Json::num(a.queue_depth_max as f64)),
+        ]));
+    }
+
+    // robustness gate 3: a seeded fault-injection run reproduces
+    // bit-for-bit and leaks nothing either
+    let fcfg = OpenLoopCfg { rate: 60.0, fault_rate: 0.05, ..base };
+    let fa = run_open_loop(core.clone(), &fcfg)?;
+    let fb = run_open_loop(core, &fcfg)?;
+    ensure!(fa == fb, "serve_robust bench: fault run not deterministic");
+    ensure!(fa.leaked_pages == 0);
+    rows.push(vec![
+        format!("faults armed (p = {})", fcfg.fault_rate),
+        format!("goodput {}/{}, failed {}, digest {:016x}",
+                fa.goodput, fa.arrivals, fa.failed, fa.digest),
+    ]);
+
+    let md = format!(
+        "## Serve robustness - open-loop arrivals with deadlines, \
+         backpressure, and fault injection (determinism + zero-leak \
+         contracts asserted)\n\n{}",
+        crate::exp::md_table(&["Scenario", "Outcome"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("dim", Json::num(dim as f64)),
+        ("prompt_tokens", Json::num(prompt_len as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("deadline_secs", Json::num(base.deadline_secs)),
+        ("max_queue", Json::num(base.max_queue as f64)),
+        ("rates", Json::arr(jrates)),
+        ("fault_rate", Json::num(fcfg.fault_rate)),
+        ("fault_goodput", Json::num(fa.goodput as f64)),
+        ("fault_failed", Json::num(fa.failed as f64)),
+        ("survivors_bitexact", Json::Bool(true)),
+        ("deterministic", Json::Bool(true)),
+        ("leaked_pages", Json::num(0.0)),
     ]);
     Ok((md, j))
 }
@@ -941,15 +1093,16 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 /// Validate a `runs/bench.json` produced by [`inference_throughput`]:
 /// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
 /// eval_forward, 4 adds the continuous-batching serve section, 5 adds
-/// the paged-KV kv_fork section - see docs/BENCH_SCHEMA.md), and
-/// requires non-empty matvec/decode sections with numeric fields.
+/// the paged-KV kv_fork section, 6 adds the open-loop serve_robust
+/// section - see docs/BENCH_SCHEMA.md), and requires non-empty
+/// matvec/decode sections with numeric fields.
 /// scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=5).contains(&schema) {
+    if !(1..=6).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -1051,6 +1204,47 @@ pub fn check_bench_json(path: &str) -> Result<()> {
                    page ({page} B)");
         }
     }
+    // schema 6 adds the open-loop serve_robust section; the checker
+    // re-asserts the robustness contract the numbers encode: the runs
+    // were deterministic, survivors matched solo generate, and no KV
+    // page leaked
+    if schema >= 6 {
+        let sr = j.get("serve_robust")?;
+        let rates = sr.get("rates")?.as_arr()?;
+        if rates.is_empty() {
+            bail!("{path}: empty serve_robust.rates section");
+        }
+        for r in rates {
+            for key in ["rate", "offered", "goodput", "shed",
+                        "timed_out", "failed", "rejected",
+                        "queue_depth_max"] {
+                let v = r.get(key)?.as_f64()?;
+                if !v.is_finite() || v < 0.0 {
+                    bail!("{path}: bad serve_robust.rates.{key} {v}");
+                }
+            }
+            let g = r.get("goodput")?.as_f64()?;
+            if g <= 0.0 {
+                bail!("{path}: serve_robust rate with zero goodput");
+            }
+            for key in ["goodput_rate", "shed_rate"] {
+                let v = r.get(key)?.as_f64()?;
+                if !v.is_finite() || !(0.0..=1.0).contains(&v) {
+                    bail!("{path}: serve_robust.rates.{key} {v} outside \
+                           [0, 1]");
+                }
+            }
+        }
+        for key in ["survivors_bitexact", "deterministic"] {
+            if !sr.get(key)?.as_bool()? {
+                bail!("{path}: serve_robust.{key} is false");
+            }
+        }
+        let leaked = sr.get("leaked_pages")?.as_f64()?;
+        if leaked != 0.0 {
+            bail!("{path}: serve_robust.leaked_pages {leaked} != 0");
+        }
+    }
     Ok(())
 }
 
@@ -1111,7 +1305,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(5.0)),
+            ("schema", Json::num(6.0)),
             ("kind", Json::str("inference_throughput")),
             (
                 "matvec",
@@ -1177,6 +1371,29 @@ mod tests {
                     ("speedup", Json::num(1.67)),
                 ]),
             ),
+            (
+                "serve_robust",
+                Json::obj(vec![
+                    (
+                        "rates",
+                        Json::arr(vec![Json::obj(vec![
+                            ("rate", Json::num(60.0)),
+                            ("offered", Json::num(24.0)),
+                            ("goodput", Json::num(20.0)),
+                            ("shed", Json::num(2.0)),
+                            ("timed_out", Json::num(1.0)),
+                            ("failed", Json::num(0.0)),
+                            ("rejected", Json::num(1.0)),
+                            ("goodput_rate", Json::num(20.0 / 24.0)),
+                            ("shed_rate", Json::num(3.0 / 24.0)),
+                            ("queue_depth_max", Json::num(5.0)),
+                        ])]),
+                    ),
+                    ("survivors_bitexact", Json::Bool(true)),
+                    ("deterministic", Json::Bool(true)),
+                    ("leaked_pages", Json::num(0.0)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -1184,8 +1401,9 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-5 file without its required sections is rejected...
-        for missing in ["train_step", "eval_forward", "serve", "kv_fork"] {
+        // schema-6 file without its required sections is rejected...
+        for missing in ["train_step", "eval_forward", "serve", "kv_fork",
+                        "serve_robust"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -1229,13 +1447,49 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "bad kv_fork.{key} accepted");
         }
-        // ...but the core sections under legacy schemas 1-4 stay valid
-        // (4 keeps serve, 3 keeps eval_forward, 1/2 drop those too)
+        // ...and a serve_robust section violating the robustness
+        // contract (false determinism flags, leaked pages) is rejected
+        for (key, val) in [("survivors_bitexact", Json::Bool(false)),
+                           ("deterministic", Json::Bool(false)),
+                           ("leaked_pages", Json::num(3.0))] {
+            let mut fields = Vec::new();
+            if let Json::Obj(outer) = &good {
+                for (k, v) in outer {
+                    if k == "serve_robust" {
+                        let mut sr = Vec::new();
+                        if let Json::Obj(inner) = v {
+                            for (ik, iv) in inner {
+                                sr.push((
+                                    ik.as_str(),
+                                    if ik == key {
+                                        val.clone()
+                                    } else {
+                                        iv.clone()
+                                    },
+                                ));
+                            }
+                        }
+                        fields.push((k.as_str(), Json::obj(sr)));
+                    } else {
+                        fields.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(fields)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "bad serve_robust.{key} accepted");
+        }
+        // ...but the core sections under legacy schemas 1-5 stay valid
+        // (5 keeps kv_fork, 4 keeps serve, 3 keeps eval_forward, 1/2
+        // drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["kv_fork", "serve", "eval_forward", "schema"]),
-            (2.0, vec!["kv_fork", "serve", "eval_forward", "schema"]),
-            (3.0, vec!["kv_fork", "serve", "schema"]),
-            (4.0, vec!["kv_fork", "schema"]),
+            (1.0f64, vec!["serve_robust", "kv_fork", "serve",
+                          "eval_forward", "schema"]),
+            (2.0, vec!["serve_robust", "kv_fork", "serve",
+                       "eval_forward", "schema"]),
+            (3.0, vec!["serve_robust", "kv_fork", "serve", "schema"]),
+            (4.0, vec!["serve_robust", "kv_fork", "schema"]),
+            (5.0, vec!["serve_robust", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

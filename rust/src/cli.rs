@@ -44,14 +44,20 @@ COMMANDS
                         aggregate tok/s, latency percentiles, and
                         page-pool occupancy (peak pages, COW bytes)
                         [--requests N --slots N --tokens N --prompt-len L
-                         --prefill-chunk N --seed S --model FILE]
+                         --prefill-chunk N --seed S --model FILE];
+                        --open-loop switches to deterministic Poisson
+                        arrivals on the virtual clock with deadlines,
+                        bounded-queue backpressure, and seeded fault
+                        injection [--rate R --tick-ms MS --deadline-ms MS
+                         --max-queue N --fail-rate P]
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
                         batched prefill + native train_step + eval_forward
-                        + serve + paged-KV kv_fork sections ->
-                        runs/bench.json, schema 5; see
+                        + serve + paged-KV kv_fork + open-loop
+                        serve_robust sections -> runs/bench.json,
+                        schema 6; see
                         docs/BENCH_SCHEMA.md) | check (validate
                         runs/bench.json) | train-time (Tables 8/9)
                         [--fast]

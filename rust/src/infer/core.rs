@@ -47,6 +47,7 @@ use crate::infer::qlinear::{dense_matmul, dense_matmul_rows, dense_matvec,
 use crate::io::manifest::PresetInfo;
 use crate::model::quantized::QuantizedModel;
 use crate::quant::rtn::{minmax_init, quantize};
+use crate::util::failpoint;
 use crate::util::rng::Rng;
 use crate::util::threads;
 
@@ -395,6 +396,8 @@ impl ModelCore {
                             pos: usize, tok: i32, sc: &mut Scratch,
                             mut trace: Option<&mut Vec<Vec<f32>>>)
                             -> Result<()> {
+        // fault-injection site, before any KV/scratch mutation
+        failpoint::check("fwd.step")?;
         if pos >= self.max_ctx {
             bail!("KV cache full ({} positions)", self.max_ctx);
         }
@@ -491,6 +494,8 @@ impl ModelCore {
     /// `eval_items`' prefix forks exact.
     pub fn prefill(&self, pool: &mut KvPool, lease: &KvLease, pos: usize,
                    tokens: &[i32], sc: &mut Scratch) -> Result<()> {
+        // fault-injection site, before any KV/scratch mutation
+        failpoint::check("fwd.prefill")?;
         self.forward_rows(pool, lease, pos, tokens, sc)?;
         let n = tokens.len();
         let d = self.dim;
@@ -673,6 +678,10 @@ impl ModelCore {
         if nb == 0 {
             return Ok(());
         }
+        // fault-injection site: a whole-batch fault, taken before any
+        // per-sequence state changes so the scheduler's per-session
+        // fallback sees untouched positions
+        failpoint::check("fwd.decode")?;
         for &(lease, pos) in batch {
             if pos >= self.max_ctx {
                 bail!("KV cache full ({} positions)", self.max_ctx);

@@ -44,9 +44,12 @@
 //! logits at any batch size, chunking, thread count, and now page size)
 //! is unchanged.
 
+use std::sync::{Arc, Mutex};
+
 use anyhow::{bail, Result};
 
 use crate::infer::core::ModelCore;
+use crate::util::failpoint;
 
 /// Default rows per page. Small enough that a forked tail copy is cheap,
 /// large enough that attention's per-segment loop overhead vanishes.
@@ -62,15 +65,34 @@ struct SeqState {
 
 /// A leased page table. Not `Clone`/`Copy`: exactly one live lease per
 /// table, returned to the pool with [`KvPool::release`].
+///
+/// **Drop-safe**: a lease dropped without an explicit `release` (an
+/// early-exit error path, a cancelled future, a panicking caller)
+/// records its id in the owning pool's graveyard; the next
+/// [`KvPool::reap`] - called by every `lease_rows`/`fork_rows` and by
+/// the scheduler each tick - returns its pages and reservation to the
+/// pool. No exit path can leak pages.
 #[derive(Debug)]
 pub struct KvLease {
     id: usize,
+    graveyard: Arc<Mutex<Vec<usize>>>,
+    released: bool,
 }
 
 impl KvLease {
     /// Table index (diagnostics / tests).
     pub fn id(&self) -> usize {
         self.id
+    }
+}
+
+impl Drop for KvLease {
+    fn drop(&mut self) {
+        if !self.released {
+            if let Ok(mut g) = self.graveyard.lock() {
+                g.push(self.id);
+            }
+        }
     }
 }
 
@@ -95,6 +117,8 @@ pub struct KvPool {
     total_reserved: usize,
     bytes_copied: u64,
     peak_pages: usize,
+    /// ids of leases dropped without release, pending [`KvPool::reap`]
+    graveyard: Arc<Mutex<Vec<usize>>>,
 }
 
 impl KvPool {
@@ -132,6 +156,7 @@ impl KvPool {
             total_reserved: 0,
             bytes_copied: 0,
             peak_pages: 0,
+            graveyard: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
@@ -210,6 +235,7 @@ impl KvPool {
     /// allocation cannot fail; `None` when the pool cannot promise them
     /// (callers queue - nothing panics on a full pool).
     pub fn lease_rows(&mut self, rows: usize) -> Option<KvLease> {
+        self.reap();
         let need = self.pages_needed(rows);
         if need > self.n_free_pages() {
             return None;
@@ -223,7 +249,15 @@ impl KvPool {
         };
         self.seqs[id].reserved = need;
         self.total_reserved += need;
-        Some(KvLease { id })
+        Some(self.make_lease(id))
+    }
+
+    fn make_lease(&self, id: usize) -> KvLease {
+        KvLease {
+            id,
+            graveyard: Arc::clone(&self.graveyard),
+            released: false,
+        }
     }
 
     /// Lease with the full `max_ctx` row budget (the slab-era `lease`:
@@ -236,10 +270,16 @@ impl KvPool {
     /// go back to the free list (rows are left as-is - the next owner
     /// overwrites from its own position 0 before anything reads them),
     /// and the unspent reservation is cancelled.
-    pub fn release(&mut self, lease: KvLease) {
-        let pages = std::mem::take(&mut self.seqs[lease.id].pages);
-        let reserved = self.seqs[lease.id].reserved;
-        self.seqs[lease.id].reserved = 0;
+    pub fn release(&mut self, mut lease: KvLease) {
+        lease.released = true;
+        self.release_id(lease.id);
+    }
+
+    /// [`KvPool::release`] by table id (shared with [`KvPool::reap`]).
+    fn release_id(&mut self, id: usize) {
+        let pages = std::mem::take(&mut self.seqs[id].pages);
+        let reserved = self.seqs[id].reserved;
+        self.seqs[id].reserved = 0;
         self.total_reserved -= reserved;
         for p in pages {
             let r = &mut self.refcount[p as usize];
@@ -249,7 +289,23 @@ impl KvPool {
                 self.free.push(p);
             }
         }
-        self.free_seqs.push(lease.id);
+        self.free_seqs.push(id);
+    }
+
+    /// Release every lease that was dropped without [`KvPool::release`]
+    /// (see [`KvLease`]'s drop-safety contract); returns how many were
+    /// reclaimed. Admission paths call this implicitly, so a leaked
+    /// lease can delay reuse by at most one allocation attempt.
+    pub fn reap(&mut self) -> usize {
+        let dead: Vec<usize> = {
+            let mut g = self.graveyard.lock().expect("graveyard poisoned");
+            std::mem::take(&mut *g)
+        };
+        let n = dead.len();
+        for id in dead {
+            self.release_id(id);
+        }
+        n
     }
 
     /// Zero-copy fork for a child that will write at most `rows` more
@@ -259,6 +315,7 @@ impl KvPool {
     /// child's page budget cannot be reserved.
     pub fn fork_rows(&mut self, parent: &KvLease, pos: usize,
                      rows: usize) -> Option<KvLease> {
+        self.reap();
         let pr = self.page_rows;
         let pos = pos.min(self.max_ctx);
         let shared = pages_for(pos, pr);
@@ -290,7 +347,7 @@ impl KvPool {
         self.seqs[id].pages = table;
         self.seqs[id].reserved = need;
         self.total_reserved += need;
-        Some(KvLease { id })
+        Some(self.make_lease(id))
     }
 
     /// [`KvPool::fork_rows`] with the full remaining-context budget (the
@@ -343,6 +400,10 @@ impl KvPool {
     /// truly out of pages - impossible for writes within a lease's
     /// declared row budget.
     fn draw(&mut self, id: usize) -> Result<u32> {
+        // fault-injection site: simulate an allocation failure before
+        // any accounting changes, so an injected error leaves the
+        // reservation intact and release() stays consistent
+        failpoint::check("kv.draw")?;
         if self.seqs[id].reserved > 0 {
             self.seqs[id].reserved -= 1;
             self.total_reserved -= 1;
@@ -704,6 +765,53 @@ mod tests {
         assert!(p.prepare_rows(&l, 14, 4).is_err(), "overflow accepted");
         assert!(p.prepare_rows(&l, 0, 0).is_ok());
         p.release(l);
+    }
+
+    #[test]
+    fn dropped_lease_is_reaped_not_leaked() {
+        let mut p = pool(4, 4, 16);
+        let l = p.lease_rows(8).unwrap();
+        p.prepare_rows(&l, 0, 8).unwrap();
+        assert_eq!(p.pages_in_use(), 2);
+        drop(l); // early-exit path: no release
+        // drop alone only records the leak; accounting is unchanged
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.reap(), 1);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.n_free_pages(), 4);
+        assert_eq!(p.reap(), 0, "reap must be idempotent");
+    }
+
+    #[test]
+    fn admission_reaps_dropped_reservations() {
+        let mut p = pool(4, 4, 16);
+        // reserves the whole pool, then leaks
+        drop(p.lease().unwrap());
+        // a fresh full-pool lease still succeeds: lease_rows reaps first
+        let l = p.lease().expect("dropped reservation blocked admission");
+        p.release(l);
+        assert_eq!(p.n_free_pages(), 4);
+    }
+
+    #[test]
+    fn injected_draw_fault_leaves_pool_consistent() {
+        use crate::util::failpoint;
+        let mut p = pool(4, 4, 16);
+        let l = p.lease_rows(8).unwrap();
+        let err = failpoint::with(9, &[("kv.draw", 1.0)], || {
+            p.prepare_rows(&l, 0, 8)
+        });
+        assert!(err.is_err(), "armed kv.draw must fail the write");
+        // the failed write drew nothing and kept the reservation, so
+        // releasing restores the pool exactly
+        p.release(l);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.n_free_pages(), 4);
+        // disarmed again: the same sequence succeeds
+        let l = p.lease_rows(8).unwrap();
+        p.prepare_rows(&l, 0, 8).unwrap();
+        p.release(l);
+        assert_eq!(p.pages_in_use(), 0);
     }
 
     #[test]

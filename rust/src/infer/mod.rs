@@ -2,13 +2,16 @@
 //! [`core::ModelCore`] shared across requests, per-request
 //! [`session::Session`] state over the paged, refcounted [`kv::KvPool`]
 //! (zero-copy prefix sharing via [`kv::KvPool::fork`]), the
-//! continuous-batching [`sched::Scheduler`], and the single-session
+//! continuous-batching [`sched::Scheduler`], the deterministic
+//! [`openloop`] arrival simulator that exercises its failure model
+//! (deadlines, backpressure, fault injection), and the single-session
 //! [`engine::Engine`] facade (see `infer::engine` docs for the
 //! architecture and docs/ARCHITECTURE.md for the full map).
 pub mod core;
 pub mod engine;
 pub mod generate;
 pub mod kv;
+pub mod openloop;
 pub mod qlinear;
 pub mod sched;
 pub mod session;

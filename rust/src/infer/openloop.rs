@@ -1,0 +1,390 @@
+//! Deterministic open-loop serving simulator: seeded Poisson arrivals
+//! with a deadline mix are driven through the
+//! [`Scheduler`](crate::infer::sched::Scheduler) on a
+//! [`Clock::manual`](crate::util::clock::Clock) virtual clock, so the
+//! whole run - arrival times, admission order, deadline expiries,
+//! backpressure rejects, and (optionally) injected faults - is a pure
+//! function of the config. Unlike the closed-loop `serve-sim` default
+//! (submit everything up front, drain), the open loop keeps offering
+//! work at a fixed rate whether or not the scheduler keeps up, which is
+//! what exercises shedding, queue-full backpressure, and timeout paths.
+//!
+//! The same seed always produces the same [`OpenLoopReport`], including
+//! its FNV-1a [`digest`](OpenLoopReport::digest) over every completion's
+//! `(id, finish, tokens)` - the `serve_robust` bench section and the
+//! tier-1 smoke both pin run-to-run digest equality.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::infer::core::ModelCore;
+use crate::infer::generate::Sampler;
+use crate::infer::sched::{Reject, SchedConfig, Scheduler};
+use crate::infer::session::{Completion, FinishReason, Request};
+use crate::util::clock::Clock;
+use crate::util::failpoint;
+use crate::util::rng::Rng;
+
+/// Everything an open-loop run depends on. Same config = same report,
+/// bit for bit.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopCfg {
+    /// total arrivals to offer
+    pub requests: usize,
+    /// mean arrival rate, requests per virtual second (Poisson)
+    pub rate: f64,
+    /// virtual seconds advanced per scheduler tick
+    pub tick_secs: f64,
+    /// prompt lengths are drawn uniformly from `1..=prompt_len`
+    pub prompt_len: usize,
+    /// token budgets are drawn uniformly from `1..=max_new`
+    pub max_new: usize,
+    /// base deadline; the mix assigns 0.5x (tight), 1x, 4x (relaxed),
+    /// or none per request. <= 0 disables deadlines entirely.
+    pub deadline_secs: f64,
+    /// seeds the arrival process and the per-request sampler seeds
+    pub seed: u64,
+    /// KV slots (full-sequence equivalents) in the scheduler pool
+    pub slots: usize,
+    pub max_batch: usize,
+    pub prefill_chunk: usize,
+    /// submission-queue bound; overload beyond it rejects (backpressure)
+    pub max_queue: usize,
+    /// per-site failpoint probability; 0 runs with faults disarmed
+    pub fault_rate: f64,
+}
+
+impl Default for OpenLoopCfg {
+    fn default() -> OpenLoopCfg {
+        OpenLoopCfg {
+            requests: 32,
+            rate: 50.0,
+            tick_secs: 0.01,
+            prompt_len: 8,
+            max_new: 8,
+            deadline_secs: 0.5,
+            seed: 0,
+            slots: 4,
+            max_batch: 4,
+            prefill_chunk: 8,
+            max_queue: 16,
+            fault_rate: 0.0,
+        }
+    }
+}
+
+/// One pre-drawn arrival (the whole schedule is materialized before the
+/// drive loop, so submission order can't depend on scheduler state).
+struct Arrival {
+    at: f64,
+    req: Request,
+}
+
+/// Outcome counters and determinism digest for one open-loop run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpenLoopReport {
+    /// arrivals offered (== cfg.requests)
+    pub arrivals: usize,
+    /// completions observed (arrivals minus backpressure rejects)
+    pub completions: usize,
+    /// submissions refused at the full queue (open-loop clients drop,
+    /// they don't retry)
+    pub rejected: usize,
+    /// requests that ran to a natural end (Done or ContextFull)
+    pub goodput: usize,
+    pub done: usize,
+    pub context_full: usize,
+    /// deadline expiries that never left the queue (no tokens)
+    pub shed_queued: usize,
+    /// deadline expiries mid-flight (partial tokens kept)
+    pub timed_out_live: usize,
+    /// per-request isolated failures (only nonzero with faults armed)
+    pub failed: usize,
+    /// total tokens emitted across all completions
+    pub total_tokens: usize,
+    /// scheduler ticks driven
+    pub ticks: u64,
+    /// mean submission-queue depth sampled once per tick
+    pub queue_depth_mean: f64,
+    pub queue_depth_max: usize,
+    /// max concurrently-live sessions observed
+    pub peak_live: usize,
+    /// KV pages still held after the drain - always 0 (asserted)
+    pub leaked_pages: usize,
+    /// virtual seconds elapsed over the whole run
+    pub virtual_secs: f64,
+    /// FNV-1a over every completion's (id, finish tag, tokens) plus the
+    /// reject count: two runs agree on this iff they agreed on every
+    /// request's full lifecycle
+    pub digest: u64,
+}
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+fn finish_tag(f: &FinishReason) -> u8 {
+    match f {
+        FinishReason::Done => 0,
+        FinishReason::ContextFull => 1,
+        FinishReason::TimedOut => 2,
+        FinishReason::Cancelled => 3,
+        FinishReason::Failed(_) => 4,
+    }
+}
+
+/// Pre-draw the full arrival schedule from the config seed: Poisson
+/// inter-arrival gaps at `cfg.rate`, uniform prompt lengths and token
+/// budgets, and the deadline mix (1 tight : 3 standard : 1 relaxed : 1
+/// none). Exposed crate-wide so the `serve_robust` bench can re-derive
+/// the exact requests a run offered (when nothing was rejected,
+/// completion id == arrival index) and cross-check survivors against
+/// solo `generate` runs.
+pub(crate) fn planned_requests(cfg: &OpenLoopCfg, max_ctx: usize)
+                               -> Vec<Request> {
+    draw_arrivals(cfg, max_ctx).into_iter().map(|a| a.req).collect()
+}
+
+fn draw_arrivals(cfg: &OpenLoopCfg, max_ctx: usize) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed).fork("open-loop");
+    let rate = cfg.rate.max(1e-9);
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        at += -(1.0 - rng.f64()).ln() / rate;
+        let plen = 1 + rng.below(cfg.prompt_len.max(1));
+        let budget = 1 + rng.below(cfg.max_new.max(1));
+        let prompt: Vec<i32> = (0..plen)
+            .map(|k| ((k * 7 + i * 13 + 3) % 89) as i32)
+            .collect();
+        // cap the worst case at the context so nothing is NeverFits
+        let budget = budget.min(max_ctx.saturating_sub(plen) + 1).max(1);
+        let mut req = Request::new(
+            prompt, budget, Sampler::Greedy,
+            cfg.seed.wrapping_add(1000 + i as u64));
+        if cfg.deadline_secs > 0.0 {
+            req = match rng.below(6) {
+                0 => req.with_deadline(cfg.deadline_secs * 0.5),
+                1..=3 => req.with_deadline(cfg.deadline_secs),
+                4 => req.with_deadline(cfg.deadline_secs * 4.0),
+                _ => req, // no deadline
+            };
+        }
+        out.push(Arrival { at, req });
+    }
+    out
+}
+
+fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
+         -> Result<(OpenLoopReport, Vec<Completion>)> {
+    let arrivals = draw_arrivals(cfg, core.max_ctx);
+    let pool = crate::infer::kv::KvPool::for_core(&core,
+                                                  cfg.slots.max(1));
+    let mut sched = Scheduler::with_clock(
+        core, pool,
+        SchedConfig {
+            max_batch: cfg.max_batch,
+            prefill_chunk: cfg.prefill_chunk,
+            max_queue: cfg.max_queue,
+            ..SchedConfig::default()
+        },
+        Clock::manual());
+
+    let mut rejected = 0usize;
+    let mut next = 0usize;
+    let mut ticks = 0u64;
+    let mut depth_sum = 0u64;
+    let mut depth_max = 0usize;
+    let mut peak_live = 0usize;
+    while next < arrivals.len() || !sched.is_idle() {
+        let now = sched.clock().now();
+        while next < arrivals.len() && arrivals[next].at <= now {
+            match sched.submit(arrivals[next].req.clone()) {
+                Ok(_) => {}
+                Err(Reject::QueueFull { .. }) => rejected += 1,
+                Err(e) => anyhow::bail!(
+                    "open-loop arrival {next} rejected unexpectedly: {e}"),
+            }
+            next += 1;
+        }
+        depth_sum += sched.n_queued() as u64;
+        depth_max = depth_max.max(sched.n_queued());
+        sched.tick()?;
+        peak_live = peak_live.max(sched.n_live());
+        sched.clock().advance(cfg.tick_secs.max(1e-9));
+        ticks += 1;
+        ensure!(ticks < 1_000_000,
+                "open-loop run failed to drain in 1M ticks");
+    }
+    let virtual_secs = sched.clock().now();
+    let leaked_pages = sched.pool().pages_in_use();
+    ensure!(leaked_pages == 0,
+            "open-loop run leaked {leaked_pages} KV pages");
+
+    let comps = sched.take_completed();
+    ensure!(comps.len() + rejected == arrivals.len(),
+            "lost requests: {} completions + {} rejects != {} arrivals",
+            comps.len(), rejected, arrivals.len());
+
+    let mut rep = OpenLoopReport {
+        arrivals: arrivals.len(),
+        completions: comps.len(),
+        rejected,
+        goodput: 0,
+        done: 0,
+        context_full: 0,
+        shed_queued: 0,
+        timed_out_live: 0,
+        failed: 0,
+        total_tokens: 0,
+        ticks,
+        queue_depth_mean: depth_sum as f64 / ticks.max(1) as f64,
+        queue_depth_max: depth_max,
+        peak_live,
+        leaked_pages,
+        virtual_secs,
+        digest: 0xcbf29ce484222325,
+    };
+    for c in &comps {
+        rep.total_tokens += c.tokens.len();
+        if c.finish.is_ok() {
+            rep.goodput += 1;
+        }
+        match &c.finish {
+            FinishReason::Done => rep.done += 1,
+            FinishReason::ContextFull => rep.context_full += 1,
+            FinishReason::TimedOut if c.tokens.is_empty() => {
+                rep.shed_queued += 1
+            }
+            FinishReason::TimedOut => rep.timed_out_live += 1,
+            FinishReason::Cancelled => {}
+            FinishReason::Failed(_) => rep.failed += 1,
+        }
+        fnv1a(&mut rep.digest, &c.id.to_le_bytes());
+        fnv1a(&mut rep.digest, &[finish_tag(&c.finish)]);
+        for t in &c.tokens {
+            fnv1a(&mut rep.digest, &t.to_le_bytes());
+        }
+    }
+    fnv1a(&mut rep.digest, &(rejected as u64).to_le_bytes());
+    Ok((rep, comps))
+}
+
+/// Run one open-loop simulation to completion. With
+/// `cfg.fault_rate > 0` the four forward/KV failpoint sites are armed
+/// for the whole drive (seeded from `cfg.seed`), so fault schedules are
+/// as reproducible as the arrivals.
+pub fn run_open_loop(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
+                     -> Result<OpenLoopReport> {
+    run_open_loop_with_completions(core, cfg).map(|(rep, _)| rep)
+}
+
+/// [`run_open_loop`], also handing back the per-request
+/// [`Completion`]s (id order). The `serve_robust` bench uses these to
+/// assert survivors are bit-identical to solo `generate` runs.
+pub fn run_open_loop_with_completions(core: Arc<ModelCore>,
+                                      cfg: &OpenLoopCfg)
+    -> Result<(OpenLoopReport, Vec<Completion>)> {
+    if cfg.fault_rate > 0.0 {
+        let p = cfg.fault_rate;
+        let sites = [
+            ("kv.draw", p * 0.5),
+            ("fwd.prefill", p),
+            ("fwd.decode", p * 0.5),
+            ("fwd.step", p * 0.5),
+        ];
+        failpoint::with(cfg.seed ^ 0xFA17, &sites, || drive(core, cfg))
+    } else {
+        drive(core, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QuantScheme;
+
+    fn core(seed: u64) -> Arc<ModelCore> {
+        Arc::new(ModelCore::synthetic(32, 4, 8, 64, 96, 2,
+                                      QuantScheme::new(2, 32), 48, seed)
+            .unwrap())
+    }
+
+    fn cfg() -> OpenLoopCfg {
+        OpenLoopCfg {
+            requests: 24,
+            rate: 60.0,
+            seed: 7,
+            ..OpenLoopCfg::default()
+        }
+    }
+
+    /// Same config -> bit-identical report (digest included), and the
+    /// lifecycle counters reconcile with the arrival count.
+    #[test]
+    fn open_loop_is_deterministic_and_accounts_for_every_arrival() {
+        let c = core(50);
+        let a = run_open_loop(c.clone(), &cfg()).unwrap();
+        let b = run_open_loop(c, &cfg()).unwrap();
+        assert_eq!(a, b, "same config must reproduce bit-identically");
+        assert_eq!(a.arrivals, 24);
+        assert!(a.goodput > 0, "no request ran to completion");
+        assert_eq!(a.leaked_pages, 0);
+        assert_eq!(
+            a.done + a.context_full + a.shed_queued + a.timed_out_live
+                + a.failed,
+            a.completions,
+            "finish-reason counts must partition the completions");
+        assert_eq!(a.completions + a.rejected, a.arrivals);
+        assert_eq!(a.failed, 0, "faults disarmed but requests failed");
+    }
+
+    /// Different seeds produce different schedules (sanity that the
+    /// digest actually discriminates).
+    #[test]
+    fn open_loop_digest_depends_on_seed() {
+        let c = core(50);
+        let a = run_open_loop(c.clone(), &cfg()).unwrap();
+        let b = run_open_loop(
+            c, &OpenLoopCfg { seed: 8, ..cfg() }).unwrap();
+        assert_ne!(a.digest, b.digest);
+    }
+
+    /// Overload: offered rate far above capacity with a bounded queue
+    /// must shed and/or reject, never lose accounting or leak pages.
+    #[test]
+    fn open_loop_overload_sheds_and_rejects_without_leaks() {
+        let c = core(51);
+        let hot = OpenLoopCfg {
+            requests: 48,
+            rate: 2000.0,
+            max_queue: 4,
+            deadline_secs: 0.2,
+            seed: 9,
+            ..OpenLoopCfg::default()
+        };
+        let r = run_open_loop(c, &hot).unwrap();
+        assert!(r.rejected + r.shed_queued > 0,
+                "overload produced no backpressure or shedding: {r:?}");
+        assert!(r.goodput > 0);
+        assert_eq!(r.completions + r.rejected, r.arrivals);
+        assert_eq!(r.leaked_pages, 0);
+    }
+
+    /// Faulted runs are exactly as deterministic as clean ones, and the
+    /// accounting still closes.
+    #[test]
+    fn open_loop_fault_runs_are_deterministic_and_leak_free() {
+        let c = core(52);
+        let f = OpenLoopCfg { fault_rate: 0.05, ..cfg() };
+        let a = run_open_loop(c.clone(), &f).unwrap();
+        let b = run_open_loop(c, &f).unwrap();
+        assert_eq!(a, b, "faulted run must reproduce bit-identically");
+        assert_eq!(a.leaked_pages, 0);
+        assert_eq!(a.completions + a.rejected, a.arrivals);
+    }
+}

@@ -1,42 +1,67 @@
 //! Continuous-batching scheduler over the shared
 //! [`ModelCore`](crate::infer::core::ModelCore) + pooled-KV
-//! [`Session`](crate::infer::session::Session)s.
+//! [`Session`](crate::infer::session::Session)s, with the serving
+//! lifecycle and failure model on top: bounded-queue backpressure,
+//! per-request deadlines, cancellation, and per-request fault isolation.
 //!
 //! Each [`Scheduler::tick`]:
 //!
-//! 1. **admits** queued requests while the batch has room *and* the
+//! 1. **reaps** any KV leases dropped on an early-exit path
+//!    ([`KvPool::reap`] - the drop-safe lease contract means no path can
+//!    leak pages), then **sheds** queued requests and **retires** live
+//!    sessions whose deadline has expired
+//!    ([`FinishReason::TimedOut`], partial output kept for live ones);
+//! 2. **admits** queued requests while the batch has room *and* the
 //!    paged [`KvPool`] can reserve the request's KV rows
 //!    ([`KvPool::lease_rows`] with the prompt + token-budget row count,
-//!    so short requests hold only the pages they touch and page
-//!    exhaustion queues - it never panics, and an admitted request can
-//!    never fail a KV allocation mid-flight);
-//! 2. **prefills** admitted prompts in bounded chunks
-//!    ([`SchedConfig::prefill_chunk`]) between decode steps, so a long
-//!    prompt cannot stall the live batch for more than one chunk;
-//! 3. **decodes** all prompt-complete sessions in one
-//!    [`decode_batch`](crate::infer::core::ModelCore::decode_batch) step
-//!    - one rows-parallel matmul per linear across the whole batch -
-//!    then samples each session's next token;
-//! 4. **retires** finished sequences immediately (lease back to the
-//!    pool, a [`Completion`] with latency accounting out), so a short
-//!    request never waits for a long co-batched one.
+//!    so an admitted request can never fail a KV allocation mid-flight).
+//!    Admission is FIFO with a bounded lookahead
+//!    ([`SchedConfig::admit_lookahead`]): a front request whose pages
+//!    don't fit yet doesn't block smaller later requests, and the
+//!    starvation guard ([`SchedConfig::starve_patience`]) suspends the
+//!    lookahead once the front has been passed over too many ticks;
+//! 3. **prefills** admitted prompts in bounded chunks
+//!    ([`SchedConfig::prefill_chunk`]); a prefill error fails *only* the
+//!    offending session (lease released, [`FinishReason::Failed`]
+//!    completion) while the rest of the batch is untouched;
+//! 4. **decodes** all prompt-complete sessions in one
+//!    [`decode_batch`](crate::infer::core::ModelCore::decode_batch)
+//!    step. On a batch error the scheduler falls back to per-session
+//!    solo [`step`](crate::infer::core::ModelCore::step)s - bit-identical
+//!    to the batched step by the determinism contract - so only sessions
+//!    that individually fail are retired `Failed`;
+//! 5. **retires** finished sequences immediately (lease back to the
+//!    pool, a [`Completion`] with its [`FinishReason`] and latency
+//!    accounting out), so a short request never waits for a long
+//!    co-batched one.
+//!
+//! [`Scheduler::submit`] applies backpressure: beyond
+//! [`SchedConfig::max_queue`] it returns the typed
+//! [`Reject::QueueFull`] instead of growing without bound, and requests
+//! that could never be admitted are refused up front
+//! ([`Reject::NeverFits`]). [`Scheduler::cancel`] removes a request at
+//! any lifecycle stage. All latency/deadline bookkeeping runs on the
+//! scheduler's [`Clock`] - wall time in production,
+//! [`Clock::manual`] in deadline tests and the open-loop simulator.
 //!
 //! Determinism: a session's logits (and therefore its sampled tokens)
 //! are bit-identical to a solo `Engine`/`generate` run of the same
 //! `(prompt, seed, sampler)` at any batch size, admission order, and
-//! thread count - co-batched requests cannot perturb each other. Pinned
-//! here, in `infer::core`, in the serve bench, and in the integration
-//! suite.
+//! thread count - co-batched requests cannot perturb each other, and a
+//! request that fails or is cancelled mid-flight leaves with a bit-exact
+//! *prefix* of its solo token stream. Pinned here, in `infer::core`, in
+//! the serve benches, and in the integration suite.
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::Arc;
-use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::infer::core::{ModelCore, Scratch};
 use crate::infer::kv::{KvLease, KvPool};
-use crate::infer::session::{Completion, Request, Session};
+use crate::infer::session::{Completion, FinishReason, Request, Session};
+use crate::util::clock::Clock;
 
 #[derive(Clone, Copy, Debug)]
 pub struct SchedConfig {
@@ -44,22 +69,111 @@ pub struct SchedConfig {
     pub max_batch: usize,
     /// Max prompt tokens fed per session per tick during admission.
     pub prefill_chunk: usize,
+    /// Max queued (not-yet-admitted) requests; [`Scheduler::submit`]
+    /// beyond this returns [`Reject::QueueFull`] (backpressure) instead
+    /// of queueing unboundedly.
+    pub max_queue: usize,
+    /// How many queued requests may be inspected past a front request
+    /// whose pages don't fit (head-of-line fix). 0 = strict FIFO.
+    pub admit_lookahead: usize,
+    /// Ticks the front request may be passed over before lookahead is
+    /// suspended until it admits (starvation guard). 0 = the front can
+    /// never be skipped.
+    pub starve_patience: u32,
 }
 
 impl Default for SchedConfig {
     fn default() -> SchedConfig {
-        SchedConfig { max_batch: 8, prefill_chunk: 16 }
+        SchedConfig {
+            max_batch: 8,
+            prefill_chunk: 16,
+            max_queue: 1024,
+            admit_lookahead: 4,
+            starve_patience: 64,
+        }
     }
+}
+
+/// Typed [`Scheduler::submit`] refusal. Implements `std::error::Error`,
+/// so `submit(...)?` still works in `anyhow` contexts while callers that
+/// care (the open-loop driver) can match on the variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// Empty prompts have nothing to prefill.
+    EmptyPrompt,
+    /// The prompt alone exceeds the model's context.
+    PromptTooLong { len: usize, max_ctx: usize },
+    /// The worst-case KV footprint exceeds the whole pool - the request
+    /// could never be admitted, even by an idle scheduler.
+    NeverFits { pages_needed: usize, pool_pages: usize },
+    /// Backpressure: the submission queue is at
+    /// [`SchedConfig::max_queue`]. Retry after completions drain.
+    QueueFull { limit: usize },
+}
+
+impl fmt::Display for Reject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reject::EmptyPrompt => write!(f, "empty prompt"),
+            Reject::PromptTooLong { len, max_ctx } => {
+                write!(f, "prompt of {len} tokens exceeds max_ctx \
+                           {max_ctx}")
+            }
+            Reject::NeverFits { pages_needed, pool_pages } => {
+                write!(f, "request needs {pages_needed} KV pages but the \
+                           pool only has {pool_pages}")
+            }
+            Reject::QueueFull { limit } => {
+                write!(f, "submission queue full ({limit} requests)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
+
+/// Lifecycle counters, updated at every request state transition.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// requests accepted into the queue
+    pub submitted: u64,
+    /// submissions refused (any [`Reject`] variant)
+    pub rejected: u64,
+    /// completions that emitted their full budget
+    pub done: u64,
+    /// completions truncated by the context limit
+    pub context_full: u64,
+    /// deadline expiries (shed from the queue or retired live)
+    pub timed_out: u64,
+    /// [`Scheduler::cancel`] hits (queued or live)
+    pub cancelled: u64,
+    /// per-request fault isolations ([`FinishReason::Failed`])
+    pub failed: u64,
+    /// [`Scheduler::tick`] calls
+    pub ticks: u64,
+}
+
+/// A queued (not yet admitted) request.
+struct Queued {
+    id: u64,
+    req: Request,
+    submitted: f64,
+    /// absolute deadline on the scheduler clock
+    deadline: Option<f64>,
+    /// ticks this entry has been passed over while at the front
+    skipped: u32,
 }
 
 pub struct Scheduler {
     core: Arc<ModelCore>,
     pool: KvPool,
     cfg: SchedConfig,
-    queue: VecDeque<(u64, Request, Instant)>,
+    clock: Clock,
+    queue: VecDeque<Queued>,
     live: Vec<Session>,
     scratch: Scratch,
     done: Vec<Completion>,
+    stats: SchedStats,
     next_id: u64,
 }
 
@@ -80,15 +194,32 @@ impl Scheduler {
     /// directly to exercise multi-page prefixes and page exhaustion.
     pub fn with_pool(core: Arc<ModelCore>, pool: KvPool,
                      cfg: SchedConfig) -> Scheduler {
+        Scheduler::with_clock(core, pool, cfg, Clock::wall())
+    }
+
+    /// [`Scheduler::with_pool`] on an explicit clock - a
+    /// [`Clock::manual`] makes deadlines, latency accounting, and the
+    /// open-loop simulator bit-reproducible.
+    pub fn with_clock(core: Arc<ModelCore>, pool: KvPool,
+                      cfg: SchedConfig, clock: Clock) -> Scheduler {
         let scratch = core.scratch();
         Scheduler {
             core,
             pool,
-            cfg: SchedConfig { max_batch: cfg.max_batch.max(1), ..cfg },
+            // config normalization happens once, here: every knob that
+            // would divide-by-zero or livelock at 0 is clamped to 1
+            cfg: SchedConfig {
+                max_batch: cfg.max_batch.max(1),
+                prefill_chunk: cfg.prefill_chunk.max(1),
+                max_queue: cfg.max_queue.max(1),
+                ..cfg
+            },
+            clock,
             queue: VecDeque::new(),
             live: Vec::new(),
             scratch,
             done: Vec::new(),
+            stats: SchedStats::default(),
             next_id: 0,
         }
     }
@@ -99,21 +230,109 @@ impl Scheduler {
         &self.pool
     }
 
-    /// Enqueue a request; returns its id. The request is admitted (KV
-    /// slot leased, prefill started) on a later [`Scheduler::tick`] when
-    /// capacity allows.
-    pub fn submit(&mut self, req: Request) -> Result<u64> {
+    /// The clock all latency/deadline bookkeeping runs on.
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Lifecycle counters so far.
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// Worst-case KV rows a request may write: prompt plus decode feeds
+    /// (the final sampled token is emitted without being fed, hence
+    /// `max_new - 1`), capped at the model context.
+    fn rows_for(req: &Request, max_ctx: usize) -> usize {
+        (req.prompt.len() + req.max_new.saturating_sub(1)).min(max_ctx)
+    }
+
+    fn validate(&self, req: &Request) -> Result<(), Reject> {
         if req.prompt.is_empty() {
-            bail!("empty prompt");
+            return Err(Reject::EmptyPrompt);
         }
         if req.prompt.len() > self.core.max_ctx {
-            bail!("prompt of {} tokens exceeds max_ctx {}",
-                  req.prompt.len(), self.core.max_ctx);
+            return Err(Reject::PromptTooLong {
+                len: req.prompt.len(),
+                max_ctx: self.core.max_ctx,
+            });
         }
+        let rows = Self::rows_for(req, self.core.max_ctx).max(1);
+        let pr = self.pool.page_rows();
+        let need = (rows + pr - 1) / pr;
+        if need > self.pool.n_pages() {
+            return Err(Reject::NeverFits {
+                pages_needed: need,
+                pool_pages: self.pool.n_pages(),
+            });
+        }
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(Reject::QueueFull { limit: self.cfg.max_queue });
+        }
+        Ok(())
+    }
+
+    /// Enqueue a request; returns its id, or a typed [`Reject`] (bad
+    /// request, impossible KV footprint, or queue-full backpressure).
+    /// An accepted request is admitted (KV rows leased, prefill started)
+    /// on a later [`Scheduler::tick`] when capacity allows.
+    pub fn submit(&mut self, req: Request) -> Result<u64, Reject> {
+        if let Err(r) = self.validate(&req) {
+            self.stats.rejected += 1;
+            return Err(r);
+        }
+        let now = self.clock.now();
+        let deadline = req.deadline.map(|d| now + d);
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, req, Instant::now()));
+        self.stats.submitted += 1;
+        self.queue.push_back(Queued {
+            id,
+            req,
+            submitted: now,
+            deadline,
+            skipped: 0,
+        });
         Ok(id)
+    }
+
+    /// Cancel a request at any lifecycle stage. Queued: it leaves the
+    /// queue with an empty [`FinishReason::Cancelled`] completion.
+    /// Live (prefilling or decoding): it retires now, keeping whatever
+    /// tokens it already emitted, and its KV lease frees immediately.
+    /// Returns `false` for ids that are unknown or already completed.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        let now = self.clock.now();
+        if let Some(qi) = self.queue.iter().position(|q| q.id == id) {
+            let q = self.queue.remove(qi).expect("indexed entry");
+            self.done.push(Self::unstarted_completion(
+                &q, now, FinishReason::Cancelled));
+            self.stats.cancelled += 1;
+            return true;
+        }
+        if let Some(li) = self.live.iter().position(|s| s.id == id) {
+            let (lease, comp) =
+                self.live.remove(li).finish(now, FinishReason::Cancelled);
+            self.pool.release(lease);
+            self.done.push(comp);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        false
+    }
+
+    /// A completion for a request that never left the queue.
+    fn unstarted_completion(q: &Queued, now: f64, finish: FinishReason)
+                            -> Completion {
+        Completion {
+            id: q.id,
+            prompt_len: q.req.prompt.len(),
+            tokens: Vec::new(),
+            finish,
+            first_token_secs: 0.0,
+            finish_secs: (now - q.submitted).max(0.0),
+            token_gaps: Vec::new(),
+        }
     }
 
     pub fn n_queued(&self) -> usize {
@@ -135,53 +354,128 @@ impl Scheduler {
         done
     }
 
-    /// One scheduling round: admit + chunked prefill + one batched decode
-    /// step + retire. Returns the number of tokens emitted this tick.
+    /// One scheduling round: reap + deadlines + admit + chunked prefill
+    /// + one batched decode step + retire (see the module docs for the
+    /// phase-by-phase contract). Returns the number of tokens emitted
+    /// this tick. Per-request failures are isolated into `Failed`
+    /// completions; an `Err` from `tick` itself would mean a scheduler
+    /// invariant broke, not a request fault.
     pub fn tick(&mut self) -> Result<usize> {
-        let Scheduler { core, pool, cfg, queue, live, scratch, done, .. } =
-            self;
+        let Scheduler {
+            core, pool, cfg, clock, queue, live, scratch, done, stats, ..
+        } = self;
+        stats.ticks += 1;
+        let now = clock.now();
 
-        // 1. admission: queue -> live while batch room exists and the
-        //    pool can reserve the request's worst-case KV rows (prompt
-        //    plus decode feeds; the final sampled token is emitted
-        //    without being fed, hence max_new - 1)
-        while live.len() < cfg.max_batch && !queue.is_empty() {
-            let rows = {
-                let (_, req, _) = queue.front().unwrap();
-                (req.prompt.len() + req.max_new.saturating_sub(1))
-                    .min(core.max_ctx)
-            };
+        // 1a. reclaim pages from leases dropped without release
+        pool.reap();
+
+        // 1b. deadline enforcement: shed expired queued requests, retire
+        //     expired live sessions with their partial output
+        let mut qi = 0usize;
+        while qi < queue.len() {
+            if queue[qi].deadline.map_or(false, |d| now >= d) {
+                let q = queue.remove(qi).expect("indexed entry");
+                done.push(Self::unstarted_completion(
+                    &q, now, FinishReason::TimedOut));
+                stats.timed_out += 1;
+            } else {
+                qi += 1;
+            }
+        }
+        let mut li = 0usize;
+        while li < live.len() {
+            if live[li].expired(now) {
+                let (lease, comp) =
+                    live.remove(li).finish(now, FinishReason::TimedOut);
+                pool.release(lease);
+                done.push(comp);
+                stats.timed_out += 1;
+            } else {
+                li += 1;
+            }
+        }
+
+        // 2. admission: queue -> live while batch room exists and the
+        //    pool can reserve the request's worst-case KV rows. FIFO
+        //    with bounded lookahead past a non-fitting front, and a
+        //    starvation guard so the front ages out of being skipped.
+        let mut skipped_front = false;
+        let mut qi = 0usize;
+        while live.len() < cfg.max_batch && qi < queue.len() {
+            let rows = Self::rows_for(&queue[qi].req, core.max_ctx);
             match pool.lease_rows(rows) {
-                None => break, // page-exhausted: requests stay queued
                 Some(lease) => {
-                    let (id, req, submitted) = queue.pop_front().unwrap();
-                    live.push(Session::start(id, req, lease, submitted));
+                    let q = queue.remove(qi).expect("indexed entry");
+                    live.push(Session::start(q.id, q.req, lease,
+                                             q.submitted, q.deadline));
+                    // don't advance qi: the next entry shifted here
+                }
+                None => {
+                    if qi == 0 {
+                        if cfg.admit_lookahead == 0
+                            || queue[0].skipped >= cfg.starve_patience
+                        {
+                            break; // strict FIFO: nothing may pass
+                        }
+                        skipped_front = true;
+                    }
+                    qi += 1;
+                    if qi > cfg.admit_lookahead {
+                        break;
+                    }
+                }
+            }
+        }
+        if skipped_front {
+            if let Some(front) = queue.front_mut() {
+                front.skipped = front.skipped.saturating_add(1);
+            }
+        }
+
+        // 3. chunked prefill: one bounded chunk per admitted session.
+        //    Isolation: a prefill error fails only this session - its
+        //    lease is released (pages and unspent reservation back to
+        //    the pool) and a Failed completion records the error.
+        let mut i = 0usize;
+        while i < live.len() {
+            if live[i].prompt_done() {
+                i += 1;
+                continue;
+            }
+            let s = &mut live[i];
+            let n = cfg.prefill_chunk.min(s.prompt.len() - s.prefilled);
+            let res = {
+                let chunk = &s.prompt[s.prefilled..s.prefilled + n];
+                core.prefill(pool, &s.lease, s.pos, chunk, scratch)
+            };
+            match res {
+                Ok(()) => {
+                    s.pos += n;
+                    s.prefilled += n;
+                    if s.prompt_done() {
+                        // same sampling order as solo generate: the
+                        // first token comes from the prefill logits
+                        s.next = {
+                            let logits = scratch.logits();
+                            s.sample(logits)
+                        };
+                    }
+                    i += 1;
+                }
+                Err(e) => {
+                    let (lease, comp) = live.remove(i).finish(
+                        now, FinishReason::Failed(e.to_string()));
+                    pool.release(lease);
+                    done.push(comp);
+                    stats.failed += 1;
                 }
             }
         }
 
-        // 2. chunked prefill: one bounded chunk per admitted session
-        for s in live.iter_mut().filter(|s| !s.prompt_done()) {
-            let n =
-                cfg.prefill_chunk.max(1).min(s.prompt.len() - s.prefilled);
-            let chunk = &s.prompt[s.prefilled..s.prefilled + n];
-            core.prefill(pool, &s.lease, s.pos, chunk, scratch)?;
-            s.pos += n;
-            s.prefilled += n;
-            if s.prompt_done() {
-                // same sampling order as solo generate: first token comes
-                // from the prefill logits
-                s.next = {
-                    let logits = scratch.logits();
-                    s.sample(logits)
-                };
-            }
-        }
-
-        // 3. emission + retire-before-step: a session whose budget or
+        // 4. emission + retire-before-step: a session whose budget or
         //    context is exhausted leaves the batch *now*, freeing its
-        //    slot for the next admission instead of stalling the batch
-        let now = Instant::now();
+        //    pages for the next admission instead of stalling the batch
         let mut emitted = 0usize;
         let mut stepping: Vec<usize> = Vec::with_capacity(live.len());
         let mut i = 0usize;
@@ -191,26 +485,43 @@ impl Scheduler {
                 i += 1;
                 continue;
             }
-            if s.pos >= core.max_ctx || s.out.len() >= s.max_new {
-                let (lease, comp) = live.remove(i).finish(now);
+            if s.out.len() >= s.max_new {
+                let (lease, comp) =
+                    live.remove(i).finish(now, FinishReason::Done);
                 pool.release(lease);
                 done.push(comp);
+                stats.done += 1;
+                continue;
+            }
+            if s.pos >= core.max_ctx {
+                // same truncation a solo generate performs
+                let (lease, comp) =
+                    live.remove(i).finish(now, FinishReason::ContextFull);
+                pool.release(lease);
+                done.push(comp);
+                stats.context_full += 1;
                 continue;
             }
             let tok = s.next;
             s.emit(tok, now);
             emitted += 1;
             if s.out.len() >= s.max_new {
-                let (lease, comp) = live.remove(i).finish(now);
+                let (lease, comp) =
+                    live.remove(i).finish(now, FinishReason::Done);
                 pool.release(lease);
                 done.push(comp);
+                stats.done += 1;
                 continue;
             }
             stepping.push(i);
             i += 1;
         }
 
-        // 4. one batched decode step across every still-live sequence
+        // 5. one batched decode step across every still-live sequence.
+        //    Isolation: on a batch error, re-run each sequence as a solo
+        //    step - bit-identical to the batched step by the determinism
+        //    contract - so only sessions that individually fail retire
+        //    as Failed while the rest keep their exact token streams.
         if !stepping.is_empty() {
             let batch: Vec<(&KvLease, usize)> = stepping
                 .iter()
@@ -219,15 +530,46 @@ impl Scheduler {
             let toks: Vec<i32> =
                 stepping.iter().map(|&i| *live[i].out.last().unwrap())
                     .collect();
-            core.decode_batch(pool, &batch, &toks, scratch)?;
+            let res = core.decode_batch(pool, &batch, &toks, scratch);
             drop(batch);
-            for (row, &i) in stepping.iter().enumerate() {
-                let s = &mut live[i];
-                s.pos += 1;
-                s.next = {
-                    let logits = scratch.batch_logits(row);
-                    s.sample(logits)
-                };
+            match res {
+                Ok(()) => {
+                    for (row, &i) in stepping.iter().enumerate() {
+                        let s = &mut live[i];
+                        s.pos += 1;
+                        s.next = {
+                            let logits = scratch.batch_logits(row);
+                            s.sample(logits)
+                        };
+                    }
+                }
+                Err(_) => {
+                    // highest index first so removals don't shift the
+                    // entries still pending
+                    for (row, &i) in stepping.iter().enumerate().rev() {
+                        let res = core.step(pool, &live[i].lease,
+                                            live[i].pos, toks[row],
+                                            scratch);
+                        match res {
+                            Ok(()) => {
+                                let s = &mut live[i];
+                                s.pos += 1;
+                                s.next = {
+                                    let logits = scratch.logits();
+                                    s.sample(logits)
+                                };
+                            }
+                            Err(e) => {
+                                let (lease, comp) = live.remove(i).finish(
+                                    now,
+                                    FinishReason::Failed(e.to_string()));
+                                pool.release(lease);
+                                done.push(comp);
+                                stats.failed += 1;
+                            }
+                        }
+                    }
+                }
             }
         }
         Ok(emitted)
@@ -249,6 +591,7 @@ mod tests {
     use crate::config::QuantScheme;
     use crate::infer::engine::Engine;
     use crate::infer::generate::{generate, Sampler};
+    use crate::util::failpoint;
     use crate::util::threads::with_threads;
 
     const VOCAB: usize = 96;
@@ -264,10 +607,22 @@ mod tests {
         (0..len).map(|i| ((i * stride + 3) % VOCAB) as i32).collect()
     }
 
+    fn greedy(p: Vec<i32>, max_new: usize, seed: u64) -> Request {
+        Request::new(p, max_new, Sampler::Greedy, seed)
+    }
+
     fn solo(core: &Arc<ModelCore>, req: &(Vec<i32>, usize, u64))
             -> Vec<i32> {
         let mut e = Engine::from_core(core.clone());
         generate(&mut e, &req.0, req.1, Sampler::Temperature(0.9), req.2)
+            .unwrap()
+            .tokens
+    }
+
+    fn solo_greedy(core: &Arc<ModelCore>, req: &(Vec<i32>, usize, u64))
+                   -> Vec<i32> {
+        let mut e = Engine::from_core(core.clone());
+        generate(&mut e, &req.0, req.1, Sampler::Greedy, req.2)
             .unwrap()
             .tokens
     }
@@ -289,14 +644,15 @@ mod tests {
                 with_threads(nt, || {
                     let mut sched = Scheduler::new(
                         c.clone(), bsz,
-                        SchedConfig { max_batch: bsz, prefill_chunk: 4 });
+                        SchedConfig {
+                            max_batch: bsz,
+                            prefill_chunk: 4,
+                            ..SchedConfig::default()
+                        });
                     for r in &reqs {
-                        sched.submit(Request {
-                            prompt: r.0.clone(),
-                            max_new: r.1,
-                            sampler: Sampler::Temperature(0.9),
-                            seed: r.2,
-                        }).unwrap();
+                        sched.submit(Request::new(
+                            r.0.clone(), r.1,
+                            Sampler::Temperature(0.9), r.2)).unwrap();
                     }
                     let comps = sched.run_all().unwrap();
                     assert_eq!(comps.len(), reqs.len());
@@ -307,6 +663,7 @@ mod tests {
                              output diverged from solo generate",
                             comp.id
                         );
+                        assert_eq!(comp.finish, FinishReason::Done);
                     }
                 });
             }
@@ -322,16 +679,12 @@ mod tests {
             .map(|i| (prompt(2 + 3 * i, 7 + i), 3 + i, 900 + i as u64))
             .collect();
         let mut sched = Scheduler::new(c.clone(), 2, SchedConfig {
-            max_batch: 8, // clamped to the 2 slots
+            max_batch: 8, // more than the pool's 2 slots can carry
             prefill_chunk: 8,
+            ..SchedConfig::default()
         });
         for r in &reqs {
-            sched.submit(Request {
-                prompt: r.0.clone(),
-                max_new: r.1,
-                sampler: Sampler::Greedy,
-                seed: r.2,
-            }).unwrap();
+            sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
         }
         assert_eq!(sched.n_queued(), 5);
         let mut max_live = 0usize;
@@ -343,17 +696,18 @@ mod tests {
         let comps = sched.take_completed();
         assert_eq!(comps.len(), 5);
         for (comp, r) in comps.iter().zip(&reqs) {
-            let mut e = Engine::from_core(c.clone());
-            let want =
-                generate(&mut e, &r.0, r.1, Sampler::Greedy, r.2)
-                    .unwrap()
-                    .tokens;
+            let want = solo_greedy(&c, r);
             assert_eq!(comp.tokens, want, "req {}", comp.id);
             assert_eq!(comp.prompt_len, r.0.len());
             assert_eq!(comp.token_gaps.len(), comp.tokens.len());
             assert!(comp.first_token_secs >= 0.0);
             assert!(comp.finish_secs >= comp.first_token_secs);
         }
+        let st = sched.stats();
+        assert_eq!(st.submitted, 5);
+        assert_eq!(st.done, 5);
+        assert_eq!(st.rejected + st.failed + st.timed_out + st.cancelled,
+                   0);
     }
 
     /// Page-granular exhaustion: with 6-row pages and only 4 pages, the
@@ -371,14 +725,13 @@ mod tests {
         let mut sched = Scheduler::with_pool(
             c.clone(),
             KvPool::for_core_paged(&c, 4, 6),
-            SchedConfig { max_batch: 8, prefill_chunk: 4 });
+            SchedConfig {
+                max_batch: 8,
+                prefill_chunk: 4,
+                ..SchedConfig::default()
+            });
         for r in &reqs {
-            sched.submit(Request {
-                prompt: r.0.clone(),
-                max_new: r.1,
-                sampler: Sampler::Greedy,
-                seed: r.2,
-            }).unwrap();
+            sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
         }
         let mut max_live = 0usize;
         while !sched.is_idle() {
@@ -395,14 +748,6 @@ mod tests {
         }
     }
 
-    fn solo_greedy(core: &Arc<ModelCore>, req: &(Vec<i32>, usize, u64))
-                   -> Vec<i32> {
-        let mut e = Engine::from_core(core.clone());
-        generate(&mut e, &req.0, req.1, Sampler::Greedy, req.2)
-            .unwrap()
-            .tokens
-    }
-
     /// A sequence that fills its context retires instead of erroring, and
     /// matches generate()'s truncation behavior.
     #[test]
@@ -416,45 +761,503 @@ mod tests {
         assert!(want.len() < 10, "prompt too short to hit the ctx cap");
         let mut sched =
             Scheduler::new(c, 1, SchedConfig::default());
-        sched.submit(Request {
-            prompt: p,
-            max_new: 10,
-            sampler: Sampler::Greedy,
-            seed: 7,
-        }).unwrap();
+        sched.submit(greedy(p, 10, 7)).unwrap();
         let comps = sched.run_all().unwrap();
         assert_eq!(comps[0].tokens, want);
+        assert_eq!(comps[0].finish, FinishReason::ContextFull);
+        assert_eq!(sched.stats().context_full, 1);
     }
 
     #[test]
-    fn submit_rejects_bad_requests() {
+    fn submit_rejects_bad_requests_with_typed_errors() {
         let c = core(34);
         let mut sched = Scheduler::new(c, 1, SchedConfig::default());
-        assert!(sched.submit(Request {
-            prompt: vec![],
-            max_new: 1,
-            sampler: Sampler::Greedy,
-            seed: 1,
-        }).is_err());
-        assert!(sched.submit(Request {
-            prompt: vec![0; CTX + 1],
-            max_new: 1,
-            sampler: Sampler::Greedy,
-            seed: 1,
-        }).is_err());
+        assert_eq!(sched.submit(greedy(vec![], 1, 1)),
+                   Err(Reject::EmptyPrompt));
+        assert_eq!(sched.submit(greedy(vec![0; CTX + 1], 1, 1)),
+                   Err(Reject::PromptTooLong { len: CTX + 1,
+                                               max_ctx: CTX }));
+        assert_eq!(sched.stats().rejected, 2);
+        assert_eq!(sched.stats().submitted, 0);
+    }
+
+    /// A request whose worst-case KV footprint exceeds the entire pool
+    /// is refused up front instead of queueing forever.
+    #[test]
+    fn impossible_footprint_is_rejected_not_queued_forever() {
+        let c = core(37);
+        // 2 pages x 4 rows = 8 rows total
+        let mut sched = Scheduler::with_pool(
+            c.clone(), KvPool::for_core_paged(&c, 2, 4),
+            SchedConfig::default());
+        let r = sched.submit(greedy(prompt(10, 3), 8, 1));
+        assert!(matches!(r, Err(Reject::NeverFits { .. })), "{r:?}");
+        // a fitting request on the same scheduler works
+        sched.submit(greedy(prompt(3, 3), 4, 2)).unwrap();
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].finish, FinishReason::Done);
+    }
+
+    /// Backpressure: the queue is bounded and submit returns QueueFull
+    /// instead of growing without limit; draining reopens it.
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let c = core(38);
+        let mut sched = Scheduler::new(c, 1, SchedConfig {
+            max_batch: 1,
+            max_queue: 2,
+            ..SchedConfig::default()
+        });
+        sched.submit(greedy(prompt(3, 3), 2, 1)).unwrap();
+        sched.submit(greedy(prompt(3, 4), 2, 2)).unwrap();
+        assert_eq!(sched.submit(greedy(prompt(3, 5), 2, 3)),
+                   Err(Reject::QueueFull { limit: 2 }));
+        sched.tick().unwrap(); // admits one, queue has room again
+        sched.submit(greedy(prompt(3, 5), 2, 3)).unwrap();
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), 3);
+        let st = sched.stats();
+        assert_eq!((st.submitted, st.rejected, st.done), (3, 1, 3));
     }
 
     #[test]
     fn zero_budget_request_completes_empty() {
         let c = core(35);
         let mut sched = Scheduler::new(c, 1, SchedConfig::default());
-        sched.submit(Request {
-            prompt: prompt(4, 3),
-            max_new: 0,
-            sampler: Sampler::Greedy,
-            seed: 1,
-        }).unwrap();
+        sched.submit(greedy(prompt(4, 3), 0, 1)).unwrap();
         let comps = sched.run_all().unwrap();
         assert!(comps[0].tokens.is_empty());
+        assert_eq!(comps[0].finish, FinishReason::Done);
+    }
+
+    /// Cancel at every lifecycle stage: queued (empty completion),
+    /// mid-prefill (empty completion, pages freed), mid-decode (partial
+    /// tokens that are a bit-exact prefix of the solo run).
+    #[test]
+    fn cancel_covers_queued_prefilling_and_decoding() {
+        let c = core(39);
+        let solo_ref =
+            solo_greedy(&c, &(prompt(4, 3), 8, 21));
+
+        // queued: one slot, second request waits
+        let mut sched = Scheduler::new(c.clone(), 1, SchedConfig {
+            max_batch: 1,
+            ..SchedConfig::default()
+        });
+        let a = sched.submit(greedy(prompt(4, 3), 6, 11)).unwrap();
+        let b = sched.submit(greedy(prompt(4, 5), 6, 12)).unwrap();
+        sched.tick().unwrap();
+        assert_eq!(sched.n_queued(), 1);
+        assert!(sched.cancel(b), "queued cancel must hit");
+        assert!(!sched.cancel(b), "double cancel must miss");
+        assert!(!sched.cancel(999), "unknown id must miss");
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), 2);
+        let cb = comps.iter().find(|x| x.id == b).unwrap();
+        assert_eq!(cb.finish, FinishReason::Cancelled);
+        assert!(cb.tokens.is_empty());
+        let ca = comps.iter().find(|x| x.id == a).unwrap();
+        assert_eq!(ca.finish, FinishReason::Done);
+
+        // mid-prefill: long prompt, tiny chunks
+        let mut sched = Scheduler::new(c.clone(), 1, SchedConfig {
+            prefill_chunk: 2,
+            ..SchedConfig::default()
+        });
+        let a = sched.submit(greedy(prompt(12, 3), 6, 13)).unwrap();
+        sched.tick().unwrap();
+        assert_eq!(sched.n_live(), 1, "should be mid-prefill");
+        assert!(sched.cancel(a));
+        assert!(sched.is_idle());
+        assert_eq!(sched.pool().pages_in_use(), 0, "cancel leaked pages");
+        let comps = sched.take_completed();
+        assert_eq!(comps[0].finish, FinishReason::Cancelled);
+        assert!(comps[0].tokens.is_empty());
+
+        // mid-decode: cancel after a few emitted tokens
+        let mut sched = Scheduler::new(c.clone(), 1, SchedConfig::default());
+        let a = sched.submit(greedy(prompt(4, 3), 8, 21)).unwrap();
+        for _ in 0..3 {
+            sched.tick().unwrap();
+        }
+        assert_eq!(sched.n_live(), 1);
+        assert!(sched.cancel(a));
+        assert_eq!(sched.pool().pages_in_use(), 0, "cancel leaked pages");
+        let comps = sched.take_completed();
+        assert_eq!(comps[0].finish, FinishReason::Cancelled);
+        assert!(!comps[0].tokens.is_empty());
+        assert!(comps[0].tokens.len() < 8);
+        assert_eq!(comps[0].tokens[..],
+                   solo_ref[..comps[0].tokens.len()],
+                   "cancelled output must be a prefix of the solo run");
+        assert_eq!(sched.stats().cancelled, 1);
+    }
+
+    /// Deadline expiry while queued: the request is shed with TimedOut
+    /// and no output; co-queued work is unaffected. Runs on the manual
+    /// clock, so expiry is exact and deterministic.
+    #[test]
+    fn deadline_expiry_in_queue_sheds_request() {
+        let c = core(40);
+        let pool = KvPool::for_core(&c, 1);
+        let mut sched = Scheduler::with_clock(
+            c.clone(), pool,
+            SchedConfig { max_batch: 1, ..SchedConfig::default() },
+            Clock::manual());
+        let a = sched.submit(greedy(prompt(4, 3), 30, 1)).unwrap();
+        let b = sched
+            .submit(Request::new(prompt(3, 5), 4, Sampler::Greedy, 2)
+                .with_deadline(0.5))
+            .unwrap();
+        sched.tick().unwrap(); // a admitted, b queued behind the slot
+        assert_eq!((sched.n_live(), sched.n_queued()), (1, 1));
+        sched.clock().advance(1.0); // past b's deadline
+        sched.tick().unwrap();
+        assert_eq!(sched.n_queued(), 0, "expired request not shed");
+        let comps = sched.run_all().unwrap();
+        let cb = comps.iter().find(|x| x.id == b).unwrap();
+        assert_eq!(cb.finish, FinishReason::TimedOut);
+        assert!(cb.tokens.is_empty());
+        assert!(cb.finish_secs >= 0.5);
+        let ca = comps.iter().find(|x| x.id == a).unwrap();
+        assert_eq!(ca.finish, FinishReason::Done);
+        assert_eq!(sched.stats().timed_out, 1);
+    }
+
+    /// Deadline expiry mid-decode: the session retires with the partial
+    /// tokens it emitted - a bit-exact prefix of its solo run - and
+    /// frees its pages.
+    #[test]
+    fn deadline_expiry_mid_decode_keeps_partial_output() {
+        let c = core(41);
+        let p = prompt(4, 3);
+        let want = solo_greedy(&c, &(p.clone(), 10, 7));
+        let pool = KvPool::for_core(&c, 1);
+        let mut sched = Scheduler::with_clock(
+            c.clone(), pool, SchedConfig::default(), Clock::manual());
+        sched.submit(
+            Request::new(p, 10, Sampler::Greedy, 7).with_deadline(5.0))
+            .unwrap();
+        for _ in 0..4 {
+            sched.tick().unwrap();
+            sched.clock().advance(1.0);
+        }
+        assert_eq!(sched.n_live(), 1, "should still be decoding");
+        sched.clock().advance(2.0); // now 6.0 > deadline 5.0
+        sched.tick().unwrap();
+        assert!(sched.is_idle(), "expired session not retired");
+        assert_eq!(sched.pool().pages_in_use(), 0, "expiry leaked pages");
+        let comps = sched.take_completed();
+        assert_eq!(comps[0].finish, FinishReason::TimedOut);
+        assert!(!comps[0].tokens.is_empty());
+        assert!(comps[0].tokens.len() < 10);
+        assert_eq!(comps[0].tokens[..], want[..comps[0].tokens.len()],
+                   "timed-out output must be a prefix of the solo run");
+    }
+
+    /// Head-of-line fix: a small later request is admitted past a front
+    /// request whose pages don't fit, admission stays deterministic, and
+    /// with lookahead disabled the old strict-FIFO behavior returns.
+    #[test]
+    fn lookahead_admits_small_request_past_blocked_front() {
+        let c = core(42);
+        // 6 pages x 4 rows; B and A need 4 pages each, C needs 1
+        let reqs = [
+            (prompt(8, 3), 9usize, 801u64), // B: admitted first
+            (prompt(8, 5), 9, 802),         // A: blocked behind B
+            (prompt(2, 7), 3, 803),         // C: small, fits beside B
+        ];
+        let mk = |lookahead: usize| {
+            let mut s = Scheduler::with_pool(
+                c.clone(), KvPool::for_core_paged(&c, 6, 4),
+                SchedConfig {
+                    max_batch: 4,
+                    prefill_chunk: 8,
+                    admit_lookahead: lookahead,
+                    starve_patience: 64,
+                    ..SchedConfig::default()
+                });
+            for r in &reqs {
+                s.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+            }
+            s
+        };
+
+        // with lookahead: C jumps the blocked A on the first tick
+        let mut s = mk(4);
+        s.tick().unwrap();
+        assert_eq!((s.n_live(), s.n_queued()), (2, 1),
+                   "lookahead should admit B and C");
+        // strict FIFO: C stays behind A
+        let mut s0 = mk(0);
+        s0.tick().unwrap();
+        assert_eq!((s0.n_live(), s0.n_queued()), (1, 2),
+                   "lookahead 0 must preserve strict FIFO");
+
+        // both orders drain to identical, solo-exact outputs: admission
+        // order is invisible in the tokens (determinism contract)
+        let done_a = s.run_all().unwrap();
+        let done_b = s0.run_all().unwrap();
+        // and lookahead admission itself is run-to-run deterministic
+        let done_c = {
+            let mut s = mk(4);
+            s.tick().unwrap();
+            s.run_all().unwrap()
+        };
+        assert_eq!(done_a.len(), 3);
+        for ((x, y), z) in done_a.iter().zip(&done_b).zip(&done_c) {
+            assert_eq!(x.tokens, y.tokens,
+                       "lookahead changed tokens of req {}", x.id);
+            assert_eq!(x.tokens, z.tokens,
+                       "lookahead admission not deterministic");
+        }
+        for (comp, r) in done_a.iter().zip(&reqs) {
+            assert_eq!(comp.tokens,
+                       solo_greedy(&c, &(r.0.clone(), r.1, r.2)),
+                       "req {}", comp.id);
+        }
+    }
+
+    /// Starvation guard: once the front request has been passed over
+    /// `starve_patience` ticks, lookahead is suspended - nothing may
+    /// jump it anymore - and the front still completes under a
+    /// continuous stream of small requests.
+    #[test]
+    fn starvation_guard_front_ages_out_of_being_skipped() {
+        let c = core(43);
+        let pool = || KvPool::for_core_paged(&c, 6, 4);
+        let big = |seed| greedy(prompt(8, 3), 9, seed); // 4 pages
+        let small = |seed| greedy(prompt(2, 5), 2, seed); // 1 page
+
+        // patience 0 behaves like strict FIFO from the first tick
+        let mut s = Scheduler::with_pool(c.clone(), pool(), SchedConfig {
+            max_batch: 4,
+            prefill_chunk: 8,
+            admit_lookahead: 4,
+            starve_patience: 0,
+            ..SchedConfig::default()
+        });
+        s.submit(big(1)).unwrap();
+        s.submit(big(2)).unwrap();
+        s.submit(small(3)).unwrap();
+        s.tick().unwrap();
+        assert_eq!((s.n_live(), s.n_queued()), (1, 2),
+                   "patience 0 must not let the small request jump");
+
+        // patience 1 + continuous small traffic on the manual clock: the
+        // big front request must finish before the stream drains
+        let mut s = Scheduler::with_clock(c.clone(), pool(), SchedConfig {
+            max_batch: 4,
+            prefill_chunk: 8,
+            admit_lookahead: 4,
+            starve_patience: 1,
+            ..SchedConfig::default()
+        }, Clock::manual());
+        s.submit(big(4)).unwrap(); // occupies 4 of 6 pages
+        let a = s.submit(big(5)).unwrap(); // the skippable front
+        let mut smalls = Vec::new();
+        let mut t = 0usize;
+        loop {
+            if t < 20 {
+                smalls.push(s.submit(small(100 + t as u64)).unwrap());
+            }
+            s.tick().unwrap();
+            s.clock().advance(1.0);
+            t += 1;
+            if s.is_idle() {
+                break;
+            }
+            assert!(t < 1000, "starved: scheduler failed to drain");
+        }
+        let comps = s.take_completed();
+        let fa = comps.iter().find(|x| x.id == a).unwrap().finish_secs;
+        let last_small = smalls
+            .iter()
+            .map(|id| {
+                comps.iter().find(|x| x.id == *id).unwrap().finish_secs
+            })
+            .fold(0.0f64, f64::max);
+        assert!(fa < last_small,
+                "guard failed: big request ({fa}s) outlived every small \
+                 request (last at {last_small}s)");
+        for comp in &comps {
+            assert_eq!(comp.finish, FinishReason::Done, "req {}",
+                       comp.id);
+        }
+    }
+
+    /// Satellite regression: a failing forward call must not abandon
+    /// every live lease anymore. With prefill failing for everything,
+    /// all sessions retire Failed and the pool accounting is exact.
+    #[test]
+    fn failed_tick_releases_failed_sessions_pages() {
+        let c = core(45);
+        let mut sched = Scheduler::new(c.clone(), 2, SchedConfig {
+            max_batch: 2,
+            prefill_chunk: 4,
+            ..SchedConfig::default()
+        });
+        sched.submit(greedy(prompt(6, 3), 4, 1)).unwrap();
+        sched.submit(greedy(prompt(6, 5), 4, 2)).unwrap();
+        failpoint::with(1, &[("fwd.prefill", 1.0)], || {
+            sched.tick().unwrap();
+        });
+        assert_eq!(sched.n_live(), 0, "failed sessions must retire");
+        assert_eq!(sched.pool().pages_in_use(), 0,
+                   "failed tick leaked pages");
+        let comps = sched.take_completed();
+        assert_eq!(comps.len(), 2);
+        for comp in &comps {
+            assert!(matches!(comp.finish, FinishReason::Failed(_)),
+                    "req {}: {:?}", comp.id, comp.finish);
+            assert!(comp.tokens.is_empty());
+        }
+        assert_eq!(sched.stats().failed, 2);
+        // the scheduler stays serviceable after the fault
+        sched.submit(greedy(prompt(4, 3), 3, 3)).unwrap();
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].finish, FinishReason::Done);
+        assert_eq!(sched.pool().pages_in_use(), 0);
+    }
+
+    /// Isolation: a prefill fault fails only the offending session; the
+    /// co-batched request keeps decoding bit-identically.
+    #[test]
+    fn failed_prefill_isolates_offending_session() {
+        let c = core(46);
+        let fast = (prompt(3, 3), 6usize, 51u64); // prefills in 1 chunk
+        let slow = (prompt(12, 5), 4usize, 52u64); // needs 3 chunks
+        let want_fast = solo_greedy(&c, &fast);
+        let mut sched = Scheduler::new(c.clone(), 2, SchedConfig {
+            max_batch: 2,
+            prefill_chunk: 4,
+            ..SchedConfig::default()
+        });
+        let fid = sched.submit(greedy(fast.0.clone(), fast.1, fast.2))
+            .unwrap();
+        let sid = sched.submit(greedy(slow.0.clone(), slow.1, slow.2))
+            .unwrap();
+        sched.tick().unwrap(); // both admitted; fast emits, slow prefills
+        assert_eq!(sched.n_live(), 2);
+        // next tick: only `slow` still prefills, so a p=1.0 prefill
+        // fault hits exactly that session
+        failpoint::with(2, &[("fwd.prefill", 1.0)], || {
+            sched.tick().unwrap();
+        });
+        assert_eq!(sched.n_live(), 1, "only the faulted session leaves");
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), 2);
+        let cf = comps.iter().find(|x| x.id == fid).unwrap();
+        assert_eq!(cf.finish, FinishReason::Done);
+        assert_eq!(cf.tokens, want_fast,
+                   "survivor diverged from its solo run");
+        let cs = comps.iter().find(|x| x.id == sid).unwrap();
+        assert!(matches!(cs.finish, FinishReason::Failed(_)));
+        assert!(cs.tokens.is_empty());
+        assert_eq!(sched.pool().pages_in_use(), 0);
+    }
+
+    /// Isolation: a whole-batch decode fault falls back to per-session
+    /// solo steps; with no per-session fault everyone survives with
+    /// outputs bit-identical to solo runs.
+    #[test]
+    fn whole_batch_decode_fault_survived_bit_identically() {
+        let c = core(47);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..3)
+            .map(|i| (prompt(3 + i, 4 + i), 5, 600 + i as u64))
+            .collect();
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo_greedy(&c, r)).collect();
+        let mut sched = Scheduler::new(c.clone(), 3, SchedConfig {
+            max_batch: 3,
+            ..SchedConfig::default()
+        });
+        for r in &reqs {
+            sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+        }
+        // every decode_batch call fails; every solo fallback step works
+        let comps = failpoint::with(3, &[("fwd.decode", 1.0)], || {
+            sched.run_all().unwrap()
+        });
+        assert_eq!(comps.len(), reqs.len());
+        for (comp, want) in comps.iter().zip(&want) {
+            assert_eq!(comp.finish, FinishReason::Done, "req {}", comp.id);
+            assert_eq!(&comp.tokens, want,
+                       "solo-fallback output diverged (req {})", comp.id);
+        }
+        assert_eq!(sched.stats().failed, 0);
+        assert_eq!(sched.pool().pages_in_use(), 0);
+    }
+
+    /// Acceptance sweep: randomized fault schedules across seeds and all
+    /// four sites. Every run drains, leaks zero pages, and every
+    /// completion is either a bit-exact solo match (Done/ContextFull) or
+    /// a Failed request whose partial tokens are a bit-exact prefix.
+    #[test]
+    fn randomized_fault_sweep_no_leaks_survivors_bit_identical() {
+        let c = core(44);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..6)
+            .map(|i| (prompt(2 + 3 * i, 5 + i), 3 + i, 500 + i as u64))
+            .collect();
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo_greedy(&c, r)).collect();
+        let mut total_fired = 0u64;
+        for seed in [11u64, 12, 13, 14] {
+            let mut sched = Scheduler::with_pool(
+                c.clone(), KvPool::for_core_paged(&c, 8, 6),
+                SchedConfig {
+                    max_batch: 4,
+                    prefill_chunk: 4,
+                    ..SchedConfig::default()
+                });
+            for r in &reqs {
+                sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+            }
+            failpoint::arm(seed, &[
+                ("kv.draw", 0.05),
+                ("fwd.prefill", 0.10),
+                ("fwd.decode", 0.10),
+                ("fwd.step", 0.10),
+            ]);
+            let mut ticks = 0usize;
+            while !sched.is_idle() {
+                sched.tick().unwrap();
+                ticks += 1;
+                assert!(ticks < 10_000,
+                        "seed {seed}: fault run failed to drain");
+            }
+            total_fired +=
+                failpoint::disarm().iter().map(|r| r.fired).sum::<u64>();
+            let comps = sched.take_completed();
+            assert_eq!(comps.len(), reqs.len(),
+                       "seed {seed}: lost requests");
+            assert_eq!(sched.pool().pages_in_use(), 0,
+                       "seed {seed}: leaked pages");
+            for (comp, want) in comps.iter().zip(&want) {
+                match &comp.finish {
+                    FinishReason::Done | FinishReason::ContextFull => {
+                        assert_eq!(&comp.tokens, want,
+                                   "seed {seed} req {}: survivor \
+                                    diverged from solo", comp.id);
+                    }
+                    FinishReason::Failed(_) => {
+                        assert_eq!(comp.tokens[..],
+                                   want[..comp.tokens.len()],
+                                   "seed {seed} req {}: failed request's \
+                                    partial output is not a solo prefix",
+                                   comp.id);
+                    }
+                    other => panic!(
+                        "seed {seed} req {}: unexpected finish {other:?}",
+                        comp.id),
+                }
+            }
+        }
+        // per-seed fire counts vary with the schedule; across the whole
+        // sweep at these probabilities faults must have been injected
+        assert!(total_fired > 0,
+                "sweep injected no faults - sites unreachable?");
     }
 }

@@ -4,8 +4,14 @@
 //! [`KvPool`](crate::infer::kv::KvPool) (reserved for the request's
 //! worst-case row count at admission, so decode can never fail a KV
 //! allocation), and its generation bookkeeping (prompt progress, emitted
-//! tokens, latency timestamps). Everything immutable lives in the shared
+//! tokens, latency timestamps, an optional absolute deadline).
+//! Everything immutable lives in the shared
 //! [`ModelCore`](crate::infer::core::ModelCore).
+//!
+//! Timestamps are `f64` seconds on the scheduler's
+//! [`Clock`](crate::util::clock::Clock), so the same bookkeeping runs on
+//! wall time in production and on the deterministic manual clock in
+//! deadline tests and the open-loop simulator.
 //!
 //! The RNG is forked exactly like `infer::generate::generate` forks it
 //! (`Rng::new(seed).fork("sample")`), and tokens are sampled in the same
@@ -13,26 +19,75 @@
 //! stream as a solo `generate` call with the same `(prompt, seed,
 //! sampler)` - the scheduler-vs-solo equivalence tests pin this.
 
-use std::time::Instant;
-
 use crate::infer::generate::{sample, Sampler};
 use crate::infer::kv::KvLease;
 use crate::util::rng::Rng;
 
 /// One queued or in-flight generation request.
+#[derive(Clone, Debug)]
 pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub sampler: Sampler,
     pub seed: u64,
+    /// Optional completion budget in seconds, measured from submission
+    /// on the scheduler's clock. Expired in queue: the request is shed
+    /// with [`FinishReason::TimedOut`] and no output. Expired live: it
+    /// retires with its partial output. `None` = no deadline.
+    pub deadline: Option<f64>,
 }
 
-/// A finished request with its output and latency accounting.
+impl Request {
+    /// A request with no deadline (add one with
+    /// [`Request::with_deadline`]).
+    pub fn new(prompt: Vec<i32>, max_new: usize, sampler: Sampler,
+               seed: u64) -> Request {
+        Request { prompt, max_new, sampler, seed, deadline: None }
+    }
+
+    /// Set a completion deadline, in seconds from submission.
+    pub fn with_deadline(mut self, secs: f64) -> Request {
+        self.deadline = Some(secs);
+        self
+    }
+}
+
+/// Why a request left the scheduler. The first two are success shapes
+/// ([`FinishReason::is_ok`]); the rest carry whatever partial output was
+/// produced before the exit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted its full `max_new` token budget.
+    Done,
+    /// Hit the model's context limit first - same truncation a solo
+    /// `generate` performs.
+    ContextFull,
+    /// Deadline expired, in queue (no output) or mid-flight (partial
+    /// output kept).
+    TimedOut,
+    /// Cancelled via `Scheduler::cancel`; partial output kept.
+    Cancelled,
+    /// An isolated per-request failure (forward / KV error, with the
+    /// error text); co-batched requests are unaffected.
+    Failed(String),
+}
+
+impl FinishReason {
+    /// Did the request run to a natural end (budget or context)?
+    pub fn is_ok(&self) -> bool {
+        matches!(self, FinishReason::Done | FinishReason::ContextFull)
+    }
+}
+
+/// A finished request with its output, exit reason, and latency
+/// accounting (seconds on the scheduler's clock).
 #[derive(Debug)]
 pub struct Completion {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    /// how the request exited (see [`FinishReason`])
+    pub finish: FinishReason,
     /// submit -> first emitted token (includes queue wait), seconds
     pub first_token_secs: f64,
     /// submit -> retirement, seconds
@@ -58,15 +113,17 @@ pub struct Session {
     pub(crate) sampler: Sampler,
     pub(crate) max_new: usize,
     pub out: Vec<i32>,
-    pub(crate) submitted: Instant,
+    pub(crate) submitted: f64,
+    /// absolute clock deadline (submission time + request deadline)
+    pub(crate) deadline: Option<f64>,
     pub(crate) first_token_secs: Option<f64>,
-    pub(crate) last_event: Instant,
+    pub(crate) last_event: f64,
     pub(crate) token_gaps: Vec<f64>,
 }
 
 impl Session {
     pub(crate) fn start(id: u64, req: Request, lease: KvLease,
-                        submitted: Instant) -> Session {
+                        submitted: f64, deadline: Option<f64>) -> Session {
         Session {
             id,
             lease,
@@ -79,6 +136,7 @@ impl Session {
             prefilled: 0,
             next: 0,
             submitted,
+            deadline,
             first_token_secs: None,
             last_event: submitted,
             token_gaps: Vec::with_capacity(req.max_new),
@@ -89,6 +147,11 @@ impl Session {
         self.prefilled == self.prompt.len()
     }
 
+    /// Has this session's absolute deadline passed at `now`?
+    pub(crate) fn expired(&self, now: f64) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+
     /// Sample from `logits` with this session's RNG (same call order as
     /// solo `generate`).
     pub(crate) fn sample(&mut self, logits: &[f32]) -> i32 {
@@ -96,18 +159,18 @@ impl Session {
     }
 
     /// Record one emitted token's latency.
-    pub(crate) fn emit(&mut self, tok: i32, now: Instant) {
-        let gap = now.duration_since(self.last_event).as_secs_f64();
+    pub(crate) fn emit(&mut self, tok: i32, now: f64) {
+        let gap = (now - self.last_event).max(0.0);
         self.last_event = now;
         if self.first_token_secs.is_none() {
-            self.first_token_secs =
-                Some(now.duration_since(self.submitted).as_secs_f64());
+            self.first_token_secs = Some((now - self.submitted).max(0.0));
         }
         self.token_gaps.push(gap);
         self.out.push(tok);
     }
 
-    pub(crate) fn finish(self, now: Instant) -> (KvLease, Completion) {
+    pub(crate) fn finish(self, now: f64, finish: FinishReason)
+                         -> (KvLease, Completion) {
         let first = self.first_token_secs.unwrap_or(0.0);
         (
             self.lease,
@@ -115,9 +178,9 @@ impl Session {
                 id: self.id,
                 prompt_len: self.prompt.len(),
                 tokens: self.out,
+                finish,
                 first_token_secs: first,
-                finish_secs:
-                    now.duration_since(self.submitted).as_secs_f64(),
+                finish_secs: (now - self.submitted).max(0.0),
                 token_gaps: self.token_gaps,
             },
         )

@@ -261,7 +261,13 @@ fn run(args: &[String]) -> Result<()> {
             // through the continuous-batching scheduler (shared
             // ModelCore, pooled KV slots, chunked prefill admission),
             // reporting aggregate throughput + latency percentiles.
+            // --open-loop switches to the deterministic Poisson-arrival
+            // simulator on the virtual clock (deadlines, backpressure,
+            // optional fault injection) and reports goodput/shed/fail
+            // counters plus the run digest.
             use efficientqat::infer::core::ModelCore;
+            use efficientqat::infer::openloop::{run_open_loop,
+                                                OpenLoopCfg};
             use efficientqat::infer::sched::{SchedConfig, Scheduler};
             use efficientqat::infer::session::Request;
             use efficientqat::util::rng::Rng;
@@ -288,10 +294,52 @@ fn run(args: &[String]) -> Result<()> {
                     64, 4, 16, 128, 256, 2, QuantScheme::new(2, 32),
                     max_ctx, seed)?),
             };
+            if cli.flag_bool("open-loop") {
+                let cfg = OpenLoopCfg {
+                    requests,
+                    rate: cli.flag_f64("rate", 200.0)?,
+                    tick_secs:
+                        cli.flag_f64("tick-ms", 5.0)?.max(0.001) / 1e3,
+                    prompt_len: plen,
+                    max_new: tokens.max(1),
+                    deadline_secs:
+                        cli.flag_f64("deadline-ms", 500.0)? / 1e3,
+                    seed,
+                    slots,
+                    max_batch: slots,
+                    prefill_chunk: chunk,
+                    max_queue: cli.flag_usize("max-queue", 64)?.max(1),
+                    fault_rate: cli.flag_f64("fail-rate", 0.0)?,
+                };
+                let r = run_open_loop(core, &cfg)?;
+                println!(
+                    "serve-sim --open-loop: {} arrivals at {:.0} req/s \
+                     (virtual), seed {seed}",
+                    r.arrivals, cfg.rate
+                );
+                println!(
+                    "  goodput {} (done {}, ctx-full {})  shed {}  \
+                     timed-out {}  failed {}  rejected {}",
+                    r.goodput, r.done, r.context_full, r.shed_queued,
+                    r.timed_out_live, r.failed, r.rejected
+                );
+                println!(
+                    "  {} tokens over {} ticks ({:.2} virtual s); queue \
+                     depth mean {:.2} max {}; peak {} live",
+                    r.total_tokens, r.ticks, r.virtual_secs,
+                    r.queue_depth_mean, r.queue_depth_max, r.peak_live
+                );
+                println!("  pages leaked {}  digest {:016x}",
+                         r.leaked_pages, r.digest);
+                anyhow::ensure!(r.goodput > 0,
+                                "open-loop run produced no goodput");
+                return Ok(());
+            }
             let mut sched = Scheduler::new(core.clone(), slots,
                                            SchedConfig {
                 max_batch: slots,
                 prefill_chunk: chunk,
+                ..SchedConfig::default()
             });
             // synthetic stream: varied prompt lengths/contents/budgets
             let mut rng = Rng::new(seed).fork("serve-sim");
@@ -300,12 +348,12 @@ fn run(args: &[String]) -> Result<()> {
                 let prompt: Vec<i32> = (0..n)
                     .map(|_| rng.below(core.vocab) as i32)
                     .collect();
-                sched.submit(Request {
+                sched.submit(Request::new(
                     prompt,
-                    max_new: 1 + rng.below(tokens.max(1)),
-                    sampler: Sampler::Temperature(0.8),
-                    seed: seed + 1000 + i as u64,
-                })?;
+                    1 + rng.below(tokens.max(1)),
+                    Sampler::Temperature(0.8),
+                    seed + 1000 + i as u64,
+                ))?;
             }
             let t0 = std::time::Instant::now();
             let mut ticks = 0usize;

@@ -1,0 +1,103 @@
+//! Wall / manual clock abstraction for the serving stack.
+//!
+//! The scheduler and its sessions do all latency and deadline bookkeeping
+//! against a [`Clock`] handing out `f64` seconds since an arbitrary
+//! origin. Production paths use [`Clock::wall`] (monotonic, backed by
+//! `Instant`); tests and the open-loop simulator use [`Clock::manual`],
+//! which only moves when [`Clock::advance`] is called - so deadline
+//! expiry, queue-wait accounting, and Poisson arrival schedules are
+//! bit-reproducible run to run regardless of host speed.
+//!
+//! `now()` takes `&self` (interior mutability for the manual variant) so
+//! a scheduler can read the time while its sessions are borrowed.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// Seconds-since-origin time source; see the module docs.
+#[derive(Clone, Debug)]
+pub struct Clock {
+    imp: Imp,
+}
+
+#[derive(Clone, Debug)]
+enum Imp {
+    Wall(Instant),
+    Manual(Cell<f64>),
+}
+
+impl Clock {
+    /// Monotonic wall clock with origin "now".
+    pub fn wall() -> Clock {
+        Clock { imp: Imp::Wall(Instant::now()) }
+    }
+
+    /// Deterministic clock starting at 0.0 that only moves via
+    /// [`Clock::advance`].
+    pub fn manual() -> Clock {
+        Clock { imp: Imp::Manual(Cell::new(0.0)) }
+    }
+
+    /// Seconds since this clock's origin.
+    pub fn now(&self) -> f64 {
+        match &self.imp {
+            Imp::Wall(t0) => t0.elapsed().as_secs_f64(),
+            Imp::Manual(t) => t.get(),
+        }
+    }
+
+    /// Advance a manual clock by `dt` seconds (negative `dt` is clamped
+    /// to zero - time never goes backwards). Panics on a wall clock:
+    /// only simulated time can be driven by the caller.
+    pub fn advance(&self, dt: f64) {
+        match &self.imp {
+            Imp::Wall(_) => panic!("Clock::advance on a wall clock"),
+            Imp::Manual(t) => t.set(t.get() + dt.max(0.0)),
+        }
+    }
+
+    /// Is this a manually-driven clock?
+    pub fn is_manual(&self) -> bool {
+        matches!(self.imp, Imp::Manual(_))
+    }
+}
+
+impl Default for Clock {
+    fn default() -> Clock {
+        Clock::wall()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_moves_only_on_advance() {
+        let c = Clock::manual();
+        assert!(c.is_manual());
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.25);
+        assert_eq!(c.now(), 1.75);
+        // negative advances clamp: time is monotone
+        c.advance(-10.0);
+        assert_eq!(c.now(), 1.75);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_nonnegative() {
+        let c = Clock::wall();
+        assert!(!c.is_manual());
+        let a = c.now();
+        let b = c.now();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+
+    #[test]
+    #[should_panic(expected = "wall clock")]
+    fn advancing_a_wall_clock_panics() {
+        Clock::wall().advance(1.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Seeded, thread-local fault-injection registry.
+//!
+//! Robustness tests and the fault-injected open-loop bench arm a set of
+//! named *sites* with per-site fire probabilities and a single seed;
+//! instrumented code (KV page allocation, the forward primitives) calls
+//! [`check`] at each site and gets an `Err` when the schedule says the
+//! site fires. All probability draws come from one seeded
+//! [`Rng`](crate::util::rng::Rng) stream, consumed only at registered
+//! sites in call order - so for a single-threaded consumer (the
+//! scheduler), a fault schedule is a pure function of
+//! `(seed, site set, call sequence)` and every sweep is reproducible.
+//!
+//! The registry is thread-local: arming faults in one test cannot
+//! perturb tests running on other threads, and production code that
+//! never arms pays one thread-local read per site check. Disarmed is
+//! the default state; use [`with`] to scope arming so a panicking test
+//! cannot leak an armed registry into the next test on the same thread.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+struct Site {
+    name: String,
+    prob: f64,
+    checked: u64,
+    fired: u64,
+}
+
+struct Registry {
+    rng: Rng,
+    sites: Vec<Site>,
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Option<Registry>> = RefCell::new(None);
+}
+
+/// Per-site outcome counts returned by [`disarm`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SiteReport {
+    pub site: String,
+    /// times the site was reached while armed
+    pub checked: u64,
+    /// times it injected a fault
+    pub fired: u64,
+}
+
+/// Arm the current thread's registry: each `(site, prob)` entry makes
+/// [`check(site)`](check) fail with probability `prob` per call.
+/// Replaces any previous arming.
+pub fn arm(seed: u64, sites: &[(&str, f64)]) {
+    let reg = Registry {
+        rng: Rng::new(seed).fork("failpoint"),
+        sites: sites
+            .iter()
+            .map(|(name, prob)| Site {
+                name: (*name).to_string(),
+                prob: *prob,
+                checked: 0,
+                fired: 0,
+            })
+            .collect(),
+    };
+    REGISTRY.with(|r| *r.borrow_mut() = Some(reg));
+}
+
+/// Disarm the current thread's registry; returns what each site saw
+/// (empty if nothing was armed).
+pub fn disarm() -> Vec<SiteReport> {
+    REGISTRY.with(|r| match r.borrow_mut().take() {
+        None => Vec::new(),
+        Some(reg) => reg
+            .sites
+            .into_iter()
+            .map(|s| SiteReport {
+                site: s.name,
+                checked: s.checked,
+                fired: s.fired,
+            })
+            .collect(),
+    })
+}
+
+/// Is any fault schedule armed on this thread?
+pub fn is_armed() -> bool {
+    REGISTRY.with(|r| r.borrow().is_some())
+}
+
+/// Fault-injection site: `Err("injected fault at <site>")` when the
+/// armed schedule fires here, `Ok(())` otherwise (including whenever
+/// nothing is armed - the production fast path).
+pub fn check(site: &str) -> Result<()> {
+    let fired = REGISTRY.with(|r| {
+        let mut r = r.borrow_mut();
+        let reg = match r.as_mut() {
+            Some(reg) => reg,
+            None => return false,
+        };
+        let idx = match reg.sites.iter().position(|s| s.name == site) {
+            Some(i) => i,
+            None => return false,
+        };
+        reg.sites[idx].checked += 1;
+        let p = reg.sites[idx].prob;
+        // sites not in the schedule never consume from the stream, so
+        // adding instrumentation elsewhere cannot shift this schedule
+        let fire = reg.rng.f64() < p;
+        if fire {
+            reg.sites[idx].fired += 1;
+        }
+        fire
+    });
+    if fired {
+        bail!("injected fault at failpoint '{site}'");
+    }
+    Ok(())
+}
+
+/// Run `f` with the given fault schedule armed, disarming afterwards
+/// even if `f` panics (unwind-safe via a drop guard).
+pub fn with<T>(seed: u64, sites: &[(&str, f64)], f: impl FnOnce() -> T)
+               -> T {
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+    arm(seed, sites);
+    let _g = Guard;
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn schedule(seed: u64, n: usize) -> Vec<bool> {
+        with(seed, &[("a", 0.5)], || {
+            (0..n).map(|_| check("a").is_err()).collect()
+        })
+    }
+
+    #[test]
+    fn disarmed_never_fires() {
+        assert!(!is_armed());
+        for _ in 0..100 {
+            check("anything").unwrap();
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let a = schedule(7, 200);
+        let b = schedule(7, 200);
+        let c = schedule(8, 200);
+        assert_eq!(a, b, "same seed must give the same schedule");
+        assert_ne!(a, c, "different seeds should diverge");
+        assert!(a.iter().any(|&f| f) && a.iter().any(|&f| !f),
+                "p=0.5 over 200 draws should mix outcomes");
+    }
+
+    #[test]
+    fn unregistered_sites_never_fire_or_consume() {
+        let fired = with(3, &[("kv", 1.0)], || {
+            // draws for "other" must not consume from the stream
+            for _ in 0..10 {
+                check("other").unwrap();
+            }
+            check("kv").is_err()
+        });
+        assert!(fired, "p=1.0 site must fire");
+    }
+
+    #[test]
+    fn reports_count_checks_and_fires() {
+        arm(5, &[("x", 1.0), ("y", 0.0)]);
+        for _ in 0..4 {
+            let _ = check("x");
+            check("y").unwrap();
+        }
+        let mut rep = disarm();
+        rep.sort_by(|a, b| a.site.cmp(&b.site));
+        assert_eq!(rep.len(), 2);
+        assert_eq!((rep[0].checked, rep[0].fired), (4, 4));
+        assert_eq!((rep[1].checked, rep[1].fired), (4, 0));
+        assert!(!is_armed());
+        assert!(disarm().is_empty());
+    }
+
+    #[test]
+    fn with_disarms_after_the_closure() {
+        with(1, &[("z", 1.0)], || {
+            assert!(is_armed());
+        });
+        assert!(!is_armed());
+        check("z").unwrap();
+    }
+}

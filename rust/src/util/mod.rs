@@ -1,5 +1,8 @@
-//! Zero-dependency substrates: RNG, f16, JSON, stats, logging, threads.
+//! Zero-dependency substrates: RNG, f16, JSON, stats, logging, threads,
+//! wall/manual clocks, and the seeded failpoint registry.
+pub mod clock;
 pub mod f16;
+pub mod failpoint;
 pub mod json;
 pub mod logging;
 pub mod rng;

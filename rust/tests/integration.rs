@@ -280,14 +280,12 @@ fn scheduler_serving_matches_solo_engine() {
             with_threads(nt, || {
                 let mut sched = Scheduler::new(
                     core.clone(), slots,
-                    SchedConfig { max_batch: batch, prefill_chunk: 5 });
+                    SchedConfig { max_batch: batch, prefill_chunk: 5,
+                                  ..SchedConfig::default() });
                 for r in &reqs {
-                    sched.submit(Request {
-                        prompt: r.0.clone(),
-                        max_new: r.1,
-                        sampler: Sampler::Temperature(0.8),
-                        seed: r.2,
-                    }).unwrap();
+                    sched.submit(Request::new(
+                        r.0.clone(), r.1, Sampler::Temperature(0.8),
+                        r.2)).unwrap();
                 }
                 let comps = sched.run_all().unwrap();
                 assert_eq!(comps.len(), reqs.len());
@@ -320,13 +318,9 @@ fn kv_slot_reuse_is_clean_across_requests() {
     let core = Arc::new(
         ModelCore::synthetic(64, 4, 16, 128, 256, 1, sch, 32, 77)
             .unwrap());
-    let mk = |seed: u64, prompt_stride: usize| Request {
-        prompt: (0..6).map(|t| ((t * prompt_stride + 1) % 256) as i32)
-            .collect(),
-        max_new: 5,
-        sampler: Sampler::Greedy,
-        seed,
-    };
+    let mk = |seed: u64, prompt_stride: usize| Request::new(
+        (0..6).map(|t| ((t * prompt_stride + 1) % 256) as i32).collect(),
+        5, Sampler::Greedy, seed);
     // single slot: the junk request runs first, then the probe reuses
     // the same (dirty) slot
     let mut sched = Scheduler::new(core.clone(), 1,
@@ -383,4 +377,70 @@ fn engine_serving_path_without_artifacts() {
     let logits = engine_logits(&mut c, &x, batch, ctx).unwrap();
     assert_eq!(logits.len(), batch * ctx * 256);
     assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+/// The full serving failure model on the public API: an open-loop run
+/// with deadlines, bounded-queue backpressure, and seeded fault
+/// injection is run-to-run deterministic, accounts for every arrival,
+/// and leaks no KV pages; and a direct cancel mid-flight hands back a
+/// prefix of the solo output.
+#[test]
+fn open_loop_serving_failure_model_end_to_end() {
+    use efficientqat::infer::core::ModelCore;
+    use efficientqat::infer::generate::{generate, Sampler};
+    use efficientqat::infer::openloop::{run_open_loop, OpenLoopCfg};
+    use efficientqat::infer::sched::{SchedConfig, Scheduler};
+    use efficientqat::infer::session::{FinishReason, Request};
+    use std::sync::Arc;
+
+    let sch = QuantScheme::new(2, 32);
+    let core = Arc::new(
+        ModelCore::synthetic(64, 4, 16, 128, 256, 1, sch, 32, 99)
+            .unwrap());
+
+    // open loop: clean and faulted runs both reproduce bit-for-bit
+    let cfg = OpenLoopCfg {
+        requests: 16,
+        rate: 80.0,
+        prompt_len: 6,
+        max_new: 6,
+        seed: 5,
+        max_queue: 4,
+        ..OpenLoopCfg::default()
+    };
+    let a = run_open_loop(core.clone(), &cfg).unwrap();
+    let b = run_open_loop(core.clone(), &cfg).unwrap();
+    assert_eq!(a, b, "open-loop run not deterministic");
+    assert!(a.goodput > 0);
+    assert_eq!(a.completions + a.rejected, a.arrivals);
+    assert_eq!(a.leaked_pages, 0);
+    let f = OpenLoopCfg { fault_rate: 0.08, ..cfg };
+    let fa = run_open_loop(core.clone(), &f).unwrap();
+    let fb = run_open_loop(core.clone(), &f).unwrap();
+    assert_eq!(fa, fb, "faulted open-loop run not deterministic");
+    assert_eq!(fa.leaked_pages, 0);
+
+    // cancellation mid-decode: partial output is a solo prefix, and the
+    // freed pages are reusable immediately
+    let prompt: Vec<i32> = (0..5).map(|t| (t * 11 + 2) as i32).collect();
+    let mut eng =
+        efficientqat::infer::engine::Engine::from_core(core.clone());
+    let solo = generate(&mut eng, &prompt, 10, Sampler::Greedy, 3)
+        .unwrap()
+        .tokens;
+    let mut sched =
+        Scheduler::new(core, 1, SchedConfig::default());
+    let id = sched
+        .submit(Request::new(prompt, 10, Sampler::Greedy, 3))
+        .unwrap();
+    for _ in 0..4 {
+        sched.tick().unwrap();
+    }
+    assert!(sched.cancel(id));
+    assert_eq!(sched.pool().pages_in_use(), 0, "cancel leaked pages");
+    let comps = sched.take_completed();
+    assert_eq!(comps[0].finish, FinishReason::Cancelled);
+    assert!(!comps[0].tokens.is_empty());
+    assert_eq!(comps[0].tokens[..], solo[..comps[0].tokens.len()],
+               "cancelled output is not a prefix of the solo run");
 }

@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 gate: release build + full test suite + warning-free rustdoc +
 # docs link check + a fast-mode inference bench smoke that must produce
-# a valid machine-readable perf snapshot (runs/bench.json, schema 5:
+# a valid machine-readable perf snapshot (runs/bench.json, schema 6:
 # inference + native train_step + taped-vs-forward-only eval_forward +
-# the continuous-batching serve section + the paged-KV kv_fork section,
-# whose zero-copy/COW bounds and scoring bit-equality are asserted
-# inside the bench and re-checked by `bench check`) + a bounded
-# serve-sim smoke + a bounded end-to-end Block-AP -> E2E-QP training
-# smoke and a forward-only eval smoke on the native backend (no HLO
-# artifacts required). Run from anywhere; operates on the repo root.
+# the continuous-batching serve section + the paged-KV kv_fork section +
+# the open-loop serve_robust section, whose determinism / bit-equality /
+# leak-freedom contracts are asserted inside the bench and re-checked by
+# `bench check`) + a bounded serve-sim smoke + an open-loop determinism
+# smoke (same seed twice with faults armed must reproduce the same
+# digest) + a bounded end-to-end Block-AP -> E2E-QP training smoke and a
+# forward-only eval smoke on the native backend (no HLO artifacts
+# required). Run from anywhere; operates on the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,14 +29,20 @@ for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
 done
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 5; see
+# runs/bench.json is missing or schema-invalid (schema 6; see
 # docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
-# copy bounds are asserted inside the bench itself; assert here that
-# the section actually made it into the snapshot.
+# copy bounds, and the serve_robust section's determinism / survivor
+# bit-equality / leak-freedom contracts, are asserted inside the bench
+# itself; assert here that the sections actually made it into the
+# snapshot.
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
 if ! grep -q '"kv_fork"' runs/bench.json; then
   echo "tier1 FAIL: runs/bench.json has no kv_fork section" >&2
+  exit 1
+fi
+if ! grep -q '"serve_robust"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no serve_robust section" >&2
   exit 1
 fi
 
@@ -43,6 +51,22 @@ fi
 # fails on lost requests or zero emitted tokens
 cargo run --release --bin eqat -- serve-sim --requests 8 --slots 3 \
   --tokens 8 --prompt-len 10 --prefill-chunk 4
+
+# open-loop determinism smoke: seeded Poisson arrivals + deadlines +
+# bounded queue + fault injection on the virtual clock; the same seed
+# must reproduce the same lifecycle digest bit-for-bit, and no run may
+# leak a KV page (the binary itself fails on leaks / zero goodput)
+openloop_digest() {
+  cargo run --release --bin eqat -- serve-sim --open-loop \
+    --requests 24 --rate 200 --seed 7 --fail-rate 0.02 \
+    | grep -o 'digest [0-9a-f]*'
+}
+d1="$(openloop_digest)"
+d2="$(openloop_digest)"
+if [ -z "$d1" ] || [ "$d1" != "$d2" ]; then
+  echo "tier1 FAIL: open-loop digest not reproducible ('$d1' vs '$d2')" >&2
+  exit 1
+fi
 
 # native-backend train smoke: pretrain (bounded) -> Block-AP -> E2E-QP ->
 # ppl vs RTN, all pure-Rust, fails on non-finite losses
