@@ -5,15 +5,16 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 6 = inference sections + native train_step + eval_forward +
+//! (schema 7 = inference sections + native train_step + eval_forward +
 //! the continuous-batching `serve` section + the paged-KV `kv_fork`
-//! section + the open-loop `serve_robust` section: goodput / shed /
-//! timeout / reject counters per offered rate, with run-to-run
-//! determinism, survivor bit-equality vs solo generate, fault-run
-//! reproducibility, and zero KV-page leaks asserted inside the bench)
+//! section + the open-loop `serve_robust` section + the SIMD `kernels`
+//! section: scalar-vs-vector GB/s and GFLOP/s for the packed low-bit
+//! matvec/matmul kernels, the dense microkernel, and the fake-quant
+//! gradient kernel, with bit-equality between the two paths asserted
+//! inside the bench and the detected ISA recorded in the envelope)
 //! so the perf trajectory is trackable across PRs;
 //! [`check_bench_json`] validates it (used by scripts/tier1.sh).
-//! Schemas 1-5 from older PRs stay accepted. Every section and field is
+//! Schemas 1-6 from older PRs stay accepted. Every section and field is
 //! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
 //! bumping the schema.
 
@@ -33,6 +34,7 @@ use crate::infer::session::Request;
 use crate::quant::rtn::{minmax_init, quantize};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::simd::{self, Isa};
 use crate::util::stats::{mean, percentile};
 use crate::util::threads::{self, with_threads};
 
@@ -172,18 +174,22 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (sr_md, sr_json) = serve_robust_throughput(fast)?;
     md.push_str(&sr_md);
+    md.push('\n');
+    let (kn_md, kn_json) = kernels_throughput(fast)?;
+    md.push_str(&kn_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 6 = schema 5 + the open-loop serve_robust section
-        ("schema", Json::num(6.0)),
+        // schema 7 = schema 6 + the SIMD kernel-layer section
+        ("schema", Json::num(7.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
         ("threads_available", Json::num(threads::num_threads() as f64)),
+        ("simd", Json::str(simd::isa_name())),
         ("matvec", mv_json),
         ("engine", eng_json),
         ("train_step", ts_json),
@@ -191,8 +197,172 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("serve", sv_json),
         ("kv_fork", kf_json),
         ("serve_robust", sr_json),
+        ("kernels", kn_json),
     ]);
     Ok((md, payload))
+}
+
+/// Time one kernel under forced-scalar and the detected SIMD path,
+/// asserting first that the two outputs are bit-identical. `bytes` /
+/// `flops` are the nominal traffic and work per call, for GB/s and
+/// GFLOP/s columns.
+fn kernel_row<F: FnMut() -> Vec<f32>>(
+    name: &str, isa: Isa, iters: usize, bytes: f64, flops: f64,
+    mut run: F) -> Result<(Vec<String>, Json)> {
+    let y_s = simd::with_isa(Isa::Scalar, &mut run);
+    let y_v = simd::with_isa(isa, &mut run);
+    if y_s.len() != y_v.len()
+        || y_s.iter().zip(&y_v).any(|(a, b)| a.to_bits() != b.to_bits())
+    {
+        bail!("kernels bench: {name} output diverges between scalar and \
+               {}", isa.name());
+    }
+    let r_s = simd::with_isa(Isa::Scalar, || {
+        bench(name, 1, iters, || {
+            std::hint::black_box(run());
+        })
+    });
+    let r_v = simd::with_isa(isa, || {
+        bench(name, 1, iters, || {
+            std::hint::black_box(run());
+        })
+    });
+    let gb = |us: f64| bytes / (us * 1e-6) / 1e9;
+    let gf = |us: f64| flops / (us * 1e-6) / 1e9;
+    let row = vec![
+        name.to_string(),
+        format!("{:.0}", r_s.mean_us),
+        format!("{:.0}", r_v.mean_us),
+        format!("{:.1}", gb(r_s.mean_us)),
+        format!("{:.1}", gb(r_v.mean_us)),
+        format!("{:.1}", gf(r_s.mean_us)),
+        format!("{:.1}", gf(r_v.mean_us)),
+        format!("{:.2}x", r_s.mean_us / r_v.mean_us),
+    ];
+    let jrow = Json::obj(vec![
+        ("kernel", Json::str(name)),
+        ("scalar_us", Json::num(r_s.mean_us)),
+        ("simd_us", Json::num(r_v.mean_us)),
+        ("scalar_gb_s", Json::num(gb(r_s.mean_us))),
+        ("simd_gb_s", Json::num(gb(r_v.mean_us))),
+        ("scalar_gflop_s", Json::num(gf(r_s.mean_us))),
+        ("simd_gflop_s", Json::num(gf(r_v.mean_us))),
+        ("speedup", Json::num(r_s.mean_us / r_v.mean_us)),
+        ("bitexact", Json::Bool(true)),
+    ]);
+    Ok((row, jrow))
+}
+
+/// Kernel-layer throughput: forced-scalar vs the detected SIMD path for
+/// the packed 2/4-bit matvec and matmul kernels, the dense microkernel,
+/// and the fake-quant gradient kernel. Every row first *asserts* the
+/// bit-identity contract (`EQAT_SIMD=scalar` output == vector output,
+/// compared via `to_bits`), so a published `kernels` section doubles as
+/// a determinism witness for the detected ISA (recorded in `isa`).
+/// Schema-7 `kernels` section of runs/bench.json.
+pub fn kernels_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::runtime::native::ops;
+
+    let (out_d, in_d) =
+        if fast { (256usize, 512usize) } else { (2048, 2048) };
+    let group = 64usize;
+    let n_tok = 8usize;
+    let iters = if fast { 5 } else { 20 };
+    let isa = simd::detected();
+
+    let mut rng = Rng::new(4242);
+    let mut w = vec![0f32; out_d * in_d];
+    rng.fill_normal(&mut w, 0.0, 0.05);
+    let mut x = vec![0f32; in_d];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let mut xs = vec![0f32; n_tok * in_d];
+    rng.fill_normal(&mut xs, 0.0, 1.0);
+
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    let mv_flops = 2.0 * (out_d * in_d) as f64;
+    let act_bytes = 4.0 * (out_d + in_d) as f64;
+
+    for bits in [2u32, 4] {
+        let sch = QuantScheme::new(bits, group as u32);
+        let gp = minmax_init(&w, out_d, in_d, sch);
+        let wi = quantize(&w, &gp, sch);
+        let pl = PackedLinear::pack(&wi, out_d, in_d, &gp.s, &gp.z, sch)?;
+        let w_bytes = (out_d * in_d) as f64 * bits as f64 / 8.0;
+
+        let (row, jrow) = kernel_row(
+            &format!("matvec_b{bits}"), isa, iters, w_bytes + act_bytes,
+            mv_flops, || {
+                let mut y = vec![0f32; out_d];
+                pl.matvec(&x, &mut y);
+                y
+            })?;
+        rows.push(row);
+        jrows.push(jrow);
+
+        let (row, jrow) = kernel_row(
+            &format!("matmul_b{bits}"), isa, iters,
+            w_bytes + n_tok as f64 * act_bytes, n_tok as f64 * mv_flops,
+            || {
+                let mut ys = vec![0f32; n_tok * out_d];
+                pl.matmul(&xs, n_tok, &mut ys);
+                ys
+            })?;
+        rows.push(row);
+        jrows.push(jrow);
+    }
+
+    let (row, jrow) = kernel_row(
+        "dense_matvec", isa, iters,
+        4.0 * (out_d * in_d) as f64 + act_bytes, mv_flops, || {
+            let mut y = vec![0f32; out_d];
+            dense_matvec(&w, out_d, in_d, &x, &mut y);
+            y
+        })?;
+    rows.push(row);
+    jrows.push(jrow);
+
+    let gpr = out_d * (in_d / group);
+    let mut gout = vec![0f32; out_d * in_d];
+    rng.fill_normal(&mut gout, 0.0, 1.0);
+    let mut s = vec![0f32; gpr];
+    let mut z = vec![0f32; gpr];
+    for v in s.iter_mut() {
+        *v = 0.05 + 0.2 * rng.f32();
+    }
+    for v in z.iter_mut() {
+        *v = rng.below(4) as f32;
+    }
+    let (row, jrow) = kernel_row(
+        "fq_grads", isa, iters, 3.0 * 4.0 * (out_d * in_d) as f64,
+        4.0 * (out_d * in_d) as f64, || {
+            let mut gw = vec![0f32; out_d * in_d];
+            let mut gs = vec![0f32; gpr];
+            let mut gz = vec![0f32; gpr];
+            ops::fake_quant_grads(&w, out_d, in_d, &s, &z, group, 3.0,
+                                  &gout, &mut gw, &mut gs, &mut gz);
+            gw.extend_from_slice(&gs);
+            gw.extend_from_slice(&gz);
+            gw
+        })?;
+    rows.push(row);
+    jrows.push(jrow);
+
+    crate::info!("kernels bench done (isa {})", isa.name());
+    let md = format!(
+        "## Kernel layer - scalar vs SIMD ({}; bit-identical outputs \
+         asserted per row)\n\n{}",
+        isa.name(),
+        crate::exp::md_table(
+            &["Kernel", "scalar us", "SIMD us", "scalar GB/s",
+              "SIMD GB/s", "scalar GF/s", "SIMD GF/s", "speedup"],
+            &rows)
+    );
+    let j = Json::obj(vec![
+        ("isa", Json::str(isa.name())),
+        ("rows", Json::arr(jrows)),
+    ]);
+    Ok((md, j))
 }
 
 /// Paged-KV fork cost: zero-copy prefix-shared forks vs the deep-copy
@@ -1094,15 +1264,15 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 /// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
 /// eval_forward, 4 adds the continuous-batching serve section, 5 adds
 /// the paged-KV kv_fork section, 6 adds the open-loop serve_robust
-/// section - see docs/BENCH_SCHEMA.md), and requires non-empty
-/// matvec/decode sections with numeric fields.
+/// section, 7 adds the SIMD kernels section - see docs/BENCH_SCHEMA.md),
+/// and requires non-empty matvec/decode sections with numeric fields.
 /// scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=6).contains(&schema) {
+    if !(1..=7).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -1245,6 +1415,33 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             bail!("{path}: serve_robust.leaked_pages {leaked} != 0");
         }
     }
+    // schema 7 adds the SIMD kernel-layer section; the checker re-asserts
+    // the determinism contract the numbers encode: every published row
+    // passed the in-bench scalar-vs-SIMD bit-equality assertion
+    if schema >= 7 {
+        j.get("simd")?.as_str()?;
+        let kn = j.get("kernels")?;
+        kn.get("isa")?.as_str()?;
+        let rows = kn.get("rows")?.as_arr()?;
+        if rows.is_empty() {
+            bail!("{path}: empty kernels.rows section");
+        }
+        for r in rows {
+            let name = r.get("kernel")?.as_str()?.to_string();
+            for key in ["scalar_us", "simd_us", "scalar_gb_s",
+                        "simd_gb_s", "scalar_gflop_s", "simd_gflop_s",
+                        "speedup"] {
+                let v = r.get(key)?.as_f64()?;
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("{path}: bad kernels.{name}.{key} {v}");
+                }
+            }
+            if !r.get("bitexact")?.as_bool()? {
+                bail!("{path}: kernels.{name}.bitexact is false (SIMD \
+                       path diverged from scalar)");
+            }
+        }
+    }
     Ok(())
 }
 
@@ -1305,8 +1502,9 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(6.0)),
+            ("schema", Json::num(7.0)),
             ("kind", Json::str("inference_throughput")),
+            ("simd", Json::str("avx2")),
             (
                 "matvec",
                 Json::arr(vec![Json::obj(vec![
@@ -1394,6 +1592,26 @@ mod tests {
                     ("leaked_pages", Json::num(0.0)),
                 ]),
             ),
+            (
+                "kernels",
+                Json::obj(vec![
+                    ("isa", Json::str("avx2")),
+                    (
+                        "rows",
+                        Json::arr(vec![Json::obj(vec![
+                            ("kernel", Json::str("matvec_b2")),
+                            ("scalar_us", Json::num(120.0)),
+                            ("simd_us", Json::num(30.0)),
+                            ("scalar_gb_s", Json::num(8.0)),
+                            ("simd_gb_s", Json::num(32.0)),
+                            ("scalar_gflop_s", Json::num(4.0)),
+                            ("simd_gflop_s", Json::num(16.0)),
+                            ("speedup", Json::num(4.0)),
+                            ("bitexact", Json::Bool(true)),
+                        ])]),
+                    ),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -1401,9 +1619,9 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-6 file without its required sections is rejected...
+        // schema-7 file without its required sections is rejected...
         for missing in ["train_step", "eval_forward", "serve", "kv_fork",
-                        "serve_robust"] {
+                        "serve_robust", "kernels", "simd"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -1479,17 +1697,20 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "bad serve_robust.{key} accepted");
         }
-        // ...but the core sections under legacy schemas 1-5 stay valid
-        // (5 keeps kv_fork, 4 keeps serve, 3 keeps eval_forward, 1/2
-        // drop those too)
+        // ...but the core sections under legacy schemas 1-6 stay valid
+        // (6 keeps serve_robust, 5 keeps kv_fork, 4 keeps serve, 3 keeps
+        // eval_forward, 1/2 drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["serve_robust", "kv_fork", "serve",
-                          "eval_forward", "schema"]),
-            (2.0, vec!["serve_robust", "kv_fork", "serve",
-                       "eval_forward", "schema"]),
-            (3.0, vec!["serve_robust", "kv_fork", "serve", "schema"]),
-            (4.0, vec!["serve_robust", "kv_fork", "schema"]),
-            (5.0, vec!["serve_robust", "schema"]),
+            (1.0f64, vec!["kernels", "simd", "serve_robust", "kv_fork",
+                          "serve", "eval_forward", "schema"]),
+            (2.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
+                       "serve", "eval_forward", "schema"]),
+            (3.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
+                       "serve", "schema"]),
+            (4.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
+                       "schema"]),
+            (5.0, vec!["kernels", "simd", "serve_robust", "schema"]),
+            (6.0, vec!["kernels", "simd", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

@@ -75,9 +75,13 @@ impl Linear {
         }
     }
 
-    fn matmul(&self, xs: &[f32], n: usize, ys: &mut [f32]) {
+    /// Batched matmul with caller-provided group-sum scratch (`sxs`),
+    /// so repeated prefill calls reuse one allocation; the dense arm has
+    /// no group sums and ignores it.
+    fn matmul_in(&self, xs: &[f32], n: usize, ys: &mut [f32],
+                 sxs: &mut Vec<f32>) {
         match self {
-            Linear::Packed(pl) => pl.matmul(xs, n, ys),
+            Linear::Packed(pl) => pl.matmul_in(xs, n, ys, sxs),
             Linear::Dense { w, out_dim, in_dim } => {
                 dense_matmul(w, *out_dim, *in_dim, xs, n, ys)
             }
@@ -571,7 +575,7 @@ impl ModelCore {
         let p0 = pos;
         let Scratch {
             p_h, p_hn, p_q, p_ctx, p_attn, p_gate, p_up, p_down, p_k,
-            p_v, ..
+            p_v, mm_sx, ..
         } = sc;
         p_h.resize(n * d, 0.0);
         p_hn.resize(n * d, 0.0);
@@ -594,14 +598,17 @@ impl ModelCore {
                 rms_norm(&p_h[t * d..(t + 1) * d], &blk.attn_norm, eps,
                          &mut p_hn[t * d..(t + 1) * d]);
             }
-            blk.lins[0].matmul(&p_hn[..n * d], n, &mut p_q[..n * d]);
-            blk.lins[1].matmul(&p_hn[..n * d], n, &mut p_k[..n * d]);
+            blk.lins[0].matmul_in(&p_hn[..n * d], n, &mut p_q[..n * d],
+                                  mm_sx);
+            blk.lins[1].matmul_in(&p_hn[..n * d], n, &mut p_k[..n * d],
+                                  mm_sx);
             for t in 0..n {
                 rope_apply(&mut p_k[t * d..(t + 1) * d], p0 + t, nh, hd,
                            &self.rope_cos, &self.rope_sin);
             }
             pool.scatter_k(lease, bi, p0, &p_k[..n * d]);
-            blk.lins[2].matmul(&p_hn[..n * d], n, &mut p_v[..n * d]);
+            blk.lins[2].matmul_in(&p_hn[..n * d], n, &mut p_v[..n * d],
+                                  mm_sx);
             pool.scatter_v(lease, bi, p0, &p_v[..n * d]);
             for t in 0..n {
                 rope_apply(&mut p_q[t * d..(t + 1) * d], p0 + t, nh, hd,
@@ -634,7 +641,8 @@ impl ModelCore {
                     }
                 }
             });
-            blk.lins[3].matmul(&p_ctx[..n * d], n, &mut p_attn[..n * d]);
+            blk.lins[3].matmul_in(&p_ctx[..n * d], n,
+                                  &mut p_attn[..n * d], mm_sx);
             for i in 0..n * d {
                 p_h[i] += p_attn[i];
             }
@@ -642,14 +650,17 @@ impl ModelCore {
                 rms_norm(&p_h[t * d..(t + 1) * d], &blk.mlp_norm, eps,
                          &mut p_hn[t * d..(t + 1) * d]);
             }
-            blk.lins[4].matmul(&p_hn[..n * d], n, &mut p_gate[..n * it]);
-            blk.lins[5].matmul(&p_hn[..n * d], n, &mut p_up[..n * it]);
+            blk.lins[4].matmul_in(&p_hn[..n * d], n,
+                                  &mut p_gate[..n * it], mm_sx);
+            blk.lins[5].matmul_in(&p_hn[..n * d], n, &mut p_up[..n * it],
+                                  mm_sx);
             for i in 0..n * it {
                 let gx = p_gate[i];
                 let silu = gx / (1.0 + (-gx).exp());
                 p_gate[i] = silu * p_up[i];
             }
-            blk.lins[6].matmul(&p_gate[..n * it], n, &mut p_down[..n * d]);
+            blk.lins[6].matmul_in(&p_gate[..n * it], n,
+                                  &mut p_down[..n * d], mm_sx);
             for i in 0..n * d {
                 p_h[i] += p_down[i];
             }

@@ -39,18 +39,21 @@
 //!
 //! §Perf: 2-bit matvec beats f32 dense single-threaded because it is
 //! memory-bound and moves 16x fewer weight bytes (Table 10's mechanism).
-//! The 2/4-bit kernels unpack each packed word into a fixed-width stack
-//! buffer (16 resp. 8 lanes) before the FMA pass - a constant-shape
-//! inner loop the compiler autovectorizes, bit-exact with the previous
-//! inline-shift form (same FMA lanes and order). Row-chunk scaling now
-//! extends to smaller layers than under the spawn-per-call design: pool
-//! dispatch costs ~1-2us vs ~tens of us per scoped spawn, so
-//! `PAR_MIN_WORK` dropped 8x. Current numbers: run
-//! `eqat bench inference` and read the table / `runs/bench.json`.
+//! The 2/4-bit unpack+FMA inner loops and the dense dot microkernel live
+//! in `util::simd` as explicitly vectorized primitives (AVX2/NEON behind
+//! runtime detection, `EQAT_SIMD` to override) whose vector paths are
+//! **bit-identical** to their scalar references - the fixed 16/8-lane
+//! word layout maps one-to-one onto SIMD lanes, so vectorizing changes
+//! which instructions run, never which bits come out. Row-chunk scaling
+//! extends to small layers because pool dispatch costs ~1-2us (so
+//! `PAR_MIN_WORK` sits low). Current numbers: run
+//! `eqat bench inference` and read the table / `runs/bench.json`
+//! (`kernels` section for scalar-vs-SIMD side by side).
 
 use anyhow::{bail, Result};
 
 use crate::config::QuantScheme;
+use crate::util::simd;
 use crate::util::threads;
 
 /// Below this many multiply-accumulates per call, a kernel stays serial.
@@ -195,6 +198,16 @@ impl PackedLinear {
     /// `matvec` exactly, so results are bit-identical to per-token matvec
     /// calls (tested).
     pub fn matmul(&self, xs: &[f32], n_tokens: usize, ys: &mut [f32]) {
+        let mut sxs = Vec::new();
+        self.matmul_in(xs, n_tokens, ys, &mut sxs);
+    }
+
+    /// `matmul` with a caller-provided group-sum scratch buffer (the
+    /// `matvec_in` analog): steady-state prefill/eval reuses one buffer
+    /// across calls/layers, so the batched decode+prefill path does zero
+    /// heap allocation per call.
+    pub fn matmul_in(&self, xs: &[f32], n_tokens: usize, ys: &mut [f32],
+                     sxs: &mut Vec<f32>) {
         debug_assert_eq!(xs.len(), n_tokens * self.in_dim);
         debug_assert_eq!(ys.len(), n_tokens * self.out_dim);
         if n_tokens == 0 {
@@ -204,7 +217,7 @@ impl PackedLinear {
         let gpr = self.groups_per_row();
         let d = self.in_dim;
         // per-token group sums, same accumulation order as matvec's
-        let mut sxs = vec![0f32; n_tokens * gpr];
+        sxs.resize(n_tokens * gpr, 0.0);
         for t in 0..n_tokens {
             let x = &xs[t * d..(t + 1) * d];
             let st = &mut sxs[t * gpr..(t + 1) * gpr];
@@ -217,7 +230,7 @@ impl PackedLinear {
         } else {
             threads::chunk_len(n_tokens)
         };
-        let sxr: &[f32] = &sxs;
+        let sxr: &[f32] = &sxs[..];
         threads::par_chunks_mut(ys, tpc * self.out_dim, |ci, yc| {
             let t0 = ci * tpc;
             let nt = yc.len() / self.out_dim;
@@ -314,22 +327,8 @@ impl PackedLinear {
     #[inline]
     fn unpack_group(&self, gw: &[u32], qb: &mut [f32]) {
         match self.scheme.bits {
-            2 => {
-                for (wi, &w) in gw.iter().enumerate() {
-                    let qw = &mut qb[wi * 16..(wi + 1) * 16];
-                    for (j, qv) in qw.iter_mut().enumerate() {
-                        *qv = ((w >> (2 * j)) & 3) as f32;
-                    }
-                }
-            }
-            4 => {
-                for (wi, &w) in gw.iter().enumerate() {
-                    let qw = &mut qb[wi * 8..(wi + 1) * 8];
-                    for (j, qv) in qw.iter_mut().enumerate() {
-                        *qv = ((w >> (4 * j)) & 15) as f32;
-                    }
-                }
-            }
+            2 => simd::unpack_b2(gw, qb),
+            4 => simd::unpack_b4(gw, qb),
             _ => {
                 let bits = self.scheme.bits as usize;
                 let mask = (1u64 << bits) - 1;
@@ -356,47 +355,20 @@ impl PackedLinear {
         let gpr = self.groups_per_row();
         let wpg = g * 2 / 32; // words per group
         let wpr = self.words_per_row();
-        // §Perf: SIMD-width-aware unpack. Each u32 word carries 16 2-bit
-        // lanes; unpacking them into a fixed [f32; 16] stack buffer with
-        // a constant-shape loop lets the compiler autovectorize both the
-        // unpack (shift/mask) and the FMA pass. The 4 independent
-        // accumulators keep the exact lane order of the previous
-        // inline-shift form (and of `matmul_tokens_b2`), so results stay
-        // bit-identical with both.
-        let mut qb = [0f32; 16];
+        // Unpack+FMA lives in `util::simd::group_dot_packed_b2`: each u32
+        // word carries 16 2-bit lanes that map one-to-one onto vector
+        // lanes (AVX2/NEON when detected, scalar reference otherwise),
+        // with the 4-accumulator lane order shared by `matmul_tokens_b2`
+        // pinned bit-identical across every ISA.
         for (j, yr) in y.iter_mut().enumerate() {
             let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
-                let xs = &x[gi * g..(gi + 1) * g];
-                let (mut d0, mut d1, mut d2, mut d3) =
-                    (0f32, 0f32, 0f32, 0f32);
-                for (wi, &w) in
-                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
-                {
-                    for (l, qv) in qb.iter_mut().enumerate() {
-                        *qv = ((w >> (2 * l)) & 3) as f32;
-                    }
-                    let xb = &xs[wi * 16..(wi + 1) * 16];
-                    d0 += qb[0] * xb[0]
-                        + qb[4] * xb[4]
-                        + qb[8] * xb[8]
-                        + qb[12] * xb[12];
-                    d1 += qb[1] * xb[1]
-                        + qb[5] * xb[5]
-                        + qb[9] * xb[9]
-                        + qb[13] * xb[13];
-                    d2 += qb[2] * xb[2]
-                        + qb[6] * xb[6]
-                        + qb[10] * xb[10]
-                        + qb[14] * xb[14];
-                    d3 += qb[3] * xb[3]
-                        + qb[7] * xb[7]
-                        + qb[11] * xb[11]
-                        + qb[15] * xb[15];
-                }
-                let dot = (d0 + d1) + (d2 + d3);
+                let dot = simd::group_dot_packed_b2(
+                    &row[gi * wpg..(gi + 1) * wpg],
+                    &x[gi * g..(gi + 1) * g],
+                );
                 let s = self.scales[r * gpr + gi];
                 let z = self.zeros[r * gpr + gi];
                 acc += s * (dot - z * sx[gi]);
@@ -411,36 +383,18 @@ impl PackedLinear {
         let gpr = self.groups_per_row();
         let wpg = g * 4 / 32;
         let wpr = self.words_per_row();
-        // §Perf: SIMD-width-aware unpack, 8 4-bit lanes per word into a
-        // fixed [f32; 8] stack buffer (see `matvec_rows_b2`); lane order
-        // matches the previous inline-shift form and
-        // `matmul_tokens_b4` - bit-identical results.
-        let mut qb = [0f32; 8];
+        // Unpack+FMA lives in `util::simd::group_dot_packed_b4`: 8 4-bit
+        // lanes per word, even/odd accumulator pair matching
+        // `matmul_tokens_b4`, bit-identical on every ISA.
         for (j, yr) in y.iter_mut().enumerate() {
             let r = r0 + j;
             let row = &self.words[r * wpr..(r + 1) * wpr];
             let mut acc = 0f32;
             for gi in 0..gpr {
-                let mut dot = 0f32;
-                let xs = &x[gi * g..(gi + 1) * g];
-                let mut dot2 = 0f32;
-                for (wi, &w) in
-                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
-                {
-                    for (l, qv) in qb.iter_mut().enumerate() {
-                        *qv = ((w >> (4 * l)) & 15) as f32;
-                    }
-                    let xb = &xs[wi * 8..(wi + 1) * 8];
-                    dot += qb[0] * xb[0]
-                        + qb[2] * xb[2]
-                        + qb[4] * xb[4]
-                        + qb[6] * xb[6];
-                    dot2 += qb[1] * xb[1]
-                        + qb[3] * xb[3]
-                        + qb[5] * xb[5]
-                        + qb[7] * xb[7];
-                }
-                dot += dot2;
+                let dot = simd::group_dot_packed_b4(
+                    &row[gi * wpg..(gi + 1) * wpg],
+                    &x[gi * g..(gi + 1) * g],
+                );
                 let s = self.scales[r * gpr + gi];
                 let z = self.zeros[r * gpr + gi];
                 acc += s * (dot - z * sx[gi]);
@@ -504,41 +458,13 @@ impl PackedLinear {
         for r in 0..od {
             let row = &self.words[r * wpr..(r + 1) * wpr];
             for gi in 0..gpr {
-                for (wi, &w) in
-                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
-                {
-                    let qb = &mut qbuf[wi * 16..(wi + 1) * 16];
-                    for (j, qv) in qb.iter_mut().enumerate() {
-                        *qv = ((w >> (2 * j)) & 3) as f32;
-                    }
-                }
+                simd::unpack_b2(&row[gi * wpg..(gi + 1) * wpg],
+                                &mut qbuf);
                 let s = self.scales[r * gpr + gi];
                 let z = self.zeros[r * gpr + gi];
                 for t in 0..n_tokens {
                     let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
-                    let (mut d0, mut d1, mut d2, mut d3) =
-                        (0f32, 0f32, 0f32, 0f32);
-                    for wi in 0..wpg {
-                        let qb = &qbuf[wi * 16..(wi + 1) * 16];
-                        let xb = &xg[wi * 16..(wi + 1) * 16];
-                        d0 += qb[0] * xb[0]
-                            + qb[4] * xb[4]
-                            + qb[8] * xb[8]
-                            + qb[12] * xb[12];
-                        d1 += qb[1] * xb[1]
-                            + qb[5] * xb[5]
-                            + qb[9] * xb[9]
-                            + qb[13] * xb[13];
-                        d2 += qb[2] * xb[2]
-                            + qb[6] * xb[6]
-                            + qb[10] * xb[10]
-                            + qb[14] * xb[14];
-                        d3 += qb[3] * xb[3]
-                            + qb[7] * xb[7]
-                            + qb[11] * xb[11]
-                            + qb[15] * xb[15];
-                    }
-                    let dot = (d0 + d1) + (d2 + d3);
+                    let dot = simd::group_dot_b2(&qbuf, xg);
                     ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
                 }
             }
@@ -560,33 +486,13 @@ impl PackedLinear {
         for r in 0..od {
             let row = &self.words[r * wpr..(r + 1) * wpr];
             for gi in 0..gpr {
-                for (wi, &w) in
-                    row[gi * wpg..(gi + 1) * wpg].iter().enumerate()
-                {
-                    let qb = &mut qbuf[wi * 8..(wi + 1) * 8];
-                    for (j, qv) in qb.iter_mut().enumerate() {
-                        *qv = ((w >> (4 * j)) & 15) as f32;
-                    }
-                }
+                simd::unpack_b4(&row[gi * wpg..(gi + 1) * wpg],
+                                &mut qbuf);
                 let s = self.scales[r * gpr + gi];
                 let z = self.zeros[r * gpr + gi];
                 for t in 0..n_tokens {
                     let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
-                    let mut dot = 0f32;
-                    let mut dot2 = 0f32;
-                    for wi in 0..wpg {
-                        let qb = &qbuf[wi * 8..(wi + 1) * 8];
-                        let xb = &xg[wi * 8..(wi + 1) * 8];
-                        dot += qb[0] * xb[0]
-                            + qb[2] * xb[2]
-                            + qb[4] * xb[4]
-                            + qb[6] * xb[6];
-                        dot2 += qb[1] * xb[1]
-                            + qb[3] * xb[3]
-                            + qb[5] * xb[5]
-                            + qb[7] * xb[7];
-                    }
-                    dot += dot2;
+                    let dot = simd::group_dot_b4(&qbuf, xg);
                     ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
                 }
             }
@@ -651,42 +557,8 @@ const MAX_STACK_GROUP: usize = 256;
 #[inline]
 fn group_dot(bits: u32, qb: &[f32], xg: &[f32]) -> f32 {
     match bits {
-        2 => {
-            let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
-            for (qw, xw) in qb.chunks_exact(16).zip(xg.chunks_exact(16)) {
-                d0 += qw[0] * xw[0]
-                    + qw[4] * xw[4]
-                    + qw[8] * xw[8]
-                    + qw[12] * xw[12];
-                d1 += qw[1] * xw[1]
-                    + qw[5] * xw[5]
-                    + qw[9] * xw[9]
-                    + qw[13] * xw[13];
-                d2 += qw[2] * xw[2]
-                    + qw[6] * xw[6]
-                    + qw[10] * xw[10]
-                    + qw[14] * xw[14];
-                d3 += qw[3] * xw[3]
-                    + qw[7] * xw[7]
-                    + qw[11] * xw[11]
-                    + qw[15] * xw[15];
-            }
-            (d0 + d1) + (d2 + d3)
-        }
-        4 => {
-            let (mut dot, mut dot2) = (0f32, 0f32);
-            for (qw, xw) in qb.chunks_exact(8).zip(xg.chunks_exact(8)) {
-                dot += qw[0] * xw[0]
-                    + qw[2] * xw[2]
-                    + qw[4] * xw[4]
-                    + qw[6] * xw[6];
-                dot2 += qw[1] * xw[1]
-                    + qw[3] * xw[3]
-                    + qw[5] * xw[5]
-                    + qw[7] * xw[7];
-            }
-            dot + dot2
-        }
+        2 => simd::group_dot_b2(qb, xg),
+        4 => simd::group_dot_b4(qb, xg),
         _ => {
             let mut dot = 0f32;
             for (qv, xv) in qb.iter().zip(xg) {
@@ -700,7 +572,11 @@ fn group_dot(bits: u32, qb: &[f32], xg: &[f32]) -> f32 {
 /// Dense f32 matvec baseline (the "FP16" comparator of Table 10; CPU has no
 /// native f16 math - f32 moves 2x the bytes of f16, so reported speedups
 /// are conservative vs the paper's). Row-chunked across threads for large
-/// layers, like the packed kernels.
+/// layers, like the packed kernels. The dot runs on the `util::simd`
+/// microkernel: rows are processed in register-blocked pairs sharing the
+/// activation loads (`dot8_x2`), each row's bits equal to a standalone
+/// [`simd::dot8`] - so pairing parity and worker-chunk boundaries never
+/// change results.
 pub fn dense_matvec(w: &[f32], out_dim: usize, in_dim: usize, x: &[f32],
                     y: &mut [f32]) {
     debug_assert_eq!(w.len(), out_dim * in_dim);
@@ -712,13 +588,21 @@ pub fn dense_matvec(w: &[f32], out_dim: usize, in_dim: usize, x: &[f32],
     };
     threads::par_chunks_mut(y, rows, |ci, yc| {
         let r0 = ci * rows;
-        for (j, yr) in yc.iter_mut().enumerate() {
-            let row = &w[(r0 + j) * in_dim..(r0 + j + 1) * in_dim];
-            let mut acc = 0f32;
-            for k in 0..in_dim {
-                acc += row[k] * x[k];
-            }
-            *yr = acc;
+        let mut j = 0;
+        while j + 1 < yc.len() {
+            let r = r0 + j;
+            let (a, b) = simd::dot8_x2(
+                &w[r * in_dim..(r + 1) * in_dim],
+                &w[(r + 1) * in_dim..(r + 2) * in_dim],
+                x,
+            );
+            yc[j] = a;
+            yc[j + 1] = b;
+            j += 2;
+        }
+        if j < yc.len() {
+            let r = r0 + j;
+            yc[j] = simd::dot8(&w[r * in_dim..(r + 1) * in_dim], x);
         }
     });
 }
@@ -745,13 +629,19 @@ pub fn dense_matmul(w: &[f32], out_dim: usize, in_dim: usize, xs: &[f32],
         for tl in 0..nt {
             let x = &xs[(t0 + tl) * in_dim..(t0 + tl + 1) * in_dim];
             let yt = &mut yc[tl * out_dim..(tl + 1) * out_dim];
-            for (r, yr) in yt.iter_mut().enumerate() {
-                let row = &w[r * in_dim..(r + 1) * in_dim];
-                let mut acc = 0f32;
-                for k in 0..in_dim {
-                    acc += row[k] * x[k];
-                }
-                *yr = acc;
+            let mut r = 0;
+            while r + 1 < out_dim {
+                let (a, b) = simd::dot8_x2(
+                    &w[r * in_dim..(r + 1) * in_dim],
+                    &w[(r + 1) * in_dim..(r + 2) * in_dim],
+                    x,
+                );
+                yt[r] = a;
+                yt[r + 1] = b;
+                r += 2;
+            }
+            if r < out_dim {
+                yt[r] = simd::dot8(&w[r * in_dim..(r + 1) * in_dim], x);
             }
         }
     });
@@ -782,15 +672,27 @@ pub fn dense_matmul_rows(w: &[f32], out_dim: usize, in_dim: usize,
     threads::par_chunks_mut(&mut tmp[..out_dim * n_tokens],
                             rpc * n_tokens, |ci, tc| {
         let r0 = ci * rpc;
-        for (rl, tr) in tc.chunks_mut(n_tokens).enumerate() {
-            let row = &w[(r0 + rl) * in_dim..(r0 + rl + 1) * in_dim];
-            for (t, yv) in tr.iter_mut().enumerate() {
-                let x = &xs[t * in_dim..(t + 1) * in_dim];
-                let mut acc = 0f32;
-                for k in 0..in_dim {
-                    acc += row[k] * x[k];
+        // row pairs share each token's activation loads (dot8_x2); a
+        // lone trailing row in the chunk falls back to dot8 - per-row
+        // bits are identical either way
+        for (pi, pr) in tc.chunks_mut(2 * n_tokens).enumerate() {
+            let r = r0 + 2 * pi;
+            if pr.len() == 2 * n_tokens {
+                let (tr0, tr1) = pr.split_at_mut(n_tokens);
+                let row0 = &w[r * in_dim..(r + 1) * in_dim];
+                let row1 = &w[(r + 1) * in_dim..(r + 2) * in_dim];
+                for t in 0..n_tokens {
+                    let x = &xs[t * in_dim..(t + 1) * in_dim];
+                    let (a, b) = simd::dot8_x2(row0, row1, x);
+                    tr0[t] = a;
+                    tr1[t] = b;
                 }
-                *yv = acc;
+            } else {
+                let row = &w[r * in_dim..(r + 1) * in_dim];
+                for (t, yv) in pr.iter_mut().enumerate() {
+                    let x = &xs[t * in_dim..(t + 1) * in_dim];
+                    *yv = simd::dot8(row, x);
+                }
             }
         }
     });
@@ -1001,6 +903,135 @@ mod tests {
             for rr in 0..out_d {
                 assert_eq!(ys[t * out_d + rr].to_bits(), y[rr].to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn simd_packed_kernels_match_scalar_bit_for_bit() {
+        use crate::util::simd::{detected, with_isa, Isa};
+        // bits x group (incl. single-word groups) x odd out_d x n_tok;
+        // in_d = 5 groups so chunk boundaries land off vector widths
+        let shapes: &[(u32, usize)] = &[
+            (2, 16), (2, 32), (2, 64),
+            (3, 32), (3, 64),
+            (4, 8), (4, 16), (4, 32),
+        ];
+        for &(bits, g) in shapes {
+            for out_d in [7usize, 24, 33] {
+                let in_d = g * 5;
+                let (pl, _) =
+                    setup(bits, g, out_d, in_d, 700 + bits as u64);
+                let mut r = Rng::new(701);
+                for n_tok in [1usize, 3, 8] {
+                    let mut xs = vec![0f32; n_tok * in_d];
+                    r.fill_normal(&mut xs, 0.0, 1.0);
+                    let run = || {
+                        let mut y = vec![0f32; out_d];
+                        pl.matvec(&xs[..in_d], &mut y);
+                        let mut ys = vec![0f32; n_tok * out_d];
+                        pl.matmul(&xs, n_tok, &mut ys);
+                        let mut yr = vec![0f32; n_tok * out_d];
+                        let (mut tmp, mut sx) = (Vec::new(), Vec::new());
+                        pl.matmul_rows(&xs, n_tok, &mut yr, &mut tmp,
+                                       &mut sx);
+                        (y, ys, yr)
+                    };
+                    let scalar = with_isa(Isa::Scalar, run);
+                    let vector = with_isa(detected(), run);
+                    assert!(
+                        scalar.0.iter().zip(&vector.0)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                            && scalar.1.iter().zip(&vector.1)
+                                .all(|(a, b)| a.to_bits() == b.to_bits())
+                            && scalar.2.iter().zip(&vector.2)
+                                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "bits={bits} g={g} out_d={out_d} n_tok={n_tok}: \
+                         SIMD diverged from scalar"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dense_kernels_match_scalar_bit_for_bit() {
+        use crate::util::simd::{detected, with_isa, Isa};
+        // in_dim off the 8-lane width (tail-only, tail+body, odd rows)
+        let mut r = Rng::new(710);
+        for in_d in [1usize, 7, 8, 9, 100] {
+            for out_d in [1usize, 5, 16] {
+                for n_tok in [1usize, 3] {
+                    let mut w = vec![0f32; out_d * in_d];
+                    r.fill_normal(&mut w, 0.0, 0.5);
+                    let mut xs = vec![0f32; n_tok * in_d];
+                    r.fill_normal(&mut xs, 0.0, 1.0);
+                    let run = || {
+                        let mut y = vec![0f32; out_d];
+                        dense_matvec(&w, out_d, in_d, &xs[..in_d],
+                                     &mut y);
+                        let mut ys = vec![0f32; n_tok * out_d];
+                        dense_matmul(&w, out_d, in_d, &xs, n_tok,
+                                     &mut ys);
+                        let mut yr = vec![0f32; n_tok * out_d];
+                        let mut tmp = Vec::new();
+                        dense_matmul_rows(&w, out_d, in_d, &xs, n_tok,
+                                          &mut yr, &mut tmp);
+                        (y, ys, yr)
+                    };
+                    let scalar = with_isa(Isa::Scalar, run);
+                    let vector = with_isa(detected(), run);
+                    assert_eq!(
+                        scalar.0.iter().map(|v| v.to_bits())
+                            .collect::<Vec<_>>(),
+                        vector.0.iter().map(|v| v.to_bits())
+                            .collect::<Vec<_>>(),
+                        "dense_matvec in_d={in_d} out_d={out_d}"
+                    );
+                    assert!(
+                        scalar.1.iter().zip(&vector.1)
+                            .all(|(a, b)| a.to_bits() == b.to_bits())
+                            && scalar.2.iter().zip(&vector.2)
+                                .all(|(a, b)| a.to_bits() == b.to_bits()),
+                        "dense batched in_d={in_d} out_d={out_d} \
+                         n_tok={n_tok}: SIMD diverged from scalar"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_threaded_kernels_match_scalar_bit_for_bit() {
+        use crate::util::simd::{detected, with_isa, Isa};
+        // big enough to clear PAR_MIN_WORK: the ISA sweep must commute
+        // with row/token chunking at every thread count
+        let (out_d, in_d) = (256, 1024);
+        let (pl, w_hat) = setup(2, 128, out_d, in_d, 720);
+        let n_tok = 3;
+        let mut r = Rng::new(721);
+        let mut xs = vec![0f32; n_tok * in_d];
+        r.fill_normal(&mut xs, 0.0, 1.0);
+        let run = |nt: usize, isa: Isa| {
+            with_threads(nt, || {
+                with_isa(isa, || {
+                    let mut y = vec![0f32; out_d];
+                    pl.matvec(&xs[..in_d], &mut y);
+                    let mut ys = vec![0f32; n_tok * out_d];
+                    pl.matmul(&xs, n_tok, &mut ys);
+                    let mut yd = vec![0f32; out_d];
+                    dense_matvec(&w_hat, out_d, in_d, &xs[..in_d],
+                                 &mut yd);
+                    (y, ys, yd)
+                })
+            })
+        };
+        let base = run(1, Isa::Scalar);
+        for nt in [1usize, 4, 7] {
+            let v = run(nt, detected());
+            assert!(
+                base == v,
+                "nt={nt}: SIMD+threads diverged from serial scalar"
+            );
         }
     }
 

@@ -9,14 +9,19 @@
 //! jnp.round); dequant-matmul gradients follow `dequant_matmul_grads_ref`.
 //! Everything is f32 like the lowered XLA graphs.
 //!
-//! Threading: the three matmul shapes parallelize over disjoint output-row
-//! chunks via the persistent worker pool in `util::threads` (same
-//! determinism guarantee as the inference kernels - each output element
-//! is produced by exactly one worker in a fixed order, so results are
-//! bit-identical across thread counts). A Block-AP epoch issues thousands
-//! of these matmul calls; pool dispatch costs ~1-2us each where the old
-//! scoped-thread design paid a spawn/join cycle per call.
+//! Threading: the three matmul shapes *and* the quantization kernels
+//! parallelize over disjoint output-row chunks via the persistent worker
+//! pool in `util::threads` (same determinism guarantee as the inference
+//! kernels - each output element is produced by exactly one worker in a
+//! fixed order, so results are bit-identical across thread counts). A
+//! Block-AP epoch issues thousands of these calls; pool dispatch costs
+//! ~1-2us each where the old scoped-thread design paid a spawn/join
+//! cycle per call. The inner loops run on the `util::simd` primitives
+//! (AVX2/NEON behind runtime detection, `EQAT_SIMD` to override), whose
+//! vector paths are bit-identical to their scalar references - so the
+//! train-side numerics are also invariant across ISAs.
 
+use crate::util::simd;
 use crate::util::threads;
 
 /// Below this many multiply-accumulates per call, kernels stay serial.
@@ -40,13 +45,19 @@ pub fn matmul_nt(x: &[f32], m: usize, k: usize, w: &[f32], n: usize,
         let r0 = ci * chunk;
         for (rl, yr) in yc.chunks_mut(n).enumerate() {
             let xr = &x[(r0 + rl) * k..(r0 + rl + 1) * k];
-            for (j, yv) in yr.iter_mut().enumerate() {
-                let wr = &w[j * k..(j + 1) * k];
-                let mut acc = 0f32;
-                for i in 0..k {
-                    acc += xr[i] * wr[i];
-                }
-                *yv = acc;
+            // output pairs share the activation-row loads (dot8_x2); a
+            // lone trailing output uses dot8 - identical bits per output
+            let mut j = 0;
+            while j + 1 < n {
+                let (a, b) = simd::dot8_x2(&w[j * k..(j + 1) * k],
+                                           &w[(j + 1) * k..(j + 2) * k],
+                                           xr);
+                yr[j] = a;
+                yr[j + 1] = b;
+                j += 2;
+            }
+            if j < n {
+                yr[j] = simd::dot8(&w[j * k..(j + 1) * k], xr);
             }
         }
     });
@@ -69,10 +80,7 @@ pub fn matmul_nn(g: &[f32], m: usize, n: usize, w: &[f32], k: usize,
                 if gv == 0.0 {
                     continue;
                 }
-                let wr = &w[j * k..(j + 1) * k];
-                for i in 0..k {
-                    yr[i] += gv * wr[i];
-                }
+                simd::axpy(yr, gv, &w[j * k..(j + 1) * k]);
             }
         }
     });
@@ -96,10 +104,7 @@ pub fn matmul_tn(g: &[f32], m: usize, n: usize, x: &[f32], k: usize,
                 if gv == 0.0 {
                     continue;
                 }
-                let xr = &x[r * k..(r + 1) * k];
-                for i in 0..k {
-                    gr[i] += gv * xr[i];
-                }
+                simd::axpy(gr, gv, &x[r * k..(r + 1) * k]);
             }
         }
     });
@@ -381,107 +386,138 @@ pub fn masked_cross_entropy(logits: &[f32], m: usize, v: usize, y: &[i32],
 // Quantization kernels (spec: kernels/ref.py)
 // ---------------------------------------------------------------------------
 
+/// Rows per worker chunk for the row-parallel quant kernels: weight rows
+/// are independent, so Block-AP's gradient/forward passes chunk them
+/// across the pool with the same deterministic partition as the matmuls.
+fn quant_rows_per_chunk(n: usize, k: usize) -> usize {
+    if n * k < PAR_MIN_WORK {
+        n.max(1)
+    } else {
+        threads::chunk_len(n)
+    }
+}
+
 /// Fake-quant forward, mirroring `ref.fake_quant_ref`:
 /// W_hat = (clamp(round(W/s) + z, 0, qmax) - z) * s, group-wise over the
 /// `in` axis. Boundary hits (q == 0 or q == qmax) count as in-range.
+/// Row-parallel; element math in [`simd::fq_forward_group`].
 pub fn fake_quant(w: &[f32], n: usize, k: usize, s: &[f32], z: &[f32],
                   group: usize, qmax: f32, out: &mut [f32]) {
     let gpr = k / group;
-    for r in 0..n {
-        for gi in 0..gpr {
-            let sv = s[r * gpr + gi];
-            let zv = z[r * gpr + gi];
-            let base = r * k + gi * group;
-            for i in 0..group {
-                let t = (w[base + i] / sv).round_ties_even();
-                let qu = t + zv;
-                out[base + i] = if qu < 0.0 {
-                    -zv * sv
-                } else if qu > qmax {
-                    (qmax - zv) * sv
-                } else {
-                    t * sv
-                };
+    let rows = quant_rows_per_chunk(n, k);
+    threads::par_chunks_mut(out, rows * k, |ci, oc| {
+        let r0 = ci * rows;
+        for rl in 0..oc.len() / k {
+            let r = r0 + rl;
+            for gi in 0..gpr {
+                let base = r * k + gi * group;
+                let lb = rl * k + gi * group;
+                simd::fq_forward_group(
+                    &w[base..base + group],
+                    s[r * gpr + gi],
+                    z[r * gpr + gi],
+                    qmax,
+                    &mut oc[lb..lb + group],
+                );
             }
         }
-    }
+    });
 }
 
 /// Analytic STE gradients of [`fake_quant`] (paper Eqs. 3-5 with the
 /// corrected `-s` z-gradient factor; spec: `ref.fake_quant_grads_ref`).
 /// Accumulates into gw (n,k) and the group-reduced gs, gz (n, k/group).
+/// Rows are independent, so the three output buffers chunk across the
+/// pool in lockstep (`par_chunks3_mut`); per-group math and the 8-partial
+/// reduction contract live in [`simd::fq_grads_group`].
 #[allow(clippy::too_many_arguments)]
 pub fn fake_quant_grads(w: &[f32], n: usize, k: usize, s: &[f32],
                         z: &[f32], group: usize, qmax: f32, gout: &[f32],
                         gw: &mut [f32], gs: &mut [f32], gz: &mut [f32]) {
     let gpr = k / group;
-    for r in 0..n {
-        for gi in 0..gpr {
-            let sv = s[r * gpr + gi];
-            let zv = z[r * gpr + gi];
-            let base = r * k + gi * group;
-            let mut gs_acc = 0f32;
-            let mut gz_acc = 0f32;
-            for i in 0..group {
-                let g = gout[base + i];
-                let t = (w[base + i] / sv).round_ties_even();
-                let qu = t + zv;
-                if qu < 0.0 {
-                    gs_acc += g * (-zv);
-                    gz_acc += g * (-sv);
-                } else if qu > qmax {
-                    gs_acc += g * (qmax - zv);
-                    gz_acc += g * (-sv);
-                } else {
-                    gw[base + i] += g;
-                    gs_acc += g * (t - w[base + i] / sv);
+    let rows = quant_rows_per_chunk(n, k);
+    threads::par_chunks3_mut(
+        gw, rows * k, gs, rows * gpr, gz, rows * gpr,
+        |ci, gwc, gsc, gzc| {
+            let r0 = ci * rows;
+            for rl in 0..gwc.len() / k {
+                let r = r0 + rl;
+                for gi in 0..gpr {
+                    let base = r * k + gi * group;
+                    let lb = rl * k + gi * group;
+                    let (gs_acc, gz_acc) = simd::fq_grads_group(
+                        &w[base..base + group],
+                        &gout[base..base + group],
+                        s[r * gpr + gi],
+                        z[r * gpr + gi],
+                        qmax,
+                        &mut gwc[lb..lb + group],
+                    );
+                    gsc[rl * gpr + gi] += gs_acc;
+                    gzc[rl * gpr + gi] += gz_acc;
                 }
             }
-            gs[r * gpr + gi] += gs_acc;
-            gz[r * gpr + gi] += gz_acc;
-        }
-    }
+        },
+    );
 }
 
 /// Dequantize integer weights: W_hat = (W_int - z) * s (Eq. 2).
+/// Row-parallel; element math in [`simd::dequant_group`].
 pub fn dequantize(wi: &[f32], n: usize, k: usize, s: &[f32], z: &[f32],
                   group: usize, out: &mut [f32]) {
     let gpr = k / group;
-    for r in 0..n {
-        for gi in 0..gpr {
-            let sv = s[r * gpr + gi];
-            let zv = z[r * gpr + gi];
-            let base = r * k + gi * group;
-            for i in 0..group {
-                out[base + i] = (wi[base + i] - zv) * sv;
+    let rows = quant_rows_per_chunk(n, k);
+    threads::par_chunks_mut(out, rows * k, |ci, oc| {
+        let r0 = ci * rows;
+        for rl in 0..oc.len() / k {
+            let r = r0 + rl;
+            for gi in 0..gpr {
+                let base = r * k + gi * group;
+                let lb = rl * k + gi * group;
+                simd::dequant_group(
+                    &wi[base..base + group],
+                    s[r * gpr + gi],
+                    z[r * gpr + gi],
+                    &mut oc[lb..lb + group],
+                );
             }
         }
-    }
+    });
 }
 
 /// Gradients of y = x @ dequant(wi, s, z)^T w.r.t. (s, z), given
 /// A = gout^T @ x (n, k) (spec: `ref.dequant_matmul_grads_ref`):
 ///   gs[n,g] = sum_{k in g} A[n,k] * (wi[n,k] - z[n,g])
 ///   gz[n,g] = -s[n,g] * sum_{k in g} A[n,k]
+/// Row-parallel over the two group-shaped outputs (`par_chunks2_mut`);
+/// the group reductions use the 8-partial contract of
+/// [`simd::dq_sz_group`].
 pub fn dequant_sz_grads(a: &[f32], wi: &[f32], n: usize, k: usize,
                         s: &[f32], z: &[f32], group: usize,
                         gs: &mut [f32], gz: &mut [f32]) {
     let gpr = k / group;
-    for r in 0..n {
-        for gi in 0..gpr {
-            let sv = s[r * gpr + gi];
-            let zv = z[r * gpr + gi];
-            let base = r * k + gi * group;
-            let mut acc_s = 0f32;
-            let mut acc_a = 0f32;
-            for i in 0..group {
-                acc_s += a[base + i] * (wi[base + i] - zv);
-                acc_a += a[base + i];
+    let rows = quant_rows_per_chunk(n, k);
+    threads::par_chunks2_mut(
+        gs, rows * gpr, gz, rows * gpr,
+        |ci, gsc, gzc| {
+            let r0 = ci * rows;
+            for rl in 0..gsc.len() / gpr {
+                let r = r0 + rl;
+                for gi in 0..gpr {
+                    let sv = s[r * gpr + gi];
+                    let zv = z[r * gpr + gi];
+                    let base = r * k + gi * group;
+                    let (acc_s, acc_a) = simd::dq_sz_group(
+                        &a[base..base + group],
+                        &wi[base..base + group],
+                        zv,
+                    );
+                    gsc[rl * gpr + gi] += acc_s;
+                    gzc[rl * gpr + gi] += -sv * acc_a;
+                }
             }
-            gs[r * gpr + gi] += acc_s;
-            gz[r * gpr + gi] += -sv * acc_a;
-        }
-    }
+        },
+    );
 }
 
 /// Dynamic min/max fake quant (naive-QAT baseline, LLM-QAT style; spec:
@@ -492,28 +528,36 @@ pub fn dequant_sz_grads(a: &[f32], wi: &[f32], n: usize, k: usize,
 pub fn dynamic_fake_quant(w: &[f32], n: usize, k: usize, group: usize,
                           qmax: f32, out: &mut [f32], mask: &mut [f32]) {
     let gpr = k / group;
-    for r in 0..n {
-        for gi in 0..gpr {
-            let base = r * k + gi * group;
-            let mut mn = 0f32;
-            let mut mx = 0f32;
-            for i in 0..group {
-                mn = mn.min(w[base + i]);
-                mx = mx.max(w[base + i]);
-            }
-            let s = ((mx - mn) / qmax).max(1e-8);
-            let z = (-mn / s).round_ties_even().clamp(0.0, qmax);
-            for i in 0..group {
-                let t = w[base + i] / s;
-                let r_ste = t.round_ties_even();
-                let qu = r_ste + z;
-                let q = qu.clamp(0.0, qmax);
-                out[base + i] = (q - z) * s;
-                mask[base + i] =
-                    if (0.0..=qmax).contains(&qu) { 1.0 } else { 0.0 };
+    let rows = quant_rows_per_chunk(n, k);
+    threads::par_chunks2_mut(out, rows * k, mask, rows * k, |ci, oc, mc| {
+        let r0 = ci * rows;
+        for rl in 0..oc.len() / k {
+            let r = r0 + rl;
+            for gi in 0..gpr {
+                let base = r * k + gi * group;
+                // the min/max scan stays a sequential scalar reduction
+                // (Rust f32::min/max NaN/-0.0 semantics pin the s/z bits
+                // on every ISA); only the element-wise pass vectorizes
+                let mut mn = 0f32;
+                let mut mx = 0f32;
+                for i in 0..group {
+                    mn = mn.min(w[base + i]);
+                    mx = mx.max(w[base + i]);
+                }
+                let s = ((mx - mn) / qmax).max(1e-8);
+                let z = (-mn / s).round_ties_even().clamp(0.0, qmax);
+                let lb = rl * k + gi * group;
+                simd::dfq_apply_group(
+                    &w[base..base + group],
+                    s,
+                    z,
+                    qmax,
+                    &mut oc[lb..lb + group],
+                    &mut mc[lb..lb + group],
+                );
             }
         }
-    }
+    });
 }
 
 #[cfg(test)]
@@ -892,5 +936,114 @@ mod tests {
         }
         // masked-out row gets zero gradient
         assert!(d[v..2 * v].iter().all(|&x| x == 0.0));
+    }
+
+    /// Run every quant kernel + the matmul trio once and return all
+    /// outputs concatenated, for bitwise ISA/thread-invariance checks.
+    fn run_all_kernels(n: usize, k: usize, group: usize) -> Vec<f32> {
+        let gpr = k / group;
+        let qmax = 3.0f32;
+        let mut rng = Rng::new(77);
+        let mut w = vec![0f32; n * k];
+        let mut wi = vec![0f32; n * k];
+        let mut gout = vec![0f32; n * k];
+        let mut a = vec![0f32; n * k];
+        let mut s = vec![0f32; n * gpr];
+        let mut z = vec![0f32; n * gpr];
+        rng.fill_normal(&mut w, 0.0, 0.5);
+        rng.fill_normal(&mut gout, 0.0, 1.0);
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        for v in wi.iter_mut() {
+            *v = rng.below(4) as f32;
+        }
+        for v in s.iter_mut() {
+            *v = 0.05 + 0.2 * rng.f32();
+        }
+        for v in z.iter_mut() {
+            *v = rng.below(4) as f32;
+        }
+
+        let mut all = Vec::new();
+        let mut out = vec![0f32; n * k];
+        fake_quant(&w, n, k, &s, &z, group, qmax, &mut out);
+        all.extend_from_slice(&out);
+
+        let mut gw = vec![0f32; n * k];
+        let mut gs = vec![0f32; n * gpr];
+        let mut gz = vec![0f32; n * gpr];
+        fake_quant_grads(&w, n, k, &s, &z, group, qmax, &gout,
+                         &mut gw, &mut gs, &mut gz);
+        all.extend_from_slice(&gw);
+        all.extend_from_slice(&gs);
+        all.extend_from_slice(&gz);
+
+        let mut dq = vec![0f32; n * k];
+        dequantize(&wi, n, k, &s, &z, group, &mut dq);
+        all.extend_from_slice(&dq);
+
+        let mut dgs = vec![0f32; n * gpr];
+        let mut dgz = vec![0f32; n * gpr];
+        dequant_sz_grads(&a, &wi, n, k, &s, &z, group, &mut dgs,
+                         &mut dgz);
+        all.extend_from_slice(&dgs);
+        all.extend_from_slice(&dgz);
+
+        let mut dyn_out = vec![0f32; n * k];
+        let mut dyn_mask = vec![0f32; n * k];
+        dynamic_fake_quant(&w, n, k, group, qmax, &mut dyn_out,
+                           &mut dyn_mask);
+        all.extend_from_slice(&dyn_out);
+        all.extend_from_slice(&dyn_mask);
+
+        let m = 3usize;
+        let mut x = vec![0f32; m * k];
+        let mut g = vec![0f32; m * n];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        let mut y = vec![0f32; m * n];
+        matmul_nt(&x, m, k, &w, n, &mut y);
+        all.extend_from_slice(&y);
+        let mut dx = vec![0f32; m * k];
+        matmul_nn(&g, m, n, &w, k, &mut dx);
+        all.extend_from_slice(&dx);
+        let mut gww = vec![0f32; n * k];
+        matmul_tn(&g, m, n, &x, k, &mut gww);
+        all.extend_from_slice(&gww);
+        all
+    }
+
+    #[test]
+    fn quant_kernels_simd_matches_scalar_bit_for_bit() {
+        use crate::util::simd::{detected, with_isa, Isa};
+        // odd k / group sizes exercise the sub-lane tail paths
+        for &(n, k, group) in
+            &[(4usize, 32usize, 8usize), (3, 24, 12), (5, 44, 11)]
+        {
+            let scalar =
+                with_isa(Isa::Scalar, || run_all_kernels(n, k, group));
+            let vec = with_isa(detected(), || run_all_kernels(n, k, group));
+            assert_eq!(scalar.len(), vec.len());
+            for (i, (a, b)) in scalar.iter().zip(&vec).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "({n},{k},{group}) elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_kernels_deterministic_across_threads() {
+        use crate::util::simd::{detected, with_isa};
+        // n*k above PAR_MIN_WORK so the row-parallel paths engage
+        let (n, k, group) = (128usize, 512usize, 64usize);
+        let run = |nt: usize| {
+            with_isa(detected(), || {
+                with_threads(nt, || run_all_kernels(n, k, group))
+            })
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        for (i, (a, b)) in t1.iter().zip(&t4).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i} diverged");
+        }
     }
 }

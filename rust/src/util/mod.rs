@@ -1,10 +1,12 @@
 //! Zero-dependency substrates: RNG, f16, JSON, stats, logging, threads,
-//! wall/manual clocks, and the seeded failpoint registry.
+//! SIMD kernel primitives, wall/manual clocks, and the seeded failpoint
+//! registry.
 pub mod clock;
 pub mod f16;
 pub mod failpoint;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod threads;

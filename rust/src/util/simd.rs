@@ -1,0 +1,1599 @@
+//! Explicit-SIMD kernel primitives behind runtime feature detection.
+//!
+//! Every hot inner loop in the repo (packed low-bit unpack+dot, dense
+//! GEMM dots, fake-quant forward/backward) funnels through the
+//! primitives here. Each primitive has a **scalar reference** - the
+//! bit-pinned specification - plus AVX2 (x86_64) and NEON (aarch64)
+//! paths selected at runtime by [`active`]:
+//!
+//! * `EQAT_SIMD=scalar|avx2|neon|auto` overrides detection (default
+//!   `auto`; requesting an ISA the CPU lacks falls back to scalar with
+//!   a warning). Tests/benches pin it in-process with [`with_isa`].
+//! * The vector paths are **bit-identical** to the scalar references on
+//!   every input: there is no opt-in gate and no tolerance. This is what
+//!   lets the serving determinism contract (solo == batched == any
+//!   thread count) extend to "== any ISA" for free.
+//!
+//! # The lane-order contract
+//!
+//! Bit-identity across ISAs is possible because every primitive fixes
+//! its FP operation DAG *per output element* and the vector code
+//! replicates that DAG lane-wise with separate IEEE mul and add
+//! instructions (**never** fused-multiply-add, which would change
+//! rounding):
+//!
+//! * the 2-bit packed dot keeps 4 accumulator lanes over the 16 values
+//!   of each u32 word (lane j sums values {j, j+4, j+8, j+12} as
+//!   `((a+b)+c)+d`), reduced `(d0+d1)+(d2+d3)` at group end;
+//! * the 4-bit packed dot keeps even/odd accumulator lanes over the 8
+//!   values of each word (`((p0+p2)+p4)+p6` resp. odd), reduced
+//!   `even+odd`;
+//! * dense dots ([`dot8`]) keep 8 partial lanes (`p[j] += a[8c+j] *
+//!   b[8c+j]` over chunks c), reduced `((p0+p1)+(p2+p3)) +
+//!   ((p4+p5)+(p6+p7))` by the shared [`reduce8`], then a sequential
+//!   scalar tail for `len % 8` leftovers;
+//! * group-reduced fake-quant gradients use the same 8-partial + tree +
+//!   tail shape; element-wise kernels (fake-quant forward, dequant,
+//!   axpy) are lane-parallel with a scalar tail, and branches become
+//!   compare+blend with the exact scalar branch semantics (NaN takes
+//!   the else-branch on both paths; clamp is two compares, not
+//!   min/max instructions, so `-0.0` survives like Rust's `clamp`).
+//!
+//! # Adding an ISA
+//!
+//! 1. Add a variant to [`Isa`], wire it into `auto_isa`/`parse`.
+//! 2. Add a `#[cfg(target_arch = ...)]` module implementing each
+//!    primitive with the documented lane DAG - separate mul/add only,
+//!    scalar tails shared with the reference via the `*_elem` helpers
+//!    and [`reduce8`].
+//! 3. Add the dispatch arms. The sweep tests in this module, `infer::
+//!    qlinear`, `runtime::native::ops`, and the integration suite then
+//!    pin the new paths bit-for-bit against the scalar references.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Instruction-set dispatch target for the kernel primitives.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// The bit-pinned reference path; always available.
+    Scalar,
+    /// x86_64 AVX2 (8-wide f32); requires runtime detection.
+    Avx2,
+    /// aarch64 NEON (4-wide f32); baseline on every aarch64.
+    Neon,
+}
+
+impl Isa {
+    fn to_u8(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Avx2 => 1,
+            Isa::Neon => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Isa {
+        match v {
+            1 => Isa::Avx2,
+            2 => Isa::Neon,
+            _ => Isa::Scalar,
+        }
+    }
+
+    /// Lower-case name, as accepted by `EQAT_SIMD`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// `u8::MAX` means "no override": fall back to env/auto detection.
+static OVERRIDE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Best ISA the current CPU supports.
+fn auto_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return if is_x86_feature_detected!("avx2") {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        };
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Isa::Neon;
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// The ISA selected by `EQAT_SIMD` / CPU detection (ignores any
+/// [`with_isa`] override). Resolved once per process.
+pub fn detected() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        let req = std::env::var("EQAT_SIMD").ok();
+        match req.as_deref() {
+            None | Some("auto") | Some("") => auto_isa(),
+            Some("scalar") => Isa::Scalar,
+            Some(want @ ("avx2" | "neon")) => {
+                let auto = auto_isa();
+                if auto.name() == want {
+                    auto
+                } else {
+                    crate::warn_!(
+                        "EQAT_SIMD={want} unavailable on this CPU; \
+                         using scalar");
+                    Isa::Scalar
+                }
+            }
+            Some(other) => {
+                crate::warn_!(
+                    "EQAT_SIMD={other} not recognized \
+                     (scalar|avx2|neon|auto); using auto");
+                auto_isa()
+            }
+        }
+    })
+}
+
+/// ISA used by the primitives right now ([`with_isa`] override, else
+/// [`detected`]).
+#[inline]
+pub fn active() -> Isa {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        u8::MAX => detected(),
+        v => Isa::from_u8(v),
+    }
+}
+
+/// Name of the active ISA (bench/snapshot reporting).
+pub fn isa_name() -> &'static str {
+    active().name()
+}
+
+/// Run `f` with the kernel ISA pinned to `isa`, restoring afterwards.
+/// Serialized by a global lock so concurrent callers (parallel test
+/// threads) don't clobber each other's override - safe to interleave
+/// with un-pinned work precisely because every ISA is bit-identical.
+pub fn with_isa<R>(isa: Isa, f: impl FnOnce() -> R) -> R {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    // restore on drop so a panic inside `f` cannot leak the override
+    // (declared after _g: restores before unlocking)
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(OVERRIDE.load(Ordering::Relaxed));
+    OVERRIDE.store(isa.to_u8(), Ordering::Relaxed);
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Shared scalar pieces (the contract both paths execute verbatim)
+// ---------------------------------------------------------------------------
+
+/// Fixed reduction tree over the 8 partial lanes of a dense dot.
+#[inline]
+fn reduce8(p: &[f32; 8]) -> f32 {
+    ((p[0] + p[1]) + (p[2] + p[3])) + ((p[4] + p[5]) + (p[6] + p[7]))
+}
+
+/// One fake-quant forward element; `lo_val = -z*s`, `hi_val =
+/// (qmax-z)*s` are hoisted by the caller (same IEEE results either way).
+#[inline]
+fn fq_elem(w: f32, sv: f32, zv: f32, qmax: f32, lo_val: f32, hi_val: f32)
+           -> f32 {
+    let t = (w / sv).round_ties_even();
+    let qu = t + zv;
+    if qu < 0.0 {
+        lo_val
+    } else if qu > qmax {
+        hi_val
+    } else {
+        t * sv
+    }
+}
+
+/// One fake-quant gradient element: returns `(cw, cs, cz)` - the
+/// contributions to the weight gradient and the group-reduced s/z
+/// gradients. Out-of-range elements contribute an explicit `cw = 0.0`
+/// (the caller adds it unconditionally), matching the vector paths'
+/// masked add bit-for-bit.
+#[inline]
+fn fq_grads_elem(w: f32, g: f32, sv: f32, zv: f32, qmax: f32)
+                 -> (f32, f32, f32) {
+    let d = w / sv;
+    let t = d.round_ties_even();
+    let qu = t + zv;
+    if qu < 0.0 {
+        (0.0, g * (-zv), g * (-sv))
+    } else if qu > qmax {
+        (0.0, g * (qmax - zv), g * (-sv))
+    } else {
+        (g, g * (t - d), 0.0)
+    }
+}
+
+/// One dynamic-fake-quant element: returns `(w_hat, ste_mask)`.
+#[inline]
+fn dfq_elem(w: f32, s: f32, z: f32, qmax: f32) -> (f32, f32) {
+    let t = w / s;
+    let r_ste = t.round_ties_even();
+    let qu = r_ste + z;
+    let q = qu.clamp(0.0, qmax);
+    let out = (q - z) * s;
+    let mask = if (0.0..=qmax).contains(&qu) { 1.0 } else { 0.0 };
+    (out, mask)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar references
+// ---------------------------------------------------------------------------
+
+fn dot8_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n8 = a.len() / 8 * 8;
+    let mut p = [0f32; 8];
+    let mut c = 0;
+    while c < n8 {
+        for j in 0..8 {
+            p[j] += a[c + j] * b[c + j];
+        }
+        c += 8;
+    }
+    let mut s = reduce8(&p);
+    for k in n8..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+fn group_dot_packed_b2_scalar(gw: &[u32], x: &[f32]) -> f32 {
+    let mut qb = [0f32; 16];
+    let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
+    for (wi, &w) in gw.iter().enumerate() {
+        for (l, qv) in qb.iter_mut().enumerate() {
+            *qv = ((w >> (2 * l)) & 3) as f32;
+        }
+        let xb = &x[wi * 16..(wi + 1) * 16];
+        d0 += qb[0] * xb[0]
+            + qb[4] * xb[4]
+            + qb[8] * xb[8]
+            + qb[12] * xb[12];
+        d1 += qb[1] * xb[1]
+            + qb[5] * xb[5]
+            + qb[9] * xb[9]
+            + qb[13] * xb[13];
+        d2 += qb[2] * xb[2]
+            + qb[6] * xb[6]
+            + qb[10] * xb[10]
+            + qb[14] * xb[14];
+        d3 += qb[3] * xb[3]
+            + qb[7] * xb[7]
+            + qb[11] * xb[11]
+            + qb[15] * xb[15];
+    }
+    (d0 + d1) + (d2 + d3)
+}
+
+fn group_dot_packed_b4_scalar(gw: &[u32], x: &[f32]) -> f32 {
+    let mut qb = [0f32; 8];
+    let (mut dot, mut dot2) = (0f32, 0f32);
+    for (wi, &w) in gw.iter().enumerate() {
+        for (l, qv) in qb.iter_mut().enumerate() {
+            *qv = ((w >> (4 * l)) & 15) as f32;
+        }
+        let xb = &x[wi * 8..(wi + 1) * 8];
+        dot += qb[0] * xb[0]
+            + qb[2] * xb[2]
+            + qb[4] * xb[4]
+            + qb[6] * xb[6];
+        dot2 += qb[1] * xb[1]
+            + qb[3] * xb[3]
+            + qb[5] * xb[5]
+            + qb[7] * xb[7];
+    }
+    dot + dot2
+}
+
+fn group_dot_b2_scalar(qb: &[f32], xg: &[f32]) -> f32 {
+    let (mut d0, mut d1, mut d2, mut d3) = (0f32, 0f32, 0f32, 0f32);
+    for (qw, xw) in qb.chunks_exact(16).zip(xg.chunks_exact(16)) {
+        d0 += qw[0] * xw[0]
+            + qw[4] * xw[4]
+            + qw[8] * xw[8]
+            + qw[12] * xw[12];
+        d1 += qw[1] * xw[1]
+            + qw[5] * xw[5]
+            + qw[9] * xw[9]
+            + qw[13] * xw[13];
+        d2 += qw[2] * xw[2]
+            + qw[6] * xw[6]
+            + qw[10] * xw[10]
+            + qw[14] * xw[14];
+        d3 += qw[3] * xw[3]
+            + qw[7] * xw[7]
+            + qw[11] * xw[11]
+            + qw[15] * xw[15];
+    }
+    (d0 + d1) + (d2 + d3)
+}
+
+fn group_dot_b4_scalar(qb: &[f32], xg: &[f32]) -> f32 {
+    let (mut dot, mut dot2) = (0f32, 0f32);
+    for (qw, xw) in qb.chunks_exact(8).zip(xg.chunks_exact(8)) {
+        dot += qw[0] * xw[0]
+            + qw[2] * xw[2]
+            + qw[4] * xw[4]
+            + qw[6] * xw[6];
+        dot2 += qw[1] * xw[1]
+            + qw[3] * xw[3]
+            + qw[5] * xw[5]
+            + qw[7] * xw[7];
+    }
+    dot + dot2
+}
+
+fn unpack_b2_scalar(gw: &[u32], qb: &mut [f32]) {
+    for (wi, &w) in gw.iter().enumerate() {
+        let qw = &mut qb[wi * 16..(wi + 1) * 16];
+        for (j, qv) in qw.iter_mut().enumerate() {
+            *qv = ((w >> (2 * j)) & 3) as f32;
+        }
+    }
+}
+
+fn unpack_b4_scalar(gw: &[u32], qb: &mut [f32]) {
+    for (wi, &w) in gw.iter().enumerate() {
+        let qw = &mut qb[wi * 8..(wi + 1) * 8];
+        for (j, qv) in qw.iter_mut().enumerate() {
+            *qv = ((w >> (4 * j)) & 15) as f32;
+        }
+    }
+}
+
+fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+fn fq_forward_group_scalar(w: &[f32], sv: f32, zv: f32, qmax: f32,
+                           out: &mut [f32]) {
+    let lo_val = -zv * sv;
+    let hi_val = (qmax - zv) * sv;
+    for (o, &wv) in out.iter_mut().zip(w) {
+        *o = fq_elem(wv, sv, zv, qmax, lo_val, hi_val);
+    }
+}
+
+fn fq_grads_group_scalar(w: &[f32], gout: &[f32], sv: f32, zv: f32,
+                         qmax: f32, gw: &mut [f32]) -> (f32, f32) {
+    let n8 = w.len() / 8 * 8;
+    let mut ps = [0f32; 8];
+    let mut pz = [0f32; 8];
+    let mut c = 0;
+    while c < n8 {
+        for j in 0..8 {
+            let (cw, cs, cz) =
+                fq_grads_elem(w[c + j], gout[c + j], sv, zv, qmax);
+            gw[c + j] += cw;
+            ps[j] += cs;
+            pz[j] += cz;
+        }
+        c += 8;
+    }
+    let mut ss = reduce8(&ps);
+    let mut sz = reduce8(&pz);
+    for i in n8..w.len() {
+        let (cw, cs, cz) = fq_grads_elem(w[i], gout[i], sv, zv, qmax);
+        gw[i] += cw;
+        ss += cs;
+        sz += cz;
+    }
+    (ss, sz)
+}
+
+fn dequant_group_scalar(wi: &[f32], sv: f32, zv: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(wi) {
+        *o = (v - zv) * sv;
+    }
+}
+
+fn dq_sz_group_scalar(a: &[f32], wi: &[f32], zv: f32) -> (f32, f32) {
+    let n8 = a.len() / 8 * 8;
+    let mut ps = [0f32; 8];
+    let mut pa = [0f32; 8];
+    let mut c = 0;
+    while c < n8 {
+        for j in 0..8 {
+            ps[j] += a[c + j] * (wi[c + j] - zv);
+            pa[j] += a[c + j];
+        }
+        c += 8;
+    }
+    let mut ss = reduce8(&ps);
+    let mut sa = reduce8(&pa);
+    for i in n8..a.len() {
+        ss += a[i] * (wi[i] - zv);
+        sa += a[i];
+    }
+    (ss, sa)
+}
+
+fn dfq_apply_group_scalar(w: &[f32], s: f32, z: f32, qmax: f32,
+                          out: &mut [f32], mask: &mut [f32]) {
+    for i in 0..w.len() {
+        let (o, m) = dfq_elem(w[i], s, z, qmax);
+        out[i] = o;
+        mask[i] = m;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{dfq_elem, fq_elem, fq_grads_elem, reduce8};
+    use core::arch::x86_64::*;
+
+    const ROUND_EVEN: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn loadu(p: &[f32], i: usize) -> __m256 {
+        _mm256_loadu_ps(p.as_ptr().add(i))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn storeu(p: &mut [f32], i: usize, v: __m256) {
+        _mm256_storeu_ps(p.as_mut_ptr().add(i), v)
+    }
+
+    /// Sum the four 128-bit quarters of two 256-bit product vectors with
+    /// the 2-bit kernel's lane tree: lane j of the result is
+    /// `((p[j] + p[j+4]) + p[j+8]) + p[j+12]`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold16(p_lo: __m256, p_hi: __m256) -> __m128 {
+        _mm_add_ps(
+            _mm_add_ps(
+                _mm_add_ps(_mm256_castps256_ps128(p_lo),
+                           _mm256_extractf128_ps::<1>(p_lo)),
+                _mm256_castps256_ps128(p_hi),
+            ),
+            _mm256_extractf128_ps::<1>(p_hi),
+        )
+    }
+
+    /// Fold one 8-product vector into the 4-bit kernel's even/odd lanes:
+    /// lane 0 is `((p0+p2)+p4)+p6`, lane 1 is `((p1+p3)+p5)+p7`
+    /// (lanes 2/3 hold garbage and are never read).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold8(p: __m256) -> __m128 {
+        let lo = _mm256_castps256_ps128(p);
+        let hi = _mm256_extractf128_ps::<1>(p);
+        _mm_add_ps(
+            _mm_add_ps(_mm_add_ps(lo, _mm_movehl_ps(lo, lo)), hi),
+            _mm_movehl_ps(hi, hi),
+        )
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() / 8 * 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < n8 {
+            acc = _mm256_add_ps(acc,
+                                _mm256_mul_ps(loadu(a, c), loadu(b, c)));
+            c += 8;
+        }
+        let mut p = [0f32; 8];
+        storeu(&mut p, 0, acc);
+        let mut s = reduce8(&p);
+        for k in n8..a.len() {
+            s += a[k] * b[k];
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8_x2(a0: &[f32], a1: &[f32], b: &[f32])
+                          -> (f32, f32) {
+        let n8 = b.len() / 8 * 8;
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < n8 {
+            let vb = loadu(b, c);
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(loadu(a0, c), vb));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(loadu(a1, c), vb));
+            c += 8;
+        }
+        let mut p0 = [0f32; 8];
+        let mut p1 = [0f32; 8];
+        storeu(&mut p0, 0, acc0);
+        storeu(&mut p1, 0, acc1);
+        let mut s0 = reduce8(&p0);
+        let mut s1 = reduce8(&p1);
+        for k in n8..b.len() {
+            s0 += a0[k] * b[k];
+            s1 += a1[k] * b[k];
+        }
+        (s0, s1)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn group_dot_packed_b2(gw: &[u32], x: &[f32]) -> f32 {
+        let sh_lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+        let sh_hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+        let m3 = _mm256_set1_epi32(3);
+        let mut d = _mm_setzero_ps();
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = _mm256_set1_epi32(w as i32);
+            let q_lo = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh_lo), m3));
+            let q_hi = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh_hi), m3));
+            let p_lo = _mm256_mul_ps(q_lo, loadu(x, wi * 16));
+            let p_hi = _mm256_mul_ps(q_hi, loadu(x, wi * 16 + 8));
+            d = _mm_add_ps(d, fold16(p_lo, p_hi));
+        }
+        let mut o = [0f32; 4];
+        _mm_storeu_ps(o.as_mut_ptr(), d);
+        (o[0] + o[1]) + (o[2] + o[3])
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn group_dot_packed_b4(gw: &[u32], x: &[f32]) -> f32 {
+        let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let m15 = _mm256_set1_epi32(15);
+        let mut d = _mm_setzero_ps();
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = _mm256_set1_epi32(w as i32);
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m15));
+            let p = _mm256_mul_ps(q, loadu(x, wi * 8));
+            d = _mm_add_ps(d, fold8(p));
+        }
+        let mut o = [0f32; 4];
+        _mm_storeu_ps(o.as_mut_ptr(), d);
+        o[0] + o[1]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn group_dot_b2(qb: &[f32], xg: &[f32]) -> f32 {
+        let n = qb.len() / 16 * 16;
+        let mut d = _mm_setzero_ps();
+        let mut c = 0;
+        while c < n {
+            let p_lo = _mm256_mul_ps(loadu(qb, c), loadu(xg, c));
+            let p_hi =
+                _mm256_mul_ps(loadu(qb, c + 8), loadu(xg, c + 8));
+            d = _mm_add_ps(d, fold16(p_lo, p_hi));
+            c += 16;
+        }
+        let mut o = [0f32; 4];
+        _mm_storeu_ps(o.as_mut_ptr(), d);
+        (o[0] + o[1]) + (o[2] + o[3])
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn group_dot_b4(qb: &[f32], xg: &[f32]) -> f32 {
+        let n = qb.len() / 8 * 8;
+        let mut d = _mm_setzero_ps();
+        let mut c = 0;
+        while c < n {
+            let p = _mm256_mul_ps(loadu(qb, c), loadu(xg, c));
+            d = _mm_add_ps(d, fold8(p));
+            c += 8;
+        }
+        let mut o = [0f32; 4];
+        _mm_storeu_ps(o.as_mut_ptr(), d);
+        o[0] + o[1]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_b2(gw: &[u32], qb: &mut [f32]) {
+        let sh_lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+        let sh_hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+        let m3 = _mm256_set1_epi32(3);
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = _mm256_set1_epi32(w as i32);
+            storeu(qb, wi * 16,
+                   _mm256_cvtepi32_ps(_mm256_and_si256(
+                       _mm256_srlv_epi32(vw, sh_lo), m3)));
+            storeu(qb, wi * 16 + 8,
+                   _mm256_cvtepi32_ps(_mm256_and_si256(
+                       _mm256_srlv_epi32(vw, sh_hi), m3)));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_b4(gw: &[u32], qb: &mut [f32]) {
+        let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let m15 = _mm256_set1_epi32(15);
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = _mm256_set1_epi32(w as i32);
+            storeu(qb, wi * 8,
+                   _mm256_cvtepi32_ps(_mm256_and_si256(
+                       _mm256_srlv_epi32(vw, sh), m15)));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n8 = y.len() / 8 * 8;
+        let va = _mm256_set1_ps(a);
+        let mut c = 0;
+        while c < n8 {
+            let r = _mm256_add_ps(loadu(y, c),
+                                  _mm256_mul_ps(va, loadu(x, c)));
+            storeu(y, c, r);
+            c += 8;
+        }
+        for k in n8..y.len() {
+            y[k] += a * x[k];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fq_forward_group(w: &[f32], sv: f32, zv: f32,
+                                   qmax: f32, out: &mut [f32]) {
+        let lo_val = -zv * sv;
+        let hi_val = (qmax - zv) * sv;
+        let n8 = w.len() / 8 * 8;
+        let vs = _mm256_set1_ps(sv);
+        let vz = _mm256_set1_ps(zv);
+        let vqm = _mm256_set1_ps(qmax);
+        let z0 = _mm256_setzero_ps();
+        let vlo = _mm256_set1_ps(lo_val);
+        let vhi = _mm256_set1_ps(hi_val);
+        let mut c = 0;
+        while c < n8 {
+            let vt = _mm256_round_ps::<ROUND_EVEN>(
+                _mm256_div_ps(loadu(w, c), vs));
+            let vqu = _mm256_add_ps(vt, vz);
+            let mut res = _mm256_mul_ps(vt, vs);
+            res = _mm256_blendv_ps(
+                res, vlo, _mm256_cmp_ps::<_CMP_LT_OQ>(vqu, z0));
+            res = _mm256_blendv_ps(
+                res, vhi, _mm256_cmp_ps::<_CMP_GT_OQ>(vqu, vqm));
+            storeu(out, c, res);
+            c += 8;
+        }
+        for i in n8..w.len() {
+            out[i] = fq_elem(w[i], sv, zv, qmax, lo_val, hi_val);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fq_grads_group(w: &[f32], gout: &[f32], sv: f32,
+                                 zv: f32, qmax: f32, gw: &mut [f32])
+                                 -> (f32, f32) {
+        let n8 = w.len() / 8 * 8;
+        let vs = _mm256_set1_ps(sv);
+        let vz = _mm256_set1_ps(zv);
+        let vqm = _mm256_set1_ps(qmax);
+        let z0 = _mm256_setzero_ps();
+        let vnz = _mm256_set1_ps(-zv);
+        let vqz = _mm256_set1_ps(qmax - zv);
+        let vns = _mm256_set1_ps(-sv);
+        let mut aps = _mm256_setzero_ps();
+        let mut apz = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < n8 {
+            let vg = loadu(gout, c);
+            let vd = _mm256_div_ps(loadu(w, c), vs);
+            let vt = _mm256_round_ps::<ROUND_EVEN>(vd);
+            let vqu = _mm256_add_ps(vt, vz);
+            let m_lo = _mm256_cmp_ps::<_CMP_LT_OQ>(vqu, z0);
+            let m_hi = _mm256_cmp_ps::<_CMP_GT_OQ>(vqu, vqm);
+            let m_out = _mm256_or_ps(m_lo, m_hi);
+            // gw += g, masked to in-range lanes (+0.0 elsewhere)
+            let cw = _mm256_andnot_ps(m_out, vg);
+            storeu(gw, c, _mm256_add_ps(loadu(gw, c), cw));
+            // cs = g * coeff, coeff per branch
+            let mut coeff = _mm256_sub_ps(vt, vd);
+            coeff = _mm256_blendv_ps(coeff, vnz, m_lo);
+            coeff = _mm256_blendv_ps(coeff, vqz, m_hi);
+            aps = _mm256_add_ps(aps, _mm256_mul_ps(vg, coeff));
+            // cz = g * -s on out-of-range lanes, +0.0 in-range
+            apz = _mm256_add_ps(
+                apz, _mm256_and_ps(_mm256_mul_ps(vg, vns), m_out));
+            c += 8;
+        }
+        let mut ps = [0f32; 8];
+        let mut pz = [0f32; 8];
+        storeu(&mut ps, 0, aps);
+        storeu(&mut pz, 0, apz);
+        let mut ss = reduce8(&ps);
+        let mut sz = reduce8(&pz);
+        for i in n8..w.len() {
+            let (cw, cs, cz) = fq_grads_elem(w[i], gout[i], sv, zv, qmax);
+            gw[i] += cw;
+            ss += cs;
+            sz += cz;
+        }
+        (ss, sz)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_group(wi: &[f32], sv: f32, zv: f32,
+                                out: &mut [f32]) {
+        let n8 = wi.len() / 8 * 8;
+        let vs = _mm256_set1_ps(sv);
+        let vz = _mm256_set1_ps(zv);
+        let mut c = 0;
+        while c < n8 {
+            storeu(out, c,
+                   _mm256_mul_ps(_mm256_sub_ps(loadu(wi, c), vz), vs));
+            c += 8;
+        }
+        for i in n8..wi.len() {
+            out[i] = (wi[i] - zv) * sv;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dq_sz_group(a: &[f32], wi: &[f32], zv: f32)
+                              -> (f32, f32) {
+        let n8 = a.len() / 8 * 8;
+        let vz = _mm256_set1_ps(zv);
+        let mut vps = _mm256_setzero_ps();
+        let mut vpa = _mm256_setzero_ps();
+        let mut c = 0;
+        while c < n8 {
+            let va = loadu(a, c);
+            vps = _mm256_add_ps(
+                vps,
+                _mm256_mul_ps(va, _mm256_sub_ps(loadu(wi, c), vz)));
+            vpa = _mm256_add_ps(vpa, va);
+            c += 8;
+        }
+        let mut ps = [0f32; 8];
+        let mut pa = [0f32; 8];
+        storeu(&mut ps, 0, vps);
+        storeu(&mut pa, 0, vpa);
+        let mut ss = reduce8(&ps);
+        let mut sa = reduce8(&pa);
+        for i in n8..a.len() {
+            ss += a[i] * (wi[i] - zv);
+            sa += a[i];
+        }
+        (ss, sa)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dfq_apply_group(w: &[f32], s: f32, z: f32, qmax: f32,
+                                  out: &mut [f32], mask: &mut [f32]) {
+        let n8 = w.len() / 8 * 8;
+        let vs = _mm256_set1_ps(s);
+        let vz = _mm256_set1_ps(z);
+        let vqm = _mm256_set1_ps(qmax);
+        let z0 = _mm256_setzero_ps();
+        let one = _mm256_set1_ps(1.0);
+        let mut c = 0;
+        while c < n8 {
+            let vr = _mm256_round_ps::<ROUND_EVEN>(
+                _mm256_div_ps(loadu(w, c), vs));
+            let vqu = _mm256_add_ps(vr, vz);
+            // clamp via the same compare order as Rust's `clamp`
+            // (< min first, then > max), so -0.0 and NaN behave alike
+            let mut q = _mm256_blendv_ps(
+                vqu, z0, _mm256_cmp_ps::<_CMP_LT_OQ>(vqu, z0));
+            q = _mm256_blendv_ps(
+                q, vqm, _mm256_cmp_ps::<_CMP_GT_OQ>(vqu, vqm));
+            storeu(out, c,
+                   _mm256_mul_ps(_mm256_sub_ps(q, vz), vs));
+            let m_in = _mm256_and_ps(
+                _mm256_cmp_ps::<_CMP_GE_OQ>(vqu, z0),
+                _mm256_cmp_ps::<_CMP_LE_OQ>(vqu, vqm));
+            storeu(mask, c, _mm256_and_ps(m_in, one));
+            c += 8;
+        }
+        for i in n8..w.len() {
+            let (o, m) = dfq_elem(w[i], s, z, qmax);
+            out[i] = o;
+            mask[i] = m;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{dfq_elem, fq_elem, fq_grads_elem, reduce8};
+    use core::arch::aarch64::*;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn loadq(p: &[f32], i: usize) -> float32x4_t {
+        vld1q_f32(p.as_ptr().add(i))
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn storeq(p: &mut [f32], i: usize, v: float32x4_t) {
+        vst1q_f32(p.as_mut_ptr().add(i), v)
+    }
+
+    /// Unpack 4 lanes of a splatted word: `(w >> sh[l]) & mask`,
+    /// expressed as `vshlq` by negative amounts.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn lanes4(vw: uint32x4_t, neg_sh: int32x4_t, mask: u32)
+                     -> float32x4_t {
+        vcvtq_f32_u32(vandq_u32(vshlq_u32(vw, neg_sh),
+                                vdupq_n_u32(mask)))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let n8 = a.len() / 8 * 8;
+        // virtual lanes 0-3 / 4-7 of the 8-partial contract
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < n8 {
+            acc_lo = vaddq_f32(acc_lo,
+                               vmulq_f32(loadq(a, c), loadq(b, c)));
+            acc_hi = vaddq_f32(
+                acc_hi, vmulq_f32(loadq(a, c + 4), loadq(b, c + 4)));
+            c += 8;
+        }
+        let mut p = [0f32; 8];
+        storeq(&mut p, 0, acc_lo);
+        vst1q_f32(p.as_mut_ptr().add(4), acc_hi);
+        let mut s = reduce8(&p);
+        for k in n8..a.len() {
+            s += a[k] * b[k];
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot8_x2(a0: &[f32], a1: &[f32], b: &[f32])
+                          -> (f32, f32) {
+        let n8 = b.len() / 8 * 8;
+        let mut l0 = vdupq_n_f32(0.0);
+        let mut h0 = vdupq_n_f32(0.0);
+        let mut l1 = vdupq_n_f32(0.0);
+        let mut h1 = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < n8 {
+            let b_lo = loadq(b, c);
+            let b_hi = loadq(b, c + 4);
+            l0 = vaddq_f32(l0, vmulq_f32(loadq(a0, c), b_lo));
+            h0 = vaddq_f32(h0, vmulq_f32(loadq(a0, c + 4), b_hi));
+            l1 = vaddq_f32(l1, vmulq_f32(loadq(a1, c), b_lo));
+            h1 = vaddq_f32(h1, vmulq_f32(loadq(a1, c + 4), b_hi));
+            c += 8;
+        }
+        let mut p0 = [0f32; 8];
+        let mut p1 = [0f32; 8];
+        storeq(&mut p0, 0, l0);
+        vst1q_f32(p0.as_mut_ptr().add(4), h0);
+        storeq(&mut p1, 0, l1);
+        vst1q_f32(p1.as_mut_ptr().add(4), h1);
+        let mut s0 = reduce8(&p0);
+        let mut s1 = reduce8(&p1);
+        for k in n8..b.len() {
+            s0 += a0[k] * b[k];
+            s1 += a1[k] * b[k];
+        }
+        (s0, s1)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn group_dot_packed_b2(gw: &[u32], x: &[f32]) -> f32 {
+        let sh0 = vld1q_s32([0i32, -2, -4, -6].as_ptr());
+        let sh1 = vld1q_s32([-8i32, -10, -12, -14].as_ptr());
+        let sh2 = vld1q_s32([-16i32, -18, -20, -22].as_ptr());
+        let sh3 = vld1q_s32([-24i32, -26, -28, -30].as_ptr());
+        let mut d = vdupq_n_f32(0.0);
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = vdupq_n_u32(w);
+            let p0 = vmulq_f32(lanes4(vw, sh0, 3), loadq(x, wi * 16));
+            let p1 =
+                vmulq_f32(lanes4(vw, sh1, 3), loadq(x, wi * 16 + 4));
+            let p2 =
+                vmulq_f32(lanes4(vw, sh2, 3), loadq(x, wi * 16 + 8));
+            let p3 =
+                vmulq_f32(lanes4(vw, sh3, 3), loadq(x, wi * 16 + 12));
+            // lane j: ((p[j] + p[j+4]) + p[j+8]) + p[j+12]
+            let t = vaddq_f32(vaddq_f32(vaddq_f32(p0, p1), p2), p3);
+            d = vaddq_f32(d, t);
+        }
+        let mut o = [0f32; 4];
+        vst1q_f32(o.as_mut_ptr(), d);
+        (o[0] + o[1]) + (o[2] + o[3])
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn group_dot_packed_b4(gw: &[u32], x: &[f32]) -> f32 {
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        let mut d = vdup_n_f32(0.0); // even/odd accumulator pair
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = vdupq_n_u32(w);
+            let p_lo = vmulq_f32(lanes4(vw, sh_lo, 15),
+                                 loadq(x, wi * 8));
+            let p_hi = vmulq_f32(lanes4(vw, sh_hi, 15),
+                                 loadq(x, wi * 8 + 4));
+            // even lane: ((p0+p2)+p4)+p6; odd: ((p1+p3)+p5)+p7
+            let t = vadd_f32(
+                vadd_f32(vadd_f32(vget_low_f32(p_lo),
+                                  vget_high_f32(p_lo)),
+                         vget_low_f32(p_hi)),
+                vget_high_f32(p_hi));
+            d = vadd_f32(d, t);
+        }
+        vget_lane_f32::<0>(d) + vget_lane_f32::<1>(d)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn group_dot_b2(qb: &[f32], xg: &[f32]) -> f32 {
+        let n = qb.len() / 16 * 16;
+        let mut d = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < n {
+            let p0 = vmulq_f32(loadq(qb, c), loadq(xg, c));
+            let p1 = vmulq_f32(loadq(qb, c + 4), loadq(xg, c + 4));
+            let p2 = vmulq_f32(loadq(qb, c + 8), loadq(xg, c + 8));
+            let p3 = vmulq_f32(loadq(qb, c + 12), loadq(xg, c + 12));
+            let t = vaddq_f32(vaddq_f32(vaddq_f32(p0, p1), p2), p3);
+            d = vaddq_f32(d, t);
+            c += 16;
+        }
+        let mut o = [0f32; 4];
+        vst1q_f32(o.as_mut_ptr(), d);
+        (o[0] + o[1]) + (o[2] + o[3])
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn group_dot_b4(qb: &[f32], xg: &[f32]) -> f32 {
+        let n = qb.len() / 8 * 8;
+        let mut d = vdup_n_f32(0.0);
+        let mut c = 0;
+        while c < n {
+            let p_lo = vmulq_f32(loadq(qb, c), loadq(xg, c));
+            let p_hi = vmulq_f32(loadq(qb, c + 4), loadq(xg, c + 4));
+            let t = vadd_f32(
+                vadd_f32(vadd_f32(vget_low_f32(p_lo),
+                                  vget_high_f32(p_lo)),
+                         vget_low_f32(p_hi)),
+                vget_high_f32(p_hi));
+            d = vadd_f32(d, t);
+            c += 8;
+        }
+        vget_lane_f32::<0>(d) + vget_lane_f32::<1>(d)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack_b2(gw: &[u32], qb: &mut [f32]) {
+        let sh0 = vld1q_s32([0i32, -2, -4, -6].as_ptr());
+        let sh1 = vld1q_s32([-8i32, -10, -12, -14].as_ptr());
+        let sh2 = vld1q_s32([-16i32, -18, -20, -22].as_ptr());
+        let sh3 = vld1q_s32([-24i32, -26, -28, -30].as_ptr());
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = vdupq_n_u32(w);
+            storeq(qb, wi * 16, lanes4(vw, sh0, 3));
+            storeq(qb, wi * 16 + 4, lanes4(vw, sh1, 3));
+            storeq(qb, wi * 16 + 8, lanes4(vw, sh2, 3));
+            storeq(qb, wi * 16 + 12, lanes4(vw, sh3, 3));
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack_b4(gw: &[u32], qb: &mut [f32]) {
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        for (wi, &w) in gw.iter().enumerate() {
+            let vw = vdupq_n_u32(w);
+            storeq(qb, wi * 8, lanes4(vw, sh_lo, 15));
+            storeq(qb, wi * 8 + 4, lanes4(vw, sh_hi, 15));
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n4 = y.len() / 4 * 4;
+        let va = vdupq_n_f32(a);
+        let mut c = 0;
+        while c < n4 {
+            storeq(y, c,
+                   vaddq_f32(loadq(y, c), vmulq_f32(va, loadq(x, c))));
+            c += 4;
+        }
+        for k in n4..y.len() {
+            y[k] += a * x[k];
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fq_forward_group(w: &[f32], sv: f32, zv: f32,
+                                   qmax: f32, out: &mut [f32]) {
+        let lo_val = -zv * sv;
+        let hi_val = (qmax - zv) * sv;
+        let n4 = w.len() / 4 * 4;
+        let vs = vdupq_n_f32(sv);
+        let vz = vdupq_n_f32(zv);
+        let vqm = vdupq_n_f32(qmax);
+        let z0 = vdupq_n_f32(0.0);
+        let vlo = vdupq_n_f32(lo_val);
+        let vhi = vdupq_n_f32(hi_val);
+        let mut c = 0;
+        while c < n4 {
+            let vt = vrndnq_f32(vdivq_f32(loadq(w, c), vs));
+            let vqu = vaddq_f32(vt, vz);
+            let mut res = vmulq_f32(vt, vs);
+            res = vbslq_f32(vcltq_f32(vqu, z0), vlo, res);
+            res = vbslq_f32(vcgtq_f32(vqu, vqm), vhi, res);
+            storeq(out, c, res);
+            c += 4;
+        }
+        for i in n4..w.len() {
+            out[i] = fq_elem(w[i], sv, zv, qmax, lo_val, hi_val);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fq_grads_group(w: &[f32], gout: &[f32], sv: f32,
+                                 zv: f32, qmax: f32, gw: &mut [f32])
+                                 -> (f32, f32) {
+        let n8 = w.len() / 8 * 8;
+        let vs = vdupq_n_f32(sv);
+        let vz = vdupq_n_f32(zv);
+        let vqm = vdupq_n_f32(qmax);
+        let z0 = vdupq_n_f32(0.0);
+        let vnz = vdupq_n_f32(-zv);
+        let vqz = vdupq_n_f32(qmax - zv);
+        let vns = vdupq_n_f32(-sv);
+        // virtual lanes 0-3 / 4-7 of the 8-partial contract
+        let mut aps_lo = vdupq_n_f32(0.0);
+        let mut aps_hi = vdupq_n_f32(0.0);
+        let mut apz_lo = vdupq_n_f32(0.0);
+        let mut apz_hi = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < n8 {
+            for half in 0..2usize {
+                let o = c + 4 * half;
+                let vg = loadq(gout, o);
+                let vd = vdivq_f32(loadq(w, o), vs);
+                let vt = vrndnq_f32(vd);
+                let vqu = vaddq_f32(vt, vz);
+                let m_lo = vcltq_f32(vqu, z0);
+                let m_hi = vcgtq_f32(vqu, vqm);
+                let m_out = vorrq_u32(m_lo, m_hi);
+                let cw = vreinterpretq_f32_u32(vbicq_u32(
+                    vreinterpretq_u32_f32(vg), m_out));
+                storeq(gw, o, vaddq_f32(loadq(gw, o), cw));
+                let mut coeff = vsubq_f32(vt, vd);
+                coeff = vbslq_f32(m_lo, vnz, coeff);
+                coeff = vbslq_f32(m_hi, vqz, coeff);
+                let cs = vmulq_f32(vg, coeff);
+                let cz = vreinterpretq_f32_u32(vandq_u32(
+                    vreinterpretq_u32_f32(vmulq_f32(vg, vns)), m_out));
+                if half == 0 {
+                    aps_lo = vaddq_f32(aps_lo, cs);
+                    apz_lo = vaddq_f32(apz_lo, cz);
+                } else {
+                    aps_hi = vaddq_f32(aps_hi, cs);
+                    apz_hi = vaddq_f32(apz_hi, cz);
+                }
+            }
+            c += 8;
+        }
+        let mut ps = [0f32; 8];
+        let mut pz = [0f32; 8];
+        storeq(&mut ps, 0, aps_lo);
+        vst1q_f32(ps.as_mut_ptr().add(4), aps_hi);
+        storeq(&mut pz, 0, apz_lo);
+        vst1q_f32(pz.as_mut_ptr().add(4), apz_hi);
+        let mut ss = reduce8(&ps);
+        let mut sz = reduce8(&pz);
+        for i in n8..w.len() {
+            let (cw, cs, cz) = fq_grads_elem(w[i], gout[i], sv, zv, qmax);
+            gw[i] += cw;
+            ss += cs;
+            sz += cz;
+        }
+        (ss, sz)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_group(wi: &[f32], sv: f32, zv: f32,
+                                out: &mut [f32]) {
+        let n4 = wi.len() / 4 * 4;
+        let vs = vdupq_n_f32(sv);
+        let vz = vdupq_n_f32(zv);
+        let mut c = 0;
+        while c < n4 {
+            storeq(out, c,
+                   vmulq_f32(vsubq_f32(loadq(wi, c), vz), vs));
+            c += 4;
+        }
+        for i in n4..wi.len() {
+            out[i] = (wi[i] - zv) * sv;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dq_sz_group(a: &[f32], wi: &[f32], zv: f32)
+                              -> (f32, f32) {
+        let n8 = a.len() / 8 * 8;
+        let vz = vdupq_n_f32(zv);
+        let mut ps_lo = vdupq_n_f32(0.0);
+        let mut ps_hi = vdupq_n_f32(0.0);
+        let mut pa_lo = vdupq_n_f32(0.0);
+        let mut pa_hi = vdupq_n_f32(0.0);
+        let mut c = 0;
+        while c < n8 {
+            let a_lo = loadq(a, c);
+            let a_hi = loadq(a, c + 4);
+            ps_lo = vaddq_f32(
+                ps_lo,
+                vmulq_f32(a_lo, vsubq_f32(loadq(wi, c), vz)));
+            ps_hi = vaddq_f32(
+                ps_hi,
+                vmulq_f32(a_hi, vsubq_f32(loadq(wi, c + 4), vz)));
+            pa_lo = vaddq_f32(pa_lo, a_lo);
+            pa_hi = vaddq_f32(pa_hi, a_hi);
+            c += 8;
+        }
+        let mut ps = [0f32; 8];
+        let mut pa = [0f32; 8];
+        storeq(&mut ps, 0, ps_lo);
+        vst1q_f32(ps.as_mut_ptr().add(4), ps_hi);
+        storeq(&mut pa, 0, pa_lo);
+        vst1q_f32(pa.as_mut_ptr().add(4), pa_hi);
+        let mut ss = reduce8(&ps);
+        let mut sa = reduce8(&pa);
+        for i in n8..a.len() {
+            ss += a[i] * (wi[i] - zv);
+            sa += a[i];
+        }
+        (ss, sa)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dfq_apply_group(w: &[f32], s: f32, z: f32, qmax: f32,
+                                  out: &mut [f32], mask: &mut [f32]) {
+        let n4 = w.len() / 4 * 4;
+        let vs = vdupq_n_f32(s);
+        let vz = vdupq_n_f32(z);
+        let vqm = vdupq_n_f32(qmax);
+        let z0 = vdupq_n_f32(0.0);
+        let one = vdupq_n_f32(1.0);
+        let mut c = 0;
+        while c < n4 {
+            let vr = vrndnq_f32(vdivq_f32(loadq(w, c), vs));
+            let vqu = vaddq_f32(vr, vz);
+            let mut q = vbslq_f32(vcltq_f32(vqu, z0), z0, vqu);
+            q = vbslq_f32(vcgtq_f32(vqu, vqm), vqm, q);
+            storeq(out, c, vmulq_f32(vsubq_f32(q, vz), vs));
+            let m_in = vandq_u32(vcgeq_f32(vqu, z0),
+                                 vcleq_f32(vqu, vqm));
+            storeq(mask, c,
+                   vreinterpretq_f32_u32(vandq_u32(
+                       m_in, vreinterpretq_u32_f32(one))));
+            c += 4;
+        }
+        for i in n4..w.len() {
+            let (o, m) = dfq_elem(w[i], s, z, qmax);
+            out[i] = o;
+            mask[i] = m;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching primitives (the public surface)
+// ---------------------------------------------------------------------------
+
+/// Dense dot with the 8-partial-lane contract (see the module docs).
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot8(a, b) },
+        _ => dot8_scalar(a, b),
+    }
+}
+
+/// Two [`dot8`]s sharing the `b` operand loads (register-blocked
+/// microkernel row pair); per-row bits equal two separate `dot8` calls.
+#[inline]
+pub fn dot8_x2(a0: &[f32], a1: &[f32], b: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a0.len(), b.len());
+    debug_assert_eq!(a1.len(), b.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dot8_x2(a0, a1, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dot8_x2(a0, a1, b) },
+        _ => (dot8_scalar(a0, b), dot8_scalar(a1, b)),
+    }
+}
+
+/// 2-bit packed group dot: unpack+FMA directly from the packed words
+/// (`x.len() == 16 * gw.len()`), with the 4-accumulator lane tree.
+#[inline]
+pub fn group_dot_packed_b2(gw: &[u32], x: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), gw.len() * 16);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::group_dot_packed_b2(gw, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::group_dot_packed_b2(gw, x) },
+        _ => group_dot_packed_b2_scalar(gw, x),
+    }
+}
+
+/// 4-bit packed group dot (`x.len() == 8 * gw.len()`), even/odd lanes.
+#[inline]
+pub fn group_dot_packed_b4(gw: &[u32], x: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), gw.len() * 8);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::group_dot_packed_b4(gw, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::group_dot_packed_b4(gw, x) },
+        _ => group_dot_packed_b4_scalar(gw, x),
+    }
+}
+
+/// 2-bit group dot over already-unpacked values (`len % 16 == 0`),
+/// same lane tree as [`group_dot_packed_b2`].
+#[inline]
+pub fn group_dot_b2(qb: &[f32], xg: &[f32]) -> f32 {
+    debug_assert_eq!(qb.len() % 16, 0);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::group_dot_b2(qb, xg) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::group_dot_b2(qb, xg) },
+        _ => group_dot_b2_scalar(qb, xg),
+    }
+}
+
+/// 4-bit group dot over already-unpacked values (`len % 8 == 0`).
+#[inline]
+pub fn group_dot_b4(qb: &[f32], xg: &[f32]) -> f32 {
+    debug_assert_eq!(qb.len() % 8, 0);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::group_dot_b4(qb, xg) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::group_dot_b4(qb, xg) },
+        _ => group_dot_b4_scalar(qb, xg),
+    }
+}
+
+/// Unpack a 2-bit group's words into floats (`qb.len() == 16 *
+/// gw.len()`), per-word lane order.
+#[inline]
+pub fn unpack_b2(gw: &[u32], qb: &mut [f32]) {
+    debug_assert_eq!(qb.len(), gw.len() * 16);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::unpack_b2(gw, qb) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::unpack_b2(gw, qb) },
+        _ => unpack_b2_scalar(gw, qb),
+    }
+}
+
+/// Unpack a 4-bit group's words (`qb.len() == 8 * gw.len()`).
+#[inline]
+pub fn unpack_b4(gw: &[u32], qb: &mut [f32]) {
+    debug_assert_eq!(qb.len(), gw.len() * 8);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::unpack_b4(gw, qb) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::unpack_b4(gw, qb) },
+        _ => unpack_b4_scalar(gw, qb),
+    }
+}
+
+/// `y[i] += a * x[i]` - element-wise, identical on every ISA.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::axpy(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::axpy(y, a, x) },
+        _ => axpy_scalar(y, a, x),
+    }
+}
+
+/// Fake-quant forward over one group (element-wise; the compare+blend
+/// branch semantics match the scalar `if` chain exactly, incl. NaN).
+#[inline]
+pub fn fq_forward_group(w: &[f32], sv: f32, zv: f32, qmax: f32,
+                        out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::fq_forward_group(w, sv, zv, qmax, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::fq_forward_group(w, sv, zv, qmax, out)
+        },
+        _ => fq_forward_group_scalar(w, sv, zv, qmax, out),
+    }
+}
+
+/// STE fake-quant gradients over one group: accumulates into `gw`
+/// (masked add; out-of-range lanes add `+0.0`) and returns the
+/// group-reduced `(gs, gz)` contributions (8-partial contract).
+#[inline]
+pub fn fq_grads_group(w: &[f32], gout: &[f32], sv: f32, zv: f32,
+                      qmax: f32, gw: &mut [f32]) -> (f32, f32) {
+    debug_assert_eq!(w.len(), gout.len());
+    debug_assert_eq!(w.len(), gw.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::fq_grads_group(w, gout, sv, zv, qmax, gw)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::fq_grads_group(w, gout, sv, zv, qmax, gw)
+        },
+        _ => fq_grads_group_scalar(w, gout, sv, zv, qmax, gw),
+    }
+}
+
+/// Dequantize one group: `out[i] = (wi[i] - z) * s` (element-wise).
+#[inline]
+pub fn dequant_group(wi: &[f32], sv: f32, zv: f32, out: &mut [f32]) {
+    debug_assert_eq!(wi.len(), out.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dequant_group(wi, sv, zv, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dequant_group(wi, sv, zv, out) },
+        _ => dequant_group_scalar(wi, sv, zv, out),
+    }
+}
+
+/// Dequant-matmul s/z gradient reductions over one group: returns
+/// `(sum a*(wi-z), sum a)` with the 8-partial contract.
+#[inline]
+pub fn dq_sz_group(a: &[f32], wi: &[f32], zv: f32) -> (f32, f32) {
+    debug_assert_eq!(a.len(), wi.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::dq_sz_group(a, wi, zv) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dq_sz_group(a, wi, zv) },
+        _ => dq_sz_group_scalar(a, wi, zv),
+    }
+}
+
+/// Dynamic fake-quant element-wise pass over one group (the min/max
+/// scan that computes `s`/`z` stays sequential at the caller): writes
+/// `W_hat` and the STE in-range mask.
+#[inline]
+pub fn dfq_apply_group(w: &[f32], s: f32, z: f32, qmax: f32,
+                       out: &mut [f32], mask: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    debug_assert_eq!(w.len(), mask.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            avx2::dfq_apply_group(w, s, z, qmax, out, mask)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::dfq_apply_group(w, s, z, qmax, out, mask)
+        },
+        _ => dfq_apply_group_scalar(w, s, z, qmax, out, mask),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn eq_bits(a: f32, b: f32, what: &str) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+    }
+
+    fn eq_bits_slice(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn with_isa_overrides_and_restores() {
+        let before = active();
+        let inside = with_isa(Isa::Scalar, active);
+        assert_eq!(inside, Isa::Scalar);
+        assert_eq!(active(), before);
+    }
+
+    #[test]
+    fn detected_isa_is_usable() {
+        // whatever detection picked must actually run
+        let mut out = [0f32; 3];
+        with_isa(detected(), || {
+            dequant_group(&[1.0, 2.0, 3.0], 0.5, 1.0, &mut out)
+        });
+        assert_eq!(out, [0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn dot8_matches_scalar_on_all_tail_shapes() {
+        let mut r = Rng::new(41);
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 31, 64, 100] {
+            let mut a = vec![0f32; len];
+            let mut b = vec![0f32; len];
+            r.fill_normal(&mut a, 0.0, 1.0);
+            r.fill_normal(&mut b, 0.0, 1.0);
+            let want = with_isa(Isa::Scalar, || dot8(&a, &b));
+            let got = with_isa(detected(), || dot8(&a, &b));
+            eq_bits(got, want, &format!("dot8 len={len}"));
+            let (g0, g1) =
+                with_isa(detected(), || dot8_x2(&a, &b, &b));
+            let w0 = with_isa(Isa::Scalar, || dot8(&a, &b));
+            let w1 = with_isa(Isa::Scalar, || dot8(&b, &b));
+            eq_bits(g0, w0, &format!("dot8_x2.0 len={len}"));
+            eq_bits(g1, w1, &format!("dot8_x2.1 len={len}"));
+        }
+    }
+
+    #[test]
+    fn packed_group_dots_match_scalar() {
+        let mut r = Rng::new(43);
+        for words in [1usize, 2, 4, 8] {
+            let gw: Vec<u32> =
+                (0..words).map(|_| r.next_u64() as u32).collect();
+            let mut x2 = vec![0f32; words * 16];
+            let mut x4 = vec![0f32; words * 8];
+            r.fill_normal(&mut x2, 0.0, 1.0);
+            r.fill_normal(&mut x4, 0.0, 1.0);
+            let w2 = with_isa(Isa::Scalar,
+                              || group_dot_packed_b2(&gw, &x2));
+            let g2 = with_isa(detected(),
+                              || group_dot_packed_b2(&gw, &x2));
+            eq_bits(g2, w2, &format!("packed_b2 words={words}"));
+            let w4 = with_isa(Isa::Scalar,
+                              || group_dot_packed_b4(&gw, &x4));
+            let g4 = with_isa(detected(),
+                              || group_dot_packed_b4(&gw, &x4));
+            eq_bits(g4, w4, &format!("packed_b4 words={words}"));
+
+            // unpacked variants and the unpack primitives agree too
+            let mut q2s = vec![0f32; words * 16];
+            let mut q2v = vec![0f32; words * 16];
+            with_isa(Isa::Scalar, || unpack_b2(&gw, &mut q2s));
+            with_isa(detected(), || unpack_b2(&gw, &mut q2v));
+            eq_bits_slice(&q2v, &q2s, "unpack_b2");
+            let w = with_isa(Isa::Scalar, || group_dot_b2(&q2s, &x2));
+            let g = with_isa(detected(), || group_dot_b2(&q2s, &x2));
+            eq_bits(g, w, "group_dot_b2");
+            eq_bits(w, w2, "group_dot_b2 vs packed");
+            let mut q4s = vec![0f32; words * 8];
+            let mut q4v = vec![0f32; words * 8];
+            with_isa(Isa::Scalar, || unpack_b4(&gw, &mut q4s));
+            with_isa(detected(), || unpack_b4(&gw, &mut q4v));
+            eq_bits_slice(&q4v, &q4s, "unpack_b4");
+            let w = with_isa(Isa::Scalar, || group_dot_b4(&q4s, &x4));
+            let g = with_isa(detected(), || group_dot_b4(&q4s, &x4));
+            eq_bits(g, w, "group_dot_b4");
+            eq_bits(w, w4, "group_dot_b4 vs packed");
+        }
+    }
+
+    #[test]
+    fn axpy_matches_scalar_with_tail() {
+        let mut r = Rng::new(47);
+        for len in [1usize, 5, 8, 13, 32, 50] {
+            let mut x = vec![0f32; len];
+            let mut y0 = vec![0f32; len];
+            r.fill_normal(&mut x, 0.0, 1.0);
+            r.fill_normal(&mut y0, 0.0, 1.0);
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            with_isa(Isa::Scalar, || axpy(&mut ys, 0.37, &x));
+            with_isa(detected(), || axpy(&mut yv, 0.37, &x));
+            eq_bits_slice(&yv, &ys, &format!("axpy len={len}"));
+        }
+    }
+
+    #[test]
+    fn fake_quant_primitives_match_scalar() {
+        let mut r = Rng::new(53);
+        let qmax = 3.0f32;
+        for len in [4usize, 8, 12, 16, 33] {
+            let mut w = vec![0f32; len];
+            let mut g = vec![0f32; len];
+            r.fill_normal(&mut w, 0.0, 0.8); // wide: hits both clamps
+            r.fill_normal(&mut g, 0.0, 1.0);
+            let (sv, zv) = (0.21f32, 1.0f32);
+
+            let mut os = vec![0f32; len];
+            let mut ov = vec![0f32; len];
+            with_isa(Isa::Scalar,
+                     || fq_forward_group(&w, sv, zv, qmax, &mut os));
+            with_isa(detected(),
+                     || fq_forward_group(&w, sv, zv, qmax, &mut ov));
+            eq_bits_slice(&ov, &os, &format!("fq_forward len={len}"));
+
+            let mut gws = vec![0.1f32; len];
+            let mut gwv = vec![0.1f32; len];
+            let (ss, szs) = with_isa(Isa::Scalar, || {
+                fq_grads_group(&w, &g, sv, zv, qmax, &mut gws)
+            });
+            let (sv_, szv) = with_isa(detected(), || {
+                fq_grads_group(&w, &g, sv, zv, qmax, &mut gwv)
+            });
+            eq_bits(sv_, ss, &format!("fq_grads gs len={len}"));
+            eq_bits(szv, szs, &format!("fq_grads gz len={len}"));
+            eq_bits_slice(&gwv, &gws, &format!("fq_grads gw len={len}"));
+
+            let wi: Vec<f32> =
+                (0..len).map(|_| r.below(4) as f32).collect();
+            let mut ds = vec![0f32; len];
+            let mut dv = vec![0f32; len];
+            with_isa(Isa::Scalar,
+                     || dequant_group(&wi, sv, zv, &mut ds));
+            with_isa(detected(),
+                     || dequant_group(&wi, sv, zv, &mut dv));
+            eq_bits_slice(&dv, &ds, &format!("dequant len={len}"));
+
+            let (as_, aa) =
+                with_isa(Isa::Scalar, || dq_sz_group(&g, &wi, zv));
+            let (bs_, ba) =
+                with_isa(detected(), || dq_sz_group(&g, &wi, zv));
+            eq_bits(bs_, as_, &format!("dq_sz s len={len}"));
+            eq_bits(ba, aa, &format!("dq_sz a len={len}"));
+
+            let mut ms = vec![0f32; len];
+            let mut mv = vec![0f32; len];
+            let mut qs = vec![0f32; len];
+            let mut qv = vec![0f32; len];
+            with_isa(Isa::Scalar, || {
+                dfq_apply_group(&w, 0.13, 1.0, qmax, &mut qs, &mut ms)
+            });
+            with_isa(detected(), || {
+                dfq_apply_group(&w, 0.13, 1.0, qmax, &mut qv, &mut mv)
+            });
+            eq_bits_slice(&qv, &qs, &format!("dfq out len={len}"));
+            eq_bits_slice(&mv, &ms, &format!("dfq mask len={len}"));
+        }
+    }
+}

@@ -411,6 +411,67 @@ pub fn par_chunks2_mut<T, U, F>(
     });
 }
 
+/// Like [`par_chunks2_mut`] but over three buffers chunked in lockstep:
+/// `f(chunk_index, a_chunk, b_chunk, c_chunk)`. All three slices must
+/// split into the same number of chunks (asserted) - used e.g. for
+/// row-parallel fake-quant gradients where chunk i covers the same rows
+/// of the weight grad and the per-group s/z grads.
+pub fn par_chunks3_mut<T, U, V, F>(
+    a: &mut [T],
+    chunk_a: usize,
+    b: &mut [U],
+    chunk_b: usize,
+    c: &mut [V],
+    chunk_c: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    V: Send,
+    F: Fn(usize, &mut [T], &mut [U], &mut [V]) + Sync,
+{
+    let (ca, cb, cc) = (chunk_a.max(1), chunk_b.max(1), chunk_c.max(1));
+    let n_a = (a.len() + ca - 1) / ca;
+    let n_b = (b.len() + cb - 1) / cb;
+    let n_c = (c.len() + cc - 1) / cc;
+    assert!(
+        n_a == n_b && n_b == n_c,
+        "par_chunks3_mut: chunk counts diverge ({n_a} vs {n_b} vs {n_c})"
+    );
+    let nt = num_threads().min(n_a.max(1));
+    if nt <= 1 || pool::in_worker() {
+        for (i, ((x, y), z)) in a
+            .chunks_mut(ca)
+            .zip(b.chunks_mut(cb))
+            .zip(c.chunks_mut(cc))
+            .enumerate()
+        {
+            f(i, x, y, z);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut [T], &mut [U], &mut [V])>> =
+        (0..nt).map(|_| Vec::new()).collect();
+    for (i, ((x, y), z)) in a
+        .chunks_mut(ca)
+        .zip(b.chunks_mut(cb))
+        .zip(c.chunks_mut(cc))
+        .enumerate()
+    {
+        buckets[i % nt].push((i, x, y, z));
+    }
+    let slots: Vec<Mutex<Vec<(usize, &mut [T], &mut [U], &mut [V])>>> =
+        buckets.into_iter().map(Mutex::new).collect();
+    let fr = &f;
+    pool::run(nt, nt, &|wi| {
+        let bucket = std::mem::take(
+            &mut *slots[wi].lock().unwrap_or_else(|e| e.into_inner()));
+        for (i, x, y, z) in bucket {
+            fr(i, x, y, z);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -557,6 +618,45 @@ mod tests {
         let mut a = vec![0u32; 10];
         let mut b = vec![0u32; 10];
         par_chunks2_mut(&mut a, 2, &mut b, 3, |_, _, _| {});
+    }
+
+    #[test]
+    fn par_chunks3_zips_consistently() {
+        with_threads(3, || {
+            let mut a = vec![0u32; 12]; // 4 chunks of 3
+            let mut b = vec![0u32; 20]; // 4 chunks of 5
+            let mut c = vec![0u32; 8]; // 4 chunks of 2
+            par_chunks3_mut(
+                &mut a, 3, &mut b, 5, &mut c, 2,
+                |ci, ac, bc, cc| {
+                    for v in ac.iter_mut() {
+                        *v = ci as u32;
+                    }
+                    for v in bc.iter_mut() {
+                        *v = ci as u32 + 100;
+                    }
+                    for v in cc.iter_mut() {
+                        *v = ci as u32 + 200;
+                    }
+                },
+            );
+            assert_eq!(a, [0, 0, 0, 1, 1, 1, 2, 2, 2, 3, 3, 3]);
+            for (i, v) in b.iter().enumerate() {
+                assert_eq!(*v as usize, i / 5 + 100);
+            }
+            for (i, v) in c.iter().enumerate() {
+                assert_eq!(*v as usize, i / 2 + 200);
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk counts diverge")]
+    fn par_chunks3_rejects_mismatched_counts() {
+        let mut a = vec![0u32; 12];
+        let mut b = vec![0u32; 12];
+        let mut c = vec![0u32; 12];
+        par_chunks3_mut(&mut a, 3, &mut b, 3, &mut c, 4, |_, _, _, _| {});
     }
 
     #[test]

@@ -302,6 +302,95 @@ fn scheduler_serving_matches_solo_engine() {
     }
 }
 
+/// SIMD dispatch end-to-end: with the kernel layer forced to the scalar
+/// reference (`EQAT_SIMD=scalar`) and running the detected ISA, the
+/// serving stack (continuous-batching scheduler tokens + raw prefill
+/// logits) and a full Block-AP training run produce bit-identical
+/// outputs - the vector paths are a pure speedup, never a numerics
+/// change.
+#[test]
+fn simd_paths_match_scalar_end_to_end() {
+    use efficientqat::infer::core::ModelCore;
+    use efficientqat::infer::generate::Sampler;
+    use efficientqat::infer::sched::{SchedConfig, Scheduler};
+    use efficientqat::infer::session::Request;
+    use efficientqat::util::simd::{detected, with_isa, Isa};
+    use std::sync::Arc;
+
+    // serving side: scheduler token streams + raw prefill logit bits
+    let sch = QuantScheme::new(2, 32);
+    let core = Arc::new(
+        ModelCore::synthetic(64, 4, 16, 128, 256, 2, sch, 40, 321)
+            .unwrap());
+    let serve = || {
+        let mut sched = Scheduler::new(
+            core.clone(), 3,
+            SchedConfig { max_batch: 2, prefill_chunk: 5,
+                          ..SchedConfig::default() });
+        for i in 0..4usize {
+            let prompt: Vec<i32> = (0..4 + i)
+                .map(|t| ((t * 31 + 11 * (i + 1)) % 256) as i32)
+                .collect();
+            sched.submit(Request::new(prompt, 5,
+                                      Sampler::Temperature(0.8),
+                                      700 + i as u64)).unwrap();
+        }
+        let toks: Vec<Vec<i32>> = sched.run_all().unwrap()
+            .into_iter().map(|c| c.tokens).collect();
+        let mut eng = Engine::from_core(core.clone());
+        let prompt: Vec<i32> =
+            (0..9).map(|t| ((t * 13 + 5) % 256) as i32).collect();
+        let logits: Vec<u32> = eng.prefill(&prompt).unwrap()
+            .iter().map(|v| v.to_bits()).collect();
+        (toks, logits)
+    };
+    assert_eq!(with_isa(Isa::Scalar, &serve), with_isa(detected(), &serve),
+               "serving outputs diverge between scalar and {:?}",
+               detected());
+
+    // training side: a bounded Block-AP run must reproduce its loss
+    // curves and quantized model bit-for-bit across ISAs
+    let rt = backend();
+    let w = world(rt.as_ref());
+    let cfg = rt.manifest().preset(PRESET).unwrap().config.clone();
+    let params = pretrained(rt.as_ref(), 40);
+    let qsch = QuantScheme::new(2, cfg.default_group);
+    let hp = TrainHp {
+        block_samples: 8,
+        block_epochs: 1,
+        block_lr_w: 1e-3,
+        block_lr_q: 1e-3,
+        ..Default::default()
+    };
+    let dom = domain_redpajama();
+    let train = || {
+        let mut cal = LmLoader::new(&w, &dom, 21, cfg.block_batch,
+                                    cfg.block_ctx);
+        let pool = cal.sample_pool(4);
+        let mut val = LmLoader::new(&w, &dom, 22, cfg.block_batch,
+                                    cfg.block_ctx);
+        let val_pool = val.sample_pool(1);
+        let out = run_block_ap(rt.as_ref(), PRESET, &params, qsch, &hp,
+                               &pool, &val_pool)
+            .unwrap();
+        let curve_bits: Vec<Vec<u32>> = out.report.loss_curves.iter()
+            .map(|c| c.iter().map(|l| l.to_bits()).collect())
+            .collect();
+        let z_bits: Vec<u32> =
+            out.model.z_slice().iter().map(|v| v.to_bits()).collect();
+        let wq_bits: Vec<u32> =
+            out.model.wq.iter().map(|v| v.to_bits()).collect();
+        (curve_bits, wq_bits, z_bits)
+    };
+    let (sc_curves, sc_wq, sc_z) = with_isa(Isa::Scalar, &train);
+    let (v_curves, v_wq, v_z) = with_isa(detected(), &train);
+    assert_eq!(sc_curves, v_curves,
+               "Block-AP loss curves diverge between scalar and {:?}",
+               detected());
+    assert_eq!(sc_wq, v_wq, "Block-AP quantized weights diverge");
+    assert_eq!(sc_z, v_z, "Block-AP zero points diverge");
+}
+
 /// KV pool lifecycle on the public API: a slot that served (and
 /// retired) one request is reused by a later request with no stale-KV
 /// leakage - the re-run of an identical request reproduces the

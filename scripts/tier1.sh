@@ -1,21 +1,27 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build + full test suite + warning-free rustdoc +
-# docs link check + a fast-mode inference bench smoke that must produce
-# a valid machine-readable perf snapshot (runs/bench.json, schema 6:
-# inference + native train_step + taped-vs-forward-only eval_forward +
-# the continuous-batching serve section + the paged-KV kv_fork section +
-# the open-loop serve_robust section, whose determinism / bit-equality /
-# leak-freedom contracts are asserted inside the bench and re-checked by
-# `bench check`) + a bounded serve-sim smoke + an open-loop determinism
-# smoke (same seed twice with faults armed must reproduce the same
-# digest) + a bounded end-to-end Block-AP -> E2E-QP training smoke and a
-# forward-only eval smoke on the native backend (no HLO artifacts
-# required). Run from anywhere; operates on the repo root.
+# Tier-1 gate: release build + the full test suite run twice (once with
+# EQAT_SIMD=scalar forcing the bit-pinned reference kernels, once with
+# EQAT_SIMD=auto using the detected ISA - the suites must both pass,
+# which together with the in-suite to_bits sweeps pins the SIMD layer to
+# the scalar contract) + warning-free rustdoc + docs link check + a
+# fast-mode inference bench smoke that must produce a valid
+# machine-readable perf snapshot (runs/bench.json, schema 7: inference +
+# native train_step + taped-vs-forward-only eval_forward + the
+# continuous-batching serve section + the paged-KV kv_fork section + the
+# open-loop serve_robust section + the SIMD kernels section, whose
+# determinism / bit-equality / leak-freedom contracts are asserted
+# inside the bench and re-checked by `bench check`; the detected ISA is
+# recorded in the snapshot's `simd` field) + a bounded serve-sim smoke +
+# an open-loop determinism smoke (same seed twice with faults armed must
+# reproduce the same digest) + a bounded end-to-end Block-AP -> E2E-QP
+# training smoke and a forward-only eval smoke on the native backend (no
+# HLO artifacts required). Run from anywhere; operates on the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
-cargo test -q
+EQAT_SIMD=scalar cargo test -q
+EQAT_SIMD=auto cargo test -q
 
 # docs gate: rustdoc must be warning-free (broken intra-doc links fail
 # the build), and every docs/*.md file referenced from README.md must
@@ -29,12 +35,13 @@ for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
 done
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 6; see
+# runs/bench.json is missing or schema-invalid (schema 7; see
 # docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
-# copy bounds, and the serve_robust section's determinism / survivor
-# bit-equality / leak-freedom contracts, are asserted inside the bench
+# copy bounds, the serve_robust section's determinism / survivor
+# bit-equality / leak-freedom contracts, and the kernels section's
+# scalar-vs-SIMD output bit-equality are asserted inside the bench
 # itself; assert here that the sections actually made it into the
-# snapshot.
+# snapshot (the `simd` field records the ISA the snapshot ran on).
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
 if ! grep -q '"kv_fork"' runs/bench.json; then
@@ -43,6 +50,14 @@ if ! grep -q '"kv_fork"' runs/bench.json; then
 fi
 if ! grep -q '"serve_robust"' runs/bench.json; then
   echo "tier1 FAIL: runs/bench.json has no serve_robust section" >&2
+  exit 1
+fi
+if ! grep -q '"kernels"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no kernels section" >&2
+  exit 1
+fi
+if ! grep -q '"simd"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no simd ISA" >&2
   exit 1
 fi
 
