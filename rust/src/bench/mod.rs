@@ -5,16 +5,15 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 7 = inference sections + native train_step + eval_forward +
+//! (schema 8 = inference sections + native train_step + eval_forward +
 //! the continuous-batching `serve` section + the paged-KV `kv_fork`
 //! section + the open-loop `serve_robust` section + the SIMD `kernels`
-//! section: scalar-vs-vector GB/s and GFLOP/s for the packed low-bit
-//! matvec/matmul kernels, the dense microkernel, and the fake-quant
-//! gradient kernel, with bit-equality between the two paths asserted
-//! inside the bench and the detected ISA recorded in the envelope)
-//! so the perf trajectory is trackable across PRs;
-//! [`check_bench_json`] validates it (used by scripts/tier1.sh).
-//! Schemas 1-6 from older PRs stay accepted. Every section and field is
+//! section + the cross-request `prefix_cache` section: shared-prefix
+//! hit rate, prefill tokens avoided, first-token latency hit-vs-cold,
+//! with hit logits asserted bit-identical to cold prefill and zero
+//! bytes copied on hits) so the perf trajectory is trackable across
+//! PRs; [`check_bench_json`] validates it (used by scripts/tier1.sh).
+//! Schemas 1-7 from older PRs stay accepted. Every section and field is
 //! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
 //! bumping the schema.
 
@@ -32,6 +31,7 @@ use crate::infer::qlinear::{dense_matvec, PackedLinear};
 use crate::infer::sched::{SchedConfig, Scheduler};
 use crate::infer::session::Request;
 use crate::quant::rtn::{minmax_init, quantize};
+use crate::util::clock::Clock;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::simd::{self, Isa};
@@ -177,14 +177,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (kn_md, kn_json) = kernels_throughput(fast)?;
     md.push_str(&kn_md);
+    md.push('\n');
+    let (pc_md, pc_json) = prefix_cache_throughput(fast)?;
+    md.push_str(&pc_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 7 = schema 6 + the SIMD kernel-layer section
-        ("schema", Json::num(7.0)),
+        // schema 8 = schema 7 + the cross-request prefix_cache section
+        ("schema", Json::num(8.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -198,6 +201,7 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("kv_fork", kf_json),
         ("serve_robust", sr_json),
         ("kernels", kn_json),
+        ("prefix_cache", pc_json),
     ]);
     Ok((md, payload))
 }
@@ -361,6 +365,257 @@ pub fn kernels_throughput(fast: bool) -> Result<(String, Json)> {
     let j = Json::obj(vec![
         ("isa", Json::str(isa.name())),
         ("rows", Json::arr(jrows)),
+    ]);
+    Ok((md, j))
+}
+
+/// Cross-request prefix cache: N personas x M users sharing system
+/// prompts through the radix cache over the paged KV pool. Three gates
+/// run before any number is published: (1) cache-hit resumed prefill
+/// produces bit-identical last-token logits to a cold full prefill of
+/// the same prompt; (2) at the scheduler level every user request hits,
+/// copies zero bytes (page sharing is pure refcounting), and emits the
+/// same greedy tokens as a cache-off scheduler; (3) an eviction-churn
+/// run over distinct prompts on a tiny pool evicts (> 0) and still
+/// drains to zero pages after the flush. The published numbers are the
+/// hit rate, prefill tokens avoided, and first-token latency
+/// percentiles hit-vs-cold. Schema-8 `prefix_cache` section of
+/// runs/bench.json.
+pub fn prefix_cache_throughput(fast: bool) -> Result<(String, Json)> {
+    let (dim, nh, hd, inter, vocab) = if fast {
+        (256usize, 4usize, 64usize, 512usize, 1024usize)
+    } else {
+        (1024, 8, 128, 2816, 4096)
+    };
+    let n_layers = 1usize;
+    let sys_len = if fast { 24usize } else { 48 };
+    let users = if fast { 3usize } else { 5 };
+    let personas = 3usize;
+    let suffix_len = 2usize;
+    let max_new = 6usize;
+    let page_rows = 8usize;
+    let max_ctx = sys_len + 16;
+    let per_seq = (max_ctx + page_rows - 1) / page_rows;
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, QuantScheme::new(2, 128),
+        max_ctx, 4444)?);
+    let prompt = |p: usize, u: usize| -> Vec<i32> {
+        let mut t: Vec<i32> = (0..sys_len)
+            .map(|k| ((k * 11 + p * 29 + 5) % vocab) as i32)
+            .collect();
+        t.extend((0..suffix_len)
+            .map(|k| ((u * 7 + k * 13 + 3) % vocab) as i32));
+        t
+    };
+
+    // gate 1: hit-resumed prefill logits are bit-identical to a cold
+    // full prefill of the same prompt (KV rows are a pure function of
+    // the token prefix at absolute positions)
+    {
+        let mut pool =
+            KvPool::for_core_paged(&core, 2 * per_seq, page_rows);
+        pool.enable_prefix_cache();
+        let mut sc = core.scratch();
+        let p = prompt(0, 0);
+        let plen = p.len();
+        let cold = pool.lease_rows(plen).expect("2-seq pool");
+        let mut cold_logits = Vec::new();
+        core.forward_logits(&mut pool, &cold, 0, &p, &mut sc,
+                            &mut cold_logits)?;
+        let inserted = pool.cache_insert(&p, &cold)?;
+        ensure!(inserted > 0, "prefix_cache bench: nothing cached");
+        pool.release(cold);
+        let (hit, matched) = pool
+            .lease_rows_cached(&p[..plen - 1], plen)
+            .expect("hit lease");
+        ensure!(matched > 0 && matched % page_rows == 0,
+                "prefix_cache bench: match not page-aligned ({matched})");
+        let mut hit_logits = Vec::new();
+        core.forward_logits(&mut pool, &hit, matched, &p[matched..],
+                            &mut sc, &mut hit_logits)?;
+        pool.release(hit);
+        let a = &cold_logits[(plen - 1) * vocab..];
+        let b = &hit_logits[(plen - matched - 1) * vocab..];
+        ensure!(
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "prefix_cache bench: hit logits diverge from cold prefill");
+        let flushed = pool.cache_flush();
+        ensure!(flushed == inserted && pool.pages_in_use() == 0,
+                "prefix_cache bench: gate-1 pool did not drain");
+    }
+
+    // gate 2 + timing: warm the cache with one request per persona,
+    // then serve M user requests per persona and compare first-token
+    // latency against a cache-off scheduler running the same requests
+    let mk_sched = |cache: bool| -> Scheduler {
+        let pool = KvPool::for_core_paged(&core, 4 * per_seq, page_rows);
+        Scheduler::with_clock(
+            core.clone(), pool,
+            SchedConfig {
+                max_batch: 4,
+                prefill_chunk: sys_len + suffix_len,
+                prefix_cache: cache,
+                ..SchedConfig::default()
+            },
+            Clock::wall())
+    };
+    let m = personas * users;
+    let reqs: Vec<Request> = (0..m)
+        .map(|i| Request::new(prompt(i % personas, i), max_new,
+                              Sampler::Greedy, 7000 + i as u64))
+        .collect();
+
+    let mut hot = mk_sched(true);
+    for p in 0..personas {
+        hot.submit(Request::new(prompt(p, 900 + p), max_new,
+                                Sampler::Greedy, 6000 + p as u64))?;
+    }
+    let warm = hot.run_all()?;
+    ensure!(warm.iter().all(|c| c.finish.is_ok()),
+            "prefix_cache bench: warm-up request failed");
+    let cached_after_warm = hot.pool().cached_pages();
+    ensure!(cached_after_warm > 0,
+            "prefix_cache bench: warm-up cached nothing");
+
+    let b0 = hot.pool().bytes_copied();
+    for r in &reqs {
+        hot.submit(r.clone())?;
+    }
+    let t0 = Instant::now();
+    let mut hit_comps = hot.run_all()?;
+    let hit_secs = t0.elapsed().as_secs_f64();
+    let st = hot.stats();
+    ensure!(st.cache_hits == m as u64,
+            "prefix_cache bench: {} hits, wanted {m}", st.cache_hits);
+    ensure!(st.cache_misses == personas as u64,
+            "prefix_cache bench: {} misses, wanted {personas}",
+            st.cache_misses);
+    ensure!(st.tokens_prefill_avoided >= (m * sys_len) as u64,
+            "prefix_cache bench: only {} prefill tokens avoided",
+            st.tokens_prefill_avoided);
+    ensure!(hot.pool().bytes_copied() == b0,
+            "prefix_cache bench: cache hits copied bytes (COW on a \
+             shared page)");
+
+    let mut cold_s = mk_sched(false);
+    for r in &reqs {
+        cold_s.submit(r.clone())?;
+    }
+    let t1 = Instant::now();
+    let mut cold_comps = cold_s.run_all()?;
+    let cold_secs = t1.elapsed().as_secs_f64();
+    ensure!(cold_s.stats().cache_hits == 0);
+    hit_comps.sort_by_key(|c| c.id);
+    cold_comps.sort_by_key(|c| c.id);
+    ensure!(hit_comps.len() == m && cold_comps.len() == m);
+    for (h, c) in hit_comps.iter().zip(&cold_comps) {
+        ensure!(h.tokens == c.tokens,
+                "prefix_cache bench: hit-path greedy tokens diverge \
+                 from the cache-off scheduler");
+    }
+    let hit_firsts: Vec<f64> =
+        hit_comps.iter().map(|c| c.first_token_secs * 1e3).collect();
+    let cold_firsts: Vec<f64> =
+        cold_comps.iter().map(|c| c.first_token_secs * 1e3).collect();
+    let p50_hit = percentile(&hit_firsts, 50.0);
+    let p95_hit = percentile(&hit_firsts, 95.0);
+    let p50_cold = percentile(&cold_firsts, 50.0);
+    let p95_cold = percentile(&cold_firsts, 95.0);
+    ensure!(p50_hit < p50_cold,
+            "prefix_cache bench: hit first-token p50 {p50_hit:.3}ms not \
+             below cold {p50_cold:.3}ms");
+    let flushed = hot.flush_prefix_cache();
+    ensure!(flushed > 0 && hot.pool().pages_in_use() == 0,
+            "prefix_cache bench: hot scheduler leaked pages");
+    ensure!(cold_s.pool().pages_in_use() == 0);
+
+    // gate 3: eviction churn - distinct prompts on a tiny pool must
+    // evict cold cache pages and still drain to zero
+    let churn_reqs = 10usize;
+    let mut churn = Scheduler::with_clock(
+        core.clone(),
+        KvPool::for_core_paged(&core, 2 * per_seq, page_rows),
+        SchedConfig {
+            max_batch: 2,
+            prefill_chunk: sys_len,
+            prefix_cache: true,
+            ..SchedConfig::default()
+        },
+        Clock::wall());
+    for i in 0..churn_reqs {
+        let p: Vec<i32> = (0..sys_len)
+            .map(|k| ((i * 17 + k * 5 + 1) % vocab) as i32)
+            .collect();
+        churn.submit(Request::new(p, 4, Sampler::Greedy,
+                                  8000 + i as u64))?;
+    }
+    let churn_comps = churn.run_all()?;
+    ensure!(churn_comps.len() == churn_reqs
+                && churn_comps.iter().all(|c| c.finish.is_ok()),
+            "prefix_cache bench: churn request failed");
+    let evictions = churn.stats().cache_evictions;
+    ensure!(evictions > 0,
+            "prefix_cache bench: churn run never evicted");
+    churn.flush_prefix_cache();
+    ensure!(churn.pool().pages_in_use() == 0,
+            "prefix_cache bench: churn run leaked pages");
+
+    let hit_rate = st.cache_hits as f64
+        / (st.cache_hits + st.cache_misses).max(1) as f64;
+    let avoided = st.tokens_prefill_avoided;
+    let speedup = p50_cold / p50_hit.max(1e-9);
+    crate::info!("prefix_cache bench: {m} hits at {:.0}% hit rate, \
+                  {avoided} prefill tokens avoided, first token \
+                  {p50_hit:.2}ms hit vs {p50_cold:.2}ms cold \
+                  ({speedup:.2}x)", hit_rate * 100.0);
+
+    let rows = vec![
+        vec!["config".into(),
+             format!("dim {dim}, {n_layers} block(s), {personas} \
+                      personas x {users} users, {sys_len}-token system \
+                      prompts over {page_rows}-row pages")],
+        vec!["hit rate (after warm-up)".into(),
+             format!("{}/{} ({:.0}%)", st.cache_hits,
+                     st.cache_hits + st.cache_misses, hit_rate * 100.0)],
+        vec!["prefill tokens avoided".into(), format!("{avoided}")],
+        vec!["bytes copied on hits".into(), "0 B (asserted)".into()],
+        vec!["first token, cache hit".into(),
+             format!("p50 {p50_hit:.2}ms  p95 {p95_hit:.2}ms")],
+        vec!["first token, cold".into(),
+             format!("p50 {p50_cold:.2}ms  p95 {p95_cold:.2}ms")],
+        vec!["first-token speedup (p50)".into(),
+             format!("{speedup:.2}x")],
+        vec!["batch walltime hit vs cold".into(),
+             format!("{:.1}ms vs {:.1}ms", hit_secs * 1e3,
+                     cold_secs * 1e3)],
+        vec!["eviction churn".into(),
+             format!("{evictions} evictions, 0 pages leaked")],
+    ];
+    let md = format!(
+        "## Cross-request prefix cache - shared system prompts served \
+         by refcount (hit logits bit-identical to cold prefill, \
+         asserted)\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("page_rows", Json::num(page_rows as f64)),
+        ("personas", Json::num(personas as f64)),
+        ("users", Json::num(m as f64)),
+        ("sys_tokens", Json::num(sys_len as f64)),
+        ("hits", Json::num(st.cache_hits as f64)),
+        ("misses", Json::num(st.cache_misses as f64)),
+        ("hit_rate", Json::num(hit_rate)),
+        ("tokens_prefill_avoided", Json::num(avoided as f64)),
+        ("evictions", Json::num(evictions as f64)),
+        ("first_token_p50_hit_ms", Json::num(p50_hit)),
+        ("first_token_p95_hit_ms", Json::num(p95_hit)),
+        ("first_token_p50_cold_ms", Json::num(p50_cold)),
+        ("first_token_p95_cold_ms", Json::num(p95_cold)),
+        ("prefill_speedup", Json::num(speedup)),
+        ("hit_fork_bytes", Json::num(0.0)),
+        ("bitexact", Json::Bool(true)),
+        ("leaked_pages", Json::num(0.0)),
     ]);
     Ok((md, j))
 }
@@ -727,6 +982,9 @@ pub fn serve_robust_throughput(fast: bool) -> Result<(String, Json)> {
         prefill_chunk: prompt_len,
         max_queue: 8,
         fault_rate: 0.0,
+        personas: 0,
+        page_rows: 0,
+        prefix_cache: false,
     };
 
     // robustness gate 1: survivors of a clean, uncontended run are
@@ -1264,15 +1522,16 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 /// parses, checks the schema (1 legacy, 2 adds train_step, 3 adds
 /// eval_forward, 4 adds the continuous-batching serve section, 5 adds
 /// the paged-KV kv_fork section, 6 adds the open-loop serve_robust
-/// section, 7 adds the SIMD kernels section - see docs/BENCH_SCHEMA.md),
-/// and requires non-empty matvec/decode sections with numeric fields.
+/// section, 7 adds the SIMD kernels section, 8 adds the cross-request
+/// prefix_cache section - see docs/BENCH_SCHEMA.md), and requires
+/// non-empty matvec/decode sections with numeric fields.
 /// scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=7).contains(&schema) {
+    if !(1..=8).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -1442,6 +1701,55 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             }
         }
     }
+    // schema 8 adds the cross-request prefix_cache section; the checker
+    // re-asserts the caching contract the numbers encode: hits happened,
+    // hits avoided real prefill work and beat cold first-token latency,
+    // page sharing copied nothing, hit logits matched cold prefill
+    // bit-for-bit, and nothing leaked
+    if schema >= 8 {
+        let pc = j.get("prefix_cache")?;
+        let hits = pc.get("hits")?.as_f64()?;
+        if !hits.is_finite() || hits < 1.0 {
+            bail!("{path}: prefix_cache.hits {hits} < 1");
+        }
+        let hr = pc.get("hit_rate")?.as_f64()?;
+        if !hr.is_finite() || !(hr > 0.0 && hr <= 1.0) {
+            bail!("{path}: prefix_cache.hit_rate {hr} outside (0, 1]");
+        }
+        let avoided = pc.get("tokens_prefill_avoided")?.as_f64()?;
+        if !avoided.is_finite() || avoided <= 0.0 {
+            bail!("{path}: prefix_cache.tokens_prefill_avoided \
+                   {avoided} <= 0");
+        }
+        for key in ["page_rows", "personas", "users", "sys_tokens",
+                    "misses", "evictions", "first_token_p50_hit_ms",
+                    "first_token_p95_hit_ms", "first_token_p50_cold_ms",
+                    "first_token_p95_cold_ms", "prefill_speedup"] {
+            let v = pc.get(key)?.as_f64()?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{path}: bad prefix_cache.{key} {v}");
+            }
+        }
+        let p50_hit = pc.get("first_token_p50_hit_ms")?.as_f64()?;
+        let p50_cold = pc.get("first_token_p50_cold_ms")?.as_f64()?;
+        if p50_hit >= p50_cold {
+            bail!("{path}: prefix_cache first-token p50 hit {p50_hit} \
+                   not below cold {p50_cold}");
+        }
+        let fb = pc.get("hit_fork_bytes")?.as_f64()?;
+        if fb != 0.0 {
+            bail!("{path}: prefix_cache.hit_fork_bytes {fb} != 0 (hits \
+                   must share pages by refcount, never copy)");
+        }
+        if !pc.get("bitexact")?.as_bool()? {
+            bail!("{path}: prefix_cache.bitexact is false (hit logits \
+                   diverged from cold prefill)");
+        }
+        let leaked = pc.get("leaked_pages")?.as_f64()?;
+        if leaked != 0.0 {
+            bail!("{path}: prefix_cache.leaked_pages {leaked} != 0");
+        }
+    }
     Ok(())
 }
 
@@ -1502,7 +1810,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(7.0)),
+            ("schema", Json::num(8.0)),
             ("kind", Json::str("inference_throughput")),
             ("simd", Json::str("avx2")),
             (
@@ -1612,6 +1920,28 @@ mod tests {
                     ),
                 ]),
             ),
+            (
+                "prefix_cache",
+                Json::obj(vec![
+                    ("page_rows", Json::num(8.0)),
+                    ("personas", Json::num(3.0)),
+                    ("users", Json::num(9.0)),
+                    ("sys_tokens", Json::num(24.0)),
+                    ("hits", Json::num(9.0)),
+                    ("misses", Json::num(3.0)),
+                    ("hit_rate", Json::num(0.75)),
+                    ("tokens_prefill_avoided", Json::num(216.0)),
+                    ("evictions", Json::num(4.0)),
+                    ("first_token_p50_hit_ms", Json::num(0.4)),
+                    ("first_token_p95_hit_ms", Json::num(0.9)),
+                    ("first_token_p50_cold_ms", Json::num(2.1)),
+                    ("first_token_p95_cold_ms", Json::num(3.5)),
+                    ("prefill_speedup", Json::num(5.25)),
+                    ("hit_fork_bytes", Json::num(0.0)),
+                    ("bitexact", Json::Bool(true)),
+                    ("leaked_pages", Json::num(0.0)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -1619,9 +1949,10 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-7 file without its required sections is rejected...
+        // schema-8 file without its required sections is rejected...
         for missing in ["train_step", "eval_forward", "serve", "kv_fork",
-                        "serve_robust", "kernels", "simd"] {
+                        "serve_robust", "kernels", "simd",
+                        "prefix_cache"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -1697,20 +2028,23 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "bad serve_robust.{key} accepted");
         }
-        // ...but the core sections under legacy schemas 1-6 stay valid
-        // (6 keeps serve_robust, 5 keeps kv_fork, 4 keeps serve, 3 keeps
-        // eval_forward, 1/2 drop those too)
+        // ...but the core sections under legacy schemas 1-7 stay valid
+        // (7 keeps kernels, 6 keeps serve_robust, 5 keeps kv_fork, 4
+        // keeps serve, 3 keeps eval_forward, 1/2 drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["kernels", "simd", "serve_robust", "kv_fork",
-                          "serve", "eval_forward", "schema"]),
-            (2.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
-                       "serve", "eval_forward", "schema"]),
-            (3.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
-                       "serve", "schema"]),
-            (4.0, vec!["kernels", "simd", "serve_robust", "kv_fork",
+            (1.0f64, vec!["prefix_cache", "kernels", "simd",
+                          "serve_robust", "kv_fork", "serve",
+                          "eval_forward", "schema"]),
+            (2.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
+                       "kv_fork", "serve", "eval_forward", "schema"]),
+            (3.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
+                       "kv_fork", "serve", "schema"]),
+            (4.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
+                       "kv_fork", "schema"]),
+            (5.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
                        "schema"]),
-            (5.0, vec!["kernels", "simd", "serve_robust", "schema"]),
-            (6.0, vec!["kernels", "simd", "schema"]),
+            (6.0, vec!["prefix_cache", "kernels", "simd", "schema"]),
+            (7.0, vec!["prefix_cache", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

@@ -45,19 +45,25 @@ COMMANDS
                         page-pool occupancy (peak pages, COW bytes)
                         [--requests N --slots N --tokens N --prompt-len L
                          --prefill-chunk N --seed S --model FILE];
+                        --shared-prefix switches to an N-personas x
+                        M-users mix (fixed system prompts + short user
+                        suffixes) with the cross-request prefix cache on,
+                        reporting hits/misses/prefill-tokens-avoided/
+                        evictions [--personas N --page-rows R --no-cache];
                         --open-loop switches to deterministic Poisson
                         arrivals on the virtual clock with deadlines,
                         bounded-queue backpressure, and seeded fault
                         injection [--rate R --tick-ms MS --deadline-ms MS
-                         --max-queue N --fail-rate P]
+                         --max-queue N --fail-rate P] (composes with
+                        --shared-prefix)
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
   bench <which>         qlinear (Table 10) | inference (threaded decode +
                         batched prefill + native train_step + eval_forward
                         + serve + paged-KV kv_fork + open-loop
-                        serve_robust sections -> runs/bench.json,
-                        schema 6; see
+                        serve_robust + SIMD kernels + prefix_cache
+                        sections -> runs/bench.json, schema 8; see
                         docs/BENCH_SCHEMA.md) | check (validate
                         runs/bench.json) | train-time (Tables 8/9)
                         [--fast]

@@ -43,12 +43,27 @@
 //! contiguous cache - the serving determinism contract (bit-identical
 //! logits at any batch size, chunking, thread count, and now page size)
 //! is unchanged.
+//!
+//! **Cross-request prefix cache** (opt-in via
+//! [`KvPool::enable_prefix_cache`]): a radix index
+//! ([`PrefixCache`](crate::infer::prefixcache::PrefixCache)) from token
+//! prefix to page-table prefix. [`KvPool::cache_insert`] records a
+//! retiring sequence's full pages by refcount (no copy);
+//! [`KvPool::lease_rows_cached`] serves the longest cached page-aligned
+//! prefix back to a new lease the same way `fork` shares pages - and
+//! right-sizes the reservation to only the rows past the match, so hits
+//! admit under pressure that would queue a cold request. When a
+//! reservation would not otherwise fit, the allocation paths evict
+//! cache-only pages (LRU, refcount == 1) before giving up, so the cache
+//! borrows idle pool capacity without ever breaking the reservation
+//! invariant.
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::infer::core::ModelCore;
+use crate::infer::prefixcache::PrefixCache;
 use crate::util::failpoint;
 
 /// Default rows per page. Small enough that a forked tail copy is cheap,
@@ -119,6 +134,9 @@ pub struct KvPool {
     peak_pages: usize,
     /// ids of leases dropped without release, pending [`KvPool::reap`]
     graveyard: Arc<Mutex<Vec<usize>>>,
+    /// cross-request prefix cache (None until
+    /// [`KvPool::enable_prefix_cache`])
+    cache: Option<PrefixCache>,
 }
 
 impl KvPool {
@@ -157,6 +175,7 @@ impl KvPool {
             bytes_copied: 0,
             peak_pages: 0,
             graveyard: Arc::new(Mutex::new(Vec::new())),
+            cache: None,
         }
     }
 
@@ -237,6 +256,9 @@ impl KvPool {
     pub fn lease_rows(&mut self, rows: usize) -> Option<KvLease> {
         self.reap();
         let need = self.pages_needed(rows);
+        if need > self.n_free_pages() {
+            self.reclaim_for(need);
+        }
         if need > self.n_free_pages() {
             return None;
         }
@@ -330,6 +352,9 @@ impl KvPool {
         // every page past it, i.e. pages [pos/pr, ceil(end/pr))
         let need = if end > pos { pages_for(end, pr) - pos / pr } else { 0 };
         if need > self.n_free_pages() {
+            self.reclaim_for(need);
+        }
+        if need > self.n_free_pages() {
             return None;
         }
         let id = match self.free_seqs.pop() {
@@ -394,6 +419,122 @@ impl KvPool {
         self.seqs[lease.id].pages.len()
     }
 
+    /// Turn on the cross-request prefix cache (idempotent). Off by
+    /// default: with it off, `lease_rows_cached` degrades to
+    /// [`KvPool::lease_rows`] and `cache_insert` is a no-op.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.cache.is_none() {
+            self.cache = Some(PrefixCache::new(self.page_rows));
+        }
+    }
+
+    /// Is the prefix cache enabled?
+    pub fn cache_enabled(&self) -> bool {
+        self.cache.is_some()
+    }
+
+    /// Pages currently held by the prefix cache.
+    pub fn cached_pages(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.n_pages())
+    }
+
+    /// Cache pages evicted under reservation pressure so far.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.as_ref().map_or(0, |c| c.evictions())
+    }
+
+    /// Record `lease`'s KV for `tokens` in the prefix cache: every page
+    /// wholly covered by `tokens` is referenced by the trie (refcount
+    /// bump, zero bytes copied). Call on retirement, *before* releasing
+    /// the lease. All-or-nothing: the `cache.insert` failpoint fires
+    /// before any bookkeeping changes, so a faulted insert leaves no
+    /// partial entry and the caller releases the lease normally.
+    pub fn cache_insert(&mut self, tokens: &[i32], lease: &KvLease)
+                        -> Result<usize> {
+        if self.cache.is_none() {
+            return Ok(0);
+        }
+        failpoint::check("cache.insert")?;
+        let full = tokens.len() / self.page_rows;
+        let n = full.min(self.seqs[lease.id].pages.len());
+        if n == 0 {
+            return Ok(0);
+        }
+        let mut cache = self.cache.take().expect("checked above");
+        let added = cache.insert(&tokens[..n * self.page_rows],
+                                 &self.seqs[lease.id].pages[..n],
+                                 &mut self.refcount);
+        self.cache = Some(cache);
+        Ok(added)
+    }
+
+    /// [`KvPool::lease_rows`] with a prefix-cache lookup: the longest
+    /// cached page-aligned prefix of `key` is shared into the new table
+    /// by refcount (zero bytes, zero prefill compute for those rows) and
+    /// the reservation covers only the pages *past* the match - the
+    /// admission right-sizing that lets hits through pressure that
+    /// queues cold requests. Returns `(lease, matched_rows)`; a cold
+    /// pool or disabled cache yields `matched_rows == 0`.
+    pub fn lease_rows_cached(&mut self, key: &[i32], rows: usize)
+                             -> Option<(KvLease, usize)> {
+        self.reap();
+        let hit = match self.cache.as_mut() {
+            None => Vec::new(),
+            Some(c) => c.lookup(key),
+        };
+        // pin the hit pages before any reclaim can run, so eviction
+        // pressure from our own reservation cannot free them
+        for &p in &hit {
+            self.refcount[p as usize] += 1;
+        }
+        let matched = hit.len();
+        let need = self.pages_needed(rows).saturating_sub(matched);
+        if need > self.n_free_pages() {
+            self.reclaim_for(need);
+        }
+        if need > self.n_free_pages() {
+            // roll back the pins; the cache still holds one ref on each
+            // hit page, so none of these can reach zero
+            for &p in &hit {
+                self.refcount[p as usize] -= 1;
+            }
+            return None;
+        }
+        let matched_rows = matched * self.page_rows;
+        let id = match self.free_seqs.pop() {
+            Some(id) => id,
+            None => {
+                self.seqs.push(SeqState { pages: Vec::new(), reserved: 0 });
+                self.seqs.len() - 1
+            }
+        };
+        self.seqs[id].pages = hit;
+        self.seqs[id].reserved = need;
+        self.total_reserved += need;
+        Some((self.make_lease(id), matched_rows))
+    }
+
+    /// Drop every cache reference (pages pinned by live leases survive;
+    /// the rest return to the free list). Returns how many cache refs
+    /// were released. Drain-time leak checks flush first, then assert
+    /// `pages_in_use() == 0`.
+    pub fn cache_flush(&mut self) -> usize {
+        let Some(mut cache) = self.cache.take() else { return 0 };
+        let n = cache.flush(&mut self.refcount, &mut self.free);
+        self.cache = Some(cache);
+        n
+    }
+
+    /// Evict cold cache-only pages (LRU, refcount == 1) until `need`
+    /// pages are free beyond reservations or nothing is evictable.
+    fn reclaim_for(&mut self, need: usize) {
+        let Some(mut cache) = self.cache.take() else { return };
+        while need > self.free.len() - self.total_reserved
+            && cache.evict_one(&mut self.refcount, &mut self.free)
+        {}
+        self.cache = Some(cache);
+    }
+
     /// Draw one fresh page for `id`, preferring its reservation and
     /// falling back to unreserved spare pages (a parent COW-ing a page it
     /// already drew once, after forking). Errors only when the pool is
@@ -407,9 +548,15 @@ impl KvPool {
         if self.seqs[id].reserved > 0 {
             self.seqs[id].reserved -= 1;
             self.total_reserved -= 1;
-        } else if self.free.len() <= self.total_reserved {
-            bail!("KV page pool exhausted ({} pages, all reserved)",
-                  self.n_pages());
+        } else {
+            if self.free.len() <= self.total_reserved {
+                // an unreserved spare draw may reclaim cold cache pages
+                self.reclaim_for(1);
+            }
+            if self.free.len() <= self.total_reserved {
+                bail!("KV page pool exhausted ({} pages, all reserved)",
+                      self.n_pages());
+            }
         }
         let p = self.free.pop().expect("free list >= reservations");
         self.refcount[p as usize] = 1;
@@ -826,5 +973,136 @@ mod tests {
         assert_eq!(b.id(), aid, "table id not recycled");
         assert_eq!(p.seq_pages(&b), 0, "stale page table leaked");
         p.release(b);
+    }
+
+    #[test]
+    fn cache_hit_shares_pages_and_rightsizes_reservation() {
+        let mut p = pool(6, 2, 12);
+        p.enable_prefix_cache();
+        let a = p.lease_rows(6).unwrap();
+        p.prepare_rows(&a, 0, 6).unwrap();
+        for pos in 0..6 {
+            for layer in 0..L {
+                fill_row(&mut p, &a, layer, pos, (pos * 10) as f32);
+            }
+        }
+        let toks: Vec<i32> = (0..6).collect();
+        assert_eq!(p.cache_insert(&toks, &a).unwrap(), 3);
+        p.release(a);
+        // the cache retains the retired request's pages
+        assert_eq!(p.pages_in_use(), 3);
+        assert_eq!(p.cached_pages(), 3);
+
+        // a 5-token key matches 2 full pages (4 rows at page_rows 2)
+        let (b, matched) = p.lease_rows_cached(&toks[..5], 8).unwrap();
+        assert_eq!(matched, 4);
+        assert_eq!(p.seq_pages(&b), 2);
+        // right-sizing: 8 rows need 4 pages, 2 are cached, so only 2
+        // fresh pages are reserved out of the 3 free
+        assert_eq!(p.n_free_pages(), 1);
+        // shared rows are the retired request's bytes, verbatim
+        for pos in 0..4 {
+            assert_eq!(row_tag(&p, &b, 0, pos), (pos * 10) as f32);
+        }
+        // resuming the write past the page-aligned match point never
+        // touches a shared page: zero COW bytes on the hit path
+        let bc = p.bytes_copied();
+        p.prepare_rows(&b, 4, 4).unwrap();
+        assert_eq!(p.bytes_copied(), bc, "hit path must copy zero bytes");
+        p.release(b);
+        assert_eq!(p.cache_flush(), 3);
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.n_free_pages(), 6);
+    }
+
+    #[test]
+    fn reservation_pressure_evicts_lru_cache_pages_only() {
+        let mut p = pool(4, 2, 8);
+        p.enable_prefix_cache();
+        // two retired 4-row prompts fill the whole pool with cache pages
+        let t1 = vec![1, 2, 3, 4];
+        let t2 = vec![5, 6, 7, 8];
+        for t in [&t1, &t2] {
+            let l = p.lease_rows(4).unwrap();
+            p.prepare_rows(&l, 0, 4).unwrap();
+            assert_eq!(p.cache_insert(t, &l).unwrap(), 2);
+            p.release(l);
+        }
+        assert_eq!(p.cached_pages(), 4);
+        assert_eq!(p.n_free_pages(), 0);
+        // touch t1 so t2 becomes the LRU entry; a full hit needs no
+        // fresh pages so it admits on a zero-free pool
+        let (h, m) = p.lease_rows_cached(&t1, 4).unwrap();
+        assert_eq!(m, 4);
+        p.release(h);
+        // a cold lease needs 2 pages: exactly t2's (LRU) pages go
+        let cold = p.lease_rows(4).expect("eviction must make room");
+        assert_eq!(p.cache_evictions(), 2);
+        assert_eq!(p.cached_pages(), 2);
+        // the evicted prefix is now a clean miss...
+        p.release(cold);
+        let (h2, m2) = p.lease_rows_cached(&t2, 4).unwrap();
+        assert_eq!(m2, 0, "evicted prefix must miss, not serve stale KV");
+        // ...while the recently-used one still hits
+        let (h1, m1) = p.lease_rows_cached(&t1, 4).unwrap();
+        assert_eq!(m1, 4);
+        p.release(h2);
+        p.release(h1);
+        p.cache_flush();
+        assert_eq!(p.pages_in_use(), 0);
+        assert_eq!(p.n_free_pages(), 4);
+    }
+
+    #[test]
+    fn pinned_cache_pages_survive_pressure_and_lookup_failure_rolls_back() {
+        let mut p = pool(4, 2, 8);
+        p.enable_prefix_cache();
+        let l = p.lease_rows(4).unwrap();
+        p.prepare_rows(&l, 0, 4).unwrap();
+        let toks = vec![1, 2, 3, 4];
+        p.cache_insert(&toks, &l).unwrap();
+        p.release(l);
+        // a live hit pins the cached pages (refcount 2)
+        let (h, m) = p.lease_rows_cached(&toks, 6).unwrap();
+        assert_eq!(m, 4);
+        // 6 rows = 3 pages, 2 cached -> 1 fresh reserved; 1 page spare
+        assert_eq!(p.n_free_pages(), 1);
+        // a cold request needing 2 pages cannot evict the pinned pages
+        // and must queue; the failed lookup rolls its pins back cleanly
+        assert!(p.lease_rows_cached(&[9, 9, 9, 9], 4).is_none());
+        assert_eq!(p.cache_evictions(), 0, "pinned pages were evicted");
+        assert_eq!(p.cached_pages(), 2);
+        // the live hit still reads valid rows and can keep writing
+        p.prepare_rows(&h, 4, 2).unwrap();
+        p.release(h);
+        p.cache_flush();
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn faulted_cache_insert_leaves_no_partial_entry() {
+        use crate::util::failpoint;
+        let mut p = pool(4, 2, 8);
+        p.enable_prefix_cache();
+        let l = p.lease_rows(4).unwrap();
+        p.prepare_rows(&l, 0, 4).unwrap();
+        let toks = vec![1, 2, 3, 4];
+        let err = failpoint::with(3, &[("cache.insert", 1.0)], || {
+            p.cache_insert(&toks, &l)
+        });
+        assert!(err.is_err(), "armed cache.insert must fail");
+        assert_eq!(p.cached_pages(), 0, "partial insert reached the trie");
+        p.release(l);
+        assert_eq!(p.pages_in_use(), 0, "faulted insert leaked pages");
+        // disarmed: the same insert lands and is served back
+        let l = p.lease_rows(4).unwrap();
+        p.prepare_rows(&l, 0, 4).unwrap();
+        assert_eq!(p.cache_insert(&toks, &l).unwrap(), 2);
+        p.release(l);
+        let (h, m) = p.lease_rows_cached(&toks, 4).unwrap();
+        assert_eq!(m, 4);
+        p.release(h);
+        assert_eq!(p.cache_flush(), 2);
+        assert_eq!(p.pages_in_use(), 0);
     }
 }

@@ -2,7 +2,9 @@
 //! [`core::ModelCore`] shared across requests, per-request
 //! [`session::Session`] state over the paged, refcounted [`kv::KvPool`]
 //! (zero-copy prefix sharing via [`kv::KvPool::fork`]), the
-//! continuous-batching [`sched::Scheduler`], the deterministic
+//! cross-request radix prefix cache [`prefixcache::PrefixCache`]
+//! (retired prompts re-served by refcount, LRU-evicted under pressure),
+//! the continuous-batching [`sched::Scheduler`], the deterministic
 //! [`openloop`] arrival simulator that exercises its failure model
 //! (deadlines, backpressure, fault injection), and the single-session
 //! [`engine::Engine`] facade (see `infer::engine` docs for the
@@ -12,6 +14,7 @@ pub mod engine;
 pub mod generate;
 pub mod kv;
 pub mod openloop;
+pub mod prefixcache;
 pub mod qlinear;
 pub mod sched;
 pub mod session;

@@ -13,6 +13,12 @@
 //! its FNV-1a [`digest`](OpenLoopReport::digest) over every completion's
 //! `(id, finish, tokens)` - the `serve_robust` bench section and the
 //! tier-1 smoke both pin run-to-run digest equality.
+//!
+//! [`OpenLoopCfg::personas`] switches the arrival mix to shared-prefix
+//! traffic (N fixed system prompts, short per-request user suffixes),
+//! which together with [`OpenLoopCfg::prefix_cache`] exercises the
+//! cross-request radix prefix cache end to end: hit admissions, LRU
+//! eviction under pool pressure, and the faultable `cache.insert` site.
 
 use std::sync::Arc;
 
@@ -53,6 +59,19 @@ pub struct OpenLoopCfg {
     pub max_queue: usize,
     /// per-site failpoint probability; 0 runs with faults disarmed
     pub fault_rate: f64,
+    /// shared-prefix request mix: with `personas > 0`, every request is
+    /// one of `personas` fixed `prompt_len`-token system prompts plus a
+    /// short (1-3 token) user suffix - the workload the cross-request
+    /// prefix cache exists for. 0 = the classic independent-prompt mix
+    /// (whose arrival stream is byte-identical to before this knob).
+    pub personas: usize,
+    /// explicit page geometry: rows per page (0 = the pool default).
+    /// Shared-prefix runs shrink this so system prompts span whole
+    /// pages; total capacity stays `slots` full sequences either way.
+    pub page_rows: usize,
+    /// enable the cross-request prefix cache
+    /// ([`SchedConfig::prefix_cache`])
+    pub prefix_cache: bool,
 }
 
 impl Default for OpenLoopCfg {
@@ -70,6 +89,9 @@ impl Default for OpenLoopCfg {
             prefill_chunk: 8,
             max_queue: 16,
             fault_rate: 0.0,
+            personas: 0,
+            page_rows: 0,
+            prefix_cache: false,
         }
     }
 }
@@ -112,6 +134,16 @@ pub struct OpenLoopReport {
     pub peak_live: usize,
     /// KV pages still held after the drain - always 0 (asserted)
     pub leaked_pages: usize,
+    /// admissions served partly from the prefix cache (0 with it off)
+    pub cache_hits: u64,
+    /// admissions that found no cached prefix (cache on only)
+    pub cache_misses: u64,
+    /// prompt tokens whose prefill was skipped via cache hits
+    pub tokens_prefill_avoided: u64,
+    /// cache pages reclaimed under pool pressure during the run
+    pub cache_evictions: u64,
+    /// pages the cache held at drain end (flushed before the leak check)
+    pub cached_pages: usize,
     /// virtual seconds elapsed over the whole run
     pub virtual_secs: f64,
     /// FNV-1a over every completion's (id, finish tag, tokens) plus the
@@ -156,11 +188,31 @@ fn draw_arrivals(cfg: &OpenLoopCfg, max_ctx: usize) -> Vec<Arrival> {
     let mut out = Vec::with_capacity(cfg.requests);
     for i in 0..cfg.requests {
         at += -(1.0 - rng.f64()).ln() / rate;
-        let plen = 1 + rng.below(cfg.prompt_len.max(1));
-        let budget = 1 + rng.below(cfg.max_new.max(1));
-        let prompt: Vec<i32> = (0..plen)
-            .map(|k| ((k * 7 + i * 13 + 3) % 89) as i32)
-            .collect();
+        let (prompt, budget) = if cfg.personas > 0 {
+            // shared-prefix mix: a per-persona fixed system prompt of
+            // `prompt_len` tokens plus a 1-3 token user suffix
+            let p = rng.below(cfg.personas);
+            let slen = 1 + rng.below(3);
+            let budget = 1 + rng.below(cfg.max_new.max(1));
+            let mut toks: Vec<i32> = (0..cfg.prompt_len.max(1))
+                .map(|k| ((k * 11 + p * 29 + 5) % 89) as i32)
+                .collect();
+            toks.extend(
+                (0..slen).map(|k| ((k * 7 + i * 13 + 3) % 89) as i32));
+            toks.truncate(max_ctx.max(1));
+            (toks, budget)
+        } else {
+            // classic mix: independent prompts, uniform lengths. The
+            // RNG draw order here must stay byte-identical to the
+            // pre-personas simulator so old seeds reproduce old runs.
+            let plen = 1 + rng.below(cfg.prompt_len.max(1));
+            let budget = 1 + rng.below(cfg.max_new.max(1));
+            let prompt: Vec<i32> = (0..plen)
+                .map(|k| ((k * 7 + i * 13 + 3) % 89) as i32)
+                .collect();
+            (prompt, budget)
+        };
+        let plen = prompt.len();
         // cap the worst case at the context so nothing is NeverFits
         let budget = budget.min(max_ctx.saturating_sub(plen) + 1).max(1);
         let mut req = Request::new(
@@ -182,14 +234,22 @@ fn draw_arrivals(cfg: &OpenLoopCfg, max_ctx: usize) -> Vec<Arrival> {
 fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
          -> Result<(OpenLoopReport, Vec<Completion>)> {
     let arrivals = draw_arrivals(cfg, core.max_ctx);
-    let pool = crate::infer::kv::KvPool::for_core(&core,
-                                                  cfg.slots.max(1));
+    let pool = if cfg.page_rows > 0 {
+        // explicit geometry, same total capacity: `slots` sequences
+        let pr = cfg.page_rows;
+        let per_seq = (core.max_ctx.max(1) + pr - 1) / pr;
+        crate::infer::kv::KvPool::for_core_paged(
+            &core, cfg.slots.max(1) * per_seq, pr)
+    } else {
+        crate::infer::kv::KvPool::for_core(&core, cfg.slots.max(1))
+    };
     let mut sched = Scheduler::with_clock(
         core, pool,
         SchedConfig {
             max_batch: cfg.max_batch,
             prefill_chunk: cfg.prefill_chunk,
             max_queue: cfg.max_queue,
+            prefix_cache: cfg.prefix_cache,
             ..SchedConfig::default()
         },
         Clock::manual());
@@ -221,6 +281,14 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
                 "open-loop run failed to drain in 1M ticks");
     }
     let virtual_secs = sched.clock().now();
+    let stats = sched.stats();
+    // Release the cache's refcounts before the leak check: every page
+    // still in use afterwards is a genuine lease leak.
+    let cached_pages = sched.pool().cached_pages();
+    let flushed = sched.flush_prefix_cache();
+    ensure!(flushed == cached_pages,
+            "cache flush released {flushed} pages, index held \
+             {cached_pages}");
     let leaked_pages = sched.pool().pages_in_use();
     ensure!(leaked_pages == 0,
             "open-loop run leaked {leaked_pages} KV pages");
@@ -246,6 +314,11 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
         queue_depth_max: depth_max,
         peak_live,
         leaked_pages,
+        cache_hits: stats.cache_hits,
+        cache_misses: stats.cache_misses,
+        tokens_prefill_avoided: stats.tokens_prefill_avoided,
+        cache_evictions: stats.cache_evictions,
+        cached_pages,
         virtual_secs,
         digest: 0xcbf29ce484222325,
     };
@@ -275,7 +348,7 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
 }
 
 /// Run one open-loop simulation to completion. With
-/// `cfg.fault_rate > 0` the four forward/KV failpoint sites are armed
+/// `cfg.fault_rate > 0` the forward/KV/cache failpoint sites are armed
 /// for the whole drive (seeded from `cfg.seed`), so fault schedules are
 /// as reproducible as the arrivals.
 pub fn run_open_loop(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
@@ -296,6 +369,7 @@ pub fn run_open_loop_with_completions(core: Arc<ModelCore>,
             ("fwd.prefill", p),
             ("fwd.decode", p * 0.5),
             ("fwd.step", p * 0.5),
+            ("cache.insert", p * 0.5),
         ];
         failpoint::with(cfg.seed ^ 0xFA17, &sites, || drive(core, cfg))
     } else {
@@ -373,6 +447,44 @@ mod tests {
         assert!(r.goodput > 0);
         assert_eq!(r.completions + r.rejected, r.arrivals);
         assert_eq!(r.leaked_pages, 0);
+    }
+
+    /// Shared-prefix traffic with the cache on: deterministic, hits
+    /// actually happen, prefill work is skipped, and the drain still
+    /// leaks nothing after the cache flush. The same mix with the
+    /// cache off reports zero hits and identical accounting closure.
+    #[test]
+    fn shared_prefix_mode_hits_cache_and_stays_deterministic() {
+        let c = core(53);
+        let sp = OpenLoopCfg {
+            requests: 24,
+            rate: 60.0,
+            seed: 7,
+            personas: 3,
+            prompt_len: 10,
+            max_new: 6,
+            page_rows: 4,
+            prefix_cache: true,
+            ..OpenLoopCfg::default()
+        };
+        let a = run_open_loop(c.clone(), &sp).unwrap();
+        let b = run_open_loop(c.clone(), &sp).unwrap();
+        assert_eq!(a, b, "shared-prefix run must reproduce bit-identically");
+        assert!(a.cache_hits > 0,
+                "shared-prefix mix produced no cache hits: {a:?}");
+        assert!(a.tokens_prefill_avoided >= a.cache_hits * 4,
+                "every hit matches at least one 4-row page: {a:?}");
+        assert_eq!(a.leaked_pages, 0);
+        assert_eq!(a.completions + a.rejected, a.arrivals);
+        assert!(a.goodput > 0);
+
+        let off = run_open_loop(
+            c, &OpenLoopCfg { prefix_cache: false, ..sp }).unwrap();
+        assert_eq!(off.cache_hits, 0);
+        assert_eq!(off.cache_misses, 0);
+        assert_eq!(off.cached_pages, 0);
+        assert_eq!(off.leaked_pages, 0);
+        assert_eq!(off.completions + off.rejected, off.arrivals);
     }
 
     /// Faulted runs are exactly as deterministic as clean ones, and the

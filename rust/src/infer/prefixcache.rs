@@ -1,0 +1,332 @@
+//! Cross-request radix prefix cache over the paged KV pool.
+//!
+//! A trie keyed by `page_rows`-token chunks maps token prefixes to the KV
+//! pages that hold them. Each node owns exactly one page id and holds one
+//! refcount on it (like a permanent lease), so cached pages are shared with
+//! live sequences by the same refcount mechanism as `KvPool::fork_rows` —
+//! zero bytes copied on a hit, and a page is physically freed only when the
+//! last holder (cache or lease) lets go.
+//!
+//! Determinism: a cached page is the KV a retired request wrote for tokens
+//! `[0..page_rows*k)` at absolute positions — by the pool-wide bit-determinism
+//! contract that KV is bit-identical to what a fresh prefill of the same
+//! prefix would write, so serving it back cannot perturb logits. On chunk
+//! collision the first insert wins; the loser's page is bit-identical anyway
+//! and stays owned by its lease until release.
+//!
+//! Eviction is LRU over *evictable leaves*: nodes with no children whose page
+//! refcount is exactly 1 (held only by the cache). Pages pinned by a live
+//! lease (refcount > 1) are never victims, and inner nodes are never leaves,
+//! so a cached path is always a contiguous prefix — descendants go before
+//! ancestors. `KvPool` drives eviction from its allocation paths when a
+//! reservation would not otherwise fit, preserving the "admitted sequences
+//! never fail a KV allocation mid-decode" invariant.
+//!
+//! The cache itself never touches page *contents*; it only manipulates the
+//! pool's `refcount` / `free` bookkeeping passed in by the caller, which keeps
+//! it trivially decoupled from slab layout.
+
+/// One cached page: `key` is the exact `page_rows`-token chunk whose KV the
+/// page holds, at the trie depth's absolute positions.
+#[derive(Debug)]
+struct Node {
+    key: Vec<i32>,
+    page: u32,
+    last_used: u64,
+    children: Vec<Node>,
+}
+
+/// Radix index from token prefix to page-table prefix. Owned by [`super::kv::KvPool`]
+/// when the prefix cache is enabled; all refcount/free-list bookkeeping is
+/// passed in explicitly so the trie has no pool dependency.
+#[derive(Debug)]
+pub struct PrefixCache {
+    page_rows: usize,
+    roots: Vec<Node>,
+    /// Logical LRU clock: bumped once per lookup/insert; every node touched
+    /// by that operation shares the stamp.
+    clock: u64,
+    evictions: u64,
+    n_pages: usize,
+}
+
+impl PrefixCache {
+    pub(crate) fn new(page_rows: usize) -> Self {
+        PrefixCache {
+            page_rows: page_rows.max(1),
+            roots: Vec::new(),
+            clock: 0,
+            evictions: 0,
+            n_pages: 0,
+        }
+    }
+
+    /// Pages currently held (one refcount each).
+    pub(crate) fn n_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Total pages evicted over the cache's lifetime.
+    pub(crate) fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Longest cached page-aligned prefix of `key`: returns the page ids for
+    /// every matched full chunk, in order. Stamps the matched path as
+    /// recently used. Does NOT bump refcounts — the caller pins the returned
+    /// pages before anything else can trigger eviction.
+    pub(crate) fn lookup(&mut self, key: &[i32]) -> Vec<u32> {
+        let stamp = self.clock;
+        self.clock += 1;
+        let mut out = Vec::new();
+        let mut cur = &mut self.roots;
+        for chunk in key.chunks_exact(self.page_rows) {
+            let Some(idx) = cur.iter().position(|n| n.key == chunk) else {
+                break;
+            };
+            let tmp = cur;
+            let node = &mut tmp[idx];
+            node.last_used = stamp;
+            out.push(node.page);
+            cur = &mut node.children;
+        }
+        out
+    }
+
+    /// Insert `pages[i]` for the i-th full `page_rows` chunk of `key`,
+    /// bumping `refcount` once for each *newly created* node. Chunks already
+    /// present keep their existing page (first insert wins; both candidates
+    /// are bit-identical by the determinism contract). Returns the number of
+    /// pages newly referenced by the cache. Trailing partial chunks of `key`
+    /// and excess `pages` are ignored.
+    pub(crate) fn insert(&mut self, key: &[i32], pages: &[u32], refcount: &mut [u32]) -> usize {
+        let stamp = self.clock;
+        self.clock += 1;
+        let mut added = 0;
+        let mut cur = &mut self.roots;
+        for (chunk, &page) in key.chunks_exact(self.page_rows).zip(pages) {
+            let idx = match cur.iter().position(|n| n.key == chunk) {
+                Some(i) => i,
+                None => {
+                    refcount[page as usize] += 1;
+                    added += 1;
+                    cur.push(Node {
+                        key: chunk.to_vec(),
+                        page,
+                        last_used: stamp,
+                        children: Vec::new(),
+                    });
+                    cur.len() - 1
+                }
+            };
+            let tmp = cur;
+            let node = &mut tmp[idx];
+            node.last_used = stamp;
+            cur = &mut node.children;
+        }
+        self.n_pages += added;
+        added
+    }
+
+    /// Evict the least-recently-used evictable leaf (no children, page
+    /// refcount exactly 1 — i.e. held only by the cache), dropping its
+    /// refcount and returning the page to `free`. Returns `false` when
+    /// nothing is evictable (every cached page is pinned by a live lease).
+    pub(crate) fn evict_one(&mut self, refcount: &mut [u32], free: &mut Vec<u32>) -> bool {
+        let mut best: Option<u64> = None;
+        Self::min_evictable(&self.roots, refcount, &mut best);
+        let Some(stamp) = best else { return false };
+        let Some(page) = Self::remove_stamped(&mut self.roots, stamp, refcount) else {
+            return false;
+        };
+        let r = &mut refcount[page as usize];
+        *r -= 1;
+        if *r == 0 {
+            free.push(page);
+        }
+        self.n_pages -= 1;
+        self.evictions += 1;
+        true
+    }
+
+    /// Release every cached page (post-order, so children release before
+    /// their parents), returning how many cache references were dropped.
+    /// Pages still pinned by live leases keep refcount > 0 and are not
+    /// pushed to `free`; unpinned ones are.
+    pub(crate) fn flush(&mut self, refcount: &mut [u32], free: &mut Vec<u32>) -> usize {
+        fn release(nodes: Vec<Node>, refcount: &mut [u32], free: &mut Vec<u32>) -> usize {
+            let mut n = 0;
+            for node in nodes {
+                n += release(node.children, refcount, free);
+                let r = &mut refcount[node.page as usize];
+                *r -= 1;
+                if *r == 0 {
+                    free.push(node.page);
+                }
+                n += 1;
+            }
+            n
+        }
+        let roots = std::mem::take(&mut self.roots);
+        let n = release(roots, refcount, free);
+        self.n_pages = 0;
+        n
+    }
+
+    fn min_evictable(nodes: &[Node], refcount: &[u32], best: &mut Option<u64>) {
+        for n in nodes {
+            if n.children.is_empty() {
+                if refcount[n.page as usize] == 1 && best.map_or(true, |b| n.last_used < b) {
+                    *best = Some(n.last_used);
+                }
+            } else {
+                Self::min_evictable(&n.children, refcount, best);
+            }
+        }
+    }
+
+    fn remove_stamped(nodes: &mut Vec<Node>, stamp: u64, refcount: &[u32]) -> Option<u32> {
+        for i in 0..nodes.len() {
+            if nodes[i].children.is_empty() {
+                if nodes[i].last_used == stamp && refcount[nodes[i].page as usize] == 1 {
+                    return Some(nodes.remove(i).page);
+                }
+            } else if let Some(p) = Self::remove_stamped(&mut nodes[i].children, stamp, refcount) {
+                return Some(p);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy pool: `n` pages, none referenced, free list in pool order
+    /// (highest id popped last, matching KvPool's reversed init).
+    fn toy_pool(n: usize) -> (Vec<u32>, Vec<u32>) {
+        (vec![0; n], (0..n as u32).rev().collect())
+    }
+
+    /// "Lease" a page the way the pool does: pop free, refcount 1.
+    fn alloc(refcount: &mut [u32], free: &mut Vec<u32>) -> u32 {
+        let p = free.pop().unwrap();
+        refcount[p as usize] = 1;
+        p
+    }
+
+    #[test]
+    fn lookup_matches_full_chunks_only() {
+        let (mut rc, mut free) = toy_pool(8);
+        let mut c = PrefixCache::new(2);
+        let p0 = alloc(&mut rc, &mut free);
+        let p1 = alloc(&mut rc, &mut free);
+        assert_eq!(c.insert(&[1, 2, 3, 4], &[p0, p1], &mut rc), 2);
+        assert_eq!(rc[p0 as usize], 2);
+        assert_eq!(rc[p1 as usize], 2);
+        assert_eq!(c.n_pages(), 2);
+
+        assert_eq!(c.lookup(&[1, 2, 3, 4]), vec![p0, p1]);
+        // longer key still matches the cached prefix
+        assert_eq!(c.lookup(&[1, 2, 3, 4, 9, 9]), vec![p0, p1]);
+        // divergence after the first chunk
+        assert_eq!(c.lookup(&[1, 2, 9, 9]), vec![p0]);
+        // partial trailing chunk is never matched
+        assert_eq!(c.lookup(&[1, 2, 3]), vec![p0]);
+        // no match at all
+        assert!(c.lookup(&[9, 9]).is_empty());
+        assert!(c.lookup(&[1]).is_empty());
+    }
+
+    #[test]
+    fn first_insert_wins_on_collision() {
+        let (mut rc, mut free) = toy_pool(8);
+        let mut c = PrefixCache::new(2);
+        let p0 = alloc(&mut rc, &mut free);
+        assert_eq!(c.insert(&[1, 2], &[p0], &mut rc), 1);
+        let p1 = alloc(&mut rc, &mut free);
+        // same chunk again from a different page: no-op for the trie
+        assert_eq!(c.insert(&[1, 2], &[p1], &mut rc), 0);
+        assert_eq!(rc[p0 as usize], 2);
+        assert_eq!(rc[p1 as usize], 1, "loser page must not gain a cache ref");
+        assert_eq!(c.lookup(&[1, 2]), vec![p0]);
+        // extending the shared prefix still adds the new tail node
+        let p2 = alloc(&mut rc, &mut free);
+        assert_eq!(c.insert(&[1, 2, 7, 8], &[p1, p2], &mut rc), 1);
+        assert_eq!(c.lookup(&[1, 2, 7, 8]), vec![p0, p2]);
+        assert_eq!(rc[p1 as usize], 1);
+    }
+
+    #[test]
+    fn lru_eviction_in_stamp_order() {
+        let (mut rc, mut free) = toy_pool(8);
+        let mut c = PrefixCache::new(1);
+        // three disjoint single-page entries inserted at increasing clock
+        let mut pages = Vec::new();
+        for t in 0..3 {
+            let p = alloc(&mut rc, &mut free);
+            c.insert(&[t], &[p], &mut rc);
+            rc[p as usize] -= 1; // drop the "lease" ref: cache-only now
+            pages.push(p);
+        }
+        // touch entry 0 so entry 1 becomes the LRU victim
+        c.lookup(&[0]);
+        assert!(c.evict_one(&mut rc, &mut free));
+        assert_eq!(free.pop(), Some(pages[1]));
+        assert!(c.evict_one(&mut rc, &mut free));
+        assert_eq!(free.pop(), Some(pages[2]));
+        assert!(c.evict_one(&mut rc, &mut free));
+        assert_eq!(free.pop(), Some(pages[0]));
+        assert!(!c.evict_one(&mut rc, &mut free), "cache drained");
+        assert_eq!(c.n_pages(), 0);
+        assert_eq!(c.evictions(), 3);
+        assert!(rc.iter().all(|&r| r == 0), "no leaked refs");
+    }
+
+    #[test]
+    fn pinned_pages_never_evicted_and_leaves_go_before_parents() {
+        let (mut rc, mut free) = toy_pool(8);
+        let mut c = PrefixCache::new(1);
+        let p0 = alloc(&mut rc, &mut free);
+        let p1 = alloc(&mut rc, &mut free);
+        c.insert(&[5, 6], &[p0, p1], &mut rc);
+        // keep the "lease" ref on the parent page: rc[p0]==2 (pinned),
+        // drop it on the leaf: rc[p1]==1 (evictable)
+        rc[p1 as usize] -= 1;
+        // the leaf goes first even though the parent is older-or-equal
+        assert!(c.evict_one(&mut rc, &mut free));
+        assert_eq!(free.last(), Some(&p1));
+        // parent is now a leaf but pinned: nothing evictable
+        assert!(!c.evict_one(&mut rc, &mut free));
+        assert_eq!(c.n_pages(), 1);
+        // unpin, then it can go
+        rc[p0 as usize] -= 1;
+        assert!(c.evict_one(&mut rc, &mut free));
+        assert_eq!(c.n_pages(), 0);
+        assert!(rc.iter().all(|&r| r == 0));
+    }
+
+    #[test]
+    fn flush_releases_everything_once() {
+        let (mut rc, mut free) = toy_pool(8);
+        let mut c = PrefixCache::new(2);
+        let p0 = alloc(&mut rc, &mut free);
+        let p1 = alloc(&mut rc, &mut free);
+        let p2 = alloc(&mut rc, &mut free);
+        c.insert(&[1, 2, 3, 4], &[p0, p1], &mut rc);
+        c.insert(&[1, 2, 5, 6], &[p0, p2], &mut rc);
+        assert_eq!(c.n_pages(), 3);
+        // p1 stays pinned by its lease; p0/p2 leases released
+        rc[p0 as usize] -= 1;
+        rc[p2 as usize] -= 1;
+        let free_before = free.len();
+        assert_eq!(c.flush(&mut rc, &mut free), 3);
+        assert_eq!(c.n_pages(), 0);
+        assert_eq!(rc[p0 as usize], 0);
+        assert_eq!(rc[p1 as usize], 1, "leased page survives flush");
+        assert_eq!(rc[p2 as usize], 0);
+        assert_eq!(free.len(), free_before + 2);
+        assert!(c.lookup(&[1, 2]).is_empty(), "flushed trie serves nothing");
+    }
+}

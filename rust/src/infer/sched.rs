@@ -19,7 +19,14 @@
 //!    ([`SchedConfig::admit_lookahead`]): a front request whose pages
 //!    don't fit yet doesn't block smaller later requests, and the
 //!    starvation guard ([`SchedConfig::starve_patience`]) suspends the
-//!    lookahead once the front has been passed over too many ticks;
+//!    lookahead once the front has been passed over too many ticks.
+//!    With [`SchedConfig::prefix_cache`] on, admission goes through
+//!    [`KvPool::lease_rows_cached`]: the longest cached page-aligned
+//!    prompt prefix is leased by refcount (zero copy, zero prefill
+//!    compute), chunked prefill resumes at the match point, and the
+//!    reservation covers only the rows past it - so hits admit under
+//!    pool pressure that queues cold requests. Successful retirements
+//!    insert their page-aligned KV prefix back into the cache;
 //! 3. **prefills** admitted prompts in bounded chunks
 //!    ([`SchedConfig::prefill_chunk`]); a prefill error fails *only* the
 //!    offending session (lease released, [`FinishReason::Failed`]
@@ -80,6 +87,14 @@ pub struct SchedConfig {
     /// suspended until it admits (starvation guard). 0 = the front can
     /// never be skipped.
     pub starve_patience: u32,
+    /// Enable the cross-request prefix cache
+    /// ([`KvPool::enable_prefix_cache`]): admission serves the longest
+    /// cached page-aligned prompt prefix by refcount (zero copy, zero
+    /// prefill compute, right-sized reservation) and successful
+    /// retirements insert their page-aligned KV prefix back. Off by
+    /// default; bit-determinism is unaffected either way (cached pages
+    /// are bit-identical to freshly prefilled ones by construction).
+    pub prefix_cache: bool,
 }
 
 impl Default for SchedConfig {
@@ -90,6 +105,7 @@ impl Default for SchedConfig {
             max_queue: 1024,
             admit_lookahead: 4,
             starve_patience: 64,
+            prefix_cache: false,
         }
     }
 }
@@ -151,6 +167,14 @@ pub struct SchedStats {
     pub failed: u64,
     /// [`Scheduler::tick`] calls
     pub ticks: u64,
+    /// admissions that leased a cached prompt prefix (prefix cache on)
+    pub cache_hits: u64,
+    /// admissions that found no cached prefix (prefix cache on)
+    pub cache_misses: u64,
+    /// prompt rows served from the cache instead of being prefilled
+    pub tokens_prefill_avoided: u64,
+    /// cache pages reclaimed under reservation pressure
+    pub cache_evictions: u64,
 }
 
 /// A queued (not yet admitted) request.
@@ -200,9 +224,12 @@ impl Scheduler {
     /// [`Scheduler::with_pool`] on an explicit clock - a
     /// [`Clock::manual`] makes deadlines, latency accounting, and the
     /// open-loop simulator bit-reproducible.
-    pub fn with_clock(core: Arc<ModelCore>, pool: KvPool,
+    pub fn with_clock(core: Arc<ModelCore>, mut pool: KvPool,
                       cfg: SchedConfig, clock: Clock) -> Scheduler {
         let scratch = core.scratch();
+        if cfg.prefix_cache {
+            pool.enable_prefix_cache();
+        }
         Scheduler {
             core,
             pool,
@@ -235,9 +262,19 @@ impl Scheduler {
         &self.clock
     }
 
-    /// Lifecycle counters so far.
+    /// Lifecycle counters so far (evictions live pool-side and are
+    /// merged in here).
     pub fn stats(&self) -> SchedStats {
-        self.stats
+        let mut s = self.stats;
+        s.cache_evictions = self.pool.cache_evictions();
+        s
+    }
+
+    /// Drop every prefix-cache page reference (see
+    /// [`KvPool::cache_flush`]). Drain-time leak checks flush first,
+    /// then assert `pool().pages_in_use() == 0`.
+    pub fn flush_prefix_cache(&mut self) -> usize {
+        self.pool.cache_flush()
     }
 
     /// Worst-case KV rows a request may write: prompt plus decode feeds
@@ -245,6 +282,24 @@ impl Scheduler {
     /// `max_new - 1`), capped at the model context.
     fn rows_for(req: &Request, max_ctx: usize) -> usize {
         (req.prompt.len() + req.max_new.saturating_sub(1)).min(max_ctx)
+    }
+
+    /// On a successful retirement (Done / ContextFull), record the
+    /// session's page-aligned KV prefix in the prefix cache. The key is
+    /// the tokens actually fed - prompt plus decoded feeds - since KV
+    /// row `i` is a pure function of tokens `[0..=i]` at absolute
+    /// positions. No-op with the cache off; a faulted insert (the
+    /// `cache.insert` failpoint) is all-or-nothing pool-side and simply
+    /// skipped here - the lease still releases normally, nothing leaks.
+    fn cache_retire(pool: &mut KvPool, s: &Session) {
+        if !pool.cache_enabled() {
+            return;
+        }
+        let fed = s.pos.saturating_sub(s.prompt.len()).min(s.out.len());
+        let mut toks = Vec::with_capacity(s.prompt.len() + fed);
+        toks.extend_from_slice(&s.prompt);
+        toks.extend_from_slice(&s.out[..fed]);
+        let _ = pool.cache_insert(&toks, &s.lease);
     }
 
     fn validate(&self, req: &Request) -> Result<(), Reject> {
@@ -404,10 +459,22 @@ impl Scheduler {
         let mut qi = 0usize;
         while live.len() < cfg.max_batch && qi < queue.len() {
             let rows = Self::rows_for(&queue[qi].req, core.max_ctx);
-            match pool.lease_rows(rows) {
-                Some(lease) => {
+            // the cache key stops one token short of the prompt: the
+            // final prompt token is always prefilled, so the first-token
+            // sample reads logits produced exactly as in a cold run
+            let key_len = queue[qi].req.prompt.len() - 1;
+            let res = pool.lease_rows_cached(
+                &queue[qi].req.prompt[..key_len], rows);
+            match res {
+                Some((lease, matched)) => {
+                    if matched > 0 {
+                        stats.cache_hits += 1;
+                        stats.tokens_prefill_avoided += matched as u64;
+                    } else if pool.cache_enabled() {
+                        stats.cache_misses += 1;
+                    }
                     let q = queue.remove(qi).expect("indexed entry");
-                    live.push(Session::start(q.id, q.req, lease,
+                    live.push(Session::start(q.id, q.req, lease, matched,
                                              q.submitted, q.deadline));
                     // don't advance qi: the next entry shifted here
                 }
@@ -486,6 +553,7 @@ impl Scheduler {
                 continue;
             }
             if s.out.len() >= s.max_new {
+                Self::cache_retire(pool, &live[i]);
                 let (lease, comp) =
                     live.remove(i).finish(now, FinishReason::Done);
                 pool.release(lease);
@@ -495,6 +563,7 @@ impl Scheduler {
             }
             if s.pos >= core.max_ctx {
                 // same truncation a solo generate performs
+                Self::cache_retire(pool, &live[i]);
                 let (lease, comp) =
                     live.remove(i).finish(now, FinishReason::ContextFull);
                 pool.release(lease);
@@ -506,6 +575,7 @@ impl Scheduler {
             s.emit(tok, now);
             emitted += 1;
             if s.out.len() >= s.max_new {
+                Self::cache_retire(pool, &live[i]);
                 let (lease, comp) =
                     live.remove(i).finish(now, FinishReason::Done);
                 pool.release(lease);
@@ -1259,5 +1329,254 @@ mod tests {
         // sweep at these probabilities faults must have been injected
         assert!(total_fired > 0,
                 "sweep injected no faults - sites unreachable?");
+    }
+
+    /// A shared-prefix request mix: one system prompt, distinct user
+    /// suffixes and seeds per request.
+    fn shared_prefix_reqs(n: usize, sys_len: usize)
+                          -> Vec<(Vec<i32>, usize, u64)> {
+        let sys = prompt(sys_len, 3);
+        (0..n)
+            .map(|i| {
+                let mut p = sys.clone();
+                p.push(((7 * i + 11) % VOCAB) as i32);
+                p.push(((5 * i + 2) % VOCAB) as i32);
+                (p, 4 + i, 200 + i as u64)
+            })
+            .collect()
+    }
+
+    /// Tentpole determinism sweep: with the prefix cache on, every
+    /// completion is bit-identical to its solo (cold, uncached) run at
+    /// batch {1, 2, 5} x threads {1, 4} x page sizes {4, 6} - and a
+    /// fully-warm second wave (every admission a cache hit) reproduces
+    /// the exact same tokens again. Leak check via flush.
+    #[test]
+    fn cache_hits_bit_identical_to_cold_runs_across_batch_and_threads() {
+        let c = core(50);
+        let reqs = shared_prefix_reqs(5, 8);
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo(&c, r)).collect();
+        for &page_rows in &[4usize, 6] {
+            for &bsz in &[1usize, 2, 5] {
+                for &nt in &[1usize, 4] {
+                    with_threads(nt, || {
+                        let mut sched = Scheduler::with_pool(
+                            c.clone(),
+                            KvPool::for_core_paged(&c, 40, page_rows),
+                            SchedConfig {
+                                max_batch: bsz,
+                                prefill_chunk: 4,
+                                prefix_cache: true,
+                                ..SchedConfig::default()
+                            });
+                        for wave in 0..2 {
+                            let h0 = sched.stats().cache_hits;
+                            for r in &reqs {
+                                sched.submit(Request::new(
+                                    r.0.clone(), r.1,
+                                    Sampler::Temperature(0.9), r.2))
+                                    .unwrap();
+                            }
+                            let comps = sched.run_all().unwrap();
+                            assert_eq!(comps.len(), reqs.len());
+                            for (comp, want) in comps.iter().zip(&want) {
+                                assert_eq!(
+                                    &comp.tokens, want,
+                                    "pr {page_rows} batch {bsz} threads \
+                                     {nt} wave {wave}: cached output \
+                                     diverged from solo");
+                            }
+                            if wave == 1 {
+                                // warm cache: every admission must hit
+                                assert_eq!(
+                                    sched.stats().cache_hits - h0,
+                                    reqs.len() as u64,
+                                    "warm wave had cold admissions");
+                            }
+                        }
+                        let st = sched.stats();
+                        assert!(st.tokens_prefill_avoided > 0);
+                        assert!(sched.flush_prefix_cache() > 0);
+                        assert_eq!(sched.pool().pages_in_use(), 0,
+                                   "cache flush left pages behind");
+                    });
+                }
+            }
+        }
+    }
+
+    /// Satellite: admission right-sizing. Under pool pressure a cache
+    /// hit (needing only the rows past its match) admits while an
+    /// equally-sized cold request queues; eviction reclaims only the
+    /// unpinned cache page.
+    #[test]
+    fn cache_hit_admits_under_pressure_that_queues_cold_request() {
+        let c = core(53);
+        let sys = prompt(8, 3); // two 4-row pages of shared prefix
+        let user = |t: i32| {
+            let mut p = sys.clone();
+            p.push(t);
+            p
+        };
+        let cold: Vec<i32> = prompt(9, 7); // different persona, same size
+        let mut sched = Scheduler::with_pool(
+            c.clone(), KvPool::for_core_paged(&c, 9, 4),
+            SchedConfig {
+                max_batch: 4,
+                prefill_chunk: 8,
+                prefix_cache: true,
+                ..SchedConfig::default()
+            });
+        // warm: one request retires and caches 3 pages (12 fed rows)
+        sched.submit(greedy(user(40), 4, 901)).unwrap();
+        sched.run_all().unwrap();
+        assert_eq!(sched.pool().cached_pages(), 3);
+        assert_eq!(sched.pool().pages_in_use(), 3);
+        // M: same persona, long budget -> 9+19 rows = 7 pages, 2 cached
+        // -> reserves 5 of the 6 free pages and stays live
+        let m = sched.submit(greedy(user(41), 20, 902)).unwrap();
+        // D: cold, needs 3 pages -> only the 1 unpinned cache page can
+        // be evicted, still short -> queues
+        let d = sched.submit(greedy(cold.clone(), 4, 903)).unwrap();
+        // C: same persona, same worst case as D, but its 2-page hit
+        // means 1 fresh page -> admits past the blocked D
+        let cc = sched.submit(greedy(user(42), 4, 904)).unwrap();
+        sched.tick().unwrap();
+        assert_eq!((sched.n_live(), sched.n_queued()), (2, 1),
+                   "hit did not right-size past the queued cold request");
+        assert!(sched.cancel(d), "the cold request should still be queued");
+        let st = sched.stats();
+        assert_eq!(st.cache_hits, 2, "M and C must both hit");
+        assert!(st.tokens_prefill_avoided >= 16, "8 rows per hit");
+        assert_eq!(st.cache_evictions, 1,
+                   "exactly the unpinned cache page is reclaimed");
+        // drain everything (resubmit the cold request) and verify every
+        // output, hit or cold, against its solo run
+        let d2 = sched.submit(greedy(cold.clone(), 4, 903)).unwrap();
+        let comps = sched.run_all().unwrap();
+        for (id, r) in [(m, (user(41), 20usize, 902u64)),
+                        (cc, (user(42), 4, 904)),
+                        (d2, (cold, 4, 903))] {
+            let comp = comps.iter().find(|x| x.id == id).unwrap();
+            assert_eq!(comp.tokens, solo_greedy(&c, &r), "req {id}");
+        }
+        sched.flush_prefix_cache();
+        assert_eq!(sched.pool().pages_in_use(), 0);
+    }
+
+    /// Satellite: eviction churn. Many distinct prompts through a pool
+    /// the cache keeps saturating - victims are reclaimed, nothing
+    /// leaks, no stale KV is ever served (every output solo-exact), and
+    /// a post-eviction resubmit of an evicted prefix re-prefills
+    /// bit-identically.
+    #[test]
+    fn eviction_churn_leaks_nothing_and_serves_no_stale_kv() {
+        let c = core(51);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..12)
+            .map(|i| (prompt(6 + (i % 4), 3 + i), 3, 300 + i as u64))
+            .collect();
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo_greedy(&c, r)).collect();
+        let mut sched = Scheduler::with_pool(
+            c.clone(), KvPool::for_core_paged(&c, 6, 4),
+            SchedConfig {
+                max_batch: 2,
+                prefill_chunk: 4,
+                prefix_cache: true,
+                ..SchedConfig::default()
+            });
+        for r in &reqs {
+            sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+        }
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps.len(), reqs.len());
+        for (comp, want) in comps.iter().zip(&want) {
+            assert_eq!(&comp.tokens, want,
+                       "req {}: stale KV served under churn", comp.id);
+        }
+        assert!(sched.stats().cache_evictions > 0,
+                "churn never evicted - pool too large for the test");
+        // the first prompt's pages were evicted long ago: resubmitting
+        // it is a clean miss that re-prefills to the same tokens
+        sched.submit(greedy(reqs[0].0.clone(), reqs[0].1, reqs[0].2))
+            .unwrap();
+        let comps = sched.run_all().unwrap();
+        assert_eq!(comps[0].tokens, want[0],
+                   "post-eviction resubmit diverged");
+        sched.flush_prefix_cache();
+        assert_eq!(sched.pool().pages_in_use(), 0, "churn leaked pages");
+        assert_eq!(sched.pool().n_free_pages(), 6);
+    }
+
+    /// Satellite: randomized multi-seed fault sweep over `cache.insert`
+    /// (plus kv.draw pressure). A faulted insert must never leak a page
+    /// or leave a partial prefix behind - pinned by every completion
+    /// (first wave and warm second wave) staying solo-exact and the
+    /// flushed pool draining to zero.
+    #[test]
+    fn cache_insert_fault_sweep_no_leaks_no_partial_prefixes() {
+        let c = core(52);
+        let reqs = shared_prefix_reqs(6, 8);
+        let want: Vec<Vec<i32>> =
+            reqs.iter().map(|r| solo_greedy(&c, r)).collect();
+        let mut insert_fired = 0u64;
+        for seed in [21u64, 22, 23, 24, 25] {
+            let mut sched = Scheduler::with_pool(
+                c.clone(), KvPool::for_core_paged(&c, 12, 4),
+                SchedConfig {
+                    max_batch: 2,
+                    prefill_chunk: 4,
+                    prefix_cache: true,
+                    ..SchedConfig::default()
+                });
+            failpoint::arm(seed, &[
+                ("cache.insert", 0.5),
+                ("kv.draw", 0.03),
+            ]);
+            for wave in 0..2 {
+                for r in &reqs {
+                    sched.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+                }
+                let mut ticks = 0usize;
+                while !sched.is_idle() {
+                    sched.tick().unwrap();
+                    ticks += 1;
+                    assert!(ticks < 10_000,
+                            "seed {seed}: fault run failed to drain");
+                }
+                let comps = sched.take_completed();
+                assert_eq!(comps.len(), reqs.len(),
+                           "seed {seed} wave {wave}: lost requests");
+                for (comp, want) in comps.iter().zip(&want) {
+                    match &comp.finish {
+                        FinishReason::Done => {
+                            assert_eq!(&comp.tokens, want,
+                                       "seed {seed} wave {wave} req {}: \
+                                        partial/stale cached prefix \
+                                        served", comp.id);
+                        }
+                        FinishReason::Failed(_) => {
+                            assert_eq!(comp.tokens[..],
+                                       want[..comp.tokens.len()],
+                                       "seed {seed} req {}: not a solo \
+                                        prefix", comp.id);
+                        }
+                        other => panic!("seed {seed} req {}: {other:?}",
+                                        comp.id),
+                    }
+                }
+            }
+            insert_fired += failpoint::disarm()
+                .iter()
+                .filter(|r| r.site == "cache.insert")
+                .map(|r| r.fired)
+                .sum::<u64>();
+            sched.flush_prefix_cache();
+            assert_eq!(sched.pool().pages_in_use(), 0,
+                       "seed {seed}: faulted inserts leaked pages");
+        }
+        assert!(insert_fired > 0,
+                "sweep never fired cache.insert - site unreachable?");
     }
 }

@@ -122,18 +122,26 @@ pub struct Session {
 }
 
 impl Session {
+    /// `cached_rows` is the prefix-cache match: that many leading prompt
+    /// rows already sit in the lease's pages (shared by refcount), so the
+    /// prefill cursor and KV position both start past them. Always
+    /// strictly less than the prompt length - the final prompt chunk is
+    /// prefilled by every path, so the first-token sample reads logits
+    /// produced identically to a cold run.
     pub(crate) fn start(id: u64, req: Request, lease: KvLease,
-                        submitted: f64, deadline: Option<f64>) -> Session {
+                        cached_rows: usize, submitted: f64,
+                        deadline: Option<f64>) -> Session {
+        debug_assert!(cached_rows < req.prompt.len().max(1));
         Session {
             id,
             lease,
-            pos: 0,
+            pos: cached_rows,
             max_new: req.max_new,
             out: Vec::with_capacity(req.max_new),
             rng: Rng::new(req.seed).fork("sample"),
             sampler: req.sampler,
             prompt: req.prompt,
-            prefilled: 0,
+            prefilled: cached_rows,
             next: 0,
             submitted,
             deadline,

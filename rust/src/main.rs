@@ -264,12 +264,17 @@ fn run(args: &[String]) -> Result<()> {
             // --open-loop switches to the deterministic Poisson-arrival
             // simulator on the virtual clock (deadlines, backpressure,
             // optional fault injection) and reports goodput/shed/fail
-            // counters plus the run digest.
+            // counters plus the run digest. --shared-prefix switches the
+            // request mix to N personas x M users (fixed system prompts,
+            // short user suffixes) and turns on the cross-request prefix
+            // cache (--no-cache runs the same mix cold).
             use efficientqat::infer::core::ModelCore;
+            use efficientqat::infer::kv::KvPool;
             use efficientqat::infer::openloop::{run_open_loop,
                                                 OpenLoopCfg};
             use efficientqat::infer::sched::{SchedConfig, Scheduler};
             use efficientqat::infer::session::Request;
+            use efficientqat::util::clock::Clock;
             use efficientqat::util::rng::Rng;
             use efficientqat::util::stats::percentile;
             use std::sync::Arc;
@@ -281,6 +286,17 @@ fn run(args: &[String]) -> Result<()> {
             let chunk = cli.flag_usize("prefill-chunk", 8)?.max(1);
             let seed = cli.flag_usize("seed", 17)? as u64;
             let max_ctx = plen + tokens + 4;
+            let shared = cli.flag_bool("shared-prefix");
+            let personas = if shared {
+                cli.flag_usize("personas", 4)?.max(1)
+            } else {
+                0
+            };
+            // shared prefixes only pay off when a system prompt spans
+            // whole pages, so --shared-prefix defaults to 4-row pages
+            let page_rows =
+                cli.flag_usize("page-rows", if shared { 4 } else { 0 })?;
+            let use_cache = shared && !cli.flag_bool("no-cache");
 
             let core = match cli.flag("model") {
                 Some(path) => {
@@ -310,6 +326,9 @@ fn run(args: &[String]) -> Result<()> {
                     prefill_chunk: chunk,
                     max_queue: cli.flag_usize("max-queue", 64)?.max(1),
                     fault_rate: cli.flag_f64("fail-rate", 0.0)?,
+                    personas,
+                    page_rows,
+                    prefix_cache: use_cache,
                 };
                 let r = run_open_loop(core, &cfg)?;
                 println!(
@@ -331,23 +350,56 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 println!("  pages leaked {}  digest {:016x}",
                          r.leaked_pages, r.digest);
+                if use_cache {
+                    println!(
+                        "  prefix cache     hits {}  misses {}  avoided \
+                         {} tok  evictions {}",
+                        r.cache_hits, r.cache_misses,
+                        r.tokens_prefill_avoided, r.cache_evictions
+                    );
+                    anyhow::ensure!(
+                        r.cache_hits > 0,
+                        "shared-prefix run produced no cache hits");
+                }
                 anyhow::ensure!(r.goodput > 0,
                                 "open-loop run produced no goodput");
                 return Ok(());
             }
-            let mut sched = Scheduler::new(core.clone(), slots,
-                                           SchedConfig {
-                max_batch: slots,
-                prefill_chunk: chunk,
-                ..SchedConfig::default()
-            });
+            let pool = if page_rows > 0 {
+                let per_seq = (max_ctx + page_rows - 1) / page_rows;
+                KvPool::for_core_paged(&core, slots.max(1) * per_seq,
+                                       page_rows)
+            } else {
+                KvPool::for_core(&core, slots.max(1))
+            };
+            let mut sched = Scheduler::with_clock(
+                core.clone(), pool,
+                SchedConfig {
+                    max_batch: slots,
+                    prefill_chunk: chunk,
+                    prefix_cache: use_cache,
+                    ..SchedConfig::default()
+                },
+                Clock::wall());
             // synthetic stream: varied prompt lengths/contents/budgets
+            // (--shared-prefix: a fixed per-persona system prompt plus a
+            // short random user suffix instead)
             let mut rng = Rng::new(seed).fork("serve-sim");
             for i in 0..requests {
-                let n = 1 + rng.below(plen);
-                let prompt: Vec<i32> = (0..n)
-                    .map(|_| rng.below(core.vocab) as i32)
-                    .collect();
+                let prompt: Vec<i32> = if shared {
+                    let p = rng.below(personas);
+                    let slen = 1 + rng.below(3);
+                    let mut toks: Vec<i32> = (0..plen)
+                        .map(|k| ((k * 11 + p * 29 + 5) % 89) as i32)
+                        .collect();
+                    toks.extend(
+                        (0..slen).map(|_| rng.below(core.vocab) as i32));
+                    toks.truncate(max_ctx);
+                    toks
+                } else {
+                    let n = 1 + rng.below(plen);
+                    (0..n).map(|_| rng.below(core.vocab) as i32).collect()
+                };
                 sched.submit(Request::new(
                     prompt,
                     1 + rng.below(tokens.max(1)),
@@ -411,6 +463,22 @@ fn run(args: &[String]) -> Result<()> {
                     / pool.n_pages().max(1) as f64,
                 pool.bytes_copied()
             );
+            if use_cache {
+                let st = sched.stats();
+                println!(
+                    "  prefix cache     hits {}  misses {}  avoided {} \
+                     tok  evictions {}  ({} pages cached)",
+                    st.cache_hits, st.cache_misses,
+                    st.tokens_prefill_avoided, st.cache_evictions,
+                    sched.pool().cached_pages()
+                );
+                anyhow::ensure!(
+                    st.cache_hits > 0,
+                    "shared-prefix run produced no cache hits");
+                sched.flush_prefix_cache();
+            }
+            anyhow::ensure!(sched.pool().pages_in_use() == 0,
+                            "serve-sim leaked KV pages");
         }
         "size" => {
             let name = cli.flag_or("model", "llama2-7b");

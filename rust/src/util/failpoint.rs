@@ -2,9 +2,9 @@
 //!
 //! Robustness tests and the fault-injected open-loop bench arm a set of
 //! named *sites* with per-site fire probabilities and a single seed;
-//! instrumented code (KV page allocation, the forward primitives) calls
-//! [`check`] at each site and gets an `Err` when the schedule says the
-//! site fires. All probability draws come from one seeded
+//! instrumented code (KV page allocation, the forward primitives,
+//! prefix-cache insertion) calls [`check`] at each site and gets an
+//! `Err` when the schedule says the site fires. All probability draws come from one seeded
 //! [`Rng`](crate::util::rng::Rng) stream, consumed only at registered
 //! sites in call order - so for a single-threaded consumer (the
 //! scheduler), a fault schedule is a pure function of

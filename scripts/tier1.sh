@@ -5,15 +5,18 @@
 # which together with the in-suite to_bits sweeps pins the SIMD layer to
 # the scalar contract) + warning-free rustdoc + docs link check + a
 # fast-mode inference bench smoke that must produce a valid
-# machine-readable perf snapshot (runs/bench.json, schema 7: inference +
+# machine-readable perf snapshot (runs/bench.json, schema 8: inference +
 # native train_step + taped-vs-forward-only eval_forward + the
 # continuous-batching serve section + the paged-KV kv_fork section + the
-# open-loop serve_robust section + the SIMD kernels section, whose
-# determinism / bit-equality / leak-freedom contracts are asserted
-# inside the bench and re-checked by `bench check`; the detected ISA is
-# recorded in the snapshot's `simd` field) + a bounded serve-sim smoke +
-# an open-loop determinism smoke (same seed twice with faults armed must
-# reproduce the same digest) + a bounded end-to-end Block-AP -> E2E-QP
+# open-loop serve_robust section + the SIMD kernels section + the
+# cross-request prefix_cache section, whose determinism / bit-equality /
+# leak-freedom contracts are asserted inside the bench and re-checked by
+# `bench check`; the detected ISA is recorded in the snapshot's `simd`
+# field) + a bounded serve-sim smoke + a shared-prefix cache smoke
+# (digests must reproduce with the cache on AND off, and the cached run
+# must actually hit) + an open-loop determinism smoke (same seed twice
+# with faults armed must reproduce the same digest) + a bounded
+# end-to-end Block-AP -> E2E-QP
 # training smoke and a forward-only eval smoke on the native backend (no
 # HLO artifacts required). Run from anywhere; operates on the repo root.
 set -euo pipefail
@@ -35,13 +38,16 @@ for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
 done
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 7; see
+# runs/bench.json is missing or schema-invalid (schema 8; see
 # docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
 # copy bounds, the serve_robust section's determinism / survivor
-# bit-equality / leak-freedom contracts, and the kernels section's
-# scalar-vs-SIMD output bit-equality are asserted inside the bench
-# itself; assert here that the sections actually made it into the
-# snapshot (the `simd` field records the ISA the snapshot ran on).
+# bit-equality / leak-freedom contracts, the kernels section's
+# scalar-vs-SIMD output bit-equality, and the prefix_cache section's
+# hit-vs-cold logit bit-equality + zero-copy-hit contracts are asserted
+# inside the bench itself (`bench check` re-enforces hits >= 1, avoided
+# prefill > 0, hit p50 below cold p50, and hit_fork_bytes == 0); assert
+# here that the sections actually made it into the snapshot (the `simd`
+# field records the ISA the snapshot ran on).
 EQAT_BENCH_FAST=1 cargo run --release --bin eqat -- bench inference --fast
 cargo run --release --bin eqat -- bench check
 if ! grep -q '"kv_fork"' runs/bench.json; then
@@ -60,12 +66,44 @@ if ! grep -q '"simd"' runs/bench.json; then
   echo "tier1 FAIL: runs/bench.json records no simd ISA" >&2
   exit 1
 fi
+if ! grep -q '"prefix_cache"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no prefix_cache section" >&2
+  exit 1
+fi
+if ! grep -q '"tokens_prefill_avoided"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no prefill tokens avoided" >&2
+  exit 1
+fi
 
 # serving smoke: bounded synthetic request stream through the
 # continuous-batching scheduler (shared ModelCore + paged-KV sessions);
 # fails on lost requests or zero emitted tokens
 cargo run --release --bin eqat -- serve-sim --requests 8 --slots 3 \
   --tokens 8 --prompt-len 10 --prefill-chunk 4
+
+# shared-prefix cache smoke: the open-loop persona mix must reproduce
+# its digest bit-for-bit with the prefix cache ON and (separately) OFF,
+# and the cached run must actually hit (the binary itself fails a
+# cached shared-prefix run with zero hits, and fails any run that leaks
+# a KV page). Cache-on and cache-off digests legitimately differ - only
+# per-mode run-to-run reproducibility is pinned here.
+prefix_digest() {
+  cargo run --release --bin eqat -- serve-sim --open-loop \
+    --shared-prefix "$@" --requests 24 --rate 200 --seed 11 \
+    | grep -o 'digest [0-9a-f]*'
+}
+p1="$(prefix_digest)"
+p2="$(prefix_digest)"
+if [ -z "$p1" ] || [ "$p1" != "$p2" ]; then
+  echo "tier1 FAIL: shared-prefix cached digest not reproducible" >&2
+  exit 1
+fi
+p3="$(prefix_digest --no-cache)"
+p4="$(prefix_digest --no-cache)"
+if [ -z "$p3" ] || [ "$p3" != "$p4" ]; then
+  echo "tier1 FAIL: shared-prefix cold digest not reproducible" >&2
+  exit 1
+fi
 
 # open-loop determinism smoke: seeded Poisson arrivals + deadlines +
 # bounded queue + fault injection on the virtual clock; the same seed
