@@ -5,17 +5,19 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 8 = inference sections + native train_step + eval_forward +
+//! (schema 9 = inference sections + native train_step + eval_forward +
 //! the continuous-batching `serve` section + the paged-KV `kv_fork`
 //! section + the open-loop `serve_robust` section + the SIMD `kernels`
-//! section + the cross-request `prefix_cache` section: shared-prefix
-//! hit rate, prefill tokens avoided, first-token latency hit-vs-cold,
-//! with hit logits asserted bit-identical to cold prefill and zero
-//! bytes copied on hits) so the perf trajectory is trackable across
-//! PRs; [`check_bench_json`] validates it (used by scripts/tier1.sh).
-//! Schemas 1-7 from older PRs stay accepted. Every section and field is
-//! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
-//! bumping the schema.
+//! section + the cross-request `prefix_cache` section + the low-bit KV
+//! `kv_lowbit` section: int8/int4 page capacity multiplier at identical
+//! pool bytes, fused dequant+dot/axpy kernel bandwidth, open-loop
+//! goodput at a fixed byte budget, and the synthetic teacher-forced ppl
+//! delta vs the f32 pool, all behind in-bench gates) so the perf
+//! trajectory is trackable across PRs; [`check_bench_json`] validates
+//! it (used by scripts/tier1.sh). Schemas 1-8 from older PRs stay
+//! accepted. Every section and field is documented in
+//! docs/BENCH_SCHEMA.md - keep that file in sync when bumping the
+//! schema.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -26,7 +28,7 @@ use crate::config::{llama_by_name, QuantScheme};
 use crate::infer::core::ModelCore;
 use crate::infer::engine::Engine;
 use crate::infer::generate::{generate, Sampler};
-use crate::infer::kv::{KvLease, KvPool};
+use crate::infer::kv::{KvFormat, KvLease, KvPool};
 use crate::infer::qlinear::{dense_matvec, PackedLinear};
 use crate::infer::sched::{SchedConfig, Scheduler};
 use crate::infer::session::Request;
@@ -180,14 +182,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (pc_md, pc_json) = prefix_cache_throughput(fast)?;
     md.push_str(&pc_md);
+    md.push('\n');
+    let (kl_md, kl_json) = kv_lowbit_throughput(fast)?;
+    md.push_str(&kl_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 8 = schema 7 + the cross-request prefix_cache section
-        ("schema", Json::num(8.0)),
+        // schema 9 = schema 8 + the low-bit KV kv_lowbit section
+        ("schema", Json::num(9.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -202,6 +207,7 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("serve_robust", sr_json),
         ("kernels", kn_json),
         ("prefix_cache", pc_json),
+        ("kv_lowbit", kl_json),
     ]);
     Ok((md, payload))
 }
@@ -258,7 +264,7 @@ fn kernel_row<F: FnMut() -> Vec<f32>>(
 }
 
 /// Kernel-layer throughput: forced-scalar vs the detected SIMD path for
-/// the packed 2/4-bit matvec and matmul kernels, the dense microkernel,
+/// the packed 2/3/4-bit matvec and matmul kernels, the dense microkernel,
 /// and the fake-quant gradient kernel. Every row first *asserts* the
 /// bit-identity contract (`EQAT_SIMD=scalar` output == vector output,
 /// compared via `to_bits`), so a published `kernels` section doubles as
@@ -287,7 +293,7 @@ pub fn kernels_throughput(fast: bool) -> Result<(String, Json)> {
     let mv_flops = 2.0 * (out_d * in_d) as f64;
     let act_bytes = 4.0 * (out_d + in_d) as f64;
 
-    for bits in [2u32, 4] {
+    for bits in [2u32, 3, 4] {
         let sch = QuantScheme::new(bits, group as u32);
         let gp = minmax_init(&w, out_d, in_d, sch);
         let wi = quantize(&w, &gp, sch);
@@ -615,6 +621,305 @@ pub fn prefix_cache_throughput(fast: bool) -> Result<(String, Json)> {
         ("prefill_speedup", Json::num(speedup)),
         ("hit_fork_bytes", Json::num(0.0)),
         ("bitexact", Json::Bool(true)),
+        ("leaked_pages", Json::num(0.0)),
+    ]);
+    Ok((md, j))
+}
+
+/// Low-bit KV serving: capacity, bandwidth, goodput, and accuracy of
+/// the packed int8/int4 page formats against the f32 pool. Four gates
+/// run before any number is published: (1) at an identical pool byte
+/// budget the int4 pool leases >= 3.5x the concurrent sequences of the
+/// f32 pool (lease-until-full on both); (2) every fused dequant+dot /
+/// dequant+axpy kernel row asserts scalar-vs-SIMD bit identity before
+/// its GB/s is recorded; (3) the int4 open-loop run reproduces its
+/// lifecycle digest bit-for-bit across forced-scalar and the detected
+/// ISA, and the f32 run is equally ISA-invariant and run-to-run
+/// deterministic (pinning the fp serve path the low-bit mode must not
+/// perturb); (4) the synthetic teacher-forced ppl delta vs the f32
+/// pool stays under the same gates the unit tests enforce (int8 5%,
+/// int4 25% relative). Schema-9 `kv_lowbit` section of runs/bench.json.
+pub fn kv_lowbit_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::infer::openloop::{run_open_loop, OpenLoopCfg};
+
+    let (dim, nh, hd, inter, vocab, n_layers) = if fast {
+        (64usize, 4usize, 16usize, 128usize, 256usize, 1usize)
+    } else {
+        (256, 4, 64, 512, 1024, 2)
+    };
+    let page_rows = 8usize;
+    let prompt_len = 8usize;
+    let max_new = 8usize;
+    let max_ctx = prompt_len + max_new + 4;
+    let per_seq = (max_ctx + page_rows - 1) / page_rows;
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, QuantScheme::new(2, 128),
+        max_ctx, 4545)?);
+
+    // gate 1: capacity at an identical pool byte budget. Size each
+    // packed pool to at most the f32 pool's bytes, then lease whole
+    // sequences until each pool refuses.
+    let page_bytes_of = |fmt: KvFormat| -> u64 {
+        KvPool::for_core_paged_fmt(&core, 1, page_rows, fmt).page_bytes()
+    };
+    let fp_pb = page_bytes_of(KvFormat::F32);
+    let i8_pb = page_bytes_of(KvFormat::Int8);
+    let i4_pb = page_bytes_of(KvFormat::Int4);
+    let fp_pages = 8 * per_seq;
+    let budget = fp_pb * fp_pages as u64;
+    let i8_pages = (budget / i8_pb) as usize;
+    let i4_pages = (budget / i4_pb) as usize;
+    ensure!(i4_pb * i4_pages as u64 <= budget
+                && i8_pb * i8_pages as u64 <= budget,
+            "kv_lowbit bench: packed pool sized over the byte budget");
+    let seqs_at_budget = |fmt: KvFormat, n_pages: usize|
+                         -> Result<usize> {
+        let mut pool =
+            KvPool::for_core_paged_fmt(&core, n_pages, page_rows, fmt);
+        let mut held = Vec::new();
+        while let Some(l) = pool.lease_rows(max_ctx) {
+            held.push(l);
+        }
+        let n = held.len();
+        for l in held {
+            pool.release(l);
+        }
+        ensure!(pool.pages_in_use() == 0,
+                "kv_lowbit bench: {fmt:?} capacity probe leaked pages");
+        Ok(n)
+    };
+    let fp_seqs = seqs_at_budget(KvFormat::F32, fp_pages)?;
+    let i8_seqs = seqs_at_budget(KvFormat::Int8, i8_pages)?;
+    let i4_seqs = seqs_at_budget(KvFormat::Int4, i4_pages)?;
+    ensure!(fp_seqs > 0, "kv_lowbit bench: f32 pool admitted nothing");
+    let mult8 = i8_seqs as f64 / fp_seqs as f64;
+    let mult4 = i4_seqs as f64 / fp_seqs as f64;
+    ensure!(mult4 >= 3.5,
+            "kv_lowbit bench: int4 capacity multiplier {mult4:.2}x \
+             below the 3.5x gate ({i4_seqs} vs {fp_seqs} sequences at \
+             {budget} B)");
+
+    // gate 2: fused dequant kernel rows, scalar-vs-SIMD bit identity
+    // asserted per row by kernel_row before GB/s is recorded
+    let n = if fast { 2048usize } else { 8192 };
+    let iters = if fast { 5 } else { 20 };
+    let isa = simd::detected();
+    let mut rng = Rng::new(4646);
+    let mut qh = vec![0f32; n];
+    rng.fill_normal(&mut qh, 0.0, 1.0);
+    let w4: Vec<u32> =
+        (0..n / 8).map(|_| rng.next_u64() as u32).collect();
+    let w8: Vec<u32> =
+        (0..n / 4).map(|_| rng.next_u64() as u32).collect();
+    let mut krows = Vec::new();
+    let mut kjson = Vec::new();
+    let flops = 2.0 * n as f64;
+    let act_bytes = 4.0 * n as f64;
+    let (row, jrow) = kernel_row(
+        "kv_dot_q4", isa, iters, n as f64 / 2.0 + act_bytes, flops,
+        || vec![simd::kv_dot_q4(&qh, &w4)])?;
+    krows.push(row);
+    kjson.push(jrow);
+    let (row, jrow) = kernel_row(
+        "kv_dot_q8", isa, iters, n as f64 + act_bytes, flops,
+        || vec![simd::kv_dot_q8(&qh, &w8)])?;
+    krows.push(row);
+    kjson.push(jrow);
+    let (row, jrow) = kernel_row(
+        "kv_axpy_q4", isa, iters, n as f64 / 2.0 + act_bytes, flops,
+        || {
+            let mut y = vec![0f32; n];
+            simd::kv_axpy_q4(&mut y, 1.25, -0.5, &w4);
+            y
+        })?;
+    krows.push(row);
+    kjson.push(jrow);
+    let (row, jrow) = kernel_row(
+        "kv_axpy_q8", isa, iters, n as f64 + act_bytes, flops,
+        || {
+            let mut y = vec![0f32; n];
+            simd::kv_axpy_q8(&mut y, 1.25, -0.5, &w8);
+            y
+        })?;
+    krows.push(row);
+    kjson.push(jrow);
+
+    // gate 3: open-loop goodput at a fixed pool byte budget. The int4
+    // run gets the slot count that fits the f32 run's bytes; it must
+    // reproduce its digest across forced-scalar and the detected ISA,
+    // and the fp run must be equally deterministic and ISA-invariant.
+    let requests = if fast { 24 } else { 48 };
+    let fp_slots = 2usize;
+    let ol_budget = fp_pb * (fp_slots * per_seq) as u64;
+    let i4_slots = (ol_budget / i4_pb) as usize / per_seq;
+    ensure!(i4_slots > fp_slots,
+            "kv_lowbit bench: int4 slot budget {i4_slots} not above fp \
+             {fp_slots}");
+    let fp_cfg = OpenLoopCfg {
+        requests,
+        rate: 120.0,
+        tick_secs: 0.005,
+        prompt_len,
+        max_new,
+        deadline_secs: 0.4,
+        seed: 17,
+        slots: fp_slots,
+        max_batch: fp_slots,
+        prefill_chunk: prompt_len,
+        max_queue: requests,
+        fault_rate: 0.0,
+        personas: 0,
+        page_rows,
+        prefix_cache: false,
+        kv_bits: 16,
+    };
+    let i4_cfg = OpenLoopCfg {
+        slots: i4_slots,
+        max_batch: i4_slots,
+        kv_bits: 4,
+        ..fp_cfg
+    };
+    let fp_a = run_open_loop(core.clone(), &fp_cfg)?;
+    let fp_b = run_open_loop(core.clone(), &fp_cfg)?;
+    ensure!(fp_a == fp_b,
+            "kv_lowbit bench: fp open-loop run not deterministic");
+    let fp_s =
+        simd::with_isa(Isa::Scalar, || run_open_loop(core.clone(),
+                                                     &fp_cfg))?;
+    ensure!(fp_a == fp_s,
+            "kv_lowbit bench: fp digest diverges between scalar and {}",
+            isa.name());
+    let i4_a =
+        simd::with_isa(Isa::Scalar, || run_open_loop(core.clone(),
+                                                     &i4_cfg))?;
+    let i4_b =
+        simd::with_isa(isa, || run_open_loop(core.clone(), &i4_cfg))?;
+    ensure!(i4_a == i4_b,
+            "kv_lowbit bench: int4 digest diverges between scalar and \
+             {}", isa.name());
+    ensure!(fp_a.kv_bits == 32 && i4_a.kv_bits == 4,
+            "kv_lowbit bench: effective kv_bits wrong");
+    ensure!(fp_a.leaked_pages == 0 && i4_a.leaked_pages == 0,
+            "kv_lowbit bench: open-loop run leaked pages");
+    ensure!(i4_a.pool_bytes <= fp_a.pool_bytes,
+            "kv_lowbit bench: int4 pool {} B over the fp budget {} B",
+            i4_a.pool_bytes, fp_a.pool_bytes);
+    ensure!(i4_a.goodput >= fp_a.goodput && fp_a.goodput > 0,
+            "kv_lowbit bench: int4 goodput {} below fp {} at the same \
+             byte budget", i4_a.goodput, fp_a.goodput);
+    let goodput_mult = i4_a.goodput as f64 / fp_a.goodput as f64;
+
+    // gate 4: synthetic teacher-forced ppl delta vs the f32 pool on
+    // the same tiny core and gates the core unit tests pin (the bench
+    // records the deltas the tests only bound)
+    let pvocab = 96usize;
+    let pc = Arc::new(ModelCore::synthetic(
+        32, 4, 8, 64, pvocab, 2, QuantScheme::new(2, 32), 24, 35)?);
+    let tf_ppl = |pool: &mut KvPool| -> Result<f64> {
+        let seq: Vec<i32> =
+            (0..20).map(|i| ((i * 3 + 5) % pvocab) as i32).collect();
+        let mut sc = pc.scratch();
+        let Some(l) = pool.lease() else {
+            bail!("kv_lowbit bench: ppl pool too small");
+        };
+        let mut out = Vec::new();
+        pc.forward_logits(pool, &l, 0, &seq, &mut sc, &mut out)?;
+        let mut nll = 0f64;
+        for t in 0..seq.len() - 1 {
+            let row = &out[t * pvocab..(t + 1) * pvocab];
+            let mx =
+                row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f64 =
+                row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
+            nll += z.ln() - (row[seq[t + 1] as usize] - mx) as f64;
+        }
+        pool.release(l);
+        Ok((nll / (seq.len() - 1) as f64).exp())
+    };
+    let mut ppl_pool = KvPool::for_core_fmt(&pc, 1, KvFormat::F32);
+    let ppl_fp = tf_ppl(&mut ppl_pool)?;
+    let mut ppl_pool = KvPool::for_core_fmt(&pc, 1, KvFormat::Int8);
+    let ppl_i8 = tf_ppl(&mut ppl_pool)?;
+    let mut ppl_pool = KvPool::for_core_fmt(&pc, 1, KvFormat::Int4);
+    let ppl_i4 = tf_ppl(&mut ppl_pool)?;
+    ensure!(ppl_fp.is_finite() && ppl_i8.is_finite()
+                && ppl_i4.is_finite(),
+            "kv_lowbit bench: non-finite ppl");
+    let d8 = (ppl_i8 - ppl_fp).abs() / ppl_fp;
+    let d4 = (ppl_i4 - ppl_fp).abs() / ppl_fp;
+    let (gate8, gate4) = (0.05f64, 0.25f64);
+    ensure!(d8 < gate8,
+            "kv_lowbit bench: int8 ppl delta {d8:.4} over the {gate8} \
+             gate (ppl {ppl_i8:.4} vs fp {ppl_fp:.4})");
+    ensure!(d4 < gate4,
+            "kv_lowbit bench: int4 ppl delta {d4:.4} over the {gate4} \
+             gate (ppl {ppl_i4:.4} vs fp {ppl_fp:.4})");
+
+    crate::info!("kv_lowbit bench: int4 {mult4:.2}x / int8 {mult8:.2}x \
+                  capacity at {budget} B; goodput {} vs {} at fixed \
+                  bytes ({goodput_mult:.2}x); ppl delta int4 {d4:.4} \
+                  int8 {d8:.4}", i4_a.goodput, fp_a.goodput);
+
+    let rows = vec![
+        vec!["config".into(),
+             format!("dim {dim}, {n_layers} block(s), {page_rows}-row \
+                      pages, {max_ctx}-row sequences, budget {budget} \
+                      B")],
+        vec!["sequences at budget (f32)".into(), format!("{fp_seqs}")],
+        vec!["sequences at budget (int8)".into(),
+             format!("{i8_seqs} ({mult8:.2}x)")],
+        vec!["sequences at budget (int4)".into(),
+             format!("{i4_seqs} ({mult4:.2}x, gate >= 3.5x)")],
+        vec!["open-loop goodput at fixed bytes".into(),
+             format!("int4 {}/{} vs f32 {}/{} ({goodput_mult:.2}x; \
+                      {} vs {} B pool)",
+                     i4_a.goodput, i4_a.arrivals, fp_a.goodput,
+                     fp_a.arrivals, i4_a.pool_bytes, fp_a.pool_bytes)],
+        vec![format!("int4 digest (scalar == {})", isa.name()),
+             format!("{:016x}", i4_a.digest)],
+        vec!["ppl delta vs f32".into(),
+             format!("int8 {d8:.4} (gate {gate8}), int4 {d4:.4} (gate \
+                      {gate4})")],
+    ];
+    let md = format!(
+        "## Low-bit KV pages - packed int8/int4 capacity, fused-dequant \
+         bandwidth, goodput at fixed pool bytes, ppl delta (3.5x \
+         capacity, ISA bit-identity, and ppl gates asserted)\n\n{}\n\n{}",
+        crate::exp::md_table(&["Metric", "Value"], &rows),
+        crate::exp::md_table(
+            &["Kernel", "scalar us", "SIMD us", "scalar GB/s",
+              "SIMD GB/s", "scalar GF/s", "SIMD GF/s", "speedup"],
+            &krows)
+    );
+    let j = Json::obj(vec![
+        ("page_rows", Json::num(page_rows as f64)),
+        ("fp_page_bytes", Json::num(fp_pb as f64)),
+        ("int8_page_bytes", Json::num(i8_pb as f64)),
+        ("int4_page_bytes", Json::num(i4_pb as f64)),
+        ("pool_budget_bytes", Json::num(budget as f64)),
+        ("fp_seqs", Json::num(fp_seqs as f64)),
+        ("int8_seqs", Json::num(i8_seqs as f64)),
+        ("int4_seqs", Json::num(i4_seqs as f64)),
+        ("capacity_multiplier_int8", Json::num(mult8)),
+        ("capacity_multiplier_int4", Json::num(mult4)),
+        ("kernels", Json::arr(kjson)),
+        ("goodput_fp", Json::num(fp_a.goodput as f64)),
+        ("goodput_int4", Json::num(i4_a.goodput as f64)),
+        ("goodput_multiplier", Json::num(goodput_mult)),
+        ("tokens_fp", Json::num(fp_a.total_tokens as f64)),
+        ("tokens_int4", Json::num(i4_a.total_tokens as f64)),
+        ("openloop_pool_bytes_fp", Json::num(fp_a.pool_bytes as f64)),
+        ("openloop_pool_bytes_int4", Json::num(i4_a.pool_bytes as f64)),
+        ("digest_int4", Json::str(format!("{:016x}", i4_a.digest))),
+        ("ppl_fp", Json::num(ppl_fp)),
+        ("ppl_int8", Json::num(ppl_i8)),
+        ("ppl_int4", Json::num(ppl_i4)),
+        ("ppl_rel_delta_int8", Json::num(d8)),
+        ("ppl_rel_delta_int4", Json::num(d4)),
+        ("ppl_gate_int8", Json::num(gate8)),
+        ("ppl_gate_int4", Json::num(gate4)),
+        ("lowbit_deterministic", Json::Bool(true)),
+        ("fp_bitexact", Json::Bool(true)),
         ("leaked_pages", Json::num(0.0)),
     ]);
     Ok((md, j))
@@ -985,6 +1290,7 @@ pub fn serve_robust_throughput(fast: bool) -> Result<(String, Json)> {
         personas: 0,
         page_rows: 0,
         prefix_cache: false,
+        kv_bits: 16,
     };
 
     // robustness gate 1: survivors of a clean, uncontended run are
@@ -1523,15 +1829,15 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 /// eval_forward, 4 adds the continuous-batching serve section, 5 adds
 /// the paged-KV kv_fork section, 6 adds the open-loop serve_robust
 /// section, 7 adds the SIMD kernels section, 8 adds the cross-request
-/// prefix_cache section - see docs/BENCH_SCHEMA.md), and requires
-/// non-empty matvec/decode sections with numeric fields.
-/// scripts/tier1.sh fails the build on error.
+/// prefix_cache section, 9 adds the low-bit KV kv_lowbit section - see
+/// docs/BENCH_SCHEMA.md), and requires non-empty matvec/decode sections
+/// with numeric fields. scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=8).contains(&schema) {
+    if !(1..=9).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -1750,6 +2056,80 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             bail!("{path}: prefix_cache.leaked_pages {leaked} != 0");
         }
     }
+    // schema 9 adds the low-bit KV kv_lowbit section; the checker
+    // re-asserts the low-bit contract the numbers encode: int4 admits
+    // >= 3.5x the sequences of f32 at an identical byte budget, the
+    // open-loop comparison never let the packed pool out-spend fp (and
+    // goodput did not regress), every fused dequant kernel row passed
+    // the scalar-vs-SIMD bit-equality assertion, the run digests were
+    // ISA-invariant, the fp path stayed byte-identical, the ppl deltas
+    // sit under their gates, and nothing leaked
+    if schema >= 9 {
+        let kl = j.get("kv_lowbit")?;
+        let cm4 = kl.get("capacity_multiplier_int4")?.as_f64()?;
+        if !cm4.is_finite() || cm4 < 3.5 {
+            bail!("{path}: kv_lowbit.capacity_multiplier_int4 {cm4} \
+                   below the 3.5x gate");
+        }
+        for key in ["capacity_multiplier_int8", "fp_page_bytes",
+                    "int8_page_bytes", "int4_page_bytes",
+                    "pool_budget_bytes", "fp_seqs", "int4_seqs",
+                    "goodput_fp", "goodput_int4", "ppl_fp", "ppl_int8",
+                    "ppl_int4"] {
+            let v = kl.get(key)?.as_f64()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: bad kv_lowbit.{key} {v}");
+            }
+        }
+        let bf = kl.get("openloop_pool_bytes_fp")?.as_f64()?;
+        let b4 = kl.get("openloop_pool_bytes_int4")?.as_f64()?;
+        if !(b4 > 0.0 && b4 <= bf) {
+            bail!("{path}: kv_lowbit int4 open-loop pool {b4} B over \
+                   the fp budget {bf} B");
+        }
+        let g_fp = kl.get("goodput_fp")?.as_f64()?;
+        let g_i4 = kl.get("goodput_int4")?.as_f64()?;
+        if g_i4 < g_fp {
+            bail!("{path}: kv_lowbit.goodput_int4 {g_i4} below fp \
+                   {g_fp} at the same byte budget");
+        }
+        for (dk, gk) in [("ppl_rel_delta_int8", "ppl_gate_int8"),
+                         ("ppl_rel_delta_int4", "ppl_gate_int4")] {
+            let d = kl.get(dk)?.as_f64()?;
+            let g = kl.get(gk)?.as_f64()?;
+            if !d.is_finite() || d < 0.0 || d >= g {
+                bail!("{path}: kv_lowbit.{dk} {d} over its gate {g}");
+            }
+        }
+        let rows = kl.get("kernels")?.as_arr()?;
+        if rows.is_empty() {
+            bail!("{path}: empty kv_lowbit.kernels section");
+        }
+        for r in rows {
+            let name = r.get("kernel")?.as_str()?.to_string();
+            for key in ["scalar_us", "simd_us", "scalar_gb_s",
+                        "simd_gb_s", "speedup"] {
+                let v = r.get(key)?.as_f64()?;
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("{path}: bad kv_lowbit.{name}.{key} {v}");
+                }
+            }
+            if !r.get("bitexact")?.as_bool()? {
+                bail!("{path}: kv_lowbit.{name}.bitexact is false \
+                       (SIMD dequant path diverged from scalar)");
+            }
+        }
+        for key in ["lowbit_deterministic", "fp_bitexact"] {
+            if !kl.get(key)?.as_bool()? {
+                bail!("{path}: kv_lowbit.{key} is false");
+            }
+        }
+        kl.get("digest_int4")?.as_str()?;
+        let leaked = kl.get("leaked_pages")?.as_f64()?;
+        if leaked != 0.0 {
+            bail!("{path}: kv_lowbit.leaked_pages {leaked} != 0");
+        }
+    }
     Ok(())
 }
 
@@ -1810,7 +2190,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(8.0)),
+            ("schema", Json::num(9.0)),
             ("kind", Json::str("inference_throughput")),
             ("simd", Json::str("avx2")),
             (
@@ -1942,6 +2322,53 @@ mod tests {
                     ("leaked_pages", Json::num(0.0)),
                 ]),
             ),
+            (
+                "kv_lowbit",
+                Json::obj(vec![
+                    ("page_rows", Json::num(8.0)),
+                    ("fp_page_bytes", Json::num(4096.0)),
+                    ("int8_page_bytes", Json::num(1152.0)),
+                    ("int4_page_bytes", Json::num(640.0)),
+                    ("pool_budget_bytes", Json::num(98304.0)),
+                    ("fp_seqs", Json::num(8.0)),
+                    ("int8_seqs", Json::num(28.0)),
+                    ("int4_seqs", Json::num(51.0)),
+                    ("capacity_multiplier_int8", Json::num(3.5)),
+                    ("capacity_multiplier_int4", Json::num(6.375)),
+                    (
+                        "kernels",
+                        Json::arr(vec![Json::obj(vec![
+                            ("kernel", Json::str("kv_dot_q4")),
+                            ("scalar_us", Json::num(12.0)),
+                            ("simd_us", Json::num(3.0)),
+                            ("scalar_gb_s", Json::num(4.0)),
+                            ("simd_gb_s", Json::num(16.0)),
+                            ("scalar_gflop_s", Json::num(2.0)),
+                            ("simd_gflop_s", Json::num(8.0)),
+                            ("speedup", Json::num(4.0)),
+                            ("bitexact", Json::Bool(true)),
+                        ])]),
+                    ),
+                    ("goodput_fp", Json::num(9.0)),
+                    ("goodput_int4", Json::num(21.0)),
+                    ("goodput_multiplier", Json::num(21.0 / 9.0)),
+                    ("tokens_fp", Json::num(70.0)),
+                    ("tokens_int4", Json::num(160.0)),
+                    ("openloop_pool_bytes_fp", Json::num(24576.0)),
+                    ("openloop_pool_bytes_int4", Json::num(24320.0)),
+                    ("digest_int4", Json::str("00c0ffee00c0ffee")),
+                    ("ppl_fp", Json::num(94.8)),
+                    ("ppl_int8", Json::num(94.9)),
+                    ("ppl_int4", Json::num(96.1)),
+                    ("ppl_rel_delta_int8", Json::num(0.002)),
+                    ("ppl_rel_delta_int4", Json::num(0.014)),
+                    ("ppl_gate_int8", Json::num(0.05)),
+                    ("ppl_gate_int4", Json::num(0.25)),
+                    ("lowbit_deterministic", Json::Bool(true)),
+                    ("fp_bitexact", Json::Bool(true)),
+                    ("leaked_pages", Json::num(0.0)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -1949,10 +2376,10 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-8 file without its required sections is rejected...
+        // schema-9 file without its required sections is rejected...
         for missing in ["train_step", "eval_forward", "serve", "kv_fork",
                         "serve_robust", "kernels", "simd",
-                        "prefix_cache"] {
+                        "prefix_cache", "kv_lowbit"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -2028,23 +2455,68 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "bad serve_robust.{key} accepted");
         }
-        // ...but the core sections under legacy schemas 1-7 stay valid
-        // (7 keeps kernels, 6 keeps serve_robust, 5 keeps kv_fork, 4
-        // keeps serve, 3 keeps eval_forward, 1/2 drop those too)
+        // ...and a kv_lowbit section violating the low-bit contract
+        // (capacity under the 3.5x gate, ppl delta over its gate,
+        // broken determinism flags, an out-of-budget pool, leaks) is
+        // rejected
+        for (key, val) in [
+            ("capacity_multiplier_int4", Json::num(3.0)),
+            ("ppl_rel_delta_int4", Json::num(0.5)),
+            ("ppl_rel_delta_int8", Json::num(0.09)),
+            ("goodput_int4", Json::num(5.0)),
+            ("openloop_pool_bytes_int4", Json::num(1e9)),
+            ("lowbit_deterministic", Json::Bool(false)),
+            ("fp_bitexact", Json::Bool(false)),
+            ("leaked_pages", Json::num(2.0)),
+        ] {
+            let mut fields = Vec::new();
+            if let Json::Obj(outer) = &good {
+                for (k, v) in outer {
+                    if k == "kv_lowbit" {
+                        let mut kl = Vec::new();
+                        if let Json::Obj(inner) = v {
+                            for (ik, iv) in inner {
+                                kl.push((
+                                    ik.as_str(),
+                                    if ik == key {
+                                        val.clone()
+                                    } else {
+                                        iv.clone()
+                                    },
+                                ));
+                            }
+                        }
+                        fields.push((k.as_str(), Json::obj(kl)));
+                    } else {
+                        fields.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(fields)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "bad kv_lowbit.{key} accepted");
+        }
+        // ...but the core sections under legacy schemas 1-8 stay valid
+        // (8 keeps prefix_cache, 7 keeps kernels, 6 keeps serve_robust,
+        // 5 keeps kv_fork, 4 keeps serve, 3 keeps eval_forward, 1/2
+        // drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["prefix_cache", "kernels", "simd",
-                          "serve_robust", "kv_fork", "serve",
+            (1.0f64, vec!["kv_lowbit", "prefix_cache", "kernels",
+                          "simd", "serve_robust", "kv_fork", "serve",
                           "eval_forward", "schema"]),
-            (2.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
-                       "kv_fork", "serve", "eval_forward", "schema"]),
-            (3.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
-                       "kv_fork", "serve", "schema"]),
-            (4.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
-                       "kv_fork", "schema"]),
-            (5.0, vec!["prefix_cache", "kernels", "simd", "serve_robust",
+            (2.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
+                       "serve_robust", "kv_fork", "serve",
+                       "eval_forward", "schema"]),
+            (3.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
+                       "serve_robust", "kv_fork", "serve", "schema"]),
+            (4.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
+                       "serve_robust", "kv_fork", "schema"]),
+            (5.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
+                       "serve_robust", "schema"]),
+            (6.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
                        "schema"]),
-            (6.0, vec!["prefix_cache", "kernels", "simd", "schema"]),
-            (7.0, vec!["prefix_cache", "schema"]),
+            (7.0, vec!["kv_lowbit", "prefix_cache", "schema"]),
+            (8.0, vec!["kv_lowbit", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

@@ -45,6 +45,11 @@ COMMANDS
                         page-pool occupancy (peak pages, COW bytes)
                         [--requests N --slots N --tokens N --prompt-len L
                          --prefill-chunk N --seed S --model FILE];
+                        --kv-bits {4,8,16} selects the KV page storage
+                        width (16 = f32 default; 4/8 = packed low-bit
+                        pages with SIMD dequant attention: 4-8x the
+                        sequences at fixed pool bytes, bit-deterministic
+                        per seed but not vs f32);
                         --shared-prefix switches to an N-personas x
                         M-users mix (fixed system prompts + short user
                         suffixes) with the cross-request prefix cache on,
@@ -62,8 +67,9 @@ COMMANDS
   bench <which>         qlinear (Table 10) | inference (threaded decode +
                         batched prefill + native train_step + eval_forward
                         + serve + paged-KV kv_fork + open-loop
-                        serve_robust + SIMD kernels + prefix_cache
-                        sections -> runs/bench.json, schema 8; see
+                        serve_robust + SIMD kernels + prefix_cache +
+                        low-bit KV kv_lowbit
+                        sections -> runs/bench.json, schema 9; see
                         docs/BENCH_SCHEMA.md) | check (validate
                         runs/bench.json) | train-time (Tables 8/9)
                         [--fast]

@@ -37,11 +37,21 @@
 //! co-batching requests or sharing prefix pages cannot change any
 //! request's output (pinned by tests here, in `infer::sched`, in
 //! `bench::serve_throughput`, and in the integration suite).
+//!
+//! Pools with a packed [`KvFormat`] (low-bit KV pages) carry the same
+//! contract *within the mode*: K/V rows are quantized once at write
+//! time by a scalar writer (identical stored bits under every
+//! `EQAT_SIMD` setting) and attention streams the packed words through
+//! the lane-order-pinned fused dequant kernels in `util::simd` - so
+//! low-bit logits are bit-identical across batch size, chunking,
+//! threads, page size, SIMD ISA, and cache hit vs cold, just not equal
+//! to the f32 mode (the accuracy delta is tracked by the `kv_lowbit`
+//! bench section).
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::QuantScheme;
-use crate::infer::kv::{KvLease, KvPool};
+use crate::infer::kv::{KvFormat, KvLease, KvPool};
 use crate::infer::qlinear::{dense_matmul, dense_matmul_rows, dense_matvec,
                             PackedLinear};
 use crate::io::manifest::PresetInfo;
@@ -49,6 +59,7 @@ use crate::model::quantized::QuantizedModel;
 use crate::quant::rtn::{minmax_init, quantize};
 use crate::util::failpoint;
 use crate::util::rng::Rng;
+use crate::util::simd;
 use crate::util::threads;
 
 /// Below this many attention MACs (sequences * heads * positions *
@@ -414,9 +425,18 @@ impl ModelCore {
         let eps = self.norm_eps;
         let mc = self.max_ctx;
         let p = pos;
+        let packed = pool.format().is_packed();
         let Scratch {
-            hn, q, ctx, attn_out, gate, up, down, h, logits, att, sx, ..
+            hn, q, ctx, attn_out, gate, up, down, h, logits, att, sx,
+            p_k, p_v, ..
         } = sc;
+        if packed {
+            // packed pools stage K/V in scratch (rope, then
+            // quantize-on-write); grown once, then steady-state
+            // zero-alloc like the f32 path
+            p_k.resize(d, 0.0);
+            p_v.resize(d, 0.0);
+        }
 
         h.copy_from_slice(
             &self.embed[tok as usize * d..(tok as usize + 1) * d]);
@@ -424,14 +444,23 @@ impl ModelCore {
         for (bi, blk) in self.blocks.iter().enumerate() {
             rms_norm(&h[..], &blk.attn_norm, eps, &mut hn[..]);
             blk.lins[0].matvec_in(&hn[..], &mut q[..], sx);
-            {
-                let krow = pool.k_row_mut(lease, bi, p);
-                blk.lins[1].matvec_in(&hn[..], krow, sx);
-                rope_apply(krow, p, nh, hd, &self.rope_cos,
+            if packed {
+                blk.lins[1].matvec_in(&hn[..], &mut p_k[..], sx);
+                rope_apply(&mut p_k[..], p, nh, hd, &self.rope_cos,
                            &self.rope_sin);
+                pool.put_k_row(lease, bi, p, &p_k[..]);
+                blk.lins[2].matvec_in(&hn[..], &mut p_v[..], sx);
+                pool.put_v_row(lease, bi, p, &p_v[..]);
+            } else {
+                {
+                    let krow = pool.k_row_mut(lease, bi, p);
+                    blk.lins[1].matvec_in(&hn[..], krow, sx);
+                    rope_apply(krow, p, nh, hd, &self.rope_cos,
+                               &self.rope_sin);
+                }
+                blk.lins[2].matvec_in(&hn[..],
+                                      pool.v_row_mut(lease, bi, p), sx);
             }
-            blk.lins[2].matvec_in(&hn[..], pool.v_row_mut(lease, bi, p),
-                                  sx);
             rope_apply(&mut q[..], p, nh, hd, &self.rope_cos,
                        &self.rope_sin);
             let pool_ref: &KvPool = pool;
@@ -742,14 +771,25 @@ impl ModelCore {
             blk.lins[2].matmul_rows(&p_hn[..nb * d], nb, &mut b_v[..nb * d],
                                     mm_tmp, mm_sx);
             // scatter each sequence's K/V row into its own pages at its
-            // own position (RoPE on K and Q at that position)
+            // own position (RoPE on K and Q at that position); packed
+            // pools rope the staged row, then quantize-on-write
+            let packed = pool.format().is_packed();
             for (i, &(lease, pos)) in batch.iter().enumerate() {
-                let krow = pool.k_row_mut(lease, bi, pos);
-                krow.copy_from_slice(&b_k[i * d..(i + 1) * d]);
-                rope_apply(krow, pos, nh, hd, &self.rope_cos,
-                           &self.rope_sin);
-                pool.v_row_mut(lease, bi, pos)
-                    .copy_from_slice(&b_v[i * d..(i + 1) * d]);
+                if packed {
+                    rope_apply(&mut b_k[i * d..(i + 1) * d], pos, nh, hd,
+                               &self.rope_cos, &self.rope_sin);
+                    pool.put_k_row(lease, bi, pos,
+                                   &b_k[i * d..(i + 1) * d]);
+                    pool.put_v_row(lease, bi, pos,
+                                   &b_v[i * d..(i + 1) * d]);
+                } else {
+                    let krow = pool.k_row_mut(lease, bi, pos);
+                    krow.copy_from_slice(&b_k[i * d..(i + 1) * d]);
+                    rope_apply(krow, pos, nh, hd, &self.rope_cos,
+                               &self.rope_sin);
+                    pool.v_row_mut(lease, bi, pos)
+                        .copy_from_slice(&b_v[i * d..(i + 1) * d]);
+                }
                 rope_apply(&mut p_q[i * d..(i + 1) * d], pos, nh, hd,
                            &self.rope_cos, &self.rope_sin);
             }
@@ -828,6 +868,11 @@ pub(crate) fn attend_head_paged(qh: &[f32], pool: &KvPool,
                                 lease: &KvLease, layer: usize, hh: usize,
                                 hd: usize, last: usize, scale: f32,
                                 scores: &mut [f32], ch: &mut [f32]) {
+    if pool.format().is_packed() {
+        attend_head_packed(qh, pool, lease, layer, hh, hd, last, scale,
+                           scores, ch);
+        return;
+    }
     let d = pool.dim;
     let n_rows = last + 1;
     let sc = &mut scores[..n_rows];
@@ -861,6 +906,69 @@ pub(crate) fn attend_head_paged(qh: &[f32], pool: &KvPool,
             let w = sc[u0 + r] / zsum;
             for i in 0..hd {
                 ch[i] += w * vh[i];
+            }
+        }
+        u0 += rows;
+    }
+}
+
+/// [`attend_head_paged`] for packed [`KvFormat`] pools: the same
+/// ascending segment walk, but each row's head slice stays packed and
+/// streams through the fused dequant kernels. The per-row affine code
+/// `x ~ q * scale + zero` turns the dequantized dot into
+/// `scale * dot(q, qv) + zero * sum(qv)` (with `sum(qv)` computed once
+/// per call, scalar), and the value pass into a fused
+/// `ch[i] += (w * scale) * q[i] + (w * zero)` axpy - attention reads
+/// 4-8x fewer bytes and never materializes an f32 row. Requires
+/// `head_dim % 8 == 0` so head slices are whole packed words.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_packed(qh: &[f32], pool: &KvPool, lease: &KvLease,
+                      layer: usize, hh: usize, hd: usize, last: usize,
+                      scale: f32, scores: &mut [f32], ch: &mut [f32]) {
+    let fmt = pool.format();
+    let vpw = fmt.vals_per_word();
+    debug_assert_eq!(hd % 8, 0, "packed KV needs head_dim % 8 == 0");
+    let rw = pool.dim / vpw; // packed words per row
+    let hw = hd / vpw; // packed words per head slice
+    let n_rows = last + 1;
+    let sc = &mut scores[..n_rows];
+    // sum(qv) for the zero-point term, fixed scalar order
+    let mut qsum = 0f32;
+    for &x in qh {
+        qsum += x;
+    }
+    let mut mx = f32::NEG_INFINITY;
+    let mut u0 = 0usize;
+    while u0 < n_rows {
+        let (kw, ksz, rows) = pool.k_seg_q(lease, layer, u0, n_rows - u0);
+        for r in 0..rows {
+            let wrow = &kw[r * rw + hh * hw..r * rw + (hh + 1) * hw];
+            let dq = match fmt {
+                KvFormat::Int4 => simd::kv_dot_q4(qh, wrow),
+                _ => simd::kv_dot_q8(qh, wrow),
+            };
+            let s = (ksz[r * 2] * dq + ksz[r * 2 + 1] * qsum) * scale;
+            mx = mx.max(s);
+            sc[u0 + r] = s;
+        }
+        u0 += rows;
+    }
+    let mut zsum = 0f32;
+    for s in sc.iter_mut() {
+        *s = (*s - mx).exp();
+        zsum += *s;
+    }
+    ch.fill(0.0);
+    let mut u0 = 0usize;
+    while u0 < n_rows {
+        let (vw, vsz, rows) = pool.v_seg_q(lease, layer, u0, n_rows - u0);
+        for r in 0..rows {
+            let wrow = &vw[r * rw + hh * hw..r * rw + (hh + 1) * hw];
+            let wgt = sc[u0 + r] / zsum;
+            let (a, b) = (wgt * vsz[r * 2], wgt * vsz[r * 2 + 1]);
+            match fmt {
+                KvFormat::Int4 => simd::kv_axpy_q4(ch, a, b, wrow),
+                _ => simd::kv_axpy_q8(ch, a, b, wrow),
             }
         }
         u0 += rows;
@@ -1283,5 +1391,213 @@ mod tests {
         assert_eq!(row0, row1);
         dc.step(&mut pool, &a, prompt.len(), 7, &mut sc).unwrap();
         assert_eq!(row0, sc.logits());
+    }
+
+    use crate::util::simd::{with_isa, Isa};
+
+    /// Low-bit reference: solo one-shot prefill + step loop per prompt,
+    /// scalar ISA, one thread, 7-row pages.
+    fn lowbit_want(c: &Arc<ModelCore>, fmt: KvFormat,
+                   prompts: &[Vec<i32>], feed: &[i32])
+                   -> Vec<Vec<Vec<f32>>> {
+        with_isa(Isa::Scalar, || {
+            with_threads(1, || {
+                prompts
+                    .iter()
+                    .map(|p| {
+                        let mut pool = KvPool::for_core_paged_fmt(
+                            c, (CTX + 6) / 7 + 1, 7, fmt);
+                        let mut sc = c.scratch();
+                        let l = pool.lease().unwrap();
+                        c.prefill(&mut pool, &l, 0, p, &mut sc).unwrap();
+                        let mut pos = p.len();
+                        let mut per = Vec::new();
+                        for &t in feed {
+                            c.step(&mut pool, &l, pos, t, &mut sc)
+                                .unwrap();
+                            pos += 1;
+                            per.push(sc.logits().to_vec());
+                        }
+                        per
+                    })
+                    .collect()
+            })
+        })
+    }
+
+    /// The low-bit determinism contract: packed-KV logits are
+    /// bit-identical across batch size {1,2,5}, chunked-vs-one-shot
+    /// prefill, threads {1,4}, page sizes {3,8}, and
+    /// `EQAT_SIMD=scalar|auto` - pinned against a solo scalar reference
+    /// at a third page size. (Not compared to f32: low-bit is its own
+    /// numerics tier.)
+    #[test]
+    fn lowbit_decode_bitexact_across_batch_threads_pages_isa() {
+        let c = core(31);
+        let prompts: Vec<Vec<i32>> =
+            (0..5).map(|i| toks(4 + 2 * i, 7 + i)).collect();
+        let feed = [3i32, 11, 29];
+        for fmt in [KvFormat::Int4, KvFormat::Int8] {
+            let want = lowbit_want(&c, fmt, &prompts, &feed);
+            for &bsz in &[1usize, 2, 5] {
+                for &nt in &[1usize, 4] {
+                    for &pr in &[3usize, 8] {
+                        for &isa in &[Isa::Scalar, crate::util::simd::detected()] {
+                            with_isa(isa, || with_threads(nt, || {
+                                check_lowbit_batch(&c, fmt, &prompts,
+                                                   &feed, &want, bsz, pr);
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn check_lowbit_batch(c: &Arc<ModelCore>, fmt: KvFormat,
+                          prompts: &[Vec<i32>], feed: &[i32],
+                          want: &[Vec<Vec<f32>>], bsz: usize, pr: usize) {
+        let mut pool = KvPool::for_core_paged_fmt(
+            c, bsz * ((CTX + pr - 1) / pr), pr, fmt);
+        let mut sc = c.scratch();
+        let mut leases = Vec::new();
+        let mut poss = Vec::new();
+        for p in prompts.iter().take(bsz) {
+            let l = pool.lease().unwrap();
+            let mut pos = 0usize;
+            for ch in p.chunks(3) {
+                c.prefill(&mut pool, &l, pos, ch, &mut sc).unwrap();
+                pos += ch.len();
+            }
+            leases.push(l);
+            poss.push(pos);
+        }
+        for (si, &t) in feed.iter().enumerate() {
+            let batch: Vec<(&KvLease, usize)> =
+                leases.iter().zip(&poss).map(|(l, &p)| (l, p)).collect();
+            let toks: Vec<i32> = vec![t; bsz];
+            c.decode_batch(&mut pool, &batch, &toks, &mut sc).unwrap();
+            drop(batch);
+            for i in 0..bsz {
+                poss[i] += 1;
+                let got = sc.batch_logits(i);
+                let exp = &want[i][si];
+                assert!(
+                    got.iter().zip(exp)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{fmt:?} batch {bsz} pages {pr} seq {i} step {si}: \
+                     low-bit logits diverge from scalar solo reference"
+                );
+            }
+        }
+    }
+
+    /// Packed pages through fork/COW and the prefix cache: a forked
+    /// child and a cache-hit admission both continue bit-identically to
+    /// the parent's own decode, the child's first write COWs at most one
+    /// (packed) page, and the cache hit copies zero bytes.
+    #[test]
+    fn lowbit_fork_cow_and_cache_hit_decode_bitexact() {
+        let c = core(33);
+        let prompt = toks(13, 7); // 3 full 4-row pages + 1 tail row
+        let feed = [3i32, 11, 29];
+        let mut pool =
+            KvPool::for_core_paged_fmt(&c, 16, 4, KvFormat::Int4);
+        pool.enable_prefix_cache();
+        let mut sc = c.scratch();
+        let parent = pool.lease().unwrap();
+        c.prefill(&mut pool, &parent, 0, &prompt, &mut sc).unwrap();
+        assert_eq!(pool.cache_insert(&prompt, &parent).unwrap(), 3);
+        let child = pool.fork_rows(&parent, prompt.len(), feed.len())
+            .unwrap();
+        let b0 = pool.bytes_copied();
+        // reference: the parent decodes the feed itself
+        let mut want = Vec::new();
+        let mut pos = prompt.len();
+        for &t in &feed {
+            c.step(&mut pool, &parent, pos, t, &mut sc).unwrap();
+            pos += 1;
+            want.push(sc.logits().to_vec());
+        }
+        // the fork sees the parent's quantized rows verbatim
+        let mut pos = prompt.len();
+        for (s, &t) in feed.iter().enumerate() {
+            c.step(&mut pool, &child, pos, t, &mut sc).unwrap();
+            pos += 1;
+            assert!(sc.logits().iter().zip(&want[s])
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "forked packed decode diverged at step {s}");
+        }
+        // both writers COWed at most one packed page each (1 tail row)
+        let copied = pool.bytes_copied() - b0;
+        assert!(copied <= 2 * pool.page_bytes(),
+                "packed COW exceeded one page per writer");
+        pool.release(child);
+        pool.release(parent);
+        // cache hit: re-admit the same prompt, resume past the match
+        let (hit, matched) =
+            pool.lease_rows_cached(&prompt, CTX).unwrap();
+        assert_eq!(matched, 12);
+        let bc = pool.bytes_copied();
+        c.prefill(&mut pool, &hit, matched, &prompt[matched..], &mut sc)
+            .unwrap();
+        let mut pos = prompt.len();
+        for (s, &t) in feed.iter().enumerate() {
+            c.step(&mut pool, &hit, pos, t, &mut sc).unwrap();
+            pos += 1;
+            assert!(sc.logits().iter().zip(&want[s])
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "cache-hit packed decode diverged at step {s}");
+        }
+        assert_eq!(pool.bytes_copied(), bc,
+                   "cache-hit resume must copy zero bytes");
+        pool.release(hit);
+        pool.cache_flush();
+        assert_eq!(pool.pages_in_use(), 0);
+    }
+
+    /// Teacher-forced mean NLL (nats/token) over a fixed synthetic
+    /// sequence, reading KV through `pool`.
+    fn tf_nll(c: &Arc<ModelCore>, pool: &mut KvPool) -> f64 {
+        let seq = toks(20, 3);
+        let mut sc = c.scratch();
+        let l = pool.lease().unwrap();
+        let mut out = Vec::new();
+        c.forward_logits(pool, &l, 0, &seq, &mut sc, &mut out).unwrap();
+        let mut nll = 0f64;
+        for t in 0..seq.len() - 1 {
+            let row = &out[t * VOCAB..(t + 1) * VOCAB];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f64 =
+                row.iter().map(|&x| ((x - mx) as f64).exp()).sum();
+            let tgt = seq[t + 1] as usize;
+            nll += z.ln() - (row[tgt] - mx) as f64;
+        }
+        pool.release(l);
+        nll / (seq.len() - 1) as f64
+    }
+
+    /// The accuracy half of the low-bit contract: int8/int4 KV shifts
+    /// teacher-forced ppl by a bounded relative delta vs the f32 pool
+    /// (the bench's `kv_lowbit` section records the same deltas under
+    /// the same gates).
+    #[test]
+    fn lowbit_ppl_delta_vs_fp_is_bounded() {
+        let c = core(35);
+        let mut fp = KvPool::for_core(&c, 1);
+        let ppl_fp = tf_nll(&c, &mut fp).exp();
+        assert!(ppl_fp.is_finite());
+        for (fmt, gate) in
+            [(KvFormat::Int8, 0.05), (KvFormat::Int4, 0.25)]
+        {
+            let mut qp = KvPool::for_core_fmt(&c, 1, fmt);
+            let ppl_q = tf_nll(&c, &mut qp).exp();
+            assert!(ppl_q.is_finite());
+            let rel = (ppl_q - ppl_fp).abs() / ppl_fp;
+            assert!(rel < gate,
+                    "{fmt:?} KV ppl {ppl_q:.4} vs fp {ppl_fp:.4}: \
+                     relative delta {rel:.4} over the {gate} gate");
+        }
     }
 }

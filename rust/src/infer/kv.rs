@@ -44,6 +44,26 @@
 //! logits at any batch size, chunking, thread count, and now page size)
 //! is unchanged.
 //!
+//! **Low-bit page storage** (opt-in via [`KvFormat`]): pages can
+//! store rows as packed int8 or int4 instead of f32. Each
+//! `dim`-element row is quantized *on write* with an asymmetric
+//! per-row affine code (`x ~ q * scale + zero`, `zero = min`,
+//! `scale = (max - min) / qmax`) - the same group scheme as
+//! `infer::qlinear`'s weight groups, with the group being one row -
+//! and attention streams the packed words through the fused
+//! dequant kernels in [`crate::util::simd`]. Quantization is
+//! deliberately scalar: a row is written once but read many times,
+//! so a scalar-only writer keeps the stored bits identical under
+//! every `EQAT_SIMD` setting while the read kernels carry the
+//! lane-order contract. Packed pages flow through fork / COW / the
+//! prefix cache unchanged (those layers move pages and rows, not
+//! element formats); `page_bytes`/`bytes_copied` account the packed
+//! sizes, which is where the 4-8x capacity multiplier shows up. The
+//! default `F32` format keeps the byte-identical serving contract;
+//! packed formats carry their own determinism contract (bit-identical
+//! across batch size, chunking, threads, page size, SIMD ISA, cache
+//! hit vs cold - just not to f32).
+//!
 //! **Cross-request prefix cache** (opt-in via
 //! [`KvPool::enable_prefix_cache`]): a radix index
 //! ([`PrefixCache`](crate::infer::prefixcache::PrefixCache)) from token
@@ -69,6 +89,99 @@ use crate::util::failpoint;
 /// Default rows per page. Small enough that a forked tail copy is cheap,
 /// large enough that attention's per-segment loop overhead vanishes.
 pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// Page storage format: f32 rows (the default, byte-identical serving
+/// contract) or packed low-bit rows quantized on write with a per-row
+/// f32 scale/zero pair. See the module docs for the quantization code
+/// and the two-tier determinism contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvFormat {
+    /// Full-precision rows.
+    F32,
+    /// Packed 8-bit rows: 4 values per u32 word.
+    Int8,
+    /// Packed 4-bit rows: 8 values per u32 word.
+    Int4,
+}
+
+impl KvFormat {
+    /// CLI mapping for `--kv-bits {4,8,16}`: 4 and 8 select the packed
+    /// formats; anything else is full precision.
+    pub fn from_bits(bits: u32) -> KvFormat {
+        match bits {
+            4 => KvFormat::Int4,
+            8 => KvFormat::Int8,
+            _ => KvFormat::F32,
+        }
+    }
+
+    /// Stored bits per value (f32 reported as 32).
+    pub fn bits(self) -> u32 {
+        match self {
+            KvFormat::F32 => 32,
+            KvFormat::Int8 => 8,
+            KvFormat::Int4 => 4,
+        }
+    }
+
+    /// Is this a packed (quantized) format?
+    pub fn is_packed(self) -> bool {
+        !matches!(self, KvFormat::F32)
+    }
+
+    /// Packed values per u32 word.
+    pub(crate) fn vals_per_word(self) -> usize {
+        match self {
+            KvFormat::F32 => 1,
+            KvFormat::Int8 => 4,
+            KvFormat::Int4 => 8,
+        }
+    }
+
+    /// Largest stored level (packed formats; 0.0 for f32).
+    fn qmax(self) -> f32 {
+        match self {
+            KvFormat::F32 => 0.0,
+            KvFormat::Int8 => 255.0,
+            KvFormat::Int4 => 15.0,
+        }
+    }
+}
+
+/// Quantize one row into packed `words` (cleared first), returning the
+/// `(scale, zero)` pair. Asymmetric min/max code: `zero = min`,
+/// `scale = (max - min) / qmax`, `x ~ q * scale + zero`. Non-finite
+/// inputs quantize to the zero point; an all-equal (or all-non-finite)
+/// row gets `scale = 1` so dequant reproduces the constant exactly.
+/// Scalar on purpose - see the module docs' determinism note.
+fn quant_row(row: &[f32], qmax: f32, bits: u32, vpw: usize,
+             words: &mut [u32]) -> (f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in row {
+        if x.is_finite() {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+    }
+    if !mn.is_finite() || !mx.is_finite() {
+        mn = 0.0;
+        mx = 0.0;
+    }
+    let zero = mn;
+    let scale = if mx > mn { (mx - mn) / qmax } else { 1.0 };
+    let inv = 1.0 / scale;
+    for w in words.iter_mut() {
+        *w = 0;
+    }
+    for (i, &x) in row.iter().enumerate() {
+        let xv = if x.is_finite() { x } else { zero };
+        let q =
+            ((xv - zero) * inv).round_ties_even().clamp(0.0, qmax) as u32;
+        words[i / vpw] |= q << (bits * (i % vpw) as u32);
+    }
+    (scale, zero)
+}
 
 /// One live sequence's mutable pool state.
 struct SeqState {
@@ -120,10 +233,26 @@ pub struct KvPool {
     page_rows: usize,
     /// elements per page in each of `k`/`v`: n_layers * page_rows * dim
     page_elems: usize,
-    /// post-RoPE keys, `n_pages * page_elems`
+    /// page storage format (F32 unless opted into low-bit)
+    format: KvFormat,
+    /// packed u32 words per page per slab: page_elems / vals_per_word
+    /// (0 for F32)
+    page_words: usize,
+    /// scale/zero f32s per page per slab: n_layers * page_rows * 2
+    /// (0 for F32)
+    page_sz: usize,
+    /// post-RoPE keys, `n_pages * page_elems` (empty for packed formats)
     k: Vec<f32>,
-    /// values, `n_pages * page_elems`
+    /// values, `n_pages * page_elems` (empty for packed formats)
     v: Vec<f32>,
+    /// packed keys, `n_pages * page_words` (empty for F32)
+    kq: Vec<u32>,
+    /// packed values, `n_pages * page_words` (empty for F32)
+    vq: Vec<u32>,
+    /// per-row key `[scale, zero]` pairs, `n_pages * page_sz`
+    ksz: Vec<f32>,
+    /// per-row value `[scale, zero]` pairs, `n_pages * page_sz`
+    vsz: Vec<f32>,
     refcount: Vec<u32>,
     free: Vec<u32>,
     seqs: Vec<SeqState>,
@@ -156,16 +285,40 @@ impl KvPool {
     /// exercise multi-page prefixes at tiny contexts).
     pub fn with_page_rows(n_layers: usize, dim: usize, max_ctx: usize,
                           n_pages: usize, page_rows: usize) -> KvPool {
+        KvPool::with_format(n_layers, dim, max_ctx, n_pages, page_rows,
+                            KvFormat::F32)
+    }
+
+    /// Pool with an explicit page geometry *and* storage format. Packed
+    /// formats require `dim % 8 == 0` (the fused dequant kernels read 8
+    /// values per step and per-head slices must be word-aligned).
+    pub fn with_format(n_layers: usize, dim: usize, max_ctx: usize,
+                       n_pages: usize, page_rows: usize,
+                       format: KvFormat) -> KvPool {
         let page_rows = page_rows.max(1);
         let page_elems = n_layers * page_rows * dim;
+        let packed = format.is_packed();
+        assert!(!packed || dim % 8 == 0,
+                "packed KV formats need dim % 8 == 0 (got {dim})");
+        let page_words =
+            if packed { page_elems / format.vals_per_word() } else { 0 };
+        let page_sz = if packed { n_layers * page_rows * 2 } else { 0 };
+        let fp_elems = if packed { 0 } else { n_pages * page_elems };
         KvPool {
             dim,
             max_ctx,
             n_layers,
             page_rows,
             page_elems,
-            k: vec![0f32; n_pages * page_elems],
-            v: vec![0f32; n_pages * page_elems],
+            format,
+            page_words,
+            page_sz,
+            k: vec![0f32; fp_elems],
+            v: vec![0f32; fp_elems],
+            kq: vec![0u32; n_pages * page_words],
+            vq: vec![0u32; n_pages * page_words],
+            ksz: vec![0f32; n_pages * page_sz],
+            vsz: vec![0f32; n_pages * page_sz],
             refcount: vec![0; n_pages],
             // pop() takes from the back; reversed so page 0 leases first
             free: (0..n_pages as u32).rev().collect(),
@@ -184,11 +337,37 @@ impl KvPool {
         KvPool::new(core.n_layers(), core.dim, core.max_ctx, n_slots)
     }
 
+    /// [`KvPool::for_core`] with an explicit storage format (same page
+    /// count as the f32 pool - the capacity multiplier shows up as
+    /// smaller [`KvPool::page_bytes`], or equivalently more pages at
+    /// fixed pool bytes; the `kv_lowbit` bench sizes it the second way).
+    pub fn for_core_fmt(core: &ModelCore, n_slots: usize,
+                        format: KvFormat) -> KvPool {
+        let (max_ctx, pr) = (core.max_ctx, DEFAULT_PAGE_ROWS.min(
+            core.max_ctx.max(1)));
+        let per_seq = pages_for(max_ctx.max(1), pr);
+        KvPool::with_format(core.n_layers(), core.dim, max_ctx,
+                            n_slots * per_seq, pr, format)
+    }
+
     /// Pool shaped for `core` with an explicit page geometry.
     pub fn for_core_paged(core: &ModelCore, n_pages: usize,
                           page_rows: usize) -> KvPool {
         KvPool::with_page_rows(core.n_layers(), core.dim, core.max_ctx,
                                n_pages, page_rows)
+    }
+
+    /// [`KvPool::for_core_paged`] with an explicit storage format.
+    pub fn for_core_paged_fmt(core: &ModelCore, n_pages: usize,
+                              page_rows: usize, format: KvFormat)
+                              -> KvPool {
+        KvPool::with_format(core.n_layers(), core.dim, core.max_ctx,
+                            n_pages, page_rows, format)
+    }
+
+    /// The page storage format.
+    pub fn format(&self) -> KvFormat {
+        self.format
     }
 
     /// Rows per page.
@@ -234,9 +413,15 @@ impl KvPool {
         self.bytes_copied
     }
 
-    /// Bytes in one page (k + v, all layers) - the COW copy upper bound.
+    /// Bytes in one page (k + v, all layers; packed formats count the
+    /// packed words plus the per-row scale/zero pairs) - the COW copy
+    /// upper bound and the unit of pool-capacity accounting.
     pub fn page_bytes(&self) -> u64 {
-        2 * self.page_elems as u64 * 4
+        if self.format.is_packed() {
+            2 * (self.page_words + self.page_sz) as u64 * 4
+        } else {
+            2 * self.page_elems as u64 * 4
+        }
     }
 
     /// Pages a fresh `rows`-row lease must reserve.
@@ -397,11 +582,38 @@ impl KvPool {
             self.release(child);
             return None;
         }
-        let (pr, d) = (self.page_rows, self.dim);
+        let pr = self.page_rows;
         for pi in 0..pages_for(pos, pr) {
             let rows = pr.min(pos - pi * pr);
             let sp = self.seqs[parent.id].pages[pi] as usize;
             let dp = self.seqs[child.id].pages[pi] as usize;
+            self.copy_page_rows(sp, dp, rows);
+        }
+        Some(child)
+    }
+
+    /// Copy the first `rows` rows of page `sp` into page `dp` (k + v,
+    /// every layer, whatever the storage format) and count the copied
+    /// bytes. Shared body of [`KvPool::fork_copy`] and the COW fault in
+    /// [`KvPool::prepare_rows`].
+    fn copy_page_rows(&mut self, sp: usize, dp: usize, rows: usize) {
+        let (pr, d) = (self.page_rows, self.dim);
+        if self.format.is_packed() {
+            let rw = d / self.format.vals_per_word();
+            for l in 0..self.n_layers {
+                let so = sp * self.page_words + l * pr * rw;
+                let doff = dp * self.page_words + l * pr * rw;
+                let len = rows * rw;
+                self.kq.copy_within(so..so + len, doff);
+                self.vq.copy_within(so..so + len, doff);
+                let sso = sp * self.page_sz + l * pr * 2;
+                let sdo = dp * self.page_sz + l * pr * 2;
+                self.ksz.copy_within(sso..sso + rows * 2, sdo);
+                self.vsz.copy_within(sso..sso + rows * 2, sdo);
+            }
+            self.bytes_copied +=
+                2 * (self.n_layers * rows) as u64 * (rw as u64 * 4 + 8);
+        } else {
             for l in 0..self.n_layers {
                 let so = sp * self.page_elems + l * pr * d;
                 let doff = dp * self.page_elems + l * pr * d;
@@ -409,9 +621,8 @@ impl KvPool {
                 self.k.copy_within(so..so + len, doff);
                 self.v.copy_within(so..so + len, doff);
             }
+            self.bytes_copied += 2 * (self.n_layers * rows * d) as u64 * 4;
         }
-        self.bytes_copied += 2 * (self.n_layers * pos * d) as u64 * 4;
-        Some(child)
     }
 
     /// Pages currently in `lease`'s table (diagnostics / tests).
@@ -441,6 +652,15 @@ impl KvPool {
     /// Cache pages evicted under reservation pressure so far.
     pub fn cache_evictions(&self) -> u64 {
         self.cache.as_ref().map_or(0, |c| c.evictions())
+    }
+
+    /// Rows in `key`'s longest cached page-aligned prefix, without
+    /// leasing anything, bumping refcounts, or stamping LRU recency
+    /// (see [`PrefixCache::probe`]). 0 with the cache off. The
+    /// scheduler's cache-aware admission ordering classifies queued
+    /// candidates with this before any lease call.
+    pub fn cache_probe_rows(&self, key: &[i32]) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.probe(key) * self.page_rows)
     }
 
     /// Record `lease`'s KV for `tokens` in the prefix cache: every page
@@ -602,16 +822,7 @@ impl KvPool {
             let np = self.draw(lease.id)? as usize;
             let row_off = pos.saturating_sub(pi * pr).min(pr);
             if row_off > 0 {
-                let d = self.dim;
-                for l in 0..self.n_layers {
-                    let so = p * self.page_elems + l * pr * d;
-                    let doff = np * self.page_elems + l * pr * d;
-                    let len = row_off * d;
-                    self.k.copy_within(so..so + len, doff);
-                    self.v.copy_within(so..so + len, doff);
-                }
-                self.bytes_copied +=
-                    2 * (self.n_layers * row_off * self.dim) as u64 * 4;
+                self.copy_page_rows(p, np, row_off);
             }
             self.refcount[p] -= 1;
             debug_assert!(self.refcount[p] > 0);
@@ -643,8 +854,96 @@ impl KvPool {
         self.row_base(lease, layer, pos)
     }
 
+    /// Packed-row bases for `pos`: (index into `kq`/`vq` in words,
+    /// index into `ksz`/`vsz`). Packed-format pools only.
+    #[inline]
+    fn row_q_base(&self, lease: &KvLease, layer: usize, pos: usize)
+                  -> (usize, usize) {
+        let pr = self.page_rows;
+        let page = self.seqs[lease.id].pages[pos / pr] as usize;
+        let r = layer * pr + pos % pr;
+        let rw = self.dim / self.format.vals_per_word();
+        (page * self.page_words + r * rw, page * self.page_sz + r * 2)
+    }
+
+    /// Write one row in the pool's storage format: a plain copy for
+    /// f32, quantize-on-write for packed formats. Requires a prior
+    /// [`KvPool::prepare_rows`] covering `pos` (shared body of
+    /// `put_k_row`/`put_v_row`).
+    fn put_row(&mut self, into_k: bool, lease: &KvLease, layer: usize,
+               pos: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        debug_assert_eq!(
+            self.refcount
+                [self.seqs[lease.id].pages[pos / self.page_rows] as usize],
+            1,
+            "write to a shared page (missing prepare_rows)"
+        );
+        if !self.format.is_packed() {
+            let b = self.row_base(lease, layer, pos);
+            let dst = if into_k { &mut self.k } else { &mut self.v };
+            dst[b..b + row.len()].copy_from_slice(row);
+            return;
+        }
+        let f = self.format;
+        let (wb, sb) = self.row_q_base(lease, layer, pos);
+        let rw = self.dim / f.vals_per_word();
+        let (dst, sz) = if into_k {
+            (&mut self.kq, &mut self.ksz)
+        } else {
+            (&mut self.vq, &mut self.vsz)
+        };
+        let (s, z) = quant_row(row, f.qmax(), f.bits(), f.vals_per_word(),
+                               &mut dst[wb..wb + rw]);
+        sz[sb] = s;
+        sz[sb + 1] = z;
+    }
+
+    /// Write one key row in the pool's storage format (see
+    /// [`KvPool::put_row`]'s contract).
+    pub(crate) fn put_k_row(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize, row: &[f32]) {
+        self.put_row(true, lease, layer, pos, row);
+    }
+
+    /// Write one value row in the pool's storage format.
+    pub(crate) fn put_v_row(&mut self, lease: &KvLease, layer: usize,
+                            pos: usize, row: &[f32]) {
+        self.put_row(false, lease, layer, pos, row);
+    }
+
+    /// Dequantize one stored row back to f32 (tests and accuracy
+    /// probes; the hot path reads packed segments directly). F32 pools
+    /// return the stored row verbatim.
+    pub fn dequant_row(&self, into_k: bool, lease: &KvLease,
+                       layer: usize, pos: usize) -> Vec<f32> {
+        if !self.format.is_packed() {
+            let b = self.row_base(lease, layer, pos);
+            let src = if into_k { &self.k } else { &self.v };
+            return src[b..b + self.dim].to_vec();
+        }
+        let f = self.format;
+        let (vpw, bits) = (f.vals_per_word(), f.bits());
+        let (wb, sb) = self.row_q_base(lease, layer, pos);
+        let (src, sz) = if into_k {
+            (&self.kq, &self.ksz)
+        } else {
+            (&self.vq, &self.vsz)
+        };
+        let (s, z) = (sz[sb], sz[sb + 1]);
+        let mask = (1u32 << bits) - 1;
+        (0..self.dim)
+            .map(|i| {
+                let q = (src[wb + i / vpw] >> (bits * (i % vpw) as u32))
+                    & mask;
+                q as f32 * s + z
+            })
+            .collect()
+    }
+
     /// One key row, writable. Requires a prior
-    /// [`KvPool::prepare_rows`] covering `pos`.
+    /// [`KvPool::prepare_rows`] covering `pos`. F32 pools only (packed
+    /// formats write through [`KvPool::put_k_row`]).
     #[inline]
     pub(crate) fn k_row_mut(&mut self, lease: &KvLease, layer: usize,
                             pos: usize) -> &mut [f32] {
@@ -704,6 +1003,44 @@ impl KvPool {
         (&self.v[b..b + rows * self.dim], rows)
     }
 
+    /// Packed-segment bases starting at `row0`: (word base, scale/zero
+    /// base, rows). One body serves both slabs, like [`KvPool::seg`].
+    #[inline]
+    fn seg_q(&self, lease: &KvLease, layer: usize, row0: usize,
+             max_rows: usize) -> (usize, usize, usize) {
+        debug_assert!(self.format.is_packed());
+        let pr = self.page_rows;
+        let rows = (pr - row0 % pr).min(max_rows);
+        let page = self.seqs[lease.id].pages[row0 / pr] as usize;
+        let r = layer * pr + row0 % pr;
+        let rw = self.dim / self.format.vals_per_word();
+        (page * self.page_words + r * rw, page * self.page_sz + r * 2,
+         rows)
+    }
+
+    /// The contiguous *packed* key segment starting at `row0`: (packed
+    /// words, per-row `[scale, zero]` pairs, rows). Packed-format pools
+    /// only; attention walks these exactly like [`KvPool::k_seg`].
+    #[inline]
+    pub(crate) fn k_seg_q(&self, lease: &KvLease, layer: usize,
+                          row0: usize, max_rows: usize)
+                          -> (&[u32], &[f32], usize) {
+        let (wb, sb, rows) = self.seg_q(lease, layer, row0, max_rows);
+        let rw = self.dim / self.format.vals_per_word();
+        (&self.kq[wb..wb + rows * rw], &self.ksz[sb..sb + rows * 2], rows)
+    }
+
+    /// The contiguous *packed* value segment starting at `row0` (see
+    /// [`KvPool::k_seg_q`]).
+    #[inline]
+    pub(crate) fn v_seg_q(&self, lease: &KvLease, layer: usize,
+                          row0: usize, max_rows: usize)
+                          -> (&[u32], &[f32], usize) {
+        let (wb, sb, rows) = self.seg_q(lease, layer, row0, max_rows);
+        let rw = self.dim / self.format.vals_per_word();
+        (&self.vq[wb..wb + rows * rw], &self.vsz[sb..sb + rows * 2], rows)
+    }
+
     /// Scatter `rows` (row-major, n * dim) into rows `[pos, pos + n)` of
     /// one slab, page by page (shared body of `scatter_k`/`scatter_v`).
     /// Requires a prior [`KvPool::prepare_rows`] covering the range.
@@ -711,6 +1048,15 @@ impl KvPool {
                pos: usize, rows: &[f32]) {
         let d = self.dim;
         let n = rows.len() / d;
+        if self.format.is_packed() {
+            // packed formats quantize row by row (scalar writer; see
+            // the module docs' determinism note)
+            for i in 0..n {
+                self.put_row(into_k, lease, layer, pos + i,
+                             &rows[i * d..(i + 1) * d]);
+            }
+            return;
+        }
         let mut done = 0usize;
         while done < n {
             let (b, take) = self.seg(lease, layer, pos + done, n - done);
@@ -1103,6 +1449,171 @@ mod tests {
         assert_eq!(m, 4);
         p.release(h);
         assert_eq!(p.cache_flush(), 2);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    /// dim for packed-format pools (packed formats need dim % 8 == 0).
+    const QD: usize = 8;
+
+    fn qpool(n_pages: usize, page_rows: usize, max_ctx: usize,
+             fmt: KvFormat) -> KvPool {
+        KvPool::with_format(L, QD, max_ctx, n_pages, page_rows, fmt)
+    }
+
+    fn qrow(tag: f32) -> Vec<f32> {
+        (0..QD).map(|i| tag + (i as f32) * 0.37 - 1.1).collect()
+    }
+
+    #[test]
+    fn kv_format_mapping_and_page_bytes() {
+        assert_eq!(KvFormat::from_bits(4), KvFormat::Int4);
+        assert_eq!(KvFormat::from_bits(8), KvFormat::Int8);
+        assert_eq!(KvFormat::from_bits(16), KvFormat::F32);
+        assert_eq!(KvFormat::from_bits(32), KvFormat::F32);
+        let fp = qpool(2, 4, 8, KvFormat::F32);
+        let q8 = qpool(2, 4, 8, KvFormat::Int8);
+        let q4 = qpool(2, 4, 8, KvFormat::Int4);
+        // int4 pages must be small enough for the >= 3.5x capacity gate
+        assert!(fp.page_bytes() as f64 / q4.page_bytes() as f64 >= 3.5,
+                "int4 page {} vs fp {}", q4.page_bytes(), fp.page_bytes());
+        assert!(fp.page_bytes() > q8.page_bytes());
+        assert!(q8.page_bytes() > q4.page_bytes());
+    }
+
+    #[test]
+    fn packed_roundtrip_error_is_bounded_by_one_step() {
+        for fmt in [KvFormat::Int8, KvFormat::Int4] {
+            let qmax = if fmt == KvFormat::Int4 { 15.0 } else { 255.0 };
+            let mut p = qpool(4, 4, 16, fmt);
+            let l = p.lease_rows(8).unwrap();
+            p.prepare_rows(&l, 0, 8).unwrap();
+            for pos in 0..8 {
+                for layer in 0..L {
+                    let r = qrow((pos * 3 + layer) as f32);
+                    p.put_k_row(&l, layer, pos, &r);
+                    p.put_v_row(&l, layer, pos, &r);
+                }
+            }
+            for pos in 0..8 {
+                for layer in 0..L {
+                    let want = qrow((pos * 3 + layer) as f32);
+                    let mn = want.iter().cloned().fold(f32::INFINITY,
+                                                       f32::min);
+                    let mx = want.iter().cloned().fold(f32::NEG_INFINITY,
+                                                       f32::max);
+                    let step = (mx - mn) / qmax;
+                    for (a, b) in
+                        p.dequant_row(true, &l, layer, pos).iter()
+                            .zip(&want)
+                    {
+                        assert!((a - b).abs() <= 0.5 * step + 1e-6,
+                                "{fmt:?} roundtrip err {} > step {step}",
+                                (a - b).abs());
+                    }
+                }
+            }
+            // a constant row reproduces exactly (scale falls back to 1)
+            let flat = vec![0.625f32; QD];
+            p.put_k_row(&l, 0, 0, &flat);
+            assert_eq!(p.dequant_row(true, &l, 0, 0), flat);
+            p.release(l);
+        }
+    }
+
+    #[test]
+    fn packed_fork_is_zero_copy_and_bit_identical() {
+        let mut p = qpool(6, 4, 16, KvFormat::Int4);
+        let parent = p.lease_rows(8).unwrap();
+        p.prepare_rows(&parent, 0, 8).unwrap();
+        for pos in 0..8 {
+            for layer in 0..L {
+                p.put_k_row(&parent, layer, pos, &qrow(pos as f32));
+                p.put_v_row(&parent, layer, pos, &qrow(-(pos as f32)));
+            }
+        }
+        let b0 = p.bytes_copied();
+        let child = p.fork_rows(&parent, 8, 4).unwrap();
+        assert_eq!(p.bytes_copied(), b0, "packed fork must copy nothing");
+        for pos in 0..8 {
+            // shared packed rows dequantize bit-for-bit identically
+            let pk = p.dequant_row(true, &parent, 0, pos);
+            let ck = p.dequant_row(true, &child, 0, pos);
+            assert!(pk.iter().zip(&ck)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        p.release(parent);
+        p.release(child);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn packed_cow_copies_at_most_one_page_and_isolates() {
+        let mut p = qpool(6, 4, 16, KvFormat::Int4);
+        let parent = p.lease_rows(16).unwrap();
+        p.prepare_rows(&parent, 0, 6).unwrap();
+        for pos in 0..6 {
+            for layer in 0..L {
+                p.put_k_row(&parent, layer, pos, &qrow(pos as f32));
+                p.put_v_row(&parent, layer, pos, &qrow(pos as f32));
+            }
+        }
+        let snap: Vec<Vec<f32>> =
+            (0..6).map(|pos| p.dequant_row(true, &parent, 0, pos))
+                .collect();
+        let child = p.fork_rows(&parent, 6, 4).unwrap();
+        let b0 = p.bytes_copied();
+        p.prepare_rows(&child, 6, 2).unwrap();
+        // COW copied exactly the 2 surviving tail-page rows: packed
+        // words + scale/zero pairs, k+v, L layers
+        let rw = QD / 8;
+        let expect = 2 * (L * 2) as u64 * (rw as u64 * 4 + 8);
+        assert_eq!(p.bytes_copied() - b0, expect);
+        assert!(p.bytes_copied() - b0 <= p.page_bytes(),
+                "packed COW exceeded one page");
+        for pos in 6..8 {
+            for layer in 0..L {
+                p.put_k_row(&child, layer, pos, &qrow(9000.0));
+                p.put_v_row(&child, layer, pos, &qrow(9000.0));
+            }
+        }
+        // the shared prefix must be untouched in both tables
+        for (pos, want) in snap.iter().enumerate() {
+            assert_eq!(&p.dequant_row(true, &parent, 0, pos), want);
+            assert_eq!(&p.dequant_row(true, &child, 0, pos), want,
+                       "shared packed prefix diverged");
+        }
+        p.release(parent);
+        p.release(child);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn packed_pages_flow_through_the_prefix_cache() {
+        let mut p = qpool(6, 2, 12, KvFormat::Int8);
+        p.enable_prefix_cache();
+        let a = p.lease_rows(6).unwrap();
+        p.prepare_rows(&a, 0, 6).unwrap();
+        for pos in 0..6 {
+            for layer in 0..L {
+                p.put_k_row(&a, layer, pos, &qrow(pos as f32));
+                p.put_v_row(&a, layer, pos, &qrow(pos as f32));
+            }
+        }
+        let snap: Vec<Vec<f32>> =
+            (0..4).map(|pos| p.dequant_row(true, &a, 0, pos)).collect();
+        let toks: Vec<i32> = (0..6).collect();
+        assert_eq!(p.cache_insert(&toks, &a).unwrap(), 3);
+        p.release(a);
+        let bc = p.bytes_copied();
+        let (b, matched) = p.lease_rows_cached(&toks[..5], 8).unwrap();
+        assert_eq!(matched, 4);
+        assert_eq!(p.bytes_copied(), bc, "cache hit must copy nothing");
+        for (pos, want) in snap.iter().enumerate() {
+            assert_eq!(&p.dequant_row(true, &b, 0, pos), want,
+                       "cached packed rows must be served verbatim");
+        }
+        p.release(b);
+        p.cache_flush();
         assert_eq!(p.pages_in_use(), 0);
     }
 }

@@ -19,6 +19,12 @@
 //! which together with [`OpenLoopCfg::prefix_cache`] exercises the
 //! cross-request radix prefix cache end to end: hit admissions, LRU
 //! eviction under pool pressure, and the faultable `cache.insert` site.
+//!
+//! [`OpenLoopCfg::kv_bits`] selects the KV page storage width: 4 or 8
+//! run the packed low-bit pool (`infer::kv`), and the report carries
+//! the effective [`OpenLoopReport::kv_bits`] and
+//! [`OpenLoopReport::pool_bytes`] so the `kv_lowbit` bench can compare
+//! admitted capacity and goodput at fixed pool bytes across formats.
 
 use std::sync::Arc;
 
@@ -72,6 +78,11 @@ pub struct OpenLoopCfg {
     /// enable the cross-request prefix cache
     /// ([`SchedConfig::prefix_cache`])
     pub prefix_cache: bool,
+    /// KV page storage width (`--kv-bits {4,8,16}`): 4 and 8 run the
+    /// packed low-bit pool, anything else f32. Low-bit runs follow the
+    /// low-bit determinism contract - digests reproduce per seed across
+    /// batch size, threads, and SIMD ISA, but differ from f32 digests.
+    pub kv_bits: u32,
 }
 
 impl Default for OpenLoopCfg {
@@ -92,6 +103,7 @@ impl Default for OpenLoopCfg {
             personas: 0,
             page_rows: 0,
             prefix_cache: false,
+            kv_bits: 16,
         }
     }
 }
@@ -144,6 +156,11 @@ pub struct OpenLoopReport {
     pub cache_evictions: u64,
     /// pages the cache held at drain end (flushed before the leak check)
     pub cached_pages: usize,
+    /// stored bits per KV value (32 = f32; 8/4 = packed low-bit pages)
+    pub kv_bits: u32,
+    /// total pool capacity in bytes (page bytes x page count) - the
+    /// `kv_lowbit` bench compares admitted sequences at fixed pool bytes
+    pub pool_bytes: u64,
     /// virtual seconds elapsed over the whole run
     pub virtual_secs: f64,
     /// FNV-1a over every completion's (id, finish tag, tokens) plus the
@@ -234,14 +251,16 @@ fn draw_arrivals(cfg: &OpenLoopCfg, max_ctx: usize) -> Vec<Arrival> {
 fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
          -> Result<(OpenLoopReport, Vec<Completion>)> {
     let arrivals = draw_arrivals(cfg, core.max_ctx);
+    let fmt = crate::infer::kv::KvFormat::from_bits(cfg.kv_bits);
     let pool = if cfg.page_rows > 0 {
         // explicit geometry, same total capacity: `slots` sequences
         let pr = cfg.page_rows;
         let per_seq = (core.max_ctx.max(1) + pr - 1) / pr;
-        crate::infer::kv::KvPool::for_core_paged(
-            &core, cfg.slots.max(1) * per_seq, pr)
+        crate::infer::kv::KvPool::for_core_paged_fmt(
+            &core, cfg.slots.max(1) * per_seq, pr, fmt)
     } else {
-        crate::infer::kv::KvPool::for_core(&core, cfg.slots.max(1))
+        crate::infer::kv::KvPool::for_core_fmt(&core, cfg.slots.max(1),
+                                               fmt)
     };
     let mut sched = Scheduler::with_clock(
         core, pool,
@@ -250,6 +269,7 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
             prefill_chunk: cfg.prefill_chunk,
             max_queue: cfg.max_queue,
             prefix_cache: cfg.prefix_cache,
+            kv_bits: cfg.kv_bits,
             ..SchedConfig::default()
         },
         Clock::manual());
@@ -298,6 +318,9 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
             "lost requests: {} completions + {} rejects != {} arrivals",
             comps.len(), rejected, arrivals.len());
 
+    let kv_bits = sched.pool().format().bits();
+    let pool_bytes =
+        sched.pool().page_bytes() * sched.pool().n_pages() as u64;
     let mut rep = OpenLoopReport {
         arrivals: arrivals.len(),
         completions: comps.len(),
@@ -319,6 +342,8 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
         tokens_prefill_avoided: stats.tokens_prefill_avoided,
         cache_evictions: stats.cache_evictions,
         cached_pages,
+        kv_bits,
+        pool_bytes,
         virtual_secs,
         digest: 0xcbf29ce484222325,
     };
@@ -485,6 +510,59 @@ mod tests {
         assert_eq!(off.cached_pages, 0);
         assert_eq!(off.leaked_pages, 0);
         assert_eq!(off.completions + off.rejected, off.arrivals);
+    }
+
+    /// Low-bit KV mode: int4 runs reproduce bit-identically, the packed
+    /// pool reports the smaller byte footprint, a randomized failpoint
+    /// sweep leaks zero pages, and the prefix-cache + faults combination
+    /// on packed pages stays deterministic and leak-free.
+    #[test]
+    fn open_loop_low_bit_kv_deterministic_and_leak_free_under_faults() {
+        let c = core(54);
+        let q = OpenLoopCfg { kv_bits: 4, ..cfg() };
+        let a = run_open_loop(c.clone(), &q).unwrap();
+        let b = run_open_loop(c.clone(), &q).unwrap();
+        assert_eq!(a, b, "int4 run must reproduce bit-identically");
+        assert_eq!(a.kv_bits, 4);
+        assert_eq!(a.leaked_pages, 0);
+        assert_eq!(a.completions + a.rejected, a.arrivals);
+        assert!(a.goodput > 0);
+        let fp = run_open_loop(c.clone(), &cfg()).unwrap();
+        assert_eq!(fp.kv_bits, 32);
+        assert!(a.pool_bytes * 3 < fp.pool_bytes,
+                "packed pool not smaller at equal page count: {} vs {}",
+                a.pool_bytes, fp.pool_bytes);
+
+        // randomized failpoint sweep in low-bit mode: zero leaked pages
+        // (drive() errors on any leak, so success == clean accounting)
+        for seed in [31u64, 32, 33] {
+            let f = OpenLoopCfg {
+                kv_bits: 4,
+                fault_rate: 0.05,
+                seed,
+                ..cfg()
+            };
+            let r = run_open_loop(c.clone(), &f).unwrap();
+            assert_eq!(r.leaked_pages, 0, "seed {seed} leaked pages");
+            assert_eq!(r.completions + r.rejected, r.arrivals,
+                       "seed {seed} lost requests");
+        }
+
+        // shared prefixes + cache + faults over packed pages
+        let sp = OpenLoopCfg {
+            kv_bits: 4,
+            personas: 3,
+            prompt_len: 10,
+            page_rows: 4,
+            prefix_cache: true,
+            fault_rate: 0.05,
+            ..cfg()
+        };
+        let x = run_open_loop(c.clone(), &sp).unwrap();
+        let y = run_open_loop(c, &sp).unwrap();
+        assert_eq!(x, y, "faulted cached int4 run must reproduce");
+        assert!(x.cache_hits > 0, "packed pages never hit the cache");
+        assert_eq!(x.leaked_pages, 0);
     }
 
     /// Faulted runs are exactly as deterministic as clean ones, and the

@@ -93,6 +93,25 @@ impl PrefixCache {
         out
     }
 
+    /// Read-only twin of [`PrefixCache::lookup`]: how many full
+    /// `page_rows` chunks of `key` have a cached page, without stamping
+    /// the matched path or advancing the LRU clock. The scheduler's
+    /// cache-aware admission pass probes every candidate in its
+    /// lookahead window with this before deciding attempt order, so
+    /// probing can never perturb eviction recency.
+    pub(crate) fn probe(&self, key: &[i32]) -> usize {
+        let mut matched = 0usize;
+        let mut cur = &self.roots;
+        for chunk in key.chunks_exact(self.page_rows) {
+            let Some(node) = cur.iter().find(|n| n.key == chunk) else {
+                break;
+            };
+            matched += 1;
+            cur = &node.children;
+        }
+        matched
+    }
+
     /// Insert `pages[i]` for the i-th full `page_rows` chunk of `key`,
     /// bumping `refcount` once for each *newly created* node. Chunks already
     /// present keep their existing page (first insert wins; both candidates

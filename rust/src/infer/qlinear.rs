@@ -183,6 +183,7 @@ impl PackedLinear {
             let r0 = ci * rows;
             match self.scheme.bits {
                 2 => self.matvec_rows_b2(x, sxr, r0, yc),
+                3 => self.matvec_rows_b3(x, sxr, r0, yc),
                 4 => self.matvec_rows_b4(x, sxr, r0, yc),
                 _ => self.matvec_rows_generic(x, sxr, r0, yc),
             }
@@ -238,6 +239,7 @@ impl PackedLinear {
             let sc = &sxr[t0 * gpr..(t0 + nt) * gpr];
             match self.scheme.bits {
                 2 => self.matmul_tokens_b2(xc, nt, sc, yc),
+                3 => self.matmul_tokens_b3(xc, nt, sc, yc),
                 4 => self.matmul_tokens_b4(xc, nt, sc, yc),
                 _ => self.matmul_tokens_generic(xc, nt, sc, yc),
             }
@@ -328,6 +330,7 @@ impl PackedLinear {
     fn unpack_group(&self, gw: &[u32], qb: &mut [f32]) {
         match self.scheme.bits {
             2 => simd::unpack_b2(gw, qb),
+            3 => simd::unpack_b3(gw, qb),
             4 => simd::unpack_b4(gw, qb),
             _ => {
                 let bits = self.scheme.bits as usize;
@@ -403,7 +406,36 @@ impl PackedLinear {
         }
     }
 
-    /// Any bit width (3-bit path): u64 sliding window over the bitstream.
+    fn matvec_rows_b3(&self, x: &[f32], sx: &[f32], r0: usize,
+                      y: &mut [f32]) {
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * 3 / 32; // word-aligned: pack() enforces 32 | 3g
+        let wpr = self.words_per_row();
+        // Unpack+FMA lives in `util::simd::group_dot_packed_b3`: a u64
+        // window slides over the bitstream and feeds 8 3-bit lanes per
+        // 24-bit chunk, with the 8-partial reduce8 tree shared by
+        // `matmul_tokens_b3` / `group_dot_b3`, bit-identical on every
+        // ISA.
+        for (j, yr) in y.iter_mut().enumerate() {
+            let r = r0 + j;
+            let row = &self.words[r * wpr..(r + 1) * wpr];
+            let mut acc = 0f32;
+            for gi in 0..gpr {
+                let dot = simd::group_dot_packed_b3(
+                    &row[gi * wpg..(gi + 1) * wpg],
+                    &x[gi * g..(gi + 1) * g],
+                );
+                let s = self.scales[r * gpr + gi];
+                let z = self.zeros[r * gpr + gi];
+                acc += s * (dot - z * sx[gi]);
+            }
+            *yr = acc;
+        }
+    }
+
+    /// Any bit width (non-2/3/4 fallback): u64 sliding window over the
+    /// bitstream, sequential accumulation.
     fn matvec_rows_generic(&self, x: &[f32], sx: &[f32], r0: usize,
                            y: &mut [f32]) {
         let bits = self.scheme.bits as usize;
@@ -499,8 +531,38 @@ impl PackedLinear {
         }
     }
 
-    /// Batched any-bit kernel (3-bit path): sliding-window unpack once per
-    /// group, sequential dot per token (matches `matvec_rows_generic`).
+    /// Batched 3-bit kernel: unpack each group once, then the 8-lane
+    /// group dot per token (same reduce8 tree as `matvec_rows_b3`).
+    fn matmul_tokens_b3(&self, xs: &[f32], n_tokens: usize, sxs: &[f32],
+                        ys: &mut [f32]) {
+        let g = self.scheme.group;
+        let gpr = self.groups_per_row();
+        let wpg = g * 3 / 32;
+        let wpr = self.words_per_row();
+        let (d, od) = (self.in_dim, self.out_dim);
+        let mut qbuf = vec![0f32; g];
+        for v in ys.iter_mut() {
+            *v = 0.0;
+        }
+        for r in 0..od {
+            let row = &self.words[r * wpr..(r + 1) * wpr];
+            for gi in 0..gpr {
+                simd::unpack_b3(&row[gi * wpg..(gi + 1) * wpg],
+                                &mut qbuf);
+                let s = self.scales[r * gpr + gi];
+                let z = self.zeros[r * gpr + gi];
+                for t in 0..n_tokens {
+                    let xg = &xs[t * d + gi * g..t * d + (gi + 1) * g];
+                    let dot = simd::group_dot_b3(&qbuf, xg);
+                    ys[t * od + r] += s * (dot - z * sxs[t * gpr + gi]);
+                }
+            }
+        }
+    }
+
+    /// Batched any-bit kernel (non-2/3/4 fallback): sliding-window unpack
+    /// once per group, sequential dot per token (matches
+    /// `matvec_rows_generic`).
     fn matmul_tokens_generic(&self, xs: &[f32], n_tokens: usize,
                              sxs: &[f32], ys: &mut [f32]) {
         let bits = self.scheme.bits as usize;
@@ -551,13 +613,15 @@ impl PackedLinear {
 const MAX_STACK_GROUP: usize = 256;
 
 /// One group's dot product with the exact FMA lane order of the matvec
-/// kernels: 2-bit uses 4 accumulators over 16-lane word chunks, 4-bit 2
-/// accumulators over 8-lane chunks, everything else a sequential loop -
-/// so any kernel built on it is bit-identical to `matvec`.
+/// kernels: 2-bit uses 4 accumulators over 16-lane word chunks, 3-bit
+/// the 8-partial reduce8 tree, 4-bit 2 accumulators over 8-lane chunks,
+/// everything else a sequential loop - so any kernel built on it is
+/// bit-identical to `matvec`.
 #[inline]
 fn group_dot(bits: u32, qb: &[f32], xg: &[f32]) -> f32 {
     match bits {
         2 => simd::group_dot_b2(qb, xg),
+        3 => simd::group_dot_b3(qb, xg),
         4 => simd::group_dot_b4(qb, xg),
         _ => {
             let mut dot = 0f32;

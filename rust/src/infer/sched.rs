@@ -25,8 +25,14 @@
 //!    prompt prefix is leased by refcount (zero copy, zero prefill
 //!    compute), chunked prefill resumes at the match point, and the
 //!    reservation covers only the rows past it - so hits admit under
-//!    pool pressure that queues cold requests. Successful retirements
-//!    insert their page-aligned KV prefix back into the cache;
+//!    pool pressure that queues cold requests. When the queue is
+//!    contended, a cache-aware preference pass additionally attempts
+//!    the window's cached candidates (classified by the read-only
+//!    [`KvPool::cache_probe_rows`]) before cold ones, FIFO among
+//!    themselves; jumping the front this way charges the same
+//!    starvation counter, so a cold front still ages out of being
+//!    skipped. Successful retirements insert their page-aligned KV
+//!    prefix back into the cache;
 //! 3. **prefills** admitted prompts in bounded chunks
 //!    ([`SchedConfig::prefill_chunk`]); a prefill error fails *only* the
 //!    offending session (lease released, [`FinishReason::Failed`]
@@ -66,7 +72,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::infer::core::{ModelCore, Scratch};
-use crate::infer::kv::{KvLease, KvPool};
+use crate::infer::kv::{KvFormat, KvLease, KvPool};
 use crate::infer::session::{Completion, FinishReason, Request, Session};
 use crate::util::clock::Clock;
 
@@ -95,6 +101,15 @@ pub struct SchedConfig {
     /// default; bit-determinism is unaffected either way (cached pages
     /// are bit-identical to freshly prefilled ones by construction).
     pub prefix_cache: bool,
+    /// KV page storage width for pools built by [`Scheduler::new`]:
+    /// 4 and 8 select the packed low-bit formats
+    /// ([`KvFormat::from_bits`]), anything else the default f32 slabs.
+    /// Packed pools follow the low-bit determinism contract (see
+    /// `infer::kv`): bit-identical across batch size, chunking,
+    /// threads, page size, SIMD ISA, and cache state - but not to the
+    /// f32 path. Ignored by [`Scheduler::with_pool`], which takes an
+    /// already-shaped pool.
+    pub kv_bits: u32,
 }
 
 impl Default for SchedConfig {
@@ -106,6 +121,7 @@ impl Default for SchedConfig {
             admit_lookahead: 4,
             starve_patience: 64,
             prefix_cache: false,
+            kv_bits: 16,
         }
     }
 }
@@ -209,7 +225,8 @@ impl Scheduler {
     /// not whole-sequence slots.
     pub fn new(core: Arc<ModelCore>, n_slots: usize, cfg: SchedConfig)
                -> Scheduler {
-        let pool = KvPool::for_core(&core, n_slots.max(1));
+        let pool = KvPool::for_core_fmt(&core, n_slots.max(1),
+                                        KvFormat::from_bits(cfg.kv_bits));
         Scheduler::with_pool(core, pool, cfg)
     }
 
@@ -455,7 +472,63 @@ impl Scheduler {
         //    pool can reserve the request's worst-case KV rows. FIFO
         //    with bounded lookahead past a non-fitting front, and a
         //    starvation guard so the front ages out of being skipped.
-        let mut skipped_front = false;
+        //
+        //    2a. cache-aware preference pass: with the prefix cache on
+        //    and more than one request competing, candidates in the
+        //    same lookahead window whose prompts probe as cached
+        //    ([`KvPool::cache_probe_rows`], read-only - no LRU stamp,
+        //    no refcounts) are attempted first, FIFO among themselves.
+        //    Jumping the front this way charges the same starvation
+        //    counter as the plain lookahead, so `starve_patience`
+        //    bounds how long a cold front can be preferred against;
+        //    with the cache off or `admit_lookahead` 0, admission
+        //    order is exactly the pre-existing FIFO.
+        let mut skipped_front: Option<u64> = None;
+        if queue.len() > 1
+            && cfg.admit_lookahead > 0
+            && pool.cache_enabled()
+            && queue[0].skipped < cfg.starve_patience
+        {
+            let mut qi = 0usize;
+            while live.len() < cfg.max_batch
+                && qi < queue.len()
+                && qi <= cfg.admit_lookahead
+            {
+                let key_len = queue[qi].req.prompt.len() - 1;
+                if pool.cache_probe_rows(&queue[qi].req.prompt[..key_len])
+                    == 0
+                {
+                    qi += 1;
+                    continue;
+                }
+                let rows = Self::rows_for(&queue[qi].req, core.max_ctx);
+                let res = pool.lease_rows_cached(
+                    &queue[qi].req.prompt[..key_len], rows);
+                match res {
+                    Some((lease, matched)) => {
+                        if matched > 0 {
+                            stats.cache_hits += 1;
+                            stats.tokens_prefill_avoided += matched as u64;
+                        } else {
+                            // the probed prefix was evicted by an
+                            // earlier admission's reservation pressure
+                            stats.cache_misses += 1;
+                        }
+                        if qi > 0 {
+                            skipped_front =
+                                skipped_front.or(Some(queue[0].id));
+                        }
+                        let q = queue.remove(qi).expect("indexed entry");
+                        live.push(Session::start(q.id, q.req, lease,
+                                                 matched, q.submitted,
+                                                 q.deadline));
+                        // don't advance qi: the next entry shifted here
+                    }
+                    None => qi += 1,
+                }
+            }
+        }
+        //    2b. the FIFO-with-lookahead pass over whatever remains.
         let mut qi = 0usize;
         while live.len() < cfg.max_batch && qi < queue.len() {
             let rows = Self::rows_for(&queue[qi].req, core.max_ctx);
@@ -485,7 +558,7 @@ impl Scheduler {
                         {
                             break; // strict FIFO: nothing may pass
                         }
-                        skipped_front = true;
+                        skipped_front = skipped_front.or(Some(queue[0].id));
                     }
                     qi += 1;
                     if qi > cfg.admit_lookahead {
@@ -494,9 +567,13 @@ impl Scheduler {
                 }
             }
         }
-        if skipped_front {
+        // the front only ages if it is still the same entry that was
+        // passed over (a front jumped in 2a may itself admit in 2b)
+        if let Some(fid) = skipped_front {
             if let Some(front) = queue.front_mut() {
-                front.skipped = front.skipped.saturating_add(1);
+                if front.id == fid {
+                    front.skipped = front.skipped.saturating_add(1);
+                }
             }
         }
 
@@ -1578,5 +1655,175 @@ mod tests {
         }
         assert!(insert_fired > 0,
                 "sweep never fired cache.insert - site unreachable?");
+    }
+
+    /// Satellite: cache-aware admission ordering. Under contention a
+    /// cached candidate is attempted before a cold front even when the
+    /// front *could* have admitted (pure preference, not capacity),
+    /// strict FIFO returns with the lookahead off, the reordering is
+    /// run-to-run deterministic, and every output stays solo-exact
+    /// (admission order is invisible in tokens).
+    #[test]
+    fn cache_aware_admission_prefers_hits_and_is_deterministic() {
+        let c = core(54);
+        let sys = prompt(8, 3);
+        let user = |t: i32| {
+            let mut p = sys.clone();
+            p.push(t);
+            p
+        };
+        let cold: Vec<i32> = prompt(9, 7);
+        let run = |lookahead: usize| {
+            let mut s = Scheduler::with_pool(
+                c.clone(), KvPool::for_core_paged(&c, 16, 4),
+                SchedConfig {
+                    max_batch: 1,
+                    prefill_chunk: 8,
+                    admit_lookahead: lookahead,
+                    prefix_cache: true,
+                    ..SchedConfig::default()
+                });
+            // warm: one retirement caches the shared-prefix pages
+            s.submit(greedy(user(40), 4, 901)).unwrap();
+            s.run_all().unwrap();
+            // contended wave: a cold front, a cached candidate behind
+            let d = s.submit(greedy(cold.clone(), 4, 902)).unwrap();
+            let h = s.submit(greedy(user(41), 4, 903)).unwrap();
+            s.tick().unwrap();
+            let shape = (s.n_live(), s.n_queued());
+            let hits = s.stats().cache_hits;
+            let comps = s.run_all().unwrap();
+            s.flush_prefix_cache();
+            assert_eq!(s.pool().pages_in_use(), 0, "leaked pages");
+            (d, h, shape, hits, comps)
+        };
+
+        let (d, h, shape1, hits1, comps1) = run(4);
+        assert_eq!(shape1, (1, 1), "first tick should admit exactly one");
+        assert_eq!(hits1, 1,
+                   "the cached candidate should jump the cold front");
+        let (_, _, shape0, hits0, _) = run(0);
+        assert_eq!(shape0, (1, 1));
+        assert_eq!(hits0, 0,
+                   "lookahead 0 must not reorder for the cache");
+
+        let (_, _, shape2, hits2, comps2) = run(4);
+        assert_eq!((shape1, hits1), (shape2, hits2),
+                   "cache-aware admission shape not reproducible");
+        assert_eq!(comps1.len(), comps2.len());
+        for (x, y) in comps1.iter().zip(&comps2) {
+            assert_eq!((x.id, &x.tokens), (y.id, &y.tokens),
+                       "cache-aware admission is not deterministic");
+        }
+        for (id, r) in [(d, (cold.clone(), 4usize, 902u64)),
+                        (h, (user(41), 4, 903))] {
+            let comp = comps1.iter().find(|x| x.id == id).unwrap();
+            assert_eq!(comp.tokens, solo_greedy(&c, &r), "req {id}");
+        }
+    }
+
+    /// Satellite: cache preference vs the starvation guard. With
+    /// patience 2, exactly two cached candidates jump the cold front
+    /// before it ages out and admits; with patience 0 the preference
+    /// pass never runs and the front goes strictly first.
+    #[test]
+    fn cache_preference_respects_starvation_guard() {
+        let c = core(56);
+        let sys = prompt(8, 3);
+        let user = |t: i32| {
+            let mut p = sys.clone();
+            p.push(t);
+            p
+        };
+        let cold: Vec<i32> = prompt(9, 7);
+        let run = |patience: u32| {
+            let mut s = Scheduler::with_clock(
+                c.clone(), KvPool::for_core_paged(&c, 24, 4),
+                SchedConfig {
+                    max_batch: 1,
+                    prefill_chunk: 8,
+                    admit_lookahead: 4,
+                    starve_patience: patience,
+                    prefix_cache: true,
+                    ..SchedConfig::default()
+                }, Clock::manual());
+            s.submit(greedy(user(30), 3, 910)).unwrap();
+            s.run_all().unwrap(); // warm the shared prefix
+            let cold_id = s.submit(greedy(cold.clone(), 3, 911)).unwrap();
+            let hits: Vec<u64> = (0..6)
+                .map(|i| {
+                    s.submit(greedy(user(31 + i), 3, 920 + i as u64))
+                        .unwrap()
+                })
+                .collect();
+            let mut t = 0usize;
+            while !s.is_idle() {
+                s.tick().unwrap();
+                s.clock().advance(1.0);
+                t += 1;
+                assert!(t < 1000, "patience {patience}: failed to drain");
+            }
+            (cold_id, hits, s.take_completed())
+        };
+
+        let (cold_id, hits, comps) = run(2);
+        let fin = |comps: &[Completion], id: u64| {
+            comps.iter().find(|x| x.id == id).unwrap().finish_secs
+        };
+        let cf = fin(&comps, cold_id);
+        let jumped =
+            hits.iter().filter(|&&h| fin(&comps, h) < cf).count();
+        assert_eq!(jumped, 2,
+                   "patience 2 must let exactly two cached candidates \
+                    jump before the front ages out (got {jumped})");
+        for comp in &comps {
+            assert_eq!(comp.finish, FinishReason::Done, "req {}",
+                       comp.id);
+        }
+
+        let (cold_id, hits, comps) = run(0);
+        let cf = fin(&comps, cold_id);
+        assert!(hits.iter().all(|&h| fin(&comps, h) > cf),
+                "patience 0 let a cached candidate jump the cold front");
+    }
+
+    /// `SchedConfig::kv_bits` threads the packed formats into the
+    /// scheduler's own pool: int4 outputs are bit-identical across
+    /// batch size (the low-bit determinism contract), and the default
+    /// config stays on the f32 path.
+    #[test]
+    fn low_bit_kv_scheduler_is_deterministic_across_batch_size() {
+        let c = core(57);
+        assert_eq!(Scheduler::new(c.clone(), 1, SchedConfig::default())
+                       .pool()
+                       .format(),
+                   KvFormat::F32);
+        let reqs: Vec<(Vec<i32>, usize, u64)> = (0..5)
+            .map(|i| (prompt(3 + 4 * i, 5 + i), 4 + i, 130 + i as u64))
+            .collect();
+        let run = |bsz: usize| {
+            let mut s = Scheduler::new(c.clone(), 8, SchedConfig {
+                max_batch: bsz,
+                prefill_chunk: 4,
+                kv_bits: 4,
+                ..SchedConfig::default()
+            });
+            assert_eq!(s.pool().format(), KvFormat::Int4);
+            for r in &reqs {
+                s.submit(greedy(r.0.clone(), r.1, r.2)).unwrap();
+            }
+            s.run_all().unwrap()
+        };
+        let want = run(1);
+        assert_eq!(want.len(), reqs.len());
+        for &bsz in &[2usize, 5] {
+            let got = run(bsz);
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.tokens, y.tokens,
+                           "int4 KV diverged across batch size {bsz} \
+                            (req {})", x.id);
+                assert_eq!(x.finish, FinishReason::Done);
+            }
+        }
     }
 }

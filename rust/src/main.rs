@@ -269,7 +269,7 @@ fn run(args: &[String]) -> Result<()> {
             // short user suffixes) and turns on the cross-request prefix
             // cache (--no-cache runs the same mix cold).
             use efficientqat::infer::core::ModelCore;
-            use efficientqat::infer::kv::KvPool;
+            use efficientqat::infer::kv::{KvFormat, KvPool};
             use efficientqat::infer::openloop::{run_open_loop,
                                                 OpenLoopCfg};
             use efficientqat::infer::sched::{SchedConfig, Scheduler};
@@ -297,6 +297,10 @@ fn run(args: &[String]) -> Result<()> {
             let page_rows =
                 cli.flag_usize("page-rows", if shared { 4 } else { 0 })?;
             let use_cache = shared && !cli.flag_bool("no-cache");
+            // KV page storage: 16 = f32 (default), 8/4 = packed low-bit
+            let kv_bits = cli.flag_usize("kv-bits", 16)? as u32;
+            anyhow::ensure!(matches!(kv_bits, 4 | 8 | 16),
+                            "--kv-bits wants 4, 8, or 16 (got {kv_bits})");
 
             let core = match cli.flag("model") {
                 Some(path) => {
@@ -329,12 +333,13 @@ fn run(args: &[String]) -> Result<()> {
                     personas,
                     page_rows,
                     prefix_cache: use_cache,
+                    kv_bits,
                 };
                 let r = run_open_loop(core, &cfg)?;
                 println!(
                     "serve-sim --open-loop: {} arrivals at {:.0} req/s \
-                     (virtual), seed {seed}",
-                    r.arrivals, cfg.rate
+                     (virtual), seed {seed}, kv {}-bit ({} pool B)",
+                    r.arrivals, cfg.rate, r.kv_bits, r.pool_bytes
                 );
                 println!(
                     "  goodput {} (done {}, ctx-full {})  shed {}  \
@@ -365,12 +370,13 @@ fn run(args: &[String]) -> Result<()> {
                                 "open-loop run produced no goodput");
                 return Ok(());
             }
+            let fmt = KvFormat::from_bits(kv_bits);
             let pool = if page_rows > 0 {
                 let per_seq = (max_ctx + page_rows - 1) / page_rows;
-                KvPool::for_core_paged(&core, slots.max(1) * per_seq,
-                                       page_rows)
+                KvPool::for_core_paged_fmt(&core, slots.max(1) * per_seq,
+                                           page_rows, fmt)
             } else {
-                KvPool::for_core(&core, slots.max(1))
+                KvPool::for_core_fmt(&core, slots.max(1), fmt)
             };
             let mut sched = Scheduler::with_clock(
                 core.clone(), pool,
@@ -378,6 +384,7 @@ fn run(args: &[String]) -> Result<()> {
                     max_batch: slots,
                     prefill_chunk: chunk,
                     prefix_cache: use_cache,
+                    kv_bits,
                     ..SchedConfig::default()
                 },
                 Clock::wall());
@@ -454,10 +461,11 @@ fn run(args: &[String]) -> Result<()> {
             );
             let pool = sched.pool();
             println!(
-                "  page pool        {} pages x {} rows; peak {} in use \
-                 ({:.0}%), {} B COW-copied",
+                "  page pool        {} pages x {} rows ({}-bit KV); peak \
+                 {} in use ({:.0}%), {} B COW-copied",
                 pool.n_pages(),
                 pool.page_rows(),
+                pool.format().bits(),
                 pool.peak_pages_in_use(),
                 100.0 * pool.peak_pages_in_use() as f64
                     / pool.n_pages().max(1) as f64,

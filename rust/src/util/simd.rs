@@ -28,6 +28,17 @@
 //! * the 4-bit packed dot keeps even/odd accumulator lanes over the 8
 //!   values of each word (`((p0+p2)+p4)+p6` resp. odd), reduced
 //!   `even+odd`;
+//! * the 3-bit packed dot slides a u64 bit window over the stream and
+//!   consumes one 24-bit chunk (8 values) per step with 8 partial lanes
+//!   (`p[j] += x[8c+j] * q[8c+j]`), reduced by the shared [`reduce8`];
+//!   the unpacked variant ([`group_dot_b3`]) is the same 8-lane DAG
+//!   over the unpacked floats;
+//! * the low-bit KV-page kernels fuse dequantization into the
+//!   attention inner loops: [`kv_dot_q4`]/[`kv_dot_q8`] keep 8 partial
+//!   lanes over the packed words (one word resp. one word pair per
+//!   step), reduced by [`reduce8`]; [`kv_axpy_q4`]/[`kv_axpy_q8`] are
+//!   lane-parallel `y[i] += a*q[i] + b` (caller folds the per-group
+//!   scale/zero into `a`/`b`);
 //! * dense dots ([`dot8`]) keep 8 partial lanes (`p[j] += a[8c+j] *
 //!   b[8c+j]` over chunks c), reduced `((p0+p1)+(p2+p3)) +
 //!   ((p4+p5)+(p6+p7))` by the shared [`reduce8`], then a sequential
@@ -362,6 +373,96 @@ fn unpack_b4_scalar(gw: &[u32], qb: &mut [f32]) {
     }
 }
 
+fn group_dot_packed_b3_scalar(gw: &[u32], x: &[f32]) -> f32 {
+    let mut p = [0f32; 8];
+    let mut buf: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut wi = 0;
+    let mut base = 0;
+    while base < x.len() {
+        while nbits < 24 {
+            buf |= (gw[wi] as u64) << nbits;
+            nbits += 32;
+            wi += 1;
+        }
+        let w24 = (buf & 0xFF_FFFF) as u32;
+        for j in 0..8 {
+            p[j] += x[base + j] * ((w24 >> (3 * j)) & 7) as f32;
+        }
+        buf >>= 24;
+        nbits -= 24;
+        base += 8;
+    }
+    reduce8(&p)
+}
+
+fn unpack_b3_scalar(gw: &[u32], qb: &mut [f32]) {
+    let mut buf: u64 = 0;
+    let mut nbits: u32 = 0;
+    let mut wi = 0;
+    let mut base = 0;
+    while base < qb.len() {
+        while nbits < 24 {
+            buf |= (gw[wi] as u64) << nbits;
+            nbits += 32;
+            wi += 1;
+        }
+        let w24 = (buf & 0xFF_FFFF) as u32;
+        for j in 0..8 {
+            qb[base + j] = ((w24 >> (3 * j)) & 7) as f32;
+        }
+        buf >>= 24;
+        nbits -= 24;
+        base += 8;
+    }
+}
+
+fn kv_dot_q4_scalar(qh: &[f32], w: &[u32]) -> f32 {
+    let mut p = [0f32; 8];
+    for (wi, &word) in w.iter().enumerate() {
+        let base = wi * 8;
+        for j in 0..8 {
+            p[j] += qh[base + j] * ((word >> (4 * j)) & 15) as f32;
+        }
+    }
+    reduce8(&p)
+}
+
+fn kv_dot_q8_scalar(qh: &[f32], w: &[u32]) -> f32 {
+    let mut p = [0f32; 8];
+    let mut wi = 0;
+    let mut base = 0;
+    while wi < w.len() {
+        let (w0, w1) = (w[wi], w[wi + 1]);
+        for j in 0..4 {
+            p[j] += qh[base + j] * ((w0 >> (8 * j)) & 255) as f32;
+            p[j + 4] +=
+                qh[base + 4 + j] * ((w1 >> (8 * j)) & 255) as f32;
+        }
+        wi += 2;
+        base += 8;
+    }
+    reduce8(&p)
+}
+
+fn kv_axpy_q4_scalar(y: &mut [f32], a: f32, b: f32, w: &[u32]) {
+    for (wi, &word) in w.iter().enumerate() {
+        let yw = &mut y[wi * 8..(wi + 1) * 8];
+        for (j, yv) in yw.iter_mut().enumerate() {
+            *yv += a * ((word >> (4 * j)) & 15) as f32 + b;
+        }
+    }
+}
+
+fn kv_axpy_q8_scalar(y: &mut [f32], a: f32, b: f32, w: &[u32]) {
+    for (wi, &word) in w.iter().enumerate() {
+        let yw = &mut y[wi * 4..(wi + 1) * 4];
+        for (j, yv) in yw.iter_mut().enumerate() {
+            *yv += a * ((word >> (8 * j)) & 255) as f32 + b;
+        }
+    }
+}
+
 fn axpy_scalar(y: &mut [f32], a: f32, x: &[f32]) {
     for (yv, &xv) in y.iter_mut().zip(x) {
         *yv += a * xv;
@@ -633,6 +734,140 @@ mod avx2 {
             storeu(qb, wi * 8,
                    _mm256_cvtepi32_ps(_mm256_and_si256(
                        _mm256_srlv_epi32(vw, sh), m15)));
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn group_dot_packed_b3(gw: &[u32], x: &[f32]) -> f32 {
+        let sh = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+        let m7 = _mm256_set1_epi32(7);
+        let mut acc = _mm256_setzero_ps();
+        let mut buf: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut wi = 0;
+        let mut base = 0;
+        while base < x.len() {
+            while nbits < 24 {
+                buf |= (gw[wi] as u64) << nbits;
+                nbits += 32;
+                wi += 1;
+            }
+            let vw = _mm256_set1_epi32((buf & 0xFF_FFFF) as i32);
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m7));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(loadu(x, base), q));
+            buf >>= 24;
+            nbits -= 24;
+            base += 8;
+        }
+        let mut p = [0f32; 8];
+        storeu(&mut p, 0, acc);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_b3(gw: &[u32], qb: &mut [f32]) {
+        let sh = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+        let m7 = _mm256_set1_epi32(7);
+        let mut buf: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut wi = 0;
+        let mut base = 0;
+        while base < qb.len() {
+            while nbits < 24 {
+                buf |= (gw[wi] as u64) << nbits;
+                nbits += 32;
+                wi += 1;
+            }
+            let vw = _mm256_set1_epi32((buf & 0xFF_FFFF) as i32);
+            storeu(qb, base,
+                   _mm256_cvtepi32_ps(_mm256_and_si256(
+                       _mm256_srlv_epi32(vw, sh), m7)));
+            buf >>= 24;
+            nbits -= 24;
+            base += 8;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_dot_q4(qh: &[f32], w: &[u32]) -> f32 {
+        let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let m15 = _mm256_set1_epi32(15);
+        let mut acc = _mm256_setzero_ps();
+        for (wi, &word) in w.iter().enumerate() {
+            let vw = _mm256_set1_epi32(word as i32);
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m15));
+            acc = _mm256_add_ps(
+                acc, _mm256_mul_ps(loadu(qh, wi * 8), q));
+        }
+        let mut p = [0f32; 8];
+        storeu(&mut p, 0, acc);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_dot_q8(qh: &[f32], w: &[u32]) -> f32 {
+        let sh = _mm256_setr_epi32(0, 8, 16, 24, 0, 8, 16, 24);
+        let m255 = _mm256_set1_epi32(255);
+        let mut acc = _mm256_setzero_ps();
+        let mut wi = 0;
+        let mut base = 0;
+        while wi < w.len() {
+            let vw =
+                _mm256_set_m128i(_mm_set1_epi32(w[wi + 1] as i32),
+                                 _mm_set1_epi32(w[wi] as i32));
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m255));
+            acc = _mm256_add_ps(
+                acc, _mm256_mul_ps(loadu(qh, base), q));
+            wi += 2;
+            base += 8;
+        }
+        let mut p = [0f32; 8];
+        storeu(&mut p, 0, acc);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_axpy_q4(y: &mut [f32], a: f32, b: f32,
+                             w: &[u32]) {
+        let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let m15 = _mm256_set1_epi32(15);
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        for (wi, &word) in w.iter().enumerate() {
+            let vw = _mm256_set1_epi32(word as i32);
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m15));
+            let r = _mm256_add_ps(
+                loadu(y, wi * 8),
+                _mm256_add_ps(_mm256_mul_ps(va, q), vb));
+            storeu(y, wi * 8, r);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn kv_axpy_q8(y: &mut [f32], a: f32, b: f32,
+                             w: &[u32]) {
+        let sh = _mm256_setr_epi32(0, 8, 16, 24, 0, 8, 16, 24);
+        let m255 = _mm256_set1_epi32(255);
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        let mut wi = 0;
+        let mut base = 0;
+        while wi < w.len() {
+            let vw =
+                _mm256_set_m128i(_mm_set1_epi32(w[wi + 1] as i32),
+                                 _mm_set1_epi32(w[wi] as i32));
+            let q = _mm256_cvtepi32_ps(
+                _mm256_and_si256(_mm256_srlv_epi32(vw, sh), m255));
+            let r = _mm256_add_ps(
+                loadu(y, base),
+                _mm256_add_ps(_mm256_mul_ps(va, q), vb));
+            storeu(y, base, r);
+            wi += 2;
+            base += 8;
         }
     }
 
@@ -1015,6 +1250,144 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
+    pub unsafe fn group_dot_packed_b3(gw: &[u32], x: &[f32]) -> f32 {
+        let sh_lo = vld1q_s32([0i32, -3, -6, -9].as_ptr());
+        let sh_hi = vld1q_s32([-12i32, -15, -18, -21].as_ptr());
+        // virtual lanes 0-3 / 4-7 of the 8-partial contract
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut buf: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut wi = 0;
+        let mut base = 0;
+        while base < x.len() {
+            while nbits < 24 {
+                buf |= (gw[wi] as u64) << nbits;
+                nbits += 32;
+                wi += 1;
+            }
+            let vw = vdupq_n_u32((buf & 0xFF_FFFF) as u32);
+            acc_lo = vaddq_f32(
+                acc_lo,
+                vmulq_f32(loadq(x, base), lanes4(vw, sh_lo, 7)));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(loadq(x, base + 4), lanes4(vw, sh_hi, 7)));
+            buf >>= 24;
+            nbits -= 24;
+            base += 8;
+        }
+        let mut p = [0f32; 8];
+        storeq(&mut p, 0, acc_lo);
+        vst1q_f32(p.as_mut_ptr().add(4), acc_hi);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn unpack_b3(gw: &[u32], qb: &mut [f32]) {
+        let sh_lo = vld1q_s32([0i32, -3, -6, -9].as_ptr());
+        let sh_hi = vld1q_s32([-12i32, -15, -18, -21].as_ptr());
+        let mut buf: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut wi = 0;
+        let mut base = 0;
+        while base < qb.len() {
+            while nbits < 24 {
+                buf |= (gw[wi] as u64) << nbits;
+                nbits += 32;
+                wi += 1;
+            }
+            let vw = vdupq_n_u32((buf & 0xFF_FFFF) as u32);
+            storeq(qb, base, lanes4(vw, sh_lo, 7));
+            storeq(qb, base + 4, lanes4(vw, sh_hi, 7));
+            buf >>= 24;
+            nbits -= 24;
+            base += 8;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn kv_dot_q4(qh: &[f32], w: &[u32]) -> f32 {
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        for (wi, &word) in w.iter().enumerate() {
+            let vw = vdupq_n_u32(word);
+            acc_lo = vaddq_f32(
+                acc_lo,
+                vmulq_f32(loadq(qh, wi * 8), lanes4(vw, sh_lo, 15)));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(loadq(qh, wi * 8 + 4),
+                          lanes4(vw, sh_hi, 15)));
+        }
+        let mut p = [0f32; 8];
+        storeq(&mut p, 0, acc_lo);
+        vst1q_f32(p.as_mut_ptr().add(4), acc_hi);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn kv_dot_q8(qh: &[f32], w: &[u32]) -> f32 {
+        let sh = vld1q_s32([0i32, -8, -16, -24].as_ptr());
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut wi = 0;
+        let mut base = 0;
+        while wi < w.len() {
+            acc_lo = vaddq_f32(
+                acc_lo,
+                vmulq_f32(loadq(qh, base),
+                          lanes4(vdupq_n_u32(w[wi]), sh, 255)));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(loadq(qh, base + 4),
+                          lanes4(vdupq_n_u32(w[wi + 1]), sh, 255)));
+            wi += 2;
+            base += 8;
+        }
+        let mut p = [0f32; 8];
+        storeq(&mut p, 0, acc_lo);
+        vst1q_f32(p.as_mut_ptr().add(4), acc_hi);
+        reduce8(&p)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn kv_axpy_q4(y: &mut [f32], a: f32, b: f32,
+                             w: &[u32]) {
+        let sh_lo = vld1q_s32([0i32, -4, -8, -12].as_ptr());
+        let sh_hi = vld1q_s32([-16i32, -20, -24, -28].as_ptr());
+        let va = vdupq_n_f32(a);
+        let vb = vdupq_n_f32(b);
+        for (wi, &word) in w.iter().enumerate() {
+            let vw = vdupq_n_u32(word);
+            let r_lo = vaddq_f32(
+                loadq(y, wi * 8),
+                vaddq_f32(vmulq_f32(va, lanes4(vw, sh_lo, 15)), vb));
+            storeq(y, wi * 8, r_lo);
+            let r_hi = vaddq_f32(
+                loadq(y, wi * 8 + 4),
+                vaddq_f32(vmulq_f32(va, lanes4(vw, sh_hi, 15)), vb));
+            storeq(y, wi * 8 + 4, r_hi);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn kv_axpy_q8(y: &mut [f32], a: f32, b: f32,
+                             w: &[u32]) {
+        let sh = vld1q_s32([0i32, -8, -16, -24].as_ptr());
+        let va = vdupq_n_f32(a);
+        let vb = vdupq_n_f32(b);
+        for (wi, &word) in w.iter().enumerate() {
+            let q = lanes4(vdupq_n_u32(word), sh, 255);
+            let r = vaddq_f32(loadq(y, wi * 4),
+                              vaddq_f32(vmulq_f32(va, q), vb));
+            storeq(y, wi * 4, r);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
     pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
         let n4 = y.len() / 4 * 4;
         let va = vdupq_n_f32(a);
@@ -1319,6 +1692,110 @@ pub fn unpack_b4(gw: &[u32], qb: &mut [f32]) {
     }
 }
 
+/// 3-bit packed group dot: slides a u64 window over the bitstream and
+/// consumes 8 values (24 bits) per step with the 8-partial-lane tree.
+/// Requires `x.len() % 8 == 0` and `gw` to hold at least
+/// `ceil(3 * x.len() / 32)` words starting bit-aligned to `x[0]`.
+#[inline]
+pub fn group_dot_packed_b3(gw: &[u32], x: &[f32]) -> f32 {
+    debug_assert_eq!(x.len() % 8, 0);
+    debug_assert!(gw.len() * 32 >= x.len() * 3);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::group_dot_packed_b3(gw, x) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::group_dot_packed_b3(gw, x) },
+        _ => group_dot_packed_b3_scalar(gw, x),
+    }
+}
+
+/// 3-bit group dot over already-unpacked values (`len % 8 == 0`):
+/// the same 8-partial-lane DAG as [`dot8`] (no tail), so it is
+/// bit-identical to [`group_dot_packed_b3`] on the same group.
+#[inline]
+pub fn group_dot_b3(qb: &[f32], xg: &[f32]) -> f32 {
+    debug_assert_eq!(qb.len() % 8, 0);
+    dot8(qb, xg)
+}
+
+/// Unpack a 3-bit group's bitstream into floats (`qb.len() % 8 == 0`;
+/// `gw` sized as for [`group_dot_packed_b3`]).
+#[inline]
+pub fn unpack_b3(gw: &[u32], qb: &mut [f32]) {
+    debug_assert_eq!(qb.len() % 8, 0);
+    debug_assert!(gw.len() * 32 >= qb.len() * 3);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::unpack_b3(gw, qb) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::unpack_b3(gw, qb) },
+        _ => unpack_b3_scalar(gw, qb),
+    }
+}
+
+/// Fused dequant+dot over an int4-packed KV row slice: returns
+/// `sum_i qh[i] * q[i]` on the raw quantized levels (`qh.len() == 8 *
+/// w.len()`); the caller applies `scale * dot + zero * sum(qh)`.
+/// 8-partial-lane tree, one word per step.
+#[inline]
+pub fn kv_dot_q4(qh: &[f32], w: &[u32]) -> f32 {
+    debug_assert_eq!(qh.len(), w.len() * 8);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::kv_dot_q4(qh, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::kv_dot_q4(qh, w) },
+        _ => kv_dot_q4_scalar(qh, w),
+    }
+}
+
+/// Fused dequant+dot over an int8-packed KV row slice (`qh.len() ==
+/// 4 * w.len()`, `w.len() % 2 == 0`): one word pair (8 values) per
+/// step, 8-partial-lane tree.
+#[inline]
+pub fn kv_dot_q8(qh: &[f32], w: &[u32]) -> f32 {
+    debug_assert_eq!(qh.len(), w.len() * 4);
+    debug_assert_eq!(w.len() % 2, 0);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::kv_dot_q8(qh, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::kv_dot_q8(qh, w) },
+        _ => kv_dot_q8_scalar(qh, w),
+    }
+}
+
+/// Fused dequant+axpy over an int4-packed KV row slice:
+/// `y[i] += a * q[i] + b` on the raw levels (`y.len() == 8 *
+/// w.len()`); the caller folds the attention weight and per-group
+/// scale/zero into `a = weight*scale`, `b = weight*zero`.
+#[inline]
+pub fn kv_axpy_q4(y: &mut [f32], a: f32, b: f32, w: &[u32]) {
+    debug_assert_eq!(y.len(), w.len() * 8);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::kv_axpy_q4(y, a, b, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::kv_axpy_q4(y, a, b, w) },
+        _ => kv_axpy_q4_scalar(y, a, b, w),
+    }
+}
+
+/// Fused dequant+axpy over an int8-packed KV row slice (`y.len() ==
+/// 4 * w.len()`, `w.len() % 2 == 0`).
+#[inline]
+pub fn kv_axpy_q8(y: &mut [f32], a: f32, b: f32, w: &[u32]) {
+    debug_assert_eq!(y.len(), w.len() * 4);
+    debug_assert_eq!(w.len() % 2, 0);
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::kv_axpy_q8(y, a, b, w) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::kv_axpy_q8(y, a, b, w) },
+        _ => kv_axpy_q8_scalar(y, a, b, w),
+    }
+}
+
 /// `y[i] += a * x[i]` - element-wise, identical on every ISA.
 #[inline]
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
@@ -1515,6 +1992,94 @@ mod tests {
             let g = with_isa(detected(), || group_dot_b4(&q4s, &x4));
             eq_bits(g, w, "group_dot_b4");
             eq_bits(w, w4, "group_dot_b4 vs packed");
+        }
+    }
+
+    #[test]
+    fn b3_kernels_match_scalar_and_each_other() {
+        let mut r = Rng::new(59);
+        for vals in [8usize, 16, 32, 64, 96] {
+            let words = (vals * 3).div_ceil(32);
+            let gw: Vec<u32> =
+                (0..words).map(|_| r.next_u64() as u32).collect();
+            let mut x = vec![0f32; vals];
+            r.fill_normal(&mut x, 0.0, 1.0);
+            let w3 = with_isa(Isa::Scalar,
+                              || group_dot_packed_b3(&gw, &x));
+            let g3 = with_isa(detected(),
+                              || group_dot_packed_b3(&gw, &x));
+            eq_bits(g3, w3, &format!("packed_b3 vals={vals}"));
+
+            let mut qs = vec![0f32; vals];
+            let mut qv = vec![0f32; vals];
+            with_isa(Isa::Scalar, || unpack_b3(&gw, &mut qs));
+            with_isa(detected(), || unpack_b3(&gw, &mut qv));
+            eq_bits_slice(&qv, &qs, "unpack_b3");
+            // unpacked values are the plain 3-bit fields
+            for (i, &q) in qs.iter().enumerate() {
+                let bit = i * 3;
+                let lo = (gw[bit / 32] as u64) >> (bit % 32);
+                let hi = if bit % 32 > 29 && bit / 32 + 1 < words {
+                    (gw[bit / 32 + 1] as u64) << (32 - bit % 32)
+                } else {
+                    0
+                };
+                assert_eq!(q, ((lo | hi) & 7) as f32,
+                           "unpack_b3 field {i}");
+            }
+            let w = with_isa(Isa::Scalar, || group_dot_b3(&qs, &x));
+            let g = with_isa(detected(), || group_dot_b3(&qs, &x));
+            eq_bits(g, w, "group_dot_b3");
+            eq_bits(w, w3, "group_dot_b3 vs packed");
+        }
+    }
+
+    #[test]
+    fn kv_kernels_match_scalar_and_reference_math() {
+        let mut r = Rng::new(61);
+        for hd in [8usize, 16, 32, 64] {
+            let w4: Vec<u32> =
+                (0..hd / 8).map(|_| r.next_u64() as u32).collect();
+            let w8: Vec<u32> =
+                (0..hd / 4).map(|_| r.next_u64() as u32).collect();
+            let mut qh = vec![0f32; hd];
+            r.fill_normal(&mut qh, 0.0, 1.0);
+
+            let s4 = with_isa(Isa::Scalar, || kv_dot_q4(&qh, &w4));
+            let v4 = with_isa(detected(), || kv_dot_q4(&qh, &w4));
+            eq_bits(v4, s4, &format!("kv_dot_q4 hd={hd}"));
+            let s8 = with_isa(Isa::Scalar, || kv_dot_q8(&qh, &w8));
+            let v8 = with_isa(detected(), || kv_dot_q8(&qh, &w8));
+            eq_bits(v8, s8, &format!("kv_dot_q8 hd={hd}"));
+
+            // the fused dots see the plain bit fields (value check,
+            // order-insensitive, hence the f64 tolerance)
+            let mut want4 = 0f64;
+            let mut want8 = 0f64;
+            for i in 0..hd {
+                let q4 = (w4[i / 8] >> (4 * (i % 8))) & 15;
+                let q8 = (w8[i / 4] >> (8 * (i % 4))) & 255;
+                want4 += qh[i] as f64 * q4 as f64;
+                want8 += qh[i] as f64 * q8 as f64;
+            }
+            assert!((s4 as f64 - want4).abs() < 1e-2 * (1.0 + want4.abs()),
+                    "kv_dot_q4 value hd={hd}: {s4} vs {want4}");
+            assert!((s8 as f64 - want8).abs() < 1e-2 * (1.0 + want8.abs()),
+                    "kv_dot_q8 value hd={hd}: {s8} vs {want8}");
+
+            let mut y0 = vec![0f32; hd];
+            r.fill_normal(&mut y0, 0.0, 1.0);
+            let (a, b) = (0.031f32, -0.42f32);
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            with_isa(Isa::Scalar, || kv_axpy_q4(&mut ys, a, b, &w4));
+            with_isa(detected(), || kv_axpy_q4(&mut yv, a, b, &w4));
+            eq_bits_slice(&yv, &ys, &format!("kv_axpy_q4 hd={hd}"));
+            let mut ys = y0.clone();
+            let mut yv = y0.clone();
+            with_isa(Isa::Scalar, || kv_axpy_q8(&mut ys, a, b, &w8));
+            with_isa(detected(), || kv_axpy_q8(&mut yv, a, b, &w8));
+            eq_bits_slice(&yv, &ys, &format!("kv_axpy_q8 hd={hd}"));
         }
     }
 

@@ -5,18 +5,20 @@
 # which together with the in-suite to_bits sweeps pins the SIMD layer to
 # the scalar contract) + warning-free rustdoc + docs link check + a
 # fast-mode inference bench smoke that must produce a valid
-# machine-readable perf snapshot (runs/bench.json, schema 8: inference +
+# machine-readable perf snapshot (runs/bench.json, schema 9: inference +
 # native train_step + taped-vs-forward-only eval_forward + the
 # continuous-batching serve section + the paged-KV kv_fork section + the
 # open-loop serve_robust section + the SIMD kernels section + the
-# cross-request prefix_cache section, whose determinism / bit-equality /
-# leak-freedom contracts are asserted inside the bench and re-checked by
+# cross-request prefix_cache section + the low-bit KV kv_lowbit section,
+# whose determinism / bit-equality / capacity / ppl-delta / leak-freedom
+# contracts are asserted inside the bench and re-checked by
 # `bench check`; the detected ISA is recorded in the snapshot's `simd`
 # field) + a bounded serve-sim smoke + a shared-prefix cache smoke
 # (digests must reproduce with the cache on AND off, and the cached run
-# must actually hit) + an open-loop determinism smoke (same seed twice
-# with faults armed must reproduce the same digest) + a bounded
-# end-to-end Block-AP -> E2E-QP
+# must actually hit) + open-loop determinism smokes in f32 and packed
+# int4 KV mode (same seed twice with faults armed must reproduce the
+# same digest; the int4 digest must also agree between EQAT_SIMD=scalar
+# and auto) + a bounded end-to-end Block-AP -> E2E-QP
 # training smoke and a forward-only eval smoke on the native backend (no
 # HLO artifacts required). Run from anywhere; operates on the repo root.
 set -euo pipefail
@@ -38,7 +40,7 @@ for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
 done
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 8; see
+# runs/bench.json is missing or schema-invalid (schema 9; see
 # docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
 # copy bounds, the serve_robust section's determinism / survivor
 # bit-equality / leak-freedom contracts, the kernels section's
@@ -72,6 +74,18 @@ if ! grep -q '"prefix_cache"' runs/bench.json; then
 fi
 if ! grep -q '"tokens_prefill_avoided"' runs/bench.json; then
   echo "tier1 FAIL: runs/bench.json records no prefill tokens avoided" >&2
+  exit 1
+fi
+if ! grep -q '"kv_lowbit"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no kv_lowbit section" >&2
+  exit 1
+fi
+if ! grep -q '"capacity_multiplier_int4"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no int4 capacity multiplier" >&2
+  exit 1
+fi
+if ! grep -q '"ppl_rel_delta_int4"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no int4 ppl delta" >&2
   exit 1
 fi
 
@@ -118,6 +132,29 @@ d1="$(openloop_digest)"
 d2="$(openloop_digest)"
 if [ -z "$d1" ] || [ "$d1" != "$d2" ]; then
   echo "tier1 FAIL: open-loop digest not reproducible ('$d1' vs '$d2')" >&2
+  exit 1
+fi
+
+# low-bit KV determinism smoke: the same open-loop workload on packed
+# int4 pages with faults armed must reproduce its digest run to run AND
+# across EQAT_SIMD=scalar|auto (the low-bit determinism contract:
+# stored bits are written by the scalar reference kernel, reads are
+# lane-order-pinned, so the digest is a pure function of the seed).
+# The int4 digest legitimately differs from the f32 digest above.
+kvlow_digest() {
+  EQAT_SIMD="$1" cargo run --release --bin eqat -- serve-sim \
+    --open-loop --kv-bits 4 --requests 24 --rate 200 --seed 7 \
+    --fail-rate 0.02 | grep -o 'digest [0-9a-f]*'
+}
+q1="$(kvlow_digest scalar)"
+q2="$(kvlow_digest scalar)"
+q3="$(kvlow_digest auto)"
+if [ -z "$q1" ] || [ "$q1" != "$q2" ]; then
+  echo "tier1 FAIL: int4 KV digest not reproducible ('$q1' vs '$q2')" >&2
+  exit 1
+fi
+if [ "$q1" != "$q3" ]; then
+  echo "tier1 FAIL: int4 KV digest diverges across SIMD ISAs ('$q1' scalar vs '$q3' auto)" >&2
   exit 1
 fi
 
