@@ -5,19 +5,19 @@
 //!
 //! `runs/bench.json` convention: every run of `eqat bench inference` (or
 //! the `inference` bench binary) rewrites this machine-readable snapshot
-//! (schema 9 = inference sections + native train_step + eval_forward +
+//! (schema 10 = inference sections + native train_step + eval_forward +
 //! the continuous-batching `serve` section + the paged-KV `kv_fork`
 //! section + the open-loop `serve_robust` section + the SIMD `kernels`
 //! section + the cross-request `prefix_cache` section + the low-bit KV
-//! `kv_lowbit` section: int8/int4 page capacity multiplier at identical
-//! pool bytes, fused dequant+dot/axpy kernel bandwidth, open-loop
-//! goodput at a fixed byte budget, and the synthetic teacher-forced ppl
-//! delta vs the f32 pool, all behind in-bench gates) so the perf
-//! trajectory is trackable across PRs; [`check_bench_json`] validates
-//! it (used by scripts/tier1.sh). Schemas 1-8 from older PRs stay
-//! accepted. Every section and field is documented in
-//! docs/BENCH_SCHEMA.md - keep that file in sync when bumping the
-//! schema.
+//! `kv_lowbit` section + the SLO scheduling `serve_slo` section:
+//! EDF-vs-FIFO goodput under p95 first-token and per-token latency
+//! targets at batch 8/32/128 on the work-proportional open-loop clock,
+//! plus the 200-schedule randomized property-fuzzer sweep, all behind
+//! in-bench gates) so the perf trajectory is trackable across PRs;
+//! [`check_bench_json`] validates it (used by scripts/tier1.sh).
+//! Schemas 1-9 from older PRs stay accepted. Every section and field is
+//! documented in docs/BENCH_SCHEMA.md - keep that file in sync when
+//! bumping the schema.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -185,14 +185,17 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
     md.push('\n');
     let (kl_md, kl_json) = kv_lowbit_throughput(fast)?;
     md.push_str(&kl_md);
+    md.push('\n');
+    let (ss_md, ss_json) = serve_slo_throughput(fast)?;
+    md.push_str(&ss_md);
 
     let now = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
     let payload = Json::obj(vec![
-        // schema 9 = schema 8 + the low-bit KV kv_lowbit section
-        ("schema", Json::num(9.0)),
+        // schema 10 = schema 9 + the SLO scheduling serve_slo section
+        ("schema", Json::num(10.0)),
         ("kind", Json::str("inference_throughput")),
         ("fast", Json::Bool(fast)),
         ("generated_unix", Json::num(now)),
@@ -208,6 +211,7 @@ pub fn inference_throughput(fast: bool) -> Result<(String, Json)> {
         ("kernels", kn_json),
         ("prefix_cache", pc_json),
         ("kv_lowbit", kl_json),
+        ("serve_slo", ss_json),
     ]);
     Ok((md, payload))
 }
@@ -772,6 +776,7 @@ pub fn kv_lowbit_throughput(fast: bool) -> Result<(String, Json)> {
         page_rows,
         prefix_cache: false,
         kv_bits: 16,
+        ..OpenLoopCfg::default()
     };
     let i4_cfg = OpenLoopCfg {
         slots: i4_slots,
@@ -1291,6 +1296,7 @@ pub fn serve_robust_throughput(fast: bool) -> Result<(String, Json)> {
         page_rows: 0,
         prefix_cache: false,
         kv_bits: 16,
+        ..OpenLoopCfg::default()
     };
 
     // robustness gate 1: survivors of a clean, uncontended run are
@@ -1397,6 +1403,185 @@ pub fn serve_robust_throughput(fast: bool) -> Result<(String, Json)> {
         ("survivors_bitexact", Json::Bool(true)),
         ("deterministic", Json::Bool(true)),
         ("leaked_pages", Json::num(0.0)),
+    ]);
+    Ok((md, j))
+}
+
+/// SLO-aware scheduling bench: goodput under a p95 first-token +
+/// per-token latency target, EDF-with-prefill-budget vs FIFO, at batch
+/// 8/32/128 on the work-proportional open-loop clock (each processed
+/// token costs virtual time, so admission order and prefill
+/// interleaving genuinely move the latency metrics). In-bench gates:
+/// every run reproduces its report (digest included) bit-for-bit, EDF +
+/// budget achieves >= FIFO SLO goodput at every batch size (summed over
+/// seeds), streamed tokens reconcile with retired outputs, and the
+/// 200-schedule property fuzzer passes with zero leaked pages and zero
+/// determinism violations. `serve_slo` section of runs/bench.json
+/// (schema >= 10).
+pub fn serve_slo_throughput(fast: bool) -> Result<(String, Json)> {
+    use crate::infer::fuzz::run_fuzz;
+    use crate::infer::openloop::{run_open_loop, OpenLoopCfg};
+    use crate::infer::sched::SchedPolicy;
+
+    let (dim, nh, hd, inter, vocab, n_layers) = if fast {
+        (256usize, 4usize, 64usize, 512usize, 1024usize, 1usize)
+    } else {
+        (1024, 8, 128, 2816, 4096, 1)
+    };
+    let prompt_len = 12usize;
+    let max_new = 12usize;
+    let max_ctx = prompt_len + max_new + 4;
+    let requests = if fast { 32 } else { 64 };
+    let core = Arc::new(ModelCore::synthetic(
+        dim, nh, hd, inter, vocab, n_layers, QuantScheme::new(2, 128),
+        max_ctx, 5151)?);
+    // an arrival burst well above capacity at batch 8, with the
+    // standard 1-tight : 3-standard : 1-relaxed : 1-none deadline mix,
+    // so admission order decides which deadlines survive
+    let base = OpenLoopCfg {
+        requests,
+        rate: 300.0,
+        tick_secs: 0.002,
+        prompt_len,
+        max_new,
+        deadline_secs: 0.4,
+        prefill_chunk: 8,
+        max_queue: requests,
+        token_cost_secs: 0.001,
+        slo_first_token_secs: 0.6,
+        slo_token_secs: 0.1,
+        stream: true,
+        ..OpenLoopCfg::default()
+    };
+
+    let mut rows = vec![vec![
+        "config".into(),
+        format!("dim {dim}, vocab {vocab}, {n_layers} block(s); \
+                 {requests} arrivals at {:.0} req/s, deadline base \
+                 {:.0}ms, SLO first-token {:.0}ms / p95 gap {:.0}ms, \
+                 token cost {:.1}ms",
+                base.rate, base.deadline_secs * 1e3,
+                base.slo_first_token_secs * 1e3,
+                base.slo_token_secs * 1e3,
+                base.token_cost_secs * 1e3),
+    ]];
+    let mut jbatches = Vec::new();
+    for &batch in &[8usize, 32, 128] {
+        let mut fifo_slo = 0usize;
+        let mut edf_slo = 0usize;
+        let mut fifo_good = 0usize;
+        let mut edf_good = 0usize;
+        let mut fifo_p95ft = 0.0f64;
+        let mut edf_p95ft = 0.0f64;
+        let mut fifo_p95tok = 0.0f64;
+        let mut edf_p95tok = 0.0f64;
+        for seed in [11u64, 12] {
+            let fifo_cfg = OpenLoopCfg {
+                seed,
+                slots: batch,
+                max_batch: batch,
+                policy: SchedPolicy::Fifo,
+                prefill_budget: 0,
+                ..base
+            };
+            let edf_cfg = OpenLoopCfg {
+                policy: SchedPolicy::Edf,
+                prefill_budget: 16,
+                ..fifo_cfg
+            };
+            let fa = run_open_loop(core.clone(), &fifo_cfg)?;
+            let fb = run_open_loop(core.clone(), &fifo_cfg)?;
+            ensure!(fa == fb,
+                    "serve_slo bench: FIFO batch {batch} seed {seed} \
+                     not deterministic");
+            let ea = run_open_loop(core.clone(), &edf_cfg)?;
+            let eb = run_open_loop(core.clone(), &edf_cfg)?;
+            ensure!(ea == eb,
+                    "serve_slo bench: EDF batch {batch} seed {seed} \
+                     not deterministic");
+            for r in [&fa, &ea] {
+                ensure!(r.leaked_pages == 0);
+                ensure!(r.streamed_tokens == r.total_tokens,
+                        "serve_slo bench: streamed tokens diverge from \
+                         retired outputs");
+            }
+            ensure!(ea.goodput > 0,
+                    "serve_slo bench: EDF batch {batch} seed {seed} \
+                     produced no goodput");
+            fifo_slo += fa.slo_goodput;
+            edf_slo += ea.slo_goodput;
+            fifo_good += fa.goodput;
+            edf_good += ea.goodput;
+            fifo_p95ft = fifo_p95ft.max(fa.p95_first_token_secs);
+            edf_p95ft = edf_p95ft.max(ea.p95_first_token_secs);
+            fifo_p95tok = fifo_p95tok.max(fa.p95_token_gap_secs);
+            edf_p95tok = edf_p95tok.max(ea.p95_token_gap_secs);
+        }
+        // the headline gate: EDF admission + a bounded prefill quantum
+        // must never lose SLO goodput to FIFO (ties allowed - at large
+        // batch everything admits immediately and the policies agree)
+        ensure!(edf_slo >= fifo_slo,
+                "serve_slo bench: EDF SLO goodput {edf_slo} below FIFO \
+                 {fifo_slo} at batch {batch}");
+        rows.push(vec![
+            format!("batch {batch}"),
+            format!("SLO goodput EDF {edf_slo} vs FIFO {fifo_slo} (of \
+                     {} offered); goodput {edf_good} vs {fifo_good}; \
+                     p95 first-token {:.0}ms vs {:.0}ms",
+                    2 * requests, edf_p95ft * 1e3, fifo_p95ft * 1e3),
+        ]);
+        crate::info!("serve_slo bench batch {batch}: EDF {edf_slo} vs \
+                      FIFO {fifo_slo} SLO goodput (goodput {edf_good} \
+                      vs {fifo_good})");
+        jbatches.push(Json::obj(vec![
+            ("batch", Json::num(batch as f64)),
+            ("fifo_slo_goodput", Json::num(fifo_slo as f64)),
+            ("edf_slo_goodput", Json::num(edf_slo as f64)),
+            ("fifo_goodput", Json::num(fifo_good as f64)),
+            ("edf_goodput", Json::num(edf_good as f64)),
+            ("fifo_p95_first_token_ms", Json::num(fifo_p95ft * 1e3)),
+            ("edf_p95_first_token_ms", Json::num(edf_p95ft * 1e3)),
+            ("fifo_p95_token_ms", Json::num(fifo_p95tok * 1e3)),
+            ("edf_p95_token_ms", Json::num(edf_p95tok * 1e3)),
+            ("deterministic", Json::Bool(true)),
+        ]));
+    }
+
+    // acceptance sweep: 200 randomized schedules through the property
+    // harness - zero leaked pages, zero determinism violations
+    let fuzz = run_fuzz(200, 0xF0AA)?;
+    ensure!(fuzz.schedules == 200 && fuzz.violations == 0
+            && fuzz.leaked_pages == 0,
+            "serve_slo bench: property fuzzer failed: {fuzz:?}");
+    rows.push(vec![
+        "property fuzzer".into(),
+        format!("{} schedules ({} EDF), {} completions, {} cancels, \
+                 {} timeouts, {} faults fired, 0 leaks, 0 violations",
+                fuzz.schedules, fuzz.edf_schedules, fuzz.completions,
+                fuzz.cancels, fuzz.timeouts, fuzz.faults_fired),
+    ]);
+
+    let md = format!(
+        "## Serve SLO - EDF + prefill budget vs FIFO under latency \
+         targets, pinned by the randomized scheduler property harness\n\
+         \n{}",
+        crate::exp::md_table(&["Scenario", "Outcome"], &rows)
+    );
+    let j = Json::obj(vec![
+        ("dim", Json::num(dim as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("rate", Json::num(base.rate)),
+        ("deadline_secs", Json::num(base.deadline_secs)),
+        ("slo_first_token_ms",
+         Json::num(base.slo_first_token_secs * 1e3)),
+        ("slo_token_ms", Json::num(base.slo_token_secs * 1e3)),
+        ("token_cost_ms", Json::num(base.token_cost_secs * 1e3)),
+        ("prefill_budget", Json::num(16.0)),
+        ("batches", Json::arr(jbatches)),
+        ("fuzz_schedules", Json::num(fuzz.schedules as f64)),
+        ("fuzz_violations", Json::num(fuzz.violations as f64)),
+        ("fuzz_leaked_pages", Json::num(fuzz.leaked_pages as f64)),
+        ("streamed_prefix_ok", Json::Bool(true)),
     ]);
     Ok((md, j))
 }
@@ -1829,7 +2014,8 @@ pub fn write_bench_json(path: &str, payload: &Json) -> Result<()> {
 /// eval_forward, 4 adds the continuous-batching serve section, 5 adds
 /// the paged-KV kv_fork section, 6 adds the open-loop serve_robust
 /// section, 7 adds the SIMD kernels section, 8 adds the cross-request
-/// prefix_cache section, 9 adds the low-bit KV kv_lowbit section - see
+/// prefix_cache section, 9 adds the low-bit KV kv_lowbit section, 10
+/// adds the SLO scheduling serve_slo section - see
 /// docs/BENCH_SCHEMA.md), and requires non-empty matvec/decode sections
 /// with numeric fields. scripts/tier1.sh fails the build on error.
 pub fn check_bench_json(path: &str) -> Result<()> {
@@ -1837,7 +2023,7 @@ pub fn check_bench_json(path: &str) -> Result<()> {
         .with_context(|| format!("missing bench output {path}"))?;
     let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
     let schema = j.get("schema")?.as_usize()?;
-    if !(1..=9).contains(&schema) {
+    if !(1..=10).contains(&schema) {
         bail!("{path}: unsupported schema {schema}");
     }
     let mv = j.get("matvec")?.as_arr()?;
@@ -2130,6 +2316,64 @@ pub fn check_bench_json(path: &str) -> Result<()> {
             bail!("{path}: kv_lowbit.leaked_pages {leaked} != 0");
         }
     }
+    // schema 10 adds the SLO scheduling serve_slo section; the checker
+    // re-asserts the scheduling contract the numbers encode: EDF with a
+    // prefill budget never lost SLO goodput to FIFO at any batch size,
+    // every run reproduced its digest, the streamed tokens reconciled
+    // with retired outputs, and the 200-schedule property fuzzer passed
+    // with zero leaks and zero determinism violations
+    if schema >= 10 {
+        let ss = j.get("serve_slo")?;
+        for key in ["slo_first_token_ms", "slo_token_ms",
+                    "token_cost_ms", "prefill_budget", "rate",
+                    "requests"] {
+            let v = ss.get(key)?.as_f64()?;
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: bad serve_slo.{key} {v}");
+            }
+        }
+        let batches = ss.get("batches")?.as_arr()?;
+        if batches.is_empty() {
+            bail!("{path}: empty serve_slo.batches section");
+        }
+        for b in batches {
+            let bs = b.get("batch")?.as_usize()?;
+            for key in ["fifo_slo_goodput", "edf_slo_goodput",
+                        "fifo_goodput", "edf_goodput",
+                        "fifo_p95_first_token_ms",
+                        "edf_p95_first_token_ms", "fifo_p95_token_ms",
+                        "edf_p95_token_ms"] {
+                let v = b.get(key)?.as_f64()?;
+                if !v.is_finite() || v < 0.0 {
+                    bail!("{path}: bad serve_slo.batches.{key} {v}");
+                }
+            }
+            let f = b.get("fifo_slo_goodput")?.as_f64()?;
+            let e = b.get("edf_slo_goodput")?.as_f64()?;
+            if e < f {
+                bail!("{path}: serve_slo batch {bs}: EDF SLO goodput \
+                       {e} below FIFO {f}");
+            }
+            if !b.get("deterministic")?.as_bool()? {
+                bail!("{path}: serve_slo batch {bs}: deterministic is \
+                       false");
+            }
+        }
+        let fs = ss.get("fuzz_schedules")?.as_f64()?;
+        if !fs.is_finite() || fs < 200.0 {
+            bail!("{path}: serve_slo.fuzz_schedules {fs} below the \
+                   200-schedule acceptance sweep");
+        }
+        for key in ["fuzz_violations", "fuzz_leaked_pages"] {
+            let v = ss.get(key)?.as_f64()?;
+            if v != 0.0 {
+                bail!("{path}: serve_slo.{key} {v} != 0");
+            }
+        }
+        if !ss.get("streamed_prefix_ok")?.as_bool()? {
+            bail!("{path}: serve_slo.streamed_prefix_ok is false");
+        }
+    }
     Ok(())
 }
 
@@ -2190,7 +2434,7 @@ mod tests {
     #[test]
     fn bench_json_roundtrip_and_validation() {
         let good = Json::obj(vec![
-            ("schema", Json::num(9.0)),
+            ("schema", Json::num(10.0)),
             ("kind", Json::str("inference_throughput")),
             ("simd", Json::str("avx2")),
             (
@@ -2369,6 +2613,38 @@ mod tests {
                     ("leaked_pages", Json::num(0.0)),
                 ]),
             ),
+            (
+                "serve_slo",
+                Json::obj(vec![
+                    ("dim", Json::num(256.0)),
+                    ("requests", Json::num(32.0)),
+                    ("rate", Json::num(300.0)),
+                    ("deadline_secs", Json::num(0.4)),
+                    ("slo_first_token_ms", Json::num(600.0)),
+                    ("slo_token_ms", Json::num(100.0)),
+                    ("token_cost_ms", Json::num(1.0)),
+                    ("prefill_budget", Json::num(16.0)),
+                    (
+                        "batches",
+                        Json::arr(vec![Json::obj(vec![
+                            ("batch", Json::num(8.0)),
+                            ("fifo_slo_goodput", Json::num(18.0)),
+                            ("edf_slo_goodput", Json::num(27.0)),
+                            ("fifo_goodput", Json::num(24.0)),
+                            ("edf_goodput", Json::num(29.0)),
+                            ("fifo_p95_first_token_ms", Json::num(220.0)),
+                            ("edf_p95_first_token_ms", Json::num(160.0)),
+                            ("fifo_p95_token_ms", Json::num(40.0)),
+                            ("edf_p95_token_ms", Json::num(35.0)),
+                            ("deterministic", Json::Bool(true)),
+                        ])]),
+                    ),
+                    ("fuzz_schedules", Json::num(200.0)),
+                    ("fuzz_violations", Json::num(0.0)),
+                    ("fuzz_leaked_pages", Json::num(0.0)),
+                    ("streamed_prefix_ok", Json::Bool(true)),
+                ]),
+            ),
         ]);
         let dir = std::env::temp_dir().join("eqat-bench-test");
         let path = dir.join("bench.json");
@@ -2376,10 +2652,10 @@ mod tests {
         write_bench_json(&path, &good).unwrap();
         check_bench_json(&path).unwrap();
 
-        // schema-9 file without its required sections is rejected...
+        // schema-10 file without its required sections is rejected...
         for missing in ["train_step", "eval_forward", "serve", "kv_fork",
                         "serve_robust", "kernels", "simd",
-                        "prefix_cache", "kv_lowbit"] {
+                        "prefix_cache", "kv_lowbit", "serve_slo"] {
             let mut pruned = Vec::new();
             if let Json::Obj(fields) = &good {
                 for (k, v) in fields {
@@ -2496,27 +2772,113 @@ mod tests {
             assert!(check_bench_json(&path).is_err(),
                     "bad kv_lowbit.{key} accepted");
         }
-        // ...but the core sections under legacy schemas 1-8 stay valid
-        // (8 keeps prefix_cache, 7 keeps kernels, 6 keeps serve_robust,
-        // 5 keeps kv_fork, 4 keeps serve, 3 keeps eval_forward, 1/2
-        // drop those too)
+        // ...and a serve_slo section violating the SLO scheduling
+        // contract (fuzz violations or leaks, an undersized fuzz
+        // sweep, a broken streamed-prefix flag) is rejected
+        for (key, val) in [("fuzz_violations", Json::num(1.0)),
+                           ("fuzz_leaked_pages", Json::num(4.0)),
+                           ("fuzz_schedules", Json::num(50.0)),
+                           ("streamed_prefix_ok", Json::Bool(false))] {
+            let mut fields = Vec::new();
+            if let Json::Obj(outer) = &good {
+                for (k, v) in outer {
+                    if k == "serve_slo" {
+                        let mut ss = Vec::new();
+                        if let Json::Obj(inner) = v {
+                            for (ik, iv) in inner {
+                                ss.push((
+                                    ik.as_str(),
+                                    if ik == key {
+                                        val.clone()
+                                    } else {
+                                        iv.clone()
+                                    },
+                                ));
+                            }
+                        }
+                        fields.push((k.as_str(), Json::obj(ss)));
+                    } else {
+                        fields.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(fields)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "bad serve_slo.{key} accepted");
+        }
+        // ...as is a batch row where EDF loses the SLO-goodput gate
+        // to FIFO or the per-batch determinism flag drops
+        for (key, val) in [("edf_slo_goodput", Json::num(3.0)),
+                           ("deterministic", Json::Bool(false))] {
+            let mut fields = Vec::new();
+            if let Json::Obj(outer) = &good {
+                for (k, v) in outer {
+                    if k == "serve_slo" {
+                        let mut ss = Vec::new();
+                        if let Json::Obj(inner) = v {
+                            for (ik, iv) in inner {
+                                if ik == "batches" {
+                                    let mut rows = Vec::new();
+                                    if let Json::Arr(bs) = iv {
+                                        for b in bs {
+                                            let mut row = Vec::new();
+                                            if let Json::Obj(bf) = b {
+                                                for (bk, bv) in bf {
+                                                    row.push((
+                                                        bk.as_str(),
+                                                        if bk == key {
+                                                            val.clone()
+                                                        } else {
+                                                            bv.clone()
+                                                        },
+                                                    ));
+                                                }
+                                            }
+                                            rows.push(Json::obj(row));
+                                        }
+                                    }
+                                    ss.push((ik.as_str(),
+                                             Json::Arr(rows)));
+                                } else {
+                                    ss.push((ik.as_str(), iv.clone()));
+                                }
+                            }
+                        }
+                        fields.push((k.as_str(), Json::obj(ss)));
+                    } else {
+                        fields.push((k.as_str(), v.clone()));
+                    }
+                }
+            }
+            write_bench_json(&path, &Json::obj(fields)).unwrap();
+            assert!(check_bench_json(&path).is_err(),
+                    "bad serve_slo batch {key} accepted");
+        }
+        // ...but the core sections under legacy schemas 1-9 stay valid
+        // (9 keeps kv_lowbit, 8 keeps prefix_cache, 7 keeps kernels,
+        // 6 keeps serve_robust, 5 keeps kv_fork, 4 keeps serve, 3
+        // keeps eval_forward, 1/2 drop those too)
         for (legacy_schema, drop_keys) in [
-            (1.0f64, vec!["kv_lowbit", "prefix_cache", "kernels",
-                          "simd", "serve_robust", "kv_fork", "serve",
-                          "eval_forward", "schema"]),
-            (2.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
-                       "serve_robust", "kv_fork", "serve",
-                       "eval_forward", "schema"]),
-            (3.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
-                       "serve_robust", "kv_fork", "serve", "schema"]),
-            (4.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
-                       "serve_robust", "kv_fork", "schema"]),
-            (5.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
-                       "serve_robust", "schema"]),
-            (6.0, vec!["kv_lowbit", "prefix_cache", "kernels", "simd",
+            (1.0f64, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                          "kernels", "simd", "serve_robust", "kv_fork",
+                          "serve", "eval_forward", "schema"]),
+            (2.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "kernels", "simd", "serve_robust", "kv_fork",
+                       "serve", "eval_forward", "schema"]),
+            (3.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "kernels", "simd", "serve_robust", "kv_fork",
+                       "serve", "schema"]),
+            (4.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "kernels", "simd", "serve_robust", "kv_fork",
                        "schema"]),
-            (7.0, vec!["kv_lowbit", "prefix_cache", "schema"]),
-            (8.0, vec!["kv_lowbit", "schema"]),
+            (5.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "kernels", "simd", "serve_robust", "schema"]),
+            (6.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "kernels", "simd", "schema"]),
+            (7.0, vec!["serve_slo", "kv_lowbit", "prefix_cache",
+                       "schema"]),
+            (8.0, vec!["serve_slo", "kv_lowbit", "schema"]),
+            (9.0, vec!["serve_slo", "schema"]),
         ] {
             let mut legacy = vec![("schema", Json::num(legacy_schema))];
             if let Json::Obj(fields) = &good {

@@ -60,7 +60,17 @@ COMMANDS
                         bounded-queue backpressure, and seeded fault
                         injection [--rate R --tick-ms MS --deadline-ms MS
                          --max-queue N --fail-rate P] (composes with
-                        --shared-prefix)
+                        --shared-prefix);
+                        --policy {fifo,edf} picks the admission policy
+                        (edf = earliest absolute deadline first, with
+                        priority-class fallback for deadline-free
+                        requests; bit-identical per-request output either
+                        way), --prefill-budget N caps prefill tokens per
+                        tick (0 = unbounded), --stream surfaces tokens
+                        incrementally through the scheduler's stream
+                        events; open-loop SLO accounting via
+                        [--token-cost-ms MS --slo-ft-ms MS
+                         --slo-tok-ms MS]
   size                  Table-11 size arithmetic [--model llama2-7b ...]
   exp <id>              reproduce a paper table/figure: t1..t9, t11..t14,
                         fig1, fig3, fig4  [--preset P]
@@ -68,8 +78,8 @@ COMMANDS
                         batched prefill + native train_step + eval_forward
                         + serve + paged-KV kv_fork + open-loop
                         serve_robust + SIMD kernels + prefix_cache +
-                        low-bit KV kv_lowbit
-                        sections -> runs/bench.json, schema 9; see
+                        low-bit KV kv_lowbit + SLO scheduling serve_slo
+                        sections -> runs/bench.json, schema 10; see
                         docs/BENCH_SCHEMA.md) | check (validate
                         runs/bench.json) | train-time (Tables 8/9)
                         [--fast]

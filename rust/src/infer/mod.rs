@@ -4,13 +4,18 @@
 //! (zero-copy prefix sharing via [`kv::KvPool::fork`]), the
 //! cross-request radix prefix cache [`prefixcache::PrefixCache`]
 //! (retired prompts re-served by refcount, LRU-evicted under pressure),
-//! the continuous-batching [`sched::Scheduler`], the deterministic
-//! [`openloop`] arrival simulator that exercises its failure model
-//! (deadlines, backpressure, fault injection), and the single-session
+//! the continuous-batching [`sched::Scheduler`] with pluggable
+//! admission policy (FIFO or EDF), per-tick prefill budget, and
+//! incremental token streaming, the deterministic [`openloop`] arrival
+//! simulator that exercises its failure model (deadlines, backpressure,
+//! fault injection, SLO accounting), the randomized scheduler
+//! property-test harness [`fuzz`] that pins the whole stack's
+//! invariants over generated schedules, and the single-session
 //! [`engine::Engine`] facade (see `infer::engine` docs for the
 //! architecture and docs/ARCHITECTURE.md for the full map).
 pub mod core;
 pub mod engine;
+pub mod fuzz;
 pub mod generate;
 pub mod kv;
 pub mod openloop;

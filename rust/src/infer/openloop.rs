@@ -25,18 +25,33 @@
 //! the effective [`OpenLoopReport::kv_bits`] and
 //! [`OpenLoopReport::pool_bytes`] so the `kv_lowbit` bench can compare
 //! admitted capacity and goodput at fixed pool bytes across formats.
+//!
+//! [`OpenLoopCfg::policy`] selects the admission policy (FIFO or EDF),
+//! [`OpenLoopCfg::prefill_budget`] caps prefill work per tick, and
+//! [`OpenLoopCfg::stream`] drains per-token stream events every tick,
+//! cross-checking them against retired outputs. With
+//! [`OpenLoopCfg::token_cost_secs`] > 0 the virtual clock charges each
+//! processed token, so latency metrics respond to scheduling choices;
+//! [`OpenLoopCfg::slo_first_token_secs`] /
+//! [`OpenLoopCfg::slo_token_secs`] then gate
+//! [`OpenLoopReport::slo_goodput`], the `serve_slo` bench's headline
+//! metric. All of it stays a pure function of (seed, config), and
+//! streaming never changes the digest.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use crate::infer::core::ModelCore;
 use crate::infer::generate::Sampler;
-use crate::infer::sched::{Reject, SchedConfig, Scheduler};
+use crate::infer::sched::{Reject, SchedConfig, SchedPolicy, Scheduler,
+                          StreamEventKind};
 use crate::infer::session::{Completion, FinishReason, Request};
 use crate::util::clock::Clock;
 use crate::util::failpoint;
 use crate::util::rng::Rng;
+use crate::util::stats::percentile;
 
 /// Everything an open-loop run depends on. Same config = same report,
 /// bit for bit.
@@ -83,6 +98,30 @@ pub struct OpenLoopCfg {
     /// low-bit determinism contract - digests reproduce per seed across
     /// batch size, threads, and SIMD ISA, but differ from f32 digests.
     pub kv_bits: u32,
+    /// admission policy ([`SchedPolicy`]): FIFO-with-lookahead (the
+    /// default, byte-identical to the pre-policy simulator) or EDF
+    pub policy: SchedPolicy,
+    /// per-tick chunked-prefill token budget
+    /// ([`SchedConfig::prefill_budget`], 0 = unlimited)
+    pub prefill_budget: usize,
+    /// drain per-token stream events each tick and cross-check them
+    /// against retired outputs (observation-only: the digest is
+    /// bit-identical with this on or off)
+    pub stream: bool,
+    /// virtual seconds of model work per prefilled-or-emitted token.
+    /// 0 keeps the classic fixed-width tick; > 0 makes each tick
+    /// advance `tick_secs + token_cost_secs * tokens_processed`, so
+    /// heavy prefill ticks genuinely delay in-flight decodes and the
+    /// prefill budget has a latency effect to measure. Still a pure
+    /// function of (seed, config).
+    pub token_cost_secs: f64,
+    /// p95 first-token SLO target in virtual seconds; <= 0 disables
+    /// the SLO accounting ([`OpenLoopReport::slo_goodput`] then equals
+    /// [`OpenLoopReport::goodput`])
+    pub slo_first_token_secs: f64,
+    /// per-token (inter-token gap) SLO target in virtual seconds;
+    /// <= 0 checks only the first-token target
+    pub slo_token_secs: f64,
 }
 
 impl Default for OpenLoopCfg {
@@ -104,6 +143,12 @@ impl Default for OpenLoopCfg {
             page_rows: 0,
             prefix_cache: false,
             kv_bits: 16,
+            policy: SchedPolicy::Fifo,
+            prefill_budget: 0,
+            stream: false,
+            token_cost_secs: 0.0,
+            slo_first_token_secs: 0.0,
+            slo_token_secs: 0.0,
         }
     }
 }
@@ -163,6 +208,23 @@ pub struct OpenLoopReport {
     pub pool_bytes: u64,
     /// virtual seconds elapsed over the whole run
     pub virtual_secs: f64,
+    /// goodput that also met the latency SLO: natural finishes whose
+    /// first-token latency was within
+    /// [`OpenLoopCfg::slo_first_token_secs`] and whose p95 inter-token
+    /// gap was within [`OpenLoopCfg::slo_token_secs`]. Equals
+    /// [`OpenLoopReport::goodput`] with the targets disabled.
+    pub slo_goodput: usize,
+    /// p95 of first-token latency over completions that emitted tokens
+    pub p95_first_token_secs: f64,
+    /// p95 of inter-token gaps across all completions (the first gap,
+    /// which includes queue wait, is excluded - it belongs to the
+    /// first-token metric)
+    pub p95_token_gap_secs: f64,
+    /// tokens observed through per-tick stream events (0 with
+    /// [`OpenLoopCfg::stream`] off; == [`OpenLoopReport::total_tokens`]
+    /// with it on - the drive loop asserts streamed tokens reconcile
+    /// with every retired output)
+    pub streamed_tokens: usize,
     /// FNV-1a over every completion's (id, finish tag, tokens) plus the
     /// reject count: two runs agree on this iff they agreed on every
     /// request's full lifecycle
@@ -270,6 +332,9 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
             max_queue: cfg.max_queue,
             prefix_cache: cfg.prefix_cache,
             kv_bits: cfg.kv_bits,
+            policy: cfg.policy,
+            prefill_budget: cfg.prefill_budget,
+            stream: cfg.stream,
             ..SchedConfig::default()
         },
         Clock::manual());
@@ -280,6 +345,9 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
     let mut depth_sum = 0u64;
     let mut depth_max = 0usize;
     let mut peak_live = 0usize;
+    let mut streamed: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut streamed_tokens = 0usize;
+    let mut prev_work = 0u64;
     while next < arrivals.len() || !sched.is_idle() {
         let now = sched.clock().now();
         while next < arrivals.len() && arrivals[next].at <= now {
@@ -295,7 +363,26 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
         depth_max = depth_max.max(sched.n_queued());
         sched.tick()?;
         peak_live = peak_live.max(sched.n_live());
-        sched.clock().advance(cfg.tick_secs.max(1e-9));
+        if cfg.stream {
+            for ev in sched.take_stream_events() {
+                if let StreamEventKind::Token(tok) = ev.kind {
+                    streamed.entry(ev.id).or_default().push(tok);
+                    streamed_tokens += 1;
+                }
+            }
+        }
+        // Fixed tick width, plus (optionally) work-proportional time:
+        // each prefilled or emitted token costs `token_cost_secs`, so
+        // a heavy prefill tick delays everyone - the latency effect
+        // the prefill budget exists to bound.
+        let mut dt = cfg.tick_secs.max(1e-9);
+        if cfg.token_cost_secs > 0.0 {
+            let st = sched.stats();
+            let work = st.prefilled_tokens + st.emitted_tokens;
+            dt += cfg.token_cost_secs * (work - prev_work) as f64;
+            prev_work = work;
+        }
+        sched.clock().advance(dt);
         ticks += 1;
         ensure!(ticks < 1_000_000,
                 "open-loop run failed to drain in 1M ticks");
@@ -345,12 +432,39 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
         kv_bits,
         pool_bytes,
         virtual_secs,
+        slo_goodput: 0,
+        p95_first_token_secs: 0.0,
+        p95_token_gap_secs: 0.0,
+        streamed_tokens,
         digest: 0xcbf29ce484222325,
     };
+    let mut first_lats: Vec<f64> = Vec::with_capacity(comps.len());
+    let mut gaps: Vec<f64> = Vec::new();
     for c in &comps {
         rep.total_tokens += c.tokens.len();
+        if !c.tokens.is_empty() {
+            first_lats.push(c.first_token_secs);
+        }
+        if c.token_gaps.len() > 1 {
+            gaps.extend_from_slice(&c.token_gaps[1..]);
+        }
+        if cfg.stream {
+            let got = streamed.get(&c.id).map_or(&[][..], |v| &v[..]);
+            ensure!(got == &c.tokens[..],
+                    "request {}: streamed tokens diverge from the \
+                     retired output", c.id);
+        }
         if c.finish.is_ok() {
             rep.goodput += 1;
+            let ft_ok = cfg.slo_first_token_secs <= 0.0
+                || (c.first_token_secs <= cfg.slo_first_token_secs
+                    && (cfg.slo_token_secs <= 0.0
+                        || c.token_gaps.len() <= 1
+                        || percentile(&c.token_gaps[1..], 95.0)
+                            <= cfg.slo_token_secs));
+            if ft_ok {
+                rep.slo_goodput += 1;
+            }
         }
         match &c.finish {
             FinishReason::Done => rep.done += 1,
@@ -369,6 +483,8 @@ fn drive(core: Arc<ModelCore>, cfg: &OpenLoopCfg)
         }
     }
     fnv1a(&mut rep.digest, &(rejected as u64).to_le_bytes());
+    rep.p95_first_token_secs = percentile(&first_lats, 95.0);
+    rep.p95_token_gap_secs = percentile(&gaps, 95.0);
     Ok((rep, comps))
 }
 
@@ -576,5 +692,69 @@ mod tests {
         assert_eq!(a, b, "faulted run must reproduce bit-identically");
         assert_eq!(a.leaked_pages, 0);
         assert_eq!(a.completions + a.rejected, a.arrivals);
+    }
+
+    /// EDF + prefill budget + streaming: bit-identical reproduction,
+    /// closed accounting, and every emitted token observed through the
+    /// stream. Streaming itself never changes the digest.
+    #[test]
+    fn open_loop_edf_budget_stream_is_deterministic() {
+        let c = core(55);
+        let e = OpenLoopCfg {
+            policy: SchedPolicy::Edf,
+            prefill_budget: 6,
+            stream: true,
+            fault_rate: 0.02,
+            ..cfg()
+        };
+        let a = run_open_loop(c.clone(), &e).unwrap();
+        let b = run_open_loop(c.clone(), &e).unwrap();
+        assert_eq!(a, b, "EDF stream run must reproduce bit-identically");
+        assert_eq!(a.leaked_pages, 0);
+        assert_eq!(a.completions + a.rejected, a.arrivals);
+        assert!(a.goodput > 0);
+        assert_eq!(a.streamed_tokens, a.total_tokens,
+                   "stream events must account for every emitted token");
+        let quiet = run_open_loop(
+            c, &OpenLoopCfg { stream: false, ..e }).unwrap();
+        assert_eq!(quiet.digest, a.digest,
+                   "streaming must be observation-only");
+        assert_eq!(quiet.streamed_tokens, 0);
+    }
+
+    /// The work-proportional clock and SLO accounting: charging tokens
+    /// makes runs take longer in virtual time, slo_goodput is bounded
+    /// by goodput, collapses to goodput with the targets disabled, and
+    /// an absurdly tight target zeroes it.
+    #[test]
+    fn open_loop_token_cost_clock_and_slo_accounting() {
+        let c = core(56);
+        let base = OpenLoopCfg {
+            deadline_secs: 0.0, // isolate the clock from shedding
+            max_queue: 32,      // ... and from backpressure rejects
+            ..cfg()
+        };
+        let fixed = run_open_loop(c.clone(), &base).unwrap();
+        let costed_cfg = OpenLoopCfg {
+            token_cost_secs: 0.01,
+            slo_first_token_secs: 1.0,
+            slo_token_secs: 0.5,
+            ..base
+        };
+        let costed = run_open_loop(c.clone(), &costed_cfg).unwrap();
+        let again = run_open_loop(c, &costed_cfg).unwrap();
+        assert_eq!(costed, again,
+                   "token-cost run must reproduce bit-identically");
+        assert!(costed.virtual_secs > fixed.virtual_secs,
+                "charging per-token work must lengthen virtual time: \
+                 {} vs {}", costed.virtual_secs, fixed.virtual_secs);
+        assert!(costed.slo_goodput <= costed.goodput);
+        assert_eq!(fixed.slo_goodput, fixed.goodput,
+                   "disabled SLO targets must not gate goodput");
+        assert!(costed.p95_first_token_secs > 0.0);
+        // with deadlines off and no faults, the token stream itself is
+        // identical under either clock - only latencies differ
+        assert_eq!(costed.digest, fixed.digest,
+                   "clock model changed request lifecycles unexpectedly");
     }
 }

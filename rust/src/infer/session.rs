@@ -35,19 +35,40 @@ pub struct Request {
     /// with [`FinishReason::TimedOut`] and no output. Expired live: it
     /// retires with its partial output. `None` = no deadline.
     pub deadline: Option<f64>,
+    /// Priority class, lower = sooner. Only consulted by the EDF policy
+    /// (`SchedPolicy::Edf`) as the ordering fallback for deadline-free
+    /// requests: any deadline outranks any priority class, and FIFO
+    /// ignores this field entirely. Convention: 0 = interactive,
+    /// 1 = normal (the default), 2+ = batch.
+    pub priority: u8,
 }
 
 impl Request {
     /// A request with no deadline (add one with
-    /// [`Request::with_deadline`]).
+    /// [`Request::with_deadline`]) and the default priority class 1
+    /// (change it with [`Request::with_priority`]).
     pub fn new(prompt: Vec<i32>, max_new: usize, sampler: Sampler,
                seed: u64) -> Request {
-        Request { prompt, max_new, sampler, seed, deadline: None }
+        Request {
+            prompt,
+            max_new,
+            sampler,
+            seed,
+            deadline: None,
+            priority: 1,
+        }
     }
 
     /// Set a completion deadline, in seconds from submission.
     pub fn with_deadline(mut self, secs: f64) -> Request {
         self.deadline = Some(secs);
+        self
+    }
+
+    /// Set the EDF fallback priority class (lower = sooner; see
+    /// [`Request::priority`]).
+    pub fn with_priority(mut self, class: u8) -> Request {
+        self.priority = class;
         self
     }
 }
@@ -116,6 +137,8 @@ pub struct Session {
     pub(crate) submitted: f64,
     /// absolute clock deadline (submission time + request deadline)
     pub(crate) deadline: Option<f64>,
+    /// EDF fallback class carried over from [`Request::priority`]
+    pub(crate) priority: u8,
     pub(crate) first_token_secs: Option<f64>,
     pub(crate) last_event: f64,
     pub(crate) token_gaps: Vec<f64>,
@@ -140,6 +163,7 @@ impl Session {
             out: Vec::with_capacity(req.max_new),
             rng: Rng::new(req.seed).fork("sample"),
             sampler: req.sampler,
+            priority: req.priority,
             prompt: req.prompt,
             prefilled: cached_rows,
             next: 0,

@@ -272,7 +272,8 @@ fn run(args: &[String]) -> Result<()> {
             use efficientqat::infer::kv::{KvFormat, KvPool};
             use efficientqat::infer::openloop::{run_open_loop,
                                                 OpenLoopCfg};
-            use efficientqat::infer::sched::{SchedConfig, Scheduler};
+            use efficientqat::infer::sched::{SchedConfig, SchedPolicy,
+                                             Scheduler, StreamEventKind};
             use efficientqat::infer::session::Request;
             use efficientqat::util::clock::Clock;
             use efficientqat::util::rng::Rng;
@@ -301,6 +302,18 @@ fn run(args: &[String]) -> Result<()> {
             let kv_bits = cli.flag_usize("kv-bits", 16)? as u32;
             anyhow::ensure!(matches!(kv_bits, 4 | 8 | 16),
                             "--kv-bits wants 4, 8, or 16 (got {kv_bits})");
+            // Admission policy: fifo (arrival order, default) or edf
+            // (earliest absolute deadline first; deadline-free requests
+            // fall back to priority classes behind deadline holders)
+            let policy_name = cli.flag_or("policy", "fifo");
+            let policy = match policy_name.as_str() {
+                "fifo" => SchedPolicy::Fifo,
+                "edf" => SchedPolicy::Edf,
+                other => anyhow::bail!(
+                    "--policy wants fifo or edf (got {other})"),
+            };
+            let prefill_budget = cli.flag_usize("prefill-budget", 0)?;
+            let stream = cli.flag_bool("stream");
 
             let core = match cli.flag("model") {
                 Some(path) => {
@@ -334,6 +347,15 @@ fn run(args: &[String]) -> Result<()> {
                     page_rows,
                     prefix_cache: use_cache,
                     kv_bits,
+                    policy,
+                    prefill_budget,
+                    stream,
+                    token_cost_secs:
+                        cli.flag_f64("token-cost-ms", 0.0)? / 1e3,
+                    slo_first_token_secs:
+                        cli.flag_f64("slo-ft-ms", 0.0)? / 1e3,
+                    slo_token_secs:
+                        cli.flag_f64("slo-tok-ms", 0.0)? / 1e3,
                 };
                 let r = run_open_loop(core, &cfg)?;
                 println!(
@@ -355,6 +377,22 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 println!("  pages leaked {}  digest {:016x}",
                          r.leaked_pages, r.digest);
+                println!(
+                    "  policy {policy_name}  prefill-budget {}  streamed \
+                     {} tok",
+                    cfg.prefill_budget, r.streamed_tokens
+                );
+                if cfg.slo_first_token_secs > 0.0
+                    || cfg.slo_token_secs > 0.0
+                {
+                    println!(
+                        "  SLO goodput {}  p95 first-token {:.2}ms  p95 \
+                         gap {:.2}ms",
+                        r.slo_goodput,
+                        r.p95_first_token_secs * 1e3,
+                        r.p95_token_gap_secs * 1e3
+                    );
+                }
                 if use_cache {
                     println!(
                         "  prefix cache     hits {}  misses {}  avoided \
@@ -385,6 +423,9 @@ fn run(args: &[String]) -> Result<()> {
                     prefill_chunk: chunk,
                     prefix_cache: use_cache,
                     kv_bits,
+                    policy,
+                    prefill_budget,
+                    stream,
                     ..SchedConfig::default()
                 },
                 Clock::wall());
@@ -417,10 +458,18 @@ fn run(args: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let mut ticks = 0usize;
             let mut max_live = 0usize;
+            let mut streamed = 0usize;
             while !sched.is_idle() {
                 sched.tick()?;
                 ticks += 1;
                 max_live = max_live.max(sched.n_live());
+                if stream {
+                    for ev in sched.take_stream_events() {
+                        if matches!(ev.kind, StreamEventKind::Token(_)) {
+                            streamed += 1;
+                        }
+                    }
+                }
             }
             let secs = t0.elapsed().as_secs_f64();
             let comps = sched.take_completed();
@@ -440,8 +489,16 @@ fn run(args: &[String]) -> Result<()> {
             anyhow::ensure!(total > 0, "serve-sim emitted no tokens");
             println!(
                 "serve-sim: {requests} requests over {slots} KV slot(s), \
-                 {ticks} ticks, max {max_live} live"
+                 {ticks} ticks, max {max_live} live ({policy_name}, \
+                 prefill budget {prefill_budget})"
             );
+            if stream {
+                anyhow::ensure!(
+                    streamed == total,
+                    "streamed {streamed} tokens but retired {total}");
+                println!("  streamed         {streamed} tokens \
+                          incrementally (matches retired output)");
+            }
             println!(
                 "  {total} tokens in {:.1}ms -> {:.0} tok/s aggregate",
                 secs * 1e3,

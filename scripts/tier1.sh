@@ -4,29 +4,42 @@
 # EQAT_SIMD=auto using the detected ISA - the suites must both pass,
 # which together with the in-suite to_bits sweeps pins the SIMD layer to
 # the scalar contract) + warning-free rustdoc + docs link check + a
-# fast-mode inference bench smoke that must produce a valid
-# machine-readable perf snapshot (runs/bench.json, schema 9: inference +
+# bounded randomized scheduler property sweep run under both ISA modes
+# + a fast-mode inference bench smoke that must produce a valid
+# machine-readable perf snapshot (runs/bench.json, schema 10: inference +
 # native train_step + taped-vs-forward-only eval_forward + the
 # continuous-batching serve section + the paged-KV kv_fork section + the
 # open-loop serve_robust section + the SIMD kernels section + the
-# cross-request prefix_cache section + the low-bit KV kv_lowbit section,
-# whose determinism / bit-equality / capacity / ppl-delta / leak-freedom
+# cross-request prefix_cache section + the low-bit KV kv_lowbit section
+# + the SLO scheduling serve_slo section, whose determinism /
+# bit-equality / capacity / ppl-delta / SLO-goodput / leak-freedom
 # contracts are asserted inside the bench and re-checked by
 # `bench check`; the detected ISA is recorded in the snapshot's `simd`
 # field) + a bounded serve-sim smoke + a shared-prefix cache smoke
 # (digests must reproduce with the cache on AND off, and the cached run
-# must actually hit) + open-loop determinism smokes in f32 and packed
-# int4 KV mode (same seed twice with faults armed must reproduce the
-# same digest; the int4 digest must also agree between EQAT_SIMD=scalar
-# and auto) + a bounded end-to-end Block-AP -> E2E-QP
-# training smoke and a forward-only eval smoke on the native backend (no
-# HLO artifacts required). Run from anywhere; operates on the repo root.
+# must actually hit) + open-loop determinism smokes in f32, packed int4
+# KV, and EDF+prefill-budget+streaming mode (same seed twice with
+# faults armed must reproduce the same digest; the int4 digest must
+# also agree between EQAT_SIMD=scalar and auto) + a bounded end-to-end
+# Block-AP -> E2E-QP training smoke and a forward-only eval smoke on
+# the native backend (no HLO artifacts required). Run from anywhere;
+# operates on the repo root.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo build --release
 EQAT_SIMD=scalar cargo test -q
 EQAT_SIMD=auto cargo test -q
+
+# randomized scheduler property sweep, widened past the 200-schedule
+# acceptance bar and run under both ISA modes (the default-width sweep
+# already ran inside the suites above): every generated schedule must
+# uphold every invariant with zero leaked pages and zero determinism
+# violations
+EQAT_FUZZ_SCHEDULES=220 EQAT_SIMD=scalar \
+  cargo test --release -q --test sched_property
+EQAT_FUZZ_SCHEDULES=220 EQAT_SIMD=auto \
+  cargo test --release -q --test sched_property
 
 # docs gate: rustdoc must be warning-free (broken intra-doc links fail
 # the build), and every docs/*.md file referenced from README.md must
@@ -40,7 +53,7 @@ for f in $(grep -o 'docs/[A-Za-z0-9_.-]*\.md' README.md | sort -u); do
 done
 
 # bench smoke: small shapes, few iterations; fails the gate if
-# runs/bench.json is missing or schema-invalid (schema 9; see
+# runs/bench.json is missing or schema-invalid (schema 10; see
 # docs/BENCH_SCHEMA.md). The kv_fork section's fork bit-equality and
 # copy bounds, the serve_robust section's determinism / survivor
 # bit-equality / leak-freedom contracts, the kernels section's
@@ -86,6 +99,18 @@ if ! grep -q '"capacity_multiplier_int4"' runs/bench.json; then
 fi
 if ! grep -q '"ppl_rel_delta_int4"' runs/bench.json; then
   echo "tier1 FAIL: runs/bench.json records no int4 ppl delta" >&2
+  exit 1
+fi
+if ! grep -q '"serve_slo"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json has no serve_slo section" >&2
+  exit 1
+fi
+if ! grep -q '"edf_slo_goodput"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no EDF SLO goodput" >&2
+  exit 1
+fi
+if ! grep -q '"fuzz_schedules"' runs/bench.json; then
+  echo "tier1 FAIL: runs/bench.json records no fuzz sweep" >&2
   exit 1
 fi
 
@@ -155,6 +180,24 @@ if [ -z "$q1" ] || [ "$q1" != "$q2" ]; then
 fi
 if [ "$q1" != "$q3" ]; then
   echo "tier1 FAIL: int4 KV digest diverges across SIMD ISAs ('$q1' scalar vs '$q3' auto)" >&2
+  exit 1
+fi
+
+# SLO scheduling determinism smoke: EDF admission + per-tick prefill
+# budget + token streaming on the open-loop workload with faults armed
+# must reproduce its digest run to run (policy, budget, and streaming
+# are latency features only - the digest stays a pure function of
+# (seed, config)). The EDF digest legitimately differs from the FIFO
+# digest above: admission order changes which deadlines survive.
+edf_digest() {
+  cargo run --release --bin eqat -- serve-sim --open-loop \
+    --policy edf --prefill-budget 8 --stream --requests 24 --rate 200 \
+    --seed 7 --fail-rate 0.02 | grep -o 'digest [0-9a-f]*'
+}
+e1="$(edf_digest)"
+e2="$(edf_digest)"
+if [ -z "$e1" ] || [ "$e1" != "$e2" ]; then
+  echo "tier1 FAIL: EDF open-loop digest not reproducible ('$e1' vs '$e2')" >&2
   exit 1
 fi
 
